@@ -1,0 +1,98 @@
+//! End-to-end driver: differentially-private training of a CNN.
+//!
+//! This is the workload the paper's per-example gradients exist for
+//! (§1): a 4-conv-layer CNN trained with DP-SGD (Abadi et al. 2016) on
+//! a learnable synthetic 10-class dataset. Every step runs one fused
+//! XLA program — per-example grads via the crb strategy with the
+//! Pallas per-example-convolution kernel, per-example clipping via the
+//! Pallas clip-reduce kernel, gaussian noise, SGD update — driven by
+//! the rust coordinator with the RDP accountant tracking ε.
+//!
+//!     cargo run --release --example dp_training
+//!     cargo run --release --example dp_training -- 400   # more steps
+//!
+//! Expected outcome: falling loss, rising eval accuracy (≫ 10%
+//! chance), and a sensible final ε — recorded in EXPERIMENTS.md §E2E.
+
+use anyhow::Result;
+use grad_cnns::config::{Config, ExperimentConfig};
+use grad_cnns::coordinator::Trainer;
+use grad_cnns::runtime::Registry;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+
+    let cfg = Config::parse(&format!(
+        r#"
+[train]
+step_artifact = "e2e_toy_crb_pallas_step_b16"
+init_artifact = "e2e_toy_init"
+eval_artifact = "e2e_toy_eval_b16"
+steps = {steps}
+batch_size = 16
+lr = 0.03
+eval_every = 50
+log_every = 10
+seed = 42
+
+[dp]
+clip_norm = 1.0
+noise_multiplier = 1.1
+target_delta = 1e-5
+
+[data]
+size = 2048
+num_classes = 10
+"#
+    ))?;
+    let exp = ExperimentConfig::from_config(&cfg)?;
+    println!(
+        "DP-SGD: {} steps, B={}, C={}, σ={}, artifact {}",
+        exp.steps, exp.batch_size, exp.clip_norm, exp.noise_multiplier, exp.step_artifact
+    );
+
+    let registry = Registry::open(&exp.artifacts_dir)?;
+    let mut trainer = Trainer::new(exp, registry)?;
+    let report = trainer.run(None)?;
+
+    println!("\n--- summary -------------------------------------------");
+    let first = report.losses.first().map(|p| p.loss).unwrap_or(f32::NAN);
+    let last = report.losses.last().map(|p| p.loss).unwrap_or(f32::NAN);
+    println!("loss: {first:.4} -> {last:.4}");
+    if let Some(ev) = report.evals.last() {
+        println!("final eval: loss {:.4}, accuracy {:.1}%", ev.loss, 100.0 * ev.accuracy);
+    }
+    println!(
+        "privacy: ε = {:.3} @ δ = {:.0e} after {} steps",
+        report.final_epsilon, report.final_delta, report.steps
+    );
+    println!("throughput: {:.2} steps/s", report.steps_per_sec);
+
+    std::fs::create_dir_all("reports")?;
+    std::fs::write("reports/dp_training.md", report.to_markdown())?;
+    println!("report: reports/dp_training.md");
+
+    // smoothed check: DP noise makes single points jumpy, so compare
+    // the mean of the first vs last few logged losses
+    let smooth = |pts: &[grad_cnns::coordinator::trainer::LossPoint]| {
+        let n = pts.len().min(3);
+        pts.iter().map(|p| p.loss).take(n).sum::<f32>() / n as f32
+    };
+    let head = smooth(&report.losses);
+    let tail = {
+        let n = report.losses.len().min(3);
+        report.losses[report.losses.len() - n..]
+            .iter()
+            .map(|p| p.loss)
+            .sum::<f32>()
+            / n as f32
+    };
+    assert!(
+        tail < head,
+        "smoothed loss did not decrease ({head:.4} -> {tail:.4})"
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! The RDP privacy accountant, standalone.
+//!
+//!     cargo run --release --example privacy_accountant
+//!
+//! DP-SGD's other half: per-example clipping bounds sensitivity, the
+//! accountant turns (q, σ, steps) into an (ε, δ) guarantee via Rényi
+//! DP composition of the subsampled gaussian mechanism (Abadi et al.
+//! 2016; Mironov 2017). This example prints the ε trajectory for the
+//! dp_training example's hyper-parameters and a σ sweep.
+
+use grad_cnns::privacy::DpSgdAccountant;
+
+fn main() {
+    // the dp_training example's setting
+    let (n, batch, sigma, delta) = (2048.0, 16.0, 1.1, 1e-5);
+    let q = batch / n;
+    println!("dp_training setting: q = {q:.5}, σ = {sigma}, δ = {delta:.0e}\n");
+
+    println!("| steps | ε |");
+    println!("|---|---|");
+    let mut acc = DpSgdAccountant::new(q, sigma);
+    let mut done = 0u64;
+    for target in [50u64, 100, 200, 500, 1000, 2000, 5000] {
+        acc.step(target - done);
+        done = target;
+        let (eps, order) = acc.epsilon(delta);
+        println!("| {target} | {eps:.3} (order {order}) |");
+    }
+
+    println!("\nσ sweep @ 1000 steps:");
+    println!("| σ | ε |");
+    println!("|---|---|");
+    for sigma in [0.6, 0.8, 1.0, 1.2, 1.5, 2.0] {
+        let mut acc = DpSgdAccountant::new(q, sigma);
+        acc.step(1000);
+        let (eps, _) = acc.epsilon(delta);
+        println!("| {sigma} | {eps:.3} |");
+    }
+
+    println!("\nsteps affordable under ε budgets (σ = 1.1):");
+    println!("| ε budget | max steps |");
+    println!("|---|---|");
+    for budget in [1.0, 2.0, 4.0, 8.0] {
+        let acc = DpSgdAccountant::new(q, sigma);
+        println!("| {budget} | {} |", acc.steps_until(budget, delta));
+    }
+}

@@ -1,0 +1,79 @@
+//! The paper's core claim, live: all per-example gradient strategies
+//! compute the *same* gradients at very different speeds.
+//!
+//!     cargo run --release --example strategy_comparison
+//!
+//! Runs naive / multi / crb / crb_pallas on one batch, verifies
+//! four-way agreement (and agreement with the pure-rust oracle), then
+//! times each strategy over 20 batches — a miniature of Figure 1.
+
+use anyhow::Result;
+use grad_cnns::bench::Protocol;
+use grad_cnns::experiments::time_artifact;
+use grad_cnns::models::ModelOracle;
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::runtime::{HostValue, Registry};
+use grad_cnns::tensor::Tensor;
+
+const STRATEGIES: &[&str] = &["naive", "multi", "crb", "crb_pallas"];
+
+fn main() -> Result<()> {
+    let registry = Registry::open("artifacts")?;
+
+    // shared random problem
+    let probe = registry.manifest().get("core_toy_crb_grads_b4")?.clone();
+    let p = probe.inputs[0].element_count();
+    let b = probe.inputs[2].element_count();
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let mut theta = vec![0.0f32; p];
+    rng.fill_gaussian(&mut theta, 0.1);
+    let mut x = vec![0.0f32; probe.inputs[1].element_count()];
+    rng.fill_gaussian(&mut x, 1.0);
+    let y: Vec<i32> = (0..b).map(|_| rng.next_below(10) as i32).collect();
+    let inputs = [
+        HostValue::f32(&[p], theta.clone()),
+        HostValue::f32(&probe.inputs[1].shape, x.clone()),
+        HostValue::i32(&[b], y.clone()),
+    ];
+
+    // the oracle's answer (pure rust, Eq. 2 + Eq. 4)
+    let spec = registry.validate_model("core_toy_crb_grads_b4")?;
+    let oracle = ModelOracle::new(spec);
+    let (want, _) = oracle.perex_grads(&theta, &Tensor::from_vec(&probe.inputs[1].shape, x), &y);
+
+    println!("=== agreement (max |Δ| vs rust oracle) ===");
+    let mut results = Vec::new();
+    for strat in STRATEGIES {
+        let name = format!("core_toy_{strat}_grads_b4");
+        let out = registry.run(&name, &inputs)?;
+        let diff = out[0].to_tensor()?.max_abs_diff(&want);
+        println!("  {strat:<12} Δ = {diff:.2e}");
+        assert!(diff < 1e-4, "{strat} disagrees with the oracle");
+        results.push(out[0].clone());
+    }
+    // pairwise too: all strategies are *the same function*
+    for i in 1..results.len() {
+        let d = results[i].to_tensor()?.max_abs_diff(&results[0].to_tensor()?);
+        assert!(d < 1e-4, "strategies {i} vs 0 differ by {d}");
+    }
+    println!("  all strategies agree pairwise ✓");
+
+    println!("\n=== runtime, 20 batches (mean ± std over 3 reps) ===");
+    let proto = Protocol { warmup: 1, reps: 3 };
+    let mut baseline = None;
+    for strat in STRATEGIES {
+        let name = format!("core_toy_{strat}_grads_b4");
+        let stats = time_artifact(&registry, &name, 20, proto, 5)?;
+        let speedup = baseline
+            .get_or_insert(stats.mean)
+            .max(f64::MIN_POSITIVE);
+        println!(
+            "  {strat:<12} {}   ({:.1}x vs naive)",
+            stats.pm(),
+            speedup / stats.mean
+        );
+        registry.evict(&name);
+    }
+    println!("\nstrategy_comparison OK");
+    Ok(())
+}

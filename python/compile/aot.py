@@ -1,0 +1,321 @@
+"""AOT compile path: lower every artifact variant to HLO *text*.
+
+This is the only place python touches the pipeline; after ``make
+artifacts`` the rust binary is self-contained. Interchange is HLO text,
+NOT ``HloModuleProto.serialize()`` — jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published ``xla``
+crate links) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --sets core,e2e
+    python -m compile.aot --out-dir ../artifacts --sets all --force
+
+Each variant becomes ``<name>.hlo.txt`` plus an entry in
+``manifest.json`` describing its kind, model config, strategy, batch
+size, parameter count/packing and the exact input/output signature the
+rust runtime validates against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import dpsgd, models
+from . import layers as L
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args):
+    return [
+        {"shape": list(a.shape), "dtype": a.dtype.name}
+        for a in args
+    ]
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class Variant:
+    """One artifact to lower: a flat-signature jax function + metadata."""
+
+    def __init__(self, name, kind, fn, in_specs, *, model_cfg=None,
+                 strategy=None, batch=None, extra=None):
+        self.name = name
+        self.kind = kind
+        self.fn = fn
+        self.in_specs = in_specs
+        self.model_cfg = model_cfg
+        self.strategy = strategy
+        self.batch = batch
+        self.extra = extra or {}
+
+    def lower(self):
+        return jax.jit(self.fn).lower(*self.in_specs)
+
+
+def _model_variants(tag, model_cfg, batch, strategies, *, kinds=("grads",),
+                    with_nodp=True, pallas_clip=True):
+    """All artifacts for one (model, batch) cell of a benchmark table."""
+    specs, cfg = models.build(model_cfg)
+    packing, P = L.packing_spec(specs)
+    c, h, w = cfg["input_shape"]
+    theta = _spec((P,))
+    x = _spec((batch, c, h, w))
+    y = _spec((batch,), jnp.int32)
+    scalar_f = _spec(())
+    scalar_i = _spec((), jnp.int32)
+    common = dict(model_cfg=cfg, batch=batch,
+                  extra={"param_count": P, "packing": packing})
+
+    out = []
+    if with_nodp:
+        out.append(Variant(
+            f"{tag}_nodp_b{batch}", "nodp", dpsgd.make_nodp_fn(specs),
+            (theta, x, y), strategy="nodp", **common))
+    for strat in strategies:
+        if "grads" in kinds:
+            out.append(Variant(
+                f"{tag}_{strat}_grads_b{batch}", "grads",
+                dpsgd.make_grads_fn(specs, strat), (theta, x, y),
+                strategy=strat, **common))
+        if "step" in kinds:
+            out.append(Variant(
+                f"{tag}_{strat}_step_b{batch}", "step",
+                dpsgd.make_step_fn(specs, strat, use_pallas_clip=pallas_clip),
+                (theta, x, y, scalar_i, scalar_f, scalar_f, scalar_f),
+                strategy=strat, **common))
+    # init + eval once per model; init is batch-independent, so its
+    # manifest entry records batch=None (keeps the fingerprint stable
+    # when the same model appears at several batch sizes, e.g. fig2)
+    out.append(Variant(
+        f"{tag}_init", "init", dpsgd.make_init_fn(specs), (scalar_i,),
+        strategy=None, model_cfg=cfg, batch=None,
+        extra={"param_count": P, "packing": packing}))
+    out.append(Variant(
+        f"{tag}_eval_b{batch}", "eval", dpsgd.make_eval_fn(specs),
+        (theta, x, y), strategy=None, **common))
+    return out
+
+
+def build_sets():
+    """The artifact registry, keyed by set name (DESIGN.md §5)."""
+    sets = {}
+
+    # --- core: small toy model, every strategy + full DP step ---------
+    toy = {"arch": "toy_cnn", "n_layers": 3, "first_channels": 6,
+           "channel_rate": 1.5, "kernel_size": 3,
+           "input_shape": [3, 16, 16], "num_classes": 10, "pool_every": 2}
+    sets["core"] = _model_variants(
+        "core_toy", toy, 4,
+        ["naive", "multi", "crb", "crb_pallas"],
+        kinds=("grads", "step"))
+
+    # --- e2e: the dp_training example's model (full pallas hot path) --
+    e2e = {"arch": "toy_cnn", "n_layers": 4, "first_channels": 12,
+           "channel_rate": 1.5, "kernel_size": 3,
+           "input_shape": [3, 32, 32], "num_classes": 10, "pool_every": 2}
+    sets["e2e"] = _model_variants(
+        "e2e_toy", e2e, 16, ["crb_pallas", "crb"],
+        kinds=("step",), with_nodp=True)
+
+    # --- fig1: channel-rate sweep, 2/3/4 layers, kernel 3 -------------
+    fig1 = []
+    for n_layers in (2, 3, 4):
+        for rate in (1.0, 1.5, 2.0, 2.5, 3.0):
+            cfg = {"arch": "toy_cnn", "n_layers": n_layers,
+                   "first_channels": 8, "channel_rate": rate,
+                   "kernel_size": 3, "input_shape": [3, 32, 32],
+                   "num_classes": 10, "pool_every": 2}
+            fig1 += _model_variants(
+                f"fig1_l{n_layers}_r{rate}", cfg, 8,
+                ["naive", "multi", "crb"], kinds=("grads",))
+    sets["fig1"] = fig1
+
+    # --- fig2: batch-size sweep, 3 layers, first 32 ch, kernel 5 ------
+    fig2 = []
+    for batch in (1, 2, 4, 8, 16):
+        cfg = {"arch": "toy_cnn", "n_layers": 3, "first_channels": 32,
+               "channel_rate": 1.0, "kernel_size": 5,
+               "input_shape": [3, 32, 32], "num_classes": 10,
+               "pool_every": 2}
+        fig2 += _model_variants(
+            f"fig2", cfg, batch, ["naive", "multi", "crb"],
+            kinds=("grads",))
+    sets["fig2"] = fig2
+
+    # --- fig3: fig1 with kernel 5 --------------------------------------
+    fig3 = []
+    for n_layers in (2, 3, 4):
+        for rate in (1.0, 1.5, 2.0, 2.5, 3.0):
+            cfg = {"arch": "toy_cnn", "n_layers": n_layers,
+                   "first_channels": 8, "channel_rate": rate,
+                   "kernel_size": 5, "input_shape": [3, 32, 32],
+                   "num_classes": 10, "pool_every": 2}
+            fig3 += _model_variants(
+                f"fig3_l{n_layers}_r{rate}", cfg, 8,
+                ["naive", "multi", "crb"], kinds=("grads",))
+    sets["fig3"] = fig3
+
+    # --- table1: AlexNet / VGG16 ---------------------------------------
+    table1 = []
+    table1 += _model_variants(
+        "table1_alexnet",
+        {"arch": "alexnet", "width_mult": 0.25,
+         "input_shape": [3, 64, 64], "num_classes": 10},
+        16, ["naive", "multi", "crb"], kinds=("grads",))
+    table1 += _model_variants(
+        "table1_vgg16",
+        {"arch": "vgg16", "width_mult": 0.25,
+         "input_shape": [3, 32, 32], "num_classes": 10},
+        8, ["naive", "multi", "crb"], kinds=("grads",))
+    sets["table1"] = table1
+
+    # --- inorm: instance-normalized toy net (paper §4.2's alternative
+    # to batch norm), every strategy — proves the crb decomposition
+    # extends beyond conv/linear layers -------------------------------
+    inorm = {"arch": "toy_cnn", "n_layers": 3, "first_channels": 6,
+             "channel_rate": 1.5, "kernel_size": 3,
+             "input_shape": [3, 16, 16], "num_classes": 10,
+             "pool_every": 2, "norm": "instance"}
+    sets["inorm"] = _model_variants(
+        "inorm_toy", inorm, 4,
+        ["naive", "multi", "crb", "crb_pallas"],
+        kinds=("grads", "step"))
+
+    # --- ablation: crb grouped-conv vs crb_pallas on fig1 mid configs --
+    abl = []
+    for rate in (1.0, 2.0, 3.0):
+        cfg = {"arch": "toy_cnn", "n_layers": 3, "first_channels": 8,
+               "channel_rate": rate, "kernel_size": 3,
+               "input_shape": [3, 32, 32], "num_classes": 10,
+               "pool_every": 2}
+        abl += _model_variants(
+            f"abl_r{rate}", cfg, 8, ["crb", "crb_pallas"],
+            kinds=("grads",), with_nodp=False)
+    sets["ablation"] = abl
+
+    return sets
+
+
+def _source_hash() -> str:
+    """Hash of every compile-path source file. Folded into each
+    artifact's fingerprint so editing a kernel/strategy/layer re-lowers
+    the affected artifacts (all of them — lowering is cheap relative to
+    shipping a stale kernel)."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root in (base, os.path.join(base, "kernels")):
+        for fname in sorted(os.listdir(root)):
+            if fname.endswith(".py"):
+                with open(os.path.join(root, fname), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+_SOURCE_HASH = None
+
+
+def _cfg_fingerprint(variant: Variant) -> str:
+    global _SOURCE_HASH
+    if _SOURCE_HASH is None:
+        _SOURCE_HASH = _source_hash()
+    blob = json.dumps({
+        "kind": variant.kind, "model": variant.model_cfg,
+        "strategy": variant.strategy, "batch": variant.batch,
+        "in": _sig(variant.in_specs),
+        "src": _SOURCE_HASH,
+    }, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sets", default="core,e2e",
+                    help="comma list or 'all'")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    registry = build_sets()
+    names = list(registry) if args.sets == "all" else args.sets.split(",")
+    for n in names:
+        if n not in registry:
+            raise SystemExit(f"unknown set {n!r}; have {list(registry)}")
+
+    if args.list:
+        for n in names:
+            for v in registry[n]:
+                print(f"{n:10s} {v.name}")
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"artifacts": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    total = sum(len(registry[n]) for n in names)
+    done = 0
+    for set_name in names:
+        for v in registry[set_name]:
+            done += 1
+            fname = f"{v.name}.hlo.txt"
+            fpath = os.path.join(args.out_dir, fname)
+            fp = _cfg_fingerprint(v)
+            prev = manifest["artifacts"].get(v.name)
+            if (not args.force and prev and prev.get("fingerprint") == fp
+                    and os.path.exists(fpath)):
+                print(f"[{done}/{total}] {v.name}: up-to-date")
+                continue
+            t0 = time.time()
+            lowered = v.lower()
+            text = to_hlo_text(lowered)
+            with open(fpath, "w") as f:
+                f.write(text)
+            out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+            manifest["artifacts"][v.name] = {
+                "file": fname,
+                "set": set_name,
+                "kind": v.kind,
+                "strategy": v.strategy,
+                "model": v.model_cfg,
+                "batch": v.batch,
+                "inputs": _sig(v.in_specs),
+                "outputs": [
+                    {"shape": list(a.shape), "dtype": jnp.dtype(a.dtype).name}
+                    for a in out_avals
+                ],
+                "fingerprint": fp,
+                **v.extra,
+            }
+            # persist incrementally so an interrupted run resumes cleanly
+            with open(manifest_path, "w") as f:
+                json.dump(manifest, f, indent=1, sort_keys=True)
+            kb = len(text) // 1024
+            print(f"[{done}/{total}] {v.name}: lowered in "
+                  f"{time.time()-t0:.1f}s ({kb} KiB)")
+    print(f"manifest: {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L2: the fused DP-SGD step (Abadi et al. 2016, the paper's §1 use case).
+
+One jittable function per (model, strategy, batch) that does the whole
+update the paper's per-example gradients exist for:
+
+    per-example grads  ->  per-example global-norm clip (Eq. 1)
+                       ->  noisy aggregate  ->  SGD update.
+
+The function signature is flat-array only — the wire contract with the
+rust coordinator (see ``aot.py`` / ``artifacts/manifest.json``):
+
+    step(theta (P,), x (B,C,H,W), y (B,) i32, seed () i32,
+         clip () f32, sigma () f32, lr () f32)
+      -> (theta' (P,), mean_loss () f32, norms (B,) f32)
+
+``clip``/``sigma``/``lr`` are runtime inputs (not baked constants) so the
+rust side can sweep hyperparameters without re-lowering artifacts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .kernels.clip_reduce import clip_reduce
+from .kernels.ref import clip_reduce_ref
+from .strategies import STRATEGIES, flatten_pergrads, loss_batch_mean
+
+
+def make_step_fn(specs, strategy: str, use_pallas_clip: bool = True):
+    """Build the flat-signature DP-SGD step for a spec list."""
+    grads_fn = STRATEGIES[strategy]
+    reducer = clip_reduce if use_pallas_clip else clip_reduce_ref
+
+    def step(theta, x, y, seed, clip, sigma, lr):
+        B = x.shape[0]
+        params = L.unflatten_params(theta, specs)
+        grads, losses = grads_fn(params, specs, x, y)
+        g = flatten_pergrads(grads, B)  # (B, P)
+        gsum, norms = reducer(g, clip)
+        key = jax.random.PRNGKey(seed)
+        noise = sigma * clip * jax.random.normal(key, gsum.shape, gsum.dtype)
+        gbar = (gsum + noise) / B
+        return theta - lr * gbar, losses.mean(), norms
+
+    return step
+
+
+def make_grads_fn(specs, strategy: str):
+    """Per-example gradients only — what the benchmark figures time.
+
+    (theta, x, y) -> (pergrads (B, P), losses (B,))
+    """
+    grads_fn = STRATEGIES[strategy]
+
+    def grads(theta, x, y):
+        params = L.unflatten_params(theta, specs)
+        gs, losses = grads_fn(params, specs, x, y)
+        return flatten_pergrads(gs, x.shape[0]), losses
+
+    return grads
+
+
+def make_nodp_fn(specs):
+    """The paper's "No DP" baseline: one aggregate mean gradient.
+
+    (theta, x, y) -> (grad (P,), loss ())
+    """
+
+    def nodp(theta, x, y):
+        params = L.unflatten_params(theta, specs)
+        loss, grads = jax.value_and_grad(loss_batch_mean)(params, specs, x, y)
+        return L.flatten_params(grads), loss
+
+    return nodp
+
+
+def make_eval_fn(specs):
+    """(theta, x, y) -> (mean_loss (), accuracy ()) for the eval loop."""
+
+    def evaluate(theta, x, y):
+        params = L.unflatten_params(theta, specs)
+        logits = L.forward(params, specs, x)
+        loss = L.xent_batch(logits, y).mean()
+        acc = (logits.argmax(axis=-1) == y).astype(jnp.float32).mean()
+        return loss, acc
+
+    return evaluate
+
+
+def make_init_fn(specs):
+    """(seed () i32) -> theta (P,) — parameter init stays in jax so the
+    rust side never re-implements layer-aware initialization."""
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        return L.flatten_params(L.init_params(key, specs))
+
+    return init

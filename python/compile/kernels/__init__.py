@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+  * :mod:`perex_conv`   -- the per-example convolution (Eq. 4 / Alg. 2)
+  * :mod:`perex_linear` -- Goodfellow outer-product dense gradient
+  * :mod:`clip_reduce`  -- fused DP-SGD per-example clip + aggregate
+  * :mod:`ref`          -- pure-jnp oracles the kernels are tested against
+"""
+
+from . import ref  # noqa: F401
+from .perex_conv import perex_conv1d, perex_conv2d  # noqa: F401
+from .perex_linear import perex_linear  # noqa: F401
+from .clip_reduce import clip_reduce  # noqa: F401

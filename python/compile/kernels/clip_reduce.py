@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: fused per-example clip + aggregate (DP-SGD core).
+
+Implements Eq. (1) of the paper (gradient clipping from Abadi et al.
+2016) fused with the batch aggregation:
+
+    out = sum_b  g[b] / max(1, ||g[b]||_2 / C)
+
+in a single pass over the per-example gradient matrix g of shape (B, P).
+The Pallas grid is (B,): each step loads one example's flattened
+gradient row into VMEM, computes its norm, rescales, and accumulates
+into the shared output block (the output BlockSpec maps every grid step
+to the same block; the grid is sequential so the read-modify-write is
+well-defined). The per-example norms are emitted as a second output —
+the coordinator logs them and they are required for DP auditing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .perex_conv import _pallas_interpret
+
+
+def _clip_reduce_kernel(g_ref, clip_ref, sum_ref, norms_ref):
+    """Grid step b: clip example b's gradient row and accumulate.
+
+    g_ref: (1, P) this example's flattened gradient
+    clip_ref: (1,) the clip bound C (same block every step)
+    sum_ref: (P,) running clipped sum (same block every step)
+    norms_ref: (1,) this example's pre-clip norm
+    """
+    b = pl.program_id(0)
+    g = g_ref[0]  # (P,)
+    clip = clip_ref[0]
+    norm = jnp.sqrt(jnp.sum(g * g))
+    norms_ref[0] = norm
+    scale = 1.0 / jnp.maximum(1.0, norm / clip)
+
+    @pl.when(b == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+
+    sum_ref[...] += scale * g
+
+
+def clip_reduce(g, clip):
+    """Fused per-example clip + sum via Pallas.
+
+    g: (B, P) flattened per-example gradients; clip: scalar bound C.
+    Returns (g_sum: (P,), norms: (B,)).
+    """
+    B, P = g.shape
+    clip_arr = jnp.asarray(clip, dtype=g.dtype).reshape(1)
+    g_sum, norms = pl.pallas_call(
+        _clip_reduce_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, P), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((P,), lambda b: (0,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P,), g.dtype),
+            jax.ShapeDtypeStruct((B,), g.dtype),
+        ],
+        interpret=_pallas_interpret(),
+    )(g, clip_arr)
+    return g_sum, norms

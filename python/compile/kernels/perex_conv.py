@@ -1,0 +1,285 @@
+"""L1 Pallas kernels: the per-example convolution  x (*) dL/dy  (Eq. 4).
+
+This is the paper's compute hot-spot. The paper evaluates Eq. (4) by
+abusing cuDNN's ``groups`` argument (Algorithm 2); here we implement the
+per-example convolution *directly* as a Pallas kernel, which is the
+natural TPU formulation:
+
+  * the grid is (B, D): one grid step owns one (example, out-channel)
+    pair and emits the full (C//groups, K) gradient tile for it;
+  * the x tile for the step's channel group, shape (Cg, T), and the
+    dL/dy row, shape (T'), are staged into VMEM by BlockSpec — this is
+    the HBM->VMEM schedule the paper delegated to cuDNN threadblocks;
+  * per kernel offset k, the contraction over t is a (Cg, T') x (T')
+    matrix-vector product, expressed as ``jnp.dot`` so the TPU compiler
+    maps it onto the MXU. K such dots produce the (Cg, K) tile.
+
+Stride/dilation/padding/groups follow Algorithm 2's semantics: the
+forward conv's stride appears as the *dilation* of the gradient gather
+and vice versa; padding is applied to x up front; groups shrink the
+x tile each grid step sees (the index_map picks the right group).
+
+``interpret=True`` everywhere: the CPU PJRT runtime cannot execute
+Mosaic custom-calls, so the kernels lower to plain HLO. Real-TPU
+efficiency is estimated from the VMEM footprint / MXU shapes in
+DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pallas_interpret() -> bool:
+    """Single switch for interpret-mode; kept as a hook for real-TPU runs."""
+    return True
+
+
+# ---------------------------------------------------------------------------
+# 1D
+# ---------------------------------------------------------------------------
+
+
+def _perex_conv1d_kernel(x_ref, dy_ref, o_ref, *, K, stride, dilation):
+    """One grid step: per-example gradient tile for one (b, d) pair.
+
+    x_ref:  (1, 1, Cg, T)  input tile (example b, channel group of d)
+    dy_ref: (1, 1, Tp)     output-gradient row (example b, channel d)
+    o_ref:  (1, 1, Cg, K)  gradient tile to emit
+    """
+    x = x_ref[0, 0]        # (Cg, T)
+    dy = dy_ref[0, 0]      # (Tp,)
+    tp = dy.shape[0]
+    cols = []
+    for k in range(K):
+        start = dilation * k
+        # window[c, t] = x[c, stride*t + dilation*k]
+        window = jax.lax.slice(
+            x, (0, start), (x.shape[0], start + stride * (tp - 1) + 1), (1, stride)
+        )  # (Cg, Tp)
+        # The contraction over t: a (Cg,Tp)x(Tp,) mat-vec -> MXU dot.
+        cols.append(jnp.dot(window, dy, preferred_element_type=jnp.float32))
+    o_ref[0, 0] = jnp.stack(cols, axis=-1)  # (Cg, K)
+
+
+def perex_conv1d(x, dy, K, *, stride=1, dilation=1, padding=0, groups=1):
+    """Per-example 1D conv kernel gradient via Pallas (Eq. 4 / Alg. 2).
+
+    x: (B, C, T), dy: (B, D, T')  ->  (B, D, C//groups, K)
+    """
+    B, C, T = x.shape
+    _, D, Tp = dy.shape
+    if C % groups or D % groups:
+        raise ValueError(f"channels ({C},{D}) not divisible by groups={groups}")
+    Cg = C // groups
+    Dg = D // groups
+    if padding:
+        x = jnp.pad(x, [(0, 0), (0, 0), (padding, padding)])
+        T = T + 2 * padding
+    need = dilation * (K - 1) + stride * (Tp - 1) + 1
+    if need > T:
+        raise ValueError(
+            f"gather out of range: need T>={need}, have {T} "
+            f"(K={K} stride={stride} dilation={dilation} Tp={Tp})"
+        )
+    xg = x.reshape(B, groups, Cg, T)
+
+    kernel = functools.partial(
+        _perex_conv1d_kernel, K=K, stride=stride, dilation=dilation
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, D),
+        in_specs=[
+            # example b, the channel group that out-channel d belongs to
+            pl.BlockSpec((1, 1, Cg, T), lambda b, d: (b, d // Dg, 0, 0)),
+            pl.BlockSpec((1, 1, Tp), lambda b, d: (b, d, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Cg, K), lambda b, d: (b, d, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D, Cg, K), x.dtype),
+        interpret=_pallas_interpret(),
+    )(xg, dy)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 2D
+# ---------------------------------------------------------------------------
+#
+# Two block schedules are provided (§Perf iteration log in DESIGN.md):
+#
+#   * grid (B, D) — "matvec" schedule: one grid step per (example,
+#     out-channel). Simple, but the x tile for a channel group is
+#     re-fetched from HBM for every one of its Dg output channels, and
+#     each contraction is a (Cg·K², T')×(T') mat-VEC — a degenerate MXU
+#     shape (one 128-lane column used).
+#   * grid (B, groups) — "matmul" schedule (default): one grid step per
+#     (example, channel group) computes ALL Dg output channels at once.
+#     The x tile is fetched once per group (Dg× less HBM traffic) and
+#     the contraction becomes a (Cg, T')×(T', Dg) mat-MUL, a real MXU
+#     shape. VMEM grows by the (Dg, T') dy tile and the Dg-wide output
+#     tile — checked against the 16 MiB budget by `vmem_estimate_conv2d`.
+
+
+def _perex_conv2d_kernel(x_ref, dy_ref, o_ref, *, KH, KW, stride, dilation):
+    """One grid step: (Cg, KH, KW) gradient tile for one (b, d) pair.
+
+    x_ref:  (1, 1, Cg, H, W);  dy_ref: (1, 1, Hp, Wp);
+    o_ref:  (1, 1, Cg, KH, KW)
+    """
+    x = x_ref[0, 0]          # (Cg, H, W)
+    dy = dy_ref[0, 0]        # (Hp, Wp)
+    hp, wp = dy.shape
+    sh, sw = stride
+    dh, dw = dilation
+    cg = x.shape[0]
+    dy_flat = dy.reshape(hp * wp)  # contraction vector
+    rows = []
+    for kh in range(KH):
+        cols = []
+        for kw in range(KW):
+            window = jax.lax.slice(
+                x,
+                (0, dh * kh, dw * kw),
+                (cg, dh * kh + sh * (hp - 1) + 1, dw * kw + sw * (wp - 1) + 1),
+                (1, sh, sw),
+            )  # (Cg, Hp, Wp)
+            # (Cg, Hp*Wp) x (Hp*Wp,) mat-vec on the MXU.
+            cols.append(
+                jnp.dot(
+                    window.reshape(cg, hp * wp),
+                    dy_flat,
+                    preferred_element_type=jnp.float32,
+                )
+            )
+        rows.append(jnp.stack(cols, axis=-1))  # (Cg, KW)
+    o_ref[0, 0] = jnp.stack(rows, axis=-2)  # (Cg, KH, KW)
+
+
+def _perex_conv2d_matmul_kernel(x_ref, dy_ref, o_ref, *, KH, KW, stride,
+                                dilation):
+    """One grid step: the (Dg, Cg, KH, KW) gradient tile for one
+    (example, channel group) pair — the MXU-friendly schedule.
+
+    x_ref:  (1, 1, Cg, H, W);  dy_ref: (1, 1, Dg, Hp, Wp);
+    o_ref:  (1, 1, Dg, Cg, KH, KW)
+    """
+    x = x_ref[0, 0]          # (Cg, H, W)
+    dy = dy_ref[0, 0]        # (Dg, Hp, Wp)
+    dg, hp, wp = dy.shape
+    sh, sw = stride
+    dh, dw = dilation
+    cg = x.shape[0]
+    # (Hp*Wp, Dg) right-hand side shared by every kernel offset
+    dy_mat = dy.reshape(dg, hp * wp).T
+    rows = []
+    for kh in range(KH):
+        cols = []
+        for kw in range(KW):
+            window = jax.lax.slice(
+                x,
+                (0, dh * kh, dw * kw),
+                (cg, dh * kh + sh * (hp - 1) + 1, dw * kw + sw * (wp - 1) + 1),
+                (1, sh, sw),
+            )  # (Cg, Hp, Wp)
+            # (Cg, Hp*Wp) x (Hp*Wp, Dg) mat-MUL on the MXU.
+            cols.append(
+                jnp.dot(
+                    window.reshape(cg, hp * wp),
+                    dy_mat,
+                    preferred_element_type=jnp.float32,
+                )
+            )  # (Cg, Dg)
+        rows.append(jnp.stack(cols, axis=-1))  # (Cg, Dg, KW)
+    tile = jnp.stack(rows, axis=-2)  # (Cg, Dg, KH, KW)
+    o_ref[0, 0] = tile.transpose(1, 0, 2, 3)  # (Dg, Cg, KH, KW)
+
+
+def perex_conv2d(x, dy, KH, KW, *, stride=(1, 1), dilation=(1, 1),
+                 padding=(0, 0), groups=1, schedule="matmul"):
+    """Per-example 2D conv kernel gradient via Pallas (Alg. 2, 2D case).
+
+    x: (B, C, H, W), dy: (B, D, H', W')  ->  (B, D, C//groups, KH, KW)
+
+    ``schedule`` selects the block schedule: ``"matmul"`` (default, grid
+    (B, groups), MXU matmuls, x fetched once per group) or ``"matvec"``
+    (grid (B, D), the original per-out-channel schedule) — see the
+    module comment and DESIGN.md §Perf.
+    """
+    B, C, H, W = x.shape
+    _, D, Hp, Wp = dy.shape
+    if C % groups or D % groups:
+        raise ValueError(f"channels ({C},{D}) not divisible by groups={groups}")
+    Cg = C // groups
+    Dg = D // groups
+    ph, pw = padding
+    if ph or pw:
+        x = jnp.pad(x, [(0, 0), (0, 0), (ph, ph), (pw, pw)])
+        H, W = H + 2 * ph, W + 2 * pw
+    sh, sw = stride
+    dh, dw = dilation
+    need_h = dh * (KH - 1) + sh * (Hp - 1) + 1
+    need_w = dw * (KW - 1) + sw * (Wp - 1) + 1
+    if need_h > H or need_w > W:
+        raise ValueError(
+            f"gather out of range: need ({need_h},{need_w}), have ({H},{W})"
+        )
+    xg = x.reshape(B, groups, Cg, H, W)
+
+    if schedule == "matvec":
+        kernel = functools.partial(
+            _perex_conv2d_kernel, KH=KH, KW=KW, stride=stride, dilation=dilation
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=(B, D),
+            in_specs=[
+                pl.BlockSpec((1, 1, Cg, H, W), lambda b, d: (b, d // Dg, 0, 0, 0)),
+                pl.BlockSpec((1, 1, Hp, Wp), lambda b, d: (b, d, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, Cg, KH, KW), lambda b, d: (b, d, 0, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((B, D, Cg, KH, KW), x.dtype),
+            interpret=_pallas_interpret(),
+        )(xg, dy)
+    if schedule != "matmul":
+        raise ValueError(f"unknown schedule {schedule!r}")
+
+    dyg = dy.reshape(B, groups, Dg, Hp, Wp)
+    kernel = functools.partial(
+        _perex_conv2d_matmul_kernel, KH=KH, KW=KW, stride=stride,
+        dilation=dilation,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, groups),
+        in_specs=[
+            pl.BlockSpec((1, 1, Cg, H, W), lambda b, g: (b, g, 0, 0, 0)),
+            pl.BlockSpec((1, 1, Dg, Hp, Wp), lambda b, g: (b, g, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, Dg, Cg, KH, KW), lambda b, g: (b, g, 0, 0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, groups, Dg, Cg, KH, KW), x.dtype),
+        interpret=_pallas_interpret(),
+    )(xg, dyg)
+    return out.reshape(B, D, Cg, KH, KW)
+
+
+def vmem_estimate_conv2d(C, H, W, Hp, Wp, KH, KW, *, D=None, groups=1,
+                         schedule="matmul", dtype_bytes=4):
+    """Bytes of VMEM one grid step holds (x tile + dy tile + out tile).
+
+    Used by DESIGN.md §Perf to check the block schedule fits the ~16 MiB
+    VMEM budget of a TPU core and to pick the schedule when it does not
+    (the matmul schedule's footprint grows with Dg = D // groups; fall
+    back to matvec — or tile D — when it would not fit).
+    """
+    cg = C // groups
+    if schedule == "matvec":
+        return dtype_bytes * (cg * H * W + Hp * Wp + cg * KH * KW)
+    dg = (D if D is not None else C) // groups
+    return dtype_bytes * (cg * H * W + dg * Hp * Wp + dg * cg * KH * KW)

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: Goodfellow (2015) per-example dense-layer gradient.
+
+For a linear layer y = Wx (+ b), the per-example weight gradient is the
+outer product  dW[b] = (dL/dy)[b] (x[b])^T  — Eq. (2) in the paper.
+
+The Pallas grid is (B,): one grid step owns one example and emits its
+(J, I) outer-product tile. On a real TPU the outer product is a
+degenerate (J,1)x(1,I) MXU matmul; ``jnp.outer`` lowers to exactly that.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .perex_conv import _pallas_interpret
+
+
+def _perex_linear_kernel(x_ref, dy_ref, o_ref):
+    """One grid step: dW tile for one example.
+
+    x_ref: (1, I), dy_ref: (1, J), o_ref: (1, J, I)
+    """
+    x = x_ref[0]    # (I,)
+    dy = dy_ref[0]  # (J,)
+    o_ref[0] = jnp.outer(dy, x)
+
+
+def perex_linear(x, dy):
+    """Per-example dense gradient via Pallas.
+
+    x: (B, I) layer input, dy: (B, J) output gradient  ->  (B, J, I).
+    """
+    B, I = x.shape
+    _, J = dy.shape
+    return pl.pallas_call(
+        _perex_linear_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, I), lambda b: (b, 0)),
+            pl.BlockSpec((1, J), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, J, I), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, J, I), x.dtype),
+        interpret=_pallas_interpret(),
+    )(x, dy)

@@ -1,0 +1,220 @@
+"""Pure-jnp reference oracles for the per-example gradient kernels.
+
+These are direct, unoptimized transcriptions of the paper's equations:
+
+  * Eq. (3): the forward (grouped, strided, dilated, padded) convolution,
+  * Eq. (4): the per-example convolution  x (*) dL/dy  producing the
+    per-example kernel gradient,
+  * the Goodfellow (2015) outer-product rule for dense layers,
+  * per-example global-norm clipping (Eq. 1, Abadi et al. 2016).
+
+Everything here is the correctness ground truth the Pallas kernels
+(`perex_conv.py`, `perex_linear.py`, `clip_reduce.py`) and the L2
+strategies (`strategies.py`) are validated against in `python/tests/`.
+
+The implementations favor obviousness over speed: explicit gather of the
+input windows, then one einsum. They are *not* exported to HLO.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def _pad_spatial1d(x, padding: int):
+    """Zero-pad the trailing (spatial) axis of ``x`` on both sides."""
+    if padding == 0:
+        return x
+    pads = [(0, 0)] * (x.ndim - 1) + [(padding, padding)]
+    return jnp.pad(x, pads)
+
+
+def _pad_spatial2d(x, padding):
+    """Zero-pad the trailing two (spatial) axes of ``x`` on both sides."""
+    ph, pw = padding
+    if ph == 0 and pw == 0:
+        return x
+    pads = [(0, 0)] * (x.ndim - 2) + [(ph, ph), (pw, pw)]
+    return jnp.pad(x, pads)
+
+
+def conv1d_ref(x, h, *, stride=1, dilation=1, padding=0, groups=1):
+    """Forward 1D convolution, Eq. (3) generalized with all arguments.
+
+    x: (B, C, T)   h: (D, C//groups, K)   ->  y: (B, D, T_out)
+
+    ``T_out = (T + 2*padding - dilation*(K-1) - 1) // stride + 1``
+    (PyTorch convention; matches ``lax.conv_general_dilated``).
+    """
+    x = _pad_spatial1d(x, padding)
+    B, C, T = x.shape
+    D, Cg, K = h.shape
+    assert C % groups == 0 and D % groups == 0 and Cg == C // groups
+    t_out = (T - dilation * (K - 1) - 1) // stride + 1
+    assert t_out >= 1, "empty output; shrink kernel/dilation or pad more"
+    # xw[b, c, t, k] = x[b, c, stride*t + dilation*k]
+    cols = []
+    for k in range(K):
+        start = dilation * k
+        sl = x[:, :, start : start + stride * (t_out - 1) + 1 : stride]
+        cols.append(sl)
+    xw = jnp.stack(cols, axis=-1)  # (B, C, T_out, K)
+    xw = xw.reshape(B, groups, Cg, t_out, K)
+    hg = h.reshape(groups, D // groups, Cg, K)
+    y = jnp.einsum("bgctk,gdck->bgdt", xw, hg)
+    return y.reshape(B, D, t_out)
+
+
+def conv2d_ref(x, h, *, stride=(1, 1), dilation=(1, 1), padding=(0, 0), groups=1):
+    """Forward 2D convolution with all arguments.
+
+    x: (B, C, H, W)   h: (D, C//groups, KH, KW)  ->  y: (B, D, H_out, W_out)
+    """
+    x = _pad_spatial2d(x, padding)
+    B, C, H, W = x.shape
+    D, Cg, KH, KW = h.shape
+    sh, sw = stride
+    dh, dw = dilation
+    h_out = (H - dh * (KH - 1) - 1) // sh + 1
+    w_out = (W - dw * (KW - 1) - 1) // sw + 1
+    assert h_out >= 1 and w_out >= 1
+    rows = []
+    for kh in range(KH):
+        cols = []
+        for kw in range(KW):
+            sl = x[
+                :,
+                :,
+                dh * kh : dh * kh + sh * (h_out - 1) + 1 : sh,
+                dw * kw : dw * kw + sw * (w_out - 1) + 1 : sw,
+            ]
+            cols.append(sl)
+        rows.append(jnp.stack(cols, axis=-1))  # (B, C, H_out, W_out, KW)
+    xw = jnp.stack(rows, axis=-2)  # (B, C, H_out, W_out, KH, KW)
+    xw = xw.reshape(B, groups, Cg, h_out, w_out, KH, KW)
+    hg = h.reshape(groups, D // groups, Cg, KH, KW)
+    y = jnp.einsum("bgchwjk,gdcjk->bgdhw", xw, hg)
+    return y.reshape(B, D, h_out, w_out)
+
+
+def perex_conv1d_ref(x, dy, K, *, stride=1, dilation=1, padding=0, groups=1):
+    """Per-example kernel gradient for a 1D conv layer — Eq. (4) with the
+    Algorithm-2 generalization to stride/dilation/padding/groups.
+
+    Given the layer input ``x`` of shape (B, C, T) and the per-example
+    output gradient ``dy = dL[b]/dy`` of shape (B, D, T'), returns
+
+        dh[b, d, c, k] = sum_t  x_pad[b, cg(d,c), stride*t + dilation*k]
+                                * dy[b, d, t]
+
+    of shape (B, D, C//groups, K), where ``cg`` maps (output channel
+    group, in-group channel) to the global input channel.
+    """
+    x = _pad_spatial1d(x, padding)
+    B, C, T = x.shape
+    _, D, Tp = dy.shape
+    Cg = C // groups
+    # xw[b, c, t, k] = x[b, c, stride*t + dilation*k]  for t in [0, T')
+    cols = []
+    for k in range(K):
+        start = dilation * k
+        need = stride * (Tp - 1) + 1
+        sl = x[:, :, start : start + need : stride]
+        assert sl.shape[-1] == Tp, (
+            f"window shorter than dy: k={k} got {sl.shape[-1]} want {Tp}"
+        )
+        cols.append(sl)
+    xw = jnp.stack(cols, axis=-1)  # (B, C, T', K)
+    xw = xw.reshape(B, groups, Cg, Tp, K)
+    dyg = dy.reshape(B, groups, D // groups, Tp)
+    dh = jnp.einsum("bgctk,bgdt->bgdck", xw, dyg)
+    return dh.reshape(B, D, Cg, K)
+
+
+def perex_conv2d_ref(x, dy, KH, KW, *, stride=(1, 1), dilation=(1, 1),
+                     padding=(0, 0), groups=1):
+    """Per-example kernel gradient for a 2D conv layer (Algorithm 2, 2D).
+
+    x: (B, C, H, W), dy: (B, D, H', W')  ->  (B, D, C//groups, KH, KW)
+    """
+    x = _pad_spatial2d(x, padding)
+    B, C, H, W = x.shape
+    _, D, Hp, Wp = dy.shape
+    sh, sw = stride
+    dh_, dw_ = dilation
+    Cg = C // groups
+    rows = []
+    for kh in range(KH):
+        cols = []
+        for kw in range(KW):
+            sl = x[
+                :,
+                :,
+                dh_ * kh : dh_ * kh + sh * (Hp - 1) + 1 : sh,
+                dw_ * kw : dw_ * kw + sw * (Wp - 1) + 1 : sw,
+            ]
+            assert sl.shape[-2:] == (Hp, Wp)
+            cols.append(sl)
+        rows.append(jnp.stack(cols, axis=-1))
+    xw = jnp.stack(rows, axis=-2)  # (B, C, H', W', KH, KW)
+    xw = xw.reshape(B, groups, Cg, Hp, Wp, KH, KW)
+    dyg = dy.reshape(B, groups, D // groups, Hp, Wp)
+    out = jnp.einsum("bgchwjk,bgdhw->bgdcjk", xw, dyg)
+    return out.reshape(B, D, Cg, KH, KW)
+
+
+def perex_linear_ref(x, dy):
+    """Goodfellow (2015) per-example dense-layer gradient.
+
+    x: (B, I) layer input, dy: (B, J) output gradient
+    ->  dW: (B, J, I)  with  dW[b] = dy[b] (outer) x[b].
+    """
+    return jnp.einsum("bj,bi->bji", dy, x)
+
+
+def perex_bias_conv_ref(dy):
+    """Per-example bias gradient of a conv layer: sum over spatial dims.
+
+    dy: (B, D, *spatial)  ->  (B, D)
+    """
+    axes = tuple(range(2, dy.ndim))
+    return dy.sum(axis=axes)
+
+
+def clip_reduce_ref(g, clip):
+    """Per-example global-norm clip + sum — Eq. (1) + aggregation.
+
+    g: (B, P) flattened per-example gradients, ``clip`` the bound C.
+    Returns (g_sum of shape (P,), norms of shape (B,)) where
+
+        g_sum = sum_b g[b] / max(1, ||g[b]||_2 / C).
+    """
+    norms = jnp.sqrt(jnp.sum(g * g, axis=1))
+    scale = 1.0 / jnp.maximum(1.0, norms / clip)
+    return (scale[:, None] * g).sum(axis=0), norms
+
+
+def np_perex_conv1d(x, dy, K, *, stride=1, dilation=1, padding=0, groups=1):
+    """Triple-loop numpy transcription of Eq. (4) — the slowest, most
+    literal oracle, used to cross-check the jnp oracle itself."""
+    x = np.asarray(x, dtype=np.float64)
+    dy = np.asarray(dy, dtype=np.float64)
+    if padding:
+        x = np.pad(x, [(0, 0), (0, 0), (padding, padding)])
+    B, C, T = x.shape
+    _, D, Tp = dy.shape
+    Cg = C // groups
+    Dg = D // groups
+    out = np.zeros((B, D, Cg, K))
+    for b in range(B):
+        for d in range(D):
+            g = d // Dg
+            for c in range(Cg):
+                cglob = g * Cg + c
+                for k in range(K):
+                    acc = 0.0
+                    for t in range(Tp):
+                        acc += x[b, cglob, stride * t + dilation * k] * dy[b, d, t]
+                    out[b, d, c, k] = acc
+    return out

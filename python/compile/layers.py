@@ -1,0 +1,377 @@
+"""L2: functional CNN layers with per-example-gradient support.
+
+A model is a flat list of layer *specs* (plain named tuples — hashable,
+so they can be closed over by ``jax.jit``). Parameters are a list with
+one entry per spec: ``(W, b)`` tuples for parametric layers, ``()`` for
+the rest. This explicit representation (rather than flax/haiku) keeps
+the parameter flattening contract with the rust runtime trivial and
+makes the crb strategy's "tap" injection points first-class.
+
+Three forward variants:
+
+  * :func:`forward`            — plain inference path,
+  * :func:`forward_with_taps`  — adds a zero "tap" to every parametric
+    layer's pre-activation output and also returns each parametric
+    layer's *input*; differentiating w.r.t. the taps yields the
+    per-example output gradients dL[b]/dy the crb strategy consumes,
+  * :func:`init_params`        — He/LeCun initialization.
+
+Batch-norm is deliberately absent: the paper (§4.2) excludes it because
+it mixes examples and makes per-example gradients ill-defined.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class Conv2d(NamedTuple):
+    """2D convolution, PyTorch semantics (NCHW / OIHW)."""
+
+    in_ch: int
+    out_ch: int
+    kernel: Tuple[int, int]
+    stride: Tuple[int, int] = (1, 1)
+    padding: Tuple[int, int] = (0, 0)
+    dilation: Tuple[int, int] = (1, 1)
+    groups: int = 1
+
+
+class Linear(NamedTuple):
+    in_dim: int
+    out_dim: int
+
+
+class InstanceNorm2d(NamedTuple):
+    """Per-example, per-channel normalization with affine params.
+
+    The paper (§4.2) rules out batch norm — it mixes examples, making
+    per-example gradients ill-defined — and names instance norm as the
+    per-example-safe alternative. Normalization statistics are computed
+    per (example, channel) over the spatial dims only, so every
+    strategy (incl. crb) applies unchanged.
+    """
+
+    channels: int
+    eps: float = 1e-5
+
+
+class Relu(NamedTuple):
+    pass
+
+
+class MaxPool2d(NamedTuple):
+    window: Tuple[int, int]
+    stride: Tuple[int, int]
+
+
+class Flatten(NamedTuple):
+    pass
+
+
+Spec = Any  # one of the above
+LayerParams = Tuple  # (W, b) or ()
+
+
+def is_parametric(spec: Spec) -> bool:
+    return isinstance(spec, (Conv2d, Linear, InstanceNorm2d))
+
+
+def conv2d_apply(x, w, b, spec: Conv2d):
+    """NCHW conv with PyTorch-convention arguments."""
+    dn = lax.conv_dimension_numbers(x.shape, w.shape, ("NCHW", "OIHW", "NCHW"))
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=spec.stride,
+        padding=[(spec.padding[0], spec.padding[0]), (spec.padding[1], spec.padding[1])],
+        rhs_dilation=spec.dilation,
+        dimension_numbers=dn,
+        feature_group_count=spec.groups,
+    )
+    return y + b[None, :, None, None]
+
+
+def maxpool2d_apply(x, spec: MaxPool2d):
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1) + spec.window,
+        window_strides=(1, 1) + spec.stride,
+        padding="VALID",
+    )
+
+
+def instance_norm_normalize(x, eps: float):
+    """x: (B, C, H, W) -> x_hat normalized per (b, c) over spatial dims."""
+    mean = x.mean(axis=(2, 3), keepdims=True)
+    var = x.var(axis=(2, 3), keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps)
+
+
+def instance_norm_apply(x, gamma, beta, spec: "InstanceNorm2d"):
+    xhat = instance_norm_normalize(x, spec.eps)
+    return xhat * gamma[None, :, None, None] + beta[None, :, None, None]
+
+
+def conv_out_hw(spec: Conv2d, h: int, w: int) -> Tuple[int, int]:
+    """PyTorch output-size formula for a Conv2d spec."""
+    kh, kw = spec.kernel
+    ho = (h + 2 * spec.padding[0] - spec.dilation[0] * (kh - 1) - 1) // spec.stride[0] + 1
+    wo = (w + 2 * spec.padding[1] - spec.dilation[1] * (kw - 1) - 1) // spec.stride[1] + 1
+    return ho, wo
+
+
+def pool_out_hw(spec: MaxPool2d, h: int, w: int) -> Tuple[int, int]:
+    ho = (h - spec.window[0]) // spec.stride[0] + 1
+    wo = (w - spec.window[1]) // spec.stride[1] + 1
+    return ho, wo
+
+
+def trace_shapes(specs: Sequence[Spec], input_shape: Tuple[int, int, int]):
+    """Propagate (C, H, W) through the spec list; returns per-layer input
+    shapes (before each layer) plus the final output dimensionality.
+
+    Raises if a Linear's ``in_dim`` disagrees with the flattened size —
+    this is the model-construction sanity check mirrored on the rust
+    side from the manifest.
+    """
+    c, h, w = input_shape
+    flat = None
+    shapes = []
+    for spec in specs:
+        if isinstance(spec, Conv2d):
+            shapes.append(("conv", (c, h, w)))
+            assert c == spec.in_ch, f"conv expects {spec.in_ch} ch, got {c}"
+            h, w = conv_out_hw(spec, h, w)
+            assert h >= 1 and w >= 1, f"conv output collapsed: {spec} at {(c,h,w)}"
+            c = spec.out_ch
+        elif isinstance(spec, MaxPool2d):
+            shapes.append(("pool", (c, h, w)))
+            h, w = pool_out_hw(spec, h, w)
+        elif isinstance(spec, Relu):
+            shapes.append(("relu", (c, h, w)))
+        elif isinstance(spec, InstanceNorm2d):
+            assert c == spec.channels, f"inorm expects {spec.channels} ch, got {c}"
+            shapes.append(("inorm", (c, h, w)))
+        elif isinstance(spec, Flatten):
+            shapes.append(("flatten", (c, h, w)))
+            flat = c * h * w
+        elif isinstance(spec, Linear):
+            cur = flat if flat is not None else c * h * w
+            shapes.append(("linear", (cur,)))
+            assert cur == spec.in_dim, f"linear expects {spec.in_dim}, got {cur}"
+            flat = spec.out_dim
+        else:
+            raise TypeError(f"unknown spec {spec!r}")
+    return shapes, flat
+
+
+def init_params(key, specs: Sequence[Spec]) -> List[LayerParams]:
+    """He-style init for convs, LeCun for linears; zero biases."""
+    params: List[LayerParams] = []
+    for spec in specs:
+        if isinstance(spec, Conv2d):
+            key, sub = jax.random.split(key)
+            kh, kw = spec.kernel
+            fan_in = (spec.in_ch // spec.groups) * kh * kw
+            w = jax.random.normal(
+                sub, (spec.out_ch, spec.in_ch // spec.groups, kh, kw), jnp.float32
+            ) * jnp.sqrt(2.0 / fan_in)
+            params.append((w, jnp.zeros((spec.out_ch,), jnp.float32)))
+        elif isinstance(spec, Linear):
+            key, sub = jax.random.split(key)
+            w = jax.random.normal(
+                sub, (spec.out_dim, spec.in_dim), jnp.float32
+            ) * jnp.sqrt(1.0 / spec.in_dim)
+            params.append((w, jnp.zeros((spec.out_dim,), jnp.float32)))
+        elif isinstance(spec, InstanceNorm2d):
+            params.append((
+                jnp.ones((spec.channels,), jnp.float32),
+                jnp.zeros((spec.channels,), jnp.float32),
+            ))
+        else:
+            params.append(())
+    return params
+
+
+def forward(params: Sequence[LayerParams], specs: Sequence[Spec], x):
+    """Plain forward pass. x: (B, C, H, W) -> logits (B, num_classes)."""
+    for p, spec in zip(params, specs):
+        if isinstance(spec, Conv2d):
+            x = conv2d_apply(x, p[0], p[1], spec)
+        elif isinstance(spec, Linear):
+            x = x @ p[0].T + p[1]
+        elif isinstance(spec, InstanceNorm2d):
+            x = instance_norm_apply(x, p[0], p[1], spec)
+        elif isinstance(spec, Relu):
+            x = jax.nn.relu(x)
+        elif isinstance(spec, MaxPool2d):
+            x = maxpool2d_apply(x, spec)
+        elif isinstance(spec, Flatten):
+            x = x.reshape(x.shape[0], -1)
+        else:
+            raise TypeError(f"unknown spec {spec!r}")
+    return x
+
+
+def tap_shapes(specs: Sequence[Spec], input_shape, batch: int):
+    """Output shape of every parametric layer — the taps' shapes."""
+    c, h, w = input_shape
+    flat = None
+    out = []
+    for spec in specs:
+        if isinstance(spec, Conv2d):
+            h, w = conv_out_hw(spec, h, w)
+            c = spec.out_ch
+            out.append((batch, c, h, w))
+        elif isinstance(spec, MaxPool2d):
+            h, w = pool_out_hw(spec, h, w)
+        elif isinstance(spec, Flatten):
+            flat = c * h * w
+        elif isinstance(spec, InstanceNorm2d):
+            out.append((batch, c, h, w))
+        elif isinstance(spec, Linear):
+            flat = spec.out_dim
+            out.append((batch, flat))
+    return out
+
+
+def forward_with_taps(params, specs, x, taps):
+    """Forward pass that (i) adds taps[l] to parametric layer l's
+    pre-activation output and (ii) records layer l's *input*.
+
+    Returns (logits, inputs). With taps == zeros the logits equal
+    :func:`forward`'s; the VJP w.r.t. taps[l] is the per-example output
+    gradient dL[b]/dy_l — the quantity Algorithm 1/2 consumes.
+    """
+    inputs = []
+    ti = 0
+    for p, spec in zip(params, specs):
+        if isinstance(spec, Conv2d):
+            inputs.append(x)
+            x = conv2d_apply(x, p[0], p[1], spec) + taps[ti]
+            ti += 1
+        elif isinstance(spec, Linear):
+            inputs.append(x)
+            x = x @ p[0].T + p[1] + taps[ti]
+            ti += 1
+        elif isinstance(spec, InstanceNorm2d):
+            inputs.append(x)
+            x = instance_norm_apply(x, p[0], p[1], spec) + taps[ti]
+            ti += 1
+        elif isinstance(spec, Relu):
+            x = jax.nn.relu(x)
+        elif isinstance(spec, MaxPool2d):
+            x = maxpool2d_apply(x, spec)
+        elif isinstance(spec, Flatten):
+            x = x.reshape(x.shape[0], -1)
+        else:
+            raise TypeError(f"unknown spec {spec!r}")
+    return x, inputs
+
+
+def xent(logits, label):
+    """Cross-entropy for one example: logits (N,), integer label ()."""
+    return -jax.nn.log_softmax(logits)[label]
+
+
+def xent_batch(logits, labels):
+    """Per-example cross-entropy: logits (B, N), labels (B,) -> (B,)."""
+    return -jnp.take_along_axis(
+        jax.nn.log_softmax(logits, axis=-1), labels[:, None], axis=-1
+    )[:, 0]
+
+
+def param_count(specs: Sequence[Spec]) -> int:
+    n = 0
+    for spec in specs:
+        if isinstance(spec, Conv2d):
+            kh, kw = spec.kernel
+            n += spec.out_ch * (spec.in_ch // spec.groups) * kh * kw + spec.out_ch
+        elif isinstance(spec, Linear):
+            n += spec.out_dim * spec.in_dim + spec.out_dim
+        elif isinstance(spec, InstanceNorm2d):
+            n += 2 * spec.channels
+    return n
+
+
+def flatten_params(params: Sequence[LayerParams]):
+    """Concatenate all parameters into one flat f32 vector — the wire
+    format shared with the rust runtime (see manifest packing spec)."""
+    leaves = []
+    for p in params:
+        for arr in p:
+            leaves.append(arr.reshape(-1))
+    return jnp.concatenate(leaves) if leaves else jnp.zeros((0,), jnp.float32)
+
+
+def unflatten_params(theta, specs: Sequence[Spec]) -> List[LayerParams]:
+    """Inverse of :func:`flatten_params` given the spec list."""
+    params: List[LayerParams] = []
+    off = 0
+    for spec in specs:
+        if isinstance(spec, Conv2d):
+            kh, kw = spec.kernel
+            wshape = (spec.out_ch, spec.in_ch // spec.groups, kh, kw)
+            n = wshape[0] * wshape[1] * wshape[2] * wshape[3]
+            w = theta[off : off + n].reshape(wshape)
+            off += n
+            b = theta[off : off + spec.out_ch]
+            off += spec.out_ch
+            params.append((w, b))
+        elif isinstance(spec, Linear):
+            n = spec.out_dim * spec.in_dim
+            w = theta[off : off + n].reshape(spec.out_dim, spec.in_dim)
+            off += n
+            b = theta[off : off + spec.out_dim]
+            off += spec.out_dim
+            params.append((w, b))
+        elif isinstance(spec, InstanceNorm2d):
+            g = theta[off : off + spec.channels]
+            off += spec.channels
+            b = theta[off : off + spec.channels]
+            off += spec.channels
+            params.append((g, b))
+        else:
+            params.append(())
+    return params
+
+
+def packing_spec(specs: Sequence[Spec]):
+    """[(name, shape, offset)] describing the flat theta layout; written
+    into the manifest so the rust side can introspect parameters."""
+    out = []
+    off = 0
+    li = 0
+    for spec in specs:
+        if isinstance(spec, Conv2d):
+            kh, kw = spec.kernel
+            wshape = [spec.out_ch, spec.in_ch // spec.groups, kh, kw]
+            n = wshape[0] * wshape[1] * wshape[2] * wshape[3]
+            out.append({"name": f"conv{li}.weight", "shape": wshape, "offset": off})
+            off += n
+            out.append({"name": f"conv{li}.bias", "shape": [spec.out_ch], "offset": off})
+            off += spec.out_ch
+            li += 1
+        elif isinstance(spec, Linear):
+            n = spec.out_dim * spec.in_dim
+            out.append(
+                {"name": f"linear{li}.weight", "shape": [spec.out_dim, spec.in_dim], "offset": off}
+            )
+            off += n
+            out.append({"name": f"linear{li}.bias", "shape": [spec.out_dim], "offset": off})
+            off += spec.out_dim
+            li += 1
+        elif isinstance(spec, InstanceNorm2d):
+            out.append({"name": f"inorm{li}.weight", "shape": [spec.channels], "offset": off})
+            off += spec.channels
+            out.append({"name": f"inorm{li}.bias", "shape": [spec.channels], "offset": off})
+            off += spec.channels
+            li += 1
+    return out, off

@@ -1,0 +1,203 @@
+"""L2: model zoo — the architectures the paper benchmarks.
+
+  * :func:`toy_cnn` — the Figs. 1–3 family: ``n_layers`` convolutions
+    whose channel counts grow geometrically by ``channel_rate`` from
+    ``first_channels``, ReLU after every conv, max-pool after every
+    second conv, then a linear classifier head.
+  * :func:`alexnet` / :func:`vgg16` — the Table 1 networks, faithful
+    structural ports of the torchvision models with a ``width_mult``
+    and reduced input resolution so they run on the CPU PJRT testbed
+    (see DESIGN.md §3 — structure, not absolute size, drives the
+    crb/multi crossover the paper reports).
+
+Every builder returns ``(specs, cfg_dict)`` where the dict round-trips
+through the artifact manifest so the rust side knows exactly what it is
+running.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+from . import layers as L
+
+
+def _head(c: int, h: int, w: int, num_classes: int) -> List[L.Spec]:
+    assert h >= 1 and w >= 1, (
+        f"spatial dims collapsed to {h}x{w}; increase input resolution"
+    )
+    return [L.Flatten(), L.Linear(c * h * w, num_classes)]
+
+
+def toy_cnn(
+    n_layers: int = 3,
+    first_channels: int = 8,
+    channel_rate: float = 1.0,
+    kernel_size: int = 3,
+    input_shape: Tuple[int, int, int] = (3, 32, 32),
+    num_classes: int = 10,
+    pool_every: int = 2,
+    norm: str = "none",
+) -> Tuple[List[L.Spec], Dict]:
+    """The toy family of Figs. 1–3.
+
+    Paper settings: kernel 3 (Fig 1) or 5 (Fig 3), first layer 25
+    channels (Fig 1/3) or 256 (Fig 2), input 3x256x256. Defaults here
+    are the scaled-down versions from DESIGN.md §3; pass the paper's
+    values to reproduce at full size.
+
+    ``norm="instance"`` inserts an InstanceNorm2d after every conv —
+    the paper's §4.2 suggestion for normalized nets under per-example
+    gradient clipping (batch norm being ill-defined there).
+    """
+    if norm not in ("none", "instance"):
+        raise ValueError(f"unknown norm {norm!r}")
+    c, h, w = input_shape
+    specs: List[L.Spec] = []
+    ch = first_channels
+    for i in range(n_layers):
+        specs.append(L.Conv2d(c, ch, (kernel_size, kernel_size)))
+        c = ch
+        h, w = L.conv_out_hw(specs[-1], h, w)
+        if norm == "instance":
+            specs.append(L.InstanceNorm2d(ch))
+        specs.append(L.Relu())
+        if (i + 1) % pool_every == 0 and min(h, w) >= 2:
+            specs.append(L.MaxPool2d((2, 2), (2, 2)))
+            h, w = L.pool_out_hw(specs[-1], h, w)
+        ch = max(1, int(round(ch * channel_rate)))
+    specs += _head(c, h, w, num_classes)
+    cfg = {
+        "arch": "toy_cnn",
+        "n_layers": n_layers,
+        "first_channels": first_channels,
+        "channel_rate": channel_rate,
+        "kernel_size": kernel_size,
+        "input_shape": list(input_shape),
+        "num_classes": num_classes,
+        "pool_every": pool_every,
+        "norm": norm,
+    }
+    return specs, cfg
+
+
+def alexnet(
+    width_mult: float = 0.25,
+    input_shape: Tuple[int, int, int] = (3, 64, 64),
+    num_classes: int = 10,
+) -> Tuple[List[L.Spec], Dict]:
+    """AlexNet (torchvision structure) scaled by ``width_mult``.
+
+    Keeps the signature stride-4 11x11 first conv, the 5-conv trunk,
+    the channel progression 64/192/384/256/256, and the 3-layer MLP
+    head. Dropout is omitted (it is off in eval-mode timing anyway and
+    keeps the artifacts deterministic).
+    """
+    def m(ch: int) -> int:
+        return max(8, int(round(ch * width_mult)))
+
+    c, h, w = input_shape
+    specs: List[L.Spec] = []
+
+    def conv(out_ch, k, s, p):
+        nonlocal c, h, w
+        spec = L.Conv2d(c, out_ch, (k, k), (s, s), (p, p))
+        specs.append(spec)
+        specs.append(L.Relu())
+        c = out_ch
+        h, w = L.conv_out_hw(spec, h, w)
+
+    def pool():
+        nonlocal h, w
+        specs.append(L.MaxPool2d((3, 3), (2, 2)))
+        h, w = L.pool_out_hw(specs[-1], h, w)
+
+    conv(m(64), 11, 4, 2)
+    pool()
+    conv(m(192), 5, 1, 2)
+    pool()
+    conv(m(384), 3, 1, 1)
+    conv(m(256), 3, 1, 1)
+    conv(m(256), 3, 1, 1)
+    pool()
+    assert h >= 1 and w >= 1, (
+        f"alexnet spatial dims collapsed to {h}x{w}; use input >= 3x64x64"
+    )
+    hidden = m(4096)
+    specs += [
+        L.Flatten(),
+        L.Linear(c * h * w, hidden),
+        L.Relu(),
+        L.Linear(hidden, hidden),
+        L.Relu(),
+        L.Linear(hidden, num_classes),
+    ]
+    cfg = {
+        "arch": "alexnet",
+        "width_mult": width_mult,
+        "input_shape": list(input_shape),
+        "num_classes": num_classes,
+    }
+    return specs, cfg
+
+
+_VGG16_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M", 512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def vgg16(
+    width_mult: float = 0.25,
+    input_shape: Tuple[int, int, int] = (3, 32, 32),
+    num_classes: int = 10,
+) -> Tuple[List[L.Spec], Dict]:
+    """VGG16 (configuration D) scaled by ``width_mult``; CIFAR-style
+    512/512 classifier head at 32x32 input (the standard adaptation)."""
+    def m(ch: int) -> int:
+        return max(8, int(round(ch * width_mult)))
+
+    c, h, w = input_shape
+    specs: List[L.Spec] = []
+    for item in _VGG16_PLAN:
+        if item == "M":
+            specs.append(L.MaxPool2d((2, 2), (2, 2)))
+            h, w = L.pool_out_hw(specs[-1], h, w)
+        else:
+            spec = L.Conv2d(c, m(item), (3, 3), (1, 1), (1, 1))
+            specs.append(spec)
+            specs.append(L.Relu())
+            c = m(item)
+            h, w = L.conv_out_hw(spec, h, w)
+    assert h >= 1 and w >= 1, (
+        f"vgg16 spatial dims collapsed to {h}x{w}; use input >= 3x32x32"
+    )
+    hidden = m(512)
+    specs += [
+        L.Flatten(),
+        L.Linear(c * h * w, hidden),
+        L.Relu(),
+        L.Linear(hidden, hidden),
+        L.Relu(),
+        L.Linear(hidden, num_classes),
+    ]
+    cfg = {
+        "arch": "vgg16",
+        "width_mult": width_mult,
+        "input_shape": list(input_shape),
+        "num_classes": num_classes,
+    }
+    return specs, cfg
+
+
+def build(cfg: Dict) -> Tuple[List[L.Spec], Dict]:
+    """Rebuild a model from its manifest config dict."""
+    arch = cfg["arch"]
+    kw = {k: v for k, v in cfg.items() if k != "arch"}
+    if "input_shape" in kw:
+        kw["input_shape"] = tuple(kw["input_shape"])
+    if arch == "toy_cnn":
+        return toy_cnn(**kw)
+    if arch == "alexnet":
+        return alexnet(**kw)
+    if arch == "vgg16":
+        return vgg16(**kw)
+    raise ValueError(f"unknown arch {arch!r}")

@@ -1,0 +1,221 @@
+"""L2: the paper's per-example gradient strategies.
+
+All four strategies compute the same object — a pytree of per-example
+gradients with a leading batch axis, matching ``params`` structure —
+and must agree to float32 tolerance (tested in ``python/tests``):
+
+  * :func:`grads_naive` — §2 "Naive approach": batch-size-1 loop. Uses
+    ``lax.map`` which lowers to a sequential ``while`` loop, so there is
+    genuinely no cross-example parallelism, like the paper's method.
+  * :func:`grads_multi` — §2 "multiple copies of the model":
+    ``jax.vmap(jax.grad(loss1))``. vmap *is* the "N parameter-sharing
+    copies" construction, formalized (no actual copies are made).
+  * :func:`grads_crb`   — §3, the paper's contribution: one ordinary
+    backward pass obtains dL[b]/dy per layer (via zero "taps"), then
+    Algorithm 2 turns each layer's (input, output-gradient) pair into
+    per-example weight gradients using a *grouped convolution* with
+    ``feature_group_count = B*groups``, stride/dilation swapped,
+    padding reused and the output truncated to the kernel size. The
+    grouped conv is XLA's `feature_group_count` — the exact analogue of
+    the PyTorch ``groups`` trick the paper exploits.
+  * :func:`grads_crb_pallas` — same chain-rule decomposition, but the
+    per-example convolution (Eq. 4) is evaluated by the L1 Pallas
+    kernel instead of the grouped-conv trick.
+
+Plus the no-DP baseline :func:`grad_nodp` (standard summed gradient).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .kernels.perex_conv import perex_conv2d
+from .kernels.perex_linear import perex_linear
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def loss_single(params, specs, x, y):
+    """Loss of ONE example. x: (C,H,W), y: () int32."""
+    logits = L.forward(params, specs, x[None])[0]
+    return L.xent(logits, y)
+
+
+def loss_batch_mean(params, specs, x, y):
+    logits = L.forward(params, specs, x)
+    return L.xent_batch(logits, y).mean()
+
+
+def grad_nodp(params, specs, x, y):
+    """Standard aggregate (mean) gradient — the paper's "No DP" column."""
+    return jax.value_and_grad(loss_batch_mean)(params, specs, x, y)
+
+
+# ---------------------------------------------------------------------------
+# naive / multi
+# ---------------------------------------------------------------------------
+
+
+def grads_naive(params, specs, x, y):
+    """Per-example grads one example at a time (sequential while-loop)."""
+    def one(xy):
+        xi, yi = xy
+        return jax.value_and_grad(loss_single)(params, specs, xi, yi)
+
+    losses, grads = lax.map(one, (x, y))
+    return grads, losses
+
+
+def grads_multi(params, specs, x, y):
+    """Per-example grads via vmap — the parameter-sharing copies trick."""
+    f = jax.vmap(
+        jax.value_and_grad(loss_single), in_axes=(None, None, 0, 0)
+    )
+    losses, grads = f(params, specs, x, y)
+    return grads, losses
+
+
+# ---------------------------------------------------------------------------
+# crb — Algorithm 2 via grouped convolution
+# ---------------------------------------------------------------------------
+
+
+def perex_conv2d_grouped(x, dy, KH, KW, *, stride=(1, 1), dilation=(1, 1),
+                         padding=(0, 0), groups=1):
+    """Eq. (4) evaluated exactly as Algorithm 2 prescribes, with XLA's
+    grouped convolution standing in for PyTorch's ``groups`` argument.
+
+    The 2D layer case needs a *3D* convolution (the paper's "one extra
+    dimension"): the per-group input channels of x become a spatial
+    axis so they are NOT contracted, batch*groups becomes the feature
+    groups, and dL/dy plays the role of the kernel. Stride and dilation
+    swap roles, padding carries over, and the output is truncated to
+    (KH, KW).
+
+    x: (B, C, H, W), dy: (B, D, Hp, Wp) -> (B, D, C//groups, KH, KW)
+    """
+    B, C, H, W = x.shape
+    _, D, Hp, Wp = dy.shape
+    Cg = C // groups
+    # lhs: batch folded into feature groups, Cg as a spatial dim.
+    lhs = x.reshape(1, B * groups, Cg, H, W)
+    # rhs: every (b, d) pair is an output channel with a (1, Hp, Wp) kernel.
+    rhs = dy.reshape(B * D, 1, 1, Hp, Wp)
+    dn = lax.conv_dimension_numbers(
+        lhs.shape, rhs.shape, ("NCDHW", "OIDHW", "NCDHW")
+    )
+    out = lax.conv_general_dilated(
+        lhs,
+        rhs,
+        # Alg. 2: Sigma' = (1, Delta) — forward dilation becomes stride...
+        window_strides=(1, dilation[0], dilation[1]),
+        padding=[(0, 0), (padding[0], padding[0]), (padding[1], padding[1])],
+        # ...and Delta' = (1, Sigma) — forward stride becomes dilation.
+        rhs_dilation=(1, stride[0], stride[1]),
+        dimension_numbers=dn,
+        feature_group_count=B * groups,
+    )
+    # out: (1, B*D, Cg, KH_out, KW_out); the floor in the forward output
+    # size can make KH_out > KH — truncate (Alg. 2 "must be truncated").
+    out = out[0, :, :, :KH, :KW]
+    return out.reshape(B, D, Cg, KH, KW)
+
+
+def _per_layer_perex_grads(spec, xi, dyi, conv_impl):
+    """Turn one parametric layer's (input, output-grad) into per-example
+    (dW, db) using the chosen Eq.-4 implementation."""
+    if isinstance(spec, L.Conv2d):
+        kh, kw = spec.kernel
+        dw = conv_impl(
+            xi,
+            dyi,
+            kh,
+            kw,
+            stride=spec.stride,
+            dilation=spec.dilation,
+            padding=spec.padding,
+            groups=spec.groups,
+        )
+        db = dyi.sum(axis=(2, 3))
+        return dw, db
+    if isinstance(spec, L.Linear):
+        dw = perex_linear(xi, dyi)
+        return dw, dyi
+    if isinstance(spec, L.InstanceNorm2d):
+        # y = γ·x̂ + β with x̂ per-example-normalized input; the
+        # per-example affine grads are plain spatial reductions:
+        #   dγ[b,c] = Σ_hw dy·x̂,   dβ[b,c] = Σ_hw dy.
+        xhat = L.instance_norm_normalize(xi, spec.eps)
+        dgamma = (dyi * xhat).sum(axis=(2, 3))
+        dbeta = dyi.sum(axis=(2, 3))
+        return dgamma, dbeta
+    raise TypeError(spec)
+
+
+def _grads_crb_impl(params, specs, x, y, conv_impl):
+    B = x.shape[0]
+    input_shape = x.shape[1:]
+    tshapes = L.tap_shapes(specs, input_shape, B)
+    taps0 = [jnp.zeros(s, jnp.float32) for s in tshapes]
+
+    def loss_of_taps(taps):
+        logits, inputs = L.forward_with_taps(params, specs, x, taps)
+        losses = L.xent_batch(logits, y)
+        # sum (not mean): dL/dtap[b] is then exactly dL_b/dy[b].
+        return losses.sum(), (inputs, losses)
+
+    dtaps, (inputs, losses) = jax.grad(loss_of_taps, has_aux=True)(taps0)
+
+    grads: List[tuple] = []
+    ti = 0
+    ii = 0
+    for spec, p in zip(specs, params):
+        if L.is_parametric(spec):
+            dw, db = _per_layer_perex_grads(spec, inputs[ii], dtaps[ti], conv_impl)
+            grads.append((dw, db))
+            ti += 1
+            ii += 1
+        else:
+            grads.append(())
+    return grads, losses
+
+
+def grads_crb(params, specs, x, y):
+    """Chain-rule-based per-example grads, Eq. 4 via grouped conv."""
+    return _grads_crb_impl(params, specs, x, y, perex_conv2d_grouped)
+
+
+def grads_crb_pallas(params, specs, x, y):
+    """Chain-rule-based per-example grads, Eq. 4 via the Pallas kernel."""
+    return _grads_crb_impl(params, specs, x, y, perex_conv2d)
+
+
+STRATEGIES = {
+    "naive": grads_naive,
+    "multi": grads_multi,
+    "crb": grads_crb,
+    "crb_pallas": grads_crb_pallas,
+}
+
+
+def flatten_pergrads(grads: Sequence[tuple], B: int):
+    """(B, ...)-leaved grads pytree -> (B, P) matrix, theta packing order."""
+    rows = []
+    for g in grads:
+        for arr in g:
+            rows.append(arr.reshape(B, -1))
+    return jnp.concatenate(rows, axis=1)
+
+
+def perex_grads_flat(params, specs, x, y, strategy: str):
+    """Strategy dispatch returning ((B, P) grads, (B,) losses)."""
+    grads, losses = STRATEGIES[strategy](params, specs, x, y)
+    return flatten_pergrads(grads, x.shape[0]), losses

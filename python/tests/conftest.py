@@ -1,0 +1,36 @@
+"""Shared fixtures/helpers for the build-time python test suite.
+
+These tests validate L1 (Pallas kernels) and L2 (strategies, models,
+dpsgd step) *before* AOT lowering; the rust integration tests then
+validate the lowered artifacts against an independent oracle. Keeping
+both green is the repo's end-to-end correctness argument.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def randn(rng, *shape, dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+def assert_allclose(a, b, *, atol=1e-5, rtol=1e-5, what=""):
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=atol, rtol=rtol, err_msg=what
+    )

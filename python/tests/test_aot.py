@@ -1,0 +1,89 @@
+"""The AOT compile path: artifact registry structure and HLO-text
+lowering (the interchange contract with the rust runtime)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+
+
+def test_build_sets_structure():
+    sets = aot.build_sets()
+    assert set(sets) == {
+        "core", "e2e", "fig1", "fig2", "fig3", "table1", "ablation", "inorm",
+    }
+    # fig1: 3 layer counts x 5 rates x (nodp + 3 strategies + init + eval)
+    assert len(sets["fig1"]) == 3 * 5 * 6
+    # core: nodp + 4x(grads+step) + init + eval
+    assert len(sets["core"]) == 1 + 4 * 2 + 2
+    # names may repeat only when the variants are identical (e.g. the
+    # batch-independent `fig2_init` emitted once per batch cell) — any
+    # same-name variants must have the same fingerprint, or the
+    # manifest would silently keep only the last one.
+    by_name = {}
+    for vs in sets.values():
+        for v in vs:
+            fp = aot._cfg_fingerprint(v)
+            assert by_name.setdefault(v.name, fp) == fp, (
+                f"conflicting variants named {v.name}"
+            )
+
+
+def test_fingerprint_stability_and_sensitivity():
+    sets = aot.build_sets()
+    v = sets["core"][0]
+    fp1 = aot._cfg_fingerprint(v)
+    fp2 = aot._cfg_fingerprint(v)
+    assert fp1 == fp2, "fingerprint must be deterministic"
+    # a different variant fingerprints differently
+    w = sets["core"][1]
+    assert aot._cfg_fingerprint(w) != fp1
+
+
+def test_variant_signatures_are_flat():
+    """Wire contract: every variant's inputs are plain arrays (no
+    pytrees) so the rust side can marshal them positionally."""
+    sets = aot.build_sets()
+    for v in sets["core"]:
+        for spec in v.in_specs:
+            assert hasattr(spec, "shape") and hasattr(spec, "dtype")
+
+
+def test_hlo_text_lowering_roundtrip():
+    """to_hlo_text must produce parseable HLO text mentioning the entry
+    computation — the exact artifact format the rust loader consumes."""
+
+    def fn(a, b):
+        return (jnp.dot(a, b) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert "f32[4,4]" in text
+
+
+def test_grads_variant_output_shapes():
+    """A grads variant must lower with outputs ((B, P), (B,))."""
+    sets = aot.build_sets()
+    v = next(v for v in sets["core"] if v.kind == "grads")
+    lowered = v.lower()
+    outs = jax.tree_util.tree_leaves(lowered.out_info)
+    shapes = [tuple(o.shape) for o in outs]
+    P = v.extra["param_count"]
+    B = v.batch
+    assert shapes == [(B, P), (B,)]
+
+
+def test_step_variant_output_shapes():
+    sets = aot.build_sets()
+    v = next(v for v in sets["core"] if v.kind == "step")
+    lowered = v.lower()
+    outs = jax.tree_util.tree_leaves(lowered.out_info)
+    shapes = [tuple(o.shape) for o in outs]
+    P = v.extra["param_count"]
+    B = v.batch
+    assert shapes == [(P,), (), (B,)]

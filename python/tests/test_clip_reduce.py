@@ -1,0 +1,81 @@
+"""L1: the fused per-example clip + aggregate kernel (Eq. 1)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.clip_reduce import clip_reduce
+from compile.kernels.ref import clip_reduce_ref
+from conftest import assert_allclose, randn
+
+
+def test_matches_ref(rng):
+    g = randn(rng, 6, 50)
+    got_sum, got_norms = clip_reduce(jnp.asarray(g), 1.0)
+    want_sum, want_norms = clip_reduce_ref(g, 1.0)
+    assert_allclose(got_sum, want_sum, atol=1e-4, what="clipped sum")
+    assert_allclose(got_norms, want_norms, atol=1e-5, what="norms")
+
+
+def test_no_clip_below_bound(rng):
+    """Rows with norm <= C pass through unscaled: sum == plain sum."""
+    g = randn(rng, 4, 10) * 0.01  # tiny norms
+    got_sum, norms = clip_reduce(jnp.asarray(g), 1.0)
+    assert float(np.max(norms)) < 1.0
+    assert_allclose(got_sum, g.sum(axis=0), atol=1e-6, what="no-clip passthrough")
+
+
+def test_clipped_rows_have_norm_c(rng):
+    """A single row far above the bound contributes exactly norm C."""
+    g = randn(rng, 1, 32) * 100.0
+    clip = 0.5
+    got_sum, norms = clip_reduce(jnp.asarray(g), clip)
+    out_norm = float(jnp.linalg.norm(got_sum))
+    assert abs(out_norm - clip) < 1e-4
+    # direction preserved
+    cos = float(
+        (got_sum * g[0]).sum() / (np.linalg.norm(g[0]) * out_norm)
+    )
+    assert cos > 1.0 - 1e-5
+
+
+def test_sensitivity_bound(rng):
+    """The DP guarantee's crux: removing any one example changes the
+    clipped sum by at most C in L2 — for every example, always."""
+    clip = 1.0
+    g = randn(rng, 5, 20) * 3.0
+    full, _ = clip_reduce(jnp.asarray(g), clip)
+    for b in range(5):
+        rest = np.delete(g, b, axis=0)
+        partial, _ = clip_reduce(jnp.asarray(rest), clip)
+        delta = float(jnp.linalg.norm(full - partial))
+        assert delta <= clip + 1e-5, f"example {b}: sensitivity {delta} > C"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    p=st.integers(1, 64),
+    clip=st.floats(0.05, 10.0),
+    scale=st.floats(0.01, 50.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_matches_ref(b, p, clip, scale, seed):
+    r = np.random.default_rng(seed)
+    g = randn(r, b, p) * np.float32(scale)
+    got_sum, got_norms = clip_reduce(jnp.asarray(g), np.float32(clip))
+    want_sum, want_norms = clip_reduce_ref(g, np.float32(clip))
+    tol = 1e-3 * max(1.0, scale)
+    assert_allclose(got_sum, want_sum, atol=tol, rtol=1e-4)
+    assert_allclose(got_norms, want_norms, atol=tol, rtol=1e-4)
+    # the aggregate can never exceed B*C in norm
+    assert float(jnp.linalg.norm(got_sum)) <= b * clip * (1 + 1e-4)
+
+
+def test_zero_gradients(rng):
+    g = np.zeros((3, 7), np.float32)
+    s, n = clip_reduce(jnp.asarray(g), 1.0)
+    assert_allclose(s, np.zeros(7))
+    assert_allclose(n, np.zeros(3))

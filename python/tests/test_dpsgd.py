@@ -1,0 +1,134 @@
+"""L2: the fused DP-SGD step — clipping, noise, update semantics."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import dpsgd, models, strategies
+from compile import layers as L
+from compile.kernels.ref import clip_reduce_ref
+from conftest import assert_allclose, randn
+
+
+@pytest.fixture(scope="module")
+def setup():
+    specs, cfg = models.toy_cnn(
+        n_layers=2, first_channels=4, channel_rate=1.0, kernel_size=3,
+        input_shape=(1, 10, 10), num_classes=4,
+    )
+    theta = L.flatten_params(L.init_params(jax.random.PRNGKey(0), specs))
+    r = np.random.default_rng(1)
+    B = 3
+    x = jnp.asarray(randn(r, B, 1, 10, 10))
+    y = jnp.asarray(r.integers(0, 4, size=B, dtype=np.int32))
+    return specs, theta, x, y
+
+
+def test_step_zero_noise_is_clipped_sgd(setup):
+    """σ=0: the step must equal theta - lr/B * clipped-sum computed by
+    hand from the grads function."""
+    specs, theta, x, y = setup
+    B = x.shape[0]
+    clip, lr = 0.5, 0.1
+    step = dpsgd.make_step_fn(specs, "crb")
+    theta2, mean_loss, norms = step(theta, x, y, 0, clip, 0.0, lr)
+
+    g, losses = dpsgd.make_grads_fn(specs, "crb")(theta, x, y)
+    gsum, want_norms = clip_reduce_ref(g, clip)
+    want = theta - lr * gsum / B
+    assert_allclose(theta2, want, atol=1e-5, what="zero-noise step")
+    assert_allclose(norms, want_norms, atol=1e-5)
+    assert_allclose(mean_loss, losses.mean(), atol=1e-6)
+
+
+def test_step_noise_scale(setup):
+    """With huge σ the update is noise-dominated and its std matches
+    lr*σ*C/B (over many seeds)."""
+    specs, theta, x, y = setup
+    B = x.shape[0]
+    clip, sigma, lr = 1.0, 100.0, 0.01
+    step = jax.jit(dpsgd.make_step_fn(specs, "multi"))
+    deltas = []
+    for seed in range(8):
+        theta2, _, _ = step(theta, x, y, seed, clip, sigma, lr)
+        deltas.append(np.asarray(theta2 - theta))
+    stacked = np.stack(deltas)
+    measured = stacked.std()
+    expect = lr * sigma * clip / B
+    assert 0.5 * expect < measured < 1.5 * expect, (measured, expect)
+
+
+def test_step_deterministic_in_seed(setup):
+    specs, theta, x, y = setup
+    step = jax.jit(dpsgd.make_step_fn(specs, "crb_pallas"))
+    a, _, _ = step(theta, x, y, 7, 1.0, 1.0, 0.1)
+    b, _, _ = step(theta, x, y, 7, 1.0, 1.0, 0.1)
+    c, _, _ = step(theta, x, y, 8, 1.0, 1.0, 0.1)
+    assert_allclose(a, b, what="same seed same step")
+    assert float(np.abs(np.asarray(a) - np.asarray(c)).max()) > 0.0
+
+
+def test_step_strategies_equivalent_at_zero_noise(setup):
+    specs, theta, x, y = setup
+    outs = []
+    for strat in strategies.STRATEGIES:
+        step = dpsgd.make_step_fn(specs, strat)
+        theta2, _, _ = step(theta, x, y, 0, 1.0, 0.0, 0.1)
+        outs.append(np.asarray(theta2))
+    for o in outs[1:]:
+        assert_allclose(o, outs[0], atol=2e-5, rtol=1e-4,
+                        what="strategy-independent step")
+
+
+def test_pallas_and_ref_clip_agree_in_step(setup):
+    specs, theta, x, y = setup
+    a, _, na = dpsgd.make_step_fn(specs, "crb", use_pallas_clip=True)(
+        theta, x, y, 3, 1.0, 0.5, 0.1
+    )
+    b, _, nb = dpsgd.make_step_fn(specs, "crb", use_pallas_clip=False)(
+        theta, x, y, 3, 1.0, 0.5, 0.1
+    )
+    assert_allclose(a, b, atol=1e-5, what="pallas vs ref clip in step")
+    assert_allclose(na, nb, atol=1e-5)
+
+
+def test_nodp_fn(setup):
+    specs, theta, x, y = setup
+    grad, loss = dpsgd.make_nodp_fn(specs)(theta, x, y)
+    assert grad.shape == theta.shape
+    g, losses = dpsgd.make_grads_fn(specs, "multi")(theta, x, y)
+    assert_allclose(loss, losses.mean(), atol=1e-6)
+    assert_allclose(grad, np.asarray(g).mean(axis=0), atol=2e-5, rtol=1e-4,
+                    what="nodp = mean of per-example")
+
+
+def test_eval_fn_accuracy_range(setup):
+    specs, theta, x, y = setup
+    loss, acc = dpsgd.make_eval_fn(specs)(theta, x, y)
+    assert float(loss) > 0.0
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_init_fn_deterministic(setup):
+    specs, *_ = setup
+    init = dpsgd.make_init_fn(specs)
+    a, b, c = init(0), init(0), init(1)
+    assert_allclose(a, b)
+    assert float(np.abs(np.asarray(a) - np.asarray(c)).max()) > 0.0
+    assert a.shape == (L.param_count(specs),)
+
+
+def test_training_reduces_loss(setup):
+    """A few σ=0 steps on one batch must reduce that batch's loss —
+    the L2-level sanity check behind the e2e example."""
+    specs, theta, x, y = setup
+    step = jax.jit(dpsgd.make_step_fn(specs, "crb_pallas"))
+    losses = []
+    t = theta
+    for i in range(15):
+        t, loss, _ = step(t, x, y, i, 10.0, 0.0, 0.2)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses

@@ -1,0 +1,122 @@
+"""Extension (paper §4.2): instance normalization under per-example
+gradients. Batch norm is ill-defined there; instance norm normalizes
+within each example, so all four strategies must keep agreeing."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import layers as L
+from compile import models, strategies
+from conftest import assert_allclose, randn
+
+
+def inorm_problem(rng, batch=3):
+    specs, cfg = models.toy_cnn(
+        n_layers=2, first_channels=4, channel_rate=1.5, kernel_size=3,
+        input_shape=(3, 12, 12), num_classes=5, norm="instance",
+    )
+    params = L.init_params(jax.random.PRNGKey(2), specs)
+    # perturb the affine params away from (1, 0) so gradients are generic
+    key = jax.random.PRNGKey(3)
+    params = [
+        tuple(
+            a + 0.3 * jax.random.normal(jax.random.fold_in(key, i * 10 + j), a.shape)
+            for j, a in enumerate(p)
+        )
+        if isinstance(s, L.InstanceNorm2d)
+        else p
+        for i, (p, s) in enumerate(zip(params, specs))
+    ]
+    x = jnp.asarray(randn(rng, batch, 3, 12, 12))
+    y = jnp.asarray(rng.integers(0, 5, size=batch, dtype=np.int32))
+    return specs, params, x, y
+
+
+def test_inorm_in_specs():
+    specs, cfg = models.toy_cnn(norm="instance")
+    inorms = [s for s in specs if isinstance(s, L.InstanceNorm2d)]
+    convs = [s for s in specs if isinstance(s, L.Conv2d)]
+    assert len(inorms) == len(convs)
+    assert cfg["norm"] == "instance"
+    # channel counts line up conv -> inorm
+    for c, n in zip(convs, inorms):
+        assert n.channels == c.out_ch
+
+
+def test_norm_none_unchanged():
+    a, _ = models.toy_cnn(norm="none")
+    b, _ = models.toy_cnn()
+    assert a == b
+
+
+def test_unknown_norm_rejected():
+    with pytest.raises(ValueError, match="norm"):
+        models.toy_cnn(norm="batch")
+
+
+def test_normalization_statistics(rng):
+    x = jnp.asarray(randn(rng, 2, 3, 6, 6) * 5.0 + 2.0)
+    xhat = L.instance_norm_normalize(x, 1e-5)
+    mean = np.asarray(xhat.mean(axis=(2, 3)))
+    var = np.asarray(xhat.var(axis=(2, 3)))
+    assert np.all(np.abs(mean) < 1e-5)
+    assert np.all(np.abs(var - 1.0) < 1e-3)
+
+
+def test_inorm_is_per_example():
+    """Changing example 1's pixels must not change example 0's output —
+    the property batch norm violates and instance norm restores."""
+    r = np.random.default_rng(5)
+    x1 = randn(r, 2, 3, 6, 6)
+    x2 = x1.copy()
+    x2[1] += 100.0
+    spec = L.InstanceNorm2d(3)
+    g = jnp.ones(3)
+    b = jnp.zeros(3)
+    y1 = L.instance_norm_apply(jnp.asarray(x1), g, b, spec)
+    y2 = L.instance_norm_apply(jnp.asarray(x2), g, b, spec)
+    assert_allclose(y1[0], y2[0], what="example 0 must be unaffected")
+
+
+def test_all_strategies_agree_with_inorm(rng):
+    specs, params, x, y = inorm_problem(rng)
+    flat = {}
+    for name in strategies.STRATEGIES:
+        g, _ = strategies.perex_grads_flat(params, specs, x, y, name)
+        flat[name] = np.asarray(g)
+    for name, g in flat.items():
+        assert_allclose(g, flat["multi"], atol=2e-4, rtol=1e-3,
+                        what=f"{name} vs multi (inorm)")
+
+
+def test_crb_inorm_matches_autodiff(rng):
+    specs, params, x, y = inorm_problem(rng, batch=2)
+    g_crb, _ = strategies.perex_grads_flat(params, specs, x, y, "crb")
+    for b in range(2):
+        _, gb = jax.value_and_grad(strategies.loss_single)(params, specs, x[b], y[b])
+        gb_flat = strategies.flatten_pergrads(
+            [tuple(a[None] for a in g) for g in gb], 1
+        )[0]
+        assert_allclose(g_crb[b], gb_flat, atol=2e-4, rtol=1e-3,
+                        what=f"crb inorm example {b}")
+
+
+def test_inorm_param_packing(rng):
+    specs, _ = models.toy_cnn(
+        n_layers=2, first_channels=4, input_shape=(3, 12, 12), norm="instance"
+    )
+    packing, total = L.packing_spec(specs)
+    assert total == L.param_count(specs)
+    names = [e["name"] for e in packing]
+    assert any(n.startswith("inorm") for n in names)
+    # flatten/unflatten round-trip with inorm params present
+    params = L.init_params(jax.random.PRNGKey(0), specs)
+    theta = L.flatten_params(params)
+    back = L.unflatten_params(theta, specs)
+    for p, q in zip(params, back):
+        for a, b in zip(p, q):
+            assert_allclose(a, b)

@@ -1,0 +1,148 @@
+"""L2: functional layers — taps, packing, shape tracing."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import layers as L
+from conftest import assert_allclose, randn
+
+
+def tiny_specs():
+    return [
+        L.Conv2d(2, 3, (3, 3)),
+        L.Relu(),
+        L.MaxPool2d((2, 2), (2, 2)),
+        L.Conv2d(3, 4, (3, 3), stride=(2, 1), padding=(1, 0)),
+        L.Relu(),
+        L.Flatten(),
+        L.Linear(4 * 2 * 2, 5),
+    ]
+
+
+def build(rng, input_hw=(10, 10), batch=2):
+    specs = tiny_specs()
+    params = L.init_params(jax.random.PRNGKey(0), specs)
+    x = jnp.asarray(randn(rng, batch, 2, *input_hw))
+    return specs, params, x
+
+
+def test_forward_shapes(rng):
+    specs, params, x = build(rng)
+    logits = L.forward(params, specs, x)
+    assert logits.shape == (2, 5)
+
+
+def test_forward_with_zero_taps_is_forward(rng):
+    specs, params, x = build(rng)
+    tshapes = L.tap_shapes(specs, (2, 10, 10), 2)
+    taps = [jnp.zeros(s, jnp.float32) for s in tshapes]
+    logits0 = L.forward(params, specs, x)
+    logits1, inputs = L.forward_with_taps(params, specs, x, taps)
+    assert_allclose(logits0, logits1, what="zero-tap equivalence")
+    # one recorded input per parametric layer
+    assert len(inputs) == sum(L.is_parametric(s) for s in specs)
+    # first recorded input is x itself
+    assert_allclose(inputs[0], x)
+
+
+def test_tap_gradient_is_per_example_output_grad(rng):
+    """d(sum_b L_b)/dtap_l [b] == dL_b/dy_l — the identity the crb
+    strategy rests on. Check for the last linear layer where the
+    ground truth is softmax - onehot."""
+    specs, params, x = build(rng)
+    y = jnp.asarray(np.array([1, 3], np.int32))
+    tshapes = L.tap_shapes(specs, (2, 10, 10), 2)
+    taps0 = [jnp.zeros(s, jnp.float32) for s in tshapes]
+
+    def loss(taps):
+        logits, _ = L.forward_with_taps(params, specs, x, taps)
+        return L.xent_batch(logits, y).sum()
+
+    dtaps = jax.grad(loss)(taps0)
+    logits = L.forward(params, specs, x)
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, 5)
+    assert_allclose(dtaps[-1], probs - onehot, atol=1e-5,
+                    what="last tap = softmax - onehot")
+
+
+def test_flatten_unflatten_roundtrip(rng):
+    specs = tiny_specs()
+    params = L.init_params(jax.random.PRNGKey(7), specs)
+    theta = L.flatten_params(params)
+    assert theta.shape == (L.param_count(specs),)
+    back = L.unflatten_params(theta, specs)
+    for p, q in zip(params, back):
+        assert len(p) == len(q)
+        for a, b in zip(p, q):
+            assert_allclose(a, b, what="roundtrip")
+
+
+def test_packing_spec_tiles_theta():
+    specs = tiny_specs()
+    packing, total = L.packing_spec(specs)
+    assert total == L.param_count(specs)
+    cursor = 0
+    for e in packing:
+        assert e["offset"] == cursor
+        cursor += int(np.prod(e["shape"]))
+    assert cursor == total
+    names = [e["name"] for e in packing]
+    assert names[0] == "conv0.weight" and names[1] == "conv0.bias"
+    assert names[-2] == "linear2.weight" and names[-1] == "linear2.bias"
+
+
+def test_trace_shapes_catches_linear_mismatch():
+    specs = [L.Flatten(), L.Linear(10, 2)]
+    with pytest.raises(AssertionError):
+        L.trace_shapes(specs, (3, 4, 4))  # 48 != 10
+
+
+def test_trace_shapes_catches_channel_mismatch():
+    specs = [L.Conv2d(4, 8, (3, 3))]
+    with pytest.raises(AssertionError, match="ch"):
+        L.trace_shapes(specs, (3, 8, 8))
+
+
+def test_conv_out_hw_pytorch_formula():
+    spec = L.Conv2d(1, 1, (3, 3), stride=(2, 2), padding=(1, 1), dilation=(2, 2))
+    # PyTorch: floor((8 + 2 - 2*2 - 1)/2) + 1 = floor(5/2)+1 = 3
+    assert L.conv_out_hw(spec, 8, 8) == (3, 3)
+
+
+def test_xent_batch_matches_single(rng):
+    logits = jnp.asarray(randn(rng, 3, 7))
+    labels = jnp.asarray(np.array([0, 3, 6], np.int32))
+    batch = L.xent_batch(logits, labels)
+    singles = jnp.stack([L.xent(logits[i], labels[i]) for i in range(3)])
+    assert_allclose(batch, singles, what="xent batch vs single")
+
+
+def test_init_params_scale(rng):
+    """He init: conv weight std ~ sqrt(2/fan_in)."""
+    specs = [L.Conv2d(16, 32, (3, 3))]
+    params = L.init_params(jax.random.PRNGKey(0), specs)
+    w = np.asarray(params[0][0])
+    fan_in = 16 * 9
+    assert abs(w.std() - np.sqrt(2.0 / fan_in)) < 0.2 * np.sqrt(2.0 / fan_in)
+    assert np.all(np.asarray(params[0][1]) == 0.0)
+
+
+def test_grouped_conv_apply_matches_ref(rng):
+    from compile.kernels import ref
+
+    spec = L.Conv2d(4, 6, (3, 3), stride=(2, 1), padding=(1, 1),
+                    dilation=(1, 2), groups=2)
+    x = randn(rng, 2, 4, 9, 11)
+    w = randn(rng, 6, 2, 3, 3)
+    b = randn(rng, 6)
+    got = L.conv2d_apply(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), spec)
+    want = ref.conv2d_ref(
+        x, w, stride=spec.stride, dilation=spec.dilation,
+        padding=spec.padding, groups=spec.groups,
+    ) + b[None, :, None, None]
+    assert_allclose(got, want, atol=1e-4, what="conv2d_apply vs ref")

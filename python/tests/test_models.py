@@ -1,0 +1,122 @@
+"""L2: the model zoo — structure, shapes, and manifest config round-trip."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import layers as L
+from compile import models
+from conftest import randn
+
+
+def conv_channels(specs):
+    return [s.out_ch for s in specs if isinstance(s, L.Conv2d)]
+
+
+def test_toy_cnn_channel_progression():
+    specs, cfg = models.toy_cnn(
+        n_layers=4, first_channels=8, channel_rate=1.5, kernel_size=3,
+        input_shape=(3, 32, 32),
+    )
+    chans = conv_channels(specs)
+    assert chans[0] == 8
+    # python round(): 12, 18, 27
+    assert chans == [8, 12, 18, 27]
+    assert cfg["channel_rate"] == 1.5
+
+
+def test_toy_cnn_pooling_cadence():
+    specs, _ = models.toy_cnn(
+        n_layers=4, first_channels=4, input_shape=(3, 32, 32), pool_every=2
+    )
+    kinds = [type(s).__name__ for s in specs]
+    assert kinds.count("MaxPool2d") == 2
+    # pool right after conv-relu pairs 2 and 4
+    assert kinds[:3] == ["Conv2d", "Relu", "Conv2d"]
+
+
+def test_toy_cnn_forward(rng):
+    specs, cfg = models.toy_cnn(
+        n_layers=3, first_channels=4, input_shape=(3, 16, 16), num_classes=7
+    )
+    params = L.init_params(jax.random.PRNGKey(0), specs)
+    x = jnp.asarray(randn(rng, 2, 3, 16, 16))
+    assert L.forward(params, specs, x).shape == (2, 7)
+
+
+def test_build_dispatch_matches_builders():
+    cfg = {"arch": "toy_cnn", "n_layers": 2, "first_channels": 4,
+           "channel_rate": 1.0, "kernel_size": 3,
+           "input_shape": [3, 16, 16], "num_classes": 10, "pool_every": 2}
+    specs, out_cfg = models.build(cfg)
+    specs2, _ = models.toy_cnn(
+        n_layers=2, first_channels=4, channel_rate=1.0, kernel_size=3,
+        input_shape=(3, 16, 16), num_classes=10, pool_every=2,
+    )
+    assert specs == specs2
+    assert out_cfg["arch"] == "toy_cnn"
+
+
+def test_alexnet_structure():
+    specs, cfg = models.alexnet(width_mult=0.25, input_shape=(3, 64, 64))
+    convs = [s for s in specs if isinstance(s, L.Conv2d)]
+    linears = [s for s in specs if isinstance(s, L.Linear)]
+    assert len(convs) == 5, "AlexNet has 5 convs"
+    assert len(linears) == 3, "AlexNet has 3 FC layers"
+    assert convs[0].kernel == (11, 11) and convs[0].stride == (4, 4)
+    assert convs[1].kernel == (5, 5)
+    # channel ratios preserved under width_mult
+    assert convs[2].out_ch == convs[4].out_ch * 384 // 256
+
+
+def test_vgg16_structure():
+    specs, _ = models.vgg16(width_mult=0.25, input_shape=(3, 32, 32))
+    convs = [s for s in specs if isinstance(s, L.Conv2d)]
+    pools = [s for s in specs if isinstance(s, L.MaxPool2d)]
+    assert len(convs) == 13, "VGG16 has 13 convs"
+    assert len(pools) == 5
+    assert all(c.kernel == (3, 3) and c.padding == (1, 1) for c in convs)
+
+
+def test_vgg16_forward_smoke(rng):
+    specs, cfg = models.vgg16(width_mult=0.125, input_shape=(3, 32, 32))
+    params = L.init_params(jax.random.PRNGKey(0), specs)
+    x = jnp.asarray(randn(rng, 1, 3, 32, 32))
+    assert L.forward(params, specs, x).shape == (1, 10)
+
+
+def test_no_batchnorm_anywhere():
+    """Paper §4.2: batch-norm makes per-example gradients ill-defined;
+    the model zoo must not contain anything batch-coupled."""
+    allowed = {"Conv2d", "Relu", "MaxPool2d", "Flatten", "Linear"}
+    for specs, _ in [
+        models.toy_cnn(),
+        models.alexnet(input_shape=(3, 64, 64)),
+        models.vgg16(input_shape=(3, 32, 32)),
+    ]:
+        assert {type(s).__name__ for s in specs} <= allowed
+
+
+def test_alexnet_too_small_input_raises():
+    with pytest.raises(AssertionError):
+        models.alexnet(width_mult=0.25, input_shape=(3, 16, 16))
+
+
+def test_param_count_grows_with_rate():
+    a, _ = models.toy_cnn(channel_rate=1.0)
+    b, _ = models.toy_cnn(channel_rate=2.0)
+    assert L.param_count(b) > L.param_count(a)
+
+
+def test_trace_shapes_all_models():
+    """Every zoo model's spec list must be internally consistent."""
+    for specs, cfg in [
+        models.toy_cnn(n_layers=4, channel_rate=2.5),
+        models.alexnet(input_shape=(3, 64, 64)),
+        models.vgg16(input_shape=(3, 32, 32)),
+    ]:
+        shapes, out = L.trace_shapes(specs, tuple(cfg["input_shape"]))
+        assert out == cfg["num_classes"]

@@ -1,0 +1,304 @@
+"""L1: the Pallas per-example convolution kernel vs the jnp oracle.
+
+Three layers of evidence, mirroring DESIGN.md §8:
+
+  1. the jnp oracle (`ref.perex_conv*_ref`) matches a literal
+     triple-loop numpy transcription of Eq. (4);
+  2. the jnp oracle matches autodiff ground truth (jacobian of the
+     per-example loss w.r.t. the kernel);
+  3. the Pallas kernel matches the jnp oracle across a hypothesis sweep
+     of shapes / stride / dilation / padding / groups.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.perex_conv import (
+    perex_conv1d,
+    perex_conv2d,
+    vmem_estimate_conv2d,
+)
+from conftest import assert_allclose, randn
+
+
+# ---------------------------------------------------------------------------
+# 1. jnp oracle vs triple-loop numpy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "stride,dilation,padding,groups",
+    [
+        (1, 1, 0, 1),
+        (2, 1, 0, 1),
+        (1, 2, 0, 1),
+        (1, 1, 2, 1),
+        (1, 1, 0, 2),
+        (2, 2, 1, 2),
+    ],
+)
+def test_ref1d_matches_numpy_loops(rng, stride, dilation, padding, groups):
+    B, C, T, D, K = 2, 4, 14, 6, 3
+    x = randn(rng, B, C, T)
+    Tp = (T + 2 * padding - dilation * (K - 1) - 1) // stride + 1
+    dy = randn(rng, B, D, Tp)
+    got = ref.perex_conv1d_ref(
+        x, dy, K, stride=stride, dilation=dilation, padding=padding, groups=groups
+    )
+    want = ref.np_perex_conv1d(
+        x, dy, K, stride=stride, dilation=dilation, padding=padding, groups=groups
+    )
+    assert_allclose(got, want, atol=1e-4, what="jnp oracle vs numpy loops")
+
+
+# ---------------------------------------------------------------------------
+# 2. jnp oracle vs autodiff ground truth
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "stride,dilation,padding,groups",
+    [
+        ((1, 1), (1, 1), (0, 0), 1),
+        ((2, 1), (1, 1), (0, 0), 1),
+        ((1, 1), (1, 2), (0, 0), 1),
+        ((1, 1), (1, 1), (1, 1), 1),
+        ((1, 1), (1, 1), (0, 0), 2),
+        ((2, 2), (1, 1), (1, 1), 2),
+    ],
+)
+def test_ref2d_matches_autodiff(rng, stride, dilation, padding, groups):
+    """dL_b/dh from autodiff (vmap over per-example losses) must equal
+    the oracle's Eq. (4) evaluation with dy = dL_b/dy."""
+    B, C, H, W, D, KH, KW = 2, 4, 9, 8, 4, 3, 2
+    x = randn(rng, B, C, H, W)
+    h = randn(rng, D, C // groups, KH, KW)
+    m = None  # per-example random mask defines L_b = <y_b, m_b>
+
+    def y_of(h_):
+        return ref.conv2d_ref(
+            x, h_, stride=stride, dilation=dilation, padding=padding, groups=groups
+        )
+
+    y = y_of(h)
+    m = randn(rng, *y.shape)
+
+    # autodiff: jacobian of L_b w.r.t. h, one row per example
+    def loss_b(h_, b):
+        return (y_of(h_)[b] * m[b]).sum()
+
+    want = jnp.stack(
+        [jax.grad(loss_b)(h, b) for b in range(B)]
+    )  # (B, D, C//groups, KH, KW)
+
+    got = ref.perex_conv2d_ref(
+        x, m, KH, KW, stride=stride, dilation=dilation, padding=padding, groups=groups
+    )
+    assert_allclose(got, want, atol=1e-4, what="oracle vs autodiff")
+
+
+# ---------------------------------------------------------------------------
+# 3. Pallas kernel vs jnp oracle — fixed cases + hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "stride,dilation,padding,groups",
+    [
+        (1, 1, 0, 1),
+        (2, 1, 0, 1),
+        (1, 2, 0, 1),
+        (1, 1, 3, 1),
+        (1, 1, 0, 4),
+        (3, 2, 2, 2),
+    ],
+)
+def test_pallas1d_matches_ref(rng, stride, dilation, padding, groups):
+    B, C, T, D, K = 3, 8, 21, 8, 4
+    x = randn(rng, B, C, T)
+    Tp = (T + 2 * padding - dilation * (K - 1) - 1) // stride + 1
+    assert Tp >= 1
+    dy = randn(rng, B, D, Tp)
+    got = perex_conv1d(
+        jnp.asarray(x), jnp.asarray(dy), K,
+        stride=stride, dilation=dilation, padding=padding, groups=groups,
+    )
+    want = ref.perex_conv1d_ref(
+        x, dy, K, stride=stride, dilation=dilation, padding=padding, groups=groups
+    )
+    assert_allclose(got, want, atol=1e-4, what="pallas1d vs ref")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    cg=st.integers(1, 4),
+    groups=st.sampled_from([1, 2]),
+    d_per_g=st.integers(1, 3),
+    t=st.integers(6, 24),
+    k=st.integers(1, 4),
+    stride=st.integers(1, 3),
+    dilation=st.integers(1, 3),
+    padding=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas1d_hypothesis(b, cg, groups, d_per_g, t, k, stride, dilation, padding, seed):
+    C, D = cg * groups, d_per_g * groups
+    tp = (t + 2 * padding - dilation * (k - 1) - 1) // stride + 1
+    if tp < 1:
+        return  # invalid layer config
+    r = np.random.default_rng(seed)
+    x = randn(r, b, C, t)
+    dy = randn(r, b, D, tp)
+    got = perex_conv1d(
+        jnp.asarray(x), jnp.asarray(dy), k,
+        stride=stride, dilation=dilation, padding=padding, groups=groups,
+    )
+    want = ref.perex_conv1d_ref(
+        x, dy, k, stride=stride, dilation=dilation, padding=padding, groups=groups
+    )
+    assert got.shape == (b, D, cg, k)
+    assert_allclose(got, want, atol=1e-4, what="pallas1d hypothesis")
+
+
+@pytest.mark.parametrize(
+    "stride,dilation,padding,groups",
+    [
+        ((1, 1), (1, 1), (0, 0), 1),
+        ((2, 1), (1, 1), (0, 0), 1),
+        ((1, 2), (2, 1), (0, 0), 1),
+        ((1, 1), (1, 1), (2, 1), 1),
+        ((1, 1), (1, 1), (0, 0), 2),
+        ((2, 2), (1, 1), (1, 1), 2),
+    ],
+)
+def test_pallas2d_matches_ref(rng, stride, dilation, padding, groups):
+    B, C, H, W, D, KH, KW = 2, 4, 11, 10, 4, 3, 3
+    x = randn(rng, B, C, H, W)
+    Hp = (H + 2 * padding[0] - dilation[0] * (KH - 1) - 1) // stride[0] + 1
+    Wp = (W + 2 * padding[1] - dilation[1] * (KW - 1) - 1) // stride[1] + 1
+    dy = randn(rng, B, D, Hp, Wp)
+    got = perex_conv2d(
+        jnp.asarray(x), jnp.asarray(dy), KH, KW,
+        stride=stride, dilation=dilation, padding=padding, groups=groups,
+    )
+    want = ref.perex_conv2d_ref(
+        x, dy, KH, KW, stride=stride, dilation=dilation, padding=padding, groups=groups
+    )
+    assert_allclose(got, want, atol=1e-4, what="pallas2d vs ref")
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    cg=st.integers(1, 3),
+    groups=st.sampled_from([1, 2]),
+    d_per_g=st.integers(1, 2),
+    h=st.integers(5, 12),
+    w=st.integers(5, 12),
+    kh=st.integers(1, 3),
+    kw=st.integers(1, 3),
+    sh=st.integers(1, 2),
+    sw=st.integers(1, 2),
+    dil=st.integers(1, 2),
+    pad=st.integers(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas2d_hypothesis(b, cg, groups, d_per_g, h, w, kh, kw, sh, sw, dil, pad, seed):
+    C, D = cg * groups, d_per_g * groups
+    hp = (h + 2 * pad - dil * (kh - 1) - 1) // sh + 1
+    wp = (w + 2 * pad - dil * (kw - 1) - 1) // sw + 1
+    if hp < 1 or wp < 1:
+        return
+    r = np.random.default_rng(seed)
+    x = randn(r, b, C, h, w)
+    dy = randn(r, b, D, hp, wp)
+    got = perex_conv2d(
+        jnp.asarray(x), jnp.asarray(dy), kh, kw,
+        stride=(sh, sw), dilation=(dil, dil), padding=(pad, pad), groups=groups,
+    )
+    want = ref.perex_conv2d_ref(
+        x, dy, kh, kw, stride=(sh, sw), dilation=(dil, dil),
+        padding=(pad, pad), groups=groups,
+    )
+    assert got.shape == (b, D, cg, kh, kw)
+    assert_allclose(got, want, atol=1e-4, what="pallas2d hypothesis")
+
+
+# ---------------------------------------------------------------------------
+# error handling + metadata
+# ---------------------------------------------------------------------------
+
+
+def test_pallas1d_rejects_bad_groups(rng):
+    x = jnp.zeros((1, 3, 8))
+    dy = jnp.zeros((1, 4, 6))
+    with pytest.raises(ValueError, match="groups"):
+        perex_conv1d(x, dy, 3, groups=2)
+
+
+def test_pallas1d_rejects_out_of_range_gather(rng):
+    # dy longer than the input window allows
+    x = jnp.zeros((1, 2, 8))
+    dy = jnp.zeros((1, 2, 10))
+    with pytest.raises(ValueError, match="out of range"):
+        perex_conv1d(x, dy, 3)
+
+
+def test_pallas2d_rejects_bad_groups():
+    with pytest.raises(ValueError, match="groups"):
+        perex_conv2d(jnp.zeros((1, 3, 8, 8)), jnp.zeros((1, 4, 6, 6)), 3, 3, groups=2)
+
+
+def test_vmem_estimate_reasonable():
+    # one grid step of the e2e model's biggest layer fits VMEM easily
+    bytes_ = vmem_estimate_conv2d(C=27, H=30, W=30, Hp=28, Wp=28, KH=3, KW=3,
+                                  D=27)
+    assert bytes_ < 16 * 2**20
+    # and the estimate is monotone in the tile size
+    assert vmem_estimate_conv2d(64, 32, 32, 30, 30, 3, 3, D=64) > bytes_
+    # the matmul schedule costs more VMEM than matvec (that is the trade)
+    assert bytes_ > vmem_estimate_conv2d(
+        C=27, H=30, W=30, Hp=28, Wp=28, KH=3, KW=3, schedule="matvec"
+    )
+
+
+@pytest.mark.parametrize("schedule", ["matvec", "matmul"])
+def test_both_schedules_match_ref(rng, schedule):
+    """The matvec and matmul block schedules are the same function."""
+    B, C, H, W, D, KH, KW = 2, 4, 10, 9, 6, 3, 3
+    x = randn(rng, B, C, H, W)
+    dy = randn(rng, B, D, H - KH + 1, W - KW + 1)
+    got = perex_conv2d(jnp.asarray(x), jnp.asarray(dy), KH, KW, groups=2,
+                       schedule=schedule)
+    want = ref.perex_conv2d_ref(x, dy, KH, KW, groups=2)
+    assert_allclose(got, want, atol=1e-4, what=f"schedule={schedule}")
+
+
+def test_unknown_schedule_rejected():
+    with pytest.raises(ValueError, match="schedule"):
+        perex_conv2d(jnp.zeros((1, 2, 6, 6)), jnp.zeros((1, 2, 4, 4)), 3, 3,
+                     schedule="bogus")
+
+
+def test_dtype_preserved(rng):
+    x = randn(rng, 1, 2, 8).astype(np.float32)
+    dy = randn(rng, 1, 2, 6).astype(np.float32)
+    out = perex_conv1d(jnp.asarray(x), jnp.asarray(dy), 3)
+    assert out.dtype == jnp.float32
+
+
+def test_jit_compatible(rng):
+    """The kernel must lower inside jit — that is the AOT path."""
+    x = jnp.asarray(randn(rng, 2, 3, 10))
+    dy = jnp.asarray(randn(rng, 2, 4, 8))
+    f = jax.jit(lambda a, b: perex_conv1d(a, b, 3))
+    got = f(x, dy)
+    want = ref.perex_conv1d_ref(x, dy, 3)
+    assert_allclose(got, want, atol=1e-4, what="jit(pallas1d)")

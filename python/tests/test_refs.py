@@ -1,0 +1,118 @@
+"""The reference oracles themselves, cross-checked against XLA's
+convolution and against each other — the ground the whole correctness
+tower stands on."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import ref
+from conftest import assert_allclose, randn
+
+
+def lax_conv2d(x, h, *, stride, dilation, padding, groups):
+    dn = lax.conv_dimension_numbers(x.shape, h.shape, ("NCHW", "OIHW", "NCHW"))
+    return lax.conv_general_dilated(
+        jnp.asarray(x),
+        jnp.asarray(h),
+        window_strides=stride,
+        padding=[(padding[0], padding[0]), (padding[1], padding[1])],
+        rhs_dilation=dilation,
+        dimension_numbers=dn,
+        feature_group_count=groups,
+    )
+
+
+@pytest.mark.parametrize(
+    "stride,dilation,padding,groups",
+    [
+        ((1, 1), (1, 1), (0, 0), 1),
+        ((2, 2), (1, 1), (0, 0), 1),
+        ((1, 1), (2, 2), (0, 0), 1),
+        ((1, 1), (1, 1), (2, 1), 1),
+        ((1, 1), (1, 1), (0, 0), 3),
+        ((2, 1), (1, 2), (1, 0), 3),
+    ],
+)
+def test_conv2d_ref_matches_xla(rng, stride, dilation, padding, groups):
+    B, C, H, W, D, KH, KW = 2, 6, 10, 9, 6, 3, 2
+    x = randn(rng, B, C, H, W)
+    h = randn(rng, D, C // groups, KH, KW)
+    got = ref.conv2d_ref(
+        x, h, stride=stride, dilation=dilation, padding=padding, groups=groups
+    )
+    want = lax_conv2d(
+        x, h, stride=stride, dilation=dilation, padding=padding, groups=groups
+    )
+    assert_allclose(got, want, atol=1e-4, what="conv2d_ref vs lax")
+
+
+@pytest.mark.parametrize(
+    "stride,dilation,padding,groups",
+    [
+        (1, 1, 0, 1),
+        (2, 1, 1, 1),
+        (1, 3, 0, 2),
+    ],
+)
+def test_conv1d_ref_matches_xla_via_2d(rng, stride, dilation, padding, groups):
+    """1D conv == 2D conv with a singleton H axis."""
+    B, C, T, D, K = 2, 4, 15, 4, 3
+    x = randn(rng, B, C, T)
+    h = randn(rng, D, C // groups, K)
+    got = ref.conv1d_ref(
+        x, h, stride=stride, dilation=dilation, padding=padding, groups=groups
+    )
+    # no padding on the singleton axis
+    want = lax_conv2d(
+        x[:, :, None, :],
+        h[:, :, None, :],
+        stride=(1, stride),
+        dilation=(1, dilation),
+        padding=(0, padding),
+        groups=groups,
+    )[:, :, 0, :]
+    assert_allclose(got, want, atol=1e-4, what="conv1d_ref vs lax(2d)")
+
+
+def test_perex_summed_equals_batch_grad(rng):
+    """sum_b Eq.(4)[b] must equal d(sum_b L_b)/dh — per-example grads
+    partition the batch gradient."""
+    import jax
+
+    B, C, H, W, D, KH, KW = 3, 3, 8, 8, 5, 3, 3
+    x = randn(rng, B, C, H, W)
+    h = randn(rng, D, C, KH, KW)
+    m = randn(rng, B, D, H - KH + 1, W - KW + 1)
+
+    def total_loss(h_):
+        return (ref.conv2d_ref(x, h_) * m).sum()
+
+    want = jax.grad(total_loss)(jnp.asarray(h))
+    per = ref.perex_conv2d_ref(x, m, KH, KW)
+    assert_allclose(per.sum(axis=0), want, atol=1e-4, what="sum of per-example")
+
+
+def test_perex_bias_ref(rng):
+    dy = randn(rng, 2, 5, 4, 3)
+    got = ref.perex_bias_conv_ref(dy)
+    assert got.shape == (2, 5)
+    assert_allclose(got, dy.sum(axis=(2, 3)))
+
+
+def test_clip_reduce_ref_scaling():
+    g = np.array([[3.0, 4.0], [0.3, 0.4]], np.float32)  # norms 5, 0.5
+    s, n = ref.clip_reduce_ref(jnp.asarray(g), 1.0)
+    assert_allclose(n, [5.0, 0.5], atol=1e-6)
+    assert_allclose(s, [3.0 / 5 + 0.3, 4.0 / 5 + 0.4], atol=1e-6)
+
+
+def test_perex_conv1d_ref_window_assertion(rng):
+    """dy longer than the strided window must trip the oracle's guard."""
+    x = randn(rng, 1, 2, 8)
+    dy = randn(rng, 1, 2, 9)
+    with pytest.raises(AssertionError):
+        ref.perex_conv1d_ref(x, dy, 3)

@@ -1,0 +1,163 @@
+"""L2: the four per-example gradient strategies must be the same
+function — the paper's central correctness claim — and the crb grouped
+convolution must implement Algorithm 2 exactly."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import layers as L
+from compile import models, strategies
+from compile.kernels import ref
+from conftest import assert_allclose, randn
+
+
+def make_problem(rng, model_kwargs, batch=3, seed=0):
+    specs, cfg = models.toy_cnn(**model_kwargs)
+    params = L.init_params(jax.random.PRNGKey(seed), specs)
+    c, h, w = cfg["input_shape"]
+    x = jnp.asarray(randn(rng, batch, c, h, w))
+    y = jnp.asarray(rng.integers(0, cfg["num_classes"], size=batch, dtype=np.int32))
+    return specs, params, x, y
+
+
+CONFIGS = [
+    dict(n_layers=2, first_channels=4, channel_rate=1.5, kernel_size=3,
+         input_shape=(3, 12, 12), num_classes=5),
+    dict(n_layers=3, first_channels=6, channel_rate=1.0, kernel_size=5,
+         input_shape=(1, 24, 24), num_classes=10),
+    dict(n_layers=4, first_channels=4, channel_rate=2.0, kernel_size=3,
+         input_shape=(3, 20, 20), num_classes=10, pool_every=2),
+]
+
+
+@pytest.mark.parametrize("kwargs", CONFIGS)
+def test_all_strategies_agree(rng, kwargs):
+    specs, params, x, y = make_problem(rng, kwargs)
+    flat = {}
+    losses = {}
+    for name in strategies.STRATEGIES:
+        g, l = strategies.perex_grads_flat(params, specs, x, y, name)
+        flat[name], losses[name] = np.asarray(g), np.asarray(l)
+    base = flat["multi"]
+    for name, g in flat.items():
+        assert g.shape == base.shape
+        assert_allclose(g, base, atol=2e-4, rtol=1e-3, what=f"{name} vs multi")
+        assert_allclose(losses[name], losses["multi"], atol=1e-5,
+                        what=f"{name} losses")
+
+
+@pytest.mark.parametrize("kwargs", CONFIGS[:2])
+def test_strategies_match_per_example_autodiff(rng, kwargs):
+    """Ground truth: gradient of each example's loss, one at a time."""
+    specs, params, x, y = make_problem(rng, kwargs)
+    B = x.shape[0]
+    g_crb, losses = strategies.perex_grads_flat(params, specs, x, y, "crb")
+    for b in range(B):
+        lb, gb = jax.value_and_grad(strategies.loss_single)(
+            params, specs, x[b], y[b]
+        )
+        gb_flat = strategies.flatten_pergrads(
+            [tuple(a[None] for a in g) for g in gb], 1
+        )[0]
+        assert_allclose(g_crb[b], gb_flat, atol=2e-4, rtol=1e-3,
+                        what=f"crb example {b}")
+        assert_allclose(losses[b], lb, atol=1e-5)
+
+
+def test_summed_pergrads_equal_nodp_gradient(rng):
+    """mean_b g[b] must equal the ordinary mean-loss gradient."""
+    specs, params, x, y = make_problem(rng, CONFIGS[0])
+    B = x.shape[0]
+    g, _ = strategies.perex_grads_flat(params, specs, x, y, "crb_pallas")
+    _, nodp = strategies.grad_nodp(params, specs, x, y)
+    nodp_flat = L.flatten_params(nodp)
+    assert_allclose(np.asarray(g).mean(axis=0), nodp_flat, atol=2e-4, rtol=1e-3,
+                    what="mean per-example vs nodp grad")
+
+
+@pytest.mark.parametrize(
+    "stride,dilation,padding,groups",
+    [
+        ((1, 1), (1, 1), (0, 0), 1),
+        ((2, 2), (1, 1), (0, 0), 1),
+        ((1, 1), (2, 1), (0, 0), 1),
+        ((1, 1), (1, 1), (1, 2), 1),
+        ((1, 1), (1, 1), (0, 0), 2),
+        ((2, 1), (1, 2), (1, 1), 2),
+        ((3, 3), (1, 1), (2, 2), 1),
+    ],
+)
+def test_grouped_conv_algorithm2_matches_ref(rng, stride, dilation, padding, groups):
+    """The Algorithm-2 grouped-convolution trick (XLA feature_group_count
+    with stride/dilation swapped) against the direct Eq.-4 oracle —
+    including strided cases where the output must be truncated."""
+    B, C, H, W, D, KH, KW = 2, 4, 13, 12, 4, 3, 3
+    x = randn(rng, B, C, H, W)
+    Hp = (H + 2 * padding[0] - dilation[0] * (KH - 1) - 1) // stride[0] + 1
+    Wp = (W + 2 * padding[1] - dilation[1] * (KW - 1) - 1) // stride[1] + 1
+    dy = randn(rng, B, D, Hp, Wp)
+    got = strategies.perex_conv2d_grouped(
+        jnp.asarray(x), jnp.asarray(dy), KH, KW,
+        stride=stride, dilation=dilation, padding=padding, groups=groups,
+    )
+    want = ref.perex_conv2d_ref(
+        x, dy, KH, KW, stride=stride, dilation=dilation,
+        padding=padding, groups=groups,
+    )
+    assert got.shape == (B, D, C // groups, KH, KW)
+    assert_allclose(got, want, atol=1e-4, what="Alg.2 grouped conv vs ref")
+
+
+def test_naive_lowers_to_while_loop(rng):
+    """The naive strategy must stay sequential (a while loop in HLO) —
+    that *is* the paper's naive method; if it vectorized it would be
+    multi."""
+    specs, params, x, y = make_problem(rng, CONFIGS[0], batch=2)
+
+    def f(x, y):
+        g, l = strategies.grads_naive(params, specs, x, y)
+        return strategies.flatten_pergrads(g, x.shape[0]), l
+
+    hlo = jax.jit(f).lower(x, y).compiler_ir("hlo").as_hlo_text()
+    assert "while" in hlo, "naive strategy no longer lowers to a loop"
+
+
+def test_multi_has_no_while_loop(rng):
+    specs, params, x, y = make_problem(rng, CONFIGS[0], batch=2)
+
+    def f(x, y):
+        g, l = strategies.grads_multi(params, specs, x, y)
+        return strategies.flatten_pergrads(g, x.shape[0]), l
+
+    hlo = jax.jit(f).lower(x, y).compiler_ir("hlo").as_hlo_text()
+    assert "while" not in hlo, "multi (vmap) must be fully vectorized"
+
+
+def test_flatten_pergrads_order_matches_param_packing(rng):
+    """flatten_pergrads must use the same order as flatten_params —
+    otherwise the rust-side packing table lies."""
+    specs, cfg = models.toy_cnn(
+        n_layers=2, first_channels=3, input_shape=(1, 10, 10), num_classes=4
+    )
+    params = L.init_params(jax.random.PRNGKey(1), specs)
+    # per-example "grads" = the params themselves, batch of 1
+    fake = [tuple(a[None] for a in p) for p in params]
+    row = strategies.flatten_pergrads(fake, 1)[0]
+    assert_allclose(row, L.flatten_params(params), what="packing order")
+
+
+def test_batch_size_one(rng):
+    """Degenerate B=1 must work in every strategy (the naive method's
+    building block)."""
+    specs, params, x, y = make_problem(rng, CONFIGS[0], batch=1)
+    outs = {
+        name: np.asarray(strategies.perex_grads_flat(params, specs, x, y, name)[0])
+        for name in strategies.STRATEGIES
+    }
+    for name, g in outs.items():
+        assert g.shape[0] == 1
+        assert_allclose(g, outs["multi"], atol=2e-4, rtol=1e-3, what=name)

@@ -1,0 +1,26 @@
+//! Paper Figure 1: runtime vs channel rate, 2/3/4 conv layers, kernel 3.
+//!
+//! `cargo bench --bench fig1_channel_rate` — set `BENCH_REPS`,
+//! `BENCH_BATCHES` (paper: 10 and 20) to tighten the measurement.
+
+use grad_cnns::bench::Protocol;
+use grad_cnns::experiments;
+use grad_cnns::runtime::Registry;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::open(&std::env::var("ARTIFACTS_DIR").unwrap_or("artifacts".into()))?;
+    let proto = Protocol {
+        warmup: 1,
+        reps: env_usize("BENCH_REPS", 3),
+    };
+    let batches = env_usize("BENCH_BATCHES", 20);
+    let tables = experiments::run_rate_sweep(&registry, "fig1", batches, proto)?;
+    experiments::emit(&tables, "reports", "fig1")
+}

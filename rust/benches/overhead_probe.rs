@@ -1,0 +1,65 @@
+//! §Perf probe: how much of a bench cell is L3 overhead (literal
+//! marshalling + validation) vs XLA execute?
+//!
+//! Times the same artifact three ways:
+//!   A. `Registry::run` (validation + host->literal + execute + read)
+//!   B. pre-built literals + `execute_raw` + output read-back
+//!   C. pre-built literals + execute, outputs left on device
+//!
+//! (C - B) is the read-back cost, (A - B) the per-call marshalling the
+//! coordinator can avoid by caching input literals.
+
+use grad_cnns::bench::{measure, Protocol};
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::runtime::{HostValue, Registry};
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::open("artifacts")?;
+    let proto = Protocol { warmup: 2, reps: 5 };
+    for name in ["core_toy_crb_grads_b4", "fig2_crb_grads_b16", "fig2_nodp_b1"] {
+        if registry.manifest().get(name).is_err() {
+            continue;
+        }
+        let meta = registry.manifest().get(name)?.clone();
+        let p = meta.inputs[0].element_count();
+        let b = meta.inputs[2].element_count();
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut theta = vec![0.0f32; p];
+        rng.fill_gaussian(&mut theta, 0.1);
+        let mut x = vec![0.0f32; meta.inputs[1].element_count()];
+        rng.fill_gaussian(&mut x, 1.0);
+        let y: Vec<i32> = (0..b).map(|_| rng.next_below(10) as i32).collect();
+        let host = [
+            HostValue::f32(&[p], theta),
+            HostValue::f32(&meta.inputs[1].shape, x),
+            HostValue::i32(&[b], y),
+        ];
+        let lits: Vec<xla::Literal> =
+            host.iter().map(|v| v.to_literal().unwrap()).collect();
+        let exe = registry.load(name)?;
+
+        let a = measure(proto, || {
+            registry.run(name, &host).unwrap();
+        });
+        let b_ = measure(proto, || {
+            let outs = registry.execute_raw(name, &lits).unwrap();
+            for (lit, sig) in outs.iter().zip(&meta.outputs) {
+                let _ = HostValue::from_literal(lit, sig).unwrap();
+            }
+        });
+        let c = measure(proto, || {
+            let _ = exe.execute::<&xla::Literal>(&lits.iter().collect::<Vec<_>>()).unwrap();
+        });
+        println!(
+            "{name:<28} run {:.3}ms  raw+read {:.3}ms  execute-only {:.3}ms  \
+             -> marshalling {:.1}%  readback {:.1}%",
+            1e3 * a.mean,
+            1e3 * b_.mean,
+            1e3 * c.mean,
+            100.0 * (a.mean - b_.mean) / a.mean,
+            100.0 * (b_.mean - c.mean) / b_.mean,
+        );
+        registry.evict(name);
+    }
+    Ok(())
+}

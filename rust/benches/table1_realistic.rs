@@ -1,0 +1,29 @@
+//! Paper Table 1: AlexNet (B=16) and VGG16 (B=8), all strategies.
+//!
+//! Shapes to reproduce: naive ≫ everything; crb faster than multi on
+//! AlexNet; crb slightly slower than multi on VGG16. Also runs the
+//! crb-vs-crb_pallas ablation.
+
+use grad_cnns::bench::Protocol;
+use grad_cnns::experiments;
+use grad_cnns::runtime::Registry;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::open(&std::env::var("ARTIFACTS_DIR").unwrap_or("artifacts".into()))?;
+    let proto = Protocol {
+        warmup: 1,
+        reps: env_usize("BENCH_REPS", 3),
+    };
+    let batches = env_usize("BENCH_BATCHES", 20);
+    let table = experiments::run_table1(&registry, batches, proto)?;
+    experiments::emit(&[table], "reports", "table1")?;
+    let abl = experiments::run_ablation(&registry, batches, proto)?;
+    experiments::emit(&[abl], "reports", "ablation")
+}

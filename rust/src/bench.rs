@@ -1,0 +1,213 @@
+//! Benchmark harness substrate (no `criterion` in the vendor set).
+//!
+//! Reproduces the paper's measurement protocol: each benchmark point
+//! processes `batches` batches (paper: 20) and repeats the whole
+//! measurement `reps` times (paper: 10), reporting mean ± std — the
+//! exact quantity in the paper's Table 1 / Figs. 1–3. Also emits
+//! markdown and CSV tables so the bench binaries regenerate the
+//! figures' data series verbatim.
+
+use std::time::Instant;
+
+/// Summary statistics over repetitions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub reps: usize,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = if samples.len() > 1 {
+            samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / (n - 1.0)
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if sorted.len() % 2 == 1 {
+            sorted[sorted.len() / 2]
+        } else {
+            0.5 * (sorted[sorted.len() / 2 - 1] + sorted[sorted.len() / 2])
+        };
+        Stats {
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            median,
+            reps: samples.len(),
+        }
+    }
+
+    /// `1.234 ± 0.005` formatting used by the report tables.
+    pub fn pm(&self) -> String {
+        format!("{:.4} ± {:.4}", self.mean, self.std)
+    }
+}
+
+/// Measurement protocol parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Protocol {
+    /// Un-timed warmup invocations (JIT/cache warm).
+    pub warmup: usize,
+    /// Timed repetitions of the whole workload.
+    pub reps: usize,
+}
+
+impl Default for Protocol {
+    fn default() -> Self {
+        // paper: 10 runs; we default to 3 on the CPU testbed and let the
+        // bench binaries raise it via --reps.
+        Protocol { warmup: 1, reps: 3 }
+    }
+}
+
+/// Time `reps` invocations of `f` (seconds each), after warmup.
+pub fn measure<F: FnMut()>(proto: Protocol, mut f: F) -> Stats {
+    for _ in 0..proto.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(proto.reps);
+    for _ in 0..proto.reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// One row of a result table.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub cells: Vec<String>,
+}
+
+/// A result table that renders as markdown and CSV.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Row>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, label: &str, cells: Vec<String>) {
+        assert_eq!(
+            cells.len() + 1,
+            self.columns.len(),
+            "row width mismatch for {label}"
+        );
+        self.rows.push(Row {
+            label: label.to_string(),
+            cells,
+        });
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.columns.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} | {} |\n", r.label, r.cells.join(" | ")));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",") + "\n";
+        for r in &self.rows {
+            let mut cells = vec![r.label.clone()];
+            cells.extend(r.cells.iter().cloned());
+            out.push_str(&cells.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `<dir>/<slug>.md` and `<dir>/<slug>.csv`.
+    pub fn write_reports(&self, dir: &str, slug: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(format!("{dir}/{slug}.md"), self.to_markdown())?;
+        std::fs::write(format!("{dir}/{slug}.csv"), self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn stats_single_sample() {
+        let s = Stats::from_samples(&[5.0]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.median, 5.0);
+    }
+
+    #[test]
+    fn stats_even_median() {
+        let s = Stats::from_samples(&[4.0, 1.0, 3.0, 2.0]);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_counts_invocations() {
+        let mut calls = 0;
+        let proto = Protocol { warmup: 2, reps: 5 };
+        let s = measure(proto, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.reps, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_render() {
+        let mut t = Table::new("Fig 1 (2 layers)", &["rate", "naive (s)", "crb (s)"]);
+        t.push("1.0", vec!["1.00 ± 0.01".into(), "0.10 ± 0.00".into()]);
+        t.push("2.0", vec!["2.00 ± 0.02".into(), "0.15 ± 0.00".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| rate | naive (s) | crb (s) |"));
+        assert!(md.contains("| 1.0 | 1.00 ± 0.01 | 0.10 ± 0.00 |"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("rate,naive (s),crb (s)\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push("x", vec!["1".into(), "2".into()]);
+    }
+}

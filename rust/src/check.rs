@@ -1,0 +1,178 @@
+//! Property-testing substrate (no `proptest` in the vendor set).
+//!
+//! A deliberately small forall-runner: generate `cases` random inputs
+//! from a seeded [`Xoshiro256pp`], run the property, and on failure
+//! re-report the exact case index + seed so the failure replays
+//! deterministically (`CHECK_SEED=<seed> cargo test ...`). Includes a
+//! greedy size-shrinking pass for generators that expose a shrink.
+
+use crate::rng::Xoshiro256pp;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for CheckConfig {
+    fn default() -> Self {
+        let seed = std::env::var("CHECK_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        CheckConfig { cases: 64, seed }
+    }
+}
+
+/// Run `prop` on `cases` values drawn by `gen`. Panics with the case
+/// index and seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: CheckConfig,
+    mut gen: impl FnMut(&mut Xoshiro256pp) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.fork(case as u64);
+        let value = gen(&mut case_rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}):\n  input: {value:?}\n  {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// `forall` with a numeric "size" shrink: when a case fails, retry the
+/// property with progressively smaller sizes from the same sub-rng to
+/// report the smallest failing size.
+pub fn forall_sized<T: std::fmt::Debug>(
+    cfg: CheckConfig,
+    sizes: std::ops::Range<usize>,
+    mut gen: impl FnMut(&mut Xoshiro256pp, usize) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.fork(case as u64);
+        let size = sizes.start
+            + (case_rng.next_below((sizes.end - sizes.start) as u64) as usize);
+        let value = gen(&mut case_rng, size);
+        if let Err(msg) = prop(&value) {
+            // greedy shrink: try smaller sizes with fresh draws
+            let mut smallest = (size, format!("{value:?}"), msg.clone());
+            for s in (sizes.start..size).rev() {
+                let mut shrink_rng = rng.fork((case as u64) << 32 | s as u64);
+                let v = gen(&mut shrink_rng, s);
+                if let Err(m) = prop(&v) {
+                    smallest = (s, format!("{v:?}"), m);
+                }
+            }
+            panic!(
+                "property failed at case {case} (seed {:#x}); smallest failing size {}:\n  input: {}\n  {}",
+                cfg.seed, smallest.0, smallest.1, smallest.2
+            );
+        }
+    }
+}
+
+// Common generators ---------------------------------------------------------
+
+/// Uniform f32 vector in [-scale, scale].
+pub fn gen_vec(rng: &mut Xoshiro256pp, n: usize, scale: f32) -> Vec<f32> {
+    (0..n)
+        .map(|_| (rng.next_f32() * 2.0 - 1.0) * scale)
+        .collect()
+}
+
+/// Random usize in [lo, hi).
+pub fn gen_range(rng: &mut Xoshiro256pp, lo: usize, hi: usize) -> usize {
+    lo + rng.next_below((hi - lo) as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            CheckConfig { cases: 32, seed: 1 },
+            |rng| rng.next_f64(),
+            |x| {
+                count += 1;
+                if (0.0..1.0).contains(x) {
+                    Ok(())
+                } else {
+                    Err(format!("out of range: {x}"))
+                }
+            },
+        );
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        forall(
+            CheckConfig { cases: 16, seed: 2 },
+            |rng| rng.next_below(10),
+            |x| {
+                if *x < 5 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let mut vals = Vec::new();
+            forall(
+                CheckConfig { cases: 8, seed },
+                |rng| rng.next_u64(),
+                |v| {
+                    vals.push(*v);
+                    Ok(())
+                },
+            );
+            vals
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+
+    #[test]
+    #[should_panic(expected = "smallest failing size")]
+    fn shrink_reports_smaller_size() {
+        forall_sized(
+            CheckConfig { cases: 8, seed: 3 },
+            1..64,
+            |rng, size| gen_vec(rng, size, 1.0),
+            |v| {
+                if v.len() < 4 {
+                    Ok(())
+                } else {
+                    Err("len >= 4".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn gen_helpers_in_bounds() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let v = gen_vec(&mut rng, 100, 2.5);
+        assert!(v.iter().all(|x| x.abs() <= 2.5));
+        for _ in 0..100 {
+            let r = gen_range(&mut rng, 3, 9);
+            assert!((3..9).contains(&r));
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! CLI argument-parsing substrate (no `clap` in the vendor set).
+//!
+//! Supports the shapes the `repro` binary and examples need:
+//! subcommands, `--flag`, `--key value`, `--key=value`, repeated keys,
+//! positionals, and generated `--help` text.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Declarative option description (used for help and validation).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub values: BTreeMap<String, Vec<String>>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.values
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+}
+
+/// A command parser: known options + free positionals.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            takes_value: true,
+            help,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            takes_value: true,
+            help,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            takes_value: false,
+            help,
+            default: None,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut out = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{}{:<14} {}{}\n", o.name, val, o.help, def));
+        }
+        out
+    }
+
+    /// Parse a raw token list (without argv[0] / subcommand name).
+    pub fn parse(&self, tokens: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values
+                    .entry(o.name.to_string())
+                    .or_default()
+                    .push(d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest == "help" {
+                    bail!("{}", self.help_text());
+                }
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}\n\n{}", self.help_text()))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .ok_or_else(|| anyhow!("--{key} expects a value"))?
+                                .clone()
+                        }
+                    };
+                    args.values.entry(key.to_string()).or_default().push(value);
+                } else {
+                    if inline.is_some() {
+                        bail!("--{key} does not take a value");
+                    }
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+/// Split argv into (subcommand, rest); returns None for empty/`--help`.
+pub fn subcommand(argv: &[String]) -> Option<(&str, &[String])> {
+    let first = argv.first()?;
+    if first == "--help" || first == "-h" {
+        return None;
+    }
+    Some((first.as_str(), &argv[1..]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("bench", "run a benchmark")
+            .opt_default("reps", "3", "repetitions")
+            .opt("filter", "name filter")
+            .flag("verbose", "print per-run timings")
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = cmd().parse(&toks(&["--reps", "7", "--filter=crb"])).unwrap();
+        assert_eq!(a.get("reps"), Some("7"));
+        assert_eq!(a.get("filter"), Some("crb"));
+        assert_eq!(a.usize_or("reps", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn defaults_apply_and_override() {
+        let a = cmd().parse(&toks(&[])).unwrap();
+        assert_eq!(a.get("reps"), Some("3"));
+        let a = cmd().parse(&toks(&["--reps=9"])).unwrap();
+        assert_eq!(a.get("reps"), Some("9"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cmd().parse(&toks(&["--verbose", "posarg"])).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, vec!["posarg"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&toks(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&toks(&["--filter"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&toks(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn repeated_values_collect() {
+        let a = cmd()
+            .parse(&toks(&["--filter", "a", "--filter", "b"]))
+            .unwrap();
+        assert_eq!(a.get_all("filter"), vec!["a", "b"]);
+        assert_eq!(a.get("filter"), Some("b")); // last wins
+    }
+
+    #[test]
+    fn numeric_errors_are_nice() {
+        let a = cmd().parse(&toks(&["--reps", "abc"])).unwrap();
+        let err = a.usize_or("reps", 0).unwrap_err().to_string();
+        assert!(err.contains("reps"), "{err}");
+    }
+
+    #[test]
+    fn subcommand_split() {
+        let argv = toks(&["train", "--steps", "5"]);
+        let (name, rest) = subcommand(&argv).unwrap();
+        assert_eq!(name, "train");
+        assert_eq!(rest.len(), 2);
+        assert!(subcommand(&toks(&["--help"])).is_none());
+        assert!(subcommand(&[]).is_none());
+    }
+}

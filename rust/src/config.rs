@@ -1,0 +1,333 @@
+//! TOML-subset config substrate (no `serde`/`toml` in the vendor set).
+//!
+//! Parses the subset of TOML experiment configs need: `[section]`
+//! headers, `key = value` with strings, integers, floats, booleans and
+//! homogeneous inline arrays, plus `#` comments. Values are exposed
+//! through typed accessors with good error messages; [`ExperimentConfig`]
+//! is the typed view the trainer consumes.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CfgValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<CfgValue>),
+}
+
+impl CfgValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            CfgValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            CfgValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            CfgValue::Float(v) => Some(*v),
+            CfgValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            CfgValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` map with typed lookups.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    entries: BTreeMap<String, CfgValue>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value for `{full}`", lineno + 1))?;
+            entries.insert(full, value);
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&CfgValue> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Override a value (CLI `--set section.key=value`).
+    pub fn set(&mut self, key: &str, raw: &str) -> Result<()> {
+        let value = parse_value(raw)?;
+        self.entries.insert(key.to_string(), value);
+        Ok(())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn require_str(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("config missing required string `{key}`"))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str) -> Result<CfgValue> {
+    if raw.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = raw.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(CfgValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if raw == "true" {
+        return Ok(CfgValue::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(CfgValue::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(CfgValue::Arr(vec![]));
+        }
+        let items: Result<Vec<CfgValue>> =
+            inner.split(',').map(|s| parse_value(s.trim())).collect();
+        return Ok(CfgValue::Arr(items?));
+    }
+    if let Ok(v) = raw.parse::<i64>() {
+        return Ok(CfgValue::Int(v));
+    }
+    if let Ok(v) = raw.parse::<f64>() {
+        return Ok(CfgValue::Float(v));
+    }
+    bail!("cannot parse value {raw:?}")
+}
+
+// ---------------------------------------------------------------------------
+// Typed experiment config
+// ---------------------------------------------------------------------------
+
+/// The trainer's typed view of a config file (see `configs/*.toml`).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Artifact names (from the manifest) to drive.
+    pub step_artifact: String,
+    pub init_artifact: String,
+    pub eval_artifact: Option<String>,
+    pub artifacts_dir: String,
+    /// Training hyper-parameters.
+    pub steps: usize,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub clip_norm: f32,
+    pub noise_multiplier: f32,
+    pub target_delta: f64,
+    /// Data synthesis.
+    pub dataset_size: usize,
+    pub num_classes: usize,
+    pub seed: u64,
+    /// Reporting cadence.
+    pub eval_every: usize,
+    pub log_every: usize,
+}
+
+impl ExperimentConfig {
+    pub fn from_config(cfg: &Config) -> Result<ExperimentConfig> {
+        Ok(ExperimentConfig {
+            step_artifact: cfg.require_str("train.step_artifact")?,
+            init_artifact: cfg.require_str("train.init_artifact")?,
+            eval_artifact: cfg
+                .get("train.eval_artifact")
+                .and_then(|v| v.as_str())
+                .map(str::to_string),
+            artifacts_dir: cfg.str_or("train.artifacts_dir", "artifacts"),
+            steps: cfg.i64_or("train.steps", 200) as usize,
+            batch_size: cfg.i64_or("train.batch_size", 16) as usize,
+            lr: cfg.f64_or("train.lr", 0.05) as f32,
+            clip_norm: cfg.f64_or("dp.clip_norm", 1.0) as f32,
+            noise_multiplier: cfg.f64_or("dp.noise_multiplier", 1.1) as f32,
+            target_delta: cfg.f64_or("dp.target_delta", 1e-5),
+            dataset_size: cfg.i64_or("data.size", 2048) as usize,
+            num_classes: cfg.i64_or("data.num_classes", 10) as usize,
+            seed: cfg.i64_or("train.seed", 42) as u64,
+            eval_every: cfg.i64_or("train.eval_every", 50) as usize,
+            log_every: cfg.i64_or("train.log_every", 10) as usize,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment: dp training smoke
+[train]
+step_artifact = "e2e_toy_crb_pallas_step_b16"
+init_artifact = "e2e_toy_init"
+steps = 100        # inline comment
+lr = 0.05
+seed = 7
+
+[dp]
+clip_norm = 1.0
+noise_multiplier = 1.1
+target_delta = 1e-5
+
+[data]
+size = 512
+labels = [0, 1, 2]
+name = "synthetic # not a comment"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(
+            c.get("train.step_artifact").unwrap().as_str(),
+            Some("e2e_toy_crb_pallas_step_b16")
+        );
+        assert_eq!(c.get("train.steps").unwrap().as_i64(), Some(100));
+        assert_eq!(c.get("train.lr").unwrap().as_f64(), Some(0.05));
+        assert_eq!(c.get("dp.target_delta").unwrap().as_f64(), Some(1e-5));
+        assert_eq!(
+            c.get("data.name").unwrap().as_str(),
+            Some("synthetic # not a comment")
+        );
+        match c.get("data.labels").unwrap() {
+            CfgValue::Arr(a) => assert_eq!(a.len(), 3),
+            v => panic!("expected array, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn typed_experiment_config() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.steps, 100);
+        assert_eq!(e.seed, 7);
+        assert!((e.noise_multiplier - 1.1).abs() < 1e-6);
+        assert_eq!(e.eval_artifact, None);
+        assert_eq!(e.batch_size, 16); // default
+    }
+
+    #[test]
+    fn missing_required_key_errors() {
+        let c = Config::parse("[train]\ninit_artifact = \"x\"\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("train.steps", "5").unwrap();
+        assert_eq!(c.get("train.steps").unwrap().as_i64(), Some(5));
+        c.set("train.lr", "0.5").unwrap();
+        assert_eq!(c.get("train.lr").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("keynovalue\n").is_err());
+        assert!(Config::parse("k = \"open\n").is_err());
+        assert!(Config::parse("k = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn top_level_keys() {
+        let c = Config::parse("x = 1\ny = \"z\"\n").unwrap();
+        assert_eq!(c.get("x").unwrap().as_i64(), Some(1));
+        assert_eq!(c.get("y").unwrap().as_str(), Some("z"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Flat-theta checkpoints: `<base>.bin` (raw little-endian f32) plus
+//! `<base>.json` (step counter, artifact name, param count, rng
+//! cursor). Everything the trainer needs to resume; nothing else.
+
+use crate::jsonx::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A restorable training state snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: usize,
+    pub theta: Vec<f32>,
+    /// The step artifact this theta belongs to — restoring into a
+    /// different artifact is almost always a bug, so `load` verifies.
+    pub artifact: String,
+    /// Trainer data-order seed, so resumed runs revisit the same stream.
+    pub seed: u64,
+}
+
+impl Checkpoint {
+    /// Write `<base>.json` + `<base>.bin`.
+    pub fn save(&self, base: &str) -> Result<()> {
+        if let Some(parent) = Path::new(base).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let meta = jsonx::obj(vec![
+            ("step", jsonx::num(self.step as f64)),
+            ("artifact", jsonx::s(&self.artifact)),
+            ("seed", jsonx::num(self.seed as f64)),
+            ("param_count", jsonx::num(self.theta.len() as f64)),
+        ]);
+        std::fs::write(format!("{base}.json"), jsonx::to_string(&meta))
+            .with_context(|| format!("writing {base}.json"))?;
+        let mut bytes = Vec::with_capacity(self.theta.len() * 4);
+        for v in &self.theta {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(format!("{base}.bin"), bytes)
+            .with_context(|| format!("writing {base}.bin"))?;
+        Ok(())
+    }
+
+    /// Read a checkpoint pair written by [`save`](Self::save).
+    pub fn load(base: &str) -> Result<Checkpoint> {
+        let meta_text = std::fs::read_to_string(format!("{base}.json"))
+            .with_context(|| format!("reading {base}.json"))?;
+        let meta: Value = jsonx::parse(&meta_text).context("parsing checkpoint json")?;
+        let step = meta
+            .get("step")
+            .and_then(|v| v.as_usize())
+            .context("checkpoint missing `step`")?;
+        let artifact = meta
+            .get("artifact")
+            .and_then(|v| v.as_str())
+            .context("checkpoint missing `artifact`")?
+            .to_string();
+        let seed = meta
+            .get("seed")
+            .and_then(|v| v.as_i64())
+            .context("checkpoint missing `seed`")? as u64;
+        let param_count = meta
+            .get("param_count")
+            .and_then(|v| v.as_usize())
+            .context("checkpoint missing `param_count`")?;
+        let bytes = std::fs::read(format!("{base}.bin"))
+            .with_context(|| format!("reading {base}.bin"))?;
+        if bytes.len() != param_count * 4 {
+            bail!(
+                "checkpoint {base}.bin has {} bytes, meta says {} params",
+                bytes.len(),
+                param_count
+            );
+        }
+        let theta = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint {
+            step,
+            theta,
+            artifact,
+            seed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_base(tag: &str) -> String {
+        let dir = std::env::temp_dir().join("grad_cnns_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(tag).to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn round_trip() {
+        let ck = Checkpoint {
+            step: 17,
+            theta: vec![1.0, -2.5, 3.25e-8, f32::MIN_POSITIVE],
+            artifact: "e2e_toy_crb_pallas_step_b16".into(),
+            seed: 42,
+        };
+        let base = tmp_base("round_trip");
+        ck.save(&base).unwrap();
+        let back = Checkpoint::load(&base).unwrap();
+        assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn truncated_bin_rejected() {
+        let ck = Checkpoint {
+            step: 1,
+            theta: vec![0.0; 8],
+            artifact: "a".into(),
+            seed: 0,
+        };
+        let base = tmp_base("truncated");
+        ck.save(&base).unwrap();
+        std::fs::write(format!("{base}.bin"), [0u8; 12]).unwrap();
+        assert!(Checkpoint::load(&base).is_err());
+    }
+
+    #[test]
+    fn missing_files_reported() {
+        assert!(Checkpoint::load(&tmp_base("nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! L3 coordinator — the system the per-example gradients serve.
+//!
+//! The paper's contribution is a *compute* technique; what makes it a
+//! system is the training/serving machinery around it. This module is
+//! that machinery, pure rust, python long gone:
+//!
+//! * [`trainer`] — the DP-SGD training loop (Abadi et al. 2016, the
+//!   paper's §1 motivation): batches → step artifact → clipped noisy
+//!   update, with the RDP accountant tracking ε and the loss curve
+//!   recorded for `EXPERIMENTS.md`.
+//! * [`service`] — a per-example-gradient *service*: requests arrive
+//!   one example at a time, a dynamic batcher forms artifact-sized
+//!   batches (size or deadline triggered), worker threads — each with
+//!   its own PJRT registry, since PJRT handles are thread-local —
+//!   execute the grads artifact and answer each request with its
+//!   example's gradient norm. This is the "DP gradient sidecar" shape
+//!   a production DP-training system deploys.
+//! * [`queue`] — the bounded MPMC queue (condvar-based; no tokio in
+//!   the vendor set) that gives the service backpressure.
+//! * [`checkpoint`] — flat-theta checkpoints with a json sidecar, so
+//!   training resumes bit-exactly (modulo the in-graph noise stream).
+
+pub mod checkpoint;
+pub mod queue;
+pub mod service;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use queue::BoundedQueue;
+pub use service::{GradRequest, GradResponse, ServiceConfig, ServiceHandle};
+pub use trainer::{TrainReport, Trainer};

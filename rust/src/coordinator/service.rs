@@ -1,0 +1,357 @@
+//! Per-example-gradient service: dynamic batching over the grads
+//! artifacts.
+//!
+//! The deployment shape of the paper's technique in a DP training
+//! platform: clients hand over single examples, and want back that
+//! example's gradient (here: its norm and a summary, not the full (P,)
+//! row — the full row stays inside the worker, exactly like a DP-SGD
+//! implementation would clip-and-aggregate it in place).
+//!
+//! Topology:
+//!
+//! ```text
+//!   submit() ─▶ request queue (bounded, backpressure)
+//!                  │  batch former: flush at B requests
+//!                  ▼  or after max_wait
+//!              batch queue (bounded)
+//!                  │
+//!       ┌──────────┼──────────┐         one PJRT registry per worker
+//!       ▼          ▼          ▼         (PJRT handles are !Send)
+//!    worker 0   worker 1   worker 2
+//!       └──────────┴──────────┘
+//!                  ▼
+//!           response table (+condvar), wait(id)
+//! ```
+//!
+//! The tail of a batch that can't fill up before `max_wait` is padded
+//! by repeating requests; padded slots are dropped on the way out
+//! (static-shape artifacts require exactly B rows).
+
+use crate::coordinator::queue::BoundedQueue;
+use crate::metrics;
+use crate::runtime::{HostValue, Registry};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One example submitted for per-example gradient evaluation.
+#[derive(Clone, Debug)]
+pub struct GradRequest {
+    pub image: Vec<f32>,
+    pub label: i32,
+}
+
+/// What the service answers with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GradResponse {
+    /// L2 norm of this example's full flattened gradient.
+    pub grad_norm: f32,
+    /// This example's loss.
+    pub loss: f32,
+    /// Which worker served it (observability).
+    pub worker: usize,
+    /// Queue + batching + execute time, as seen by the service.
+    pub latency: Duration,
+}
+
+/// Service parameters.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// A `grads` artifact name; its manifest batch is the batch size.
+    pub artifact: String,
+    pub artifacts_dir: String,
+    pub workers: usize,
+    /// Flush a partial batch after this long.
+    pub max_wait: Duration,
+    /// Request-queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            artifact: String::new(),
+            artifacts_dir: "artifacts".into(),
+            workers: 2,
+            max_wait: Duration::from_millis(20),
+            queue_capacity: 256,
+        }
+    }
+}
+
+struct PendingTable {
+    done: Mutex<HashMap<u64, Result<GradResponse, String>>>,
+    cv: Condvar,
+}
+
+struct QueuedRequest {
+    id: u64,
+    req: GradRequest,
+    enqueued: Instant,
+}
+
+struct Batch {
+    /// (request id, enqueue time) per real slot; padded slots absent.
+    slots: Vec<(u64, Instant)>,
+    x: Vec<f32>,
+    y: Vec<i32>,
+}
+
+/// Handle to a running service; dropping it shuts the workers down.
+pub struct ServiceHandle {
+    cfg: ServiceConfig,
+    theta: Arc<Vec<f32>>,
+    requests: Arc<BoundedQueue<QueuedRequest>>,
+    pending: Arc<PendingTable>,
+    next_id: AtomicU64,
+    pub metrics: Arc<metrics::Registry>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServiceHandle {
+    /// Start the batch former + `workers` executor threads.
+    ///
+    /// `theta` is the (frozen) parameter vector gradients are taken
+    /// at — the service is read-only with respect to the model.
+    pub fn start(cfg: ServiceConfig, theta: Vec<f32>) -> Result<ServiceHandle> {
+        // Validate the artifact (and learn B, shapes) up front on a
+        // throwaway registry so misconfiguration fails at start, not
+        // first request.
+        let probe = Registry::open(&cfg.artifacts_dir)?;
+        let meta = probe.manifest().get(&cfg.artifact)?.clone();
+        if meta.kind != "grads" {
+            bail!(
+                "service artifact {} has kind {:?}, want \"grads\"",
+                cfg.artifact,
+                meta.kind
+            );
+        }
+        let batch = meta.batch.context("grads artifact missing batch")?;
+        let p = meta.inputs[0].element_count();
+        if theta.len() != p {
+            bail!("theta length {} != artifact P={p}", theta.len());
+        }
+        let example_len: usize = meta.inputs[1].shape[1..].iter().product();
+        drop(probe);
+
+        let requests: Arc<BoundedQueue<QueuedRequest>> =
+            Arc::new(BoundedQueue::new(cfg.queue_capacity));
+        let batches: Arc<BoundedQueue<Batch>> =
+            Arc::new(BoundedQueue::new(cfg.workers.max(1) * 2));
+        let pending = Arc::new(PendingTable {
+            done: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+        });
+        let metrics = Arc::new(metrics::Registry::default());
+        let theta = Arc::new(theta);
+
+        let mut threads = Vec::new();
+
+        // --- batch former -------------------------------------------------
+        {
+            let requests = requests.clone();
+            let batches = batches.clone();
+            let max_wait = cfg.max_wait;
+            let batch_gauge = metrics.histogram("service.batch_fill");
+            threads.push(
+                std::thread::Builder::new()
+                    .name("batch-former".into())
+                    .spawn(move || {
+                        'outer: loop {
+                            // block for the batch head…
+                            let Some(first) = requests.pop() else {
+                                break;
+                            };
+                            let deadline = Instant::now() + max_wait;
+                            let mut got = vec![first];
+                            // …then fill until B or deadline
+                            while got.len() < batch {
+                                let left = deadline.saturating_duration_since(Instant::now());
+                                if left.is_zero() {
+                                    break;
+                                }
+                                match requests.pop_timeout(left) {
+                                    Ok(Some(r)) => got.push(r),
+                                    Ok(None) => break,       // timed out
+                                    Err(()) => {
+                                        if got.is_empty() {
+                                            break 'outer;
+                                        }
+                                        break;
+                                    }
+                                }
+                            }
+                            batch_gauge.observe_secs(got.len() as f64 / batch as f64);
+                            let mut slots = Vec::with_capacity(got.len());
+                            let mut x = Vec::with_capacity(batch * example_len);
+                            let mut y = Vec::with_capacity(batch);
+                            for q in &got {
+                                slots.push((q.id, q.enqueued));
+                                x.extend_from_slice(&q.req.image);
+                                y.push(q.req.label);
+                            }
+                            // pad the tail by repeating the last example
+                            while y.len() < batch {
+                                let last = &got.last().unwrap().req;
+                                x.extend_from_slice(&last.image);
+                                y.push(last.label);
+                            }
+                            if batches.push(Batch { slots, x, y }).is_err() {
+                                break;
+                            }
+                        }
+                        batches.close();
+                    })
+                    .expect("spawning batch former"),
+            );
+        }
+
+        // --- workers -------------------------------------------------------
+        for worker_id in 0..cfg.workers.max(1) {
+            let batches = batches.clone();
+            let pending = pending.clone();
+            let theta = theta.clone();
+            let dir = cfg.artifacts_dir.clone();
+            let artifact = cfg.artifact.clone();
+            let meta = meta.clone();
+            let exec_hist = metrics.histogram(&format!("service.worker{worker_id}.exec_secs"));
+            let served = metrics.counter(&format!("service.worker{worker_id}.served"));
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("grad-worker-{worker_id}"))
+                    .spawn(move || {
+                        // each worker owns its registry: PJRT handles
+                        // are not Send, and this gives compile-once
+                        // execute-many per thread.
+                        let registry = match Registry::open(&dir) {
+                            Ok(r) => r,
+                            Err(e) => {
+                                complete_all(&pending, &batches, format!("worker init: {e:#}"));
+                                return;
+                            }
+                        };
+                        let theta_v = HostValue::f32(&[theta.len()], theta.as_ref().clone());
+                        while let Some(b) = batches.pop() {
+                            let t0 = Instant::now();
+                            let xv = HostValue::f32(&meta.inputs[1].shape, b.x);
+                            let yv = HostValue::i32(&[b.y.len()], b.y);
+                            let result =
+                                registry.run(&artifact, &[theta_v.clone(), xv, yv]);
+                            exec_hist.observe_secs(t0.elapsed().as_secs_f64());
+                            let mut done = pending.done.lock().unwrap();
+                            match result {
+                                Ok(out) => {
+                                    // out[0]: (B, P) per-example grads,
+                                    // out[1]: (B,) losses
+                                    let grads = out[0].as_f32().unwrap();
+                                    let losses = out[1].as_f32().unwrap();
+                                    let p = grads.len() / losses.len();
+                                    for (slot, (id, enq)) in b.slots.iter().enumerate() {
+                                        let row = &grads[slot * p..(slot + 1) * p];
+                                        let norm = row
+                                            .iter()
+                                            .map(|v| (*v as f64) * (*v as f64))
+                                            .sum::<f64>()
+                                            .sqrt() as f32;
+                                        done.insert(
+                                            *id,
+                                            Ok(GradResponse {
+                                                grad_norm: norm,
+                                                loss: losses[slot],
+                                                worker: worker_id,
+                                                latency: enq.elapsed(),
+                                            }),
+                                        );
+                                        served.inc();
+                                    }
+                                }
+                                Err(e) => {
+                                    for (id, _) in &b.slots {
+                                        done.insert(*id, Err(format!("{e:#}")));
+                                    }
+                                }
+                            }
+                            drop(done);
+                            pending.cv.notify_all();
+                        }
+                    })
+                    .expect("spawning grad worker"),
+            );
+        }
+
+        Ok(ServiceHandle {
+            cfg,
+            theta,
+            requests,
+            pending,
+            next_id: AtomicU64::new(0),
+            metrics,
+            threads,
+        })
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Submit one example; returns a ticket for [`wait`](Self::wait).
+    /// Blocks when the request queue is full (backpressure).
+    pub fn submit(&self, req: GradRequest) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.requests
+            .push(QueuedRequest {
+                id,
+                req,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow::anyhow!("service is shut down"))?;
+        Ok(id)
+    }
+
+    /// Block until request `id` completes.
+    pub fn wait(&self, id: u64) -> Result<GradResponse> {
+        let mut done = self.pending.done.lock().unwrap();
+        loop {
+            if let Some(res) = done.remove(&id) {
+                return res.map_err(|e| anyhow::anyhow!(e));
+            }
+            done = self.pending.cv.wait(done).unwrap();
+        }
+    }
+
+    /// Convenience: submit a whole slice and wait for every answer,
+    /// preserving order.
+    pub fn submit_all(&self, reqs: &[GradRequest]) -> Result<Vec<GradResponse>> {
+        let ids: Vec<u64> = reqs
+            .iter()
+            .map(|r| self.submit(r.clone()))
+            .collect::<Result<_>>()?;
+        ids.into_iter().map(|id| self.wait(id)).collect()
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) {
+        self.requests.close();
+        // batch former closes `batches` on its way out
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn complete_all(pending: &PendingTable, batches: &BoundedQueue<Batch>, err: String) {
+    while let Some(b) = batches.pop() {
+        let mut done = pending.done.lock().unwrap();
+        for (id, _) in &b.slots {
+            done.insert(*id, Err(err.clone()));
+        }
+        drop(done);
+        pending.cv.notify_all();
+    }
+}

@@ -1,0 +1,326 @@
+//! The DP-SGD training loop — the end-to-end driver the paper's
+//! per-example gradients exist for (§1: gradient clipping per Abadi et
+//! al. 2016).
+//!
+//! Everything heavy happens inside the step artifact (per-example
+//! grads → clip → noise → update, one XLA program); the trainer owns
+//! the things a program can't: the data order, the privacy ledger, the
+//! eval cadence, checkpoints, and the metrics the report needs.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::data::{Batcher, Dataset, PatternedClasses, Sampling};
+use crate::metrics;
+use crate::privacy::DpSgdAccountant;
+use crate::runtime::{DeviceStep, HostValue, Registry};
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// One logged training point.
+#[derive(Clone, Debug)]
+pub struct LossPoint {
+    pub step: usize,
+    pub loss: f32,
+    /// Mean pre-clip per-example gradient norm over the batch.
+    pub mean_norm: f32,
+    /// Fraction of examples actually clipped (norm > C).
+    pub clipped_frac: f32,
+    pub epsilon: f64,
+}
+
+/// One eval checkpoint.
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub accuracy: f32,
+}
+
+/// What a training run produces (EXPERIMENTS.md §E2E is rendered from
+/// this).
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub losses: Vec<LossPoint>,
+    pub evals: Vec<EvalPoint>,
+    pub final_epsilon: f64,
+    pub final_delta: f64,
+    pub steps: usize,
+    pub wall_secs: f64,
+    pub steps_per_sec: f64,
+}
+
+impl TrainReport {
+    /// Markdown rendering for EXPERIMENTS.md.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::from("| step | loss | mean ‖g‖ | clipped | ε |\n|---|---|---|---|---|\n");
+        for p in &self.losses {
+            out.push_str(&format!(
+                "| {} | {:.4} | {:.3} | {:.0}% | {:.3} |\n",
+                p.step,
+                p.loss,
+                p.mean_norm,
+                100.0 * p.clipped_frac,
+                p.epsilon
+            ));
+        }
+        if !self.evals.is_empty() {
+            out.push_str("\n| step | eval loss | accuracy |\n|---|---|---|\n");
+            for e in &self.evals {
+                out.push_str(&format!(
+                    "| {} | {:.4} | {:.1}% |\n",
+                    e.step,
+                    e.loss,
+                    100.0 * e.accuracy
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "\nfinal: {} steps, ε = {:.3} @ δ = {:.0e}, {:.2} steps/s\n",
+            self.steps, self.final_epsilon, self.final_delta, self.steps_per_sec
+        ));
+        out
+    }
+}
+
+/// The DP-SGD trainer. Drives a `step` artifact over a synthetic
+/// dataset, tracks privacy, evaluates, and checkpoints.
+pub struct Trainer {
+    cfg: ExperimentConfig,
+    registry: Registry,
+    dataset: Dataset,
+    eval_set: Dataset,
+    metrics: metrics::Registry,
+    /// When set, checkpoints land at `<dir>/ckpt_<step>`.
+    pub checkpoint_dir: Option<String>,
+    pub checkpoint_every: usize,
+    /// Silence per-step stdout (benches, tests).
+    pub quiet: bool,
+}
+
+impl Trainer {
+    pub fn new(cfg: ExperimentConfig, registry: Registry) -> Result<Trainer> {
+        // The model spec tells us the input shape to synthesize.
+        let spec = registry.validate_model(&cfg.step_artifact)?;
+        // one generation pass, then a train/eval split: the held-out
+        // examples must come from the SAME class templates (same seed)
+        // or eval measures a different task entirely.
+        let gen = PatternedClasses { noise: 0.7 };
+        let eval_n = (cfg.dataset_size / 4).max(cfg.batch_size);
+        let full = gen.generate(
+            cfg.dataset_size + eval_n,
+            spec.input_shape,
+            cfg.num_classes,
+            cfg.seed,
+        );
+        let (c, h, w) = full.shape;
+        let sz = c * h * w;
+        let dataset = Dataset {
+            images: full.images[..cfg.dataset_size * sz].to_vec(),
+            labels: full.labels[..cfg.dataset_size].to_vec(),
+            n: cfg.dataset_size,
+            shape: full.shape,
+            num_classes: full.num_classes,
+        };
+        let eval_set = Dataset {
+            images: full.images[cfg.dataset_size * sz..].to_vec(),
+            labels: full.labels[cfg.dataset_size..].to_vec(),
+            n: eval_n,
+            shape: full.shape,
+            num_classes: full.num_classes,
+        };
+        Ok(Trainer {
+            cfg,
+            registry,
+            dataset,
+            eval_set,
+            metrics: metrics::Registry::default(),
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            quiet: false,
+        })
+    }
+
+    pub fn metrics(&self) -> &metrics::Registry {
+        &self.metrics
+    }
+
+    /// Initialize theta via the init artifact (layer-aware init stays
+    /// in jax; rust never re-implements it).
+    fn init_theta(&self) -> Result<Vec<f32>> {
+        let out = self.registry.run(
+            &self.cfg.init_artifact,
+            &[HostValue::scalar_i32(self.cfg.seed as i32)],
+        )?;
+        out.into_iter()
+            .next()
+            .context("init artifact returned nothing")?
+            .into_f32()
+    }
+
+    fn eval(&self, theta: &[f32], step: usize) -> Result<Option<EvalPoint>> {
+        let Some(name) = &self.cfg.eval_artifact else {
+            return Ok(None);
+        };
+        let meta = self.registry.manifest().get(name)?;
+        let b = meta.batch.context("eval artifact has no batch size")?;
+        // deterministic sweep over the whole eval set (full batches)
+        let n_batches = (self.eval_set.n / b).max(1);
+        let theta_v = HostValue::f32(&[theta.len()], theta.to_vec());
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        for bi in 0..n_batches {
+            let idx: Vec<usize> = (bi * b..(bi + 1) * b).collect();
+            let (x, y) = self.eval_set.gather(&idx);
+            let out = self.registry.run(
+                name,
+                &[
+                    theta_v.clone(),
+                    HostValue::f32(&x.shape, x.data),
+                    HostValue::i32(&[y.len()], y),
+                ],
+            )?;
+            loss_sum += out[0].as_f32()?[0] as f64;
+            acc_sum += out[1].as_f32()?[0] as f64;
+        }
+        Ok(Some(EvalPoint {
+            step,
+            loss: (loss_sum / n_batches as f64) as f32,
+            accuracy: (acc_sum / n_batches as f64) as f32,
+        }))
+    }
+
+    /// Run the configured number of steps (optionally resuming), and
+    /// return the report.
+    pub fn run(&mut self, resume: Option<Checkpoint>) -> Result<TrainReport> {
+        let cfg = self.cfg.clone();
+        let mut start_step = 0usize;
+        let theta0 = match resume {
+            Some(ck) => {
+                if ck.artifact != cfg.step_artifact {
+                    bail!(
+                        "checkpoint is for artifact {:?}, config wants {:?}",
+                        ck.artifact,
+                        cfg.step_artifact
+                    );
+                }
+                start_step = ck.step;
+                ck.theta
+            }
+            None => self.init_theta()?,
+        };
+
+        let mut step_exe = DeviceStep::new(
+            &self.registry,
+            &cfg.step_artifact,
+            &theta0,
+            cfg.clip_norm,
+            cfg.noise_multiplier,
+            cfg.lr,
+        )?;
+        let q = cfg.batch_size as f64 / self.dataset.n as f64;
+        let mut accountant = DpSgdAccountant::new(q, cfg.noise_multiplier as f64);
+        if start_step > 0 {
+            accountant.step(start_step as u64);
+        }
+        let mut batcher = Batcher::new(
+            self.dataset.n,
+            cfg.batch_size,
+            Sampling::Poisson,
+            cfg.seed,
+        );
+        // resume: replay the data stream to the checkpoint
+        for _ in 0..start_step {
+            let _ = batcher.next_batch();
+        }
+
+        let step_hist = self.metrics.histogram("trainer.step_secs");
+        let clipped = self.metrics.counter("trainer.examples_clipped");
+        let seen = self.metrics.counter("trainer.examples_seen");
+
+        let mut report = TrainReport {
+            final_delta: cfg.target_delta,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        for step in start_step..cfg.steps {
+            let idx = batcher.next_batch();
+            let (x, y) = self.dataset.gather(&idx);
+            let xv = HostValue::f32(&x.shape, x.data);
+            let yv = HostValue::i32(&[y.len()], y);
+            // per-step noise seed: deterministic, distinct from data seed
+            let seed = (cfg.seed as i32)
+                .wrapping_mul(0x9e37)
+                .wrapping_add(step as i32);
+            let ts = Instant::now();
+            let res = step_exe.step(&xv, &yv, seed)?;
+            step_hist.observe_secs(ts.elapsed().as_secs_f64());
+            accountant.step(1);
+            seen.add(res.norms.len() as u64);
+            let n_clipped = res
+                .norms
+                .iter()
+                .filter(|&&n| n > cfg.clip_norm)
+                .count();
+            clipped.add(n_clipped as u64);
+
+            let logged = step == cfg.steps - 1 || (step + 1) % cfg.log_every == 0;
+            if logged {
+                let (eps, _) = accountant.epsilon(cfg.target_delta);
+                let mean_norm =
+                    res.norms.iter().sum::<f32>() / res.norms.len().max(1) as f32;
+                let point = LossPoint {
+                    step: step + 1,
+                    loss: res.mean_loss,
+                    mean_norm,
+                    clipped_frac: n_clipped as f32 / res.norms.len().max(1) as f32,
+                    epsilon: eps,
+                };
+                if !self.quiet {
+                    println!(
+                        "step {:>5}  loss {:.4}  ‖g‖ {:.3}  clipped {:>3.0}%  ε {:.3}",
+                        point.step,
+                        point.loss,
+                        point.mean_norm,
+                        100.0 * point.clipped_frac,
+                        point.epsilon
+                    );
+                }
+                report.losses.push(point);
+            }
+            if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+                if let Some(ev) = self.eval(&step_exe.theta()?, step + 1)? {
+                    if !self.quiet {
+                        println!(
+                            "eval @ {:>5}  loss {:.4}  acc {:.1}%",
+                            ev.step,
+                            ev.loss,
+                            100.0 * ev.accuracy
+                        );
+                    }
+                    report.evals.push(ev);
+                }
+            }
+            if self.checkpoint_every > 0 && (step + 1) % self.checkpoint_every == 0 {
+                if let Some(dir) = &self.checkpoint_dir {
+                    Checkpoint {
+                        step: step + 1,
+                        theta: step_exe.theta()?,
+                        artifact: cfg.step_artifact.clone(),
+                        seed: cfg.seed,
+                    }
+                    .save(&format!("{dir}/ckpt_{}", step + 1))?;
+                }
+            }
+        }
+        // final eval regardless of cadence
+        if let Some(ev) = self.eval(&step_exe.theta()?, cfg.steps)? {
+            report.evals.push(ev);
+        }
+        report.wall_secs = t0.elapsed().as_secs_f64();
+        report.steps = cfg.steps - start_step;
+        report.steps_per_sec = report.steps as f64 / report.wall_secs.max(1e-9);
+        let (eps, _) = accountant.epsilon(cfg.target_delta);
+        report.final_epsilon = eps;
+        Ok(report)
+    }
+}

@@ -1,0 +1,35 @@
+//! # grad-cnns-rs
+//!
+//! Rust + JAX + Pallas reproduction of *“Efficient Per-Example Gradient
+//! Computations in Convolutional Neural Networks”* (Rochette, Manoel,
+//! Tramel, 2019) — per-example gradients for CNNs in the service of
+//! differentially-private SGD.
+//!
+//! Architecture (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the coordinator: DP-SGD training
+//!   orchestration ([`coordinator`]), the RDP privacy accountant
+//!   ([`privacy`]), the benchmark harness ([`bench`]) that regenerates
+//!   the paper's figures/tables, and every substrate those need.
+//! * **L2/L1 (python, build-time only)** — the CNN models, the three
+//!   per-example gradient strategies (`naive` / `multi` / `crb`), and
+//!   the Pallas kernels; lowered once by `make artifacts` to HLO text
+//!   which [`runtime`] loads and executes via the PJRT CPU client.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `repro` binary is self-contained.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod jsonx;
+pub mod metrics;
+pub mod models;
+pub mod privacy;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;

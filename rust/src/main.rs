@@ -1,0 +1,496 @@
+//! `repro` — the leader binary for the grad-cnns-rs reproduction.
+//!
+//! Subcommands (see `repro help`):
+//!   train        DP-SGD training with the fused step artifact (E2E)
+//!   serve        run the per-example-gradient service demo
+//!   bench-fig1 / bench-fig2 / bench-fig3 / bench-table1 / bench-ablation
+//!                regenerate the paper's figures/tables
+//!   accountant   RDP privacy-budget calculator
+//!   inspect      dump manifest entries
+//!   selftest     PJRT artifacts vs pure-rust oracle agreement
+//!
+//! After `make artifacts` this binary is self-contained — python never
+//! runs on any of these paths.
+
+use anyhow::{bail, Context, Result};
+use grad_cnns::bench::Protocol;
+use grad_cnns::cli::{subcommand, Command};
+use grad_cnns::config::{Config, ExperimentConfig};
+use grad_cnns::coordinator::{Checkpoint, GradRequest, ServiceConfig, ServiceHandle, Trainer};
+use grad_cnns::data::GaussianImages;
+use grad_cnns::privacy::DpSgdAccountant;
+use grad_cnns::runtime::{HostValue, Registry};
+use grad_cnns::tensor::Tensor;
+use grad_cnns::{experiments, models, rng};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some((name, rest)) = subcommand(argv) else {
+        print_usage();
+        return Ok(());
+    };
+    match name {
+        "train" => cmd_train(rest),
+        "serve" => cmd_serve(rest),
+        "bench-fig1" => cmd_bench_fig(rest, "fig1"),
+        "bench-fig3" => cmd_bench_fig(rest, "fig3"),
+        "bench-fig2" => cmd_bench_fig2(rest),
+        "bench-table1" => cmd_bench_table1(rest),
+        "bench-ablation" => cmd_bench_ablation(rest),
+        "accountant" => cmd_accountant(rest),
+        "inspect" => cmd_inspect(rest),
+        "selftest" => cmd_selftest(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `repro help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repro — per-example gradients for CNNs (Rochette et al. 2019), rust+XLA reproduction
+
+usage: repro <subcommand> [options]
+
+  train           DP-SGD training loop (the paper's §1 use case)
+  serve           per-example-gradient service demo (dynamic batching)
+  bench-fig1      channel-rate sweep, kernel 3       (paper Fig. 1)
+  bench-fig2      batch-size sweep                   (paper Fig. 2)
+  bench-fig3      channel-rate sweep, kernel 5       (paper Fig. 3)
+  bench-table1    AlexNet / VGG16                    (paper Table 1)
+  bench-ablation  crb grouped-conv vs crb Pallas kernel (ours)
+  accountant      RDP privacy-budget calculator
+  inspect         dump artifact manifest entries
+  selftest        PJRT artifacts vs pure-rust oracle agreement
+
+run `repro <subcommand> --help` for options"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// train
+// ---------------------------------------------------------------------------
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "DP-SGD training with a step artifact")
+        .opt("config", "TOML config file (see configs/)")
+        .opt_default("artifacts", "artifacts", "artifacts dir")
+        .opt("step-artifact", "step artifact name (overrides config)")
+        .opt("init-artifact", "init artifact name (overrides config)")
+        .opt("eval-artifact", "eval artifact name (overrides config)")
+        .opt("steps", "number of steps (overrides config)")
+        .opt("lr", "learning rate (overrides config)")
+        .opt("clip", "clip norm C (overrides config)")
+        .opt("sigma", "noise multiplier (overrides config)")
+        .opt("seed", "seed (overrides config)")
+        .opt("resume", "checkpoint base path to resume from")
+        .opt("checkpoint-dir", "write checkpoints here")
+        .opt_default("checkpoint-every", "0", "checkpoint cadence (steps)")
+        .opt("report", "write the markdown train report here")
+        .flag("quiet", "suppress per-step logging");
+    let args = cmd.parse(rest)?;
+
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::parse(DEFAULT_TRAIN_CONFIG)?,
+    };
+    for (cli_key, cfg_key) in [
+        ("step-artifact", "train.step_artifact"),
+        ("init-artifact", "train.init_artifact"),
+        ("eval-artifact", "train.eval_artifact"),
+        ("steps", "train.steps"),
+        ("lr", "train.lr"),
+        ("seed", "train.seed"),
+        ("clip", "dp.clip_norm"),
+        ("sigma", "dp.noise_multiplier"),
+        ("artifacts", "train.artifacts_dir"),
+    ] {
+        if let Some(v) = args.get(cli_key) {
+            cfg.set(cfg_key, v)?;
+        }
+    }
+    let exp = ExperimentConfig::from_config(&cfg)?;
+
+    let registry = Registry::open(&exp.artifacts_dir)?;
+    let mut trainer = Trainer::new(exp.clone(), registry)?;
+    trainer.quiet = args.has_flag("quiet");
+    trainer.checkpoint_dir = args.get("checkpoint-dir").map(str::to_string);
+    trainer.checkpoint_every = args.usize_or("checkpoint-every", 0)?;
+
+    let resume = match args.get("resume") {
+        Some(base) => Some(Checkpoint::load(base)?),
+        None => None,
+    };
+    let report = trainer.run(resume)?;
+    println!(
+        "\ntrained {} steps in {:.1}s ({:.2} steps/s); final ε = {:.3} @ δ = {:.0e}",
+        report.steps,
+        report.wall_secs,
+        report.steps_per_sec,
+        report.final_epsilon,
+        report.final_delta
+    );
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, report.to_markdown())?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+const DEFAULT_TRAIN_CONFIG: &str = r#"
+[train]
+step_artifact = "e2e_toy_crb_pallas_step_b16"
+init_artifact = "e2e_toy_init"
+eval_artifact = "e2e_toy_eval_b16"
+steps = 200
+batch_size = 16
+lr = 0.03
+[dp]
+clip_norm = 1.0
+noise_multiplier = 1.1
+target_delta = 1e-5
+[data]
+size = 2048
+"#;
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "per-example gradient service demo")
+        .opt_default("artifacts", "artifacts", "artifacts dir")
+        .opt_default("artifact", "core_toy_crb_pallas_grads_b4", "grads artifact")
+        .opt_default("workers", "2", "worker threads")
+        .opt_default("requests", "64", "number of requests to replay")
+        .opt_default("max-wait-ms", "20", "batch deadline (ms)")
+        .opt_default("seed", "7", "rng seed");
+    let args = cmd.parse(rest)?;
+    let dir = args.str_or("artifacts", "artifacts");
+    let artifact = args.str_or("artifact", "core_toy_crb_pallas_grads_b4");
+    let n_requests = args.usize_or("requests", 64)?;
+    let seed = args.u64_or("seed", 7)?;
+
+    // frozen params for the service: jax init via the matching init artifact
+    let registry = Registry::open(&dir)?;
+    let meta = registry.manifest().get(&artifact)?.clone();
+    let spec = registry.validate_model(&artifact)?;
+    let init_name = format!(
+        "{}_init",
+        artifact
+            .split("_naive_")
+            .next()
+            .unwrap()
+            .split("_crb")
+            .next()
+            .unwrap()
+            .split("_multi_")
+            .next()
+            .unwrap()
+    );
+    let theta = match registry.run(&init_name, &[HostValue::scalar_i32(seed as i32)]) {
+        Ok(out) => out.into_iter().next().unwrap().into_f32()?,
+        Err(_) => {
+            let p = meta.inputs[0].element_count();
+            let mut t = vec![0.0f32; p];
+            rng::Xoshiro256pp::seed_from_u64(seed).fill_gaussian(&mut t, 0.1);
+            t
+        }
+    };
+    drop(registry);
+
+    let svc = ServiceHandle::start(
+        ServiceConfig {
+            artifact: artifact.clone(),
+            artifacts_dir: dir,
+            workers: args.usize_or("workers", 2)?,
+            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 20)?),
+            queue_capacity: 256,
+        },
+        theta,
+    )?;
+
+    let (c, h, w) = spec.input_shape;
+    let data = GaussianImages::generate(n_requests, (c, h, w), spec.num_classes, seed);
+    let reqs: Vec<GradRequest> = (0..n_requests)
+        .map(|i| {
+            let (img, label) = data.example(i);
+            GradRequest {
+                image: img.to_vec(),
+                label,
+            }
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let responses = svc.submit_all(&reqs)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut lat: Vec<f64> = responses.iter().map(|r| r.latency.as_secs_f64()).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lat[lat.len() / 2];
+    let p99 = lat[(lat.len() * 99 / 100).min(lat.len() - 1)];
+    println!(
+        "served {} requests in {:.3}s ({:.1} req/s); latency p50 {:.1}ms p99 {:.1}ms",
+        n_requests,
+        wall,
+        n_requests as f64 / wall,
+        1e3 * p50,
+        1e3 * p99
+    );
+    let mean_norm: f32 =
+        responses.iter().map(|r| r.grad_norm).sum::<f32>() / responses.len() as f32;
+    println!("mean per-example ‖g‖ = {mean_norm:.4}");
+    println!("{}", svc.metrics.snapshot());
+    svc.shutdown();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// benches
+// ---------------------------------------------------------------------------
+
+fn bench_args(cmd_name: &'static str, about: &'static str) -> Command {
+    Command::new(cmd_name, about)
+        .opt_default("artifacts", "artifacts", "artifacts dir")
+        .opt_default("batches", "20", "batches per measurement (paper: 20)")
+        .opt_default("reps", "3", "repetitions (paper: 10)")
+        .opt_default("warmup", "1", "warmup measurements")
+        .opt_default("report-dir", "reports", "md/csv output dir")
+}
+
+fn bench_proto(args: &grad_cnns::cli::Args) -> Result<(String, usize, Protocol, String)> {
+    Ok((
+        args.str_or("artifacts", "artifacts"),
+        args.usize_or("batches", 20)?,
+        Protocol {
+            warmup: args.usize_or("warmup", 1)?,
+            reps: args.usize_or("reps", 3)?,
+        },
+        args.str_or("report-dir", "reports"),
+    ))
+}
+
+fn cmd_bench_fig(rest: &[String], fig: &str) -> Result<()> {
+    let cmd = bench_args("bench-fig", "channel-rate sweep (paper Figs. 1/3)");
+    let args = cmd.parse(rest)?;
+    let (dir, batches, proto, report_dir) = bench_proto(&args)?;
+    let registry = Registry::open(&dir)?;
+    let tables = experiments::run_rate_sweep(&registry, fig, batches, proto)?;
+    experiments::emit(&tables, &report_dir, fig)
+}
+
+fn cmd_bench_fig2(rest: &[String]) -> Result<()> {
+    let cmd = bench_args("bench-fig2", "batch-size sweep (paper Fig. 2)");
+    let args = cmd.parse(rest)?;
+    let (dir, batches, proto, report_dir) = bench_proto(&args)?;
+    let registry = Registry::open(&dir)?;
+    let table = experiments::run_fig2(&registry, batches, proto)?;
+    experiments::emit(&[table], &report_dir, "fig2")
+}
+
+fn cmd_bench_table1(rest: &[String]) -> Result<()> {
+    let cmd = bench_args("bench-table1", "AlexNet/VGG16 (paper Table 1)");
+    let args = cmd.parse(rest)?;
+    let (dir, batches, proto, report_dir) = bench_proto(&args)?;
+    let registry = Registry::open(&dir)?;
+    let table = experiments::run_table1(&registry, batches, proto)?;
+    experiments::emit(&[table], &report_dir, "table1")
+}
+
+fn cmd_bench_ablation(rest: &[String]) -> Result<()> {
+    let cmd = bench_args("bench-ablation", "crb XLA vs crb Pallas kernel");
+    let args = cmd.parse(rest)?;
+    let (dir, batches, proto, report_dir) = bench_proto(&args)?;
+    let registry = Registry::open(&dir)?;
+    let table = experiments::run_ablation(&registry, batches, proto)?;
+    experiments::emit(&[table], &report_dir, "ablation")
+}
+
+// ---------------------------------------------------------------------------
+// accountant
+// ---------------------------------------------------------------------------
+
+fn cmd_accountant(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("accountant", "RDP privacy-budget calculator")
+        .opt_default("n", "2048", "dataset size")
+        .opt_default("batch", "16", "batch size")
+        .opt_default("sigma", "1.1", "noise multiplier")
+        .opt_default("delta", "1e-5", "target delta")
+        .opt("steps", "steps taken: report ε")
+        .opt("budget", "ε budget: report max steps");
+    let args = cmd.parse(rest)?;
+    let n = args.usize_or("n", 2048)? as f64;
+    let batch = args.usize_or("batch", 16)? as f64;
+    let sigma = args.f64_or("sigma", 1.1)?;
+    let delta = args.f64_or("delta", 1e-5)?;
+    let q = batch / n;
+    println!("subsampled gaussian: q = {q:.5}, σ = {sigma}, δ = {delta:.0e}");
+    if let Some(steps) = args.get("steps") {
+        let steps: u64 = steps.parse().context("--steps must be an integer")?;
+        let mut acc = DpSgdAccountant::new(q, sigma);
+        acc.step(steps);
+        let (eps, order) = acc.epsilon(delta);
+        println!("after {steps} steps: ε = {eps:.4} (RDP order {order})");
+    }
+    if let Some(budget) = args.get("budget") {
+        let budget: f64 = budget.parse().context("--budget must be a float")?;
+        let acc = DpSgdAccountant::new(q, sigma);
+        let steps = acc.steps_until(budget, delta);
+        println!("ε ≤ {budget}: at most {steps} steps");
+    }
+    if args.get("steps").is_none() && args.get("budget").is_none() {
+        let mut acc = DpSgdAccountant::new(q, sigma);
+        println!("\n| steps | ε |\n|---|---|");
+        let mut done = 0u64;
+        for target in [100u64, 200, 500, 1000, 2000, 5000, 10000] {
+            acc.step(target - done);
+            done = target;
+            let (eps, _) = acc.epsilon(delta);
+            println!("| {target} | {eps:.3} |");
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// inspect
+// ---------------------------------------------------------------------------
+
+fn cmd_inspect(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("inspect", "dump artifact manifest entries")
+        .opt_default("artifacts", "artifacts", "artifacts dir")
+        .opt("set", "only this artifact set")
+        .opt("name", "only this artifact")
+        .flag("validate", "cross-check model specs against the rust mirror");
+    let args = cmd.parse(rest)?;
+    let dir = args.str_or("artifacts", "artifacts");
+    let registry = Registry::open(&dir)?;
+    let manifest = registry.manifest();
+    println!("platform: {}", registry.platform());
+    println!("{} artifacts in {dir}/manifest.json\n", manifest.artifacts.len());
+    let mut shown = 0;
+    for meta in manifest.artifacts.values() {
+        if let Some(s) = args.get("set") {
+            if meta.set != s {
+                continue;
+            }
+        }
+        if let Some(n) = args.get("name") {
+            if meta.name != n {
+                continue;
+            }
+        }
+        shown += 1;
+        let strategy = meta.strategy.as_deref().unwrap_or("-");
+        let ins: Vec<String> = meta.inputs.iter().map(|s| format!("{:?}", s.shape)).collect();
+        println!(
+            "{:<42} {:<8} {:<10} P={:<9} in: {}",
+            meta.name,
+            meta.kind,
+            strategy,
+            meta.param_count.map_or("-".into(), |p| p.to_string()),
+            ins.join(" ")
+        );
+        if args.has_flag("validate") && !matches!(meta.model, grad_cnns::jsonx::Value::Null) {
+            match registry.validate_model(&meta.name) {
+                Ok(spec) => println!(
+                    "    ok: {} layers, {} params, {:.1} MFLOPs/example",
+                    spec.layers.len(),
+                    spec.param_count(),
+                    spec.flops_per_example() as f64 / 1e6
+                ),
+                Err(e) => println!("    VALIDATION FAILED: {e:#}"),
+            }
+        }
+    }
+    println!("\n{shown} shown");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// selftest
+// ---------------------------------------------------------------------------
+
+/// End-to-end numerics: run the core grads artifacts through PJRT and
+/// check every strategy against the pure-rust oracle.
+fn cmd_selftest(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("selftest", "artifacts vs rust-oracle agreement")
+        .opt_default("artifacts", "artifacts", "artifacts dir")
+        .opt_default("tol", "1e-4", "max abs difference")
+        .opt_default("seed", "11", "rng seed");
+    let args = cmd.parse(rest)?;
+    let dir = args.str_or("artifacts", "artifacts");
+    let tol = args.f64_or("tol", 1e-4)? as f32;
+    let seed = args.u64_or("seed", 11)?;
+    let registry = Registry::open(&dir)?;
+
+    let names: Vec<String> = registry
+        .manifest()
+        .artifacts
+        .values()
+        .filter(|m| (m.set == "core" || m.set == "inorm") && m.kind == "grads")
+        .map(|m| m.name.clone())
+        .collect();
+    if names.is_empty() {
+        bail!("no core grads artifacts found; run `make artifacts`");
+    }
+
+    let mut failures = 0;
+    for name in &names {
+        let meta = registry.manifest().get(name)?.clone();
+        let spec = registry.validate_model(name)?;
+        let oracle = models::ModelOracle::new(spec);
+        let p = meta.inputs[0].element_count();
+        let b = meta.inputs[2].element_count();
+
+        let mut rng = rng::Xoshiro256pp::seed_from_u64(seed);
+        let mut theta = vec![0.0f32; p];
+        rng.fill_gaussian(&mut theta, 0.1);
+        let mut x = vec![0.0f32; meta.inputs[1].element_count()];
+        rng.fill_gaussian(&mut x, 1.0);
+        let y: Vec<i32> = (0..b).map(|_| rng.next_below(10) as i32).collect();
+
+        let out = registry.run(
+            name,
+            &[
+                HostValue::f32(&[p], theta.clone()),
+                HostValue::f32(&meta.inputs[1].shape, x.clone()),
+                HostValue::i32(&[b], y.clone()),
+            ],
+        )?;
+        let got = out[0].to_tensor()?;
+        let xt = Tensor::from_vec(&meta.inputs[1].shape, x);
+        let (want, want_losses) = oracle.perex_grads(&theta, &xt, &y);
+        let diff = got.max_abs_diff(&want);
+        let loss_diff = out[1]
+            .as_f32()?
+            .iter()
+            .zip(&want_losses)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let ok = diff <= tol && loss_diff <= tol;
+        println!(
+            "{:<42} grads Δ {diff:.2e}  losses Δ {loss_diff:.2e}  {}",
+            name,
+            if ok { "OK" } else { "FAIL" }
+        );
+        if !ok {
+            failures += 1;
+        }
+        registry.evict(name);
+    }
+    if failures > 0 {
+        bail!("{failures}/{} artifacts disagree with the oracle", names.len());
+    }
+    println!("\nall {} strategies agree with the rust oracle (tol {tol:e})", names.len());
+    Ok(())
+}

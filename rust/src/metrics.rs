@@ -1,0 +1,277 @@
+//! Metrics substrate: counters, gauges, histograms, latency timers.
+//!
+//! The coordinator publishes its operational state here (steps run,
+//! batch latency percentiles, queue depth, ε budget consumed) and the
+//! CLI's `inspect`/`train` commands render a snapshot. Thread-safe via
+//! atomics + a mutex-guarded registry; cheap enough for the hot loop.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone counter.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (f64 stored as bits).
+#[derive(Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed log-spaced latency histogram: 1µs .. ~100s, 2x buckets.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 28; // 1us * 2^27 ≈ 134s
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe_secs(&self, secs: f64) {
+        let us = (secs * 1e6).max(0.0) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(HIST_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64 / 1e6;
+            }
+        }
+        (1u64 << HIST_BUCKETS) as f64 / 1e6
+    }
+}
+
+/// Named-metric registry shared across threads.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<RegistryInner>>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.inner
+            .lock()
+            .unwrap()
+            .gauges
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Human-readable snapshot (sorted, stable).
+    pub fn snapshot(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, c) in &inner.counters {
+            out.push_str(&format!("{k} = {}\n", c.get()));
+        }
+        for (k, g) in &inner.gauges {
+            out.push_str(&format!("{k} = {:.6}\n", g.get()));
+        }
+        for (k, h) in &inner.histograms {
+            out.push_str(&format!(
+                "{k}: n={} mean={:.4}s p50={:.4}s p99={:.4}s\n",
+                h.count(),
+                h.mean_secs(),
+                h.quantile_secs(0.5),
+                h.quantile_secs(0.99),
+            ));
+        }
+        out
+    }
+}
+
+/// RAII timer recording into a histogram on drop.
+pub struct Timer {
+    hist: Arc<Histogram>,
+    start: std::time::Instant,
+}
+
+impl Timer {
+    pub fn start(hist: Arc<Histogram>) -> Timer {
+        Timer {
+            hist,
+            start: std::time::Instant::now(),
+        }
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        self.hist.observe_secs(self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::default();
+        let c = r.counter("steps");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name -> same counter
+        assert_eq!(r.counter("steps").get(), 5);
+        let g = r.gauge("eps");
+        g.set(1.25);
+        assert_eq!(r.gauge("eps").get(), 1.25);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::default();
+        for i in 1..=1000 {
+            h.observe_secs(i as f64 * 1e-5); // 10us .. 10ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_secs(0.5);
+        let p99 = h.quantile_secs(0.99);
+        assert!(p50 <= p99, "p50 {p50} p99 {p99}");
+        assert!(h.mean_secs() > 0.0);
+        // p50 should be near 5ms, within a 2x bucket
+        assert!(p50 >= 0.002 && p50 <= 0.02, "p50 {p50}");
+    }
+
+    #[test]
+    fn histogram_extremes() {
+        let h = Histogram::default();
+        h.observe_secs(0.0);
+        h.observe_secs(1e9); // clamps into last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_secs(1.0) > 0.0);
+    }
+
+    #[test]
+    fn timer_records() {
+        let r = Registry::default();
+        let h = r.histogram("lat");
+        {
+            let _t = Timer::start(h.clone());
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(h.count(), 1);
+        assert!(h.mean_secs() >= 0.002);
+    }
+
+    #[test]
+    fn snapshot_contains_all() {
+        let r = Registry::default();
+        r.counter("a").inc();
+        r.gauge("b").set(2.0);
+        r.histogram("c").observe_secs(0.001);
+        let s = r.snapshot();
+        assert!(s.contains("a = 1"));
+        assert!(s.contains("b = 2.0"));
+        assert!(s.contains("c: n=1"));
+    }
+
+    #[test]
+    fn registry_is_shareable_across_threads() {
+        let r = Registry::default();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let r2 = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    r2.counter("n").inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("n").get(), 4000);
+    }
+}

@@ -1,0 +1,765 @@
+//! Model architecture specs — the rust mirror of `python/compile/models.py`.
+//!
+//! The manifest stores each artifact's model config dict; this module
+//! rebuilds the exact layer list from it, so the rust side can
+//!   * validate parameter counts / shapes against the manifest,
+//!   * run the pure-rust oracle forward/backward ([`ModelOracle`]) that
+//!     integration tests compare PJRT outputs against,
+//!   * estimate FLOPs for the bench reports.
+//!
+//! Any drift between the two builders is caught by the
+//! `param_count`-vs-manifest check in `runtime::Registry::validate`.
+
+use crate::jsonx::Value;
+use crate::tensor::{self, ConvArgs, Tensor};
+use anyhow::{bail, Context, Result};
+
+/// One layer of a sequential CNN (PyTorch semantics throughout).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerSpec {
+    Conv2d {
+        in_ch: usize,
+        out_ch: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+        dilation: (usize, usize),
+        groups: usize,
+    },
+    Linear {
+        in_dim: usize,
+        out_dim: usize,
+    },
+    /// Per-example, per-channel normalization with affine params — the
+    /// paper's §4.2 batch-norm alternative (batch norm mixes examples
+    /// and is excluded).
+    InstanceNorm {
+        channels: usize,
+        eps: f32,
+    },
+    Relu,
+    MaxPool2d {
+        window: (usize, usize),
+        stride: (usize, usize),
+    },
+    Flatten,
+}
+
+impl LayerSpec {
+    pub fn is_parametric(&self) -> bool {
+        matches!(
+            self,
+            LayerSpec::Conv2d { .. } | LayerSpec::Linear { .. } | LayerSpec::InstanceNorm { .. }
+        )
+    }
+
+    /// Number of parameters (weights + bias) in this layer.
+    pub fn param_count(&self) -> usize {
+        match self {
+            LayerSpec::Conv2d {
+                in_ch,
+                out_ch,
+                kernel,
+                groups,
+                ..
+            } => out_ch * (in_ch / groups) * kernel.0 * kernel.1 + out_ch,
+            LayerSpec::Linear { in_dim, out_dim } => out_dim * in_dim + out_dim,
+            LayerSpec::InstanceNorm { channels, .. } => 2 * channels,
+            _ => 0,
+        }
+    }
+}
+
+/// A full architecture plus its provenance config.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub arch: String,
+    pub layers: Vec<LayerSpec>,
+    pub input_shape: (usize, usize, usize),
+    pub num_classes: usize,
+}
+
+/// PyTorch conv output size; 0 signals a collapsed (invalid) dimension
+/// instead of wrapping, so builders can `bail!` cleanly.
+fn conv_out(h: usize, w: usize, k: (usize, usize), s: (usize, usize), p: (usize, usize), d: (usize, usize)) -> (usize, usize) {
+    let dim = |x: usize, k: usize, s: usize, p: usize, d: usize| {
+        (x + 2 * p)
+            .checked_sub(d * (k - 1) + 1)
+            .map_or(0, |v| v / s + 1)
+    };
+    (dim(h, k.0, s.0, p.0, d.0), dim(w, k.1, s.1, p.1, d.1))
+}
+
+fn pool_out(h: usize, w: usize, win: (usize, usize), s: (usize, usize)) -> (usize, usize) {
+    let dim = |x: usize, win: usize, s: usize| x.checked_sub(win).map_or(0, |v| v / s + 1);
+    (dim(h, win.0, s.0), dim(w, win.1, s.1))
+}
+
+impl ModelSpec {
+    /// Total parameter count; must equal the manifest's `param_count`.
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Forward-pass multiply-accumulate estimate for one example.
+    pub fn flops_per_example(&self) -> u64 {
+        let (mut c, mut h, mut w) = self.input_shape;
+        let mut flat = c * h * w;
+        let mut total: u64 = 0;
+        for l in &self.layers {
+            match l {
+                LayerSpec::Conv2d {
+                    in_ch,
+                    out_ch,
+                    kernel,
+                    stride,
+                    padding,
+                    dilation,
+                    groups,
+                } => {
+                    let (ho, wo) = conv_out(h, w, *kernel, *stride, *padding, *dilation);
+                    total += (2 * ho * wo * out_ch * (in_ch / groups) * kernel.0 * kernel.1) as u64;
+                    c = *out_ch;
+                    h = ho;
+                    w = wo;
+                    flat = c * h * w;
+                }
+                LayerSpec::MaxPool2d { window, stride } => {
+                    let (ho, wo) = pool_out(h, w, *window, *stride);
+                    h = ho;
+                    w = wo;
+                    flat = c * h * w;
+                }
+                LayerSpec::Flatten => flat = c * h * w,
+                LayerSpec::Linear { in_dim, out_dim } => {
+                    total += (2 * in_dim * out_dim) as u64;
+                    flat = *out_dim;
+                }
+                LayerSpec::InstanceNorm { .. } => {
+                    total += (6 * c * h * w) as u64;
+                }
+                LayerSpec::Relu => {}
+            }
+        }
+        let _ = flat;
+        total
+    }
+
+    /// Build from a manifest model-config dict.
+    pub fn from_manifest(cfg: &Value) -> Result<ModelSpec> {
+        let arch = cfg
+            .get("arch")
+            .and_then(|v| v.as_str())
+            .context("model config missing `arch`")?;
+        let ishape = cfg
+            .get("input_shape")
+            .and_then(|v| v.as_usize_vec())
+            .context("model config missing `input_shape`")?;
+        if ishape.len() != 3 {
+            bail!("input_shape must be (C, H, W), got {ishape:?}");
+        }
+        let input_shape = (ishape[0], ishape[1], ishape[2]);
+        let num_classes = cfg
+            .get("num_classes")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(10);
+        let layers = match arch {
+            "toy_cnn" => build_toy_cnn(cfg, input_shape, num_classes)?,
+            "alexnet" => build_alexnet(cfg, input_shape, num_classes)?,
+            "vgg16" => build_vgg16(cfg, input_shape, num_classes)?,
+            other => bail!("unknown arch {other:?}"),
+        };
+        Ok(ModelSpec {
+            arch: arch.to_string(),
+            layers,
+            input_shape,
+            num_classes,
+        })
+    }
+}
+
+fn build_toy_cnn(
+    cfg: &Value,
+    input_shape: (usize, usize, usize),
+    num_classes: usize,
+) -> Result<Vec<LayerSpec>> {
+    let n_layers = cfg.get("n_layers").and_then(|v| v.as_usize()).unwrap_or(3);
+    let first = cfg
+        .get("first_channels")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(8);
+    let rate = cfg
+        .get("channel_rate")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(1.0);
+    let k = cfg.get("kernel_size").and_then(|v| v.as_usize()).unwrap_or(3);
+    let pool_every = cfg.get("pool_every").and_then(|v| v.as_usize()).unwrap_or(2);
+    let norm = cfg.get("norm").and_then(|v| v.as_str()).unwrap_or("none");
+    if !matches!(norm, "none" | "instance") {
+        bail!("unknown norm {norm:?}");
+    }
+
+    let (mut c, mut h, mut w) = input_shape;
+    let mut ch = first;
+    let mut layers = Vec::new();
+    for i in 0..n_layers {
+        layers.push(LayerSpec::Conv2d {
+            in_ch: c,
+            out_ch: ch,
+            kernel: (k, k),
+            stride: (1, 1),
+            padding: (0, 0),
+            dilation: (1, 1),
+            groups: 1,
+        });
+        if norm == "instance" {
+            layers.push(LayerSpec::InstanceNorm {
+                channels: ch,
+                eps: 1e-5,
+            });
+        }
+        layers.push(LayerSpec::Relu);
+        c = ch;
+        let (ho, wo) = conv_out(h, w, (k, k), (1, 1), (0, 0), (1, 1));
+        h = ho;
+        w = wo;
+        if (i + 1) % pool_every == 0 && h.min(w) >= 2 {
+            layers.push(LayerSpec::MaxPool2d {
+                window: (2, 2),
+                stride: (2, 2),
+            });
+            let (ho, wo) = pool_out(h, w, (2, 2), (2, 2));
+            h = ho;
+            w = wo;
+        }
+        // python: max(1, int(round(ch * rate))) — round-half-to-even is
+        // what python's round() does; mirror it exactly.
+        ch = round_half_even(ch as f64 * rate).max(1.0) as usize;
+    }
+    if h == 0 || w == 0 {
+        bail!("toy_cnn spatial dims collapsed; input too small");
+    }
+    layers.push(LayerSpec::Flatten);
+    layers.push(LayerSpec::Linear {
+        in_dim: c * h * w,
+        out_dim: num_classes,
+    });
+    Ok(layers)
+}
+
+/// Python 3 `round()` — banker's rounding.
+fn round_half_even(x: f64) -> f64 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 && r % 2.0 != 0.0 {
+        r - (r - x).signum()
+    } else {
+        r
+    }
+}
+
+fn width(ch: usize, mult: f64) -> usize {
+    (round_half_even(ch as f64 * mult) as usize).max(8)
+}
+
+fn build_alexnet(
+    cfg: &Value,
+    input_shape: (usize, usize, usize),
+    num_classes: usize,
+) -> Result<Vec<LayerSpec>> {
+    let mult = cfg.get("width_mult").and_then(|v| v.as_f64()).unwrap_or(0.25);
+    let (mut c, mut h, mut w) = input_shape;
+    let mut layers = Vec::new();
+    let conv = |layers: &mut Vec<LayerSpec>, c: &mut usize, h: &mut usize, w: &mut usize, out_ch: usize, k: usize, s: usize, p: usize| {
+        layers.push(LayerSpec::Conv2d {
+            in_ch: *c,
+            out_ch,
+            kernel: (k, k),
+            stride: (s, s),
+            padding: (p, p),
+            dilation: (1, 1),
+            groups: 1,
+        });
+        layers.push(LayerSpec::Relu);
+        *c = out_ch;
+        let (ho, wo) = conv_out(*h, *w, (k, k), (s, s), (p, p), (1, 1));
+        *h = ho;
+        *w = wo;
+    };
+    let pool = |layers: &mut Vec<LayerSpec>, h: &mut usize, w: &mut usize| {
+        layers.push(LayerSpec::MaxPool2d {
+            window: (3, 3),
+            stride: (2, 2),
+        });
+        let (ho, wo) = pool_out(*h, *w, (3, 3), (2, 2));
+        *h = ho;
+        *w = wo;
+    };
+    conv(&mut layers, &mut c, &mut h, &mut w, width(64, mult), 11, 4, 2);
+    pool(&mut layers, &mut h, &mut w);
+    conv(&mut layers, &mut c, &mut h, &mut w, width(192, mult), 5, 1, 2);
+    pool(&mut layers, &mut h, &mut w);
+    conv(&mut layers, &mut c, &mut h, &mut w, width(384, mult), 3, 1, 1);
+    conv(&mut layers, &mut c, &mut h, &mut w, width(256, mult), 3, 1, 1);
+    conv(&mut layers, &mut c, &mut h, &mut w, width(256, mult), 3, 1, 1);
+    pool(&mut layers, &mut h, &mut w);
+    if h == 0 || w == 0 {
+        bail!("alexnet spatial dims collapsed; input too small");
+    }
+    let hidden = width(4096, mult);
+    layers.push(LayerSpec::Flatten);
+    layers.push(LayerSpec::Linear {
+        in_dim: c * h * w,
+        out_dim: hidden,
+    });
+    layers.push(LayerSpec::Relu);
+    layers.push(LayerSpec::Linear {
+        in_dim: hidden,
+        out_dim: hidden,
+    });
+    layers.push(LayerSpec::Relu);
+    layers.push(LayerSpec::Linear {
+        in_dim: hidden,
+        out_dim: num_classes,
+    });
+    Ok(layers)
+}
+
+const VGG16_PLAN: &[i32] = &[64, 64, -1, 128, 128, -1, 256, 256, 256, -1, 512, 512, 512, -1, 512, 512, 512, -1];
+
+fn build_vgg16(
+    cfg: &Value,
+    input_shape: (usize, usize, usize),
+    num_classes: usize,
+) -> Result<Vec<LayerSpec>> {
+    let mult = cfg.get("width_mult").and_then(|v| v.as_f64()).unwrap_or(0.25);
+    let (mut c, mut h, mut w) = input_shape;
+    let mut layers = Vec::new();
+    for &item in VGG16_PLAN {
+        if item < 0 {
+            layers.push(LayerSpec::MaxPool2d {
+                window: (2, 2),
+                stride: (2, 2),
+            });
+            let (ho, wo) = pool_out(h, w, (2, 2), (2, 2));
+            h = ho;
+            w = wo;
+        } else {
+            let out_ch = width(item as usize, mult);
+            layers.push(LayerSpec::Conv2d {
+                in_ch: c,
+                out_ch,
+                kernel: (3, 3),
+                stride: (1, 1),
+                padding: (1, 1),
+                dilation: (1, 1),
+                groups: 1,
+            });
+            layers.push(LayerSpec::Relu);
+            c = out_ch;
+        }
+    }
+    if h == 0 || w == 0 {
+        bail!("vgg16 spatial dims collapsed; input too small");
+    }
+    let hidden = width(512, mult);
+    layers.push(LayerSpec::Flatten);
+    layers.push(LayerSpec::Linear {
+        in_dim: c * h * w,
+        out_dim: hidden,
+    });
+    layers.push(LayerSpec::Relu);
+    layers.push(LayerSpec::Linear {
+        in_dim: hidden,
+        out_dim: hidden,
+    });
+    layers.push(LayerSpec::Relu);
+    layers.push(LayerSpec::Linear {
+        in_dim: hidden,
+        out_dim: num_classes,
+    });
+    Ok(layers)
+}
+
+// ---------------------------------------------------------------------------
+// The pure-rust oracle: forward + per-example backward
+// ---------------------------------------------------------------------------
+
+/// Runs a [`ModelSpec`] with parameters in the flat packing order shared
+/// with the jax side, entirely in rust — the independent check on the
+/// PJRT artifacts, and a native implementation of the paper's math.
+pub struct ModelOracle {
+    pub spec: ModelSpec,
+}
+
+enum Saved {
+    Conv { input: Tensor },
+    Norm { xhat: Tensor, inv_std: Vec<f32> },
+    Linear { input: Tensor },
+    Relu { pre: Tensor },
+    Pool { arg: Vec<usize>, in_shape: Vec<usize> },
+    Flatten { in_shape: Vec<usize> },
+}
+
+impl ModelOracle {
+    pub fn new(spec: ModelSpec) -> Self {
+        Self { spec }
+    }
+
+    fn conv_args(l: &LayerSpec) -> ConvArgs {
+        match l {
+            LayerSpec::Conv2d {
+                stride,
+                padding,
+                dilation,
+                groups,
+                ..
+            } => ConvArgs {
+                stride: *stride,
+                padding: *padding,
+                dilation: *dilation,
+                groups: *groups,
+            },
+            _ => unreachable!(),
+        }
+    }
+
+    /// Slice (weight, bias) views for layer `li` out of flat theta.
+    fn layer_params<'t>(&self, theta: &'t [f32], li: usize) -> (&'t [f32], &'t [f32]) {
+        let mut off = 0;
+        for (i, l) in self.spec.layers.iter().enumerate() {
+            let n = l.param_count();
+            if i == li {
+                let (wn, bn) = match l {
+                    LayerSpec::Conv2d {
+                        in_ch,
+                        out_ch,
+                        kernel,
+                        groups,
+                        ..
+                    } => (
+                        out_ch * (in_ch / groups) * kernel.0 * kernel.1,
+                        *out_ch,
+                    ),
+                    LayerSpec::Linear { in_dim, out_dim } => (out_dim * in_dim, *out_dim),
+                    LayerSpec::InstanceNorm { channels, .. } => (*channels, *channels),
+                    _ => (0, 0),
+                };
+                return (&theta[off..off + wn], &theta[off + wn..off + wn + bn]);
+            }
+            off += n;
+        }
+        panic!("layer {li} out of range");
+    }
+
+    /// Forward pass. x: (B, C, H, W) -> logits (B, num_classes).
+    pub fn forward(&self, theta: &[f32], x: &Tensor) -> Tensor {
+        self.forward_saved(theta, x).0
+    }
+
+    fn forward_saved(&self, theta: &[f32], x: &Tensor) -> (Tensor, Vec<Saved>) {
+        assert_eq!(
+            theta.len(),
+            self.spec.param_count(),
+            "theta length mismatch"
+        );
+        let mut cur = x.clone();
+        let mut saved = Vec::new();
+        for (li, l) in self.spec.layers.iter().enumerate() {
+            match l {
+                LayerSpec::Conv2d {
+                    in_ch,
+                    out_ch,
+                    kernel,
+                    groups,
+                    ..
+                } => {
+                    let (wv, bv) = self.layer_params(theta, li);
+                    let w = Tensor::from_vec(
+                        &[*out_ch, in_ch / groups, kernel.0, kernel.1],
+                        wv.to_vec(),
+                    );
+                    let y = tensor::conv2d(&cur, &w, Some(bv), Self::conv_args(l));
+                    saved.push(Saved::Conv { input: cur });
+                    cur = y;
+                }
+                LayerSpec::Linear { in_dim, out_dim } => {
+                    let (wv, bv) = self.layer_params(theta, li);
+                    let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
+                    let y = tensor::linear(&cur, &w, bv);
+                    saved.push(Saved::Linear { input: cur });
+                    cur = y;
+                }
+                LayerSpec::InstanceNorm { eps, .. } => {
+                    let (gv, bv) = self.layer_params(theta, li);
+                    let (y, xhat, inv_std) = tensor::instance_norm(&cur, gv, bv, *eps);
+                    saved.push(Saved::Norm { xhat, inv_std });
+                    cur = y;
+                }
+                LayerSpec::Relu => {
+                    let y = tensor::relu(&cur);
+                    saved.push(Saved::Relu { pre: cur });
+                    cur = y;
+                }
+                LayerSpec::MaxPool2d { window, stride } => {
+                    let (y, arg) = tensor::maxpool2d(&cur, *window, *stride);
+                    saved.push(Saved::Pool {
+                        arg,
+                        in_shape: cur.shape.clone(),
+                    });
+                    cur = y;
+                }
+                LayerSpec::Flatten => {
+                    let in_shape = cur.shape.clone();
+                    let b = in_shape[0];
+                    let n: usize = in_shape[1..].iter().product();
+                    cur = cur.reshape(&[b, n]);
+                    saved.push(Saved::Flatten { in_shape });
+                }
+            }
+        }
+        (cur, saved)
+    }
+
+    /// Per-example gradients via the paper's chain-rule decomposition,
+    /// entirely in rust: one backward pass carrying the batched dL/dy,
+    /// Eq. (4) per conv layer, Eq. (2) per linear layer.
+    ///
+    /// Returns `(pergrads (B, P) row-major, losses (B,))` in the same
+    /// flat packing order as the artifacts.
+    pub fn perex_grads(&self, theta: &[f32], x: &Tensor, labels: &[i32]) -> (Tensor, Vec<f32>) {
+        let bsz = x.shape[0];
+        let p_total = self.spec.param_count();
+        let (logits, saved) = self.forward_saved(theta, x);
+        let (losses, mut dy) = tensor::softmax_xent(&logits, labels);
+
+        // walk backwards, filling per-layer grads into the flat matrix
+        let mut pergrads = Tensor::zeros(&[bsz, p_total]);
+        let mut offsets = Vec::with_capacity(self.spec.layers.len());
+        {
+            let mut off = 0;
+            for l in &self.spec.layers {
+                offsets.push(off);
+                off += l.param_count();
+            }
+        }
+        for (li, l) in self.spec.layers.iter().enumerate().rev() {
+            let s = &saved[li];
+            match (l, s) {
+                (
+                    LayerSpec::Conv2d {
+                        in_ch,
+                        out_ch,
+                        kernel,
+                        groups,
+                        ..
+                    },
+                    Saved::Conv { input, .. },
+                ) => {
+                    let args = Self::conv_args(l);
+                    // Eq. 4: per-example weight grads
+                    let dw = tensor::perex_conv2d_grad(input, &dy, kernel.0, kernel.1, args);
+                    let wn = out_ch * (in_ch / groups) * kernel.0 * kernel.1;
+                    let per = wn + out_ch; // weights + bias
+                    for b in 0..bsz {
+                        let dst = &mut pergrads.data[b * p_total + offsets[li]..];
+                        dst[..wn].copy_from_slice(&dw.data[b * wn..(b + 1) * wn]);
+                        // per-example bias grad: sum dy over spatial
+                        let (hp, wp) = (dy.shape[2], dy.shape[3]);
+                        for d in 0..*out_ch {
+                            let mut acc = 0.0f64;
+                            for t in 0..hp * wp {
+                                acc += dy.data[((b * out_ch + d) * hp * wp) + t] as f64;
+                            }
+                            dst[wn + d] = acc as f32;
+                        }
+                        let _ = per;
+                    }
+                    if li > 0 {
+                        let (wv, _) = self.layer_params(theta, li);
+                        let w = Tensor::from_vec(
+                            &[*out_ch, in_ch / groups, kernel.0, kernel.1],
+                            wv.to_vec(),
+                        );
+                        dy = tensor::conv2d_grad_input(
+                            &dy,
+                            &w,
+                            input.shape[2],
+                            input.shape[3],
+                            args,
+                        );
+                    }
+                }
+                (LayerSpec::Linear { in_dim, out_dim }, Saved::Linear { input }) => {
+                    let dw = tensor::perex_linear_grad(input, &dy);
+                    let wn = out_dim * in_dim;
+                    for b in 0..bsz {
+                        let dst = &mut pergrads.data[b * p_total + offsets[li]..];
+                        dst[..wn].copy_from_slice(&dw.data[b * wn..(b + 1) * wn]);
+                        dst[wn..wn + out_dim]
+                            .copy_from_slice(&dy.data[b * out_dim..(b + 1) * out_dim]);
+                    }
+                    if li > 0 {
+                        let (wv, _) = self.layer_params(theta, li);
+                        let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
+                        dy = tensor::linear_grad_input(&dy, &w);
+                    }
+                }
+                (
+                    LayerSpec::InstanceNorm { channels, .. },
+                    Saved::Norm { xhat, inv_std },
+                ) => {
+                    let (gv, _) = self.layer_params(theta, li);
+                    let (dgamma, dbeta, dx) =
+                        tensor::instance_norm_grad(&dy, xhat, inv_std, gv);
+                    let cc = *channels;
+                    for b in 0..bsz {
+                        let dst = &mut pergrads.data[b * p_total + offsets[li]..];
+                        dst[..cc].copy_from_slice(&dgamma.data[b * cc..(b + 1) * cc]);
+                        dst[cc..2 * cc].copy_from_slice(&dbeta.data[b * cc..(b + 1) * cc]);
+                    }
+                    dy = dx;
+                }
+                (LayerSpec::Relu, Saved::Relu { pre }) => {
+                    dy = tensor::relu_grad(&dy, pre);
+                }
+                (LayerSpec::MaxPool2d { .. }, Saved::Pool { arg, in_shape }) => {
+                    dy = tensor::maxpool2d_grad(&dy, arg, in_shape);
+                }
+                (LayerSpec::Flatten, Saved::Flatten { in_shape }) => {
+                    dy = dy.reshape(in_shape);
+                }
+                _ => unreachable!("spec/saved mismatch at layer {li}"),
+            }
+        }
+        (pergrads, losses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonx;
+    use crate::rng::Xoshiro256pp;
+
+    fn toy_cfg(n_layers: usize, rate: f64, k: usize) -> Value {
+        jsonx::parse(&format!(
+            r#"{{"arch":"toy_cnn","n_layers":{n_layers},"first_channels":6,
+                "channel_rate":{rate},"kernel_size":{k},
+                "input_shape":[3,16,16],"num_classes":10,"pool_every":2}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn toy_cnn_structure() {
+        let spec = ModelSpec::from_manifest(&toy_cfg(3, 1.5, 3)).unwrap();
+        let convs = spec
+            .layers
+            .iter()
+            .filter(|l| matches!(l, LayerSpec::Conv2d { .. }))
+            .count();
+        assert_eq!(convs, 3);
+        // channel progression 6 -> 9 -> 14 (round(9*1.5)=14? 13.5 banker's -> 14)
+        let chans: Vec<usize> = spec
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                LayerSpec::Conv2d { out_ch, .. } => Some(*out_ch),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(chans[0], 6);
+        assert_eq!(chans[1], 9);
+    }
+
+    #[test]
+    fn alexnet_and_vgg_build() {
+        let a = jsonx::parse(
+            r#"{"arch":"alexnet","width_mult":0.25,"input_shape":[3,64,64],"num_classes":10}"#,
+        )
+        .unwrap();
+        let spec = ModelSpec::from_manifest(&a).unwrap();
+        assert!(spec.param_count() > 100_000, "{}", spec.param_count());
+        let v = jsonx::parse(
+            r#"{"arch":"vgg16","width_mult":0.25,"input_shape":[3,32,32],"num_classes":10}"#,
+        )
+        .unwrap();
+        let spec = ModelSpec::from_manifest(&v).unwrap();
+        let convs = spec
+            .layers
+            .iter()
+            .filter(|l| matches!(l, LayerSpec::Conv2d { .. }))
+            .count();
+        assert_eq!(convs, 13, "VGG16 has 13 convs");
+    }
+
+    #[test]
+    fn alexnet_too_small_input_fails() {
+        let a = jsonx::parse(
+            r#"{"arch":"alexnet","width_mult":0.25,"input_shape":[3,32,32],"num_classes":10}"#,
+        )
+        .unwrap();
+        assert!(ModelSpec::from_manifest(&a).is_err());
+    }
+
+    #[test]
+    fn flops_monotone_in_rate() {
+        let a = ModelSpec::from_manifest(&toy_cfg(3, 1.0, 3)).unwrap();
+        let b = ModelSpec::from_manifest(&toy_cfg(3, 2.0, 3)).unwrap();
+        assert!(b.flops_per_example() > a.flops_per_example());
+    }
+
+    /// The oracle's per-example grads must match central finite
+    /// differences of the per-example loss — the ground-truth check
+    /// that the rust-side Eq. (2)/(4) transcription is right.
+    #[test]
+    fn oracle_grads_match_finite_difference() {
+        let spec = ModelSpec::from_manifest(&toy_cfg(2, 1.5, 3)).unwrap();
+        let oracle = ModelOracle::new(spec);
+        let p = oracle.spec.param_count();
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        let mut theta = vec![0.0f32; p];
+        rng.fill_gaussian(&mut theta, 0.1);
+        let bsz = 3;
+        let mut xdata = vec![0.0f32; bsz * 3 * 16 * 16];
+        rng.fill_gaussian(&mut xdata, 1.0);
+        let x = Tensor::from_vec(&[bsz, 3, 16, 16], xdata);
+        let labels = [1i32, 4, 7];
+        let (grads, losses) = oracle.perex_grads(&theta, &x, &labels);
+        assert!(losses.iter().all(|l| l.is_finite()));
+        // probe a few theta coordinates spread across layers
+        let eps = 1e-2f32;
+        let probes = [0usize, p / 3, p / 2, p - 1, p - 11];
+        for &i in &probes {
+            let orig = theta[i];
+            theta[i] = orig + eps;
+            let lp = {
+                let logits = oracle.forward(&theta, &x);
+                tensor::softmax_xent(&logits, &labels).0
+            };
+            theta[i] = orig - eps;
+            let lm = {
+                let logits = oracle.forward(&theta, &x);
+                tensor::softmax_xent(&logits, &labels).0
+            };
+            theta[i] = orig;
+            for b in 0..bsz {
+                let fd = (lp[b] - lm[b]) / (2.0 * eps);
+                let an = grads.data[b * p + i];
+                assert!(
+                    (fd - an).abs() < 3e-2,
+                    "theta[{i}] example {b}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn param_count_matches_layer_sum() {
+        for cfg in [toy_cfg(2, 1.0, 3), toy_cfg(4, 2.0, 3), toy_cfg(2, 2.0, 5)] {
+            let spec = ModelSpec::from_manifest(&cfg).unwrap();
+            let by_sum: usize = spec.layers.iter().map(|l| l.param_count()).sum();
+            assert_eq!(by_sum, spec.param_count());
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Typed view of `artifacts/manifest.json`.
+//!
+//! The manifest is the wire contract between the python compile path
+//! and the rust runtime: for every artifact it records the HLO file,
+//! the exact input/output signature (shape + dtype), the model config
+//! that produced it, and — for model artifacts — the flat parameter
+//! packing. The rust side validates everything it assumes against this
+//! file instead of trusting its own mirror of the python code.
+
+use crate::jsonx::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of an artifact input/output (the manifest only ever
+/// contains these two; anything else is a compile-path bug).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<TensorSig> {
+        let shape = v
+            .get("shape")
+            .and_then(|s| s.as_usize_vec())
+            .context("signature entry missing `shape`")?;
+        let dtype = DType::parse(
+            v.get("dtype")
+                .and_then(|d| d.as_str())
+                .context("signature entry missing `dtype`")?,
+        )?;
+        Ok(TensorSig { shape, dtype })
+    }
+}
+
+/// One named parameter slice inside the flat theta vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl PackEntry {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Everything the manifest records about one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Which artifact set produced it (`core`, `fig1`, ...).
+    pub set: String,
+    /// `nodp` | `grads` | `step` | `init` | `eval`.
+    pub kind: String,
+    /// `naive` | `multi` | `crb` | `crb_pallas` | `nodp` (None for
+    /// init/eval artifacts).
+    pub strategy: Option<String>,
+    /// The python-side model config dict, kept as raw json so
+    /// `models::ModelSpec::from_manifest` can rebuild the layer list.
+    pub model: Value,
+    pub batch: Option<usize>,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    /// Total flat parameter count (model artifacts only).
+    pub param_count: Option<usize>,
+    /// Flat packing of named parameters into theta.
+    pub packing: Vec<PackEntry>,
+}
+
+impl ArtifactMeta {
+    fn from_json(name: &str, v: &Value) -> Result<ArtifactMeta> {
+        let req_str = |key: &str| -> Result<String> {
+            v.get(key)
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .with_context(|| format!("artifact {name}: missing `{key}`"))
+        };
+        let sigs = |key: &str| -> Result<Vec<TensorSig>> {
+            v.get(key)
+                .and_then(|x| x.as_arr())
+                .with_context(|| format!("artifact {name}: missing `{key}`"))?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect()
+        };
+        let packing = match v.get("packing").and_then(|p| p.as_arr()) {
+            None => Vec::new(),
+            Some(entries) => entries
+                .iter()
+                .map(|e| -> Result<PackEntry> {
+                    Ok(PackEntry {
+                        name: e
+                            .get("name")
+                            .and_then(|x| x.as_str())
+                            .context("packing entry missing `name`")?
+                            .to_string(),
+                        offset: e
+                            .get("offset")
+                            .and_then(|x| x.as_usize())
+                            .context("packing entry missing `offset`")?,
+                        shape: e
+                            .get("shape")
+                            .and_then(|x| x.as_usize_vec())
+                            .context("packing entry missing `shape`")?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        };
+        Ok(ArtifactMeta {
+            name: name.to_string(),
+            file: req_str("file")?,
+            set: req_str("set")?,
+            kind: req_str("kind")?,
+            strategy: v.get("strategy").and_then(|s| s.as_str()).map(str::to_string),
+            model: v.get("model").cloned().unwrap_or(Value::Null),
+            batch: v.get("batch").and_then(|b| b.as_usize()),
+            inputs: sigs("inputs")?,
+            outputs: sigs("outputs")?,
+            param_count: v.get("param_count").and_then(|p| p.as_usize()),
+            packing,
+        })
+    }
+
+    /// Consistency of the packing table with `param_count`: entries
+    /// must tile [0, P) without gaps or overlaps.
+    pub fn validate_packing(&self) -> Result<()> {
+        let Some(p) = self.param_count else {
+            return Ok(());
+        };
+        if self.packing.is_empty() {
+            return Ok(());
+        }
+        let mut entries = self.packing.clone();
+        entries.sort_by_key(|e| e.offset);
+        let mut cursor = 0usize;
+        for e in &entries {
+            if e.offset != cursor {
+                bail!(
+                    "artifact {}: packing gap/overlap at `{}` (offset {} != cursor {cursor})",
+                    self.name,
+                    e.name,
+                    e.offset
+                );
+            }
+            cursor += e.len();
+        }
+        if cursor != p {
+            bail!(
+                "artifact {}: packing covers {cursor} params, manifest says {p}",
+                self.name
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The parsed manifest: artifact name → metadata.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated from I/O for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = jsonx::parse(text).context("parsing manifest.json")?;
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .context("manifest missing `artifacts` object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, v) in arts {
+            let meta = ArtifactMeta::from_json(name, v)?;
+            meta.validate_packing()?;
+            artifacts.insert(name.clone(), meta);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts.get(name).with_context(|| {
+            format!(
+                "artifact {name:?} not in manifest ({} known); run `make artifacts`",
+                self.artifacts.len()
+            )
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// All artifacts in a set, sorted by name (deterministic bench order).
+    pub fn set(&self, set_name: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts
+            .values()
+            .filter(|m| m.set == set_name)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "toy_grads_b4": {
+          "file": "toy_grads_b4.hlo.txt",
+          "set": "core",
+          "kind": "grads",
+          "strategy": "crb",
+          "model": {"arch": "toy_cnn", "n_layers": 2},
+          "batch": 4,
+          "inputs": [
+            {"shape": [10], "dtype": "float32"},
+            {"shape": [4, 3, 8, 8], "dtype": "float32"},
+            {"shape": [4], "dtype": "int32"}
+          ],
+          "outputs": [
+            {"shape": [4, 10], "dtype": "float32"},
+            {"shape": [4], "dtype": "float32"}
+          ],
+          "param_count": 10,
+          "packing": [
+            {"name": "conv0.weight", "offset": 0, "shape": [2, 4]},
+            {"name": "conv0.bias", "offset": 8, "shape": [2]}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let a = m.get("toy_grads_b4").unwrap();
+        assert_eq!(a.kind, "grads");
+        assert_eq!(a.strategy.as_deref(), Some("crb"));
+        assert_eq!(a.batch, Some(4));
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].shape, vec![4, 3, 8, 8]);
+        assert_eq!(a.inputs[2].dtype, DType::I32);
+        assert_eq!(a.outputs[0].element_count(), 40);
+        assert_eq!(a.param_count, Some(10));
+        assert_eq!(a.packing.len(), 2);
+        assert_eq!(m.hlo_path(a), PathBuf::from("/tmp/toy_grads_b4.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn packing_gap_rejected() {
+        let bad = SAMPLE.replace("\"offset\": 8", "\"offset\": 9");
+        let err = Manifest::parse(&bad, PathBuf::from("/tmp"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("gap/overlap"), "{err}");
+    }
+
+    #[test]
+    fn packing_total_checked() {
+        let bad = SAMPLE.replace("\"param_count\": 10", "\"param_count\": 11");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let bad = SAMPLE.replace("int32", "int64");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn set_filter_sorted() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.set("core").len(), 1);
+        assert!(m.set("fig1").is_empty());
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 ↔ L2 bridge: load and execute the AOT artifacts via PJRT.
+//!
+//! `make artifacts` leaves HLO-text programs plus `manifest.json` in
+//! `artifacts/`; this module is everything the rust side needs to run
+//! them with python completely out of the loop:
+//!
+//! * [`manifest`] — the typed view of `manifest.json`: per-artifact
+//!   input/output signatures, model config, parameter packing.
+//! * [`values`] — host-side tensors ([`HostValue`]) and their
+//!   marshalling to/from `xla::Literal`.
+//! * [`registry`] — the [`Registry`]: one PJRT CPU client, lazy
+//!   compilation of HLO text, an executable cache, signature
+//!   validation, and the two execution paths (literal for simplicity,
+//!   device-resident buffers for the hot loop).
+//!
+//! The interchange format is HLO *text*, not serialized protos —
+//! xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids; the
+//! text parser reassigns them (see `DESIGN.md` §6).
+
+pub mod manifest;
+pub mod registry;
+pub mod values;
+
+pub use manifest::{ArtifactMeta, Manifest, PackEntry, TensorSig};
+pub use registry::{DeviceStep, Registry};
+pub use values::HostValue;

@@ -1,0 +1,289 @@
+//! The artifact registry: one PJRT client, lazily-compiled executables.
+//!
+//! A [`Registry`] owns a `PjRtClient` (CPU) and compiles each HLO-text
+//! artifact on first use, caching the executable. Its `run` method is
+//! the general execution path with full signature validation against
+//! the manifest; [`DeviceStep`] is the specialized training hot loop
+//! that keeps theta as an `xla::Literal` between steps so the only
+//! per-step marshalling is the minibatch itself.
+//!
+//! PJRT handles are not `Send`; a registry lives on one thread. The
+//! coordinator gives each worker thread its own registry (see
+//! `coordinator::service`), which also means each worker has an
+//! independent compilation cache — compile once, execute many.
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::values::HostValue;
+use crate::models::ModelSpec;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Compilation + execution front-end for one PJRT client.
+pub struct Registry {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// (artifact, seconds) compile log — bench reports subtract this.
+    compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Registry {
+    /// Open `<dir>/manifest.json` and a CPU PJRT client.
+    pub fn open(dir: &str) -> Result<Registry> {
+        let manifest = Manifest::load(dir)?;
+        Self::with_manifest(manifest)
+    }
+
+    pub fn with_manifest(manifest: Manifest) -> Result<Registry> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Registry {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn compile_log(&self) -> Vec<(String, f64)> {
+        self.compile_log.borrow().clone()
+    }
+
+    /// Compile (or fetch from cache) one artifact.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(meta);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        self.compile_log
+            .borrow_mut()
+            .push((name.to_string(), t0.elapsed().as_secs_f64()));
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Drop a compiled executable (bench sweeps over many artifacts use
+    /// this to bound memory).
+    pub fn evict(&self, name: &str) {
+        self.cache.borrow_mut().remove(name);
+    }
+
+    /// Validate artifact inputs against the manifest signature.
+    pub fn check_inputs(&self, meta: &ArtifactMeta, inputs: &[HostValue]) -> Result<()> {
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact {}: got {} inputs, wants {}",
+                meta.name,
+                inputs.len(),
+                meta.inputs.len()
+            );
+        }
+        for (i, (v, sig)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            v.check_sig(sig, &format!("artifact {} input {i}", meta.name))?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with host inputs, returning host outputs.
+    ///
+    /// Full validation both ways; the convenience path used by tests,
+    /// benches and examples. The training loop uses [`DeviceStep`].
+    pub fn run(&self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        let meta = self.manifest.get(name)?.clone();
+        self.check_inputs(&meta, inputs)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let outs = self.execute_raw(name, &lits)?;
+        if outs.len() != meta.outputs.len() {
+            bail!(
+                "artifact {name}: produced {} outputs, manifest says {}",
+                outs.len(),
+                meta.outputs.len()
+            );
+        }
+        outs.iter()
+            .zip(&meta.outputs)
+            .map(|(lit, sig)| HostValue::from_literal(lit, sig))
+            .collect()
+    }
+
+    /// Execute with pre-built literals, returning the decomposed output
+    /// tuple. No validation — the callers above own that.
+    pub fn execute_raw(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact {name}"))?;
+        // all artifacts are lowered with return_tuple=True: one output
+        // buffer per replica, holding the result tuple.
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("copying result to host")?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+
+    /// Cross-check the manifest against the rust model mirror: the
+    /// rebuilt `ModelSpec` must agree on the parameter count, and the
+    /// input signature must match (batch, C, H, W).
+    pub fn validate_model(&self, name: &str) -> Result<ModelSpec> {
+        let meta = self.manifest.get(name)?;
+        let spec = ModelSpec::from_manifest(&meta.model)
+            .with_context(|| format!("artifact {name}: rebuilding model spec"))?;
+        if let Some(p) = meta.param_count {
+            if spec.param_count() != p {
+                bail!(
+                    "artifact {name}: rust mirror has {} params, manifest says {p} — \
+                     models.py and models.rs have drifted",
+                    spec.param_count()
+                );
+            }
+        }
+        if meta.kind != "init" {
+            let x_sig = meta
+                .inputs
+                .get(1)
+                .with_context(|| format!("artifact {name}: no x input"))?;
+            let (c, h, w) = spec.input_shape;
+            let want = match meta.batch {
+                Some(b) => vec![b, c, h, w],
+                None => vec![c, h, w],
+            };
+            if x_sig.shape != want {
+                bail!(
+                    "artifact {name}: x input {:?} != model spec {want:?}",
+                    x_sig.shape
+                );
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// The training hot loop: theta stays an `xla::Literal` across steps.
+///
+/// A DP-SGD step artifact maps
+/// `(theta, x, y, seed, clip, sigma, lr) -> (theta', mean_loss, norms)`.
+/// Between steps only `theta` flows; holding it as a literal means the
+/// per-step host work is exactly: upload x/y, download loss + norms.
+/// The hyper-parameter scalars are converted once at construction.
+pub struct DeviceStep {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    meta: ArtifactMeta,
+    theta: xla::Literal,
+    clip: xla::Literal,
+    sigma: xla::Literal,
+    lr: xla::Literal,
+    pub steps_run: usize,
+}
+
+/// Per-step scalar results of [`DeviceStep::step`].
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    pub mean_loss: f32,
+    /// Pre-clip per-example gradient norms (B,) — the quantity DP-SGD
+    /// clips; the trainer logs their distribution.
+    pub norms: Vec<f32>,
+}
+
+impl DeviceStep {
+    pub fn new(
+        registry: &Registry,
+        name: &str,
+        theta0: &[f32],
+        clip: f32,
+        sigma: f32,
+        lr: f32,
+    ) -> Result<DeviceStep> {
+        let meta = registry.manifest().get(name)?.clone();
+        if meta.kind != "step" {
+            bail!("artifact {name} has kind {:?}, want \"step\"", meta.kind);
+        }
+        let p = meta.inputs[0].element_count();
+        if theta0.len() != p {
+            bail!("theta0 length {} != artifact {name} P={p}", theta0.len());
+        }
+        let exe = registry.load(name)?;
+        Ok(DeviceStep {
+            exe,
+            meta,
+            theta: HostValue::f32(&[p], theta0.to_vec()).to_literal()?,
+            clip: HostValue::scalar_f32(clip).to_literal()?,
+            sigma: HostValue::scalar_f32(sigma).to_literal()?,
+            lr: HostValue::scalar_f32(lr).to_literal()?,
+            steps_run: 0,
+        })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// One DP-SGD step. `x`/`y` are the minibatch, `seed` drives the
+    /// in-graph gaussian noise (the trainer derives it per step).
+    pub fn step(&mut self, x: &HostValue, y: &HostValue, seed: i32) -> Result<StepResult> {
+        x.check_sig(&self.meta.inputs[1], "step x")?;
+        y.check_sig(&self.meta.inputs[2], "step y")?;
+        let x_lit = x.to_literal()?;
+        let y_lit = y.to_literal()?;
+        let seed_lit = HostValue::scalar_i32(seed).to_literal()?;
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&[
+                &self.theta, &x_lit, &y_lit, &seed_lit, &self.clip, &self.sigma, &self.lr,
+            ])
+            .context("executing step artifact")?;
+        let lit = result[0][0].to_literal_sync()?;
+        let mut parts = lit.to_tuple().context("step result tuple")?;
+        if parts.len() != 3 {
+            bail!("step artifact returned {} outputs, want 3", parts.len());
+        }
+        let norms_lit = parts.pop().unwrap();
+        let loss_lit = parts.pop().unwrap();
+        // theta' never touches a Vec<f32>: straight back in as input.
+        self.theta = parts.pop().unwrap();
+        self.steps_run += 1;
+        Ok(StepResult {
+            mean_loss: loss_lit.to_vec::<f32>()?[0],
+            norms: norms_lit.to_vec::<f32>()?,
+        })
+    }
+
+    /// Download the current parameters (checkpointing, eval).
+    pub fn theta(&self) -> Result<Vec<f32>> {
+        Ok(self.theta.to_vec::<f32>()?)
+    }
+
+    /// Replace the parameters (checkpoint restore).
+    pub fn set_theta(&mut self, theta: &[f32]) -> Result<()> {
+        let p = self.meta.inputs[0].element_count();
+        if theta.len() != p {
+            bail!("set_theta length {} != P={p}", theta.len());
+        }
+        self.theta = HostValue::f32(&[p], theta.to_vec()).to_literal()?;
+        Ok(())
+    }
+}

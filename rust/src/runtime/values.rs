@@ -1,0 +1,200 @@
+//! Host-side tensor values and their `xla::Literal` marshalling.
+//!
+//! The artifacts only ever exchange f32 and i32 arrays (scalars are
+//! rank-0 arrays), so a two-variant enum covers the whole wire format.
+//! Keeping marshalling in one place makes the runtime hot path easy to
+//! audit: `to_literal` is one host→device copy, `from_literal` one
+//! device→host copy, nothing else.
+
+use super::manifest::{DType, TensorSig};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+
+/// A host tensor: shape plus typed storage.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn scalar_f32(v: f32) -> HostValue {
+        HostValue::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostValue {
+        HostValue::I32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> HostValue {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::F32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> HostValue {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::I32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. } | HostValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostValue::F32 { .. } => DType::F32,
+            HostValue::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            HostValue::F32 { data, .. } => data.len(),
+            HostValue::I32 { data, .. } => data.len(),
+        }
+    }
+
+    /// Borrow f32 storage (errors on i32 values).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            HostValue::I32 { .. } => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            HostValue::F32 { .. } => bail!("expected i32 value, got f32"),
+        }
+    }
+
+    /// Move f32 storage out (errors on i32 values).
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            HostValue::I32 { .. } => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    /// View as the oracle's [`Tensor`] (f32 only; rank-0 becomes `[1]`).
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        let data = self.as_f32()?.to_vec();
+        let shape = if self.shape().is_empty() {
+            vec![1]
+        } else {
+            self.shape().to_vec()
+        };
+        Ok(Tensor::from_vec(&shape, data))
+    }
+
+    /// Check this value against a manifest signature entry.
+    pub fn check_sig(&self, sig: &TensorSig, what: &str) -> Result<()> {
+        if self.dtype() != sig.dtype {
+            bail!(
+                "{what}: dtype mismatch (got {}, artifact wants {})",
+                self.dtype().name(),
+                sig.dtype.name()
+            );
+        }
+        if self.shape() != sig.shape.as_slice() {
+            bail!(
+                "{what}: shape mismatch (got {:?}, artifact wants {:?})",
+                self.shape(),
+                sig.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Host → `xla::Literal` (one copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|d| *d as i64).collect();
+        let lit = match self {
+            HostValue::F32 { data, .. } => xla::Literal::vec1(data),
+            HostValue::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        lit.reshape(&dims)
+            .with_context(|| format!("reshaping literal to {:?}", self.shape()))
+    }
+
+    /// `xla::Literal` → host (one copy). The expected signature comes
+    /// from the manifest; the literal is validated against it.
+    pub fn from_literal(lit: &xla::Literal, sig: &TensorSig) -> Result<HostValue> {
+        let n = lit.element_count();
+        if n != sig.element_count() {
+            bail!(
+                "output element count {n} != manifest {:?} ({})",
+                sig.shape,
+                sig.element_count()
+            );
+        }
+        Ok(match sig.dtype {
+            DType::F32 => HostValue::F32 {
+                shape: sig.shape.clone(),
+                data: lit.to_vec::<f32>().context("reading f32 output")?,
+            },
+            DType::I32 => HostValue::I32 {
+                shape: sig.shape.clone(),
+                data: lit.to_vec::<i32>().context("reading i32 output")?,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sig_check_catches_mismatches() {
+        let v = HostValue::f32(&[2, 3], vec![0.0; 6]);
+        let ok = TensorSig {
+            shape: vec![2, 3],
+            dtype: DType::F32,
+        };
+        assert!(v.check_sig(&ok, "x").is_ok());
+        let wrong_shape = TensorSig {
+            shape: vec![3, 2],
+            dtype: DType::F32,
+        };
+        assert!(v.check_sig(&wrong_shape, "x").is_err());
+        let wrong_ty = TensorSig {
+            shape: vec![2, 3],
+            dtype: DType::I32,
+        };
+        assert!(v.check_sig(&wrong_ty, "x").is_err());
+    }
+
+    #[test]
+    fn scalars_are_rank0() {
+        assert!(HostValue::scalar_f32(1.5).shape().is_empty());
+        assert_eq!(HostValue::scalar_i32(3).element_count(), 1);
+    }
+
+    #[test]
+    fn to_tensor_roundtrip() {
+        let v = HostValue::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let t = v.to_tensor().unwrap();
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(HostValue::scalar_i32(1).to_tensor().is_err());
+    }
+
+    // Literal round-trips live in rust/tests/runtime_numerics.rs — they
+    // need the PJRT shared library, which unit tests avoid loading.
+}

@@ -1,0 +1,846 @@
+//! Pure-rust dense tensor + CNN math — the independent numerics oracle.
+//!
+//! This module re-implements, in plain rust, everything the L2 jax
+//! programs compute: the forward CNN, the backward pass, and the
+//! paper's per-example gradient equations (Eq. 2 for dense layers,
+//! Eq. 4 / Algorithm 2 for convolutions). The integration tests run
+//! the AOT artifacts through PJRT and check them against this module —
+//! an end-to-end cross-language, cross-framework agreement check, the
+//! same role PyTorch's autograd played for the paper's implementation.
+//!
+//! It is an *oracle*, so the code optimizes for obviousness: explicit
+//! index arithmetic, no blocking, no unsafe. The hot path lives in the
+//! lowered XLA artifacts, not here.
+
+/// A dense, row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Flat offset of a 4D index (the common case here).
+    #[inline]
+    fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
+    }
+
+    #[inline]
+    pub fn get4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        self.data[self.at4(a, b, c, d)]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
+        let i = self.at4(a, b, c, d);
+        self.data[i] = v;
+    }
+
+    #[inline]
+    pub fn add4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
+        let i = self.at4(a, b, c, d);
+        self.data[i] += v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// L2 norm of the whole tensor.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Convolution hyper-parameters (PyTorch semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvArgs {
+    pub stride: (usize, usize),
+    pub padding: (usize, usize),
+    pub dilation: (usize, usize),
+    pub groups: usize,
+}
+
+impl Default for ConvArgs {
+    fn default() -> Self {
+        ConvArgs {
+            stride: (1, 1),
+            padding: (0, 0),
+            dilation: (1, 1),
+            groups: 1,
+        }
+    }
+}
+
+impl ConvArgs {
+    /// PyTorch output-size formula.
+    pub fn out_hw(&self, h: usize, w: usize, kh: usize, kw: usize) -> (usize, usize) {
+        let ho = (h + 2 * self.padding.0 - self.dilation.0 * (kh - 1) - 1) / self.stride.0 + 1;
+        let wo = (w + 2 * self.padding.1 - self.dilation.1 * (kw - 1) - 1) / self.stride.1 + 1;
+        (ho, wo)
+    }
+}
+
+/// Forward 2D convolution, Eq. (3) generalized.
+///
+/// x: (B, C, H, W), w: (D, C/groups, KH, KW), b: (D,)  ->  (B, D, H', W')
+pub fn conv2d(x: &Tensor, w: &Tensor, bias: Option<&[f32]>, args: ConvArgs) -> Tensor {
+    let (bsz, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (d, cg, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(c / args.groups, cg, "group/channel mismatch");
+    assert_eq!(d % args.groups, 0);
+    let dg = d / args.groups;
+    let (ho, wo) = args.out_hw(h, wd, kh, kw);
+    let mut y = Tensor::zeros(&[bsz, d, ho, wo]);
+    let (ph, pw) = args.padding;
+    for b in 0..bsz {
+        for dd in 0..d {
+            let g = dd / dg;
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = bias.map_or(0.0, |bv| bv[dd]) as f64;
+                    for ci in 0..cg {
+                        let cin = g * cg + ci;
+                        for ky in 0..kh {
+                            let iy = oy * args.stride.0 + ky * args.dilation.0;
+                            if iy < ph || iy - ph >= h {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = ox * args.stride.1 + kx * args.dilation.1;
+                                if ix < pw || ix - pw >= wd {
+                                    continue;
+                                }
+                                acc += (x.get4(b, cin, iy - ph, ix - pw)
+                                    * w.get4(dd, ci, ky, kx))
+                                    as f64;
+                            }
+                        }
+                    }
+                    y.set4(b, dd, oy, ox, acc as f32);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Per-example kernel gradient — Eq. (4) with Algorithm-2 arguments.
+///
+/// x: (B, C, H, W) layer input, dy: (B, D, H', W') per-example output
+/// gradient  ->  (B, D, C/groups, KH, KW).
+pub fn perex_conv2d_grad(
+    x: &Tensor,
+    dy: &Tensor,
+    kh: usize,
+    kw: usize,
+    args: ConvArgs,
+) -> Tensor {
+    let (bsz, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (_, d, hp, wp) = (dy.shape[0], dy.shape[1], dy.shape[2], dy.shape[3]);
+    let cg = c / args.groups;
+    let dg = d / args.groups;
+    let (ph, pw) = args.padding;
+    let mut out = Tensor::zeros(&[bsz, d, cg, kh * kw]);
+    for b in 0..bsz {
+        for dd in 0..d {
+            let g = dd / dg;
+            for ci in 0..cg {
+                let cin = g * cg + ci;
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let mut acc = 0.0f64;
+                        for ty in 0..hp {
+                            let iy = args.stride.0 * ty + args.dilation.0 * ky;
+                            if iy < ph || iy - ph >= h {
+                                continue;
+                            }
+                            for tx in 0..wp {
+                                let ix = args.stride.1 * tx + args.dilation.1 * kx;
+                                if ix < pw || ix - pw >= wd {
+                                    continue;
+                                }
+                                acc += (x.get4(b, cin, iy - ph, ix - pw)
+                                    * dy.get4(b, dd, ty, tx))
+                                    as f64;
+                            }
+                        }
+                        let idx = ((b * d + dd) * cg + ci) * (kh * kw) + ky * kw + kx;
+                        out.data[idx] = acc as f32;
+                    }
+                }
+            }
+        }
+    }
+    out.reshape(&[bsz, d, cg, kh, kw])
+}
+
+/// Input gradient of a conv layer (needed to continue backprop).
+///
+/// dy: (B, D, H', W'), w: (D, C/groups, KH, KW)  ->  dx: (B, C, H, W)
+pub fn conv2d_grad_input(
+    dy: &Tensor,
+    w: &Tensor,
+    h: usize,
+    wd: usize,
+    args: ConvArgs,
+) -> Tensor {
+    let (bsz, d, hp, wp) = (dy.shape[0], dy.shape[1], dy.shape[2], dy.shape[3]);
+    let (_, cg, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let c = cg * args.groups;
+    let dg = d / args.groups;
+    let (ph, pw) = args.padding;
+    let mut dx = Tensor::zeros(&[bsz, c, h, wd]);
+    for b in 0..bsz {
+        for dd in 0..d {
+            let g = dd / dg;
+            for ty in 0..hp {
+                for tx in 0..wp {
+                    let gy = dy.get4(b, dd, ty, tx);
+                    if gy == 0.0 {
+                        continue;
+                    }
+                    for ci in 0..cg {
+                        let cin = g * cg + ci;
+                        for ky in 0..kh {
+                            let iy = args.stride.0 * ty + args.dilation.0 * ky;
+                            if iy < ph || iy - ph >= h {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = args.stride.1 * tx + args.dilation.1 * kx;
+                                if ix < pw || ix - pw >= wd {
+                                    continue;
+                                }
+                                dx.add4(b, cin, iy - ph, ix - pw, gy * w.get4(dd, ci, ky, kx));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Max-pool forward, recording argmax indices for the backward pass.
+pub fn maxpool2d(x: &Tensor, window: (usize, usize), stride: (usize, usize)) -> (Tensor, Vec<usize>) {
+    let (bsz, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h - window.0) / stride.0 + 1;
+    let wo = (w - window.1) / stride.1 + 1;
+    let mut y = Tensor::zeros(&[bsz, c, ho, wo]);
+    let mut arg = vec![0usize; bsz * c * ho * wo];
+    for b in 0..bsz {
+        for ci in 0..c {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0;
+                    for ky in 0..window.0 {
+                        for kx in 0..window.1 {
+                            let iy = oy * stride.0 + ky;
+                            let ix = ox * stride.1 + kx;
+                            let v = x.get4(b, ci, iy, ix);
+                            if v > best {
+                                best = v;
+                                best_idx = x.at4(b, ci, iy, ix);
+                            }
+                        }
+                    }
+                    y.set4(b, ci, oy, ox, best);
+                    arg[((b * c + ci) * ho + oy) * wo + ox] = best_idx;
+                }
+            }
+        }
+    }
+    (y, arg)
+}
+
+/// Max-pool backward: route each dy to its argmax input position.
+pub fn maxpool2d_grad(dy: &Tensor, arg: &[usize], input_shape: &[usize]) -> Tensor {
+    let mut dx = Tensor::zeros(input_shape);
+    for (i, &src) in arg.iter().enumerate() {
+        dx.data[src] += dy.data[i];
+    }
+    dx
+}
+
+/// ReLU forward.
+pub fn relu(x: &Tensor) -> Tensor {
+    Tensor {
+        shape: x.shape.clone(),
+        data: x.data.iter().map(|v| v.max(0.0)).collect(),
+    }
+}
+
+/// ReLU backward (mask by pre-activation sign).
+pub fn relu_grad(dy: &Tensor, x_pre: &Tensor) -> Tensor {
+    Tensor {
+        shape: dy.shape.clone(),
+        data: dy
+            .data
+            .iter()
+            .zip(&x_pre.data)
+            .map(|(g, x)| if *x > 0.0 { *g } else { 0.0 })
+            .collect(),
+    }
+}
+
+/// Linear forward: x (B, I) @ w^T (I, J) + b -> (B, J).
+pub fn linear(x: &Tensor, w: &Tensor, bias: &[f32]) -> Tensor {
+    let (bsz, i) = (x.shape[0], x.shape[1]);
+    let (j, i2) = (w.shape[0], w.shape[1]);
+    assert_eq!(i, i2);
+    let mut y = Tensor::zeros(&[bsz, j]);
+    for b in 0..bsz {
+        for jj in 0..j {
+            let mut acc = bias[jj] as f64;
+            for ii in 0..i {
+                acc += (x.data[b * i + ii] * w.data[jj * i + ii]) as f64;
+            }
+            y.data[b * j + jj] = acc as f32;
+        }
+    }
+    y
+}
+
+/// Per-example dense gradient — Eq. (2), dW[b] = dy[b] ⊗ x[b].
+pub fn perex_linear_grad(x: &Tensor, dy: &Tensor) -> Tensor {
+    let (bsz, i) = (x.shape[0], x.shape[1]);
+    let j = dy.shape[1];
+    let mut out = Tensor::zeros(&[bsz, j, i]);
+    for b in 0..bsz {
+        for jj in 0..j {
+            for ii in 0..i {
+                out.data[(b * j + jj) * i + ii] = dy.data[b * j + jj] * x.data[b * i + ii];
+            }
+        }
+    }
+    out
+}
+
+/// Linear input gradient: dy (B, J) @ w (J, I) -> dx (B, I).
+pub fn linear_grad_input(dy: &Tensor, w: &Tensor) -> Tensor {
+    let (bsz, j) = (dy.shape[0], dy.shape[1]);
+    let i = w.shape[1];
+    let mut dx = Tensor::zeros(&[bsz, i]);
+    for b in 0..bsz {
+        for jj in 0..j {
+            let g = dy.data[b * j + jj];
+            for ii in 0..i {
+                dx.data[b * i + ii] += g * w.data[jj * i + ii];
+            }
+        }
+    }
+    dx
+}
+
+/// Instance-norm forward (paper §4.2's batch-norm alternative).
+///
+/// x: (B, C, H, W), gamma/beta: (C,)  ->  (y, xhat, inv_std) where
+/// xhat is the per-(example, channel) normalized input (population
+/// variance over spatial dims, matching `jnp.var`) and inv_std is
+/// 1/sqrt(var + eps) per (b, c) — both needed by the backward pass.
+pub fn instance_norm(
+    x: &Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+) -> (Tensor, Tensor, Vec<f32>) {
+    let (bsz, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let n = h * w;
+    let mut y = Tensor::zeros(&x.shape);
+    let mut xhat = Tensor::zeros(&x.shape);
+    let mut inv_std = vec![0.0f32; bsz * c];
+    for b in 0..bsz {
+        for ci in 0..c {
+            let base = (b * c + ci) * n;
+            let slice = &x.data[base..base + n];
+            let mean = slice.iter().map(|v| *v as f64).sum::<f64>() / n as f64;
+            let var = slice
+                .iter()
+                .map(|v| (*v as f64 - mean) * (*v as f64 - mean))
+                .sum::<f64>()
+                / n as f64;
+            let istd = 1.0 / (var + eps as f64).sqrt();
+            inv_std[b * c + ci] = istd as f32;
+            for i in 0..n {
+                let xh = ((x.data[base + i] as f64 - mean) * istd) as f32;
+                xhat.data[base + i] = xh;
+                y.data[base + i] = gamma[ci] * xh + beta[ci];
+            }
+        }
+    }
+    (y, xhat, inv_std)
+}
+
+/// Instance-norm backward: per-example affine grads + input grad.
+///
+/// Returns (dgamma (B, C), dbeta (B, C), dx (B, C, H, W)); dgamma/dbeta
+/// are *per-example* (the quantity DP-SGD clips), matching the crb
+/// decomposition on the python side.
+pub fn instance_norm_grad(
+    dy: &Tensor,
+    xhat: &Tensor,
+    inv_std: &[f32],
+    gamma: &[f32],
+) -> (Tensor, Tensor, Tensor) {
+    let (bsz, c, h, w) = (dy.shape[0], dy.shape[1], dy.shape[2], dy.shape[3]);
+    let n = h * w;
+    let mut dgamma = Tensor::zeros(&[bsz, c]);
+    let mut dbeta = Tensor::zeros(&[bsz, c]);
+    let mut dx = Tensor::zeros(&dy.shape);
+    for b in 0..bsz {
+        for ci in 0..c {
+            let base = (b * c + ci) * n;
+            let mut sum_dy = 0.0f64;
+            let mut sum_dy_xhat = 0.0f64;
+            for i in 0..n {
+                sum_dy += dy.data[base + i] as f64;
+                sum_dy_xhat += (dy.data[base + i] * xhat.data[base + i]) as f64;
+            }
+            dgamma.data[b * c + ci] = sum_dy_xhat as f32;
+            dbeta.data[b * c + ci] = sum_dy as f32;
+            let mean_dy = sum_dy / n as f64;
+            let mean_dy_xhat = sum_dy_xhat / n as f64;
+            let scale = (gamma[ci] * inv_std[b * c + ci]) as f64;
+            for i in 0..n {
+                dx.data[base + i] = (scale
+                    * (dy.data[base + i] as f64
+                        - mean_dy
+                        - xhat.data[base + i] as f64 * mean_dy_xhat))
+                    as f32;
+            }
+        }
+    }
+    (dgamma, dbeta, dx)
+}
+
+/// Softmax cross-entropy: returns (per-example losses, dlogits) where
+/// dlogits is the gradient of the SUM of losses (so each row is the
+/// per-example gradient — what the crb taps see).
+pub fn softmax_xent(logits: &Tensor, labels: &[i32]) -> (Vec<f32>, Tensor) {
+    let (bsz, n) = (logits.shape[0], logits.shape[1]);
+    let mut losses = vec![0.0f32; bsz];
+    let mut dl = Tensor::zeros(&[bsz, n]);
+    for b in 0..bsz {
+        let row = &logits.data[b * n..(b + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f64;
+        for &v in row {
+            denom += ((v - mx) as f64).exp();
+        }
+        let log_denom = denom.ln() as f32 + mx;
+        let y = labels[b] as usize;
+        losses[b] = log_denom - row[y];
+        for k in 0..n {
+            let p = ((row[k] - log_denom) as f64).exp() as f32;
+            dl.data[b * n + k] = p - if k == y { 1.0 } else { 0.0 };
+        }
+    }
+    (losses, dl)
+}
+
+/// Per-example global-norm clip + sum — Eq. (1) + aggregation.
+///
+/// g: (B, P)  ->  (clipped sum (P,), pre-clip norms (B,)).
+pub fn clip_reduce(g: &Tensor, clip: f32) -> (Vec<f32>, Vec<f32>) {
+    let (bsz, p) = (g.shape[0], g.shape[1]);
+    let mut sum = vec![0.0f32; p];
+    let mut norms = vec![0.0f32; bsz];
+    for b in 0..bsz {
+        let row = &g.data[b * p..(b + 1) * p];
+        let norm = row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32;
+        norms[b] = norm;
+        let scale = 1.0 / (norm / clip).max(1.0);
+        for (s, v) in sum.iter_mut().zip(row) {
+            *s += scale * v;
+        }
+    }
+    (sum, norms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn randn(rng: &mut Xoshiro256pp, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        let mut data = vec![0.0f32; n];
+        rng.fill_gaussian(&mut data, 1.0);
+        Tensor::from_vec(shape, data)
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel of value 1 on one channel is the identity.
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let x = randn(&mut rng, &[1, 1, 4, 4]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv2d(&x, &w, None, ConvArgs::default());
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_known_values() {
+        // 2x2 input, 2x2 averaging kernel -> single output = sum.
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let y = conv2d(&x, &w, None, ConvArgs::default());
+        assert_eq!(y.shape, vec![1, 1, 1, 1]);
+        assert!((y.data[0] - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conv_stride_padding_shapes() {
+        let args = ConvArgs {
+            stride: (2, 2),
+            padding: (1, 1),
+            ..Default::default()
+        };
+        let x = Tensor::zeros(&[2, 3, 8, 8]);
+        let w = Tensor::zeros(&[4, 3, 3, 3]);
+        let y = conv2d(&x, &w, None, args);
+        assert_eq!(y.shape, vec![2, 4, 4, 4]);
+    }
+
+    #[test]
+    fn conv_grouped_independence() {
+        // groups=2: first output group must ignore second input group.
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let x1 = randn(&mut rng, &[1, 4, 5, 5]);
+        let mut x2 = x1.clone();
+        // perturb only channels 2..4 (second group)
+        for c in 2..4 {
+            for i in 0..25 {
+                x2.data[c * 25 + i] += 5.0;
+            }
+        }
+        let w = randn(&mut rng, &[2, 2, 3, 3]);
+        let args = ConvArgs {
+            groups: 2,
+            ..Default::default()
+        };
+        let y1 = conv2d(&x1, &w, None, args);
+        let y2 = conv2d(&x2, &w, None, args);
+        // output channel 0 (group 0) unchanged
+        for i in 0..9 {
+            assert!((y1.data[i] - y2.data[i]).abs() < 1e-6);
+        }
+        // output channel 1 (group 1) changed
+        assert!(y1.data[9..].iter().zip(&y2.data[9..]).any(|(a, b)| (a - b).abs() > 1e-3));
+    }
+
+    /// Finite-difference check: per-example conv gradient (Eq. 4).
+    #[test]
+    fn perex_conv_grad_matches_finite_difference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        for args in [
+            ConvArgs::default(),
+            ConvArgs { stride: (2, 1), ..Default::default() },
+            ConvArgs { dilation: (1, 2), ..Default::default() },
+            ConvArgs { padding: (1, 1), ..Default::default() },
+            ConvArgs { groups: 2, ..Default::default() },
+        ] {
+            let (bsz, c, h, wd, d, kh, kw) = (2, 4, 6, 7, 4, 3, 2);
+            let x = randn(&mut rng, &[bsz, c, h, wd]);
+            let mut w = randn(&mut rng, &[d, c / args.groups, kh, kw]);
+            let (ho, wo) = args.out_hw(h, wd, kh, kw);
+            // loss = sum over everything of y * m  (m a fixed random mask)
+            let m = randn(&mut rng, &[bsz, d, ho, wo]);
+            // dy for example b is m[b] (per-example loss L_b = <y_b, m_b>)
+            let grad = perex_conv2d_grad(&x, &m, kh, kw, args);
+            // finite difference on a few kernel entries, per example
+            let eps = 1e-3f32;
+            for &(dd, ci, ky, kx) in &[(0usize, 0usize, 0usize, 0usize), (d - 1, c / args.groups - 1, kh - 1, kw - 1), (1, 0, 1, 1)] {
+                let wi = ((dd * (c / args.groups) + ci) * kh + ky) * kw + kx;
+                let orig = w.data[wi];
+                w.data[wi] = orig + eps;
+                let yp = conv2d(&x, &w, None, args);
+                w.data[wi] = orig - eps;
+                let ym = conv2d(&x, &w, None, args);
+                w.data[wi] = orig;
+                for b in 0..bsz {
+                    let mut fd = 0.0f64;
+                    for oy in 0..ho {
+                        for ox in 0..wo {
+                            fd += ((yp.get4(b, dd, oy, ox) - ym.get4(b, dd, oy, ox))
+                                * m.get4(b, dd, oy, ox)) as f64;
+                        }
+                    }
+                    let fd = fd / (2.0 * eps as f64);
+                    let an = grad.data[(((b * d + dd) * (c / args.groups) + ci) * kh + ky) * kw + kx];
+                    assert!(
+                        (fd as f32 - an).abs() < 2e-2,
+                        "args {args:?} b={b} fd={fd} analytic={an}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_grad_input_matches_finite_difference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let args = ConvArgs {
+            stride: (2, 1),
+            padding: (1, 0),
+            ..Default::default()
+        };
+        let (bsz, c, h, wd, d, kh, kw) = (1, 2, 5, 5, 3, 3, 3);
+        let mut x = randn(&mut rng, &[bsz, c, h, wd]);
+        let w = randn(&mut rng, &[d, c, kh, kw]);
+        let (ho, wo) = args.out_hw(h, wd, kh, kw);
+        let m = randn(&mut rng, &[bsz, d, ho, wo]);
+        let dx = conv2d_grad_input(&m, &w, h, wd, args);
+        let eps = 1e-3f32;
+        for &i in &[0usize, 7, 24, x.data.len() - 1] {
+            let orig = x.data[i];
+            x.data[i] = orig + eps;
+            let yp = conv2d(&x, &w, None, args);
+            x.data[i] = orig - eps;
+            let ym = conv2d(&x, &w, None, args);
+            x.data[i] = orig;
+            let fd: f64 = yp
+                .data
+                .iter()
+                .zip(&ym.data)
+                .zip(&m.data)
+                .map(|((p, q), mm)| ((p - q) * mm) as f64)
+                .sum::<f64>()
+                / (2.0 * eps as f64);
+            assert!((fd as f32 - dx.data[i]).abs() < 2e-2, "i={i} fd={fd} an={}", dx.data[i]);
+        }
+    }
+
+    #[test]
+    fn maxpool_forward_and_grad() {
+        let x = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            vec![
+                1.0, 2.0, 5.0, 3.0, //
+                4.0, 0.0, 1.0, 2.0, //
+                7.0, 8.0, 3.0, 1.0, //
+                0.0, 2.0, 9.0, 4.0,
+            ],
+        );
+        let (y, arg) = maxpool2d(&x, (2, 2), (2, 2));
+        assert_eq!(y.data, vec![4.0, 5.0, 8.0, 9.0]);
+        let dy = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let dx = maxpool2d_grad(&dy, &arg, &x.shape);
+        assert_eq!(dx.get4(0, 0, 1, 0), 1.0); // the 4.0
+        assert_eq!(dx.get4(0, 0, 0, 2), 2.0); // the 5.0
+        assert_eq!(dx.get4(0, 0, 2, 1), 3.0); // the 8.0
+        assert_eq!(dx.get4(0, 0, 3, 2), 4.0); // the 9.0
+        assert_eq!(dx.data.iter().filter(|v| **v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn linear_and_perex_grad() {
+        let x = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+        let y = linear(&x, &w, &[0.5, -0.5]);
+        assert_eq!(y.data, vec![1.5, 1.5, 4.5, 4.5]);
+        let dy = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 2.0]);
+        let g = perex_linear_grad(&x, &dy);
+        assert_eq!(g.shape, vec![2, 2, 3]);
+        // example 0: dW = [1,0]^T outer [1,2,3]
+        assert_eq!(&g.data[0..6], &[1.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+        // example 1: dW = [0,2]^T outer [4,5,6]
+        assert_eq!(&g.data[6..12], &[0.0, 0.0, 0.0, 8.0, 10.0, 12.0]);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_sums_to_zero() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let logits = randn(&mut rng, &[3, 5]);
+        let labels = [0, 2, 4];
+        let (losses, dl) = softmax_xent(&logits, &labels);
+        assert!(losses.iter().all(|l| *l > 0.0));
+        for b in 0..3 {
+            let s: f32 = dl.data[b * 5..(b + 1) * 5].iter().sum();
+            assert!(s.abs() < 1e-5, "row {b} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn softmax_xent_finite_difference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let mut logits = randn(&mut rng, &[2, 4]);
+        let labels = [1, 3];
+        let (_, dl) = softmax_xent(&logits, &labels);
+        let eps = 1e-3f32;
+        for i in 0..logits.data.len() {
+            let orig = logits.data[i];
+            logits.data[i] = orig + eps;
+            let (lp, _) = softmax_xent(&logits, &labels);
+            logits.data[i] = orig - eps;
+            let (lm, _) = softmax_xent(&logits, &labels);
+            logits.data[i] = orig;
+            let fd = (lp.iter().sum::<f32>() - lm.iter().sum::<f32>()) / (2.0 * eps);
+            assert!((fd - dl.data[i]).abs() < 1e-2, "i={i}: fd {fd} vs {}", dl.data[i]);
+        }
+    }
+
+    #[test]
+    fn instance_norm_forward_stats() {
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let x = randn(&mut rng, &[2, 3, 4, 5]);
+        let gamma = [1.0f32, 2.0, 0.5];
+        let beta = [0.0f32, -1.0, 3.0];
+        let (y, xhat, inv_std) = instance_norm(&x, &gamma, &beta, 1e-5);
+        // xhat has ~zero mean, ~unit var per (b, c)
+        let n = 20;
+        for bc in 0..6 {
+            let sl = &xhat.data[bc * n..(bc + 1) * n];
+            let mean: f32 = sl.iter().sum::<f32>() / n as f32;
+            let var: f32 = sl.iter().map(|v| v * v).sum::<f32>() / n as f32;
+            assert!(mean.abs() < 1e-5, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+            assert!(inv_std[bc] > 0.0);
+        }
+        // affine applied per channel
+        for b in 0..2 {
+            for ci in 0..3 {
+                for i in 0..n {
+                    let idx = (b * 3 + ci) * n + i;
+                    let want = gamma[ci] * xhat.data[idx] + beta[ci];
+                    assert!((y.data[idx] - want).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn instance_norm_grad_matches_finite_difference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let x = randn(&mut rng, &[2, 2, 3, 4]);
+        let gamma = [1.3f32, 0.7];
+        let beta = [0.1f32, -0.2];
+        let eps = 1e-5f32;
+        let m = randn(&mut rng, &[2, 2, 3, 4]); // per-example loss mask
+        let (_, xhat, inv_std) = instance_norm(&x, &gamma, &beta, eps);
+        let (dgamma, dbeta, dx) = instance_norm_grad(&m, &xhat, &inv_std, &gamma);
+
+        let loss = |x: &Tensor, gamma: &[f32], beta: &[f32], b: usize| -> f64 {
+            let (y, _, _) = instance_norm(x, gamma, beta, eps);
+            let n = 2 * 3 * 4;
+            y.data[b * n..(b + 1) * n]
+                .iter()
+                .zip(&m.data[b * n..(b + 1) * n])
+                .map(|(a, c)| (a * c) as f64)
+                .sum()
+        };
+        let fd_eps = 1e-3f32;
+        // dgamma / dbeta per example
+        for b in 0..2 {
+            for ci in 0..2 {
+                let mut gp = gamma;
+                gp[ci] += fd_eps;
+                let mut gm = gamma;
+                gm[ci] -= fd_eps;
+                let fd = (loss(&x, &gp, &beta, b) - loss(&x, &gm, &beta, b))
+                    / (2.0 * fd_eps as f64);
+                let an = dgamma.data[b * 2 + ci];
+                assert!((fd as f32 - an).abs() < 2e-2, "dgamma[{b},{ci}] {fd} vs {an}");
+
+                let mut bp = beta;
+                bp[ci] += fd_eps;
+                let mut bm = beta;
+                bm[ci] -= fd_eps;
+                let fd = (loss(&x, &gamma, &bp, b) - loss(&x, &gamma, &bm, b))
+                    / (2.0 * fd_eps as f64);
+                let an = dbeta.data[b * 2 + ci];
+                assert!((fd as f32 - an).abs() < 2e-2, "dbeta[{b},{ci}] {fd} vs {an}");
+            }
+        }
+        // dx at a few coordinates (summed loss: both examples)
+        let mut xp = x.clone();
+        for &i in &[0usize, 10, 30, xp.data.len() - 1] {
+            let b = i / (2 * 3 * 4);
+            let orig = xp.data[i];
+            xp.data[i] = orig + fd_eps;
+            let lp = loss(&xp, &gamma, &beta, b);
+            xp.data[i] = orig - fd_eps;
+            let lm = loss(&xp, &gamma, &beta, b);
+            xp.data[i] = orig;
+            let fd = (lp - lm) / (2.0 * fd_eps as f64);
+            assert!(
+                (fd as f32 - dx.data[i]).abs() < 2e-2,
+                "dx[{i}] {fd} vs {}",
+                dx.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn clip_reduce_semantics() {
+        // rows with norms 5 and 0.5, clip 1.0: first scaled by 1/5.
+        let g = Tensor::from_vec(&[2, 2], vec![3.0, 4.0, 0.3, 0.4]);
+        let (sum, norms) = clip_reduce(&g, 1.0);
+        assert!((norms[0] - 5.0).abs() < 1e-6);
+        assert!((norms[1] - 0.5).abs() < 1e-6);
+        assert!((sum[0] - (0.6 + 0.3)).abs() < 1e-6);
+        assert!((sum[1] - (0.8 + 0.4)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clip_preserves_direction() {
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let g = randn(&mut rng, &[1, 16]);
+        let (sum, norms) = clip_reduce(&g, 0.1);
+        let out_norm = sum.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((out_norm - 0.1).abs() < 1e-4, "clipped norm {out_norm}");
+        // direction preserved
+        let dot: f32 = sum.iter().zip(&g.data).map(|(a, b)| a * b).sum();
+        assert!((dot - 0.1 * norms[0]).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,317 @@
+//! Property tests (via the `check` mini-framework) on the coordinator's
+//! substrates: the invariants that must hold for *all* inputs, not just
+//! the fixtures the unit tests pick.
+
+use grad_cnns::check::{forall, forall_sized, gen_range, gen_vec, CheckConfig};
+use grad_cnns::coordinator::BoundedQueue;
+use grad_cnns::data::{Batcher, GaussianImages, Sampling};
+use grad_cnns::privacy::DpSgdAccountant;
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::tensor::{clip_reduce, conv2d, softmax_xent, ConvArgs, Tensor};
+use grad_cnns::{config, jsonx};
+
+fn cfg() -> CheckConfig {
+    CheckConfig::default()
+}
+
+#[test]
+fn prop_clip_never_exceeds_bound_per_row() {
+    forall_sized(
+        cfg(),
+        1..17,
+        |rng, b| {
+            let p = gen_range(rng, 1, 40);
+            let clip = 0.01 + rng.next_f32() * 3.0;
+            let scale = 0.01 + rng.next_f32() * 20.0;
+            (gen_vec(rng, b * p, scale), b, p, clip)
+        },
+        |(data, b, p, clip)| {
+            let g = Tensor::from_vec(&[*b, *p], data.clone());
+            let (sum, norms) = clip_reduce(&g, *clip);
+            // aggregate norm bounded by B*C
+            let out: f32 = sum.iter().map(|v| v * v).sum::<f32>().sqrt();
+            if out > *clip * (*b as f32) * (1.0 + 1e-4) {
+                return Err(format!("aggregate norm {out} > B*C"));
+            }
+            // each row's clipped contribution has norm min(norm, C)
+            for bb in 0..*b {
+                let row = &g.data[bb * p..(bb + 1) * p];
+                let scale = 1.0 / (norms[bb] / clip).max(1.0);
+                let contrib: f32 =
+                    row.iter().map(|v| (v * scale) * (v * scale)).sum::<f32>().sqrt();
+                if contrib > clip * 1.0001 {
+                    return Err(format!("row {bb} contributes {contrib} > C={clip}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_clip_removing_one_example_bounded_sensitivity() {
+    forall(
+        cfg(),
+        |rng| {
+            let b = gen_range(rng, 2, 6);
+            let p = gen_range(rng, 1, 20);
+            (gen_vec(rng, b * p, 10.0), b, p)
+        },
+        |(data, b, p)| {
+            let clip = 1.0;
+            let g = Tensor::from_vec(&[*b, *p], data.clone());
+            let (full, _) = clip_reduce(&g, clip);
+            for drop in 0..*b {
+                let rest: Vec<f32> = (0..*b)
+                    .filter(|bb| bb != &drop)
+                    .flat_map(|bb| data[bb * p..(bb + 1) * p].to_vec())
+                    .collect();
+                let gr = Tensor::from_vec(&[b - 1, *p], rest);
+                let (part, _) = clip_reduce(&gr, clip);
+                let delta: f32 = full
+                    .iter()
+                    .zip(&part)
+                    .map(|(a, c)| (a - c) * (a - c))
+                    .sum::<f32>()
+                    .sqrt();
+                if delta > clip + 1e-4 {
+                    return Err(format!("sensitivity {delta} > C dropping {drop}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_conv_output_shape_formula() {
+    forall(
+        cfg(),
+        |rng| {
+            let args = ConvArgs {
+                stride: (gen_range(rng, 1, 3), gen_range(rng, 1, 3)),
+                padding: (gen_range(rng, 0, 2), gen_range(rng, 0, 2)),
+                dilation: (gen_range(rng, 1, 2), gen_range(rng, 1, 2)),
+                groups: 1,
+            };
+            let kh = gen_range(rng, 1, 3);
+            let kw = gen_range(rng, 1, 3);
+            let h = gen_range(rng, kh + 2, 12);
+            let w = gen_range(rng, kw + 2, 12);
+            (args, h, w, kh, kw)
+        },
+        |(args, h, w, kh, kw)| {
+            let (ho, wo) = args.out_hw(*h, *w, *kh, *kw);
+            let x = Tensor::zeros(&[1, 2, *h, *w]);
+            let wt = Tensor::zeros(&[3, 2, *kh, *kw]);
+            let y = conv2d(&x, &wt, None, *args);
+            if y.shape == vec![1, 3, ho, wo] {
+                Ok(())
+            } else {
+                Err(format!("shape {:?} != [1,3,{ho},{wo}]", y.shape))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_softmax_xent_rows_sum_zero_and_loss_positive() {
+    forall(
+        cfg(),
+        |rng| {
+            let b = gen_range(rng, 1, 5);
+            let n = gen_range(rng, 2, 10);
+            let logits = gen_vec(rng, b * n, 3.0);
+            let labels: Vec<i32> = (0..b).map(|_| gen_range(rng, 0, n - 1) as i32).collect();
+            (logits, labels, b, n)
+        },
+        |(logits, labels, b, n)| {
+            let t = Tensor::from_vec(&[*b, *n], logits.clone());
+            let (losses, dl) = softmax_xent(&t, labels);
+            for bb in 0..*b {
+                if losses[bb] < 0.0 {
+                    return Err(format!("negative loss {}", losses[bb]));
+                }
+                let s: f32 = dl.data[bb * n..(bb + 1) * n].iter().sum();
+                if s.abs() > 1e-4 {
+                    return Err(format!("row {bb} grad sums to {s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rdp_epsilon_monotone_in_steps_and_sigma() {
+    forall(
+        cfg(),
+        |rng| {
+            let q = 0.001 + rng.next_f64() * 0.05;
+            let sigma = 0.5 + rng.next_f64() * 2.0;
+            let steps = gen_range(rng, 1, 500) as u64;
+            (q, sigma, steps)
+        },
+        |(q, sigma, steps)| {
+            let mut a = DpSgdAccountant::new(*q, *sigma);
+            a.step(*steps);
+            let (e1, _) = a.epsilon(1e-5);
+            a.step(*steps);
+            let (e2, _) = a.epsilon(1e-5);
+            if e2 < e1 {
+                return Err(format!("ε not monotone in steps: {e1} -> {e2}"));
+            }
+            let mut b = DpSgdAccountant::new(*q, *sigma * 1.5);
+            b.step(*steps);
+            let (e3, _) = b.epsilon(1e-5);
+            if e3 > e1 + 1e-9 {
+                return Err(format!("more noise gave more ε: {e3} > {e1}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_jsonx_roundtrip_floats_strings() {
+    forall(
+        cfg(),
+        |rng| {
+            let n = gen_range(rng, 0, 8);
+            let vals: Vec<f64> = (0..n).map(|_| (rng.next_f64() - 0.5) * 1e6).collect();
+            vals
+        },
+        |vals| {
+            let v = jsonx::arr(vals.iter().map(|x| jsonx::num(*x)).collect());
+            let text = jsonx::to_string(&v);
+            let back = jsonx::parse(&text).map_err(|e| e.to_string())?;
+            if back != v {
+                return Err(format!("roundtrip: {text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shuffled_batcher_partitions_each_epoch() {
+    forall(
+        cfg(),
+        |rng| {
+            let batch = gen_range(rng, 1, 8);
+            let epochs = gen_range(rng, 1, 3);
+            let n = batch * gen_range(rng, 1, 6);
+            (n, batch, epochs, rng.next_u64())
+        },
+        |(n, batch, epochs, seed)| {
+            let mut b = Batcher::new(*n, *batch, Sampling::Shuffled, *seed);
+            for _ in 0..*epochs {
+                let mut seen = vec![false; *n];
+                for _ in 0..(n / batch) {
+                    for i in b.next_batch() {
+                        if seen[i] {
+                            return Err(format!("index {i} repeated within epoch"));
+                        }
+                        seen[i] = true;
+                    }
+                }
+                let count = seen.iter().filter(|s| **s).count();
+                if count != (n / batch) * batch {
+                    return Err(format!("epoch covered {count}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_config_set_roundtrip() {
+    forall(
+        cfg(),
+        |rng| {
+            let steps = gen_range(rng, 1, 100000);
+            let lr = rng.next_f32();
+            (steps, lr)
+        },
+        |(steps, lr)| {
+            let mut c = config::Config::parse("[train]\nsteps = 1\nlr = 0.1\n")
+                .map_err(|e| e.to_string())?;
+            c.set("train.steps", &steps.to_string()).map_err(|e| e.to_string())?;
+            c.set("train.lr", &format!("{lr}")).map_err(|e| e.to_string())?;
+            if c.get("train.steps").unwrap().as_i64() != Some(*steps as i64) {
+                return Err("steps lost".into());
+            }
+            let got = c.get("train.lr").unwrap().as_f64().unwrap() as f32;
+            if (got - lr).abs() > 1e-6 {
+                return Err(format!("lr {got} != {lr}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_queue_never_loses_or_duplicates() {
+    forall(
+        cfg(),
+        |rng| (gen_range(rng, 1, 64), gen_range(rng, 1, 8)),
+        |(n, cap)| {
+            let q = std::sync::Arc::new(BoundedQueue::new(*cap));
+            let q2 = q.clone();
+            let n = *n;
+            let producer = std::thread::spawn(move || {
+                for i in 0..n {
+                    q2.push(i).unwrap();
+                }
+                q2.close();
+            });
+            let mut got = Vec::new();
+            while let Some(v) = q.pop() {
+                got.push(v);
+            }
+            producer.join().unwrap();
+            if got != (0..n).collect::<Vec<_>>() {
+                return Err(format!("got {got:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gaussian_dataset_deterministic_and_labeled() {
+    forall(
+        cfg(),
+        |rng| (gen_range(rng, 1, 32), gen_range(rng, 2, 10), rng.next_u64()),
+        |(n, classes, seed)| {
+            let a = GaussianImages::generate(*n, (1, 4, 4), *classes, *seed);
+            let b = GaussianImages::generate(*n, (1, 4, 4), *classes, *seed);
+            if a.images != b.images || a.labels != b.labels {
+                return Err("not deterministic".into());
+            }
+            if !a.labels.iter().all(|l| (*l as usize) < *classes) {
+                return Err("label out of range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rng_fork_independent() {
+    forall(
+        cfg(),
+        |rng| rng.next_u64(),
+        |seed| {
+            let mut a = Xoshiro256pp::seed_from_u64(*seed);
+            let mut fork = a.fork(1);
+            let av: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+            let fv: Vec<u64> = (0..8).map(|_| fork.next_u64()).collect();
+            if av == fv {
+                return Err("fork mirrors parent".into());
+            }
+            Ok(())
+        },
+    );
+}

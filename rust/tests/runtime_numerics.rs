@@ -1,0 +1,363 @@
+//! Integration: the AOT artifacts executed through PJRT against the
+//! pure-rust oracle — the cross-language correctness argument.
+//!
+//! python (jax + Pallas, build time) and rust (`tensor`/`models`,
+//! run time) implement the paper's equations independently; these
+//! tests pin them to each other through the actual artifact files.
+//! Requires `make artifacts` (the `core` set at minimum).
+
+use grad_cnns::models::ModelOracle;
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::runtime::{DeviceStep, HostValue, Registry};
+use grad_cnns::tensor::{clip_reduce, Tensor};
+
+fn registry() -> Registry {
+    Registry::open("artifacts").expect("artifacts/ missing — run `make artifacts`")
+}
+
+fn random_problem(
+    registry: &Registry,
+    name: &str,
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<usize>) {
+    let meta = registry.manifest().get(name).unwrap();
+    let p = meta.inputs[0].element_count();
+    let b = meta.inputs[2].element_count();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut theta = vec![0.0f32; p];
+    rng.fill_gaussian(&mut theta, 0.1);
+    let mut x = vec![0.0f32; meta.inputs[1].element_count()];
+    rng.fill_gaussian(&mut x, 1.0);
+    let y: Vec<i32> = (0..b).map(|_| rng.next_below(10) as i32).collect();
+    (theta, x, y, meta.inputs[1].shape.clone())
+}
+
+#[test]
+fn literal_round_trip_f32_and_i32() {
+    let _client = xla::PjRtClient::cpu().unwrap(); // ensure the shared lib loads
+    let v = HostValue::f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.25, -6.125]);
+    let lit = v.to_literal().unwrap();
+    let sig = grad_cnns::runtime::TensorSig {
+        shape: vec![2, 3],
+        dtype: grad_cnns::runtime::manifest::DType::F32,
+    };
+    let back = HostValue::from_literal(&lit, &sig).unwrap();
+    assert_eq!(back, v);
+
+    let vi = HostValue::i32(&[4], vec![1, -2, 3, i32::MAX]);
+    let liti = vi.to_literal().unwrap();
+    let sigi = grad_cnns::runtime::TensorSig {
+        shape: vec![4],
+        dtype: grad_cnns::runtime::manifest::DType::I32,
+    };
+    assert_eq!(HostValue::from_literal(&liti, &sigi).unwrap(), vi);
+}
+
+#[test]
+fn all_core_strategies_match_oracle() {
+    let registry = registry();
+    let names: Vec<String> = registry
+        .manifest()
+        .artifacts
+        .values()
+        .filter(|m| m.set == "core" && m.kind == "grads")
+        .map(|m| m.name.clone())
+        .collect();
+    assert_eq!(names.len(), 4, "expected 4 core grads artifacts");
+    for name in &names {
+        let (theta, x, y, x_shape) = random_problem(&registry, name, 21);
+        let out = registry
+            .run(
+                name,
+                &[
+                    HostValue::f32(&[theta.len()], theta.clone()),
+                    HostValue::f32(&x_shape, x.clone()),
+                    HostValue::i32(&[y.len()], y.clone()),
+                ],
+            )
+            .unwrap();
+        let spec = registry.validate_model(name).unwrap();
+        let oracle = ModelOracle::new(spec);
+        let (want, want_losses) = oracle.perex_grads(&theta, &Tensor::from_vec(&x_shape, x), &y);
+        let diff = out[0].to_tensor().unwrap().max_abs_diff(&want);
+        assert!(diff < 1e-4, "{name}: grads differ by {diff}");
+        for (a, b) in out[1].as_f32().unwrap().iter().zip(&want_losses) {
+            assert!((a - b).abs() < 1e-4, "{name}: losses {a} vs {b}");
+        }
+        registry.evict(name);
+    }
+}
+
+#[test]
+fn inorm_strategies_match_oracle() {
+    // Extension (paper §4.2): instance-normalized net, every strategy
+    // vs the rust oracle's instance_norm{,_grad}.
+    let registry = registry();
+    let names: Vec<String> = registry
+        .manifest()
+        .artifacts
+        .values()
+        .filter(|m| m.set == "inorm" && m.kind == "grads")
+        .map(|m| m.name.clone())
+        .collect();
+    assert_eq!(names.len(), 4, "expected 4 inorm grads artifacts");
+    for name in &names {
+        let (theta, x, y, x_shape) = random_problem(&registry, name, 31);
+        let out = registry
+            .run(
+                name,
+                &[
+                    HostValue::f32(&[theta.len()], theta.clone()),
+                    HostValue::f32(&x_shape, x.clone()),
+                    HostValue::i32(&[y.len()], y.clone()),
+                ],
+            )
+            .unwrap();
+        let spec = registry.validate_model(name).unwrap();
+        assert!(
+            spec.layers
+                .iter()
+                .any(|l| matches!(l, grad_cnns::models::LayerSpec::InstanceNorm { .. })),
+            "{name}: expected InstanceNorm layers"
+        );
+        let oracle = ModelOracle::new(spec);
+        let (want, _) = oracle.perex_grads(&theta, &Tensor::from_vec(&x_shape, x), &y);
+        let diff = out[0].to_tensor().unwrap().max_abs_diff(&want);
+        assert!(diff < 1e-4, "{name}: inorm grads differ by {diff}");
+        registry.evict(name);
+    }
+}
+
+#[test]
+fn nodp_is_mean_of_per_example() {
+    let registry = registry();
+    let (theta, x, y, x_shape) = random_problem(&registry, "core_toy_nodp_b4", 22);
+    let nodp = registry
+        .run(
+            "core_toy_nodp_b4",
+            &[
+                HostValue::f32(&[theta.len()], theta.clone()),
+                HostValue::f32(&x_shape, x.clone()),
+                HostValue::i32(&[y.len()], y.clone()),
+            ],
+        )
+        .unwrap();
+    let spec = registry.validate_model("core_toy_nodp_b4").unwrap();
+    let oracle = ModelOracle::new(spec);
+    let (per, losses) = oracle.perex_grads(&theta, &Tensor::from_vec(&x_shape, x), &y);
+    let b = y.len();
+    let p = theta.len();
+    let grad = nodp[0].as_f32().unwrap();
+    for i in (0..p).step_by(97) {
+        let mean: f32 = (0..b).map(|bb| per.data[bb * p + i]).sum::<f32>() / b as f32;
+        assert!(
+            (grad[i] - mean).abs() < 1e-4,
+            "coord {i}: {} vs {mean}",
+            grad[i]
+        );
+    }
+    let mean_loss = losses.iter().sum::<f32>() / b as f32;
+    assert!((nodp[1].as_f32().unwrap()[0] - mean_loss).abs() < 1e-5);
+}
+
+#[test]
+fn eval_artifact_consistent_with_oracle_forward() {
+    let registry = registry();
+    let (theta, x, y, x_shape) = random_problem(&registry, "core_toy_eval_b4", 23);
+    let out = registry
+        .run(
+            "core_toy_eval_b4",
+            &[
+                HostValue::f32(&[theta.len()], theta.clone()),
+                HostValue::f32(&x_shape, x.clone()),
+                HostValue::i32(&[y.len()], y.clone()),
+            ],
+        )
+        .unwrap();
+    let spec = registry.validate_model("core_toy_eval_b4").unwrap();
+    let oracle = ModelOracle::new(spec);
+    let logits = oracle.forward(&theta, &Tensor::from_vec(&x_shape, x));
+    let (losses, _) = grad_cnns::tensor::softmax_xent(&logits, &y);
+    let want_loss = losses.iter().sum::<f32>() / y.len() as f32;
+    assert!((out[0].as_f32().unwrap()[0] - want_loss).abs() < 1e-5);
+    // accuracy: argmax agreement
+    let n = logits.shape[1];
+    let correct = (0..y.len())
+        .filter(|&b| {
+            let row = &logits.data[b * n..(b + 1) * n];
+            let am = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            am as i32 == y[b]
+        })
+        .count();
+    let want_acc = correct as f32 / y.len() as f32;
+    assert!((out[1].as_f32().unwrap()[0] - want_acc).abs() < 1e-6);
+}
+
+#[test]
+fn init_artifact_is_deterministic_and_scaled() {
+    let registry = registry();
+    let a = registry
+        .run("core_toy_init", &[HostValue::scalar_i32(5)])
+        .unwrap();
+    let b = registry
+        .run("core_toy_init", &[HostValue::scalar_i32(5)])
+        .unwrap();
+    let c = registry
+        .run("core_toy_init", &[HostValue::scalar_i32(6)])
+        .unwrap();
+    assert_eq!(a[0], b[0], "same seed, same init");
+    assert_ne!(a[0], c[0], "different seed, different init");
+    let theta = a[0].as_f32().unwrap();
+    let nonzero = theta.iter().filter(|v| **v != 0.0).count();
+    assert!(nonzero > theta.len() / 2, "init mostly zero?");
+    assert!(theta.iter().all(|v| v.abs() < 5.0), "init blew up");
+}
+
+#[test]
+fn step_artifact_zero_noise_is_clipped_sgd() {
+    // the DP-SGD step vs a hand computation from the oracle:
+    //   theta' = theta - lr/B * sum_b clip(g_b)
+    let registry = registry();
+    let name = "core_toy_crb_step_b4";
+    let (theta, x, y, x_shape) = random_problem(&registry, name, 24);
+    let (clip, lr) = (0.5f32, 0.1f32);
+    let mut step = DeviceStep::new(&registry, name, &theta, clip, 0.0, lr).unwrap();
+    let res = step
+        .step(
+            &HostValue::f32(&x_shape, x.clone()),
+            &HostValue::i32(&[y.len()], y.clone()),
+            0,
+        )
+        .unwrap();
+    let got = step.theta().unwrap();
+
+    let spec = registry.validate_model(name).unwrap();
+    let oracle = ModelOracle::new(spec);
+    let (per, losses) = oracle.perex_grads(&theta, &Tensor::from_vec(&x_shape, x), &y);
+    let (gsum, norms) = clip_reduce(&per, clip);
+    let b = y.len() as f32;
+    for i in (0..theta.len()).step_by(61) {
+        let want = theta[i] - lr * gsum[i] / b;
+        assert!(
+            (got[i] - want).abs() < 1e-5,
+            "theta[{i}]: {} vs {want}",
+            got[i]
+        );
+    }
+    for (a, w) in res.norms.iter().zip(&norms) {
+        assert!((a - w).abs() < 1e-4, "norms {a} vs {w}");
+    }
+    let mean_loss = losses.iter().sum::<f32>() / b;
+    assert!((res.mean_loss - mean_loss).abs() < 1e-5);
+    assert_eq!(step.steps_run, 1);
+}
+
+#[test]
+fn step_noise_depends_on_seed_only() {
+    let registry = registry();
+    let name = "core_toy_crb_pallas_step_b4";
+    let (theta, x, y, x_shape) = random_problem(&registry, name, 25);
+    let xv = HostValue::f32(&x_shape, x);
+    let yv = HostValue::i32(&[y.len()], y);
+    let run = |seed: i32| {
+        let mut s = DeviceStep::new(&registry, name, &theta, 1.0, 1.0, 0.1).unwrap();
+        s.step(&xv, &yv, seed).unwrap();
+        s.theta().unwrap()
+    };
+    let a = run(1);
+    let b = run(1);
+    let c = run(2);
+    assert_eq!(a, b, "same seed must be bit-identical");
+    assert!(
+        a.iter().zip(&c).any(|(p, q)| (p - q).abs() > 1e-7),
+        "different seeds must differ"
+    );
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes_and_dtypes() {
+    let registry = registry();
+    let name = "core_toy_crb_grads_b4";
+    let meta = registry.manifest().get(name).unwrap().clone();
+    let p = meta.inputs[0].element_count();
+    // wrong arity
+    assert!(registry
+        .run(name, &[HostValue::f32(&[p], vec![0.0; p])])
+        .is_err());
+    // wrong shape
+    let bad_x = HostValue::f32(&[1, 3, 16, 16], vec![0.0; 3 * 16 * 16]);
+    let err = registry
+        .run(
+            name,
+            &[
+                HostValue::f32(&[p], vec![0.0; p]),
+                bad_x,
+                HostValue::i32(&[4], vec![0; 4]),
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("shape mismatch"), "{err}");
+    // wrong dtype for labels
+    let x_ok = HostValue::f32(&meta.inputs[1].shape, vec![0.0; meta.inputs[1].element_count()]);
+    let err = registry
+        .run(
+            name,
+            &[
+                HostValue::f32(&[p], vec![0.0; p]),
+                x_ok,
+                HostValue::f32(&[4], vec![0.0; 4]),
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("dtype mismatch"), "{err}");
+}
+
+#[test]
+fn missing_artifact_error_mentions_make() {
+    let registry = registry();
+    let err = registry
+        .load("not_a_real_artifact")
+        .err()
+        .expect("must fail")
+        .to_string();
+    assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn device_step_rejects_wrong_kinds_and_lengths() {
+    let registry = registry();
+    assert!(DeviceStep::new(&registry, "core_toy_crb_grads_b4", &[0.0; 10], 1.0, 1.0, 0.1)
+        .is_err());
+    let meta = registry.manifest().get("core_toy_crb_step_b4").unwrap();
+    let p = meta.inputs[0].element_count();
+    assert!(DeviceStep::new(&registry, "core_toy_crb_step_b4", &vec![0.0; p - 1], 1.0, 1.0, 0.1)
+        .is_err());
+}
+
+#[test]
+fn compile_cache_hits_are_fast() {
+    let registry = registry();
+    let name = "core_toy_multi_grads_b4";
+    registry.load(name).unwrap();
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 {
+        registry.load(name).unwrap();
+    }
+    assert!(
+        t0.elapsed().as_millis() < 100,
+        "cache lookups too slow: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(
+        registry.compile_log().iter().filter(|(n, _)| n == name).count(),
+        1,
+        "artifact compiled more than once"
+    );
+}

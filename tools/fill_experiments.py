@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Inject the bench harness's reports/*.md tables into EXPERIMENTS.md.
+
+The bench binaries write one markdown table per figure to reports/;
+EXPERIMENTS.md carries <!-- X --> placeholders for them. Run after
+`make bench`:
+
+    python tools/fill_experiments.py
+"""
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def read_tables(pattern):
+    out = []
+    for path in sorted(glob.glob(os.path.join(ROOT, "reports", pattern))):
+        with open(path) as f:
+            out.append(f.read().strip())
+    return "\n\n".join(out)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+
+    fills = {
+        "FIG1_TABLES": read_tables("fig1_*.md"),
+        "FIG2_TABLE": read_tables("fig2.md"),
+        "FIG3_TABLES": read_tables("fig3_*.md"),
+        "TABLE1_TABLE": read_tables("table1.md"),
+        "ABLATION_TABLE": read_tables("ablation.md"),
+        "E2E_RESULTS": read_tables("dp_training.md"),
+    }
+    missing = [k for k, v in fills.items() if not v]
+    for key, value in fills.items():
+        if not value:
+            continue
+        marker = f"<!-- {key} -->"
+        if marker in text:
+            text = text.replace(marker, value)
+        else:
+            # already filled: replace the previous injection block if
+            # bracketed, else leave untouched
+            pattern = re.compile(
+                rf"<!-- BEGIN {key} -->.*?<!-- END {key} -->", re.S
+            )
+            if pattern.search(text):
+                text = pattern.sub(value, text)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"filled {len(fills) - len(missing)} sections", end="")
+    print(f"; missing reports for: {missing}" if missing else "")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
