@@ -1,12 +1,13 @@
 //! End-to-end driver: differentially-private training of a CNN.
 //!
 //! This is the workload the paper's per-example gradients exist for
-//! (§1): a 4-conv-layer CNN trained with DP-SGD (Abadi et al. 2016) on
-//! a learnable synthetic 10-class dataset. Every step runs one fused
-//! XLA program — per-example grads via the crb strategy with the
-//! Pallas per-example-convolution kernel, per-example clipping via the
-//! Pallas clip-reduce kernel, gaussian noise, SGD update — driven by
-//! the rust coordinator with the RDP accountant tracking ε.
+//! (§1): a small CNN trained with DP-SGD (Abadi et al. 2016) on a
+//! learnable synthetic 10-class dataset. Every step computes
+//! per-example grads via the crb strategy, per-example clipping,
+//! gaussian noise and the SGD update — natively in rust on a clean
+//! checkout (`backend = "auto"`), or through the fused XLA step
+//! artifact when `make artifacts` + a real PJRT runtime are present —
+//! with the RDP accountant tracking ε either way.
 //!
 //!     cargo run --release --example dp_training
 //!     cargo run --release --example dp_training -- 400   # more steps
@@ -17,7 +18,6 @@
 use anyhow::Result;
 use grad_cnns::config::{Config, ExperimentConfig};
 use grad_cnns::coordinator::Trainer;
-use grad_cnns::runtime::Registry;
 
 fn main() -> Result<()> {
     let steps: usize = std::env::args()
@@ -28,6 +28,8 @@ fn main() -> Result<()> {
     let cfg = Config::parse(&format!(
         r#"
 [train]
+backend = "auto"
+strategy = "crb"
 step_artifact = "e2e_toy_crb_pallas_step_b16"
 init_artifact = "e2e_toy_init"
 eval_artifact = "e2e_toy_eval_b16"
@@ -37,6 +39,12 @@ lr = 0.03
 eval_every = 50
 log_every = 10
 seed = 42
+
+[model]
+n_layers = 3
+first_channels = 8
+kernel_size = 3
+input_shape = [3, 16, 16]
 
 [dp]
 clip_norm = 1.0
@@ -50,12 +58,12 @@ num_classes = 10
     ))?;
     let exp = ExperimentConfig::from_config(&cfg)?;
     println!(
-        "DP-SGD: {} steps, B={}, C={}, σ={}, artifact {}",
-        exp.steps, exp.batch_size, exp.clip_norm, exp.noise_multiplier, exp.step_artifact
+        "DP-SGD: {} steps, B={}, C={}, σ={}",
+        exp.steps, exp.batch_size, exp.clip_norm, exp.noise_multiplier
     );
 
-    let registry = Registry::open(&exp.artifacts_dir)?;
-    let mut trainer = Trainer::new(exp, registry)?;
+    let mut trainer = Trainer::from_config(exp)?;
+    println!("backend: {}", trainer.backend_name());
     let report = trainer.run(None)?;
 
     println!("\n--- summary -------------------------------------------");

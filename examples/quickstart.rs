@@ -1,66 +1,55 @@
-//! Quickstart: load an AOT artifact, compute per-example gradients.
+//! Quickstart: per-example gradients on a clean checkout.
 //!
-//!     make artifacts            # once (python, build time only)
 //!     cargo run --release --example quickstart
 //!
-//! This is the smallest end-to-end path through the stack: manifest →
-//! PJRT compile → execute the `crb` per-example-gradient program →
-//! per-example norms, checked against the pure-rust oracle.
+//! The smallest end-to-end path through the stack, zero artifacts
+//! needed: build a toy CNN spec → run the native `crb` strategy
+//! (Eq. 4 / Algorithm 2, im2col matmuls, threaded across the batch) →
+//! per-example gradient norms, cross-checked against the naive-loop
+//! oracle. The PJRT artifact path (`make artifacts` + a real PJRT
+//! runtime) is exercised by `repro selftest` when present.
 
 use anyhow::Result;
-use grad_cnns::models::ModelOracle;
+use grad_cnns::models::{ModelOracle, ModelSpec};
 use grad_cnns::rng::Xoshiro256pp;
-use grad_cnns::runtime::{HostValue, Registry};
+use grad_cnns::strategies::{Strategy, StrategyRunner};
 use grad_cnns::tensor::Tensor;
 
 fn main() -> Result<()> {
-    // 1. open the artifact registry (one PJRT CPU client)
-    let registry = Registry::open("artifacts")?;
-    println!("platform: {}", registry.platform());
+    // 1. a small CNN spec (same builder path the artifact manifest uses)
+    let spec = ModelSpec::toy_cnn(2, 8, 1.5, 3, "none", (3, 16, 16), 10)?;
+    let p = spec.param_count();
+    let b = 4usize;
+    println!("toy_cnn: P = {p} params, batch = {b}");
 
-    // 2. pick the paper's contribution: the chain-rule-based (crb)
-    //    per-example gradient program, here with the Pallas kernel
-    let name = "core_toy_crb_pallas_grads_b4";
-    let meta = registry.manifest().get(name)?.clone();
-    let p = meta.inputs[0].element_count();
-    let b = meta.inputs[2].element_count();
-    println!("artifact {name}: P = {p} params, batch = {b}");
-
-    // 3. random params + batch (the paper benches on random inputs too)
+    // 2. random params + batch (the paper benches on random inputs too)
+    let (c, h, w) = spec.input_shape;
     let mut rng = Xoshiro256pp::seed_from_u64(0);
     let mut theta = vec![0.0f32; p];
     rng.fill_gaussian(&mut theta, 0.1);
-    let mut x = vec![0.0f32; meta.inputs[1].element_count()];
+    let mut x = vec![0.0f32; b * c * h * w];
     rng.fill_gaussian(&mut x, 1.0);
     let y: Vec<i32> = (0..b).map(|_| rng.next_below(10) as i32).collect();
+    let xt = Tensor::from_vec(&[b, c, h, w], x);
 
-    // 4. run it: (theta, x, y) -> (per-example grads (B, P), losses (B,))
-    let out = registry.run(
-        name,
-        &[
-            HostValue::f32(&[p], theta.clone()),
-            HostValue::f32(&meta.inputs[1].shape, x.clone()),
-            HostValue::i32(&[b], y.clone()),
-        ],
-    )?;
-    let grads = out[0].as_f32()?;
-    let losses = out[1].as_f32()?;
+    // 3. run the paper's contribution: the chain-rule-based (crb)
+    //    per-example gradient strategy, natively
+    let runner = StrategyRunner::new(spec.clone(), Strategy::Crb, 0);
+    let (grads, losses) = runner.perex_grads(&theta, &xt, &y)?;
 
     println!("\nper-example gradient norms (what DP-SGD clips):");
     for i in 0..b {
-        let row = &grads[i * p..(i + 1) * p];
+        let row = &grads.data[i * p..(i + 1) * p];
         let norm = row.iter().map(|v| (v * v) as f64).sum::<f64>().sqrt();
-        println!("  example {i}: loss {:.4}  ‖g‖ {:.4}", losses[i], norm);
+        println!("  example {i}: loss {:.4}  ‖g‖ {norm:.4}", losses[i]);
     }
 
-    // 5. cross-check against the pure-rust oracle (Eq. 2 + Eq. 4)
-    let spec = registry.validate_model(name)?;
+    // 4. cross-check against the pure-rust oracle (naive loops)
     let oracle = ModelOracle::new(spec);
-    let xt = Tensor::from_vec(&meta.inputs[1].shape, x);
     let (want, _) = oracle.perex_grads(&theta, &xt, &y);
-    let diff = out[0].to_tensor()?.max_abs_diff(&want);
-    println!("\nmax |PJRT - rust oracle| = {diff:.2e}");
-    assert!(diff < 1e-4, "artifact disagrees with the oracle");
+    let diff = grads.max_abs_diff(&want);
+    println!("\nmax |crb - rust oracle| = {diff:.2e}");
+    assert!(diff < 1e-4, "crb disagrees with the oracle");
     println!("quickstart OK");
     Ok(())
 }

@@ -3,77 +3,114 @@
 //!
 //!     cargo run --release --example strategy_comparison
 //!
-//! Runs naive / multi / crb / crb_pallas on one batch, verifies
-//! four-way agreement (and agreement with the pure-rust oracle), then
-//! times each strategy over 20 batches — a miniature of Figure 1.
+//! Runs the native naive / multi / crb strategies on one batch,
+//! verifies agreement with the pure-rust oracle (and pairwise), then
+//! times each strategy over 20 batches — a miniature of Figure 1 that
+//! needs zero artifacts. When `make artifacts` has been run *and* a
+//! real PJRT runtime is linked, the same checks also run over the
+//! lowered artifacts.
 
 use anyhow::Result;
-use grad_cnns::bench::Protocol;
+use grad_cnns::bench::{measure, Protocol};
 use grad_cnns::experiments::time_artifact;
-use grad_cnns::models::ModelOracle;
+use grad_cnns::models::{ModelOracle, ModelSpec};
 use grad_cnns::rng::Xoshiro256pp;
 use grad_cnns::runtime::{HostValue, Registry};
+use grad_cnns::strategies::{Strategy, StrategyRunner};
 use grad_cnns::tensor::Tensor;
 
-const STRATEGIES: &[&str] = &["naive", "multi", "crb", "crb_pallas"];
-
 fn main() -> Result<()> {
-    let registry = Registry::open("artifacts")?;
-
-    // shared random problem
-    let probe = registry.manifest().get("core_toy_crb_grads_b4")?.clone();
-    let p = probe.inputs[0].element_count();
-    let b = probe.inputs[2].element_count();
+    // shared random problem on a small toy CNN
+    let spec = ModelSpec::toy_cnn(2, 8, 1.5, 3, "none", (3, 16, 16), 10)?;
+    let p = spec.param_count();
+    let b = 4usize;
+    let (c, h, w) = spec.input_shape;
     let mut rng = Xoshiro256pp::seed_from_u64(3);
     let mut theta = vec![0.0f32; p];
     rng.fill_gaussian(&mut theta, 0.1);
-    let mut x = vec![0.0f32; probe.inputs[1].element_count()];
+    let mut x = vec![0.0f32; b * c * h * w];
     rng.fill_gaussian(&mut x, 1.0);
     let y: Vec<i32> = (0..b).map(|_| rng.next_below(10) as i32).collect();
-    let inputs = [
-        HostValue::f32(&[p], theta.clone()),
-        HostValue::f32(&probe.inputs[1].shape, x.clone()),
-        HostValue::i32(&[b], y.clone()),
-    ];
+    let xt = Tensor::from_vec(&[b, c, h, w], x);
 
-    // the oracle's answer (pure rust, Eq. 2 + Eq. 4)
-    let spec = registry.validate_model("core_toy_crb_grads_b4")?;
-    let oracle = ModelOracle::new(spec);
-    let (want, _) = oracle.perex_grads(&theta, &Tensor::from_vec(&probe.inputs[1].shape, x), &y);
+    // the oracle's answer (pure rust, Eq. 2 + Eq. 4, naive loops)
+    let oracle = ModelOracle::new(spec.clone());
+    let (want, _) = oracle.perex_grads(&theta, &xt, &y);
 
-    println!("=== agreement (max |Δ| vs rust oracle) ===");
+    println!("=== native strategies: agreement (max |Δ| vs rust oracle) ===");
     let mut results = Vec::new();
-    for strat in STRATEGIES {
-        let name = format!("core_toy_{strat}_grads_b4");
-        let out = registry.run(&name, &inputs)?;
-        let diff = out[0].to_tensor()?.max_abs_diff(&want);
-        println!("  {strat:<12} Δ = {diff:.2e}");
-        assert!(diff < 1e-4, "{strat} disagrees with the oracle");
-        results.push(out[0].clone());
+    for strategy in Strategy::ALL {
+        let runner = StrategyRunner::new(spec.clone(), strategy, 0);
+        let (got, _) = runner.perex_grads(&theta, &xt, &y)?;
+        let diff = got.max_abs_diff(&want);
+        println!("  {:<12} Δ = {diff:.2e}", strategy.name());
+        assert!(diff < 1e-4, "{} disagrees with the oracle", strategy.name());
+        results.push(got);
     }
     // pairwise too: all strategies are *the same function*
     for i in 1..results.len() {
-        let d = results[i].to_tensor()?.max_abs_diff(&results[0].to_tensor()?);
+        let d = results[i].max_abs_diff(&results[0]);
         assert!(d < 1e-4, "strategies {i} vs 0 differ by {d}");
     }
     println!("  all strategies agree pairwise ✓");
 
-    println!("\n=== runtime, 20 batches (mean ± std over 3 reps) ===");
+    println!("\n=== native runtime, 20 batches (mean ± std over 3 reps) ===");
     let proto = Protocol { warmup: 1, reps: 3 };
-    let mut baseline = None;
-    for strat in STRATEGIES {
-        let name = format!("core_toy_{strat}_grads_b4");
-        let stats = time_artifact(&registry, &name, 20, proto, 5)?;
-        let speedup = baseline
-            .get_or_insert(stats.mean)
-            .max(f64::MIN_POSITIVE);
+    let mut baseline: Option<f64> = None;
+    for strategy in Strategy::ALL {
+        let runner = StrategyRunner::new(spec.clone(), strategy, 0);
+        let stats = measure(proto, || {
+            for _ in 0..20 {
+                runner
+                    .perex_grads(&theta, &xt, &y)
+                    .expect("strategy run failed");
+            }
+        });
+        let base = *baseline.get_or_insert(stats.mean);
         println!(
-            "  {strat:<12} {}   ({:.1}x vs naive)",
+            "  {:<12} {}   ({:.1}x vs naive)",
+            strategy.name(),
             stats.pm(),
-            speedup / stats.mean
+            base / stats.mean.max(f64::MIN_POSITIVE)
         );
-        registry.evict(&name);
     }
+
+    // optional: the PJRT artifacts, when available
+    match Registry::open("artifacts") {
+        Ok(registry) if registry.manifest().get("core_toy_crb_grads_b4").is_ok() => {
+            println!("\n=== PJRT artifacts: agreement + runtime ===");
+            let probe = registry.manifest().get("core_toy_crb_grads_b4")?.clone();
+            let pp = probe.inputs[0].element_count();
+            let bb = probe.inputs[2].element_count();
+            let mut rng = Xoshiro256pp::seed_from_u64(3);
+            let mut theta = vec![0.0f32; pp];
+            rng.fill_gaussian(&mut theta, 0.1);
+            let mut x = vec![0.0f32; probe.inputs[1].element_count()];
+            rng.fill_gaussian(&mut x, 1.0);
+            let y: Vec<i32> = (0..bb).map(|_| rng.next_below(10) as i32).collect();
+            let inputs = [
+                HostValue::f32(&[pp], theta.clone()),
+                HostValue::f32(&probe.inputs[1].shape, x.clone()),
+                HostValue::i32(&[bb], y.clone()),
+            ];
+            let spec = registry.validate_model("core_toy_crb_grads_b4")?;
+            let oracle = ModelOracle::new(spec);
+            let (want, _) =
+                oracle.perex_grads(&theta, &Tensor::from_vec(&probe.inputs[1].shape, x), &y);
+            for strat in ["naive", "multi", "crb", "crb_pallas"] {
+                let name = format!("core_toy_{strat}_grads_b4");
+                let out = registry.run(&name, &inputs)?;
+                let diff = out[0].to_tensor()?.max_abs_diff(&want);
+                let stats = time_artifact(&registry, &name, 20, proto, 5)?;
+                println!("  {strat:<12} Δ = {diff:.2e}   {}", stats.pm());
+                assert!(diff < 1e-4, "{strat} disagrees with the oracle");
+                registry.evict(&name);
+            }
+        }
+        Ok(_) => println!("\n(artifacts present but no core set; PJRT comparison skipped)"),
+        Err(_) => println!("\n(no artifacts/PJRT runtime; PJRT comparison skipped — native path is authoritative)"),
+    }
+
     println!("\nstrategy_comparison OK");
     Ok(())
 }

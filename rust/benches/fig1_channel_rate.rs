@@ -3,23 +3,21 @@
 //! `cargo bench --bench fig1_channel_rate` — set `BENCH_REPS`,
 //! `BENCH_BATCHES` (paper: 10 and 20) to tighten the measurement.
 
-use grad_cnns::bench::Protocol;
+use grad_cnns::bench::{env_usize, Protocol};
 use grad_cnns::experiments;
 use grad_cnns::runtime::Registry;
 
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
-}
-
 fn main() -> anyhow::Result<()> {
-    let registry = Registry::open(&std::env::var("ARTIFACTS_DIR").unwrap_or("artifacts".into()))?;
-    let proto = Protocol {
-        warmup: 1,
-        reps: env_usize("BENCH_REPS", 3),
+    let dir = std::env::var("ARTIFACTS_DIR").unwrap_or("artifacts".into());
+    let registry = match Registry::open(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fig1 bench skipped: {e:#}");
+            eprintln!("(needs `make artifacts`; try `cargo bench --bench native_strategies` instead)");
+            return Ok(());
+        }
     };
+    let proto = Protocol::from_env();
     let batches = env_usize("BENCH_BATCHES", 20);
     let tables = experiments::run_rate_sweep(&registry, "fig1", batches, proto)?;
     experiments::emit(&tables, "reports", "fig1")

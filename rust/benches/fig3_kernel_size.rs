@@ -1,23 +1,21 @@
 //! Paper Figure 3: Figure 1's sweep with kernel size 5 — larger
 //! kernels should favor crb.
 
-use grad_cnns::bench::Protocol;
+use grad_cnns::bench::{env_usize, Protocol};
 use grad_cnns::experiments;
 use grad_cnns::runtime::Registry;
 
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
-}
-
 fn main() -> anyhow::Result<()> {
-    let registry = Registry::open(&std::env::var("ARTIFACTS_DIR").unwrap_or("artifacts".into()))?;
-    let proto = Protocol {
-        warmup: 1,
-        reps: env_usize("BENCH_REPS", 3),
+    let dir = std::env::var("ARTIFACTS_DIR").unwrap_or("artifacts".into());
+    let registry = match Registry::open(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fig3 bench skipped: {e:#}");
+            eprintln!("(needs `make artifacts`; try `cargo bench --bench native_strategies` instead)");
+            return Ok(());
+        }
     };
+    let proto = Protocol::from_env();
     let batches = env_usize("BENCH_BATCHES", 20);
     let tables = experiments::run_rate_sweep(&registry, "fig3", batches, proto)?;
     experiments::emit(&tables, "reports", "fig3")

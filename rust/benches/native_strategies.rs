@@ -1,0 +1,16 @@
+//! Native strategy sweep — the artifact-free miniature of Figure 1.
+//!
+//! `cargo bench --bench native_strategies` — runs on a clean checkout
+//! (no `make artifacts` needed). Set `BENCH_REPS`, `BENCH_BATCHES`,
+//! `BENCH_THREADS` to tighten or parallelize the measurement.
+
+use grad_cnns::bench::{env_usize, Protocol};
+use grad_cnns::experiments;
+
+fn main() -> anyhow::Result<()> {
+    let proto = Protocol::from_env();
+    let batches = env_usize("BENCH_BATCHES", 20);
+    let threads = env_usize("BENCH_THREADS", 0);
+    let table = experiments::run_native_sweep(batches, proto, threads, 8)?;
+    experiments::emit(&[table], "reports", "native")
+}

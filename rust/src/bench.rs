@@ -70,6 +70,25 @@ impl Default for Protocol {
     }
 }
 
+/// Parse a usize from the environment (the bench binaries' knobs).
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+impl Protocol {
+    /// Read `BENCH_WARMUP` / `BENCH_REPS` from the environment
+    /// (paper protocol is 10 reps).
+    pub fn from_env() -> Protocol {
+        Protocol {
+            warmup: env_usize("BENCH_WARMUP", 1),
+            reps: env_usize("BENCH_REPS", 3),
+        }
+    }
+}
+
 /// Time `reps` invocations of `f` (seconds each), after warmup.
 pub fn measure<F: FnMut()>(proto: Protocol, mut f: F) -> Stats {
     for _ in 0..proto.warmup {

@@ -6,6 +6,7 @@
 //! through typed accessors with good error messages; [`ExperimentConfig`]
 //! is the typed view the trainer consumes.
 
+use crate::jsonx::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 
@@ -109,9 +110,24 @@ impl Config {
         self.entries.keys().map(|s| s.as_str())
     }
 
-    /// Override a value (CLI `--set section.key=value`).
+    /// Override a value (CLI `--key value`). Values that don't parse
+    /// as a TOML scalar are taken as bare strings, so
+    /// `--backend native` and `--step-artifact foo` work unquoted —
+    /// but near-misses of numbers/arrays/quoted strings (`--steps 10O`)
+    /// stay errors rather than silently becoming strings (which the
+    /// typed accessors would then ignore in favor of defaults).
     pub fn set(&mut self, key: &str, raw: &str) -> Result<()> {
-        let value = parse_value(raw)?;
+        let value = match parse_value(raw) {
+            Ok(v) => v,
+            Err(e) => {
+                if raw.starts_with(|c: char| c.is_ascii_digit())
+                    || raw.starts_with(&['-', '+', '.', '[', '"'][..])
+                {
+                    return Err(e.context(format!("bad value for `{key}`")));
+                }
+                CfgValue::Str(raw.to_string())
+            }
+        };
         self.entries.insert(key.to_string(), value);
         Ok(())
     }
@@ -200,9 +216,22 @@ fn parse_value(raw: &str) -> Result<CfgValue> {
 /// The trainer's typed view of a config file (see `configs/*.toml`).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
-    /// Artifact names (from the manifest) to drive.
-    pub step_artifact: String,
-    pub init_artifact: String,
+    /// Execution backend: `"native"` (pure rust), `"pjrt"` (AOT
+    /// artifacts), or `"auto"` (pjrt when a manifest + PJRT runtime
+    /// are present, native otherwise).
+    pub backend: String,
+    /// Native-backend per-example gradient strategy
+    /// (`naive` | `multi` | `crb`).
+    pub strategy: String,
+    /// Native-backend worker threads (0 = one per core).
+    pub threads: usize,
+    /// Native-backend model config (`[model]` section), in the same
+    /// dict shape the manifest uses (`models::ModelSpec::from_manifest`).
+    pub model: Value,
+    /// Artifact names (from the manifest); required only by the pjrt
+    /// backend.
+    pub step_artifact: Option<String>,
+    pub init_artifact: Option<String>,
     pub eval_artifact: Option<String>,
     pub artifacts_dir: String,
     /// Training hyper-parameters.
@@ -221,29 +250,140 @@ pub struct ExperimentConfig {
     pub log_every: usize,
 }
 
+/// Like the lenient `Config` accessors, but a key that is *present
+/// with the wrong type* is an error instead of silently yielding the
+/// default — the trainer must never ignore a value the user set.
+fn int_or(cfg: &Config, key: &str, default: i64) -> Result<i64> {
+    match cfg.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_i64()
+            .with_context(|| format!("config `{key}` must be an integer, got {v:?}")),
+    }
+}
+
+fn float_or(cfg: &Config, key: &str, default: f64) -> Result<f64> {
+    match cfg.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .with_context(|| format!("config `{key}` must be a number, got {v:?}")),
+    }
+}
+
+fn string_or(cfg: &Config, key: &str, default: &str) -> Result<String> {
+    match cfg.get(key) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .with_context(|| format!("config `{key}` must be a string, got {v:?}")),
+    }
+}
+
+fn opt_string(cfg: &Config, key: &str) -> Result<Option<String>> {
+    match cfg.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .with_context(|| format!("config `{key}` must be a string, got {v:?}")),
+    }
+}
+
 impl ExperimentConfig {
     pub fn from_config(cfg: &Config) -> Result<ExperimentConfig> {
+        let backend = string_or(cfg, "train.backend", "auto")?;
+        if !matches!(backend.as_str(), "auto" | "native" | "pjrt") {
+            bail!("train.backend must be auto | native | pjrt, got {backend:?}");
+        }
+        let step_artifact = opt_string(cfg, "train.step_artifact")?;
+        let init_artifact = opt_string(cfg, "train.init_artifact")?;
+        if backend == "pjrt" && step_artifact.is_none() {
+            bail!("config missing required string `train.step_artifact` (the pjrt backend drives a step artifact)");
+        }
         Ok(ExperimentConfig {
-            step_artifact: cfg.require_str("train.step_artifact")?,
-            init_artifact: cfg.require_str("train.init_artifact")?,
-            eval_artifact: cfg
-                .get("train.eval_artifact")
-                .and_then(|v| v.as_str())
-                .map(str::to_string),
-            artifacts_dir: cfg.str_or("train.artifacts_dir", "artifacts"),
-            steps: cfg.i64_or("train.steps", 200) as usize,
-            batch_size: cfg.i64_or("train.batch_size", 16) as usize,
-            lr: cfg.f64_or("train.lr", 0.05) as f32,
-            clip_norm: cfg.f64_or("dp.clip_norm", 1.0) as f32,
-            noise_multiplier: cfg.f64_or("dp.noise_multiplier", 1.1) as f32,
-            target_delta: cfg.f64_or("dp.target_delta", 1e-5),
-            dataset_size: cfg.i64_or("data.size", 2048) as usize,
-            num_classes: cfg.i64_or("data.num_classes", 10) as usize,
-            seed: cfg.i64_or("train.seed", 42) as u64,
-            eval_every: cfg.i64_or("train.eval_every", 50) as usize,
-            log_every: cfg.i64_or("train.log_every", 10) as usize,
+            backend,
+            strategy: string_or(cfg, "train.strategy", "crb")?,
+            threads: int_or(cfg, "train.threads", 0)?.max(0) as usize,
+            model: native_model_config(cfg)?,
+            step_artifact,
+            init_artifact,
+            eval_artifact: opt_string(cfg, "train.eval_artifact")?,
+            artifacts_dir: string_or(cfg, "train.artifacts_dir", "artifacts")?,
+            steps: int_or(cfg, "train.steps", 200)? as usize,
+            batch_size: int_or(cfg, "train.batch_size", 16)? as usize,
+            lr: float_or(cfg, "train.lr", 0.05)? as f32,
+            clip_norm: float_or(cfg, "dp.clip_norm", 1.0)? as f32,
+            noise_multiplier: float_or(cfg, "dp.noise_multiplier", 1.1)? as f32,
+            target_delta: float_or(cfg, "dp.target_delta", 1e-5)?,
+            dataset_size: int_or(cfg, "data.size", 2048)? as usize,
+            num_classes: int_or(cfg, "data.num_classes", 10)? as usize,
+            seed: int_or(cfg, "train.seed", 42)? as u64,
+            eval_every: int_or(cfg, "train.eval_every", 50)? as usize,
+            log_every: int_or(cfg, "train.log_every", 10)? as usize,
         })
     }
+}
+
+/// Assemble the native backend's model config dict from the `[model]`
+/// section (defaults give a small trainable toy CNN), in the exact
+/// shape the artifact manifest stores, so the same
+/// `ModelSpec::from_manifest` builder serves both backends. Uses the
+/// strict accessors: a mistyped `[model]` value errors rather than
+/// silently training the default architecture.
+fn native_model_config(cfg: &Config) -> Result<Value> {
+    let shape: Vec<f64> = match cfg.get("model.input_shape") {
+        None => vec![3.0, 16.0, 16.0],
+        Some(CfgValue::Arr(a)) => {
+            let v: Option<Vec<f64>> = a.iter().map(|x| x.as_f64()).collect();
+            let v = v.context("config `model.input_shape` entries must be numbers")?;
+            if v.len() != 3 {
+                bail!(
+                    "config `model.input_shape` must be [C, H, W], got {} entries",
+                    v.len()
+                );
+            }
+            v
+        }
+        Some(other) => bail!("config `model.input_shape` must be an array, got {other:?}"),
+    };
+    Ok(jsonx::obj(vec![
+        ("arch", jsonx::s(&string_or(cfg, "model.arch", "toy_cnn")?)),
+        (
+            "input_shape",
+            jsonx::arr(shape.into_iter().map(jsonx::num).collect()),
+        ),
+        (
+            "num_classes",
+            jsonx::num(int_or(cfg, "data.num_classes", 10)? as f64),
+        ),
+        (
+            "n_layers",
+            jsonx::num(int_or(cfg, "model.n_layers", 3)? as f64),
+        ),
+        (
+            "first_channels",
+            jsonx::num(int_or(cfg, "model.first_channels", 8)? as f64),
+        ),
+        (
+            "channel_rate",
+            jsonx::num(float_or(cfg, "model.channel_rate", 1.0)?),
+        ),
+        (
+            "kernel_size",
+            jsonx::num(int_or(cfg, "model.kernel_size", 3)? as f64),
+        ),
+        (
+            "pool_every",
+            jsonx::num(int_or(cfg, "model.pool_every", 2)? as f64),
+        ),
+        ("norm", jsonx::s(&string_or(cfg, "model.norm", "none")?)),
+        (
+            "width_mult",
+            jsonx::num(float_or(cfg, "model.width_mult", 0.25)?),
+        ),
+    ]))
 }
 
 #[cfg(test)]
@@ -302,8 +442,76 @@ name = "synthetic # not a comment"
     }
 
     #[test]
-    fn missing_required_key_errors() {
-        let c = Config::parse("[train]\ninit_artifact = \"x\"\n").unwrap();
+    fn pjrt_backend_requires_step_artifact() {
+        let c = Config::parse("[train]\nbackend = \"pjrt\"\ninit_artifact = \"x\"\n").unwrap();
+        let err = ExperimentConfig::from_config(&c).unwrap_err().to_string();
+        assert!(err.contains("step_artifact"), "{err}");
+    }
+
+    #[test]
+    fn native_backend_needs_no_artifacts() {
+        let c = Config::parse("[train]\nbackend = \"native\"\nsteps = 3\n").unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.backend, "native");
+        assert_eq!(e.step_artifact, None);
+        assert_eq!(e.strategy, "crb");
+        assert_eq!(e.threads, 0);
+        // default model config builds a valid spec
+        let spec = crate::models::ModelSpec::from_manifest(&e.model).unwrap();
+        assert_eq!(spec.arch, "toy_cnn");
+        assert_eq!(spec.input_shape, (3, 16, 16));
+        assert!(spec.param_count() > 0);
+    }
+
+    #[test]
+    fn model_section_overrides_native_model() {
+        let c = Config::parse(
+            "[train]\nbackend = \"native\"\n\
+             [model]\nn_layers = 2\nfirst_channels = 4\ninput_shape = [1, 12, 12]\n\
+             norm = \"instance\"\n\
+             [data]\nnum_classes = 5\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        let spec = crate::models::ModelSpec::from_manifest(&e.model).unwrap();
+        assert_eq!(spec.input_shape, (1, 12, 12));
+        assert_eq!(spec.num_classes, 5);
+        let convs = spec
+            .layers
+            .iter()
+            .filter(|l| matches!(l, crate::models::LayerSpec::Conv2d { .. }))
+            .count();
+        assert_eq!(convs, 2);
+        assert!(spec
+            .layers
+            .iter()
+            .any(|l| matches!(l, crate::models::LayerSpec::InstanceNorm { .. })));
+    }
+
+    #[test]
+    fn unknown_backend_rejected() {
+        let c = Config::parse("[train]\nbackend = \"gpu\"\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn wrong_typed_values_rejected_not_defaulted() {
+        // a present-but-mistyped value must error, never silently fall
+        // back to the default (e.g. `--steps ten` stored as a string)
+        let mut c = Config::parse("[train]\nsteps = 5\n").unwrap();
+        c.set("train.steps", "ten").unwrap(); // bare string accepted by set()
+        let err = ExperimentConfig::from_config(&c).unwrap_err().to_string();
+        assert!(err.contains("train.steps"), "{err}");
+        let c = Config::parse("[train]\nlr = \"fast\"\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+        let c = Config::parse("[train]\nbackend = 5\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+        // [model] section is strict too
+        let c = Config::parse("[model]\ninput_shape = 16\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+        let c = Config::parse("[model]\ninput_shape = [3, 16]\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+        let c = Config::parse("[model]\nn_layers = \"four\"\n").unwrap();
         assert!(ExperimentConfig::from_config(&c).is_err());
     }
 
@@ -314,6 +522,18 @@ name = "synthetic # not a comment"
         assert_eq!(c.get("train.steps").unwrap().as_i64(), Some(5));
         c.set("train.lr", "0.5").unwrap();
         assert_eq!(c.get("train.lr").unwrap().as_f64(), Some(0.5));
+        // bare strings (CLI values arrive unquoted)
+        c.set("train.backend", "native").unwrap();
+        assert_eq!(c.get("train.backend").unwrap().as_str(), Some("native"));
+        c.set("train.step_artifact", "e2e_toy_init").unwrap();
+        assert_eq!(
+            c.get("train.step_artifact").unwrap().as_str(),
+            Some("e2e_toy_init")
+        );
+        // numeric-looking typos must error, not silently become strings
+        assert!(c.set("train.steps", "10O").is_err());
+        assert!(c.set("train.lr", "1.l").is_err());
+        assert!(c.set("data.labels", "[1, 2").is_err());
     }
 
     #[test]

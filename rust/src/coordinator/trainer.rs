@@ -2,18 +2,20 @@
 //! per-example gradients exist for (§1: gradient clipping per Abadi et
 //! al. 2016).
 //!
-//! Everything heavy happens inside the step artifact (per-example
-//! grads → clip → noise → update, one XLA program); the trainer owns
-//! the things a program can't: the data order, the privacy ledger, the
-//! eval cadence, checkpoints, and the metrics the report needs.
+//! Everything numeric happens inside a [`Backend`] (per-example grads
+//! → clip → noise → update): the native pure-rust backend on a clean
+//! checkout, or the fused PJRT step artifact when `make artifacts` has
+//! run. The trainer owns the things a backend can't: the data order,
+//! the privacy ledger, the eval cadence, checkpoints, and the metrics
+//! the report needs.
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::data::{Batcher, Dataset, PatternedClasses, Sampling};
 use crate::metrics;
 use crate::privacy::DpSgdAccountant;
-use crate::runtime::{DeviceStep, HostValue, Registry};
-use anyhow::{bail, Context, Result};
+use crate::runtime::{self, Backend, PjrtBackend, Registry};
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 /// One logged training point.
@@ -82,11 +84,11 @@ impl TrainReport {
     }
 }
 
-/// The DP-SGD trainer. Drives a `step` artifact over a synthetic
-/// dataset, tracks privacy, evaluates, and checkpoints.
+/// The DP-SGD trainer. Drives a [`Backend`] over a synthetic dataset,
+/// tracks privacy, evaluates, and checkpoints.
 pub struct Trainer {
     cfg: ExperimentConfig,
-    registry: Registry,
+    backend: Box<dyn Backend>,
     dataset: Dataset,
     eval_set: Dataset,
     metrics: metrics::Registry,
@@ -98,9 +100,24 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Build the backend the config asks for (`train.backend`:
+    /// native / pjrt / auto) and wrap a trainer around it.
+    pub fn from_config(cfg: ExperimentConfig) -> Result<Trainer> {
+        let backend = runtime::open_backend(&cfg)?;
+        Self::with_backend(cfg, backend)
+    }
+
+    /// Drive an explicit PJRT registry (the pre-backend API, kept for
+    /// artifact-based callers and tests).
     pub fn new(cfg: ExperimentConfig, registry: Registry) -> Result<Trainer> {
+        let backend = PjrtBackend::new(registry, &cfg)?;
+        Self::with_backend(cfg, Box::new(backend))
+    }
+
+    /// Wrap a trainer around any backend.
+    pub fn with_backend(cfg: ExperimentConfig, backend: Box<dyn Backend>) -> Result<Trainer> {
         // The model spec tells us the input shape to synthesize.
-        let spec = registry.validate_model(&cfg.step_artifact)?;
+        let spec = backend.model();
         // one generation pass, then a train/eval split: the held-out
         // examples must come from the SAME class templates (same seed)
         // or eval measures a different task entirely.
@@ -130,7 +147,7 @@ impl Trainer {
         };
         Ok(Trainer {
             cfg,
-            registry,
+            backend,
             dataset,
             eval_set,
             metrics: metrics::Registry::default(),
@@ -144,43 +161,31 @@ impl Trainer {
         &self.metrics
     }
 
-    /// Initialize theta via the init artifact (layer-aware init stays
-    /// in jax; rust never re-implements it).
-    fn init_theta(&self) -> Result<Vec<f32>> {
-        let out = self.registry.run(
-            &self.cfg.init_artifact,
-            &[HostValue::scalar_i32(self.cfg.seed as i32)],
-        )?;
-        out.into_iter()
-            .next()
-            .context("init artifact returned nothing")?
-            .into_f32()
+    /// Which backend ended up selected ("native" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
-    fn eval(&self, theta: &[f32], step: usize) -> Result<Option<EvalPoint>> {
-        let Some(name) = &self.cfg.eval_artifact else {
+    /// Deterministic sweep over the whole eval set (full batches).
+    fn eval_point(
+        backend: &mut dyn Backend,
+        eval_set: &Dataset,
+        default_batch: usize,
+        step: usize,
+    ) -> Result<Option<EvalPoint>> {
+        if !backend.has_eval() {
             return Ok(None);
-        };
-        let meta = self.registry.manifest().get(name)?;
-        let b = meta.batch.context("eval artifact has no batch size")?;
-        // deterministic sweep over the whole eval set (full batches)
-        let n_batches = (self.eval_set.n / b).max(1);
-        let theta_v = HostValue::f32(&[theta.len()], theta.to_vec());
+        }
+        let b = backend.eval_batch().unwrap_or(default_batch).max(1);
+        let n_batches = (eval_set.n / b).max(1);
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         for bi in 0..n_batches {
             let idx: Vec<usize> = (bi * b..(bi + 1) * b).collect();
-            let (x, y) = self.eval_set.gather(&idx);
-            let out = self.registry.run(
-                name,
-                &[
-                    theta_v.clone(),
-                    HostValue::f32(&x.shape, x.data),
-                    HostValue::i32(&[y.len()], y),
-                ],
-            )?;
-            loss_sum += out[0].as_f32()?[0] as f64;
-            acc_sum += out[1].as_f32()?[0] as f64;
+            let (x, y) = eval_set.gather(&idx);
+            let (loss, acc) = backend.eval(&x, &y)?;
+            loss_sum += loss as f64;
+            acc_sum += acc as f64;
         }
         Ok(Some(EvalPoint {
             step,
@@ -194,29 +199,24 @@ impl Trainer {
     pub fn run(&mut self, resume: Option<Checkpoint>) -> Result<TrainReport> {
         let cfg = self.cfg.clone();
         let mut start_step = 0usize;
-        let theta0 = match resume {
+        match resume {
             Some(ck) => {
-                if ck.artifact != cfg.step_artifact {
+                let label = self.backend.step_label();
+                if ck.artifact != label {
                     bail!(
-                        "checkpoint is for artifact {:?}, config wants {:?}",
+                        "checkpoint is for artifact {:?}, this run wants {:?}",
                         ck.artifact,
-                        cfg.step_artifact
+                        label
                     );
                 }
                 start_step = ck.step;
-                ck.theta
+                self.backend.set_theta(&ck.theta)?;
             }
-            None => self.init_theta()?,
-        };
+            None => {
+                self.backend.init_theta(cfg.seed)?;
+            }
+        }
 
-        let mut step_exe = DeviceStep::new(
-            &self.registry,
-            &cfg.step_artifact,
-            &theta0,
-            cfg.clip_norm,
-            cfg.noise_multiplier,
-            cfg.lr,
-        )?;
         let q = cfg.batch_size as f64 / self.dataset.n as f64;
         let mut accountant = DpSgdAccountant::new(q, cfg.noise_multiplier as f64);
         if start_step > 0 {
@@ -245,14 +245,12 @@ impl Trainer {
         for step in start_step..cfg.steps {
             let idx = batcher.next_batch();
             let (x, y) = self.dataset.gather(&idx);
-            let xv = HostValue::f32(&x.shape, x.data);
-            let yv = HostValue::i32(&[y.len()], y);
             // per-step noise seed: deterministic, distinct from data seed
             let seed = (cfg.seed as i32)
                 .wrapping_mul(0x9e37)
                 .wrapping_add(step as i32);
             let ts = Instant::now();
-            let res = step_exe.step(&xv, &yv, seed)?;
+            let res = self.backend.step(&x, &y, seed as i64)?;
             step_hist.observe_secs(ts.elapsed().as_secs_f64());
             accountant.step(1);
             seen.add(res.norms.len() as u64);
@@ -288,7 +286,12 @@ impl Trainer {
                 report.losses.push(point);
             }
             if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-                if let Some(ev) = self.eval(&step_exe.theta()?, step + 1)? {
+                if let Some(ev) = Self::eval_point(
+                    self.backend.as_mut(),
+                    &self.eval_set,
+                    cfg.batch_size,
+                    step + 1,
+                )? {
                     if !self.quiet {
                         println!(
                             "eval @ {:>5}  loss {:.4}  acc {:.1}%",
@@ -304,8 +307,8 @@ impl Trainer {
                 if let Some(dir) = &self.checkpoint_dir {
                     Checkpoint {
                         step: step + 1,
-                        theta: step_exe.theta()?,
-                        artifact: cfg.step_artifact.clone(),
+                        theta: self.backend.theta()?,
+                        artifact: self.backend.step_label(),
                         seed: cfg.seed,
                     }
                     .save(&format!("{dir}/ckpt_{}", step + 1))?;
@@ -313,7 +316,12 @@ impl Trainer {
             }
         }
         // final eval regardless of cadence
-        if let Some(ev) = self.eval(&step_exe.theta()?, cfg.steps)? {
+        if let Some(ev) = Self::eval_point(
+            self.backend.as_mut(),
+            &self.eval_set,
+            cfg.batch_size,
+            cfg.steps,
+        )? {
             report.evals.push(ev);
         }
         report.wall_secs = t0.elapsed().as_secs_f64();

@@ -14,8 +14,11 @@
 //! autotuning by averaging over batches.
 
 use crate::bench::{measure, Protocol, Stats, Table};
+use crate::models::ModelSpec;
 use crate::rng::Xoshiro256pp;
 use crate::runtime::{HostValue, Registry};
+use crate::strategies::{Strategy, StrategyRunner};
+use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 
 /// Paper protocol: 20 batches per measurement.
@@ -215,6 +218,61 @@ pub fn run_ablation(registry: &Registry, n_batches: usize, proto: Protocol) -> R
         }
         table.push(rate, cells);
         eprintln!("  ablation rate {rate}: done");
+    }
+    Ok(table)
+}
+
+/// Native strategy sweep — the artifact-free miniature of Figure 1:
+/// channel-rate sweep, all three strategies through the native
+/// [`StrategyRunner`] (threaded, fast kernels for `crb`). Runs on a
+/// clean checkout; `repro bench-strategies` and the
+/// `native_strategies` bench binary both call into here.
+///
+/// Caveat for readers comparing against the paper's Figure 1: the
+/// native `naive` and `multi` strategies share the same (oracle)
+/// kernels and differ only in batching granularity, so those two
+/// columns track each other closely — the headline comparison here is
+/// crb's im2col-matmul kernels against both.
+pub fn run_native_sweep(
+    n_batches: usize,
+    proto: Protocol,
+    threads: usize,
+    batch: usize,
+) -> Result<Table> {
+    let mut table = Table::new(
+        &format!("NATIVE — channel-rate sweep, runtime for {n_batches} batches (B={batch})"),
+        &["channel rate", "naive (s)", "multi (s)", "crb (s)"],
+    );
+    for rate in [1.0f64, 2.0, 3.0] {
+        let spec = ModelSpec::toy_cnn(2, 8, rate, 3, "none", (3, 16, 16), 10)?;
+        let p = spec.param_count();
+        let (c, h, w) = spec.input_shape;
+        let mut rng = Xoshiro256pp::seed_from_u64(81);
+        let mut theta = vec![0.0f32; p];
+        rng.fill_gaussian(&mut theta, 0.1);
+        let mut batches = Vec::with_capacity(n_batches);
+        for _ in 0..n_batches {
+            let mut x = vec![0.0f32; batch * c * h * w];
+            rng.fill_gaussian(&mut x, 1.0);
+            let y: Vec<i32> = (0..batch)
+                .map(|_| rng.next_below(spec.num_classes as u64) as i32)
+                .collect();
+            batches.push((Tensor::from_vec(&[batch, c, h, w], x), y));
+        }
+        let mut cells = Vec::new();
+        for strategy in Strategy::ALL {
+            let runner = StrategyRunner::new(spec.clone(), strategy, threads);
+            let stats = measure(proto, || {
+                for (x, y) in &batches {
+                    runner
+                        .perex_grads(&theta, x, y)
+                        .expect("native bench step failed");
+                }
+            });
+            cells.push(stats.pm());
+        }
+        table.push(&format!("{rate:.1}"), cells);
+        eprintln!("  native rate {rate}: done");
     }
     Ok(table)
 }

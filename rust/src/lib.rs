@@ -11,13 +11,22 @@
 //!   orchestration ([`coordinator`]), the RDP privacy accountant
 //!   ([`privacy`]), the benchmark harness ([`bench`]) that regenerates
 //!   the paper's figures/tables, and every substrate those need.
-//! * **L2/L1 (python, build-time only)** — the CNN models, the three
-//!   per-example gradient strategies (`naive` / `multi` / `crb`), and
-//!   the Pallas kernels; lowered once by `make artifacts` to HLO text
-//!   which [`runtime`] loads and executes via the PJRT CPU client.
+//! * **Native backend (this crate)** — the three per-example gradient
+//!   strategies (`naive` / `multi` / `crb`) implemented directly in
+//!   rust ([`strategies`], [`runtime::native`]), multi-threaded across
+//!   the batch, with the paper's Algorithm-2 im2col matmul kernels in
+//!   [`tensor`]. This is the default execution path: `repro train`,
+//!   the strategy benches and the examples all run on a clean checkout
+//!   with zero artifacts.
+//! * **L2/L1 (python, build-time only, optional)** — the jax versions
+//!   of the same strategies plus the Pallas kernels; lowered once by
+//!   `make artifacts` to HLO text which [`runtime`] loads and executes
+//!   via a PJRT CPU client (`--backend pjrt`). The vendored `xla`
+//!   crate is a stub — swap in the real binding to enable this path.
 //!
-//! Python never runs on the request path: after `make artifacts`, the
-//! `repro` binary is self-contained.
+//! Python never runs on the request path: the `repro` binary is
+//! self-contained either way. Backend selection and the test modes are
+//! documented in the repository README.
 
 pub mod bench;
 pub mod check;
@@ -32,4 +41,5 @@ pub mod models;
 pub mod privacy;
 pub mod rng;
 pub mod runtime;
+pub mod strategies;
 pub mod tensor;

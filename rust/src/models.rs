@@ -10,7 +10,7 @@
 //! Any drift between the two builders is caught by the
 //! `param_count`-vs-manifest check in `runtime::Registry::validate`.
 
-use crate::jsonx::Value;
+use crate::jsonx::{self, Value};
 use crate::tensor::{self, ConvArgs, Tensor};
 use anyhow::{bail, Context, Result};
 
@@ -101,6 +101,36 @@ impl ModelSpec {
         self.layers.iter().map(|l| l.param_count()).sum()
     }
 
+    /// Flat-theta offset of each layer's parameter block (shared
+    /// packing order: weights then bias, layers in sequence).
+    pub fn param_offsets(&self) -> Vec<usize> {
+        let mut off = 0;
+        self.layers
+            .iter()
+            .map(|l| {
+                let o = off;
+                off += l.param_count();
+                o
+            })
+            .collect()
+    }
+
+    /// `(weight element count, bias element count)` of layer `li`.
+    pub fn layer_param_counts(&self, li: usize) -> (usize, usize) {
+        match &self.layers[li] {
+            LayerSpec::Conv2d {
+                in_ch,
+                out_ch,
+                kernel,
+                groups,
+                ..
+            } => (out_ch * (in_ch / groups) * kernel.0 * kernel.1, *out_ch),
+            LayerSpec::Linear { in_dim, out_dim } => (out_dim * in_dim, *out_dim),
+            LayerSpec::InstanceNorm { channels, .. } => (*channels, *channels),
+            _ => (0, 0),
+        }
+    }
+
     /// Forward-pass multiply-accumulate estimate for one example.
     pub fn flops_per_example(&self) -> u64 {
         let (mut c, mut h, mut w) = self.input_shape;
@@ -143,6 +173,41 @@ impl ModelSpec {
         }
         let _ = flat;
         total
+    }
+
+    /// Convenience builder for the toy CNN the examples, benches and
+    /// selftests share — one definition instead of copy-pasted config
+    /// dicts. Goes through the same path the manifest does
+    /// ([`ModelSpec::from_manifest`]), so it cannot drift from it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn toy_cnn(
+        n_layers: usize,
+        first_channels: usize,
+        channel_rate: f64,
+        kernel_size: usize,
+        norm: &str,
+        input_shape: (usize, usize, usize),
+        num_classes: usize,
+    ) -> Result<ModelSpec> {
+        let cfg = jsonx::obj(vec![
+            ("arch", jsonx::s("toy_cnn")),
+            ("n_layers", jsonx::num(n_layers as f64)),
+            ("first_channels", jsonx::num(first_channels as f64)),
+            ("channel_rate", jsonx::num(channel_rate)),
+            ("kernel_size", jsonx::num(kernel_size as f64)),
+            ("norm", jsonx::s(norm)),
+            (
+                "input_shape",
+                jsonx::arr(vec![
+                    jsonx::num(input_shape.0 as f64),
+                    jsonx::num(input_shape.1 as f64),
+                    jsonx::num(input_shape.2 as f64),
+                ]),
+            ),
+            ("num_classes", jsonx::num(num_classes as f64)),
+            ("pool_every", jsonx::num(2.0)),
+        ]);
+        Self::from_manifest(&cfg)
     }
 
     /// Build from a manifest model-config dict.
@@ -194,6 +259,9 @@ fn build_toy_cnn(
         .unwrap_or(1.0);
     let k = cfg.get("kernel_size").and_then(|v| v.as_usize()).unwrap_or(3);
     let pool_every = cfg.get("pool_every").and_then(|v| v.as_usize()).unwrap_or(2);
+    if pool_every == 0 {
+        bail!("toy_cnn pool_every must be >= 1 (got 0)");
+    }
     let norm = cfg.get("norm").and_then(|v| v.as_str()).unwrap_or("none");
     if !matches!(norm, "none" | "instance") {
         bail!("unknown norm {norm:?}");
@@ -534,14 +602,7 @@ impl ModelOracle {
 
         // walk backwards, filling per-layer grads into the flat matrix
         let mut pergrads = Tensor::zeros(&[bsz, p_total]);
-        let mut offsets = Vec::with_capacity(self.spec.layers.len());
-        {
-            let mut off = 0;
-            for l in &self.spec.layers {
-                offsets.push(off);
-                off += l.param_count();
-            }
-        }
+        let offsets = self.spec.param_offsets();
         for (li, l) in self.spec.layers.iter().enumerate().rev() {
             let s = &saved[li];
             match (l, s) {
@@ -752,6 +813,24 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The convenience builder must be indistinguishable from a
+    /// manifest config dict with the same fields.
+    #[test]
+    fn toy_cnn_builder_matches_manifest_path() {
+        let via_dict = ModelSpec::from_manifest(&toy_cfg(3, 1.5, 3)).unwrap();
+        let via_builder = ModelSpec::toy_cnn(3, 6, 1.5, 3, "none", (3, 16, 16), 10).unwrap();
+        assert_eq!(via_builder.layers, via_dict.layers);
+        assert_eq!(via_builder.param_count(), via_dict.param_count());
+        assert_eq!(via_builder.input_shape, via_dict.input_shape);
+        // norm wiring too
+        let with_norm = ModelSpec::toy_cnn(2, 6, 1.0, 3, "instance", (3, 16, 16), 10).unwrap();
+        assert!(with_norm
+            .layers
+            .iter()
+            .any(|l| matches!(l, LayerSpec::InstanceNorm { .. })));
+        assert!(ModelSpec::toy_cnn(2, 6, 1.0, 3, "bogus", (3, 16, 16), 10).is_err());
     }
 
     #[test]

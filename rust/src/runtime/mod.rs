@@ -1,26 +1,105 @@
-//! L3 ↔ L2 bridge: load and execute the AOT artifacts via PJRT.
+//! Execution backends: how a training step actually runs.
 //!
-//! `make artifacts` leaves HLO-text programs plus `manifest.json` in
-//! `artifacts/`; this module is everything the rust side needs to run
-//! them with python completely out of the loop:
+//! Two implementations of one [`Backend`] contract:
 //!
-//! * [`manifest`] — the typed view of `manifest.json`: per-artifact
-//!   input/output signatures, model config, parameter packing.
-//! * [`values`] — host-side tensors ([`HostValue`]) and their
-//!   marshalling to/from `xla::Literal`.
-//! * [`registry`] — the [`Registry`]: one PJRT CPU client, lazy
-//!   compilation of HLO text, an executable cache, signature
-//!   validation, and the two execution paths (literal for simplicity,
-//!   device-resident buffers for the hot loop).
+//! * **native** ([`native::NativeBackend`]) — the per-example gradient
+//!   step (forward, per-example backward via a `naive` / `multi` /
+//!   `crb` strategy, clip, noise, SGD update) in pure rust,
+//!   multi-threaded across the batch. Needs nothing beyond the crate:
+//!   the default on a clean checkout.
+//! * **pjrt** ([`registry::PjrtBackend`]) — the original path: AOT
+//!   artifacts lowered by `make artifacts` (HLO text + manifest),
+//!   compiled and executed through a PJRT CPU client.
+//!   - [`manifest`] — the typed view of `manifest.json`.
+//!   - [`values`] — host tensors ([`HostValue`]) and literal
+//!     marshalling.
+//!   - [`registry`] — compile cache + execution ([`Registry`],
+//!     [`DeviceStep`]).
 //!
-//! The interchange format is HLO *text*, not serialized protos —
-//! xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids; the
-//! text parser reassigns them (see `DESIGN.md` §6).
+//! [`open_backend`] picks per config: `backend = "native" | "pjrt" |
+//! "auto"`, where `auto` uses PJRT only when both a manifest and a
+//! real PJRT runtime are present (the vendored `xla` stub reports
+//! unavailable) and falls back to native otherwise.
 
 pub mod manifest;
+pub mod native;
 pub mod registry;
 pub mod values;
 
 pub use manifest::{ArtifactMeta, Manifest, PackEntry, TensorSig};
-pub use registry::{DeviceStep, Registry};
+pub use native::NativeBackend;
+pub use registry::{DeviceStep, PjrtBackend, Registry};
 pub use values::HostValue;
+
+use crate::config::ExperimentConfig;
+use crate::models::ModelSpec;
+use crate::strategies::Strategy;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// What one training step reports back to the trainer.
+#[derive(Clone, Debug)]
+pub struct StepOutcome {
+    pub mean_loss: f32,
+    /// Pre-clip per-example gradient norms (B,) — the quantity DP-SGD
+    /// clips; the trainer logs their distribution.
+    pub norms: Vec<f32>,
+}
+
+/// A training-step executor. The trainer owns data order, privacy
+/// accounting, eval cadence and checkpoints; the backend owns theta
+/// and everything numeric.
+pub trait Backend {
+    /// Short name for logs ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+    /// The model this backend trains (input shape, classes, params).
+    fn model(&self) -> &ModelSpec;
+    /// Label recorded in checkpoints; resuming into a different label
+    /// is rejected.
+    fn step_label(&self) -> String;
+    /// Initialize parameters (deterministic by seed); returns a copy.
+    fn init_theta(&mut self, seed: u64) -> Result<Vec<f32>>;
+    /// Current parameters (checkpointing, eval).
+    fn theta(&self) -> Result<Vec<f32>>;
+    /// Replace parameters (checkpoint restore).
+    fn set_theta(&mut self, theta: &[f32]) -> Result<()>;
+    /// One DP-SGD step on a minibatch; `seed` keys the gaussian noise.
+    fn step(&mut self, x: &Tensor, y: &[i32], seed: i64) -> Result<StepOutcome>;
+    /// Whether [`Backend::eval`] is available.
+    fn has_eval(&self) -> bool;
+    /// Fixed eval batch size, when the backend requires one (static
+    /// artifact shapes); `None` means any batch size works.
+    fn eval_batch(&self) -> Option<usize>;
+    /// `(mean loss, accuracy)` on one batch.
+    fn eval(&mut self, x: &Tensor, y: &[i32]) -> Result<(f32, f32)>;
+}
+
+/// Build the backend the config asks for.
+pub fn open_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
+    let manifest_present = Path::new(&cfg.artifacts_dir).join("manifest.json").exists();
+    let use_pjrt = match cfg.backend.as_str() {
+        "native" => false,
+        "pjrt" => true,
+        // auto only picks pjrt when it can actually drive it: manifest
+        // + real runtime + a configured step artifact; otherwise the
+        // documented fallback is native, never an error.
+        "auto" => manifest_present && xla::is_available() && cfg.step_artifact.is_some(),
+        other => bail!("unknown backend {other:?} (want native | pjrt | auto)"),
+    };
+    if use_pjrt {
+        let registry = Registry::open(&cfg.artifacts_dir)?;
+        Ok(Box::new(PjrtBackend::new(registry, cfg)?))
+    } else {
+        let spec = ModelSpec::from_manifest(&cfg.model)?;
+        let strategy = Strategy::parse(&cfg.strategy)?;
+        Ok(Box::new(NativeBackend::new(
+            spec,
+            strategy,
+            cfg.threads,
+            cfg.clip_norm,
+            cfg.noise_multiplier,
+            cfg.lr,
+        )))
+    }
+}

@@ -14,7 +14,10 @@
 
 use super::manifest::{ArtifactMeta, Manifest};
 use super::values::HostValue;
+use super::{Backend, StepOutcome};
+use crate::config::ExperimentConfig;
 use crate::models::ModelSpec;
+use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -285,5 +288,146 @@ impl DeviceStep {
         }
         self.theta = HostValue::f32(&[p], theta.to_vec()).to_literal()?;
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PjrtBackend: the artifact path behind the Backend trait
+// ---------------------------------------------------------------------------
+
+/// [`Backend`] implementation that drives the AOT artifacts: the step
+/// artifact through [`DeviceStep`], init/eval through [`Registry::run`].
+pub struct PjrtBackend {
+    registry: Registry,
+    step: DeviceStep,
+    spec: ModelSpec,
+    step_name: String,
+    init_artifact: Option<String>,
+    eval_artifact: Option<String>,
+    eval_batch: Option<usize>,
+    /// Host copy of theta for eval sweeps; invalidated whenever the
+    /// device-side theta changes, so an eval sweep of many batches
+    /// downloads the parameters once, not per batch.
+    theta_host: Option<HostValue>,
+}
+
+impl PjrtBackend {
+    pub fn new(registry: Registry, cfg: &ExperimentConfig) -> Result<PjrtBackend> {
+        let step_name = cfg
+            .step_artifact
+            .clone()
+            .context("config missing `train.step_artifact` (required by the pjrt backend)")?;
+        let spec = registry.validate_model(&step_name)?;
+        let p = registry.manifest().get(&step_name)?.inputs[0].element_count();
+        let step = DeviceStep::new(
+            &registry,
+            &step_name,
+            &vec![0.0f32; p],
+            cfg.clip_norm,
+            cfg.noise_multiplier,
+            cfg.lr,
+        )?;
+        let eval_batch = match &cfg.eval_artifact {
+            Some(name) => Some(
+                registry
+                    .manifest()
+                    .get(name)?
+                    .batch
+                    .context("eval artifact has no batch size")?,
+            ),
+            None => None,
+        };
+        Ok(PjrtBackend {
+            registry,
+            step,
+            spec,
+            step_name,
+            init_artifact: cfg.init_artifact.clone(),
+            eval_artifact: cfg.eval_artifact.clone(),
+            eval_batch,
+            theta_host: None,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn model(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn step_label(&self) -> String {
+        self.step_name.clone()
+    }
+
+    /// Layer-aware init stays in jax: run the init artifact.
+    fn init_theta(&mut self, seed: u64) -> Result<Vec<f32>> {
+        let name = self
+            .init_artifact
+            .clone()
+            .context("config missing `train.init_artifact` (required by the pjrt backend)")?;
+        let out = self
+            .registry
+            .run(&name, &[HostValue::scalar_i32(seed as i32)])?;
+        let theta = out
+            .into_iter()
+            .next()
+            .context("init artifact returned nothing")?
+            .into_f32()?;
+        self.step.set_theta(&theta)?;
+        self.theta_host = None;
+        Ok(theta)
+    }
+
+    fn theta(&self) -> Result<Vec<f32>> {
+        self.step.theta()
+    }
+
+    fn set_theta(&mut self, theta: &[f32]) -> Result<()> {
+        self.theta_host = None;
+        self.step.set_theta(theta)
+    }
+
+    fn step(&mut self, x: &Tensor, y: &[i32], seed: i64) -> Result<StepOutcome> {
+        let xv = HostValue::f32(&x.shape, x.data.clone());
+        let yv = HostValue::i32(&[y.len()], y.to_vec());
+        let res = self.step.step(&xv, &yv, seed as i32)?;
+        self.theta_host = None;
+        Ok(StepOutcome {
+            mean_loss: res.mean_loss,
+            norms: res.norms,
+        })
+    }
+
+    fn has_eval(&self) -> bool {
+        self.eval_artifact.is_some()
+    }
+
+    fn eval_batch(&self) -> Option<usize> {
+        self.eval_batch
+    }
+
+    fn eval(&mut self, x: &Tensor, y: &[i32]) -> Result<(f32, f32)> {
+        let name = self
+            .eval_artifact
+            .clone()
+            .context("no eval artifact configured")?;
+        if self.theta_host.is_none() {
+            let theta = self.step.theta()?;
+            self.theta_host = Some(HostValue::f32(&[theta.len()], theta));
+        }
+        let theta_v = self.theta_host.as_ref().unwrap().clone();
+        let out = self.registry.run(
+            &name,
+            &[
+                theta_v,
+                HostValue::f32(&x.shape, x.data.clone()),
+                HostValue::i32(&[y.len()], y.to_vec()),
+            ],
+        )?;
+        Ok((out[0].as_f32()?[0], out[1].as_f32()?[0]))
     }
 }

@@ -1,16 +1,20 @@
-//! Pure-rust dense tensor + CNN math — the independent numerics oracle.
+//! Pure-rust dense tensor + CNN math: the numerics oracle *and* the
+//! native backend's fast kernels.
 //!
-//! This module re-implements, in plain rust, everything the L2 jax
-//! programs compute: the forward CNN, the backward pass, and the
-//! paper's per-example gradient equations (Eq. 2 for dense layers,
-//! Eq. 4 / Algorithm 2 for convolutions). The integration tests run
-//! the AOT artifacts through PJRT and check them against this module —
-//! an end-to-end cross-language, cross-framework agreement check, the
-//! same role PyTorch's autograd played for the paper's implementation.
+//! Two tiers live here, deliberately side by side:
 //!
-//! It is an *oracle*, so the code optimizes for obviousness: explicit
-//! index arithmetic, no blocking, no unsafe. The hot path lives in the
-//! lowered XLA artifacts, not here.
+//! * **Oracle tier** (`conv2d`, `perex_conv2d_grad`, ...): explicit
+//!   index arithmetic, f64 accumulators, no blocking, no unsafe. This
+//!   is the ground truth that both the PJRT artifacts and the native
+//!   backend are tested against, the role PyTorch's autograd played
+//!   for the paper's implementation.
+//! * **Fast tier** (`matmul*`, `im2col_single`, `conv2d_im2col`,
+//!   `perex_conv2d_grad_im2col`, `conv2d_grad_input_im2col`): the
+//!   paper's Algorithm-2 formulation — convolutions and their
+//!   per-example gradients as reshaped matrix products over im2col
+//!   patch matrices, with cache-blocked f32 matmuls. The native `crb`
+//!   strategy (`strategies.rs`) is built from these; property tests
+//!   pin each fast kernel to its oracle twin within 1e-4.
 
 /// A dense, row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -507,6 +511,264 @@ pub fn clip_reduce(g: &Tensor, clip: f32) -> (Vec<f32>, Vec<f32>) {
     (sum, norms)
 }
 
+// ---------------------------------------------------------------------------
+// Fast tier: cache-blocked matmuls + im2col convolution kernels
+// ---------------------------------------------------------------------------
+
+/// `C (m×n) += A (m×k) · B (k×n)` — all row-major, cache-blocked over
+/// `k` and `n` so the innermost loop streams contiguous rows of `B`
+/// and `C` (autovectorizer-friendly, no unsafe).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    const KC: usize = 256;
+    const NC: usize = 512;
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        for j0 in (0..n).step_by(NC) {
+            let j1 = (j0 + NC).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + j0..i * n + j1];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    let brow = &b[kk * n + j0..kk * n + j1];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * *bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C (m×n) += A (m×k) · Bᵀ` with `B` stored row-major as `(n×k)`:
+/// every product is a dot of two contiguous rows, blocked over `k`.
+pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    const KC: usize = 1024;
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        for i in 0..m {
+            let arow = &a[i * k + k0..i * k + k1];
+            for j in 0..n {
+                let brow = &b[j * k + k0..j * k + k1];
+                let mut acc = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow) {
+                    acc += *av * *bv;
+                }
+                c[i * n + j] += acc;
+            }
+        }
+    }
+}
+
+/// `C (m×n) += Aᵀ · B` with `A` stored row-major as `(k×m)` and `B`
+/// as `(k×n)`: a sequence of rank-1 updates, blocked over `n`.
+pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    const NC: usize = 512;
+    for j0 in (0..n).step_by(NC) {
+        let j1 = (j0 + NC).min(n);
+        for kk in 0..k {
+            let arow = &a[kk * m..(kk + 1) * m];
+            let brow = &b[kk * n + j0..kk * n + j1];
+            for i in 0..m {
+                let av = arow[i];
+                let crow = &mut c[i * n + j0..i * n + j1];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * *bv;
+                }
+            }
+        }
+    }
+}
+
+/// im2col for one example: the `(C·KH·KW, H'·W')` patch matrix whose
+/// row `(c, ky, kx)` holds, for every output position, the input pixel
+/// that kernel tap touches (0 where padding reaches outside). This is
+/// the reshape at the heart of Algorithm 2: with it, the forward conv,
+/// the per-example kernel gradient (Eq. 4) and the input gradient all
+/// become matrix products.
+pub fn im2col_single(
+    x: &Tensor,
+    b: usize,
+    kh: usize,
+    kw: usize,
+    args: ConvArgs,
+) -> (Vec<f32>, usize, usize) {
+    let (c, h, wd) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (ho, wo) = args.out_hw(h, wd, kh, kw);
+    let (ph, pw) = args.padding;
+    let howo = ho * wo;
+    let mut cols = vec![0.0f32; c * kh * kw * howo];
+    for ci in 0..c {
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let r = (ci * kh + ky) * kw + kx;
+                let dst = &mut cols[r * howo..(r + 1) * howo];
+                for ty in 0..ho {
+                    let iy = ty * args.stride.0 + ky * args.dilation.0;
+                    if iy < ph || iy - ph >= h {
+                        continue;
+                    }
+                    let src_base = ((b * c + ci) * h + (iy - ph)) * wd;
+                    for tx in 0..wo {
+                        let ix = tx * args.stride.1 + kx * args.dilation.1;
+                        if ix < pw || ix - pw >= wd {
+                            continue;
+                        }
+                        dst[ty * wo + tx] = x.data[src_base + ix - pw];
+                    }
+                }
+            }
+        }
+    }
+    (cols, ho, wo)
+}
+
+/// Inverse of [`im2col_single`] for gradients: scatter-add a
+/// `(C·KH·KW, H'·W')` patch-matrix gradient back to an input-shaped
+/// `(C, H, W)` gradient for one example.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im_single(
+    dcols: &[f32],
+    c: usize,
+    h: usize,
+    wd: usize,
+    kh: usize,
+    kw: usize,
+    ho: usize,
+    wo: usize,
+    args: ConvArgs,
+) -> Vec<f32> {
+    let (ph, pw) = args.padding;
+    let howo = ho * wo;
+    debug_assert_eq!(dcols.len(), c * kh * kw * howo);
+    let mut dx = vec![0.0f32; c * h * wd];
+    for ci in 0..c {
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let r = (ci * kh + ky) * kw + kx;
+                let src = &dcols[r * howo..(r + 1) * howo];
+                for ty in 0..ho {
+                    let iy = ty * args.stride.0 + ky * args.dilation.0;
+                    if iy < ph || iy - ph >= h {
+                        continue;
+                    }
+                    let dst_base = (ci * h + (iy - ph)) * wd;
+                    for tx in 0..wo {
+                        let ix = tx * args.stride.1 + kx * args.dilation.1;
+                        if ix < pw || ix - pw >= wd {
+                            continue;
+                        }
+                        dx[dst_base + ix - pw] += src[ty * wo + tx];
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Forward conv via im2col + blocked matmul — same contract (shapes,
+/// groups, bias) as [`conv2d`], checked against it by property tests.
+pub fn conv2d_im2col(x: &Tensor, w: &Tensor, bias: Option<&[f32]>, args: ConvArgs) -> Tensor {
+    let (bsz, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (d, cg, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(c / args.groups, cg, "group/channel mismatch");
+    assert_eq!(d % args.groups, 0);
+    let dg = d / args.groups;
+    let (ho, wo) = args.out_hw(h, wd, kh, kw);
+    let howo = ho * wo;
+    let rows_g = cg * kh * kw;
+    let mut y = Tensor::zeros(&[bsz, d, ho, wo]);
+    for b in 0..bsz {
+        let (cols, _, _) = im2col_single(x, b, kh, kw, args);
+        for g in 0..args.groups {
+            let wslice = &w.data[g * dg * rows_g..(g + 1) * dg * rows_g];
+            let colsg = &cols[g * rows_g * howo..(g + 1) * rows_g * howo];
+            let yslice = &mut y.data[(b * d + g * dg) * howo..(b * d + (g + 1) * dg) * howo];
+            matmul(wslice, colsg, yslice, dg, rows_g, howo);
+        }
+        if let Some(bv) = bias {
+            for dd in 0..d {
+                let base = (b * d + dd) * howo;
+                for t in 0..howo {
+                    y.data[base + t] += bv[dd];
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Per-example kernel gradient (Eq. 4) as Algorithm 2 states it: for
+/// each example, `dW[b] = dy[b] · im2col(x[b])ᵀ` — one blocked matmul
+/// per group. Output layout matches [`perex_conv2d_grad`].
+pub fn perex_conv2d_grad_im2col(
+    x: &Tensor,
+    dy: &Tensor,
+    kh: usize,
+    kw: usize,
+    args: ConvArgs,
+) -> Tensor {
+    let (bsz, c) = (x.shape[0], x.shape[1]);
+    let (d, hp, wp) = (dy.shape[1], dy.shape[2], dy.shape[3]);
+    let cg = c / args.groups;
+    let dg = d / args.groups;
+    let rows_g = cg * kh * kw;
+    let howo = hp * wp;
+    let mut out = Tensor::zeros(&[bsz, d, cg, kh, kw]);
+    for b in 0..bsz {
+        let (cols, ho, wo) = im2col_single(x, b, kh, kw, args);
+        debug_assert_eq!((ho, wo), (hp, wp), "dy spatial dims disagree with conv output");
+        for g in 0..args.groups {
+            let dyg = &dy.data[(b * d + g * dg) * howo..(b * d + (g + 1) * dg) * howo];
+            let colsg = &cols[g * rows_g * howo..(g + 1) * rows_g * howo];
+            let og = &mut out.data[(b * d + g * dg) * rows_g..(b * d + (g + 1) * dg) * rows_g];
+            matmul_nt(dyg, colsg, og, dg, howo, rows_g);
+        }
+    }
+    out
+}
+
+/// Input gradient via `Wᵀ · dy` into patch space, then col2im — same
+/// contract as [`conv2d_grad_input`].
+pub fn conv2d_grad_input_im2col(
+    dy: &Tensor,
+    w: &Tensor,
+    h: usize,
+    wd: usize,
+    args: ConvArgs,
+) -> Tensor {
+    let (bsz, d, hp, wp) = (dy.shape[0], dy.shape[1], dy.shape[2], dy.shape[3]);
+    let (cg, kh, kw) = (w.shape[1], w.shape[2], w.shape[3]);
+    let c = cg * args.groups;
+    let dg = d / args.groups;
+    let rows_g = cg * kh * kw;
+    let howo = hp * wp;
+    let ex = c * h * wd;
+    let mut dx = Tensor::zeros(&[bsz, c, h, wd]);
+    for b in 0..bsz {
+        let mut dcols = vec![0.0f32; c * kh * kw * howo];
+        for g in 0..args.groups {
+            let wslice = &w.data[g * dg * rows_g..(g + 1) * dg * rows_g];
+            let dyg = &dy.data[(b * d + g * dg) * howo..(b * d + (g + 1) * dg) * howo];
+            let dcolsg = &mut dcols[g * rows_g * howo..(g + 1) * rows_g * howo];
+            matmul_tn(wslice, dyg, dcolsg, rows_g, dg, howo);
+        }
+        let dxb = col2im_single(&dcols, c, h, wd, kh, kw, hp, wp, args);
+        dx.data[b * ex..(b + 1) * ex].copy_from_slice(&dxb);
+    }
+    dx
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -830,6 +1092,110 @@ mod tests {
         assert!((norms[1] - 0.5).abs() < 1e-6);
         assert!((sum[0] - (0.6 + 0.3)).abs() < 1e-6);
         assert!((sum[1] - (0.8 + 0.4)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_variants_agree_with_reference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(20);
+        let (m, k, n) = (7, 13, 9);
+        let a = randn(&mut rng, &[m, k]);
+        let b = randn(&mut rng, &[k, n]);
+        // reference: plain triple loop in f32 (same arithmetic, any order)
+        let mut want = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a.data[i * k + kk] * b.data[kk * n + j];
+                }
+                want[i * n + j] = acc;
+            }
+        }
+        let mut c = vec![0.0f32; m * n];
+        matmul(&a.data, &b.data, &mut c, m, k, n);
+        for (got, w) in c.iter().zip(&want) {
+            assert!((got - w).abs() < 1e-4, "{got} vs {w}");
+        }
+        // A·Bᵀ with B pre-transposed equals A·B
+        let mut bt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b.data[kk * n + j];
+            }
+        }
+        let mut c = vec![0.0f32; m * n];
+        matmul_nt(&a.data, &bt, &mut c, m, k, n);
+        for (got, w) in c.iter().zip(&want) {
+            assert!((got - w).abs() < 1e-4);
+        }
+        // Aᵀ·B with A pre-transposed equals A·B
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a.data[i * k + kk];
+            }
+        }
+        let mut c = vec![0.0f32; m * n];
+        matmul_tn(&at, &b.data, &mut c, m, k, n);
+        for (got, w) in c.iter().zip(&want) {
+            assert!((got - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_accumulates_into_c() {
+        let a = [1.0f32, 0.0, 0.0, 1.0];
+        let b = [2.0f32, 3.0, 4.0, 5.0];
+        let mut c = [10.0f32, 10.0, 10.0, 10.0];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [12.0, 13.0, 14.0, 15.0]);
+    }
+
+    /// The fast conv kernels must match their oracle twins over a grid
+    /// of stride/padding/dilation/groups settings.
+    #[test]
+    fn im2col_kernels_match_oracle() {
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        for args in [
+            ConvArgs::default(),
+            ConvArgs { stride: (2, 1), ..Default::default() },
+            ConvArgs { padding: (1, 2), ..Default::default() },
+            ConvArgs { dilation: (2, 1), ..Default::default() },
+            ConvArgs { groups: 2, stride: (1, 2), padding: (1, 0), ..Default::default() },
+        ] {
+            let (bsz, c, h, wd, d, kh, kw) = (2, 4, 7, 6, 6, 3, 2);
+            let x = randn(&mut rng, &[bsz, c, h, wd]);
+            let w = randn(&mut rng, &[d, c / args.groups, kh, kw]);
+            let bias: Vec<f32> = (0..d).map(|i| i as f32 * 0.1).collect();
+            let (ho, wo) = args.out_hw(h, wd, kh, kw);
+            let dy = randn(&mut rng, &[bsz, d, ho, wo]);
+
+            let yf = conv2d_im2col(&x, &w, Some(&bias), args);
+            let yn = conv2d(&x, &w, Some(&bias), args);
+            assert!(yf.max_abs_diff(&yn) < 1e-4, "forward {args:?}");
+
+            let gf = perex_conv2d_grad_im2col(&x, &dy, kh, kw, args);
+            let gn = perex_conv2d_grad(&x, &dy, kh, kw, args);
+            assert!(gf.max_abs_diff(&gn) < 1e-4, "weight grad {args:?}");
+
+            let df = conv2d_grad_input_im2col(&dy, &w, h, wd, args);
+            let dn = conv2d_grad_input(&dy, &w, h, wd, args);
+            assert!(df.max_abs_diff(&dn) < 1e-4, "input grad {args:?}");
+        }
+    }
+
+    #[test]
+    fn im2col_identity_conv() {
+        // 1x1 kernel, identity weight: cols == flattened input and the
+        // fast conv reproduces the input exactly.
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        let x = randn(&mut rng, &[1, 1, 3, 3]);
+        let (cols, ho, wo) = im2col_single(&x, 0, 1, 1, ConvArgs::default());
+        assert_eq!((ho, wo), (3, 3));
+        assert_eq!(cols, x.data);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv2d_im2col(&x, &w, None, ConvArgs::default());
+        assert_eq!(y.data, x.data);
     }
 
     #[test]

@@ -1,0 +1,22 @@
+//! Shared helpers for the artifact-dependent integration suites.
+//! (`tests/common/` is not itself a test target; each suite pulls
+//! this in with `mod common;`.)
+
+use grad_cnns::runtime::Registry;
+
+/// Skip guard: true only when the lowered artifacts and the PJRT
+/// runtime are both usable. Logs why not, so skips are visible in
+/// `cargo test -- --nocapture`.
+pub fn pjrt_ready() -> bool {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json not present (run `make artifacts`)");
+        return false;
+    }
+    match Registry::open("artifacts") {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("SKIP: PJRT registry unavailable: {e:#}");
+            false
+        }
+    }
+}

@@ -1,6 +1,14 @@
 //! Integration: the coordinator over real artifacts — training loop,
 //! checkpoint/resume, and the dynamic-batching gradient service.
+//!
+//! Requires `make artifacts` and a real PJRT runtime; otherwise every
+//! test here SKIPS with a logged reason. The native-backend versions
+//! of the trainer tests live in `tests/native_backend.rs` and run on
+//! any checkout.
 
+mod common;
+
+use common::pjrt_ready;
 use grad_cnns::config::{Config, ExperimentConfig};
 use grad_cnns::coordinator::{
     Checkpoint, GradRequest, ServiceConfig, ServiceHandle, Trainer,
@@ -38,6 +46,9 @@ num_classes = 10
 
 #[test]
 fn trainer_runs_and_accounts() {
+    if !pjrt_ready() {
+        return;
+    }
     let registry = Registry::open("artifacts").unwrap();
     let mut trainer = Trainer::new(exp_config(6, 1.1), registry).unwrap();
     trainer.quiet = true;
@@ -57,6 +68,9 @@ fn trainer_runs_and_accounts() {
 
 #[test]
 fn trainer_sigma_zero_learns() {
+    if !pjrt_ready() {
+        return;
+    }
     // with no DP noise and generous clip the toy model must make
     // progress on the separable synthetic dataset
     let registry = Registry::open("artifacts").unwrap();
@@ -75,6 +89,9 @@ fn trainer_sigma_zero_learns() {
 
 #[test]
 fn checkpoint_resume_is_bit_exact() {
+    if !pjrt_ready() {
+        return;
+    }
     // train 6 steps straight vs 3 + checkpoint + resume 3: identical
     // parameters (data order replayed, noise seeded per step index).
     let straight_dir = std::env::temp_dir().join("grad_cnns_resume_straight");
@@ -112,6 +129,9 @@ fn checkpoint_resume_is_bit_exact() {
 
 #[test]
 fn resume_wrong_artifact_rejected() {
+    if !pjrt_ready() {
+        return;
+    }
     let registry = Registry::open("artifacts").unwrap();
     let mut t = Trainer::new(exp_config(2, 1.0), registry).unwrap();
     t.quiet = true;
@@ -135,6 +155,9 @@ fn resume_wrong_artifact_rejected() {
 
 #[test]
 fn service_end_to_end_norms_match_direct_run() {
+    if !pjrt_ready() {
+        return;
+    }
     // submit single examples; the service batches them; answers must
     // equal a direct whole-batch execution of the same artifact.
     let registry = Registry::open("artifacts").unwrap();
@@ -207,6 +230,9 @@ fn service_end_to_end_norms_match_direct_run() {
 
 #[test]
 fn service_rejects_nongrads_artifact() {
+    if !pjrt_ready() {
+        return;
+    }
     let err = ServiceHandle::start(
         ServiceConfig {
             artifact: "core_toy_init".into(),
@@ -223,6 +249,9 @@ fn service_rejects_nongrads_artifact() {
 
 #[test]
 fn service_rejects_bad_theta_len() {
+    if !pjrt_ready() {
+        return;
+    }
     let err = ServiceHandle::start(
         ServiceConfig {
             artifact: "core_toy_crb_grads_b4".into(),

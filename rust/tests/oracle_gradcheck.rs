@@ -1,0 +1,313 @@
+//! Finite-difference gradient checks on the `tensor.rs` oracle over
+//! randomized shapes, strides, padding, dilation and groups — the
+//! ground-truth argument for the ground truth itself. Every analytic
+//! per-example gradient (Eq. 2 for linear, Eq. 4 for conv,
+//! instance-norm's affine grads) is checked against a central
+//! difference of the per-example loss; the fast im2col kernels are
+//! checked against the same differences at the same points.
+//!
+//! Pure host math — runs on any checkout (no artifacts, no PJRT).
+
+use grad_cnns::check::{forall, gen_range, CheckConfig};
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::tensor::{
+    conv2d, conv2d_grad_input, conv2d_grad_input_im2col, instance_norm, instance_norm_grad,
+    linear, perex_conv2d_grad, perex_conv2d_grad_im2col, perex_linear_grad, ConvArgs, Tensor,
+};
+
+fn cfg() -> CheckConfig {
+    // FD checks run several forward passes per case; keep the count
+    // moderate (still dozens of random geometries per run).
+    CheckConfig {
+        cases: 24,
+        ..CheckConfig::default()
+    }
+}
+
+fn randn(rng: &mut Xoshiro256pp, shape: &[usize]) -> Tensor {
+    let n = shape.iter().product();
+    let mut data = vec![0.0f32; n];
+    rng.fill_gaussian(&mut data, 1.0);
+    Tensor::from_vec(shape, data)
+}
+
+/// Random conv geometry that is guaranteed valid (output dims ≥ 1).
+#[derive(Debug, Clone)]
+struct ConvCase {
+    args: ConvArgs,
+    bsz: usize,
+    c: usize,
+    d: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    seed: u64,
+}
+
+fn gen_conv_case(rng: &mut Xoshiro256pp) -> ConvCase {
+    let groups = if rng.next_f64() < 0.3 { 2 } else { 1 };
+    let args = ConvArgs {
+        stride: (gen_range(rng, 1, 3), gen_range(rng, 1, 3)),
+        padding: (gen_range(rng, 0, 2), gen_range(rng, 0, 2)),
+        dilation: (gen_range(rng, 1, 3), gen_range(rng, 1, 3)),
+        groups,
+    };
+    let kh = gen_range(rng, 1, 4);
+    let kw = gen_range(rng, 1, 4);
+    // input big enough that the dilated kernel fits even unpadded
+    let h = args.dilation.0 * (kh - 1) + 1 + gen_range(rng, 1, 5);
+    let w = args.dilation.1 * (kw - 1) + 1 + gen_range(rng, 1, 5);
+    let c = groups * gen_range(rng, 1, 3);
+    let d = groups * gen_range(rng, 1, 3);
+    ConvCase {
+        args,
+        bsz: gen_range(rng, 1, 4),
+        c,
+        d,
+        h,
+        w,
+        kh,
+        kw,
+        seed: rng.next_u64(),
+    }
+}
+
+/// Eq. 4: per-example conv kernel gradients (naive oracle AND the
+/// im2col fast kernel) match central finite differences of the
+/// per-example loss `L_b = <conv(x, w)_b, m_b>`.
+#[test]
+fn conv_perex_weight_grad_matches_fd() {
+    forall(cfg(), gen_conv_case, |case| {
+        let ConvCase {
+            args, bsz, c, d, h, w, kh, kw, seed,
+        } = *case;
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let cg = c / args.groups;
+        let x = randn(&mut rng, &[bsz, c, h, w]);
+        let mut wt = randn(&mut rng, &[d, cg, kh, kw]);
+        let (ho, wo) = args.out_hw(h, w, kh, kw);
+        if ho == 0 || wo == 0 {
+            return Err(format!("invalid geometry generated: {case:?}"));
+        }
+        let m = randn(&mut rng, &[bsz, d, ho, wo]);
+        let naive = perex_conv2d_grad(&x, &m, kh, kw, args);
+        let fast = perex_conv2d_grad_im2col(&x, &m, kh, kw, args);
+        if naive.max_abs_diff(&fast) > 1e-4 {
+            return Err("im2col weight grad disagrees with oracle".into());
+        }
+        // probe up to 4 random kernel coordinates. eps balances FD
+        // truncation (O(eps²)) against f32 cancellation noise in
+        // (yp − ym) summed over the output plane.
+        let eps = 2e-3f32;
+        for _ in 0..4 {
+            let dd = gen_range(&mut rng, 0, d);
+            let ci = gen_range(&mut rng, 0, cg);
+            let ky = gen_range(&mut rng, 0, kh);
+            let kx = gen_range(&mut rng, 0, kw);
+            let wi = ((dd * cg + ci) * kh + ky) * kw + kx;
+            let orig = wt.data[wi];
+            wt.data[wi] = orig + eps;
+            let yp = conv2d(&x, &wt, None, args);
+            wt.data[wi] = orig - eps;
+            let ym = conv2d(&x, &wt, None, args);
+            wt.data[wi] = orig;
+            for b in 0..bsz {
+                let mut fd = 0.0f64;
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        fd += ((yp.get4(b, dd, oy, ox) - ym.get4(b, dd, oy, ox))
+                            * m.get4(b, dd, oy, ox)) as f64;
+                    }
+                }
+                let fd = (fd / (2.0 * eps as f64)) as f32;
+                let an =
+                    naive.data[(((b * d + dd) * cg + ci) * kh + ky) * kw + kx];
+                if (fd - an).abs() > 3e-2 {
+                    return Err(format!(
+                        "w[{dd},{ci},{ky},{kx}] example {b}: fd {fd} vs analytic {an}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Input gradients (needed to continue backprop) match finite
+/// differences, for both the oracle and the im2col path.
+#[test]
+fn conv_input_grad_matches_fd() {
+    forall(cfg(), gen_conv_case, |case| {
+        let ConvCase {
+            args, bsz, c, d, h, w, kh, kw, seed,
+        } = *case;
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xDEAD);
+        let cg = c / args.groups;
+        let mut x = randn(&mut rng, &[bsz, c, h, w]);
+        let wt = randn(&mut rng, &[d, cg, kh, kw]);
+        let (ho, wo) = args.out_hw(h, w, kh, kw);
+        if ho == 0 || wo == 0 {
+            return Err(format!("invalid geometry generated: {case:?}"));
+        }
+        let m = randn(&mut rng, &[bsz, d, ho, wo]);
+        let naive = conv2d_grad_input(&m, &wt, h, w, args);
+        let fast = conv2d_grad_input_im2col(&m, &wt, h, w, args);
+        if naive.max_abs_diff(&fast) > 1e-4 {
+            return Err("im2col input grad disagrees with oracle".into());
+        }
+        let eps = 2e-3f32;
+        for _ in 0..4 {
+            let i = gen_range(&mut rng, 0, x.data.len());
+            let orig = x.data[i];
+            x.data[i] = orig + eps;
+            let yp = conv2d(&x, &wt, None, args);
+            x.data[i] = orig - eps;
+            let ym = conv2d(&x, &wt, None, args);
+            x.data[i] = orig;
+            let fd: f64 = yp
+                .data
+                .iter()
+                .zip(&ym.data)
+                .zip(&m.data)
+                .map(|((p, q), mm)| ((p - q) * mm) as f64)
+                .sum::<f64>()
+                / (2.0 * eps as f64);
+            if (fd as f32 - naive.data[i]).abs() > 3e-2 {
+                return Err(format!("x[{i}]: fd {fd} vs analytic {}", naive.data[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Eq. 2: per-example dense gradients match finite differences over
+/// randomized layer sizes.
+#[test]
+fn linear_perex_grad_matches_fd() {
+    forall(
+        cfg(),
+        |rng| {
+            (
+                gen_range(rng, 1, 5),  // bsz
+                gen_range(rng, 1, 8),  // in
+                gen_range(rng, 1, 6),  // out
+                rng.next_u64(),
+            )
+        },
+        |&(bsz, i, j, seed)| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let x = randn(&mut rng, &[bsz, i]);
+            let mut w = randn(&mut rng, &[j, i]);
+            let bias = vec![0.1f32; j];
+            let m = randn(&mut rng, &[bsz, j]); // per-example loss mask
+            let grad = perex_linear_grad(&x, &m);
+            let eps = 1e-3f32;
+            for _ in 0..4 {
+                let jj = gen_range(&mut rng, 0, j);
+                let ii = gen_range(&mut rng, 0, i);
+                let wi = jj * i + ii;
+                let orig = w.data[wi];
+                w.data[wi] = orig + eps;
+                let yp = linear(&x, &w, &bias);
+                w.data[wi] = orig - eps;
+                let ym = linear(&x, &w, &bias);
+                w.data[wi] = orig;
+                for b in 0..bsz {
+                    let mut fd = 0.0f64;
+                    for k in 0..j {
+                        fd += ((yp.data[b * j + k] - ym.data[b * j + k]) * m.data[b * j + k])
+                            as f64;
+                    }
+                    let fd = (fd / (2.0 * eps as f64)) as f32;
+                    let an = grad.data[(b * j + jj) * i + ii];
+                    if (fd - an).abs() > 2e-2 {
+                        return Err(format!("dW[{b},{jj},{ii}]: fd {fd} vs {an}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Instance-norm per-example affine grads + input grad match finite
+/// differences over randomized shapes.
+#[test]
+fn instance_norm_grad_matches_fd() {
+    forall(
+        cfg(),
+        |rng| {
+            (
+                gen_range(rng, 1, 4),  // bsz
+                gen_range(rng, 1, 4),  // channels
+                gen_range(rng, 2, 6),  // h
+                gen_range(rng, 2, 6),  // w
+                rng.next_u64(),
+            )
+        },
+        |&(bsz, c, h, w, seed)| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let eps_n = 1e-5f32;
+            let x = randn(&mut rng, &[bsz, c, h, w]);
+            let gamma: Vec<f32> = (0..c).map(|_| 0.5 + rng.next_f32()).collect();
+            let beta: Vec<f32> = (0..c).map(|_| rng.next_f32() - 0.5).collect();
+            let m = randn(&mut rng, &[bsz, c, h, w]);
+            let (_, xhat, inv_std) = instance_norm(&x, &gamma, &beta, eps_n);
+            let (dgamma, dbeta, dx) = instance_norm_grad(&m, &xhat, &inv_std, &gamma);
+
+            let n = c * h * w;
+            let loss = |x: &Tensor, gamma: &[f32], beta: &[f32], b: usize| -> f64 {
+                let (y, _, _) = instance_norm(x, gamma, beta, eps_n);
+                y.data[b * n..(b + 1) * n]
+                    .iter()
+                    .zip(&m.data[b * n..(b + 1) * n])
+                    .map(|(a, c)| (a * c) as f64)
+                    .sum()
+            };
+            let fd_eps = 1e-3f32;
+            for b in 0..bsz {
+                for ci in 0..c {
+                    let mut gp = gamma.clone();
+                    gp[ci] += fd_eps;
+                    let mut gm = gamma.clone();
+                    gm[ci] -= fd_eps;
+                    let fd = ((loss(&x, &gp, &beta, b) - loss(&x, &gm, &beta, b))
+                        / (2.0 * fd_eps as f64)) as f32;
+                    let an = dgamma.data[b * c + ci];
+                    if (fd - an).abs() > 3e-2 {
+                        return Err(format!("dgamma[{b},{ci}]: fd {fd} vs {an}"));
+                    }
+
+                    let mut bp = beta.clone();
+                    bp[ci] += fd_eps;
+                    let mut bm = beta.clone();
+                    bm[ci] -= fd_eps;
+                    let fd = ((loss(&x, &gamma, &bp, b) - loss(&x, &gamma, &bm, b))
+                        / (2.0 * fd_eps as f64)) as f32;
+                    let an = dbeta.data[b * c + ci];
+                    if (fd - an).abs() > 3e-2 {
+                        return Err(format!("dbeta[{b},{ci}]: fd {fd} vs {an}"));
+                    }
+                }
+            }
+            // dx at a few random coordinates
+            let mut xp = x.clone();
+            for _ in 0..4 {
+                let i = gen_range(&mut rng, 0, xp.data.len());
+                let b = i / n;
+                let orig = xp.data[i];
+                xp.data[i] = orig + fd_eps;
+                let lp = loss(&xp, &gamma, &beta, b);
+                xp.data[i] = orig - fd_eps;
+                let lm = loss(&xp, &gamma, &beta, b);
+                xp.data[i] = orig;
+                let fd = ((lp - lm) / (2.0 * fd_eps as f64)) as f32;
+                if (fd - dx.data[i]).abs() > 3e-2 {
+                    return Err(format!("dx[{i}]: fd {fd} vs {}", dx.data[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,259 @@
+//! Offline stub of the `xla` (xla_extension / PJRT) binding.
+//!
+//! The container this workspace builds in does not ship the PJRT
+//! shared library, so this crate provides the same API surface with
+//! two behaviours:
+//!
+//! * [`Literal`] is *functional*: it is plain host storage, so the
+//!   marshalling layer (`runtime::values`) round-trips for real and
+//!   stays unit-testable.
+//! * Everything that would need the PJRT runtime
+//!   ([`PjRtClient::cpu`], compilation, execution) returns a clear
+//!   runtime error telling the caller to use the native backend.
+//!
+//! Swapping in the real binding is a one-line `[patch]` in the
+//! workspace `Cargo.toml`; no source changes are required. Callers can
+//! probe [`is_available`] to decide whether the PJRT path can work at
+//! all.
+
+use std::fmt;
+
+/// Whether a real PJRT runtime backs this crate. Always `false` for
+/// the stub; the real binding's adapter reports `true`.
+pub fn is_available() -> bool {
+    false
+}
+
+const UNAVAILABLE: &str = "PJRT runtime is not available in this build (stub `xla` crate); \
+     use the native backend (--backend native) or link the real xla_extension binding";
+
+/// Error type for the binding.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+// ---------------------------------------------------------------------------
+// Literal: functional host storage
+// ---------------------------------------------------------------------------
+
+/// Element types the workspace exchanges with artifacts. Public only
+/// because the [`NativeType`] trait mentions it; not part of the API.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal: shape + typed storage (mirrors
+/// `xla::Literal`'s API surface used by the workspace).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    storage: Storage,
+}
+
+/// Sealed-ish conversion trait for the two element types in play.
+pub trait NativeType: Sized + Copy {
+    fn wrap(data: Vec<Self>) -> Storage;
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> Storage {
+        Storage::F32(data)
+    }
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> Storage {
+        Storage::I32(data)
+    }
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            storage: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Reshape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elements) from {have} elements"
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            storage: self.storage.clone(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(t) => t.iter().map(|l| l.element_count()).sum(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy the elements out (errors on type mismatch or tuples).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage).ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.storage {
+            Storage::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+
+    /// Build a tuple literal (used by tests of the stub itself).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            dims: vec![],
+            storage: Storage::Tuple(parts),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT surface: runtime-erroring stubs
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation (opaque in the stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A PJRT client. The stub cannot construct one.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// A device buffer handle (opaque in the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A compiled executable. The stub cannot produce one, so `execute`
+/// is unreachable in practice but must type-check.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1i32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_paths_error_clearly() {
+        assert!(!is_available());
+        let err = PjRtClient::cpu().err().unwrap().to_string();
+        assert!(err.contains("native backend"), "{err}");
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
