@@ -4,9 +4,10 @@
 //!     cargo run --release --example strategy_comparison
 //!
 //! Runs the native naive / multi / crb strategies on one batch,
-//! verifies agreement with the pure-rust oracle (and pairwise), then
-//! times each strategy over 20 batches — a miniature of Figure 1 that
-//! needs zero artifacts. When `make artifacts` has been run *and* a
+//! verifies agreement with the pure-rust oracle (and pairwise), checks
+//! the ghost-norm engine's norms + clipped sum against clip-then-sum,
+//! then times every strategy over 20 batches — a miniature of Figure 1
+//! that needs zero artifacts. When `make artifacts` has been run *and* a
 //! real PJRT runtime is linked, the same checks also run over the
 //! lowered artifacts.
 
@@ -39,7 +40,7 @@ fn main() -> Result<()> {
 
     println!("=== native strategies: agreement (max |Δ| vs rust oracle) ===");
     let mut results = Vec::new();
-    for strategy in Strategy::ALL {
+    for strategy in Strategy::MATERIALIZING {
         let runner = StrategyRunner::new(spec.clone(), strategy, 0);
         let (got, _) = runner.perex_grads(&theta, &xt, &y)?;
         let diff = got.max_abs_diff(&want);
@@ -54,18 +55,57 @@ fn main() -> Result<()> {
     }
     println!("  all strategies agree pairwise ✓");
 
-    println!("\n=== native runtime, 20 batches (mean ± std over 3 reps) ===");
+    // the ghost-norm engine computes DP-SGD's two products directly —
+    // norms and the clipped sum — without the (B, P) matrix; check
+    // both against clip-then-sum of the oracle rows
+    let clip = 1.0f32;
+    let (want_sum, want_norms) = grad_cnns::tensor::clip_reduce(&want, clip);
+    let planner =
+        grad_cnns::ghost::ClippedStepPlanner::new(&spec, &grad_cnns::ghost::GhostMode::default())?;
+    let out = grad_cnns::ghost::clipped_step(&planner, &theta, &xt, &y, clip, 0)?;
+    let norm_diff = out
+        .norms
+        .iter()
+        .zip(&want_norms)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    let sum_diff = out
+        .grad_sum
+        .iter()
+        .zip(&want_sum)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "  {:<12} norms Δ = {norm_diff:.2e}, clipped Σ Δ = {sum_diff:.2e} (plan: {})",
+        "ghostnorm",
+        planner.summary()
+    );
+    assert!(norm_diff < 1e-4 && sum_diff < 1e-4, "ghostnorm disagrees");
+
+    println!("\n=== native runtime: clipped batch gradient, 20 batches (mean ± std over 3 reps) ===");
     let proto = Protocol { warmup: 1, reps: 3 };
     let mut baseline: Option<f64> = None;
     for strategy in Strategy::ALL {
-        let runner = StrategyRunner::new(spec.clone(), strategy, 0);
-        let stats = measure(proto, || {
-            for _ in 0..20 {
-                runner
-                    .perex_grads(&theta, &xt, &y)
-                    .expect("strategy run failed");
-            }
-        });
+        let stats = if strategy == Strategy::GhostNorm {
+            measure(proto, || {
+                for _ in 0..20 {
+                    grad_cnns::ghost::clipped_step(&planner, &theta, &xt, &y, clip, 0)
+                        .expect("ghost run failed");
+                }
+            })
+        } else {
+            // time the same quantity ghostnorm produces — the clipped
+            // batch gradient — so the columns compare like for like
+            let runner = StrategyRunner::new(spec.clone(), strategy, 0);
+            measure(proto, || {
+                for _ in 0..20 {
+                    let (g, _) = runner
+                        .perex_grads(&theta, &xt, &y)
+                        .expect("strategy run failed");
+                    let _ = grad_cnns::tensor::clip_reduce(&g, clip);
+                }
+            })
+        };
         let base = *baseline.get_or_insert(stats.mean);
         println!(
             "  {:<12} {}   ({:.1}x vs naive)",

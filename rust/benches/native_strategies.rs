@@ -1,16 +1,21 @@
-//! Native strategy sweep — the artifact-free miniature of Figure 1.
+//! Native strategy sweep — the artifact-free miniature of Figure 1,
+//! extended to strategy × batch × model dims, ghostnorm included.
 //!
 //! `cargo bench --bench native_strategies` — runs on a clean checkout
 //! (no `make artifacts` needed). Set `BENCH_REPS`, `BENCH_BATCHES`,
-//! `BENCH_THREADS` to tighten or parallelize the measurement.
+//! `BENCH_THREADS` to tighten or parallelize the measurement. Tables
+//! land in `reports/`, machine-readable results in
+//! `BENCH_strategies.json`.
 
 use grad_cnns::bench::{env_usize, Protocol};
-use grad_cnns::experiments;
+use grad_cnns::experiments::{self, NativeSweepOptions};
 
 fn main() -> anyhow::Result<()> {
-    let proto = Protocol::from_env();
-    let batches = env_usize("BENCH_BATCHES", 20);
-    let threads = env_usize("BENCH_THREADS", 0);
-    let table = experiments::run_native_sweep(batches, proto, threads, 8)?;
-    experiments::emit(&[table], "reports", "native")
+    let opts = NativeSweepOptions::standard(
+        env_usize("BENCH_BATCHES", 20),
+        Protocol::from_env(),
+        env_usize("BENCH_THREADS", 0),
+        vec![4, 8, 16],
+    );
+    experiments::run_native_sweep_with_reports(&opts, "reports", "BENCH_strategies.json")
 }

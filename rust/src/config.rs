@@ -6,7 +6,9 @@
 //! through typed accessors with good error messages; [`ExperimentConfig`]
 //! is the typed view the trainer consumes.
 
+use crate::ghost::{GhostMode, PlanChoice};
 use crate::jsonx::{self, Value};
+use crate::strategies::Strategy;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 
@@ -221,8 +223,16 @@ pub struct ExperimentConfig {
     /// are present, native otherwise).
     pub backend: String,
     /// Native-backend per-example gradient strategy
-    /// (`naive` | `multi` | `crb`).
+    /// (`naive` | `multi` | `crb` | `ghostnorm`).
     pub strategy: String,
+    /// Ghost-norm layer policy (`[train] ghost_norms`): `"auto"` /
+    /// `"ghost"` / `"direct"` globally, or an array of those per conv
+    /// layer. Only consulted when `strategy = "ghostnorm"`.
+    pub ghost_norms: GhostMode,
+    /// Debug export: write one batch's per-example gradient matrix to
+    /// this CSV path after training (`[train] grad_dump`). Requires a
+    /// materializing strategy; rejected with `ghostnorm`.
+    pub grad_dump: Option<String>,
     /// Native-backend worker threads (0 = one per core).
     pub threads: usize,
     /// Native-backend model config (`[model]` section), in the same
@@ -302,9 +312,35 @@ impl ExperimentConfig {
         if backend == "pjrt" && step_artifact.is_none() {
             bail!("config missing required string `train.step_artifact` (the pjrt backend drives a step artifact)");
         }
+        let strategy = string_or(cfg, "train.strategy", "crb")?;
+        // validate the name here so a typo fails at config time with
+        // the full option list, not at backend construction
+        let parsed_strategy =
+            Strategy::parse(&strategy).context("config `train.strategy` is invalid")?;
+        let grad_dump = opt_string(cfg, "train.grad_dump")?;
+        // hardening: reject combinations ghostnorm cannot honor
+        // instead of silently degrading them
+        if parsed_strategy == Strategy::GhostNorm {
+            if grad_dump.is_some() {
+                bail!(
+                    "config conflict: `train.grad_dump` exports per-example gradients, which \
+                     strategy = \"ghostnorm\" never materializes — use a materializing strategy \
+                     (naive | multi | crb) for the dump, or drop `train.grad_dump`"
+                );
+            }
+            if backend == "pjrt" {
+                bail!(
+                    "config conflict: strategy = \"ghostnorm\" is native-only, but \
+                     train.backend = \"pjrt\" drives a materializing step artifact — use \
+                     backend = \"native\" (or \"auto\", which resolves to native for ghostnorm)"
+                );
+            }
+        }
         Ok(ExperimentConfig {
             backend,
-            strategy: string_or(cfg, "train.strategy", "crb")?,
+            strategy,
+            ghost_norms: parse_ghost_norms(cfg)?,
+            grad_dump,
             threads: int_or(cfg, "train.threads", 0)?.max(0) as usize,
             model: native_model_config(cfg)?,
             step_artifact,
@@ -323,6 +359,34 @@ impl ExperimentConfig {
             eval_every: int_or(cfg, "train.eval_every", 50)? as usize,
             log_every: int_or(cfg, "train.log_every", 10)? as usize,
         })
+    }
+}
+
+/// Parse `[train] ghost_norms`: a string applies one policy to every
+/// conv layer; an array overrides per conv layer (in conv order, the
+/// rest defaulting to auto — a too-long list is rejected later by the
+/// planner, which knows the layer count).
+fn parse_ghost_norms(cfg: &Config) -> Result<GhostMode> {
+    match cfg.get("train.ghost_norms") {
+        None => Ok(GhostMode::default()),
+        Some(CfgValue::Str(s)) => Ok(GhostMode::Global(
+            PlanChoice::parse(s).context("config `train.ghost_norms`")?,
+        )),
+        Some(CfgValue::Arr(a)) => {
+            let choices: Result<Vec<PlanChoice>> = a
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .context("config `train.ghost_norms` entries must be strings")
+                        .and_then(PlanChoice::parse)
+                })
+                .collect();
+            Ok(GhostMode::PerConv(choices?))
+        }
+        Some(other) => bail!(
+            "config `train.ghost_norms` must be \"auto\" | \"ghost\" | \"direct\" or an array \
+             of those, got {other:?}"
+        ),
     }
 }
 
@@ -492,6 +556,67 @@ name = "synthetic # not a comment"
     fn unknown_backend_rejected() {
         let c = Config::parse("[train]\nbackend = \"gpu\"\n").unwrap();
         assert!(ExperimentConfig::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn unknown_strategy_rejected_at_config_time() {
+        let c = Config::parse("[train]\nstrategy = \"ghost\"\n").unwrap();
+        let err = ExperimentConfig::from_config(&c).unwrap_err();
+        assert!(format!("{err:#}").contains("train.strategy"), "{err:#}");
+    }
+
+    #[test]
+    fn ghostnorm_config_accepted_and_hardened() {
+        // plain ghostnorm parses, auto backend, default mode
+        let c = Config::parse("[train]\nstrategy = \"ghostnorm\"\n").unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.strategy, "ghostnorm");
+        assert!(matches!(
+            e.ghost_norms,
+            GhostMode::Global(PlanChoice::Auto)
+        ));
+        // global + per-layer ghost_norms forms
+        let c = Config::parse("[train]\nstrategy = \"ghostnorm\"\nghost_norms = \"direct\"\n")
+            .unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert!(matches!(
+            e.ghost_norms,
+            GhostMode::Global(PlanChoice::Direct)
+        ));
+        let c = Config::parse(
+            "[train]\nstrategy = \"ghostnorm\"\nghost_norms = [\"ghost\", \"auto\"]\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        match e.ghost_norms {
+            GhostMode::PerConv(v) => {
+                assert_eq!(v, vec![PlanChoice::Ghost, PlanChoice::Auto]);
+            }
+            other => panic!("expected PerConv, got {other:?}"),
+        }
+        // bad values rejected, not defaulted
+        let c = Config::parse("[train]\nghost_norms = \"fast\"\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+        let c = Config::parse("[train]\nghost_norms = 3\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+        // hardening: settings ghostnorm cannot honor are config errors
+        let c = Config::parse(
+            "[train]\nstrategy = \"ghostnorm\"\ngrad_dump = \"/tmp/g.csv\"\n",
+        )
+        .unwrap();
+        let err = ExperimentConfig::from_config(&c).unwrap_err().to_string();
+        assert!(err.contains("grad_dump"), "{err}");
+        let c = Config::parse(
+            "[train]\nstrategy = \"ghostnorm\"\nbackend = \"pjrt\"\nstep_artifact = \"x\"\n",
+        )
+        .unwrap();
+        let err = ExperimentConfig::from_config(&c).unwrap_err().to_string();
+        assert!(err.contains("native-only"), "{err}");
+        // grad_dump with a materializing strategy is fine
+        let c = Config::parse("[train]\nstrategy = \"crb\"\ngrad_dump = \"/tmp/g.csv\"\n")
+            .unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.grad_dump.as_deref(), Some("/tmp/g.csv"));
     }
 
     #[test]

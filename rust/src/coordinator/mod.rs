@@ -9,12 +9,15 @@
 //!   update, with the RDP accountant tracking ε and the loss curve
 //!   recorded for `EXPERIMENTS.md`.
 //! * [`service`] — a per-example-gradient *service*: requests arrive
-//!   one example at a time, a dynamic batcher forms artifact-sized
-//!   batches (size or deadline triggered), worker threads — each with
-//!   its own PJRT registry, since PJRT handles are thread-local —
-//!   execute the grads artifact and answer each request with its
-//!   example's gradient norm. This is the "DP gradient sidecar" shape
-//!   a production DP-training system deploys.
+//!   one example at a time, a dynamic batcher forms batches (size or
+//!   deadline triggered), worker threads answer each request with its
+//!   example's gradient norm and loss. Two executors: the PJRT grads
+//!   artifact (each worker owns a registry — PJRT handles are
+//!   thread-local), and the native ghost-norm engine
+//!   ([`ServiceHandle::start_native`]), which serves norm-only
+//!   queries on a clean checkout without ever materializing a
+//!   gradient. This is the "DP gradient sidecar" shape a production
+//!   DP-training system deploys.
 //! * [`queue`] — the bounded MPMC queue (condvar-based; no tokio in
 //!   the vendor set) that gives the service backpressure.
 //! * [`checkpoint`] — flat-theta checkpoints with a json sidecar, so
@@ -27,5 +30,7 @@ pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use queue::BoundedQueue;
-pub use service::{GradRequest, GradResponse, ServiceConfig, ServiceHandle};
+pub use service::{
+    GradRequest, GradResponse, NativeServiceConfig, ServiceConfig, ServiceHandle,
+};
 pub use trainer::{TrainReport, Trainer};

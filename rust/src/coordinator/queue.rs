@@ -82,6 +82,13 @@ impl<T> BoundedQueue<T> {
 
     /// Pop with a deadline; `Ok(None)` on timeout, `Err(())` when
     /// closed and drained.
+    ///
+    /// Condvar waits can wake spuriously (and legitimately: another
+    /// consumer may steal the item that triggered the notify), so the
+    /// remaining time is recomputed against the absolute deadline on
+    /// *every* loop iteration — a wakeup storm can never extend the
+    /// wait past `timeout`. `pop_timeout_deadline_respected_under_churn`
+    /// pins this.
     pub fn pop_timeout(&self, timeout: std::time::Duration) -> Result<Option<T>, ()> {
         let deadline = std::time::Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
@@ -93,11 +100,11 @@ impl<T> BoundedQueue<T> {
             if g.closed {
                 return Err(());
             }
-            let now = std::time::Instant::now();
-            if now >= deadline {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
                 return Ok(None);
             }
-            let (guard, _t) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            let (guard, _t) = self.not_empty.wait_timeout(g, left).unwrap();
             g = guard;
         }
     }
@@ -159,6 +166,42 @@ mod tests {
         assert_eq!(q.pop_timeout(Duration::from_millis(10)), Ok(None));
         q.close();
         assert_eq!(q.pop_timeout(Duration::from_millis(10)), Err(()));
+    }
+
+    /// Regression: a notify storm with no items for this consumer
+    /// (other consumers stealing every pushed item — each wakeup a
+    /// spurious one from `pop_timeout`'s point of view) must not
+    /// extend the wait past the deadline.
+    #[test]
+    fn pop_timeout_deadline_respected_under_churn() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
+        let stop = Arc::new(AtomicBool::new(false));
+        let churners: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let _ = q.try_push(1);
+                        let _ = q.pop_timeout(Duration::from_micros(50));
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..5 {
+            let t0 = std::time::Instant::now();
+            let _ = q.pop_timeout(Duration::from_millis(50));
+            assert!(
+                t0.elapsed() < Duration::from_millis(2000),
+                "pop_timeout overran its deadline under notify churn: {:?}",
+                t0.elapsed()
+            );
+        }
+        stop.store(true, Ordering::Relaxed);
+        for c in churners {
+            c.join().unwrap();
+        }
     }
 
     #[test]

@@ -1,13 +1,25 @@
-//! Per-example-gradient service: dynamic batching over the grads
-//! artifacts.
+//! Per-example-gradient service: dynamic batching over an executor.
 //!
 //! The deployment shape of the paper's technique in a DP training
 //! platform: clients hand over single examples, and want back that
-//! example's gradient (here: its norm and a summary, not the full (P,)
-//! row — the full row stays inside the worker, exactly like a DP-SGD
-//! implementation would clip-and-aggregate it in place).
+//! example's gradient *norm* and loss — never the full `(P,)` row,
+//! exactly like a DP-SGD implementation would clip-and-aggregate it
+//! in place. Two executors serve that contract:
 //!
-//! Topology:
+//! * **pjrt** ([`ServiceHandle::start`]) — the original path: each
+//!   worker owns a PJRT registry (PJRT handles are `!Send`) and runs a
+//!   pre-lowered `grads` artifact, norms read off the materialized
+//!   rows. Static artifact shapes force exact-B batches, so partial
+//!   batches are padded and padded slots dropped on the way out.
+//! * **native ghost-norm** ([`ServiceHandle::start_native`]) — the
+//!   norm-only query served natively: each worker runs
+//!   [`ghost::perex_norms`] over the formed batch, so per-example
+//!   norms are answered without any gradient ever being materialized,
+//!   on a clean checkout with zero artifacts. Batches are
+//!   shape-flexible: the tail of a deadline-flushed batch simply runs
+//!   smaller, no padding.
+//!
+//! Topology (shared by both):
 //!
 //! ```text
 //!   submit() ─▶ request queue (bounded, backpressure)
@@ -15,21 +27,20 @@
 //!                  ▼  or after max_wait
 //!              batch queue (bounded)
 //!                  │
-//!       ┌──────────┼──────────┐         one PJRT registry per worker
-//!       ▼          ▼          ▼         (PJRT handles are !Send)
+//!       ┌──────────┼──────────┐
+//!       ▼          ▼          ▼
 //!    worker 0   worker 1   worker 2
 //!       └──────────┴──────────┘
 //!                  ▼
 //!           response table (+condvar), wait(id)
 //! ```
-//!
-//! The tail of a batch that can't fill up before `max_wait` is padded
-//! by repeating requests; padded slots are dropped on the way out
-//! (static-shape artifacts require exactly B rows).
 
 use crate::coordinator::queue::BoundedQueue;
+use crate::ghost::{self, ClippedStepPlanner, GhostMode};
 use crate::metrics;
+use crate::models::ModelSpec;
 use crate::runtime::{HostValue, Registry};
+use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -56,7 +67,7 @@ pub struct GradResponse {
     pub latency: Duration,
 }
 
-/// Service parameters.
+/// PJRT service parameters.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// A `grads` artifact name; its manifest batch is the batch size.
@@ -81,6 +92,40 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Native (artifact-free) norm-service parameters.
+#[derive(Clone, Debug)]
+pub struct NativeServiceConfig {
+    /// The model gradients norms are taken against.
+    pub model: ModelSpec,
+    /// Maximum dynamic batch; deadline flushes may run smaller.
+    pub batch: usize,
+    pub workers: usize,
+    /// Ghost-engine worker threads *per service worker* (0 = cores).
+    pub threads: usize,
+    /// Conv-layer norm-path policy (see [`GhostMode`]).
+    pub mode: GhostMode,
+    /// Flush a partial batch after this long.
+    pub max_wait: Duration,
+    /// Request-queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+}
+
+/// What a worker thread needs to build its executor. One clone per
+/// worker; each worker owns its own registry / planner.
+#[derive(Clone)]
+enum WorkerSpec {
+    Pjrt {
+        artifacts_dir: String,
+        artifact: String,
+        x_shape: Vec<usize>,
+    },
+    Native {
+        model: ModelSpec,
+        threads: usize,
+        mode: GhostMode,
+    },
+}
+
 struct PendingTable {
     done: Mutex<HashMap<u64, Result<GradResponse, String>>>,
     cv: Condvar,
@@ -101,7 +146,9 @@ struct Batch {
 
 /// Handle to a running service; dropping it shuts the workers down.
 pub struct ServiceHandle {
-    cfg: ServiceConfig,
+    label: String,
+    /// Flat length every submitted image must have (C·H·W).
+    example_len: usize,
     theta: Arc<Vec<f32>>,
     requests: Arc<BoundedQueue<QueuedRequest>>,
     pending: Arc<PendingTable>,
@@ -111,7 +158,8 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
-    /// Start the batch former + `workers` executor threads.
+    /// Start the PJRT-backed service: batch former + `workers`
+    /// executor threads driving a `grads` artifact.
     ///
     /// `theta` is the (frozen) parameter vector gradients are taken
     /// at — the service is read-only with respect to the model.
@@ -134,12 +182,71 @@ impl ServiceHandle {
             bail!("theta length {} != artifact P={p}", theta.len());
         }
         let example_len: usize = meta.inputs[1].shape[1..].iter().product();
+        let x_shape = meta.inputs[1].shape.clone();
         drop(probe);
+        Self::spawn(
+            format!("pjrt:{}", cfg.artifact),
+            batch,
+            example_len,
+            true, // static artifact shapes need exact-B batches
+            cfg.workers,
+            cfg.max_wait,
+            cfg.queue_capacity,
+            WorkerSpec::Pjrt {
+                artifacts_dir: cfg.artifacts_dir,
+                artifact: cfg.artifact,
+                x_shape,
+            },
+            theta,
+        )
+    }
 
+    /// Start the native ghost-norm service: the norm-only
+    /// `GradRequest → GradResponse` query, no artifacts, no
+    /// materialized gradients.
+    pub fn start_native(cfg: NativeServiceConfig, theta: Vec<f32>) -> Result<ServiceHandle> {
+        if cfg.batch == 0 {
+            bail!("native service batch must be >= 1");
+        }
+        let p = cfg.model.param_count();
+        if theta.len() != p {
+            bail!("theta length {} != model P={p}", theta.len());
+        }
+        // fail on an invalid per-layer override now, not in a worker
+        ClippedStepPlanner::new(&cfg.model, &cfg.mode)?;
+        let (c, h, w) = cfg.model.input_shape;
+        Self::spawn(
+            format!("native:ghostnorm:{}", cfg.model.arch),
+            cfg.batch,
+            c * h * w,
+            false, // the ghost engine takes any batch size
+            cfg.workers,
+            cfg.max_wait,
+            cfg.queue_capacity,
+            WorkerSpec::Native {
+                model: cfg.model,
+                threads: cfg.threads,
+                mode: cfg.mode,
+            },
+            theta,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn spawn(
+        label: String,
+        batch: usize,
+        example_len: usize,
+        pad: bool,
+        workers: usize,
+        max_wait: Duration,
+        queue_capacity: usize,
+        wspec: WorkerSpec,
+        theta: Vec<f32>,
+    ) -> Result<ServiceHandle> {
         let requests: Arc<BoundedQueue<QueuedRequest>> =
-            Arc::new(BoundedQueue::new(cfg.queue_capacity));
-        let batches: Arc<BoundedQueue<Batch>> =
-            Arc::new(BoundedQueue::new(cfg.workers.max(1) * 2));
+            Arc::new(BoundedQueue::new(queue_capacity));
+        let batches: Arc<BoundedQueue<Batch>> = Arc::new(BoundedQueue::new(workers.max(1) * 2));
         let pending = Arc::new(PendingTable {
             done: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
@@ -153,13 +260,12 @@ impl ServiceHandle {
         {
             let requests = requests.clone();
             let batches = batches.clone();
-            let max_wait = cfg.max_wait;
             let batch_gauge = metrics.histogram("service.batch_fill");
             threads.push(
                 std::thread::Builder::new()
                     .name("batch-former".into())
                     .spawn(move || {
-                        'outer: loop {
+                        loop {
                             // block for the batch head…
                             let Some(first) = requests.pop() else {
                                 break;
@@ -174,13 +280,8 @@ impl ServiceHandle {
                                 }
                                 match requests.pop_timeout(left) {
                                     Ok(Some(r)) => got.push(r),
-                                    Ok(None) => break,       // timed out
-                                    Err(()) => {
-                                        if got.is_empty() {
-                                            break 'outer;
-                                        }
-                                        break;
-                                    }
+                                    Ok(None) => break, // timed out
+                                    Err(()) => break,  // closed: flush what we have
                                 }
                             }
                             batch_gauge.observe_secs(got.len() as f64 / batch as f64);
@@ -192,11 +293,14 @@ impl ServiceHandle {
                                 x.extend_from_slice(&q.req.image);
                                 y.push(q.req.label);
                             }
-                            // pad the tail by repeating the last example
-                            while y.len() < batch {
-                                let last = &got.last().unwrap().req;
-                                x.extend_from_slice(&last.image);
-                                y.push(last.label);
+                            if pad {
+                                // static shapes: repeat the last example;
+                                // padded slots are dropped on the way out
+                                while y.len() < batch {
+                                    let last = &got.last().unwrap().req;
+                                    x.extend_from_slice(&last.image);
+                                    y.push(last.label);
+                                }
                             }
                             if batches.push(Batch { slots, x, y }).is_err() {
                                 break;
@@ -209,80 +313,26 @@ impl ServiceHandle {
         }
 
         // --- workers -------------------------------------------------------
-        for worker_id in 0..cfg.workers.max(1) {
+        for worker_id in 0..workers.max(1) {
             let batches = batches.clone();
             let pending = pending.clone();
             let theta = theta.clone();
-            let dir = cfg.artifacts_dir.clone();
-            let artifact = cfg.artifact.clone();
-            let meta = meta.clone();
+            let wspec = wspec.clone();
             let exec_hist = metrics.histogram(&format!("service.worker{worker_id}.exec_secs"));
             let served = metrics.counter(&format!("service.worker{worker_id}.served"));
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("grad-worker-{worker_id}"))
                     .spawn(move || {
-                        // each worker owns its registry: PJRT handles
-                        // are not Send, and this gives compile-once
-                        // execute-many per thread.
-                        let registry = match Registry::open(&dir) {
-                            Ok(r) => r,
-                            Err(e) => {
-                                complete_all(&pending, &batches, format!("worker init: {e:#}"));
-                                return;
-                            }
-                        };
-                        let theta_v = HostValue::f32(&[theta.len()], theta.as_ref().clone());
-                        while let Some(b) = batches.pop() {
-                            let t0 = Instant::now();
-                            let xv = HostValue::f32(&meta.inputs[1].shape, b.x);
-                            let yv = HostValue::i32(&[b.y.len()], b.y);
-                            let result =
-                                registry.run(&artifact, &[theta_v.clone(), xv, yv]);
-                            exec_hist.observe_secs(t0.elapsed().as_secs_f64());
-                            let mut done = pending.done.lock().unwrap();
-                            match result {
-                                Ok(out) => {
-                                    // out[0]: (B, P) per-example grads,
-                                    // out[1]: (B,) losses
-                                    let grads = out[0].as_f32().unwrap();
-                                    let losses = out[1].as_f32().unwrap();
-                                    let p = grads.len() / losses.len();
-                                    for (slot, (id, enq)) in b.slots.iter().enumerate() {
-                                        let row = &grads[slot * p..(slot + 1) * p];
-                                        let norm = row
-                                            .iter()
-                                            .map(|v| (*v as f64) * (*v as f64))
-                                            .sum::<f64>()
-                                            .sqrt() as f32;
-                                        done.insert(
-                                            *id,
-                                            Ok(GradResponse {
-                                                grad_norm: norm,
-                                                loss: losses[slot],
-                                                worker: worker_id,
-                                                latency: enq.elapsed(),
-                                            }),
-                                        );
-                                        served.inc();
-                                    }
-                                }
-                                Err(e) => {
-                                    for (id, _) in &b.slots {
-                                        done.insert(*id, Err(format!("{e:#}")));
-                                    }
-                                }
-                            }
-                            drop(done);
-                            pending.cv.notify_all();
-                        }
+                        run_worker(worker_id, wspec, &theta, &batches, &pending, exec_hist, served)
                     })
                     .expect("spawning grad worker"),
             );
         }
 
         Ok(ServiceHandle {
-            cfg,
+            label,
+            example_len,
             theta,
             requests,
             pending,
@@ -292,8 +342,9 @@ impl ServiceHandle {
         })
     }
 
-    pub fn config(&self) -> &ServiceConfig {
-        &self.cfg
+    /// Executor description, e.g. `"native:ghostnorm:toy_cnn"`.
+    pub fn label(&self) -> &str {
+        &self.label
     }
 
     pub fn theta(&self) -> &[f32] {
@@ -302,7 +353,18 @@ impl ServiceHandle {
 
     /// Submit one example; returns a ticket for [`wait`](Self::wait).
     /// Blocks when the request queue is full (backpressure).
+    ///
+    /// A wrong-sized image is rejected here — past this point it
+    /// would only surface as a shape panic inside a worker, leaving
+    /// the whole batch waiting forever.
     pub fn submit(&self, req: GradRequest) -> Result<u64> {
+        if req.image.len() != self.example_len {
+            bail!(
+                "request image has {} values, model expects {}",
+                req.image.len(),
+                self.example_len
+            );
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.requests
             .push(QueuedRequest {
@@ -343,6 +405,113 @@ impl ServiceHandle {
             let _ = t.join();
         }
     }
+}
+
+/// One executor thread: build the backend this worker owns, then
+/// serve batches until the queue closes.
+fn run_worker(
+    worker_id: usize,
+    wspec: WorkerSpec,
+    theta: &[f32],
+    batches: &BoundedQueue<Batch>,
+    pending: &PendingTable,
+    exec_hist: Arc<metrics::Histogram>,
+    served: Arc<metrics::Counter>,
+) {
+    match wspec {
+        WorkerSpec::Pjrt {
+            artifacts_dir,
+            artifact,
+            x_shape,
+        } => {
+            // each worker owns its registry: PJRT handles are not
+            // Send, and this gives compile-once execute-many per
+            // thread.
+            let registry = match Registry::open(&artifacts_dir) {
+                Ok(r) => r,
+                Err(e) => {
+                    complete_all(pending, batches, format!("worker init: {e:#}"));
+                    return;
+                }
+            };
+            let theta_v = HostValue::f32(&[theta.len()], theta.to_vec());
+            while let Some(b) = batches.pop() {
+                let t0 = Instant::now();
+                let xv = HostValue::f32(&x_shape, b.x);
+                let yv = HostValue::i32(&[b.y.len()], b.y);
+                let result = registry.run(&artifact, &[theta_v.clone(), xv, yv]);
+                exec_hist.observe_secs(t0.elapsed().as_secs_f64());
+                let answers = result.map(|out| {
+                    // out[0]: (B, P) per-example grads, out[1]: (B,) losses
+                    let grads = out[0].as_f32().unwrap();
+                    let losses = out[1].as_f32().unwrap();
+                    let p = grads.len() / losses.len();
+                    let norms: Vec<f32> = (0..losses.len())
+                        .map(|slot| crate::tensor::l2_norm(&grads[slot * p..(slot + 1) * p]))
+                        .collect();
+                    (norms, losses.to_vec())
+                });
+                complete_batch(pending, &b.slots, worker_id, answers, &served);
+            }
+        }
+        WorkerSpec::Native {
+            model,
+            threads,
+            mode,
+        } => {
+            let planner = match ClippedStepPlanner::new(&model, &mode) {
+                Ok(p) => p,
+                Err(e) => {
+                    complete_all(pending, batches, format!("worker init: {e:#}"));
+                    return;
+                }
+            };
+            let (c, h, w) = model.input_shape;
+            while let Some(b) = batches.pop() {
+                let t0 = Instant::now();
+                let n = b.y.len();
+                let xt = Tensor::from_vec(&[n, c, h, w], b.x);
+                let result = ghost::perex_norms(&planner, theta, &xt, &b.y, threads)
+                    .map_err(|e| anyhow::anyhow!("{e:#}"));
+                exec_hist.observe_secs(t0.elapsed().as_secs_f64());
+                complete_batch(pending, &b.slots, worker_id, result, &served);
+            }
+        }
+    }
+}
+
+/// Publish one batch's answers (or its shared error) and wake waiters.
+fn complete_batch(
+    pending: &PendingTable,
+    slots: &[(u64, Instant)],
+    worker_id: usize,
+    answers: Result<(Vec<f32>, Vec<f32>), anyhow::Error>,
+    served: &metrics::Counter,
+) {
+    let mut done = pending.done.lock().unwrap();
+    match answers {
+        Ok((norms, losses)) => {
+            for (slot, (id, enq)) in slots.iter().enumerate() {
+                done.insert(
+                    *id,
+                    Ok(GradResponse {
+                        grad_norm: norms[slot],
+                        loss: losses[slot],
+                        worker: worker_id,
+                        latency: enq.elapsed(),
+                    }),
+                );
+                served.inc();
+            }
+        }
+        Err(e) => {
+            for (id, _) in slots {
+                done.insert(*id, Err(format!("{e:#}")));
+            }
+        }
+    }
+    drop(done);
+    pending.cv.notify_all();
 }
 
 fn complete_all(pending: &PendingTable, batches: &BoundedQueue<Batch>, err: String) {

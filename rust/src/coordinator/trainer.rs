@@ -324,11 +324,52 @@ impl Trainer {
         )? {
             report.evals.push(ev);
         }
+        if let Some(path) = &cfg.grad_dump {
+            self.dump_perex_grads(path)?;
+        }
         report.wall_secs = t0.elapsed().as_secs_f64();
         report.steps = cfg.steps - start_step;
         report.steps_per_sec = report.steps as f64 / report.wall_secs.max(1e-9);
         let (eps, _) = accountant.epsilon(cfg.target_delta);
         report.final_epsilon = eps;
         Ok(report)
+    }
+
+    /// `train.grad_dump`: write one batch's per-example gradient
+    /// matrix (at the final parameters) to CSV for offline inspection.
+    /// Backends that cannot materialize it skip with a notice
+    /// (`ghostnorm` is already rejected at config time).
+    fn dump_perex_grads(&mut self, path: &str) -> Result<()> {
+        let n = self.cfg.batch_size.min(self.dataset.n).max(1);
+        let idx: Vec<usize> = (0..n).collect();
+        let (x, y) = self.dataset.gather(&idx);
+        match self.backend.perex_grads(&x, &y)? {
+            None => {
+                if !self.quiet {
+                    println!(
+                        "grad dump skipped: backend {:?} cannot materialize per-example gradients",
+                        self.backend.name()
+                    );
+                }
+            }
+            Some((grads, losses)) => {
+                let (b, p) = (grads.shape[0], grads.shape[1]);
+                let mut out = String::from("example,label,loss,grad_norm,grad...\n");
+                for bi in 0..b {
+                    let row = &grads.data[bi * p..(bi + 1) * p];
+                    let norm = crate::tensor::l2_norm(row);
+                    out.push_str(&format!("{bi},{},{:.6},{norm:.6}", y[bi], losses[bi]));
+                    for v in row {
+                        out.push_str(&format!(",{v:.6e}"));
+                    }
+                    out.push('\n');
+                }
+                std::fs::write(path, out)?;
+                if !self.quiet {
+                    println!("per-example gradients ({b}\u{00d7}{p}) written to {path}");
+                }
+            }
+        }
+        Ok(())
     }
 }

@@ -14,11 +14,13 @@
 //! autotuning by averaging over batches.
 
 use crate::bench::{measure, Protocol, Stats, Table};
+use crate::ghost::{self, ClippedStepPlanner, GhostMode};
+use crate::jsonx::{self, Value};
 use crate::models::ModelSpec;
 use crate::rng::Xoshiro256pp;
 use crate::runtime::{HostValue, Registry};
 use crate::strategies::{Strategy, StrategyRunner};
-use crate::tensor::Tensor;
+use crate::tensor::{self, Tensor};
 use anyhow::{Context, Result};
 
 /// Paper protocol: 20 batches per measurement.
@@ -222,59 +224,229 @@ pub fn run_ablation(registry: &Registry, n_batches: usize, proto: Protocol) -> R
     Ok(table)
 }
 
-/// Native strategy sweep — the artifact-free miniature of Figure 1:
-/// channel-rate sweep, all three strategies through the native
-/// [`StrategyRunner`] (threaded, fast kernels for `crb`). Runs on a
-/// clean checkout; `repro bench-strategies` and the
-/// `native_strategies` bench binary both call into here.
+/// Knobs for the native strategy sweep (`repro bench-strategies`).
+#[derive(Clone, Debug)]
+pub struct NativeSweepOptions {
+    /// Batches per measurement (paper: 20).
+    pub batches: usize,
+    pub proto: Protocol,
+    /// Worker threads (0 = one per core).
+    pub threads: usize,
+    /// Batch sizes to sweep.
+    pub batch_sizes: Vec<usize>,
+    /// Channel rates to sweep (model-dims axis).
+    pub rates: Vec<f64>,
+    /// Clip norm C for the timed clipped-gradient computation.
+    pub clip: f32,
+}
+
+impl NativeSweepOptions {
+    pub fn standard(
+        batches: usize,
+        proto: Protocol,
+        threads: usize,
+        batch_sizes: Vec<usize>,
+    ) -> NativeSweepOptions {
+        NativeSweepOptions {
+            batches,
+            proto,
+            threads,
+            batch_sizes,
+            rates: vec![1.0, 2.0, 3.0],
+            clip: 1.0,
+        }
+    }
+
+    /// Tiny sweep for CI smoke runs (`bench-strategies --quick`):
+    /// one rate, one batch size, one rep — every strategy (including
+    /// ghostnorm) still exercised end to end.
+    pub fn quick() -> NativeSweepOptions {
+        NativeSweepOptions {
+            batches: 2,
+            proto: Protocol { warmup: 0, reps: 1 },
+            threads: 0,
+            batch_sizes: vec![4],
+            rates: vec![1.0],
+            clip: 1.0,
+        }
+    }
+}
+
+/// One measured point of the native sweep — the machine-readable
+/// record behind `BENCH_strategies.json`.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub strategy: &'static str,
+    pub batch: usize,
+    pub rate: f64,
+    pub params: usize,
+    pub stats: Stats,
+    pub ns_per_example: f64,
+    /// Peak working set (bytes above the pre-generated inputs) during
+    /// the measurement, from the tensor allocation counter — tensors
+    /// plus the ghost engine's registered scratch.
+    pub peak_bytes: u64,
+}
+
+/// Native strategy sweep — the artifact-free miniature of Figure 1,
+/// extended to strategy × batch size × model dims. Runs on a clean
+/// checkout; `repro bench-strategies` and the `native_strategies`
+/// bench binary both call into here.
+///
+/// The timed quantity is what DP-SGD actually needs from each
+/// strategy: the *clipped batch gradient* (per-example grads +
+/// clip-reduce for the materializing strategies; the two-pass ghost
+/// engine for `ghostnorm`) — so the columns are directly comparable.
 ///
 /// Caveat for readers comparing against the paper's Figure 1: the
 /// native `naive` and `multi` strategies share the same (oracle)
 /// kernels and differ only in batching granularity, so those two
-/// columns track each other closely — the headline comparison here is
-/// crb's im2col-matmul kernels against both.
-pub fn run_native_sweep(
-    n_batches: usize,
-    proto: Protocol,
-    threads: usize,
-    batch: usize,
-) -> Result<Table> {
-    let mut table = Table::new(
-        &format!("NATIVE — channel-rate sweep, runtime for {n_batches} batches (B={batch})"),
-        &["channel rate", "naive (s)", "multi (s)", "crb (s)"],
-    );
-    for rate in [1.0f64, 2.0, 3.0] {
-        let spec = ModelSpec::toy_cnn(2, 8, rate, 3, "none", (3, 16, 16), 10)?;
-        let p = spec.param_count();
-        let (c, h, w) = spec.input_shape;
-        let mut rng = Xoshiro256pp::seed_from_u64(81);
-        let mut theta = vec![0.0f32; p];
-        rng.fill_gaussian(&mut theta, 0.1);
-        let mut batches = Vec::with_capacity(n_batches);
-        for _ in 0..n_batches {
-            let mut x = vec![0.0f32; batch * c * h * w];
-            rng.fill_gaussian(&mut x, 1.0);
-            let y: Vec<i32> = (0..batch)
-                .map(|_| rng.next_below(spec.num_classes as u64) as i32)
-                .collect();
-            batches.push((Tensor::from_vec(&[batch, c, h, w], x), y));
+/// columns track each other closely — the headline comparisons are
+/// crb's im2col-matmul kernels against both, and ghostnorm's
+/// batch-independent gradient memory against all three.
+pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<SweepCell>)> {
+    let mut tables = Vec::new();
+    let mut cells = Vec::new();
+    for &batch in &opts.batch_sizes {
+        let mut table = Table::new(
+            &format!(
+                "NATIVE — clipped batch gradient, {} batches (B={batch})",
+                opts.batches
+            ),
+            &[
+                "channel rate",
+                "naive (s)",
+                "multi (s)",
+                "crb (s)",
+                "ghostnorm (s)",
+            ],
+        );
+        for &rate in &opts.rates {
+            let spec = ModelSpec::toy_cnn(2, 8, rate, 3, "none", (3, 16, 16), 10)?;
+            let p = spec.param_count();
+            let (c, h, w) = spec.input_shape;
+            let mut rng = Xoshiro256pp::seed_from_u64(81);
+            let mut theta = vec![0.0f32; p];
+            rng.fill_gaussian(&mut theta, 0.1);
+            let mut batches = Vec::with_capacity(opts.batches);
+            for _ in 0..opts.batches {
+                let mut x = vec![0.0f32; batch * c * h * w];
+                rng.fill_gaussian(&mut x, 1.0);
+                let y: Vec<i32> = (0..batch)
+                    .map(|_| rng.next_below(spec.num_classes as u64) as i32)
+                    .collect();
+                batches.push((Tensor::from_vec(&[batch, c, h, w], x), y));
+            }
+            let mut row = Vec::new();
+            for strategy in Strategy::ALL {
+                let (stats, peak_bytes) =
+                    time_native_cell(&spec, strategy, opts, &theta, &batches)?;
+                row.push(stats.pm());
+                cells.push(SweepCell {
+                    strategy: strategy.name(),
+                    batch,
+                    rate,
+                    params: p,
+                    ns_per_example: stats.mean / (opts.batches * batch) as f64 * 1e9,
+                    peak_bytes,
+                    stats,
+                });
+            }
+            table.push(&format!("{rate:.1}"), row);
+            eprintln!("  native B={batch} rate {rate}: done");
         }
-        let mut cells = Vec::new();
-        for strategy in Strategy::ALL {
-            let runner = StrategyRunner::new(spec.clone(), strategy, threads);
-            let stats = measure(proto, || {
-                for (x, y) in &batches {
-                    runner
-                        .perex_grads(&theta, x, y)
-                        .expect("native bench step failed");
-                }
-            });
-            cells.push(stats.pm());
-        }
-        table.push(&format!("{rate:.1}"), cells);
-        eprintln!("  native rate {rate}: done");
+        tables.push(table);
     }
-    Ok(table)
+    Ok((tables, cells))
+}
+
+/// Time one (model, strategy) cell producing the clipped batch
+/// gradient over the pre-generated batches; also report the peak
+/// tensor working set above the inputs, via the allocation counter.
+fn time_native_cell(
+    spec: &ModelSpec,
+    strategy: Strategy,
+    opts: &NativeSweepOptions,
+    theta: &[f32],
+    batches: &[(Tensor, Vec<i32>)],
+) -> Result<(Stats, u64)> {
+    let stats;
+    tensor::alloc::reset_peak();
+    let base = tensor::alloc::live_elems();
+    if strategy == Strategy::GhostNorm {
+        let planner = ClippedStepPlanner::new(spec, &GhostMode::default())?;
+        stats = measure(opts.proto, || {
+            for (x, y) in batches {
+                ghost::clipped_step(&planner, theta, x, y, opts.clip, opts.threads)
+                    .expect("ghost bench step failed");
+            }
+        });
+    } else {
+        let runner = StrategyRunner::new(spec.clone(), strategy, opts.threads);
+        stats = measure(opts.proto, || {
+            for (x, y) in batches {
+                let (g, _) = runner
+                    .perex_grads(theta, x, y)
+                    .expect("native bench step failed");
+                let _ = tensor::clip_reduce(&g, opts.clip);
+            }
+        });
+    }
+    let peak = (tensor::alloc::peak_elems() - base).max(0) as u64 * 4;
+    Ok((stats, peak))
+}
+
+/// Render the sweep as the `BENCH_strategies.json` document — the
+/// repo's machine-readable perf trajectory (one record per
+/// strategy × batch × model-dims point).
+pub fn sweep_to_json(opts: &NativeSweepOptions, cells: &[SweepCell]) -> Value {
+    jsonx::obj(vec![
+        ("schema", jsonx::s("bench-strategies/v1")),
+        (
+            "protocol",
+            jsonx::obj(vec![
+                ("batches", jsonx::num(opts.batches as f64)),
+                ("reps", jsonx::num(opts.proto.reps as f64)),
+                ("warmup", jsonx::num(opts.proto.warmup as f64)),
+                ("threads", jsonx::num(opts.threads as f64)),
+                ("clip_norm", jsonx::num(opts.clip as f64)),
+            ]),
+        ),
+        (
+            "results",
+            jsonx::arr(
+                cells
+                    .iter()
+                    .map(|c| {
+                        jsonx::obj(vec![
+                            ("strategy", jsonx::s(c.strategy)),
+                            ("batch", jsonx::num(c.batch as f64)),
+                            ("channel_rate", jsonx::num(c.rate)),
+                            ("params", jsonx::num(c.params as f64)),
+                            ("mean_s", jsonx::num(c.stats.mean)),
+                            ("std_s", jsonx::num(c.stats.std)),
+                            ("ns_per_example", jsonx::num(c.ns_per_example)),
+                            ("peak_bytes", jsonx::num(c.peak_bytes as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Run the sweep and write tables + `BENCH_strategies.json`.
+pub fn run_native_sweep_with_reports(
+    opts: &NativeSweepOptions,
+    report_dir: &str,
+    json_path: &str,
+) -> Result<()> {
+    let (tables, cells) = run_native_sweep(opts)?;
+    emit(&tables, report_dir, "native")?;
+    let doc = sweep_to_json(opts, &cells);
+    std::fs::write(json_path, jsonx::to_string(&doc))?;
+    println!("machine-readable results written to {json_path}");
+    Ok(())
 }
 
 /// Render tables to stdout and write md/csv reports.
@@ -290,4 +462,40 @@ pub fn emit(tables: &[Table], report_dir: &str, slug: &str) -> Result<()> {
     }
     println!("reports written to {report_dir}/{slug}*.{{md,csv}}");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The quick sweep must produce one record per strategy (including
+    /// ghostnorm) and a JSON document that round-trips through the
+    /// parser with the fields the perf trajectory needs.
+    #[test]
+    fn quick_sweep_json_roundtrips() {
+        let opts = NativeSweepOptions::quick();
+        let (tables, cells) = run_native_sweep(&opts).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(cells.len(), Strategy::ALL.len());
+        assert!(cells.iter().any(|c| c.strategy == "ghostnorm"));
+        for c in &cells {
+            assert!(c.stats.mean >= 0.0);
+            assert!(c.ns_per_example >= 0.0);
+            assert!(c.params > 0);
+        }
+        let doc = sweep_to_json(&opts, &cells);
+        let text = jsonx::to_string(&doc);
+        let back = jsonx::parse(&text).unwrap();
+        assert_eq!(
+            back.get("schema").and_then(|v| v.as_str()),
+            Some("bench-strategies/v1")
+        );
+        let results = back.get("results").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(results.len(), cells.len());
+        for r in results {
+            assert!(r.get("strategy").and_then(|v| v.as_str()).is_some());
+            assert!(r.get("ns_per_example").and_then(|v| v.as_f64()).is_some());
+            assert!(r.get("peak_bytes").and_then(|v| v.as_f64()).is_some());
+        }
+    }
 }

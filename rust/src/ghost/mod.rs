@@ -1,0 +1,30 @@
+//! Ghost-norm subsystem: DP-SGD's two products — per-example gradient
+//! *norms* and the *clipped batch gradient* — without ever
+//! materializing the `(B, P)` per-example gradient matrix.
+//!
+//! The materializing strategies (`naive` / `multi` / `crb`,
+//! [`crate::strategies`]) pay `O(B·P)` gradient memory even though
+//! Eq. 1 only needs each example's norm and the reweighted sum. This
+//! subsystem computes exactly those, with gradient memory independent
+//! of the batch size:
+//!
+//! * [`planner`] — the [`ClippedStepPlanner`]: per-conv-layer choice
+//!   between the Gram-matrix ("ghost", Goodfellow arXiv:1510.01799 /
+//!   Lee & Kifer arXiv:2009.03106) and direct layer-local norm
+//!   kernels, decided from model geometry.
+//! * [`engine`] — the two-pass pipeline: [`perex_norms`] (norms only,
+//!   the coordinator service's norm query) and [`clipped_step`]
+//!   (norms, then one reweighted batched backward that yields the
+//!   clipped aggregate directly).
+//!
+//! Wired in as [`crate::strategies::Strategy::GhostNorm`]: config
+//! `[train] strategy = "ghostnorm"` (+ `ghost_norms` for the per-layer
+//! override), the `--strategy ghostnorm` CLI, the native backend's
+//! step, the coordinator's norm-only service mode, and the
+//! `bench-strategies` sweep.
+
+pub mod engine;
+pub mod planner;
+
+pub use engine::{clipped_step, perex_norms, GhostOutcome};
+pub use planner::{ClippedStepPlanner, GhostMode, LayerPlan, NormPath, PlanChoice};

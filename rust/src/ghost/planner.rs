@@ -1,0 +1,385 @@
+//! The [`ClippedStepPlanner`]: per-layer choice between the two ways
+//! of reading a per-example gradient norm off a conv layer, made from
+//! model geometry alone.
+//!
+//! For a conv layer, the per-example kernel gradient is
+//! `dW_b = dy_b · cols_bᵀ` (Eq. 4 with Algorithm-2 arguments), with
+//! `dy_b` of shape `(D/g, T)` and `cols_b` of shape `(R, T)` per
+//! group, where `T = H'·W'` output positions and `R = (C/g)·KH·KW`
+//! patch rows. Its squared norm can be had two ways:
+//!
+//! * **direct** — form `dW_b` for one example at a time (a layer-sized
+//!   temporary, *not* a `(B, P)` matrix) and square-sum it:
+//!   `O(D/g · R · T)` multiplies per group.
+//! * **ghost** — never form `dW_b` at all:
+//!   `‖dy·colsᵀ‖²_F = ⟨colsᵀcols, dyᵀdy⟩`, two `T×T` Gram matrices
+//!   and a dot: `O(T² · (D/g + R))` multiplies per group. This is the
+//!   Goodfellow (arXiv:1510.01799) trick as Lee & Kifer
+//!   (arXiv:2009.03106) extend it to convolutions.
+//!
+//! Ghost wins when the output is spatially small relative to the
+//! kernel volume (roughly `T ≲ (D/g·R)/(D/g+R)`) — late conv layers,
+//! strided convs, big kernels; direct wins on large early feature
+//! maps. The planner scores both per layer and picks the cheaper one,
+//! unless the config forces a path globally or per layer
+//! (`[train] ghost_norms`).
+//!
+//! Linear layers always factorize (`‖dy_b ⊗ x_b‖² = ‖dy_b‖²·‖x_b‖²`)
+//! and instance-norm affine grads are channel-sized sums, so neither
+//! needs a decision — only convs are planned.
+
+use crate::models::{LayerSpec, ModelSpec};
+use crate::tensor::ConvArgs;
+use anyhow::{bail, Result};
+
+/// How one conv layer's per-example norm is computed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NormPath {
+    /// Gram-matrix contraction, `O(T²(D/g + R))`, `2·T²` temp floats.
+    Ghost,
+    /// Per-example `dW` formed and square-summed, `O(D/g·R·T)`,
+    /// `D/g·R` temp floats.
+    Direct,
+}
+
+impl NormPath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NormPath::Ghost => "ghost",
+            NormPath::Direct => "direct",
+        }
+    }
+}
+
+/// A configured preference for one (or every) conv layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanChoice {
+    /// Let the planner pick by estimated cost.
+    Auto,
+    Ghost,
+    Direct,
+}
+
+impl PlanChoice {
+    pub fn parse(s: &str) -> Result<PlanChoice> {
+        match s {
+            "auto" => Ok(PlanChoice::Auto),
+            "ghost" => Ok(PlanChoice::Ghost),
+            "direct" => Ok(PlanChoice::Direct),
+            other => bail!("unknown ghost-norm choice {other:?} (want auto | ghost | direct)"),
+        }
+    }
+}
+
+/// The `[train] ghost_norms` config: one policy for every conv layer,
+/// or a per-conv-layer override list (conv order; a shorter list
+/// leaves the remaining convs on `Auto`).
+#[derive(Clone, Debug)]
+pub enum GhostMode {
+    Global(PlanChoice),
+    PerConv(Vec<PlanChoice>),
+}
+
+impl Default for GhostMode {
+    fn default() -> Self {
+        GhostMode::Global(PlanChoice::Auto)
+    }
+}
+
+/// The planner's verdict for one conv layer.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    /// Index into `spec.layers`.
+    pub layer_index: usize,
+    pub path: NormPath,
+    /// Estimated multiply-accumulates per example for each path.
+    pub ghost_cost: u64,
+    pub direct_cost: u64,
+    /// `(T, D/groups, R)` — the geometry the decision is made on.
+    pub geometry: (usize, usize, usize),
+}
+
+/// The ghost path needs two `T×T` f64 Gram matrices of scratch per
+/// worker. Past this many elements per Gram (128 MB) the trick stops
+/// being a memory win at all, so `Auto` falls back to direct and a
+/// *forced* ghost choice is rejected rather than silently allocating
+/// gigabytes (T grows quadratically with the feature map).
+const GHOST_SCRATCH_CAP_ELEMS: usize = 1 << 24;
+
+/// Per-layer norm-path plan for one model; built once, consulted by
+/// every ghost-engine pass.
+#[derive(Clone, Debug)]
+pub struct ClippedStepPlanner {
+    spec: ModelSpec,
+    /// One entry per layer; `Some` for convs only.
+    paths: Vec<Option<LayerPlan>>,
+}
+
+impl ClippedStepPlanner {
+    pub fn new(spec: &ModelSpec, mode: &GhostMode) -> Result<ClippedStepPlanner> {
+        let n_convs = spec
+            .layers
+            .iter()
+            .filter(|l| matches!(l, LayerSpec::Conv2d { .. }))
+            .count();
+        if let GhostMode::PerConv(list) = mode {
+            if list.len() > n_convs {
+                bail!(
+                    "ghost_norms lists {} per-layer choices but the model has only {n_convs} conv layers",
+                    list.len()
+                );
+            }
+        }
+        let (_, mut h, mut w) = spec.input_shape;
+        let mut conv_i = 0usize;
+        let mut paths = Vec::with_capacity(spec.layers.len());
+        for l in &spec.layers {
+            match l {
+                LayerSpec::Conv2d {
+                    in_ch,
+                    out_ch,
+                    kernel,
+                    stride,
+                    padding,
+                    dilation,
+                    groups,
+                } => {
+                    let args = ConvArgs {
+                        stride: *stride,
+                        padding: *padding,
+                        dilation: *dilation,
+                        groups: *groups,
+                    };
+                    let (ho, wo) = args.out_hw(h, w, kernel.0, kernel.1);
+                    let t = ho * wo;
+                    let dg = out_ch / groups;
+                    let rows = (in_ch / groups) * kernel.0 * kernel.1;
+                    // triangular Grams + dot vs one matmul_nt + square-sum
+                    let ghost_cost = (groups * (t * (t + 1) / 2) * (dg + rows + 2)) as u64;
+                    let direct_cost = (groups * dg * rows * (t + 2)) as u64;
+                    let choice = match mode {
+                        GhostMode::Global(c) => *c,
+                        GhostMode::PerConv(list) => {
+                            list.get(conv_i).copied().unwrap_or(PlanChoice::Auto)
+                        }
+                    };
+                    let scratch = t * t;
+                    let path = match choice {
+                        PlanChoice::Ghost => {
+                            if scratch > GHOST_SCRATCH_CAP_ELEMS {
+                                bail!(
+                                    "ghost_norms forces the ghost path on conv layer {conv_i}, \
+                                     but its output has T={t} positions: the two T² Gram \
+                                     matrices need ~{} MB of scratch per worker, over the \
+                                     {} MB-per-Gram cap — use \"auto\" or \"direct\" for this \
+                                     layer",
+                                    scratch * 16 / (1 << 20),
+                                    GHOST_SCRATCH_CAP_ELEMS * 8 / (1 << 20),
+                                );
+                            }
+                            NormPath::Ghost
+                        }
+                        PlanChoice::Direct => NormPath::Direct,
+                        PlanChoice::Auto => {
+                            if ghost_cost < direct_cost && scratch <= GHOST_SCRATCH_CAP_ELEMS {
+                                NormPath::Ghost
+                            } else {
+                                NormPath::Direct
+                            }
+                        }
+                    };
+                    paths.push(Some(LayerPlan {
+                        layer_index: paths.len(),
+                        path,
+                        ghost_cost,
+                        direct_cost,
+                        geometry: (t, dg, rows),
+                    }));
+                    conv_i += 1;
+                    h = ho;
+                    w = wo;
+                }
+                LayerSpec::MaxPool2d { window, stride } => {
+                    h = (h - window.0) / stride.0 + 1;
+                    w = (w - window.1) / stride.1 + 1;
+                    paths.push(None);
+                }
+                _ => paths.push(None),
+            }
+        }
+        Ok(ClippedStepPlanner {
+            spec: spec.clone(),
+            paths,
+        })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Norm path for layer `li`; only meaningful for conv layers
+    /// (anything else answers `Direct`).
+    pub fn path(&self, li: usize) -> NormPath {
+        self.paths
+            .get(li)
+            .and_then(|p| p.as_ref())
+            .map_or(NormPath::Direct, |p| p.path)
+    }
+
+    /// The conv-layer plans, in layer order.
+    pub fn plans(&self) -> impl Iterator<Item = &LayerPlan> {
+        self.paths.iter().flatten()
+    }
+
+    pub fn ghost_layer_count(&self) -> usize {
+        self.plans().filter(|p| p.path == NormPath::Ghost).count()
+    }
+
+    /// One-line description for logs and bench output, e.g.
+    /// `"L0:direct L3:ghost"`.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .plans()
+            .map(|p| format!("L{}:{}", p.layer_index, p.path.name()))
+            .collect();
+        if parts.is_empty() {
+            "no conv layers".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_prefers_ghost_on_small_outputs() {
+        // 64 -> 64 channels, 3x3 kernel on a 4x4 output: T=4 (stride 2,
+        // k3 on 9x9 -> 4x4 = 16)... build directly: T=16, dg=64, rows=576
+        // ghost ~ 16*17/2*642 ≈ 87k < direct ≈ 64*576*18 ≈ 663k.
+        let spec = ModelSpec {
+            arch: "custom".into(),
+            layers: vec![
+                LayerSpec::Conv2d {
+                    in_ch: 64,
+                    out_ch: 64,
+                    kernel: (3, 3),
+                    stride: (2, 2),
+                    padding: (0, 0),
+                    dilation: (1, 1),
+                    groups: 1,
+                },
+                LayerSpec::Flatten,
+                LayerSpec::Linear {
+                    in_dim: 64 * 4 * 4,
+                    out_dim: 4,
+                },
+            ],
+            input_shape: (64, 9, 9),
+            num_classes: 4,
+        };
+        let p = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        assert_eq!(p.path(0), NormPath::Ghost);
+        assert_eq!(p.ghost_layer_count(), 1);
+        assert!(p.summary().contains("L0:ghost"), "{}", p.summary());
+    }
+
+    #[test]
+    fn auto_prefers_direct_on_large_outputs() {
+        // 1 -> 2 channels, 1x1 kernel on a 16x16 output: T=256 dwarfs
+        // dg·rows = 2.
+        let spec = ModelSpec {
+            arch: "custom".into(),
+            layers: vec![
+                LayerSpec::Conv2d {
+                    in_ch: 1,
+                    out_ch: 2,
+                    kernel: (1, 1),
+                    stride: (1, 1),
+                    padding: (0, 0),
+                    dilation: (1, 1),
+                    groups: 1,
+                },
+                LayerSpec::Flatten,
+                LayerSpec::Linear {
+                    in_dim: 2 * 16 * 16,
+                    out_dim: 3,
+                },
+            ],
+            input_shape: (1, 16, 16),
+            num_classes: 3,
+        };
+        let p = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        assert_eq!(p.path(0), NormPath::Direct);
+        assert_eq!(p.ghost_layer_count(), 0);
+    }
+
+    #[test]
+    fn forced_and_per_layer_modes() {
+        let spec = ModelSpec::toy_cnn(2, 4, 1.0, 3, "none", (2, 12, 12), 5).unwrap();
+        let forced = ClippedStepPlanner::new(&spec, &GhostMode::Global(PlanChoice::Ghost)).unwrap();
+        assert!(forced.plans().all(|p| p.path == NormPath::Ghost));
+        let forced =
+            ClippedStepPlanner::new(&spec, &GhostMode::Global(PlanChoice::Direct)).unwrap();
+        assert!(forced.plans().all(|p| p.path == NormPath::Direct));
+        // per-conv override: first conv ghost, second left on auto
+        let per =
+            ClippedStepPlanner::new(&spec, &GhostMode::PerConv(vec![PlanChoice::Ghost])).unwrap();
+        let plans: Vec<&LayerPlan> = per.plans().collect();
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].path, NormPath::Ghost);
+        // too many entries is a config error, not a silent truncation
+        let err = ClippedStepPlanner::new(
+            &spec,
+            &GhostMode::PerConv(vec![PlanChoice::Auto; 5]),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("conv layers"), "{err}");
+    }
+
+    #[test]
+    fn forced_ghost_rejected_on_huge_feature_maps() {
+        // T = 4100² ≈ 16.8M output positions: the T² Gram scratch would
+        // be hundreds of GB. Forcing ghost is an error; auto quietly
+        // stays direct. (The planner only does arithmetic — no tensors
+        // of this size are ever allocated here.)
+        let spec = ModelSpec {
+            arch: "big".into(),
+            layers: vec![
+                LayerSpec::Conv2d {
+                    in_ch: 1,
+                    out_ch: 1,
+                    kernel: (1, 1),
+                    stride: (1, 1),
+                    padding: (0, 0),
+                    dilation: (1, 1),
+                    groups: 1,
+                },
+                LayerSpec::Flatten,
+                LayerSpec::Linear {
+                    in_dim: 4100 * 4100,
+                    out_dim: 2,
+                },
+            ],
+            input_shape: (1, 4100, 4100),
+            num_classes: 2,
+        };
+        let err = ClippedStepPlanner::new(&spec, &GhostMode::Global(PlanChoice::Ghost))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cap"), "{err}");
+        let p = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        assert_eq!(p.path(0), NormPath::Direct);
+    }
+
+    #[test]
+    fn choice_parse() {
+        assert_eq!(PlanChoice::parse("auto").unwrap(), PlanChoice::Auto);
+        assert_eq!(PlanChoice::parse("ghost").unwrap(), PlanChoice::Ghost);
+        assert_eq!(PlanChoice::parse("direct").unwrap(), PlanChoice::Direct);
+        assert!(PlanChoice::parse("fast").is_err());
+    }
+}

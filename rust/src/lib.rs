@@ -11,13 +11,16 @@
 //!   orchestration ([`coordinator`]), the RDP privacy accountant
 //!   ([`privacy`]), the benchmark harness ([`bench`]) that regenerates
 //!   the paper's figures/tables, and every substrate those need.
-//! * **Native backend (this crate)** — the three per-example gradient
-//!   strategies (`naive` / `multi` / `crb`) implemented directly in
-//!   rust ([`strategies`], [`runtime::native`]), multi-threaded across
-//!   the batch, with the paper's Algorithm-2 im2col matmul kernels in
-//!   [`tensor`]. This is the default execution path: `repro train`,
-//!   the strategy benches and the examples all run on a clean checkout
-//!   with zero artifacts.
+//! * **Native backend (this crate)** — the three materializing
+//!   per-example gradient strategies (`naive` / `multi` / `crb`)
+//!   implemented directly in rust ([`strategies`],
+//!   [`runtime::native`]), multi-threaded across the batch, with the
+//!   paper's Algorithm-2 im2col matmul kernels in [`tensor`]; plus the
+//!   [`ghost`] subsystem (`ghostnorm`), which serves DP-SGD's norms
+//!   and clipped batch gradient with gradient memory independent of
+//!   the batch size. This is the default execution path: `repro
+//!   train`, the strategy benches and the examples all run on a clean
+//!   checkout with zero artifacts.
 //! * **L2/L1 (python, build-time only, optional)** — the jax versions
 //!   of the same strategies plus the Pallas kernels; lowered once by
 //!   `make artifacts` to HLO text which [`runtime`] loads and executes
@@ -28,6 +31,12 @@
 //! self-contained either way. Backend selection and the test modes are
 //! documented in the repository README.
 
+// Numeric-kernel style: indexed loops over tensor coordinates are the
+// clearest spelling of the paper's equations; clippy's iterator
+// rewrites would obscure them. CI runs `clippy -- -D warnings`, so
+// these blanket allows keep the lint meaningful everywhere else.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 pub mod bench;
 pub mod check;
 pub mod cli;
@@ -35,6 +44,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod ghost;
 pub mod jsonx;
 pub mod metrics;
 pub mod models;

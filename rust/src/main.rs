@@ -20,13 +20,17 @@ use anyhow::{bail, Context, Result};
 use grad_cnns::bench::Protocol;
 use grad_cnns::cli::{subcommand, Command};
 use grad_cnns::config::{Config, ExperimentConfig};
-use grad_cnns::coordinator::{Checkpoint, GradRequest, ServiceConfig, ServiceHandle, Trainer};
+use grad_cnns::coordinator::{
+    Checkpoint, GradRequest, NativeServiceConfig, ServiceConfig, ServiceHandle, Trainer,
+};
 use grad_cnns::data::GaussianImages;
+use grad_cnns::experiments::NativeSweepOptions;
+use grad_cnns::ghost::{self, ClippedStepPlanner};
 use grad_cnns::models::{ModelOracle, ModelSpec};
 use grad_cnns::privacy::DpSgdAccountant;
-use grad_cnns::runtime::{HostValue, Registry};
+use grad_cnns::runtime::{HostValue, NativeBackend, Registry};
 use grad_cnns::strategies::{Strategy, StrategyRunner};
-use grad_cnns::tensor::Tensor;
+use grad_cnns::tensor::{clip_reduce, Tensor};
 use grad_cnns::{experiments, models, rng};
 
 fn main() {
@@ -69,9 +73,12 @@ fn print_usage() {
 usage: repro <subcommand> [options]
 
   train            DP-SGD training loop (the paper's §1 use case);
-                   --backend native|pjrt|auto — native needs no artifacts
-  serve            per-example-gradient service demo (dynamic batching; pjrt)
-  bench-strategies native naive/multi/crb sweep — runs on a clean checkout
+                   --backend native|pjrt|auto — native needs no artifacts;
+                   --strategy ghostnorm for batch-independent gradient memory
+  serve            per-example-gradient service demo (dynamic batching);
+                   --backend native serves ghost norms with zero artifacts
+  bench-strategies native naive/multi/crb/ghostnorm sweep (strategy × batch ×
+                   model dims → BENCH_strategies.json) — clean checkout
   bench-fig1       channel-rate sweep, kernel 3       (paper Fig. 1; pjrt)
   bench-fig2       batch-size sweep                   (paper Fig. 2; pjrt)
   bench-fig3       channel-rate sweep, kernel 5       (paper Fig. 3; pjrt)
@@ -94,7 +101,18 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     let cmd = Command::new("train", "DP-SGD training (native backend or step artifact)")
         .opt("config", "TOML config file (see configs/)")
         .opt("backend", "native | pjrt | auto (overrides config)")
-        .opt("strategy", "native strategy: naive | multi | crb (overrides config)")
+        .opt(
+            "strategy",
+            "native strategy: naive | multi | crb | ghostnorm (overrides config)",
+        )
+        .opt(
+            "ghost-norms",
+            "ghostnorm layer policy: auto | ghost | direct (overrides config)",
+        )
+        .opt(
+            "grad-dump",
+            "write one batch's per-example gradients to this CSV after training",
+        )
         .opt("threads", "native worker threads, 0 = all cores (overrides config)")
         .opt_default("artifacts", "artifacts", "artifacts dir")
         .opt("step-artifact", "step artifact name (overrides config)")
@@ -119,6 +137,8 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     for (cli_key, cfg_key) in [
         ("backend", "train.backend"),
         ("strategy", "train.strategy"),
+        ("ghost-norms", "train.ghost_norms"),
+        ("grad-dump", "train.grad_dump"),
         ("threads", "train.threads"),
         ("step-artifact", "train.step_artifact"),
         ("init-artifact", "train.init_artifact"),
@@ -191,56 +211,41 @@ size = 2048
 
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let cmd = Command::new("serve", "per-example gradient service demo")
-        .opt_default("artifacts", "artifacts", "artifacts dir")
-        .opt_default("artifact", "core_toy_crb_pallas_grads_b4", "grads artifact")
+        .opt_default(
+            "backend",
+            "auto",
+            "native (ghost-norm engine, no artifacts) | pjrt | auto",
+        )
+        .opt("config", "TOML config for the native model ([model] section)")
+        .opt_default("artifacts", "artifacts", "artifacts dir (pjrt)")
+        .opt_default("artifact", "core_toy_crb_pallas_grads_b4", "grads artifact (pjrt)")
+        .opt_default("batch", "8", "max dynamic batch (native)")
         .opt_default("workers", "2", "worker threads")
         .opt_default("requests", "64", "number of requests to replay")
         .opt_default("max-wait-ms", "20", "batch deadline (ms)")
         .opt_default("seed", "7", "rng seed");
     let args = cmd.parse(rest)?;
     let dir = args.str_or("artifacts", "artifacts");
-    let artifact = args.str_or("artifact", "core_toy_crb_pallas_grads_b4");
     let n_requests = args.usize_or("requests", 64)?;
     let seed = args.u64_or("seed", 7)?;
+    let workers = args.usize_or("workers", 2)?;
+    let max_wait = std::time::Duration::from_millis(args.u64_or("max-wait-ms", 20)?);
 
-    // frozen params for the service: jax init via the matching init artifact
-    let registry = Registry::open(&dir)?;
-    let meta = registry.manifest().get(&artifact)?.clone();
-    let spec = registry.validate_model(&artifact)?;
-    let init_name = format!(
-        "{}_init",
-        artifact
-            .split("_naive_")
-            .next()
-            .unwrap()
-            .split("_crb")
-            .next()
-            .unwrap()
-            .split("_multi_")
-            .next()
-            .unwrap()
-    );
-    let theta = match registry.run(&init_name, &[HostValue::scalar_i32(seed as i32)]) {
-        Ok(out) => out.into_iter().next().unwrap().into_f32()?,
-        Err(_) => {
-            let p = meta.inputs[0].element_count();
-            let mut t = vec![0.0f32; p];
-            rng::Xoshiro256pp::seed_from_u64(seed).fill_gaussian(&mut t, 0.1);
-            t
+    let use_pjrt = match args.str_or("backend", "auto").as_str() {
+        "native" => false,
+        "pjrt" => true,
+        "auto" => {
+            std::path::Path::new(&dir).join("manifest.json").exists() && xla::is_available()
         }
+        other => bail!("unknown serve backend {other:?} (want native | pjrt | auto)"),
     };
-    drop(registry);
 
-    let svc = ServiceHandle::start(
-        ServiceConfig {
-            artifact: artifact.clone(),
-            artifacts_dir: dir,
-            workers: args.usize_or("workers", 2)?,
-            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 20)?),
-            queue_capacity: 256,
-        },
-        theta,
-    )?;
+    let (svc, spec) = if use_pjrt {
+        serve_start_pjrt(&args, &dir, workers, max_wait, seed)?
+    } else {
+        serve_start_native(&args, workers, max_wait, seed)?
+    };
+    println!("service: {}", svc.label());
 
     let (c, h, w) = spec.input_shape;
     let data = GaussianImages::generate(n_requests, (c, h, w), spec.num_classes, seed);
@@ -275,6 +280,87 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     println!("{}", svc.metrics.snapshot());
     svc.shutdown();
     Ok(())
+}
+
+/// PJRT service: frozen params via the matching init artifact.
+fn serve_start_pjrt(
+    args: &grad_cnns::cli::Args,
+    dir: &str,
+    workers: usize,
+    max_wait: std::time::Duration,
+    seed: u64,
+) -> Result<(ServiceHandle, ModelSpec)> {
+    let artifact = args.str_or("artifact", "core_toy_crb_pallas_grads_b4");
+    let registry = Registry::open(dir)?;
+    let meta = registry.manifest().get(&artifact)?.clone();
+    let spec = registry.validate_model(&artifact)?;
+    let init_name = format!(
+        "{}_init",
+        artifact
+            .split("_naive_")
+            .next()
+            .unwrap()
+            .split("_crb")
+            .next()
+            .unwrap()
+            .split("_multi_")
+            .next()
+            .unwrap()
+    );
+    let theta = match registry.run(&init_name, &[HostValue::scalar_i32(seed as i32)]) {
+        Ok(out) => out.into_iter().next().unwrap().into_f32()?,
+        Err(_) => {
+            let p = meta.inputs[0].element_count();
+            let mut t = vec![0.0f32; p];
+            rng::Xoshiro256pp::seed_from_u64(seed).fill_gaussian(&mut t, 0.1);
+            t
+        }
+    };
+    drop(registry);
+    let svc = ServiceHandle::start(
+        ServiceConfig {
+            artifact,
+            artifacts_dir: dir.to_string(),
+            workers,
+            max_wait,
+            queue_capacity: 256,
+        },
+        theta,
+    )?;
+    Ok((svc, spec))
+}
+
+/// Native ghost-norm service: model from the config's `[model]`
+/// section (or the default toy CNN), native He init — answers the
+/// norm-only query with zero artifacts.
+fn serve_start_native(
+    args: &grad_cnns::cli::Args,
+    workers: usize,
+    max_wait: std::time::Duration,
+    seed: u64,
+) -> Result<(ServiceHandle, ModelSpec)> {
+    let cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::parse("[train]\nbackend = \"native\"\n")?,
+    };
+    let exp = ExperimentConfig::from_config(&cfg)?;
+    let spec = ModelSpec::from_manifest(&exp.model)?;
+    let theta = NativeBackend::init_vector(&spec, seed);
+    let planner = ClippedStepPlanner::new(&spec, &exp.ghost_norms)?;
+    println!("ghost-norm plan: {}", planner.summary());
+    let svc = ServiceHandle::start_native(
+        NativeServiceConfig {
+            model: spec.clone(),
+            batch: args.usize_or("batch", 8)?,
+            workers,
+            threads: exp.threads,
+            mode: exp.ghost_norms.clone(),
+            max_wait,
+            queue_capacity: 256,
+        },
+        theta,
+    )?;
+    Ok((svc, spec))
 }
 
 // ---------------------------------------------------------------------------
@@ -338,27 +424,55 @@ fn cmd_bench_ablation(rest: &[String]) -> Result<()> {
     experiments::emit(&[table], &report_dir, "ablation")
 }
 
-/// Native strategy sweep: needs no artifacts, runs anywhere.
+/// Native strategy sweep (strategy × batch × model dims, clipped
+/// batch gradient, incl. ghostnorm): needs no artifacts, runs
+/// anywhere. Writes `BENCH_strategies.json` for the perf trajectory.
 fn cmd_bench_strategies(rest: &[String]) -> Result<()> {
-    let cmd = Command::new("bench-strategies", "native naive/multi/crb sweep")
-        .opt_default("batches", "20", "batches per measurement (paper: 20)")
-        .opt_default("reps", "3", "repetitions (paper: 10)")
-        .opt_default("warmup", "1", "warmup measurements")
-        .opt_default("batch", "8", "batch size")
-        .opt_default("threads", "0", "worker threads (0 = all cores)")
-        .opt_default("report-dir", "reports", "md/csv output dir");
+    let cmd = Command::new(
+        "bench-strategies",
+        "native naive/multi/crb/ghostnorm sweep",
+    )
+    .opt_default("batches", "20", "batches per measurement (paper: 20)")
+    .opt_default("reps", "3", "repetitions (paper: 10)")
+    .opt_default("warmup", "1", "warmup measurements")
+    .opt("batch", "batch size; repeat for a sweep (default: 4 8 16)")
+    .opt_default("threads", "0", "worker threads (0 = all cores)")
+    .opt_default("report-dir", "reports", "md/csv output dir")
+    .opt_default("json", "BENCH_strategies.json", "machine-readable results path")
+    .flag("quick", "tiny CI smoke sweep (1 rate, B=4, 1 rep)");
     let args = cmd.parse(rest)?;
-    let proto = Protocol {
-        warmup: args.usize_or("warmup", 1)?,
-        reps: args.usize_or("reps", 3)?,
+    let opts = if args.has_flag("quick") {
+        NativeSweepOptions::quick()
+    } else {
+        let batch_sizes = {
+            let given = args.get_all("batch");
+            if given.is_empty() {
+                vec![4, 8, 16]
+            } else {
+                given
+                    .iter()
+                    .map(|v| {
+                        v.parse::<usize>()
+                            .map_err(|_| anyhow::anyhow!("--batch: expected integer, got {v:?}"))
+                    })
+                    .collect::<Result<Vec<usize>>>()?
+            }
+        };
+        NativeSweepOptions::standard(
+            args.usize_or("batches", 20)?,
+            Protocol {
+                warmup: args.usize_or("warmup", 1)?,
+                reps: args.usize_or("reps", 3)?,
+            },
+            args.usize_or("threads", 0)?,
+            batch_sizes,
+        )
     };
-    let table = experiments::run_native_sweep(
-        args.usize_or("batches", 20)?,
-        proto,
-        args.usize_or("threads", 0)?,
-        args.usize_or("batch", 8)?,
-    )?;
-    experiments::emit(&[table], &args.str_or("report-dir", "reports"), "native")
+    experiments::run_native_sweep_with_reports(
+        &opts,
+        &args.str_or("report-dir", "reports"),
+        &args.str_or("json", "BENCH_strategies.json"),
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -517,7 +631,7 @@ fn selftest_native(tol: f32, seed: u64, threads: usize) -> Result<()> {
 
         let oracle = ModelOracle::new(spec.clone());
         let (want, want_losses) = oracle.perex_grads(&theta, &xt, &y);
-        for strategy in Strategy::ALL {
+        for strategy in Strategy::MATERIALIZING {
             let runner = StrategyRunner::new(spec.clone(), strategy, threads);
             let (got, losses) = runner.perex_grads(&theta, &xt, &y)?;
             let diff = got.max_abs_diff(&want);
@@ -536,6 +650,35 @@ fn selftest_native(tol: f32, seed: u64, threads: usize) -> Result<()> {
             if !ok {
                 failures += 1;
             }
+        }
+        // ghostnorm: no (B, P) matrix to compare — check the two
+        // quantities it produces against the oracle's clip-then-sum
+        let clip = 1.0f32;
+        let (want_sum, want_norms) = clip_reduce(&want, clip);
+        let planner = ClippedStepPlanner::new(&spec, &Default::default())?;
+        let out = ghost::clipped_step(&planner, &theta, &xt, &y, clip, threads)?;
+        let norm_diff = out
+            .norms
+            .iter()
+            .zip(&want_norms)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let sum_diff = out
+            .grad_sum
+            .iter()
+            .zip(&want_sum)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let ok = norm_diff <= tol && sum_diff <= tol;
+        println!(
+            "{:<24} {:<8} norms Δ {norm_diff:.2e}  clipped Σ Δ {sum_diff:.2e}  {} (plan: {})",
+            tag,
+            "ghostnorm",
+            if ok { "OK" } else { "FAIL" },
+            planner.summary()
+        );
+        if !ok {
+            failures += 1;
         }
     }
     if failures > 0 {

@@ -81,7 +81,14 @@ pub struct ModelSpec {
 
 /// PyTorch conv output size; 0 signals a collapsed (invalid) dimension
 /// instead of wrapping, so builders can `bail!` cleanly.
-fn conv_out(h: usize, w: usize, k: (usize, usize), s: (usize, usize), p: (usize, usize), d: (usize, usize)) -> (usize, usize) {
+fn conv_out(
+    h: usize,
+    w: usize,
+    k: (usize, usize),
+    s: (usize, usize),
+    p: (usize, usize),
+    d: (usize, usize),
+) -> (usize, usize) {
     let dim = |x: usize, k: usize, s: usize, p: usize, d: usize| {
         (x + 2 * p)
             .checked_sub(d * (k - 1) + 1)
@@ -337,7 +344,14 @@ fn build_alexnet(
     let mult = cfg.get("width_mult").and_then(|v| v.as_f64()).unwrap_or(0.25);
     let (mut c, mut h, mut w) = input_shape;
     let mut layers = Vec::new();
-    let conv = |layers: &mut Vec<LayerSpec>, c: &mut usize, h: &mut usize, w: &mut usize, out_ch: usize, k: usize, s: usize, p: usize| {
+    let conv = |layers: &mut Vec<LayerSpec>,
+                c: &mut usize,
+                h: &mut usize,
+                w: &mut usize,
+                out_ch: usize,
+                k: usize,
+                s: usize,
+                p: usize| {
         layers.push(LayerSpec::Conv2d {
             in_ch: *c,
             out_ch,
@@ -392,7 +406,9 @@ fn build_alexnet(
     Ok(layers)
 }
 
-const VGG16_PLAN: &[i32] = &[64, 64, -1, 128, 128, -1, 256, 256, 256, -1, 512, 512, 512, -1, 512, 512, 512, -1];
+const VGG16_PLAN: &[i32] = &[
+    64, 64, -1, 128, 128, -1, 256, 256, 256, -1, 512, 512, 512, -1, 512, 512, 512, -1,
+];
 
 fn build_vgg16(
     cfg: &Value,

@@ -222,7 +222,8 @@ mod tests {
 
     #[test]
     fn subsampled_matches_direct_space() {
-        for &(q, sigma, alpha) in &[(0.01, 1.1, 2u64), (0.1, 2.0, 5), (0.05, 0.8, 8), (0.5, 1.5, 3)] {
+        let cases = [(0.01, 1.1, 2u64), (0.1, 2.0, 5), (0.05, 0.8, 8), (0.5, 1.5, 3)];
+        for &(q, sigma, alpha) in &cases {
             let a = rdp_subsampled_gaussian(q, sigma, alpha);
             let b = rdp_direct(q, sigma, alpha);
             assert!((a - b).abs() < 1e-9, "q={q} s={sigma} a={alpha}: {a} vs {b}");

@@ -4,9 +4,10 @@
 //!
 //! * **native** ([`native::NativeBackend`]) — the per-example gradient
 //!   step (forward, per-example backward via a `naive` / `multi` /
-//!   `crb` strategy, clip, noise, SGD update) in pure rust,
-//!   multi-threaded across the batch. Needs nothing beyond the crate:
-//!   the default on a clean checkout.
+//!   `crb` strategy — or the non-materializing `ghostnorm` engine —
+//!   then clip, noise, SGD update) in pure rust, multi-threaded
+//!   across the batch. Needs nothing beyond the crate: the default on
+//!   a clean checkout.
 //! * **pjrt** ([`registry::PjrtBackend`]) — the original path: AOT
 //!   artifacts lowered by `make artifacts` (HLO text + manifest),
 //!   compiled and executed through a PJRT CPU client.
@@ -66,6 +67,14 @@ pub trait Backend {
     fn set_theta(&mut self, theta: &[f32]) -> Result<()>;
     /// One DP-SGD step on a minibatch; `seed` keys the gaussian noise.
     fn step(&mut self, x: &Tensor, y: &[i32], seed: i64) -> Result<StepOutcome>;
+    /// Per-example gradients `(B, P)` + losses for one batch, for the
+    /// `train.grad_dump` debug export. `Ok(None)` when the backend
+    /// cannot materialize them (the PJRT step artifact is fused;
+    /// `ghostnorm` errors — config validation rejects that combination
+    /// up front).
+    fn perex_grads(&mut self, _x: &Tensor, _y: &[i32]) -> Result<Option<(Tensor, Vec<f32>)>> {
+        Ok(None)
+    }
     /// Whether [`Backend::eval`] is available.
     fn has_eval(&self) -> bool;
     /// Fixed eval batch size, when the backend requires one (static
@@ -78,13 +87,28 @@ pub trait Backend {
 /// Build the backend the config asks for.
 pub fn open_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
     let manifest_present = Path::new(&cfg.artifacts_dir).join("manifest.json").exists();
+    let strategy = Strategy::parse(&cfg.strategy)?;
     let use_pjrt = match cfg.backend.as_str() {
         "native" => false,
-        "pjrt" => true,
+        "pjrt" => {
+            if strategy == Strategy::GhostNorm {
+                bail!(
+                    "strategy \"ghostnorm\" is native-only: pjrt step artifacts implement \
+                     the materializing strategies (use backend = \"native\" or \"auto\")"
+                );
+            }
+            true
+        }
         // auto only picks pjrt when it can actually drive it: manifest
-        // + real runtime + a configured step artifact; otherwise the
-        // documented fallback is native, never an error.
-        "auto" => manifest_present && xla::is_available() && cfg.step_artifact.is_some(),
+        // + real runtime + a configured step artifact — and never for
+        // ghostnorm, which only the native backend implements;
+        // otherwise the documented fallback is native, never an error.
+        "auto" => {
+            strategy != Strategy::GhostNorm
+                && manifest_present
+                && xla::is_available()
+                && cfg.step_artifact.is_some()
+        }
         other => bail!("unknown backend {other:?} (want native | pjrt | auto)"),
     };
     if use_pjrt {
@@ -92,14 +116,15 @@ pub fn open_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
         Ok(Box::new(PjrtBackend::new(registry, cfg)?))
     } else {
         let spec = ModelSpec::from_manifest(&cfg.model)?;
-        let strategy = Strategy::parse(&cfg.strategy)?;
-        Ok(Box::new(NativeBackend::new(
+        let backend = NativeBackend::with_mode(
             spec,
             strategy,
             cfg.threads,
             cfg.clip_norm,
             cfg.noise_multiplier,
             cfg.lr,
-        )))
+            &cfg.ghost_norms,
+        )?;
+        Ok(Box::new(backend))
     }
 }

@@ -8,12 +8,18 @@
 //! no manifest and no shared libraries, so `repro train` and the
 //! strategy benches run on a clean checkout.
 //!
-//! Determinism contract (matching the artifact step): given the same
-//! `(theta, x, y, seed)` the step is bit-identical regardless of
-//! thread count — workers write disjoint per-example rows, reduction
-//! is single-threaded, and the noise stream is keyed by `seed` alone.
+//! Determinism contract (matching the artifact step): for the
+//! materializing strategies, given the same `(theta, x, y, seed)` the
+//! step is bit-identical regardless of thread count — workers write
+//! disjoint per-example rows, reduction is single-threaded, and the
+//! noise stream is keyed by `seed` alone. The `ghostnorm` strategy's
+//! per-example norms share that guarantee; its clipped-sum reduction
+//! order follows the worker split, so the step is bit-deterministic
+//! for a *fixed* thread count and float-tolerance stable across
+//! thread counts.
 
 use super::{Backend, StepOutcome};
+use crate::ghost::{self, ClippedStepPlanner, GhostMode};
 use crate::models::{LayerSpec, ModelSpec};
 use crate::rng::Xoshiro256pp;
 use crate::strategies::{Strategy, StrategyRunner};
@@ -23,6 +29,8 @@ use anyhow::{bail, Result};
 /// Pure-rust DP-SGD backend.
 pub struct NativeBackend {
     runner: StrategyRunner,
+    /// Present exactly when the strategy is `ghostnorm`.
+    planner: Option<ClippedStepPlanner>,
     theta: Vec<f32>,
     clip: f32,
     sigma: f32,
@@ -38,18 +46,43 @@ impl NativeBackend {
         sigma: f32,
         lr: f32,
     ) -> NativeBackend {
+        Self::with_mode(spec, strategy, threads, clip, sigma, lr, &GhostMode::default())
+            .expect("the default (auto) ghost plan cannot fail on a valid spec")
+    }
+
+    /// Full constructor: `mode` configures the ghost-norm layer paths
+    /// (`[train] ghost_norms`; ignored for materializing strategies).
+    /// Errors on an invalid per-layer override list.
+    pub fn with_mode(
+        spec: ModelSpec,
+        strategy: Strategy,
+        threads: usize,
+        clip: f32,
+        sigma: f32,
+        lr: f32,
+        mode: &GhostMode,
+    ) -> Result<NativeBackend> {
         let p = spec.param_count();
-        NativeBackend {
+        let planner = (strategy == Strategy::GhostNorm)
+            .then(|| ClippedStepPlanner::new(&spec, mode))
+            .transpose()?;
+        Ok(NativeBackend {
             runner: StrategyRunner::new(spec, strategy, threads),
+            planner,
             theta: vec![0.0; p],
             clip,
             sigma,
             lr,
-        }
+        })
     }
 
     pub fn strategy(&self) -> Strategy {
         self.runner.strategy
+    }
+
+    /// The ghost-norm plan, when the strategy is `ghostnorm`.
+    pub fn ghost_planner(&self) -> Option<&ClippedStepPlanner> {
+        self.planner.as_ref()
     }
 
     /// He-style initialization, deterministic by seed: conv/linear
@@ -128,9 +161,28 @@ impl Backend for NativeBackend {
     }
 
     fn step(&mut self, x: &Tensor, y: &[i32], seed: i64) -> Result<StepOutcome> {
-        let (grads, losses) = self.runner.perex_grads(&self.theta, x, y)?;
-        // Eq. 1: per-example clip to norm C, then sum
-        let (mut gsum, norms) = tensor::clip_reduce(&grads, self.clip);
+        // Eq. 1: per-example clip to norm C, then sum — materializing
+        // strategies form (B, P) and clip-reduce; ghostnorm produces
+        // the same two quantities with batch-level gradient memory.
+        let (mut gsum, norms, losses) = if self.runner.strategy == Strategy::GhostNorm {
+            let planner = self
+                .planner
+                .as_ref()
+                .expect("ghostnorm backend always carries a planner");
+            let out = ghost::clipped_step(
+                planner,
+                &self.theta,
+                x,
+                y,
+                self.clip,
+                self.runner.threads,
+            )?;
+            (out.grad_sum, out.norms, out.losses)
+        } else {
+            let (grads, losses) = self.runner.perex_grads(&self.theta, x, y)?;
+            let (gsum, norms) = tensor::clip_reduce(&grads, self.clip);
+            (gsum, norms, losses)
+        };
         // N(0, (σC)² I) on the clipped sum, keyed by the step seed
         if self.sigma > 0.0 {
             let mut rng = Xoshiro256pp::seed_from_u64(
@@ -149,6 +201,16 @@ impl Backend for NativeBackend {
             mean_loss: losses.iter().sum::<f32>() / b,
             norms,
         })
+    }
+
+    fn perex_grads(&mut self, x: &Tensor, y: &[i32]) -> Result<Option<(Tensor, Vec<f32>)>> {
+        if self.runner.strategy == Strategy::GhostNorm {
+            bail!(
+                "strategy \"ghostnorm\" cannot export per-example gradients (it never \
+                 materializes them); use naive | multi | crb"
+            );
+        }
+        self.runner.perex_grads(&self.theta, x, y).map(Some)
     }
 
     fn has_eval(&self) -> bool {
@@ -231,6 +293,50 @@ mod tests {
             a.iter().zip(&c2).any(|(p, q)| (p - q).abs() > 1e-7),
             "different seeds must differ"
         );
+    }
+
+    #[test]
+    fn ghost_step_matches_crb_step_without_noise() {
+        let s = spec();
+        let mut rng = Xoshiro256pp::seed_from_u64(17);
+        let (c, h, w) = s.input_shape;
+        let mut x = vec![0.0f32; 3 * c * h * w];
+        rng.fill_gaussian(&mut x, 1.0);
+        let x = Tensor::from_vec(&[3, c, h, w], x);
+        let y = vec![0i32, 2, 3];
+        let run = |strategy: Strategy| {
+            let mut be = NativeBackend::new(s.clone(), strategy, 2, 0.8, 0.0, 0.1);
+            be.init_theta(4).unwrap();
+            let out = be.step(&x, &y, 1).unwrap();
+            (be.theta().unwrap(), out)
+        };
+        let (theta_crb, out_crb) = run(Strategy::Crb);
+        let (theta_ghost, out_ghost) = run(Strategy::GhostNorm);
+        for (a, b) in theta_crb.iter().zip(&theta_ghost) {
+            assert!((a - b).abs() < 1e-5, "theta diverged: {a} vs {b}");
+        }
+        for (a, b) in out_crb.norms.iter().zip(&out_ghost.norms) {
+            assert!((a - b).abs() < 1e-4, "norms diverged: {a} vs {b}");
+        }
+        assert!((out_crb.mean_loss - out_ghost.mean_loss).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ghost_backend_rejects_perex_export() {
+        let s = spec();
+        let mut be = NativeBackend::new(s.clone(), Strategy::GhostNorm, 1, 1.0, 0.0, 0.1);
+        be.init_theta(1).unwrap();
+        assert!(be.ghost_planner().is_some());
+        let (c, h, w) = s.input_shape;
+        let x = Tensor::zeros(&[2, c, h, w]);
+        let err = be.perex_grads(&x, &[0, 1]).unwrap_err().to_string();
+        assert!(err.contains("ghostnorm"), "{err}");
+        // materializing backends export fine
+        let mut be = NativeBackend::new(s, Strategy::Multi, 1, 1.0, 0.0, 0.1);
+        be.init_theta(1).unwrap();
+        let (g, l) = be.perex_grads(&x, &[0, 1]).unwrap().unwrap();
+        assert_eq!(g.shape[0], 2);
+        assert_eq!(l.len(), 2);
     }
 
     #[test]

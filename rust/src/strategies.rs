@@ -1,4 +1,4 @@
-//! The paper's three per-example gradient strategies, natively in rust.
+//! The per-example gradient strategies, natively in rust.
 //!
 //! The lowered artifacts implement `naive` / `multi` / `crb` in jax
 //! (build time, python); this module implements the same three
@@ -15,8 +15,14 @@
 //!   over im2col patch matrices, computed with the cache-blocked
 //!   matmuls in [`tensor`].
 //!
-//! All three run multi-threaded across the batch via
-//! `std::thread::scope` ([`StrategyRunner`]), write into disjoint
+//! A fourth strategy, [`Strategy::GhostNorm`], never materializes the
+//! `(B, P)` per-example gradient matrix at all — it lives in
+//! [`crate::ghost`] and only the DP-SGD products (per-example norms,
+//! the clipped batch gradient) exist. [`StrategyRunner::perex_grads`]
+//! therefore rejects it with a pointer to the ghost engine.
+//!
+//! The materializing strategies run multi-threaded across the batch
+//! via `std::thread::scope` ([`StrategyRunner`]), write into disjoint
 //! slices of the output (so results are bit-identical for any thread
 //! count), and must agree with [`ModelOracle`] within 1e-4 — enforced
 //! by `tests/native_backend.rs`.
@@ -31,18 +37,35 @@ pub enum Strategy {
     Naive,
     Multi,
     Crb,
+    /// Ghost-norm engine: per-example norms from layer activations and
+    /// backprops (Goodfellow 2015), clipped batch gradient from a
+    /// reweighted second backward pass (Lee & Kifer 2020) — gradient
+    /// memory independent of the batch size. See [`crate::ghost`].
+    GhostNorm,
 }
 
 impl Strategy {
-    /// All strategies, in the paper's naming order.
-    pub const ALL: [Strategy; 3] = [Strategy::Naive, Strategy::Multi, Strategy::Crb];
+    /// All strategies, materializing ones first in the paper's naming
+    /// order, then the ghost-norm engine.
+    pub const ALL: [Strategy; 4] = [
+        Strategy::Naive,
+        Strategy::Multi,
+        Strategy::Crb,
+        Strategy::GhostNorm,
+    ];
+
+    /// The strategies that materialize the full `(B, P)` per-example
+    /// gradient matrix (everything [`StrategyRunner::perex_grads`]
+    /// accepts).
+    pub const MATERIALIZING: [Strategy; 3] = [Strategy::Naive, Strategy::Multi, Strategy::Crb];
 
     pub fn parse(s: &str) -> Result<Strategy> {
         match s {
             "naive" => Ok(Strategy::Naive),
             "multi" => Ok(Strategy::Multi),
             "crb" => Ok(Strategy::Crb),
-            other => bail!("unknown strategy {other:?} (want naive | multi | crb)"),
+            "ghostnorm" => Ok(Strategy::GhostNorm),
+            other => bail!("unknown strategy {other:?} (want naive | multi | crb | ghostnorm)"),
         }
     }
 
@@ -51,7 +74,13 @@ impl Strategy {
             Strategy::Naive => "naive",
             Strategy::Multi => "multi",
             Strategy::Crb => "crb",
+            Strategy::GhostNorm => "ghostnorm",
         }
+    }
+
+    /// Whether this strategy produces the full `(B, P)` matrix.
+    pub fn is_materializing(&self) -> bool {
+        !matches!(self, Strategy::GhostNorm)
     }
 }
 
@@ -86,8 +115,17 @@ impl StrategyRunner {
     }
 
     /// Per-example gradients `(B, P)` plus per-example losses `(B,)`,
-    /// in the shared flat packing order.
+    /// in the shared flat packing order. Materializing strategies
+    /// only: `ghostnorm` never forms this matrix (that is its point)
+    /// and is rejected here.
     pub fn perex_grads(&self, theta: &[f32], x: &Tensor, y: &[i32]) -> Result<(Tensor, Vec<f32>)> {
+        if !self.strategy.is_materializing() {
+            bail!(
+                "strategy \"ghostnorm\" does not materialize per-example gradients; \
+                 use ghost::perex_norms / ghost::clipped_step, or a materializing \
+                 strategy (naive | multi | crb)"
+            );
+        }
         let bsz = x.shape[0];
         if y.len() != bsz {
             bail!("labels length {} != batch {bsz}", y.len());
@@ -162,8 +200,9 @@ impl StrategyRunner {
 }
 
 /// Contiguous example ranges, one per worker (earlier ranges take the
-/// remainder so sizes differ by at most one).
-fn split_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+/// remainder so sizes differ by at most one). Shared with the ghost
+/// engine, whose workers fan out the same way.
+pub(crate) fn split_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
     let parts = parts.clamp(1, n.max(1));
     let base = n / parts;
     let extra = n % parts;
@@ -181,7 +220,7 @@ fn split_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
 }
 
 /// Copy examples `[start, end)` into a standalone tensor.
-fn example_slice(x: &Tensor, start: usize, end: usize) -> Tensor {
+pub(crate) fn example_slice(x: &Tensor, start: usize, end: usize) -> Tensor {
     let ex: usize = x.shape[1..].iter().product();
     let mut shape = x.shape.clone();
     shape[0] = end - start;
@@ -202,6 +241,7 @@ fn run_range(
 ) -> Result<()> {
     let p = spec.param_count();
     match strategy {
+        Strategy::GhostNorm => unreachable!("ghostnorm is rejected in perex_grads"),
         Strategy::Naive => {
             let oracle = ModelOracle::new(spec.clone());
             for (i, b) in (start..end).enumerate() {
@@ -232,7 +272,9 @@ fn run_range(
 // The crb walk: forward + per-example backward with the fast kernels
 // ---------------------------------------------------------------------------
 
-enum Saved {
+/// What each layer's backward pass needs from the forward pass —
+/// shared by the crb walk here and the ghost engine's two passes.
+pub(crate) enum Saved {
     Conv { input: Tensor },
     Norm { xhat: Tensor, inv_std: Vec<f32> },
     Linear { input: Tensor },
@@ -241,7 +283,7 @@ enum Saved {
     Flatten { in_shape: Vec<usize> },
 }
 
-fn conv_args(l: &LayerSpec) -> ConvArgs {
+pub(crate) fn conv_args(l: &LayerSpec) -> ConvArgs {
     match l {
         LayerSpec::Conv2d {
             stride,
@@ -260,7 +302,7 @@ fn conv_args(l: &LayerSpec) -> ConvArgs {
 }
 
 /// `(weights, bias)` slices of flat theta for layer `li`.
-fn layer_params<'t>(
+pub(crate) fn layer_params<'t>(
     spec: &ModelSpec,
     offsets: &[usize],
     theta: &'t [f32],
@@ -315,21 +357,16 @@ pub fn fast_forward(spec: &ModelSpec, theta: &[f32], x: &Tensor) -> Tensor {
     cur
 }
 
-/// Per-example gradients via the chain-rule decomposition with the
-/// Algorithm-2 im2col kernels: the native `crb` strategy. Same output
-/// contract as [`ModelOracle::perex_grads`].
-pub fn crb_perex_grads(
+/// Forward pass with the fast kernels, saving what any backward walk
+/// needs per layer (the "tape"). Used by the crb strategy's
+/// per-example backward and by both ghost-engine passes.
+pub(crate) fn forward_with_tape(
     spec: &ModelSpec,
     theta: &[f32],
     x: &Tensor,
-    labels: &[i32],
-) -> (Tensor, Vec<f32>) {
+) -> (Tensor, Vec<Saved>) {
     assert_eq!(theta.len(), spec.param_count(), "theta length mismatch");
-    let bsz = x.shape[0];
-    let p_total = spec.param_count();
     let offsets = spec.param_offsets();
-
-    // forward, saving what the backward pass needs
     let mut cur = x.clone();
     let mut saved = Vec::with_capacity(spec.layers.len());
     for (li, l) in spec.layers.iter().enumerate() {
@@ -385,7 +422,23 @@ pub fn crb_perex_grads(
             }
         }
     }
-    let (losses, mut dy) = tensor::softmax_xent(&cur, labels);
+    (cur, saved)
+}
+
+/// Per-example gradients via the chain-rule decomposition with the
+/// Algorithm-2 im2col kernels: the native `crb` strategy. Same output
+/// contract as [`ModelOracle::perex_grads`].
+pub fn crb_perex_grads(
+    spec: &ModelSpec,
+    theta: &[f32],
+    x: &Tensor,
+    labels: &[i32],
+) -> (Tensor, Vec<f32>) {
+    let bsz = x.shape[0];
+    let p_total = spec.param_count();
+    let offsets = spec.param_offsets();
+    let (logits, saved) = forward_with_tape(spec, theta, x);
+    let (losses, mut dy) = tensor::softmax_xent(&logits, labels);
 
     // backward: Eq. 4 (conv, via im2col matmuls) + Eq. 2 (linear)
     let mut pergrads = Tensor::zeros(&[bsz, p_total]);
@@ -504,6 +557,20 @@ mod tests {
             assert_eq!(Strategy::parse(s.name()).unwrap(), s);
         }
         assert!(Strategy::parse("ghost").is_err());
+        assert!(!Strategy::GhostNorm.is_materializing());
+        assert!(Strategy::MATERIALIZING.iter().all(|s| s.is_materializing()));
+    }
+
+    #[test]
+    fn ghostnorm_rejects_perex_materialization() {
+        let spec = toy_spec("none");
+        let (theta, x, y) = random_problem(&spec, 2, 3);
+        let runner = StrategyRunner::new(spec, Strategy::GhostNorm, 1);
+        let err = runner.perex_grads(&theta, &x, &y).unwrap_err().to_string();
+        assert!(err.contains("ghost"), "{err}");
+        // the batched forward still works (eval path)
+        let logits = runner.forward(&theta, &x).unwrap();
+        assert_eq!(logits.shape[0], 2);
     }
 
     #[test]
@@ -525,7 +592,7 @@ mod tests {
             let (theta, x, y) = random_problem(&spec, 5, 42);
             let oracle = ModelOracle::new(spec.clone());
             let (want, want_losses) = oracle.perex_grads(&theta, &x, &y);
-            for strategy in Strategy::ALL {
+            for strategy in Strategy::MATERIALIZING {
                 let runner = StrategyRunner::new(spec.clone(), strategy, 2);
                 let (got, losses) = runner.perex_grads(&theta, &x, &y).unwrap();
                 let diff = got.max_abs_diff(&want);
@@ -541,7 +608,7 @@ mod tests {
     fn thread_count_does_not_change_bits() {
         let spec = toy_spec("none");
         let (theta, x, y) = random_problem(&spec, 6, 7);
-        for strategy in Strategy::ALL {
+        for strategy in Strategy::MATERIALIZING {
             let base = StrategyRunner::new(spec.clone(), strategy, 1)
                 .perex_grads(&theta, &x, &y)
                 .unwrap();

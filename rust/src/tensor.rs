@@ -16,16 +16,94 @@
 //!   strategy (`strategies.rs`) is built from these; property tests
 //!   pin each fast kernel to its oracle twin within 1e-4.
 
+/// Process-wide accounting of f32 elements held by live [`Tensor`]s.
+///
+/// Every `Tensor` constructor records its element count and `Drop`
+/// releases it, so `live_elems()` is the current tensor working set
+/// and `peak_elems()` its high-water mark since the last
+/// [`alloc::reset_peak`]. This is how the ghost-norm tests *prove*
+/// the engine's gradient buffers are batch-size independent, and how
+/// `bench-strategies` reports a peak-bytes column. Counters are
+/// global atomics: measurements are only meaningful when nothing else
+/// allocates tensors concurrently (the memory test runs alone in its
+/// own test binary for exactly this reason).
+pub mod alloc {
+    use std::sync::atomic::{AtomicI64, Ordering};
+
+    static LIVE: AtomicI64 = AtomicI64::new(0);
+    static PEAK: AtomicI64 = AtomicI64::new(0);
+
+    pub(super) fn on_alloc(n: usize) {
+        let live = LIVE.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
+        PEAK.fetch_max(live, Ordering::Relaxed);
+    }
+
+    pub(super) fn on_free(n: usize) {
+        LIVE.fetch_sub(n as i64, Ordering::Relaxed);
+    }
+
+    /// f32 elements currently held by live tensors.
+    pub fn live_elems() -> i64 {
+        LIVE.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`live_elems`] since the last [`reset_peak`].
+    pub fn peak_elems() -> i64 {
+        PEAK.load(Ordering::Relaxed)
+    }
+
+    /// Reset the high-water mark to the current live count.
+    pub fn reset_peak() {
+        PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// RAII registration of non-`Tensor` working memory (raw `Vec`
+    /// scratch) in the same ledger, in f32-equivalent elements
+    /// (count f64 buffers double). The ghost engine registers its
+    /// Gram/direct scratch through this so `peak_elems` compares
+    /// fairly against the materializing strategies' tensors.
+    pub struct ScratchGuard {
+        elems: usize,
+    }
+
+    pub fn track_scratch(elems: usize) -> ScratchGuard {
+        on_alloc(elems);
+        ScratchGuard { elems }
+    }
+
+    impl Drop for ScratchGuard {
+        fn drop(&mut self) {
+            on_free(self.elems);
+        }
+    }
+}
+
 /// A dense, row-major f32 tensor.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
 }
 
+// Manual Clone/Drop keep the `alloc` ledger balanced (a derived Clone
+// would allocate without recording, sending `live_elems` negative on
+// drop).
+impl Clone for Tensor {
+    fn clone(&self) -> Tensor {
+        Tensor::from_vec(&self.shape, self.data.clone())
+    }
+}
+
+impl Drop for Tensor {
+    fn drop(&mut self) {
+        alloc::on_free(self.data.len());
+    }
+}
+
 impl Tensor {
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
+        alloc::on_alloc(n);
         Tensor {
             shape: shape.to_vec(),
             data: vec![0.0; n],
@@ -39,6 +117,7 @@ impl Tensor {
             "shape {shape:?} does not match data length {}",
             data.len()
         );
+        alloc::on_alloc(data.len());
         Tensor {
             shape: shape.to_vec(),
             data,
@@ -89,7 +168,7 @@ impl Tensor {
 
     /// L2 norm of the whole tensor.
     pub fn norm(&self) -> f32 {
-        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+        l2_norm(&self.data)
     }
 
     /// Max |a - b| over all elements.
@@ -275,7 +354,11 @@ pub fn conv2d_grad_input(
 }
 
 /// Max-pool forward, recording argmax indices for the backward pass.
-pub fn maxpool2d(x: &Tensor, window: (usize, usize), stride: (usize, usize)) -> (Tensor, Vec<usize>) {
+pub fn maxpool2d(
+    x: &Tensor,
+    window: (usize, usize),
+    stride: (usize, usize),
+) -> (Tensor, Vec<usize>) {
     let (bsz, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let ho = (h - window.0) / stride.0 + 1;
     let wo = (w - window.1) / stride.1 + 1;
@@ -318,23 +401,19 @@ pub fn maxpool2d_grad(dy: &Tensor, arg: &[usize], input_shape: &[usize]) -> Tens
 
 /// ReLU forward.
 pub fn relu(x: &Tensor) -> Tensor {
-    Tensor {
-        shape: x.shape.clone(),
-        data: x.data.iter().map(|v| v.max(0.0)).collect(),
-    }
+    Tensor::from_vec(&x.shape, x.data.iter().map(|v| v.max(0.0)).collect())
 }
 
 /// ReLU backward (mask by pre-activation sign).
 pub fn relu_grad(dy: &Tensor, x_pre: &Tensor) -> Tensor {
-    Tensor {
-        shape: dy.shape.clone(),
-        data: dy
-            .data
+    Tensor::from_vec(
+        &dy.shape,
+        dy.data
             .iter()
             .zip(&x_pre.data)
             .map(|(g, x)| if *x > 0.0 { *g } else { 0.0 })
             .collect(),
-    }
+    )
 }
 
 /// Linear forward: x (B, I) @ w^T (I, J) + b -> (B, J).
@@ -492,6 +571,16 @@ pub fn softmax_xent(logits: &Tensor, labels: &[i32]) -> (Vec<f32>, Tensor) {
     (losses, dl)
 }
 
+/// L2 norm of a flat slice, f64 accumulation — the one definition of
+/// "a per-example gradient norm" shared by [`clip_reduce`], the
+/// coordinator service and the trainer's gradient export.
+pub fn l2_norm(row: &[f32]) -> f32 {
+    row.iter()
+        .map(|v| (*v as f64) * (*v as f64))
+        .sum::<f64>()
+        .sqrt() as f32
+}
+
 /// Per-example global-norm clip + sum — Eq. (1) + aggregation.
 ///
 /// g: (B, P)  ->  (clipped sum (P,), pre-clip norms (B,)).
@@ -501,7 +590,7 @@ pub fn clip_reduce(g: &Tensor, clip: f32) -> (Vec<f32>, Vec<f32>) {
     let mut norms = vec![0.0f32; bsz];
     for b in 0..bsz {
         let row = &g.data[b * p..(b + 1) * p];
-        let norm = row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32;
+        let norm = l2_norm(row);
         norms[b] = norm;
         let scale = 1.0 / (norm / clip).max(1.0);
         for (s, v) in sum.iter_mut().zip(row) {
@@ -862,7 +951,12 @@ mod tests {
             let grad = perex_conv2d_grad(&x, &m, kh, kw, args);
             // finite difference on a few kernel entries, per example
             let eps = 1e-3f32;
-            for &(dd, ci, ky, kx) in &[(0usize, 0usize, 0usize, 0usize), (d - 1, c / args.groups - 1, kh - 1, kw - 1), (1, 0, 1, 1)] {
+            let probes = [
+                (0usize, 0usize, 0usize, 0usize),
+                (d - 1, c / args.groups - 1, kh - 1, kw - 1),
+                (1, 0, 1, 1),
+            ];
+            for &(dd, ci, ky, kx) in &probes {
                 let wi = ((dd * (c / args.groups) + ci) * kh + ky) * kw + kx;
                 let orig = w.data[wi];
                 w.data[wi] = orig + eps;
@@ -879,7 +973,8 @@ mod tests {
                         }
                     }
                     let fd = fd / (2.0 * eps as f64);
-                    let an = grad.data[(((b * d + dd) * (c / args.groups) + ci) * kh + ky) * kw + kx];
+                    let gi = (((b * d + dd) * (c / args.groups) + ci) * kh + ky) * kw + kx;
+                    let an = grad.data[gi];
                     assert!(
                         (fd as f32 - an).abs() < 2e-2,
                         "args {args:?} b={b} fd={fd} analytic={an}"

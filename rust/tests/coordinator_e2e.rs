@@ -208,7 +208,7 @@ fn service_end_to_end_norms_match_direct_run() {
             artifact,
             &[
                 HostValue::f32(&[p], theta),
-                HostValue::f32(&x.shape, x.data),
+                HostValue::f32(&x.shape, x.data.clone()),
                 HostValue::i32(&[4], y),
             ],
         )

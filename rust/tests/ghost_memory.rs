@@ -1,0 +1,91 @@
+//! Peak-allocation property of the ghost-norm engine, asserted via the
+//! tensor allocation counter: the engine's *gradient buffers* are
+//! independent of the batch size (only activations scale with B),
+//! while the materializing strategies hold the full `(B, P)` matrix.
+//!
+//! This is the one test binary that uses the process-global counter
+//! for measurements, so it contains exactly one `#[test]` — nothing
+//! else allocates tensors concurrently.
+
+use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode};
+use grad_cnns::models::ModelSpec;
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::strategies::{Strategy, StrategyRunner};
+use grad_cnns::tensor::{alloc, Tensor};
+
+#[test]
+fn ghost_grad_buffers_are_batch_size_independent() {
+    // one conv + a wide linear head: P ≈ 100k so gradient buffers
+    // dominate activations and the affine decomposition below is
+    // well-conditioned.
+    let spec = ModelSpec::toy_cnn(1, 8, 1.0, 3, "none", (3, 16, 16), 64).unwrap();
+    let p = spec.param_count();
+    assert!(p > 50_000, "model too small for a meaningful test: P={p}");
+    let planner = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let mut theta = vec![0.0f32; p];
+    rng.fill_gaussian(&mut theta, 0.1);
+    let (c, h, w) = spec.input_shape;
+
+    // peak tensor elements above the input batch for one ghost
+    // clipped step, single-threaded so the allocation pattern is
+    // structurally identical across batch sizes
+    let mut ghost_peak = |bsz: usize| -> i64 {
+        let mut x = vec![0.0f32; bsz * c * h * w];
+        rng.fill_gaussian(&mut x, 1.0);
+        let x = Tensor::from_vec(&[bsz, c, h, w], x);
+        let y: Vec<i32> = (0..bsz).map(|i| (i % 64) as i32).collect();
+        alloc::reset_peak();
+        let base = alloc::live_elems();
+        let out = ghost::clipped_step(&planner, &theta, &x, &y, 1.0, 1).unwrap();
+        assert_eq!(out.norms.len(), bsz);
+        assert_eq!(out.grad_sum.len(), p);
+        alloc::peak_elems() - base
+    };
+
+    let peak4 = ghost_peak(4);
+    let peak8 = ghost_peak(8);
+    let peak16 = ghost_peak(16);
+    // peak(B) = a·B + g with g the batch-independent gradient buffers:
+    // both finite-difference estimates of g must agree...
+    let g1 = 2 * peak8 - peak16;
+    let g2 = 2 * peak4 - peak8;
+    assert!(g1 > 0 && g2 > 0, "peaks not affine in B: {peak4} {peak8} {peak16}");
+    let spread = (g1 - g2).abs();
+    assert!(
+        spread * 5 < g1.max(g2),
+        "gradient-buffer estimate not batch-independent: {g1} vs {g2} \
+         (peaks {peak4}/{peak8}/{peak16})"
+    );
+    // ...and g contains the (P,) clipped-sum buffer but stays within a
+    // small multiple of P (no hidden B-scaled gradient state)
+    assert!(g1 >= p as i64, "gradient buffers {g1} smaller than P={p}?");
+    assert!(
+        g1 < 20 * p as i64,
+        "gradient buffers {g1} unexpectedly large vs P={p}"
+    );
+
+    // contrast: the materializing crb strategy must hold the full
+    // (B, P) matrix — its peak at B=16 dwarfs the ghost engine's
+    let bsz = 16usize;
+    let mut x = vec![0.0f32; bsz * c * h * w];
+    rng.fill_gaussian(&mut x, 1.0);
+    let x = Tensor::from_vec(&[bsz, c, h, w], x);
+    let y: Vec<i32> = (0..bsz).map(|i| (i % 64) as i32).collect();
+    let runner = StrategyRunner::new(spec.clone(), Strategy::Crb, 1);
+    alloc::reset_peak();
+    let base = alloc::live_elems();
+    let (grads, _) = runner.perex_grads(&theta, &x, &y).unwrap();
+    let crb_peak = alloc::peak_elems() - base;
+    assert_eq!(grads.shape, vec![bsz, p]);
+    drop(grads);
+    assert!(
+        crb_peak >= (bsz * p) as i64,
+        "crb peak {crb_peak} below B·P = {}",
+        bsz * p
+    );
+    assert!(
+        peak16 * 4 < crb_peak,
+        "ghost peak {peak16} not well below materializing peak {crb_peak}"
+    );
+}

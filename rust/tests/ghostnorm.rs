@@ -1,0 +1,384 @@
+//! Ghost-norm engine vs the oracle, end to end and property-tested:
+//!
+//! * per-example norms agree with `ModelOracle`-derived norms within
+//!   1e-4 over randomized conv/linear/instance-norm geometries
+//!   (stride / padding / dilation / groups), for every planner mode;
+//! * the ghost clipped batch gradient matches clip-then-sum of oracle
+//!   per-example gradients within 1e-4;
+//! * the ghostnorm trainer runs, learns and resumes; the native
+//!   norm-only service answers oracle norms with zero artifacts;
+//! * settings ghostnorm cannot honor are rejected, not degraded.
+
+use grad_cnns::check::gen_range;
+use grad_cnns::config::{Config, ExperimentConfig};
+use grad_cnns::coordinator::{GradRequest, NativeServiceConfig, ServiceHandle, Trainer};
+use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode, PlanChoice};
+use grad_cnns::models::{LayerSpec, ModelOracle, ModelSpec};
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::runtime::NativeBackend;
+use grad_cnns::tensor::{clip_reduce, ConvArgs, Tensor};
+
+/// Random model with the geometries the paper sweeps: conv layers with
+/// random stride/padding/dilation/groups, optional instance norm,
+/// relu, occasional pooling, then flatten + linear.
+fn random_geometry_spec(r: &mut Xoshiro256pp) -> ModelSpec {
+    let mut layers = Vec::new();
+    let mut c = gen_range(r, 1, 4) * gen_range(r, 1, 3); // groupable channel counts
+    let mut h = gen_range(r, 10, 17);
+    let mut w = h;
+    let input_shape = (c, h, w);
+    let n_conv = gen_range(r, 1, 3);
+    for _ in 0..n_conv {
+        let mut groups = if r.next_f64() < 0.3 { 2 } else { 1 };
+        if c % groups != 0 {
+            groups = 1;
+        }
+        let kh = gen_range(r, 1, 4);
+        let kw = gen_range(r, 1, 4);
+        let mut stride = (gen_range(r, 1, 3), gen_range(r, 1, 3));
+        let mut padding = (gen_range(r, 0, 2), gen_range(r, 0, 2));
+        let mut dilation = (gen_range(r, 1, 3), gen_range(r, 1, 3));
+        let args = |s, p, d| ConvArgs {
+            stride: s,
+            padding: p,
+            dilation: d,
+            groups,
+        };
+        let (mut ho, mut wo) = args(stride, padding, dilation).out_hw(h, w, kh, kw);
+        if ho < 1 || wo < 1 {
+            // degenerate draw: fall back to the safe geometry
+            stride = (1, 1);
+            padding = (1, 1);
+            dilation = (1, 1);
+            let (h2, w2) = args(stride, padding, dilation).out_hw(h, w, kh, kw);
+            ho = h2;
+            wo = w2;
+        }
+        let out_ch = groups * gen_range(r, 1, 5);
+        layers.push(LayerSpec::Conv2d {
+            in_ch: c,
+            out_ch,
+            kernel: (kh, kw),
+            stride,
+            padding,
+            dilation,
+            groups,
+        });
+        c = out_ch;
+        h = ho;
+        w = wo;
+        if r.next_f64() < 0.5 {
+            layers.push(LayerSpec::InstanceNorm {
+                channels: c,
+                eps: 1e-5,
+            });
+        }
+        layers.push(LayerSpec::Relu);
+        if r.next_f64() < 0.4 && h >= 2 && w >= 2 {
+            layers.push(LayerSpec::MaxPool2d {
+                window: (2, 2),
+                stride: (2, 2),
+            });
+            h = (h - 2) / 2 + 1;
+            w = (w - 2) / 2 + 1;
+        }
+    }
+    let num_classes = gen_range(r, 2, 8);
+    layers.push(LayerSpec::Flatten);
+    layers.push(LayerSpec::Linear {
+        in_dim: c * h * w,
+        out_dim: num_classes,
+    });
+    ModelSpec {
+        arch: "randgeom".into(),
+        layers,
+        input_shape,
+        num_classes,
+    }
+}
+
+fn random_problem(
+    spec: &ModelSpec,
+    bsz: usize,
+    r: &mut Xoshiro256pp,
+) -> (Vec<f32>, Tensor, Vec<i32>) {
+    let mut theta = vec![0.0f32; spec.param_count()];
+    r.fill_gaussian(&mut theta, 0.15);
+    let (c, h, w) = spec.input_shape;
+    let mut x = vec![0.0f32; bsz * c * h * w];
+    r.fill_gaussian(&mut x, 1.0);
+    let y: Vec<i32> = (0..bsz)
+        .map(|_| r.next_below(spec.num_classes as u64) as i32)
+        .collect();
+    (theta, Tensor::from_vec(&[bsz, c, h, w], x), y)
+}
+
+/// The acceptance property: over randomized geometries, for every
+/// planner mode, ghost norms match oracle norms and the ghost clipped
+/// sum matches clip-then-sum, both within 1e-4.
+#[test]
+fn ghost_matches_oracle_over_randomized_geometries() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xB00);
+    for case in 0..10u64 {
+        let mut r = rng.fork(case);
+        let spec = random_geometry_spec(&mut r);
+        let bsz = gen_range(&mut r, 1, 6);
+        let (theta, x, y) = random_problem(&spec, bsz, &mut r);
+
+        let oracle = ModelOracle::new(spec.clone());
+        let (per, want_losses) = oracle.perex_grads(&theta, &x, &y);
+        let clip = 1.0f32;
+        let (want_sum, want_norms) = clip_reduce(&per, clip);
+
+        for mode in [
+            GhostMode::Global(PlanChoice::Auto),
+            GhostMode::Global(PlanChoice::Ghost),
+            GhostMode::Global(PlanChoice::Direct),
+        ] {
+            let planner = ClippedStepPlanner::new(&spec, &mode).unwrap();
+            let out = ghost::clipped_step(&planner, &theta, &x, &y, clip, 2).unwrap();
+            for (i, (a, want)) in out.norms.iter().zip(&want_norms).enumerate() {
+                assert!(
+                    (a - want).abs() < 1e-4,
+                    "case {case} {mode:?}: norm[{i}] {a} vs {want} (spec {spec:?})"
+                );
+            }
+            for (a, want) in out.losses.iter().zip(&want_losses) {
+                assert!((a - want).abs() < 1e-4, "case {case} {mode:?}: losses");
+            }
+            let sum_diff = out
+                .grad_sum
+                .iter()
+                .zip(&want_sum)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                sum_diff < 1e-4,
+                "case {case} {mode:?}: clipped sum Δ {sum_diff} (spec {spec:?})"
+            );
+        }
+    }
+}
+
+/// Norm-only queries also agree on their own (no clipped pass), and a
+/// per-conv override list is honored.
+#[test]
+fn norm_only_queries_and_per_layer_override() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xB01);
+    let spec = ModelSpec::toy_cnn(2, 6, 1.5, 3, "instance", (3, 12, 12), 9).unwrap();
+    let (theta, x, y) = random_problem(&spec, 4, &mut rng);
+    let oracle = ModelOracle::new(spec.clone());
+    let (per, _) = oracle.perex_grads(&theta, &x, &y);
+    let (_, want_norms) = clip_reduce(&per, 1.0);
+
+    let mode = GhostMode::PerConv(vec![PlanChoice::Ghost, PlanChoice::Direct]);
+    let planner = ClippedStepPlanner::new(&spec, &mode).unwrap();
+    let paths: Vec<_> = planner.plans().map(|p| p.path).collect();
+    assert_eq!(paths.len(), 2);
+    assert_eq!(paths[0], ghost::NormPath::Ghost);
+    assert_eq!(paths[1], ghost::NormPath::Direct);
+
+    let (norms, losses) = ghost::perex_norms(&planner, &theta, &x, &y, 3).unwrap();
+    assert_eq!(losses.len(), 4);
+    for (a, w) in norms.iter().zip(&want_norms) {
+        assert!((a - w).abs() < 1e-4, "norm {a} vs {w}");
+    }
+}
+
+fn ghost_config(steps: usize, sigma: f64) -> ExperimentConfig {
+    let cfg = Config::parse(&format!(
+        r#"
+[train]
+backend = "native"
+strategy = "ghostnorm"
+steps = {steps}
+batch_size = 4
+lr = 0.2
+seed = 9
+eval_every = 0
+log_every = 2
+
+[model]
+n_layers = 2
+first_channels = 6
+kernel_size = 3
+input_shape = [2, 12, 12]
+
+[dp]
+clip_norm = 1.0
+noise_multiplier = {sigma}
+target_delta = 1e-5
+
+[data]
+size = 64
+num_classes = 10
+"#
+    ))
+    .unwrap();
+    ExperimentConfig::from_config(&cfg).unwrap()
+}
+
+/// End to end: the trainer drives the ghostnorm backend through config
+/// selection, accounts privacy, and (without noise) learns.
+#[test]
+fn ghost_trainer_runs_and_learns() {
+    let mut trainer = Trainer::from_config(ghost_config(4, 1.1)).unwrap();
+    assert_eq!(trainer.backend_name(), "native");
+    trainer.quiet = true;
+    let report = trainer.run(None).unwrap();
+    assert_eq!(report.steps, 4);
+    assert!(report.final_epsilon > 0.0 && report.final_epsilon.is_finite());
+
+    let mut cfg = ghost_config(40, 0.0);
+    cfg.clip_norm = 50.0;
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    trainer.quiet = true;
+    let report = trainer.run(None).unwrap();
+    let first = report.losses.first().unwrap().loss;
+    let last = report.losses.last().unwrap().loss;
+    assert!(
+        last < first,
+        "no-noise ghostnorm training did not reduce loss: {first} -> {last}"
+    );
+}
+
+/// The native norm-only service: single-example requests, dynamically
+/// batched, answered by the ghost engine — each response's norm must
+/// equal the oracle's per-example norm (norms are batch-invariant).
+#[test]
+fn native_service_serves_oracle_norms() {
+    let spec = ModelSpec::toy_cnn(2, 5, 1.0, 3, "none", (2, 10, 10), 6).unwrap();
+    let theta = NativeBackend::init_vector(&spec, 5);
+    let svc = ServiceHandle::start_native(
+        NativeServiceConfig {
+            model: spec.clone(),
+            batch: 4,
+            workers: 2,
+            threads: 1,
+            mode: GhostMode::default(),
+            max_wait: std::time::Duration::from_millis(5),
+            queue_capacity: 32,
+        },
+        theta.clone(),
+    )
+    .unwrap();
+    assert!(svc.label().contains("ghostnorm"), "{}", svc.label());
+
+    let mut rng = Xoshiro256pp::seed_from_u64(33);
+    let (c, h, w) = spec.input_shape;
+    let n = 10usize;
+    let mut images = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut img = vec![0.0f32; c * h * w];
+        rng.fill_gaussian(&mut img, 1.0);
+        images.push(img);
+        labels.push(rng.next_below(spec.num_classes as u64) as i32);
+    }
+    let reqs: Vec<GradRequest> = (0..n)
+        .map(|i| GradRequest {
+            image: images[i].clone(),
+            label: labels[i],
+        })
+        .collect();
+    let responses = svc.submit_all(&reqs).unwrap();
+    assert_eq!(responses.len(), n);
+    svc.shutdown();
+
+    let oracle = ModelOracle::new(spec.clone());
+    for i in 0..n {
+        let x = Tensor::from_vec(&[1, c, h, w], images[i].clone());
+        let (per, losses) = oracle.perex_grads(&theta, &x, &labels[i..i + 1]);
+        let want: f32 = per
+            .data
+            .iter()
+            .map(|v| (*v as f64) * (*v as f64))
+            .sum::<f64>()
+            .sqrt() as f32;
+        let got = &responses[i];
+        assert!(
+            (got.grad_norm - want).abs() < 1e-4 * want.max(1.0),
+            "example {i}: norm {} vs {want}",
+            got.grad_norm
+        );
+        assert!((got.loss - losses[0]).abs() < 1e-4, "example {i}: loss");
+    }
+}
+
+/// The service refuses a theta/model mismatch and an oversized
+/// per-layer override at start, not at first request.
+#[test]
+fn native_service_validates_at_start() {
+    let spec = ModelSpec::toy_cnn(1, 3, 1.0, 3, "none", (1, 8, 8), 4).unwrap();
+    let base = NativeServiceConfig {
+        model: spec.clone(),
+        batch: 2,
+        workers: 1,
+        threads: 1,
+        mode: GhostMode::default(),
+        max_wait: std::time::Duration::from_millis(5),
+        queue_capacity: 8,
+    };
+    let err = ServiceHandle::start_native(base.clone(), vec![0.0; 3])
+        .map(|s| s.shutdown())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("theta"), "{err}");
+    let mut bad = base.clone();
+    bad.mode = GhostMode::PerConv(vec![PlanChoice::Ghost; 9]);
+    let err = ServiceHandle::start_native(bad, NativeBackend::init_vector(&spec, 1))
+        .map(|s| s.shutdown())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("conv layers"), "{err}");
+    // wrong-sized images are rejected at submit, not by a worker panic
+    // that would leave the caller waiting forever
+    let svc = ServiceHandle::start_native(base, NativeBackend::init_vector(&spec, 1)).unwrap();
+    let err = svc
+        .submit(GradRequest {
+            image: vec![0.0; 5],
+            label: 0,
+        })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("values"), "{err}");
+    // a well-formed request still flows
+    let ok = svc
+        .submit_all(&[GradRequest {
+            image: vec![0.0; 64],
+            label: 1,
+        }])
+        .unwrap();
+    assert_eq!(ok.len(), 1);
+    svc.shutdown();
+}
+
+/// Config hardening: combinations ghostnorm cannot honor fail fast
+/// with actionable errors all the way through backend construction.
+#[test]
+fn ghostnorm_conflicts_rejected_end_to_end() {
+    // grad_dump + ghostnorm: config-time error
+    let cfg = Config::parse(
+        "[train]\nbackend = \"native\"\nstrategy = \"ghostnorm\"\ngrad_dump = \"g.csv\"\n",
+    )
+    .unwrap();
+    let err = ExperimentConfig::from_config(&cfg).unwrap_err().to_string();
+    assert!(err.contains("grad_dump"), "{err}");
+    // pjrt + ghostnorm: config-time error
+    let cfg = Config::parse(
+        "[train]\nbackend = \"pjrt\"\nstrategy = \"ghostnorm\"\nstep_artifact = \"x\"\n",
+    )
+    .unwrap();
+    let err = ExperimentConfig::from_config(&cfg).unwrap_err().to_string();
+    assert!(err.contains("native-only"), "{err}");
+    // auto + ghostnorm resolves to the native backend
+    let mut trainer = Trainer::from_config({
+        let mut c = ghost_config(1, 1.0);
+        c.backend = "auto".into();
+        c
+    })
+    .unwrap();
+    assert_eq!(trainer.backend_name(), "native");
+    trainer.quiet = true;
+    trainer.run(None).unwrap();
+}

@@ -55,7 +55,8 @@ fn strategies_agree_on_randomized_cnns() {
         let norm = if r.next_f64() < 0.5 { "none" } else { "instance" };
         let c = gen_range(&mut r, 1, 4);
         // keep spatial dims big enough for n_layers convs + pools
-        let hw = gen_range(&mut r, 4 * kernel + n_layers * 2, 18.max(4 * kernel + n_layers * 2 + 1));
+        let hw_lo = 4 * kernel + n_layers * 2;
+        let hw = gen_range(&mut r, hw_lo, 18.max(hw_lo + 1));
         let classes = gen_range(&mut r, 2, 11);
         let bsz = gen_range(&mut r, 1, 6);
         let threads = gen_range(&mut r, 1, 5);
@@ -66,7 +67,7 @@ fn strategies_agree_on_randomized_cnns() {
         let (want, want_losses) = oracle.perex_grads(&theta, &x, &y);
 
         let mut per_strategy = Vec::new();
-        for strategy in Strategy::ALL {
+        for strategy in Strategy::MATERIALIZING {
             let runner = StrategyRunner::new(spec.clone(), strategy, threads);
             let (got, losses) = runner.perex_grads(&theta, &x, &y).unwrap();
             let diff = got.max_abs_diff(&want);
@@ -91,6 +92,8 @@ fn strategies_agree_on_randomized_cnns() {
 /// The native step with σ = 0 must equal the hand computation from
 /// the oracle: `theta' = theta − lr/B · Σ_b clip(g_b)` (the same
 /// contract `step_artifact_zero_noise_is_clipped_sgd` pins for PJRT).
+/// All four strategies, ghostnorm included — the ghost engine's
+/// clipped sum must drive the identical update.
 #[test]
 fn native_step_zero_noise_is_clipped_sgd() {
     let spec = spec_from(2, 5, 1.5, 3, "none", (2, 10, 10), 8);
