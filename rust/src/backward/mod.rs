@@ -1,0 +1,44 @@
+//! The shared backward pass: one reverse layer-walk, many consumers.
+//!
+//! Three per-example computations read quantities off the same taped
+//! forward — the `crb` per-example gradients (Eq. 4), the ghost
+//! engine's per-example norms, and its reweighted clipped sum — and
+//! before this module each carried its own hand-copied ~150-line
+//! reverse walk. Now there is exactly one walk:
+//!
+//! * [`tape`] — [`forward_with_tape`](tape::forward_with_tape) runs
+//!   the fast-kernel forward once and saves what any backward needs
+//!   per layer (the [`Saved`](tape::Saved) tape), counting tape
+//!   builds in a process-global counter ([`tape_builds`]) so tests
+//!   can *prove* how many forwards a pipeline ran.
+//! * [`walk`] — [`backward_walk`](walk::backward_walk) drives the
+//!   reverse loop: it owns all gradient *propagation* (conv/linear
+//!   input gradients, instance-norm dx, relu masks, pool scatter,
+//!   flatten reshape) and all per-example im2col patch-matrix
+//!   construction, and hands each parametric layer to a
+//!   [`BackwardVisitor`](walk::BackwardVisitor). The walk can fill or
+//!   reuse a [`ColsCache`](crate::tensor::ColsCache), which is how
+//!   the fused ghost pipeline shares patch matrices between its norm
+//!   and reweighted walks.
+//! * [`visitors`] — the three small visitor implementations:
+//!   [`PerExGradVisitor`](visitors::PerExGradVisitor) (the `crb`
+//!   strategy), [`NormVisitor`](visitors::NormVisitor) (ghost
+//!   norms, direct or Gram path per the planner), and
+//!   [`ClippedSumVisitor`](visitors::ClippedSumVisitor) (the
+//!   reweighted clipped batch gradient).
+//!
+//! Adding a layer type is now a single-site change: teach the tape
+//! and the walk about it, and every consumer — norms, clipped sums,
+//! per-example gradients — inherits it. The randomized property tests
+//! in `tests/ghostnorm.rs` and the differential harness in
+//! `tests/ghost_fused_differential.rs` pin all three visitors to the
+//! oracle and to each other.
+
+pub mod tape;
+pub mod visitors;
+pub mod walk;
+
+pub use tape::tape_builds;
+pub(crate) use tape::{conv_args, forward_with_tape, layer_params};
+pub(crate) use visitors::{ClippedSumVisitor, NormVisitor, PerExGradVisitor};
+pub(crate) use walk::{backward_walk, ColsMode};

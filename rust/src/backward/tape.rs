@@ -1,0 +1,151 @@
+//! The taped forward pass: fast kernels + per-layer saved state.
+//!
+//! [`forward_with_tape`] is the single entry point every backward
+//! consumer shares (the `crb` strategy and both ghost walks). Each
+//! call increments a process-global counter readable via
+//! [`tape_builds`]; `tests/ghost_memory.rs` uses deltas of it to
+//! assert the fused ghost pipeline builds exactly one tape per
+//! microbatch where the two-pass pipeline builds two.
+
+use crate::models::{LayerSpec, ModelSpec};
+use crate::tensor::{self, ConvArgs, Tensor};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static TAPE_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of [`forward_with_tape`] calls since process start. The
+/// counter is global and monotonic: tests that assert on it take
+/// deltas around the region of interest and must not run concurrently
+/// with other tape-building tests in the same binary.
+pub fn tape_builds() -> u64 {
+    TAPE_BUILDS.load(Ordering::Relaxed)
+}
+
+/// What each layer's backward pass needs from the forward pass —
+/// the per-layer record of the tape.
+pub(crate) enum Saved {
+    Conv { input: Tensor },
+    Norm { xhat: Tensor, inv_std: Vec<f32> },
+    Linear { input: Tensor },
+    Relu { pre: Tensor },
+    Pool { arg: Vec<usize>, in_shape: Vec<usize> },
+    Flatten { in_shape: Vec<usize> },
+}
+
+pub(crate) fn conv_args(l: &LayerSpec) -> ConvArgs {
+    match l {
+        LayerSpec::Conv2d {
+            stride,
+            padding,
+            dilation,
+            groups,
+            ..
+        } => ConvArgs {
+            stride: *stride,
+            padding: *padding,
+            dilation: *dilation,
+            groups: *groups,
+        },
+        _ => unreachable!("conv_args on non-conv layer"),
+    }
+}
+
+/// `(weights, bias)` slices of flat theta for layer `li`.
+pub(crate) fn layer_params<'t>(
+    spec: &ModelSpec,
+    offsets: &[usize],
+    theta: &'t [f32],
+    li: usize,
+) -> (&'t [f32], &'t [f32]) {
+    let (wn, bn) = spec.layer_param_counts(li);
+    let off = offsets[li];
+    (&theta[off..off + wn], &theta[off + wn..off + wn + bn])
+}
+
+/// Forward pass with the fast kernels, saving what any backward walk
+/// needs per layer (the "tape"). Used by the crb strategy's
+/// per-example backward and by the ghost engine's walks.
+pub(crate) fn forward_with_tape(
+    spec: &ModelSpec,
+    theta: &[f32],
+    x: &Tensor,
+) -> (Tensor, Vec<Saved>) {
+    assert_eq!(theta.len(), spec.param_count(), "theta length mismatch");
+    TAPE_BUILDS.fetch_add(1, Ordering::Relaxed);
+    let offsets = spec.param_offsets();
+    let mut cur = x.clone();
+    let mut saved = Vec::with_capacity(spec.layers.len());
+    for (li, l) in spec.layers.iter().enumerate() {
+        match l {
+            LayerSpec::Conv2d {
+                in_ch,
+                out_ch,
+                kernel,
+                groups,
+                ..
+            } => {
+                let (wv, bv) = layer_params(spec, &offsets, theta, li);
+                let w = Tensor::from_vec(
+                    &[*out_ch, in_ch / groups, kernel.0, kernel.1],
+                    wv.to_vec(),
+                );
+                let y = tensor::conv2d_im2col(&cur, &w, Some(bv), conv_args(l));
+                saved.push(Saved::Conv { input: cur });
+                cur = y;
+            }
+            LayerSpec::Linear { in_dim, out_dim } => {
+                let (wv, bv) = layer_params(spec, &offsets, theta, li);
+                let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
+                let y = tensor::linear(&cur, &w, bv);
+                saved.push(Saved::Linear { input: cur });
+                cur = y;
+            }
+            LayerSpec::InstanceNorm { eps, .. } => {
+                let (gv, bv) = layer_params(spec, &offsets, theta, li);
+                let (y, xhat, inv_std) = tensor::instance_norm(&cur, gv, bv, *eps);
+                saved.push(Saved::Norm { xhat, inv_std });
+                cur = y;
+            }
+            LayerSpec::Relu => {
+                let y = tensor::relu(&cur);
+                saved.push(Saved::Relu { pre: cur });
+                cur = y;
+            }
+            LayerSpec::MaxPool2d { window, stride } => {
+                let (y, arg) = tensor::maxpool2d(&cur, *window, *stride);
+                saved.push(Saved::Pool {
+                    arg,
+                    in_shape: cur.shape.clone(),
+                });
+                cur = y;
+            }
+            LayerSpec::Flatten => {
+                let in_shape = cur.shape.clone();
+                let b = in_shape[0];
+                let n: usize = in_shape[1..].iter().product();
+                cur = cur.reshape(&[b, n]);
+                saved.push(Saved::Flatten { in_shape });
+            }
+        }
+    }
+    (cur, saved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tape_counter_increments_per_build() {
+        let spec = ModelSpec::toy_cnn(1, 3, 1.0, 3, "none", (1, 8, 8), 4).unwrap();
+        let theta = vec![0.01f32; spec.param_count()];
+        let x = Tensor::zeros(&[2, 1, 8, 8]);
+        let before = tape_builds();
+        let (logits, saved) = forward_with_tape(&spec, &theta, &x);
+        // counter moved by at least one (other tests may build tapes
+        // concurrently, so assert a lower bound only)
+        assert!(tape_builds() > before);
+        assert_eq!(logits.shape[0], 2);
+        assert_eq!(saved.len(), spec.layers.len());
+    }
+}

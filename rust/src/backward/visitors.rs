@@ -1,0 +1,371 @@
+//! The three backward-visitor implementations — what used to be three
+//! divergent hand-copied reverse walks, reduced to what each consumer
+//! actually reads off `(cols, dy, saved)`:
+//!
+//! * [`PerExGradVisitor`] — the `crb` strategy: per-example gradients
+//!   written straight into rows of a `(B, P)` matrix (Eq. 4 via
+//!   `matmul_nt` for convs, Eq. 2 for linear).
+//! * [`NormVisitor`] — ghost pass 1: per-example *squared norms*
+//!   accumulated in f64, reading each conv layer through the
+//!   planner-chosen kernel (direct `dW` square-sum or the Gram-matrix
+//!   [`gram_dot`] contraction) — the `(B, P)` matrix never exists.
+//! * [`ClippedSumVisitor`] — ghost pass 2: with the loss gradient
+//!   rows pre-scaled by the clip factors, every layer's gradient
+//!   accumulated straight into one flat `(P,)` partial (backprop is
+//!   linear in `dy`, so the result is exactly `Σ_b s_b·g_b`).
+
+use super::walk::{BackwardVisitor, ConvCtx, LinearCtx, NormCtx};
+use crate::ghost::planner::{ClippedStepPlanner, NormPath};
+use crate::tensor::{self, Tensor};
+
+// ---------------------------------------------------------------------------
+// crb: per-example gradients
+// ---------------------------------------------------------------------------
+
+/// Writes each example's gradient into its row of a flat `(B, P)`
+/// buffer, in the shared theta packing order.
+pub(crate) struct PerExGradVisitor<'a> {
+    pub grads: &'a mut [f32],
+    pub p_total: usize,
+}
+
+impl BackwardVisitor for PerExGradVisitor<'_> {
+    fn conv_example(&mut self, ctx: &ConvCtx, b: usize, cols: &[f32], dy_b: &[f32]) {
+        let dst = &mut self.grads[b * self.p_total + ctx.offset..];
+        // Eq. 4: dW_b = dy_b · cols_bᵀ, one matmul per group, written
+        // in place (the destination rows start zeroed)
+        for g in 0..ctx.groups {
+            let dyg = &dy_b[g * ctx.dg * ctx.howo..(g + 1) * ctx.dg * ctx.howo];
+            let colsg = &cols[g * ctx.rows_g * ctx.howo..(g + 1) * ctx.rows_g * ctx.howo];
+            let w0 = g * ctx.dg * ctx.rows_g;
+            tensor::matmul_nt(
+                dyg,
+                colsg,
+                &mut dst[w0..w0 + ctx.dg * ctx.rows_g],
+                ctx.dg,
+                ctx.howo,
+                ctx.rows_g,
+            );
+        }
+        // per-example bias grad: sum dy over spatial dims
+        for dd in 0..ctx.d {
+            let row = &dy_b[dd * ctx.howo..(dd + 1) * ctx.howo];
+            let mut acc = 0.0f64;
+            for v in row {
+                acc += *v as f64;
+            }
+            dst[ctx.wn + dd] = acc as f32;
+        }
+    }
+
+    fn linear(&mut self, ctx: &LinearCtx, input: &Tensor, dy: &Tensor) {
+        let bsz = dy.shape[0];
+        let (i, j) = (ctx.in_dim, ctx.out_dim);
+        for b in 0..bsz {
+            let dst = &mut self.grads[b * self.p_total + ctx.offset..];
+            // Eq. 2: dW_b = dy_b ⊗ x_b
+            for jj in 0..j {
+                let g = dy.data[b * j + jj];
+                let xrow = &input.data[b * i..(b + 1) * i];
+                for (d, xv) in dst[jj * i..(jj + 1) * i].iter_mut().zip(xrow) {
+                    *d = g * *xv;
+                }
+            }
+            dst[ctx.wn..ctx.wn + j].copy_from_slice(&dy.data[b * j..(b + 1) * j]);
+        }
+    }
+
+    fn instance_norm(&mut self, ctx: &NormCtx, dgamma: &Tensor, dbeta: &Tensor) {
+        let bsz = dgamma.shape[0];
+        let cc = ctx.channels;
+        for b in 0..bsz {
+            let dst = &mut self.grads[b * self.p_total + ctx.offset..];
+            dst[..cc].copy_from_slice(&dgamma.data[b * cc..(b + 1) * cc]);
+            dst[cc..2 * cc].copy_from_slice(&dbeta.data[b * cc..(b + 1) * cc]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ghost pass 1: per-example squared norms
+// ---------------------------------------------------------------------------
+
+/// `⟨AᵀA, BᵀB⟩` for row-major `A (ra×t)`, `B (rb×t)`: the ghost-norm
+/// contraction. Both Gram matrices are symmetric, so only the upper
+/// triangles are formed; accumulation is f64 to keep the norm within
+/// the 1e-4 oracle tolerance. `ga`/`gb` are caller-owned `t*t`
+/// scratch (this sits in the per-example hot loop — the caller
+/// allocates once per layer, not once per call).
+pub(crate) fn gram_dot(
+    a: &[f32],
+    ra: usize,
+    b: &[f32],
+    rb: usize,
+    t: usize,
+    ga: &mut [f64],
+    gb: &mut [f64],
+) -> f64 {
+    debug_assert_eq!(a.len(), ra * t);
+    debug_assert_eq!(b.len(), rb * t);
+    debug_assert_eq!(ga.len(), t * t);
+    debug_assert_eq!(gb.len(), t * t);
+    ga.fill(0.0);
+    gb.fill(0.0);
+    for r in 0..ra {
+        let row = &a[r * t..(r + 1) * t];
+        for i in 0..t {
+            let ai = row[i] as f64;
+            let dst = &mut ga[i * t + i..(i + 1) * t];
+            for (d, v) in dst.iter_mut().zip(&row[i..]) {
+                *d += ai * *v as f64;
+            }
+        }
+    }
+    for r in 0..rb {
+        let row = &b[r * t..(r + 1) * t];
+        for i in 0..t {
+            let bi = row[i] as f64;
+            let dst = &mut gb[i * t + i..(i + 1) * t];
+            for (d, v) in dst.iter_mut().zip(&row[i..]) {
+                *d += bi * *v as f64;
+            }
+        }
+    }
+    let mut acc = 0.0f64;
+    for i in 0..t {
+        acc += ga[i * t + i] * gb[i * t + i];
+        let ra_ = &ga[i * t + i + 1..(i + 1) * t];
+        let rb_ = &gb[i * t + i + 1..(i + 1) * t];
+        let mut s = 0.0f64;
+        for (u, v) in ra_.iter().zip(rb_) {
+            s += u * v;
+        }
+        acc += 2.0 * s;
+    }
+    acc
+}
+
+/// Accumulates per-example squared gradient norms layer by layer in
+/// f64; [`NormVisitor::write_norms`] square-roots them out. Conv
+/// layers go through the planner's per-layer path choice; layer-sized
+/// scratch is hoisted in `conv_layer_start` and registered in the
+/// allocation ledger (f64 buffers count double in f32-equivalent
+/// elements) so peak-bytes measurements see it.
+pub(crate) struct NormVisitor<'p> {
+    planner: &'p ClippedStepPlanner,
+    nsq: Vec<f64>,
+    tmp: Vec<f32>,
+    ga: Vec<f64>,
+    gb: Vec<f64>,
+    /// RAII ledger registration for the live scratch (kept, never
+    /// read — dropping it is what deregisters).
+    _scratch: Option<tensor::alloc::ScratchGuard>,
+}
+
+impl<'p> NormVisitor<'p> {
+    pub fn new(planner: &'p ClippedStepPlanner, bsz: usize) -> NormVisitor<'p> {
+        NormVisitor {
+            planner,
+            nsq: vec![0.0f64; bsz],
+            tmp: Vec::new(),
+            ga: Vec::new(),
+            gb: Vec::new(),
+            _scratch: None,
+        }
+    }
+
+    /// Square-root the accumulated squared norms into `out`.
+    pub fn write_norms(&self, out: &mut [f32]) {
+        for (o, v) in out.iter_mut().zip(&self.nsq) {
+            *o = v.sqrt() as f32;
+        }
+    }
+}
+
+impl BackwardVisitor for NormVisitor<'_> {
+    fn conv_layer_start(&mut self, ctx: &ConvCtx) {
+        match self.planner.path(ctx.li) {
+            NormPath::Direct => {
+                self.tmp = vec![0.0f32; ctx.dg * ctx.rows_g];
+                self.ga = Vec::new();
+                self.gb = Vec::new();
+            }
+            NormPath::Ghost => {
+                self.tmp = Vec::new();
+                self.ga = vec![0.0f64; ctx.howo * ctx.howo];
+                self.gb = vec![0.0f64; ctx.howo * ctx.howo];
+            }
+        }
+        self._scratch = Some(tensor::alloc::track_scratch(
+            self.tmp.len() + 2 * (self.ga.len() + self.gb.len()),
+        ));
+    }
+
+    fn conv_example(&mut self, ctx: &ConvCtx, b: usize, cols: &[f32], dy_b: &[f32]) {
+        // bias: ‖Σ_t dy‖² per output channel
+        for dd in 0..ctx.d {
+            let row = &dy_b[dd * ctx.howo..(dd + 1) * ctx.howo];
+            let s: f64 = row.iter().map(|v| *v as f64).sum();
+            self.nsq[b] += s * s;
+        }
+        let path = self.planner.path(ctx.li);
+        for g in 0..ctx.groups {
+            let dyg = &dy_b[g * ctx.dg * ctx.howo..(g + 1) * ctx.dg * ctx.howo];
+            let colsg = &cols[g * ctx.rows_g * ctx.howo..(g + 1) * ctx.rows_g * ctx.howo];
+            match path {
+                NormPath::Direct => {
+                    self.tmp.fill(0.0);
+                    tensor::matmul_nt(dyg, colsg, &mut self.tmp, ctx.dg, ctx.howo, ctx.rows_g);
+                    let sq: f64 = self.tmp.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+                    self.nsq[b] += sq;
+                }
+                NormPath::Ghost => {
+                    self.nsq[b] += gram_dot(
+                        dyg,
+                        ctx.dg,
+                        colsg,
+                        ctx.rows_g,
+                        ctx.howo,
+                        &mut self.ga,
+                        &mut self.gb,
+                    );
+                }
+            }
+        }
+    }
+
+    fn linear(&mut self, ctx: &LinearCtx, input: &Tensor, dy: &Tensor) {
+        // Goodfellow: ‖dy_b ⊗ x_b‖² = ‖x_b‖²·‖dy_b‖²; bias adds ‖dy_b‖²
+        let bsz = dy.shape[0];
+        let (i, j) = (ctx.in_dim, ctx.out_dim);
+        for b in 0..bsz {
+            let xs: f64 = input.data[b * i..(b + 1) * i]
+                .iter()
+                .map(|v| (*v as f64) * (*v as f64))
+                .sum();
+            let ds: f64 = dy.data[b * j..(b + 1) * j]
+                .iter()
+                .map(|v| (*v as f64) * (*v as f64))
+                .sum();
+            self.nsq[b] += xs * ds + ds;
+        }
+    }
+
+    fn instance_norm(&mut self, ctx: &NormCtx, dgamma: &Tensor, dbeta: &Tensor) {
+        let bsz = dgamma.shape[0];
+        let cc = ctx.channels;
+        for b in 0..bsz {
+            for c in 0..cc {
+                let g = dgamma.data[b * cc + c] as f64;
+                let be = dbeta.data[b * cc + c] as f64;
+                self.nsq[b] += g * g + be * be;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ghost pass 2: reweighted clipped sum
+// ---------------------------------------------------------------------------
+
+/// Accumulates every layer's gradient — with `dy` already pre-scaled
+/// by the per-example clip factors — into one flat `(P,)` partial.
+/// The fast matmuls all have `+=` semantics, so cross-example
+/// accumulation is free.
+pub(crate) struct ClippedSumVisitor {
+    pub psum: Tensor,
+}
+
+impl ClippedSumVisitor {
+    pub fn new(p_total: usize) -> ClippedSumVisitor {
+        ClippedSumVisitor {
+            psum: Tensor::zeros(&[p_total]),
+        }
+    }
+}
+
+impl BackwardVisitor for ClippedSumVisitor {
+    fn conv_example(&mut self, ctx: &ConvCtx, _b: usize, cols: &[f32], dy_b: &[f32]) {
+        for g in 0..ctx.groups {
+            let dyg = &dy_b[g * ctx.dg * ctx.howo..(g + 1) * ctx.dg * ctx.howo];
+            let colsg = &cols[g * ctx.rows_g * ctx.howo..(g + 1) * ctx.rows_g * ctx.howo];
+            // matmul_nt accumulates: Σ_b dy_b·cols_bᵀ lands directly
+            // in the weight block
+            let w0 = ctx.offset + g * ctx.dg * ctx.rows_g;
+            let dst = &mut self.psum.data[w0..w0 + ctx.dg * ctx.rows_g];
+            tensor::matmul_nt(dyg, colsg, dst, ctx.dg, ctx.howo, ctx.rows_g);
+        }
+        for dd in 0..ctx.d {
+            let row = &dy_b[dd * ctx.howo..(dd + 1) * ctx.howo];
+            let mut acc = 0.0f64;
+            for v in row {
+                acc += *v as f64;
+            }
+            self.psum.data[ctx.offset + ctx.wn + dd] += acc as f32;
+        }
+    }
+
+    fn linear(&mut self, ctx: &LinearCtx, input: &Tensor, dy: &Tensor) {
+        let bsz = dy.shape[0];
+        let (i, j) = (ctx.in_dim, ctx.out_dim);
+        // Σ_b dy_bᵀ·x_b over the whole range in one blocked matmul
+        tensor::matmul_tn(
+            &dy.data,
+            &input.data,
+            &mut self.psum.data[ctx.offset..ctx.offset + ctx.wn],
+            j,
+            bsz,
+            i,
+        );
+        for b in 0..bsz {
+            for jj in 0..j {
+                self.psum.data[ctx.offset + ctx.wn + jj] += dy.data[b * j + jj];
+            }
+        }
+    }
+
+    fn instance_norm(&mut self, ctx: &NormCtx, dgamma: &Tensor, dbeta: &Tensor) {
+        let bsz = dgamma.shape[0];
+        let cc = ctx.channels;
+        for b in 0..bsz {
+            for c in 0..cc {
+                self.psum.data[ctx.offset + c] += dgamma.data[b * cc + c];
+                self.psum.data[ctx.offset + cc + c] += dbeta.data[b * cc + c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn gram_dot_equals_frobenius_of_product() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let (ra, rb, t) = (3usize, 4usize, 6usize);
+        let mut a = vec![0.0f32; ra * t];
+        let mut b = vec![0.0f32; rb * t];
+        rng.fill_gaussian(&mut a, 1.0);
+        rng.fill_gaussian(&mut b, 1.0);
+        // reference: M = A·Bᵀ (ra×rb), ‖M‖²_F
+        let mut want = 0.0f64;
+        for i in 0..ra {
+            for j in 0..rb {
+                let mut m = 0.0f64;
+                for k in 0..t {
+                    m += (a[i * t + k] * b[j * t + k]) as f64;
+                }
+                want += m * m;
+            }
+        }
+        let mut ga = vec![0.0f64; t * t];
+        let mut gb = vec![0.0f64; t * t];
+        let got = gram_dot(&a, ra, &b, rb, t, &mut ga, &mut gb);
+        assert!((got - want).abs() < 1e-8 * want.max(1.0), "{got} vs {want}");
+        // scratch is reusable: a second call must agree exactly
+        let again = gram_dot(&a, ra, &b, rb, t, &mut ga, &mut gb);
+        assert_eq!(got.to_bits(), again.to_bits());
+    }
+}

@@ -1,0 +1,266 @@
+//! The shared reverse layer-walk.
+//!
+//! [`backward_walk`] is the one place the reverse loop over a
+//! [`Saved`] tape exists. It owns everything the three consumers used
+//! to hand-copy: the per-example im2col patch matrices for conv
+//! layers, the instance-norm gradient triple, and the propagation of
+//! the batched activation gradient `dy` down through every layer.
+//! What *differs* between consumers — what they read off
+//! `(cols, dy, saved)` at each parametric layer — is behind the
+//! [`BackwardVisitor`] trait.
+//!
+//! Patch-matrix sourcing is controlled by [`ColsMode`]: `Off`
+//! recomputes im2col per (layer, example); `Fill` recomputes and
+//! stores each matrix into a budget-bounded
+//! [`ColsCache`](crate::tensor::ColsCache); `Read` serves matrices
+//! from such a cache, recomputing any entry the cache spilled.
+//! `im2col_single` is deterministic, so a cached matrix is
+//! bit-identical to a recomputed one — callers may mix modes freely
+//! without changing results.
+
+use super::tape::{conv_args, layer_params, Saved};
+use crate::models::{LayerSpec, ModelSpec};
+use crate::tensor::{self, ColsCache, Tensor};
+
+/// Geometry of one conv layer, precomputed for the visitor.
+pub(crate) struct ConvCtx {
+    /// Index into `spec.layers` (what the ghost planner keys on).
+    pub li: usize,
+    /// Offset of this layer's parameter block in flat theta.
+    pub offset: usize,
+    /// Weight element count (bias follows at `offset + wn`).
+    pub wn: usize,
+    /// Output channels `D`.
+    pub d: usize,
+    /// Output channels per group `D/g`.
+    pub dg: usize,
+    pub groups: usize,
+    /// Patch rows per group `R = (C/g)·KH·KW`.
+    pub rows_g: usize,
+    /// Output positions `T = H'·W'`.
+    pub howo: usize,
+}
+
+pub(crate) struct LinearCtx {
+    pub offset: usize,
+    pub wn: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+pub(crate) struct NormCtx {
+    pub offset: usize,
+    pub channels: usize,
+}
+
+/// What one backward consumer reads off the walk. The walk calls the
+/// conv hook once per example (with that example's patch matrix), the
+/// linear and instance-norm hooks once per layer with full-batch
+/// tensors; `conv_layer_start` lets implementations hoist layer-sized
+/// scratch out of the example loop.
+pub(crate) trait BackwardVisitor {
+    fn conv_layer_start(&mut self, _ctx: &ConvCtx) {}
+    /// One conv layer, one example: `cols` is the `(R·g, T)` im2col
+    /// patch matrix, `dy_b` the example's `(D, T)` output gradient.
+    fn conv_example(&mut self, ctx: &ConvCtx, b: usize, cols: &[f32], dy_b: &[f32]);
+    fn linear(&mut self, ctx: &LinearCtx, input: &Tensor, dy: &Tensor);
+    /// Per-example affine gradients of an instance-norm layer,
+    /// `(B, C)` each.
+    fn instance_norm(&mut self, ctx: &NormCtx, dgamma: &Tensor, dbeta: &Tensor);
+}
+
+/// Where the walk gets conv patch matrices from.
+pub(crate) enum ColsMode<'c> {
+    /// Recompute im2col per (layer, example).
+    Off,
+    /// Recompute and store into `cache` (over budget: spill — the
+    /// entry is simply not kept).
+    Fill(&'c mut ColsCache),
+    /// Serve from `cache`; recompute entries it spilled.
+    Read(&'c ColsCache),
+}
+
+/// Drive one backward pass over the tape, consuming `dy` (the loss
+/// gradient at the network output) and invoking `visitor` at every
+/// parametric layer. Propagation below layer 0 is skipped.
+pub(crate) fn backward_walk<V: BackwardVisitor>(
+    spec: &ModelSpec,
+    theta: &[f32],
+    saved: &[Saved],
+    mut dy: Tensor,
+    visitor: &mut V,
+    mut cols: ColsMode<'_>,
+) {
+    let offsets = spec.param_offsets();
+    for (li, l) in spec.layers.iter().enumerate().rev() {
+        match (l, &saved[li]) {
+            (
+                LayerSpec::Conv2d {
+                    in_ch,
+                    out_ch,
+                    kernel,
+                    groups,
+                    ..
+                },
+                Saved::Conv { input },
+            ) => {
+                let args = conv_args(l);
+                let bsz = dy.shape[0];
+                let d = *out_ch;
+                let dg = d / groups;
+                let cg = in_ch / groups;
+                let rows_g = cg * kernel.0 * kernel.1;
+                let howo = dy.shape[2] * dy.shape[3];
+                let (wn, _) = spec.layer_param_counts(li);
+                let ctx = ConvCtx {
+                    li,
+                    offset: offsets[li],
+                    wn,
+                    d,
+                    dg,
+                    groups: *groups,
+                    rows_g,
+                    howo,
+                };
+                visitor.conv_layer_start(&ctx);
+                for b in 0..bsz {
+                    let dy_b = &dy.data[b * d * howo..(b + 1) * d * howo];
+                    match &mut cols {
+                        ColsMode::Read(cache) => match cache.get(li, b) {
+                            Some(c) => visitor.conv_example(&ctx, b, c, dy_b),
+                            None => {
+                                let (c, _, _) =
+                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args);
+                                visitor.conv_example(&ctx, b, &c, dy_b);
+                            }
+                        },
+                        ColsMode::Fill(cache) => {
+                            let (c, _, _) =
+                                tensor::im2col_single(input, b, kernel.0, kernel.1, args);
+                            visitor.conv_example(&ctx, b, &c, dy_b);
+                            cache.insert(li, b, c);
+                        }
+                        ColsMode::Off => {
+                            let (c, _, _) =
+                                tensor::im2col_single(input, b, kernel.0, kernel.1, args);
+                            visitor.conv_example(&ctx, b, &c, dy_b);
+                        }
+                    }
+                }
+                if li > 0 {
+                    let (wv, _) = layer_params(spec, &offsets, theta, li);
+                    let w = Tensor::from_vec(&[d, cg, kernel.0, kernel.1], wv.to_vec());
+                    dy = tensor::conv2d_grad_input_im2col(
+                        &dy,
+                        &w,
+                        input.shape[2],
+                        input.shape[3],
+                        args,
+                    );
+                }
+            }
+            (LayerSpec::Linear { in_dim, out_dim }, Saved::Linear { input }) => {
+                let (wn, _) = spec.layer_param_counts(li);
+                let ctx = LinearCtx {
+                    offset: offsets[li],
+                    wn,
+                    in_dim: *in_dim,
+                    out_dim: *out_dim,
+                };
+                visitor.linear(&ctx, input, &dy);
+                if li > 0 {
+                    let (wv, _) = layer_params(spec, &offsets, theta, li);
+                    let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
+                    dy = tensor::linear_grad_input(&dy, &w);
+                }
+            }
+            (LayerSpec::InstanceNorm { channels, .. }, Saved::Norm { xhat, inv_std }) => {
+                let (gv, _) = layer_params(spec, &offsets, theta, li);
+                let (dgamma, dbeta, dx) = tensor::instance_norm_grad(&dy, xhat, inv_std, gv);
+                let ctx = NormCtx {
+                    offset: offsets[li],
+                    channels: *channels,
+                };
+                visitor.instance_norm(&ctx, &dgamma, &dbeta);
+                dy = dx;
+            }
+            (LayerSpec::Relu, Saved::Relu { pre }) => {
+                dy = tensor::relu_grad(&dy, pre);
+            }
+            (LayerSpec::MaxPool2d { .. }, Saved::Pool { arg, in_shape }) => {
+                dy = tensor::maxpool2d_grad(&dy, arg, in_shape);
+            }
+            (LayerSpec::Flatten, Saved::Flatten { in_shape }) => {
+                dy = dy.reshape(in_shape);
+            }
+            _ => unreachable!("spec/saved mismatch at layer {li}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tape::forward_with_tape;
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    /// A visitor that records which hooks fired, in order — pins the
+    /// walk's traversal contract (reverse layer order, one conv call
+    /// per example, layer-start before examples).
+    #[derive(Default)]
+    struct TraceVisitor {
+        events: Vec<String>,
+    }
+
+    impl BackwardVisitor for TraceVisitor {
+        fn conv_layer_start(&mut self, ctx: &ConvCtx) {
+            self.events.push(format!("start L{}", ctx.li));
+        }
+        fn conv_example(&mut self, ctx: &ConvCtx, b: usize, cols: &[f32], dy_b: &[f32]) {
+            assert_eq!(cols.len(), ctx.groups * ctx.rows_g * ctx.howo);
+            assert_eq!(dy_b.len(), ctx.d * ctx.howo);
+            self.events.push(format!("conv L{} b{b}", ctx.li));
+        }
+        fn linear(&mut self, ctx: &LinearCtx, input: &Tensor, dy: &Tensor) {
+            assert_eq!(input.shape[1], ctx.in_dim);
+            assert_eq!(dy.shape[1], ctx.out_dim);
+            self.events.push("linear".to_string());
+        }
+        fn instance_norm(&mut self, ctx: &NormCtx, dgamma: &Tensor, dbeta: &Tensor) {
+            assert_eq!(dgamma.shape[1], ctx.channels);
+            assert_eq!(dbeta.shape[1], ctx.channels);
+            self.events.push("norm".to_string());
+        }
+    }
+
+    #[test]
+    fn walk_visits_parametric_layers_in_reverse() {
+        let spec =
+            crate::models::ModelSpec::toy_cnn(1, 3, 1.0, 3, "instance", (1, 8, 8), 4).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut theta = vec![0.0f32; spec.param_count()];
+        rng.fill_gaussian(&mut theta, 0.1);
+        let mut xv = vec![0.0f32; 2 * 64];
+        rng.fill_gaussian(&mut xv, 1.0);
+        let x = Tensor::from_vec(&[2, 1, 8, 8], xv);
+        let (logits, saved) = forward_with_tape(&spec, &theta, &x);
+        let (_, dy) = tensor::softmax_xent(&logits, &[0, 1]);
+        let mut v = TraceVisitor::default();
+        backward_walk(&spec, &theta, &saved, dy, &mut v, ColsMode::Off);
+        // toy_cnn(1 layer, instance): conv, inorm, relu, [pool], flatten, linear
+        // → reverse visit order: linear, norm, conv (b0, b1)
+        let conv_li = spec
+            .layers
+            .iter()
+            .position(|l| matches!(l, crate::models::LayerSpec::Conv2d { .. }))
+            .unwrap();
+        let want_tail = vec![
+            format!("start L{conv_li}"),
+            format!("conv L{conv_li} b0"),
+            format!("conv L{conv_li} b1"),
+        ];
+        assert!(v.events.len() >= 4, "{:?}", v.events);
+        assert!(v.events[0].starts_with("linear"), "{:?}", v.events);
+        assert_eq!(&v.events[v.events.len() - 3..], &want_tail[..], "{:?}", v.events);
+    }
+}

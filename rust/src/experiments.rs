@@ -14,7 +14,7 @@
 //! autotuning by averaging over batches.
 
 use crate::bench::{measure, Protocol, Stats, Table};
-use crate::ghost::{self, ClippedStepPlanner, GhostMode};
+use crate::ghost::{self, ClippedStepPlanner, GhostMode, GhostPipeline};
 use crate::jsonx::{self, Value};
 use crate::models::ModelSpec;
 use crate::rng::Xoshiro256pp;
@@ -295,8 +295,12 @@ pub struct SweepCell {
 ///
 /// The timed quantity is what DP-SGD actually needs from each
 /// strategy: the *clipped batch gradient* (per-example grads +
-/// clip-reduce for the materializing strategies; the two-pass ghost
-/// engine for `ghostnorm`) — so the columns are directly comparable.
+/// clip-reduce for the materializing strategies; the fused
+/// single-tape ghost engine for `ghostnorm`) — so the columns are
+/// directly comparable. A fifth column, `ghostnorm_twopass`, times
+/// the legacy two-pass ghost pipeline on the identical inputs: the
+/// fused-vs-twopass ns/example delta per swept config is the repo's
+/// regression guard for the single-tape fusion.
 ///
 /// Caveat for readers comparing against the paper's Figure 1: the
 /// native `naive` and `multi` strategies share the same (oracle)
@@ -319,6 +323,7 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                 "multi (s)",
                 "crb (s)",
                 "ghostnorm (s)",
+                "ghostnorm 2pass (s)",
             ],
         );
         for &rate in &opts.rates {
@@ -339,8 +344,14 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
             }
             let mut row = Vec::new();
             for strategy in Strategy::ALL {
-                let (stats, peak_bytes) =
-                    time_native_cell(&spec, strategy, opts, &theta, &batches)?;
+                let (stats, peak_bytes) = time_native_cell(
+                    &spec,
+                    strategy,
+                    GhostPipeline::Fused,
+                    opts,
+                    &theta,
+                    &batches,
+                )?;
                 row.push(stats.pm());
                 cells.push(SweepCell {
                     strategy: strategy.name(),
@@ -352,6 +363,26 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                     stats,
                 });
             }
+            // fused-vs-twopass comparison: same model, same inputs,
+            // legacy pipeline
+            let (stats, peak_bytes) = time_native_cell(
+                &spec,
+                Strategy::GhostNorm,
+                GhostPipeline::TwoPass,
+                opts,
+                &theta,
+                &batches,
+            )?;
+            row.push(stats.pm());
+            cells.push(SweepCell {
+                strategy: "ghostnorm_twopass",
+                batch,
+                rate,
+                params: p,
+                ns_per_example: stats.mean / (opts.batches * batch) as f64 * 1e9,
+                peak_bytes,
+                stats,
+            });
             table.push(&format!("{rate:.1}"), row);
             eprintln!("  native B={batch} rate {rate}: done");
         }
@@ -366,6 +397,7 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
 fn time_native_cell(
     spec: &ModelSpec,
     strategy: Strategy,
+    pipeline: GhostPipeline,
     opts: &NativeSweepOptions,
     theta: &[f32],
     batches: &[(Tensor, Vec<i32>)],
@@ -374,7 +406,7 @@ fn time_native_cell(
     tensor::alloc::reset_peak();
     let base = tensor::alloc::live_elems();
     if strategy == Strategy::GhostNorm {
-        let planner = ClippedStepPlanner::new(spec, &GhostMode::default())?;
+        let planner = ClippedStepPlanner::new(spec, &GhostMode::default())?.with_pipeline(pipeline);
         stats = measure(opts.proto, || {
             for (x, y) in batches {
                 ghost::clipped_step(&planner, theta, x, y, opts.clip, opts.threads)
@@ -469,15 +501,20 @@ mod tests {
     use super::*;
 
     /// The quick sweep must produce one record per strategy (including
-    /// ghostnorm) and a JSON document that round-trips through the
-    /// parser with the fields the perf trajectory needs.
+    /// ghostnorm) plus the two-pass comparison cell, and a JSON
+    /// document that round-trips through the parser with the fields
+    /// the perf trajectory needs.
     #[test]
     fn quick_sweep_json_roundtrips() {
         let opts = NativeSweepOptions::quick();
         let (tables, cells) = run_native_sweep(&opts).unwrap();
         assert_eq!(tables.len(), 1);
-        assert_eq!(cells.len(), Strategy::ALL.len());
+        assert_eq!(cells.len(), Strategy::ALL.len() + 1);
         assert!(cells.iter().any(|c| c.strategy == "ghostnorm"));
+        assert!(
+            cells.iter().any(|c| c.strategy == "ghostnorm_twopass"),
+            "fused-vs-twopass comparison cell missing"
+        );
         for c in &cells {
             assert!(c.stats.mean >= 0.0);
             assert!(c.ns_per_example >= 0.0);

@@ -1,35 +1,53 @@
-//! The two-pass ghost-norm engine.
+//! The ghost-norm engine: norms and the clipped batch gradient off
+//! one shared backward walk ([`crate::backward`]).
 //!
-//! **Pass 1 — norms** ([`perex_norms`]): one forward with a tape, one
+//! **Norm walk** ([`perex_norms`]): one forward with a tape, one
 //! backward carrying only the batched activation gradient `dy`. At
 //! each parametric layer the per-example *squared gradient norm* is
-//! read off `(dy, saved activations)` by the planner-chosen kernel —
-//! the `(B, P)` matrix never exists. Per-example norms are computed
-//! from each example's own data only, so they are bit-identical for
-//! any thread count.
+//! read off `(dy, saved activations)` by the planner-chosen kernel
+//! (the [`NormVisitor`]) — the `(B, P)` matrix never exists.
+//! Per-example norms are computed from each example's own data only,
+//! so they are bit-identical for any thread count.
 //!
-//! **Pass 2 — clipped sum** ([`clipped_step`]): with clip scales
+//! **Clipped step** ([`clipped_step`]): with clip scales
 //! `s_b = min(1, C/‖g_b‖)` in hand, a second batched backward whose
 //! loss gradient rows are pre-scaled by `s_b`. Because backprop is
 //! linear in `dy`, every layer's accumulated gradient is then exactly
 //! `Σ_b s_b·g_b` — the clipped batch gradient of Eq. 1 — accumulated
-//! straight into one `(P,)` buffer per worker (the fast matmuls all
-//! have `+=` semantics, so cross-example accumulation is free).
+//! straight into one `(P,)` buffer per worker (the [`ClippedSumVisitor`]).
 //!
-//! Gradient memory is therefore `O(workers · P + layer temporaries)`,
-//! independent of the batch size; only activations scale with `B`,
-//! as in any batched backward. `tests/ghost_memory.rs` asserts this
-//! via the tensor allocation counter.
+//! The default pipeline is **fused single-tape**
+//! ([`GhostPipeline::Fused`]): each worker runs *one* forward+tape
+//! for its microbatch, walks it for norms while filling a
+//! budget-bounded [`ColsCache`] with the per-example im2col patch
+//! matrices, then reuses the same tape, the same loss gradient, and
+//! the cached patch matrices for the reweighted walk. Relative to the
+//! legacy two-pass pipeline ([`GhostPipeline::TwoPass`], kept as the
+//! differential-test and bench escape hatch) this deletes one full
+//! forward pass and one full round of im2col per step — roughly a
+//! third of the work — at the same `O(P)` gradient memory plus a
+//! ≤128 MB per-worker cache that spills to recompute when over
+//! budget. Both pipelines execute identical f32 operations in
+//! identical order (tapes, loss gradients and patch matrices are
+//! deterministic recomputations), so their norms, losses and clipped
+//! sums are **bit-identical** at any fixed thread count —
+//! `tests/ghost_fused_differential.rs` pins this across randomized
+//! geometries, and `tests/ghost_memory.rs` pins the one-tape-per-
+//! microbatch claim via the tape-build counter.
+//!
+//! Gradient memory is `O(workers · P + layer temporaries)`,
+//! independent of the batch size; only activations and the cols cache
+//! scale with `B`, as in any batched backward.
 //!
 //! Determinism: norms and losses are bit-identical for any thread
 //! count; the clipped sum is bit-deterministic for a *fixed* thread
 //! count (the f32 reduction order follows the worker split) and
 //! agrees across thread counts to float tolerance.
 
-use super::planner::{ClippedStepPlanner, NormPath};
-use crate::models::LayerSpec;
-use crate::strategies::{self, Saved};
-use crate::tensor::{self, Tensor};
+use super::planner::{ClippedStepPlanner, GhostPipeline};
+use crate::backward::{backward_walk, forward_with_tape, ClippedSumVisitor, ColsMode, NormVisitor};
+use crate::strategies;
+use crate::tensor::{self, ColsCache, Tensor};
 use anyhow::{anyhow, bail, Result};
 
 /// What [`clipped_step`] produces.
@@ -105,9 +123,140 @@ pub fn perex_norms(
     Ok((norms, losses))
 }
 
-/// One DP-SGD gradient computation with batch-level gradient memory:
-/// pass 1 for norms, pass 2 for the clipped batch gradient.
+/// One DP-SGD gradient computation with batch-level gradient memory,
+/// via the planner-selected pipeline (fused single-tape by default).
 pub fn clipped_step(
+    planner: &ClippedStepPlanner,
+    theta: &[f32],
+    x: &Tensor,
+    y: &[i32],
+    clip: f32,
+    threads: usize,
+) -> Result<GhostOutcome> {
+    validate(planner, theta, x, y)?;
+    match planner.pipeline() {
+        GhostPipeline::Fused => {
+            clipped_step_fused(planner, theta, x, y, clip, threads, tensor::COLS_CACHE_CAP_ELEMS)
+        }
+        GhostPipeline::TwoPass => clipped_step_two_pass(planner, theta, x, y, clip, threads),
+    }
+}
+
+/// Fused single-tape pipeline: per worker microbatch, one
+/// forward+tape shared by the norm walk (which fills the cols cache)
+/// and the reweighted walk (which drains it).
+fn clipped_step_fused(
+    planner: &ClippedStepPlanner,
+    theta: &[f32],
+    x: &Tensor,
+    y: &[i32],
+    clip: f32,
+    threads: usize,
+    cache_cap_elems: usize,
+) -> Result<GhostOutcome> {
+    let spec = planner.spec();
+    let p = spec.param_count();
+    let bsz = x.shape[0];
+    let mut norms = vec![0.0f32; bsz];
+    let mut losses = vec![0.0f32; bsz];
+    let ranges = strategies::split_ranges(bsz, resolve_threads(threads, bsz));
+    let partials: Vec<Tensor> = std::thread::scope(|s| -> Result<Vec<Tensor>> {
+        let mut nrest: &mut [f32] = &mut norms;
+        let mut lrest: &mut [f32] = &mut losses;
+        let mut handles = Vec::with_capacity(ranges.len());
+        for (start, end) in &ranges {
+            let (start, end) = (*start, *end);
+            let n = end - start;
+            let (nchunk, nr) = std::mem::take(&mut nrest).split_at_mut(n);
+            nrest = nr;
+            let (lchunk, lr) = std::mem::take(&mut lrest).split_at_mut(n);
+            lrest = lr;
+            handles.push(s.spawn(move || {
+                let xb = strategies::example_slice(x, start, end);
+                fused_range(
+                    planner,
+                    theta,
+                    &xb,
+                    &y[start..end],
+                    clip,
+                    cache_cap_elems,
+                    nchunk,
+                    lchunk,
+                )
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .map_err(|_| anyhow!("ghost fused worker thread panicked"))
+            })
+            .collect()
+    })?;
+    let mut grad_sum = vec![0.0f32; p];
+    for part in &partials {
+        for (a, b) in grad_sum.iter_mut().zip(&part.data) {
+            *a += *b;
+        }
+    }
+    Ok(GhostOutcome {
+        grad_sum,
+        norms,
+        losses,
+    })
+}
+
+/// One worker's fused microbatch: forward+tape once, norm walk
+/// filling the cols cache, then the reweighted walk over the same
+/// tape reading it. Returns the worker's flat `(P,)` partial sum;
+/// norms and losses land in the output chunks.
+fn fused_range(
+    planner: &ClippedStepPlanner,
+    theta: &[f32],
+    x: &Tensor,
+    y: &[i32],
+    clip: f32,
+    cache_cap_elems: usize,
+    norms_out: &mut [f32],
+    losses_out: &mut [f32],
+) -> Tensor {
+    let spec = planner.spec();
+    let bsz = x.shape[0];
+    let (logits, saved) = forward_with_tape(spec, theta, x);
+    let classes = logits.shape[1];
+    let (losses, mut dy) = tensor::softmax_xent(&logits, y);
+    losses_out.copy_from_slice(&losses);
+
+    let mut cache = ColsCache::new(cache_cap_elems);
+    let mut nv = NormVisitor::new(planner, bsz);
+    backward_walk(
+        spec,
+        theta,
+        &saved,
+        dy.clone(),
+        &mut nv,
+        ColsMode::Fill(&mut cache),
+    );
+    nv.write_norms(norms_out);
+
+    // Eq. 1: s_b = min(1, C/‖g_b‖), spelled as in `clip_reduce`;
+    // the retained loss gradient is bit-identical to what a second
+    // forward + softmax_xent would recompute, so scaling its rows is
+    // exactly the two-pass pipeline's pass-2 starting point.
+    for b in 0..bsz {
+        let s = 1.0 / (norms_out[b] / clip).max(1.0);
+        for v in &mut dy.data[b * classes..(b + 1) * classes] {
+            *v *= s;
+        }
+    }
+    let mut cv = ClippedSumVisitor::new(spec.param_count());
+    backward_walk(spec, theta, &saved, dy, &mut cv, ColsMode::Read(&cache));
+    cv.psum
+}
+
+/// Legacy two-pass pipeline: pass 1 for norms, pass 2 (its own
+/// forward+tape per microbatch) for the clipped batch gradient.
+fn clipped_step_two_pass(
     planner: &ClippedStepPlanner,
     theta: &[f32],
     x: &Tensor,
@@ -153,63 +302,8 @@ pub fn clipped_step(
     })
 }
 
-/// `⟨AᵀA, BᵀB⟩` for row-major `A (ra×t)`, `B (rb×t)`: the ghost-norm
-/// contraction. Both Gram matrices are symmetric, so only the upper
-/// triangles are formed; accumulation is f64 to keep the norm within
-/// the 1e-4 oracle tolerance. `ga`/`gb` are caller-owned `t*t`
-/// scratch (this sits in the per-example hot loop — the caller
-/// allocates once per layer, not once per call).
-fn gram_dot(
-    a: &[f32],
-    ra: usize,
-    b: &[f32],
-    rb: usize,
-    t: usize,
-    ga: &mut [f64],
-    gb: &mut [f64],
-) -> f64 {
-    debug_assert_eq!(a.len(), ra * t);
-    debug_assert_eq!(b.len(), rb * t);
-    debug_assert_eq!(ga.len(), t * t);
-    debug_assert_eq!(gb.len(), t * t);
-    ga.fill(0.0);
-    gb.fill(0.0);
-    for r in 0..ra {
-        let row = &a[r * t..(r + 1) * t];
-        for i in 0..t {
-            let ai = row[i] as f64;
-            let dst = &mut ga[i * t + i..(i + 1) * t];
-            for (d, v) in dst.iter_mut().zip(&row[i..]) {
-                *d += ai * *v as f64;
-            }
-        }
-    }
-    for r in 0..rb {
-        let row = &b[r * t..(r + 1) * t];
-        for i in 0..t {
-            let bi = row[i] as f64;
-            let dst = &mut gb[i * t + i..(i + 1) * t];
-            for (d, v) in dst.iter_mut().zip(&row[i..]) {
-                *d += bi * *v as f64;
-            }
-        }
-    }
-    let mut acc = 0.0f64;
-    for i in 0..t {
-        acc += ga[i * t + i] * gb[i * t + i];
-        let ra_ = &ga[i * t + i + 1..(i + 1) * t];
-        let rb_ = &gb[i * t + i + 1..(i + 1) * t];
-        let mut s = 0.0f64;
-        for (u, v) in ra_.iter().zip(rb_) {
-            s += u * v;
-        }
-        acc += 2.0 * s;
-    }
-    acc
-}
-
-/// Pass 1 over one worker's example range: squared norms accumulated
-/// layer by layer in f64, square-rooted into `norms_out`.
+/// Norm walk over one worker's example range: forward+tape, then the
+/// shared backward walk with the [`NormVisitor`].
 fn norms_range(
     planner: &ClippedStepPlanner,
     theta: &[f32],
@@ -219,137 +313,18 @@ fn norms_range(
     losses_out: &mut [f32],
 ) {
     let spec = planner.spec();
-    let offsets = spec.param_offsets();
     let bsz = x.shape[0];
-    let (logits, saved) = strategies::forward_with_tape(spec, theta, x);
-    let (losses, mut dy) = tensor::softmax_xent(&logits, y);
+    let (logits, saved) = forward_with_tape(spec, theta, x);
+    let (losses, dy) = tensor::softmax_xent(&logits, y);
     losses_out.copy_from_slice(&losses);
-    let mut nsq = vec![0.0f64; bsz];
-    for (li, l) in spec.layers.iter().enumerate().rev() {
-        match (l, &saved[li]) {
-            (
-                LayerSpec::Conv2d {
-                    in_ch,
-                    out_ch,
-                    kernel,
-                    groups,
-                    ..
-                },
-                Saved::Conv { input },
-            ) => {
-                let args = strategies::conv_args(l);
-                let d = *out_ch;
-                let dg = d / groups;
-                let cg = in_ch / groups;
-                let rows_g = cg * kernel.0 * kernel.1;
-                let howo = dy.shape[2] * dy.shape[3];
-                // bias: ‖Σ_t dy‖² per output channel
-                for b in 0..bsz {
-                    for dd in 0..d {
-                        let row = &dy.data[(b * d + dd) * howo..(b * d + dd + 1) * howo];
-                        let s: f64 = row.iter().map(|v| *v as f64).sum();
-                        nsq[b] += s * s;
-                    }
-                }
-                let path = planner.path(li);
-                // layer-sized scratch, hoisted out of the example
-                // loop and registered in the allocation ledger so the
-                // bench's peak-bytes column sees it (f64 counts
-                // double in f32-equivalent elements)
-                let mut tmp = match path {
-                    NormPath::Direct => vec![0.0f32; dg * rows_g],
-                    NormPath::Ghost => Vec::new(),
-                };
-                let (mut ga, mut gb) = match path {
-                    NormPath::Ghost => (vec![0.0f64; howo * howo], vec![0.0f64; howo * howo]),
-                    NormPath::Direct => (Vec::new(), Vec::new()),
-                };
-                let _scratch =
-                    tensor::alloc::track_scratch(tmp.len() + 2 * (ga.len() + gb.len()));
-                for b in 0..bsz {
-                    let (cols, _, _) = tensor::im2col_single(input, b, kernel.0, kernel.1, args);
-                    for g in 0..*groups {
-                        let dyg = &dy.data[(b * d + g * dg) * howo..(b * d + (g + 1) * dg) * howo];
-                        let colsg = &cols[g * rows_g * howo..(g + 1) * rows_g * howo];
-                        match path {
-                            NormPath::Direct => {
-                                tmp.fill(0.0);
-                                tensor::matmul_nt(dyg, colsg, &mut tmp, dg, howo, rows_g);
-                                let sq: f64 =
-                                    tmp.iter().map(|v| (*v as f64) * (*v as f64)).sum();
-                                nsq[b] += sq;
-                            }
-                            NormPath::Ghost => {
-                                nsq[b] +=
-                                    gram_dot(dyg, dg, colsg, rows_g, howo, &mut ga, &mut gb);
-                            }
-                        }
-                    }
-                }
-                if li > 0 {
-                    let (wv, _) = strategies::layer_params(spec, &offsets, theta, li);
-                    let w = Tensor::from_vec(&[d, cg, kernel.0, kernel.1], wv.to_vec());
-                    dy = tensor::conv2d_grad_input_im2col(
-                        &dy,
-                        &w,
-                        input.shape[2],
-                        input.shape[3],
-                        args,
-                    );
-                }
-            }
-            (LayerSpec::Linear { in_dim, out_dim }, Saved::Linear { input }) => {
-                // Goodfellow: ‖dy_b ⊗ x_b‖² = ‖x_b‖²·‖dy_b‖²; bias adds ‖dy_b‖²
-                for b in 0..bsz {
-                    let xs: f64 = input.data[b * in_dim..(b + 1) * in_dim]
-                        .iter()
-                        .map(|v| (*v as f64) * (*v as f64))
-                        .sum();
-                    let ds: f64 = dy.data[b * out_dim..(b + 1) * out_dim]
-                        .iter()
-                        .map(|v| (*v as f64) * (*v as f64))
-                        .sum();
-                    nsq[b] += xs * ds + ds;
-                }
-                if li > 0 {
-                    let (wv, _) = strategies::layer_params(spec, &offsets, theta, li);
-                    let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
-                    dy = tensor::linear_grad_input(&dy, &w);
-                }
-            }
-            (LayerSpec::InstanceNorm { channels, .. }, Saved::Norm { xhat, inv_std }) => {
-                let (gv, _) = strategies::layer_params(spec, &offsets, theta, li);
-                let (dgamma, dbeta, dx) = tensor::instance_norm_grad(&dy, xhat, inv_std, gv);
-                let cc = *channels;
-                for b in 0..bsz {
-                    for c in 0..cc {
-                        let g = dgamma.data[b * cc + c] as f64;
-                        let be = dbeta.data[b * cc + c] as f64;
-                        nsq[b] += g * g + be * be;
-                    }
-                }
-                dy = dx;
-            }
-            (LayerSpec::Relu, Saved::Relu { pre }) => {
-                dy = tensor::relu_grad(&dy, pre);
-            }
-            (LayerSpec::MaxPool2d { .. }, Saved::Pool { arg, in_shape }) => {
-                dy = tensor::maxpool2d_grad(&dy, arg, in_shape);
-            }
-            (LayerSpec::Flatten, Saved::Flatten { in_shape }) => {
-                dy = dy.reshape(in_shape);
-            }
-            _ => unreachable!("spec/saved mismatch at layer {li}"),
-        }
-    }
-    for (o, v) in norms_out.iter_mut().zip(&nsq) {
-        *o = v.sqrt() as f32;
-    }
+    let mut nv = NormVisitor::new(planner, bsz);
+    backward_walk(spec, theta, &saved, dy, &mut nv, ColsMode::Off);
+    nv.write_norms(norms_out);
 }
 
-/// Pass 2 over one worker's example range: batched backward with the
-/// loss gradient rows pre-scaled by the clip factors, every layer's
-/// gradient accumulated straight into one flat `(P,)` partial.
+/// Two-pass pass 2 over one worker's example range: its own
+/// forward+tape, loss gradient rows pre-scaled by the clip factors,
+/// then the shared backward walk with the [`ClippedSumVisitor`].
 fn clipped_sum_range(
     planner: &ClippedStepPlanner,
     theta: &[f32],
@@ -358,10 +333,8 @@ fn clipped_sum_range(
     scales: &[f32],
 ) -> Tensor {
     let spec = planner.spec();
-    let offsets = spec.param_offsets();
-    let p_total = spec.param_count();
     let bsz = x.shape[0];
-    let (logits, saved) = strategies::forward_with_tape(spec, theta, x);
+    let (logits, saved) = forward_with_tape(spec, theta, x);
     let classes = logits.shape[1];
     let (_, mut dy) = tensor::softmax_xent(&logits, y);
     for b in 0..bsz {
@@ -370,106 +343,9 @@ fn clipped_sum_range(
             *v *= s;
         }
     }
-    let mut psum = Tensor::zeros(&[p_total]);
-    for (li, l) in spec.layers.iter().enumerate().rev() {
-        let off = offsets[li];
-        match (l, &saved[li]) {
-            (
-                LayerSpec::Conv2d {
-                    in_ch,
-                    out_ch,
-                    kernel,
-                    groups,
-                    ..
-                },
-                Saved::Conv { input },
-            ) => {
-                let args = strategies::conv_args(l);
-                let d = *out_ch;
-                let dg = d / groups;
-                let cg = in_ch / groups;
-                let rows_g = cg * kernel.0 * kernel.1;
-                let (wn, _) = spec.layer_param_counts(li);
-                let howo = dy.shape[2] * dy.shape[3];
-                for b in 0..bsz {
-                    let (cols, _, _) = tensor::im2col_single(input, b, kernel.0, kernel.1, args);
-                    for g in 0..*groups {
-                        let dyg = &dy.data[(b * d + g * dg) * howo..(b * d + (g + 1) * dg) * howo];
-                        let colsg = &cols[g * rows_g * howo..(g + 1) * rows_g * howo];
-                        // matmul_nt accumulates: Σ_b dy_b·cols_bᵀ lands
-                        // directly in the weight block
-                        let w0 = off + g * dg * rows_g;
-                        let dst = &mut psum.data[w0..w0 + dg * rows_g];
-                        tensor::matmul_nt(dyg, colsg, dst, dg, howo, rows_g);
-                    }
-                    for dd in 0..d {
-                        let row = &dy.data[(b * d + dd) * howo..(b * d + dd + 1) * howo];
-                        let mut acc = 0.0f64;
-                        for v in row {
-                            acc += *v as f64;
-                        }
-                        psum.data[off + wn + dd] += acc as f32;
-                    }
-                }
-                if li > 0 {
-                    let (wv, _) = strategies::layer_params(spec, &offsets, theta, li);
-                    let w = Tensor::from_vec(&[d, cg, kernel.0, kernel.1], wv.to_vec());
-                    dy = tensor::conv2d_grad_input_im2col(
-                        &dy,
-                        &w,
-                        input.shape[2],
-                        input.shape[3],
-                        args,
-                    );
-                }
-            }
-            (LayerSpec::Linear { in_dim, out_dim }, Saved::Linear { input }) => {
-                let wn = out_dim * in_dim;
-                // Σ_b dy_bᵀ·x_b over the whole range in one blocked matmul
-                tensor::matmul_tn(
-                    &dy.data,
-                    &input.data,
-                    &mut psum.data[off..off + wn],
-                    *out_dim,
-                    bsz,
-                    *in_dim,
-                );
-                for b in 0..bsz {
-                    for j in 0..*out_dim {
-                        psum.data[off + wn + j] += dy.data[b * out_dim + j];
-                    }
-                }
-                if li > 0 {
-                    let (wv, _) = strategies::layer_params(spec, &offsets, theta, li);
-                    let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
-                    dy = tensor::linear_grad_input(&dy, &w);
-                }
-            }
-            (LayerSpec::InstanceNorm { channels, .. }, Saved::Norm { xhat, inv_std }) => {
-                let (gv, _) = strategies::layer_params(spec, &offsets, theta, li);
-                let (dgamma, dbeta, dx) = tensor::instance_norm_grad(&dy, xhat, inv_std, gv);
-                let cc = *channels;
-                for b in 0..bsz {
-                    for c in 0..cc {
-                        psum.data[off + c] += dgamma.data[b * cc + c];
-                        psum.data[off + cc + c] += dbeta.data[b * cc + c];
-                    }
-                }
-                dy = dx;
-            }
-            (LayerSpec::Relu, Saved::Relu { pre }) => {
-                dy = tensor::relu_grad(&dy, pre);
-            }
-            (LayerSpec::MaxPool2d { .. }, Saved::Pool { arg, in_shape }) => {
-                dy = tensor::maxpool2d_grad(&dy, arg, in_shape);
-            }
-            (LayerSpec::Flatten, Saved::Flatten { in_shape }) => {
-                dy = dy.reshape(in_shape);
-            }
-            _ => unreachable!("spec/saved mismatch at layer {li}"),
-        }
-    }
-    psum
+    let mut cv = ClippedSumVisitor::new(spec.param_count());
+    backward_walk(spec, theta, &saved, dy, &mut cv, ColsMode::Off);
+    cv.psum
 }
 
 #[cfg(test)]
@@ -491,34 +367,6 @@ mod tests {
             .map(|_| rng.next_below(spec.num_classes as u64) as i32)
             .collect();
         (theta, Tensor::from_vec(&[bsz, c, h, w], x), y)
-    }
-
-    #[test]
-    fn gram_dot_equals_frobenius_of_product() {
-        let mut rng = Xoshiro256pp::seed_from_u64(5);
-        let (ra, rb, t) = (3usize, 4usize, 6usize);
-        let mut a = vec![0.0f32; ra * t];
-        let mut b = vec![0.0f32; rb * t];
-        rng.fill_gaussian(&mut a, 1.0);
-        rng.fill_gaussian(&mut b, 1.0);
-        // reference: M = A·Bᵀ (ra×rb), ‖M‖²_F
-        let mut want = 0.0f64;
-        for i in 0..ra {
-            for j in 0..rb {
-                let mut m = 0.0f64;
-                for k in 0..t {
-                    m += (a[i * t + k] * b[j * t + k]) as f64;
-                }
-                want += m * m;
-            }
-        }
-        let mut ga = vec![0.0f64; t * t];
-        let mut gb = vec![0.0f64; t * t];
-        let got = gram_dot(&a, ra, &b, rb, t, &mut ga, &mut gb);
-        assert!((got - want).abs() < 1e-8 * want.max(1.0), "{got} vs {want}");
-        // scratch is reusable: a second call must agree exactly
-        let again = gram_dot(&a, ra, &b, rb, t, &mut ga, &mut gb);
-        assert_eq!(got.to_bits(), again.to_bits());
     }
 
     #[test]
@@ -550,6 +398,31 @@ mod tests {
                     .map(|(a, b)| (a - b).abs())
                     .fold(0.0f32, f32::max);
                 assert!(diff < 1e-4, "{mode:?} ({norm}): clipped sum Δ {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_two_pass_bit_exactly_even_when_spilling() {
+        let spec = ModelSpec::toy_cnn(2, 5, 1.4, 3, "instance", (2, 12, 12), 7).unwrap();
+        let (theta, x, y) = problem(&spec, 5, 23);
+        let planner = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let two = ClippedStepPlanner::new(&spec, &GhostMode::default())
+            .unwrap()
+            .with_pipeline(GhostPipeline::TwoPass);
+        for threads in [1usize, 2, 3] {
+            let want = clipped_step(&two, &theta, &x, &y, 0.7, threads).unwrap();
+            // full cache and a cache too small for even one patch
+            // matrix (every entry spills to recompute) must both
+            // reproduce the two-pass bits exactly
+            for cap in [tensor::COLS_CACHE_CAP_ELEMS, 0usize] {
+                let got =
+                    clipped_step_fused(&planner, &theta, &x, &y, 0.7, threads, cap).unwrap();
+                assert_eq!(want.norms, got.norms, "norms (t={threads} cap={cap})");
+                assert_eq!(want.losses, got.losses, "losses (t={threads} cap={cap})");
+                let wb: Vec<u32> = want.grad_sum.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.grad_sum.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(wb, gb, "clipped sum bits (t={threads} cap={cap})");
             }
         }
     }
@@ -587,5 +460,8 @@ mod tests {
         let planner = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
         assert!(perex_norms(&planner, &theta[1..], &x, &y, 1).is_err());
         assert!(perex_norms(&planner, &theta, &x, &y[..1], 1).is_err());
+        // the two-pass escape hatch validates identically
+        let two = planner.with_pipeline(GhostPipeline::TwoPass);
+        assert!(clipped_step(&two, &theta, &x, &y[..1], 1.0, 1).is_err());
     }
 }

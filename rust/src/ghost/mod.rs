@@ -12,10 +12,14 @@
 //!   between the Gram-matrix ("ghost", Goodfellow arXiv:1510.01799 /
 //!   Lee & Kifer arXiv:2009.03106) and direct layer-local norm
 //!   kernels, decided from model geometry.
-//! * [`engine`] — the two-pass pipeline: [`perex_norms`] (norms only,
-//!   the coordinator service's norm query) and [`clipped_step`]
-//!   (norms, then one reweighted batched backward that yields the
-//!   clipped aggregate directly).
+//! * [`engine`] — the pipeline: [`perex_norms`] (norms only, the
+//!   coordinator service's norm query) and [`clipped_step`] (by
+//!   default the fused single-tape pipeline — one forward+tape per
+//!   microbatch whose norm walk feeds the reweighted walk through a
+//!   bounded im2col cache; the legacy two-pass pipeline survives
+//!   behind [`GhostPipeline::TwoPass`] for the differential test and
+//!   the bench comparison). Both walks are visitors over the shared
+//!   reverse layer-walk in [`crate::backward`].
 //!
 //! Wired in as [`crate::strategies::Strategy::GhostNorm`]: config
 //! `[train] strategy = "ghostnorm"` (+ `ghost_norms` for the per-layer
@@ -27,4 +31,4 @@ pub mod engine;
 pub mod planner;
 
 pub use engine::{clipped_step, perex_norms, GhostOutcome};
-pub use planner::{ClippedStepPlanner, GhostMode, LayerPlan, NormPath, PlanChoice};
+pub use planner::{ClippedStepPlanner, GhostMode, GhostPipeline, LayerPlan, NormPath, PlanChoice};

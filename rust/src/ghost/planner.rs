@@ -99,6 +99,22 @@ pub struct LayerPlan {
     pub geometry: (usize, usize, usize),
 }
 
+/// Which execution pipeline [`clipped_step`](crate::ghost::clipped_step)
+/// runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum GhostPipeline {
+    /// Single-tape: one forward+tape per microbatch; the norm walk
+    /// fills a budget-bounded im2col cache that the reweighted walk
+    /// reuses (spilling to recompute past 128 MB). The default.
+    #[default]
+    Fused,
+    /// Legacy two-pass pipeline (a second forward+tape for the
+    /// reweighted backward). Kept as the escape hatch the
+    /// differential test and the bench sweep compare against; results
+    /// are bit-identical to `Fused` at any fixed thread count.
+    TwoPass,
+}
+
 /// The ghost path needs two `T×T` f64 Gram matrices of scratch per
 /// worker. Past this many elements per Gram (128 MB) the trick stops
 /// being a memory win at all, so `Auto` falls back to direct and a
@@ -113,6 +129,7 @@ pub struct ClippedStepPlanner {
     spec: ModelSpec,
     /// One entry per layer; `Some` for convs only.
     paths: Vec<Option<LayerPlan>>,
+    pipeline: GhostPipeline,
 }
 
 impl ClippedStepPlanner {
@@ -210,7 +227,18 @@ impl ClippedStepPlanner {
         Ok(ClippedStepPlanner {
             spec: spec.clone(),
             paths,
+            pipeline: GhostPipeline::default(),
         })
+    }
+
+    /// Same plan, different execution pipeline (builder style).
+    pub fn with_pipeline(mut self, pipeline: GhostPipeline) -> ClippedStepPlanner {
+        self.pipeline = pipeline;
+        self
+    }
+
+    pub fn pipeline(&self) -> GhostPipeline {
+        self.pipeline
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -373,6 +401,15 @@ mod tests {
         assert!(err.contains("cap"), "{err}");
         let p = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
         assert_eq!(p.path(0), NormPath::Direct);
+    }
+
+    #[test]
+    fn pipeline_defaults_to_fused() {
+        let spec = ModelSpec::toy_cnn(1, 3, 1.0, 3, "none", (1, 8, 8), 4).unwrap();
+        let p = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        assert_eq!(p.pipeline(), GhostPipeline::Fused);
+        let p = p.with_pipeline(GhostPipeline::TwoPass);
+        assert_eq!(p.pipeline(), GhostPipeline::TwoPass);
     }
 
     #[test]

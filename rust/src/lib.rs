@@ -18,7 +18,9 @@
 //!   paper's Algorithm-2 im2col matmul kernels in [`tensor`]; plus the
 //!   [`ghost`] subsystem (`ghostnorm`), which serves DP-SGD's norms
 //!   and clipped batch gradient with gradient memory independent of
-//!   the batch size. This is the default execution path: `repro
+//!   the batch size. All backward consumers share one reverse
+//!   layer-walk over the taped forward ([`backward`]); the ghost
+//!   engine's default pipeline is single-tape fused. This is the default execution path: `repro
 //!   train`, the strategy benches and the examples all run on a clean
 //!   checkout with zero artifacts.
 //! * **L2/L1 (python, build-time only, optional)** — the jax versions
@@ -37,6 +39,7 @@
 // these blanket allows keep the lint meaningful everywhere else.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+pub mod backward;
 pub mod bench;
 pub mod check;
 pub mod cli;

@@ -16,7 +16,12 @@
 //! per-example norms share that guarantee; its clipped-sum reduction
 //! order follows the worker split, so the step is bit-deterministic
 //! for a *fixed* thread count and float-tolerance stable across
-//! thread counts.
+//! thread counts. `ghostnorm` runs the fused single-tape pipeline
+//! (one forward+tape per worker microbatch, patch matrices shared
+//! between the norm and reweighted walks) — bit-identical to the
+//! legacy two-pass pipeline, which survives only as the
+//! [`crate::ghost::GhostPipeline::TwoPass`] escape hatch for the
+//! differential test and the bench comparison.
 
 use super::{Backend, StepOutcome};
 use crate::ghost::{self, ClippedStepPlanner, GhostMode};

@@ -26,9 +26,17 @@
 //! slices of the output (so results are bit-identical for any thread
 //! count), and must agree with [`ModelOracle`] within 1e-4 — enforced
 //! by `tests/native_backend.rs`.
+//!
+//! The crb backward itself is one visitor
+//! ([`PerExGradVisitor`](crate::backward::visitors::PerExGradVisitor))
+//! over the shared reverse layer-walk in [`crate::backward`] — the
+//! same walk the ghost engine's norm and clipped-sum passes ride.
 
+use crate::backward::{
+    backward_walk, conv_args, forward_with_tape, layer_params, ColsMode, PerExGradVisitor,
+};
 use crate::models::{LayerSpec, ModelOracle, ModelSpec};
-use crate::tensor::{self, ConvArgs, Tensor};
+use crate::tensor::{self, Tensor};
 use anyhow::{anyhow, bail, Result};
 
 /// Which per-example gradient computation to run.
@@ -269,49 +277,8 @@ fn run_range(
 }
 
 // ---------------------------------------------------------------------------
-// The crb walk: forward + per-example backward with the fast kernels
+// The crb path: forward + per-example backward with the fast kernels
 // ---------------------------------------------------------------------------
-
-/// What each layer's backward pass needs from the forward pass —
-/// shared by the crb walk here and the ghost engine's two passes.
-pub(crate) enum Saved {
-    Conv { input: Tensor },
-    Norm { xhat: Tensor, inv_std: Vec<f32> },
-    Linear { input: Tensor },
-    Relu { pre: Tensor },
-    Pool { arg: Vec<usize>, in_shape: Vec<usize> },
-    Flatten { in_shape: Vec<usize> },
-}
-
-pub(crate) fn conv_args(l: &LayerSpec) -> ConvArgs {
-    match l {
-        LayerSpec::Conv2d {
-            stride,
-            padding,
-            dilation,
-            groups,
-            ..
-        } => ConvArgs {
-            stride: *stride,
-            padding: *padding,
-            dilation: *dilation,
-            groups: *groups,
-        },
-        _ => unreachable!("conv_args on non-conv layer"),
-    }
-}
-
-/// `(weights, bias)` slices of flat theta for layer `li`.
-pub(crate) fn layer_params<'t>(
-    spec: &ModelSpec,
-    offsets: &[usize],
-    theta: &'t [f32],
-    li: usize,
-) -> (&'t [f32], &'t [f32]) {
-    let (wn, bn) = spec.layer_param_counts(li);
-    let off = offsets[li];
-    (&theta[off..off + wn], &theta[off + wn..off + wn + bn])
-}
 
 /// Forward pass with the fast conv kernels; logits `(B, classes)`.
 pub fn fast_forward(spec: &ModelSpec, theta: &[f32], x: &Tensor) -> Tensor {
@@ -357,76 +324,9 @@ pub fn fast_forward(spec: &ModelSpec, theta: &[f32], x: &Tensor) -> Tensor {
     cur
 }
 
-/// Forward pass with the fast kernels, saving what any backward walk
-/// needs per layer (the "tape"). Used by the crb strategy's
-/// per-example backward and by both ghost-engine passes.
-pub(crate) fn forward_with_tape(
-    spec: &ModelSpec,
-    theta: &[f32],
-    x: &Tensor,
-) -> (Tensor, Vec<Saved>) {
-    assert_eq!(theta.len(), spec.param_count(), "theta length mismatch");
-    let offsets = spec.param_offsets();
-    let mut cur = x.clone();
-    let mut saved = Vec::with_capacity(spec.layers.len());
-    for (li, l) in spec.layers.iter().enumerate() {
-        match l {
-            LayerSpec::Conv2d {
-                in_ch,
-                out_ch,
-                kernel,
-                groups,
-                ..
-            } => {
-                let (wv, bv) = layer_params(spec, &offsets, theta, li);
-                let w = Tensor::from_vec(
-                    &[*out_ch, in_ch / groups, kernel.0, kernel.1],
-                    wv.to_vec(),
-                );
-                let y = tensor::conv2d_im2col(&cur, &w, Some(bv), conv_args(l));
-                saved.push(Saved::Conv { input: cur });
-                cur = y;
-            }
-            LayerSpec::Linear { in_dim, out_dim } => {
-                let (wv, bv) = layer_params(spec, &offsets, theta, li);
-                let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
-                let y = tensor::linear(&cur, &w, bv);
-                saved.push(Saved::Linear { input: cur });
-                cur = y;
-            }
-            LayerSpec::InstanceNorm { eps, .. } => {
-                let (gv, bv) = layer_params(spec, &offsets, theta, li);
-                let (y, xhat, inv_std) = tensor::instance_norm(&cur, gv, bv, *eps);
-                saved.push(Saved::Norm { xhat, inv_std });
-                cur = y;
-            }
-            LayerSpec::Relu => {
-                let y = tensor::relu(&cur);
-                saved.push(Saved::Relu { pre: cur });
-                cur = y;
-            }
-            LayerSpec::MaxPool2d { window, stride } => {
-                let (y, arg) = tensor::maxpool2d(&cur, *window, *stride);
-                saved.push(Saved::Pool {
-                    arg,
-                    in_shape: cur.shape.clone(),
-                });
-                cur = y;
-            }
-            LayerSpec::Flatten => {
-                let in_shape = cur.shape.clone();
-                let b = in_shape[0];
-                let n: usize = in_shape[1..].iter().product();
-                cur = cur.reshape(&[b, n]);
-                saved.push(Saved::Flatten { in_shape });
-            }
-        }
-    }
-    (cur, saved)
-}
-
 /// Per-example gradients via the chain-rule decomposition with the
-/// Algorithm-2 im2col kernels: the native `crb` strategy. Same output
+/// Algorithm-2 im2col kernels: the native `crb` strategy, as the
+/// [`PerExGradVisitor`] over the shared backward walk. Same output
 /// contract as [`ModelOracle::perex_grads`].
 pub fn crb_perex_grads(
     spec: &ModelSpec,
@@ -436,96 +336,16 @@ pub fn crb_perex_grads(
 ) -> (Tensor, Vec<f32>) {
     let bsz = x.shape[0];
     let p_total = spec.param_count();
-    let offsets = spec.param_offsets();
     let (logits, saved) = forward_with_tape(spec, theta, x);
-    let (losses, mut dy) = tensor::softmax_xent(&logits, labels);
-
-    // backward: Eq. 4 (conv, via im2col matmuls) + Eq. 2 (linear)
+    let (losses, dy) = tensor::softmax_xent(&logits, labels);
+    // backward: Eq. 4 (conv, via im2col matmuls) + Eq. 2 (linear),
+    // written straight into the rows of the (B, P) matrix
     let mut pergrads = Tensor::zeros(&[bsz, p_total]);
-    for (li, l) in spec.layers.iter().enumerate().rev() {
-        let s = &saved[li];
-        match (l, s) {
-            (
-                LayerSpec::Conv2d {
-                    in_ch,
-                    out_ch,
-                    kernel,
-                    groups,
-                    ..
-                },
-                Saved::Conv { input },
-            ) => {
-                let args = conv_args(l);
-                let dw = tensor::perex_conv2d_grad_im2col(input, &dy, kernel.0, kernel.1, args);
-                let wn = out_ch * (in_ch / groups) * kernel.0 * kernel.1;
-                let (hp, wp) = (dy.shape[2], dy.shape[3]);
-                for b in 0..bsz {
-                    let dst = &mut pergrads.data[b * p_total + offsets[li]..];
-                    dst[..wn].copy_from_slice(&dw.data[b * wn..(b + 1) * wn]);
-                    // per-example bias grad: sum dy over spatial dims
-                    for d in 0..*out_ch {
-                        let row = &dy.data
-                            [(b * out_ch + d) * hp * wp..(b * out_ch + d + 1) * hp * wp];
-                        let mut acc = 0.0f64;
-                        for v in row {
-                            acc += *v as f64;
-                        }
-                        dst[wn + d] = acc as f32;
-                    }
-                }
-                if li > 0 {
-                    let (wv, _) = layer_params(spec, &offsets, theta, li);
-                    let w = Tensor::from_vec(
-                        &[*out_ch, in_ch / groups, kernel.0, kernel.1],
-                        wv.to_vec(),
-                    );
-                    dy = tensor::conv2d_grad_input_im2col(
-                        &dy,
-                        &w,
-                        input.shape[2],
-                        input.shape[3],
-                        args,
-                    );
-                }
-            }
-            (LayerSpec::Linear { in_dim, out_dim }, Saved::Linear { input }) => {
-                let dw = tensor::perex_linear_grad(input, &dy);
-                let wn = out_dim * in_dim;
-                for b in 0..bsz {
-                    let dst = &mut pergrads.data[b * p_total + offsets[li]..];
-                    dst[..wn].copy_from_slice(&dw.data[b * wn..(b + 1) * wn]);
-                    dst[wn..wn + out_dim]
-                        .copy_from_slice(&dy.data[b * out_dim..(b + 1) * out_dim]);
-                }
-                if li > 0 {
-                    let (wv, _) = layer_params(spec, &offsets, theta, li);
-                    let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
-                    dy = tensor::linear_grad_input(&dy, &w);
-                }
-            }
-            (LayerSpec::InstanceNorm { channels, .. }, Saved::Norm { xhat, inv_std }) => {
-                let (gv, _) = layer_params(spec, &offsets, theta, li);
-                let (dgamma, dbeta, dx) = tensor::instance_norm_grad(&dy, xhat, inv_std, gv);
-                let cc = *channels;
-                for b in 0..bsz {
-                    let dst = &mut pergrads.data[b * p_total + offsets[li]..];
-                    dst[..cc].copy_from_slice(&dgamma.data[b * cc..(b + 1) * cc]);
-                    dst[cc..2 * cc].copy_from_slice(&dbeta.data[b * cc..(b + 1) * cc]);
-                }
-                dy = dx;
-            }
-            (LayerSpec::Relu, Saved::Relu { pre }) => {
-                dy = tensor::relu_grad(&dy, pre);
-            }
-            (LayerSpec::MaxPool2d { .. }, Saved::Pool { arg, in_shape }) => {
-                dy = tensor::maxpool2d_grad(&dy, arg, in_shape);
-            }
-            (LayerSpec::Flatten, Saved::Flatten { in_shape }) => {
-                dy = dy.reshape(in_shape);
-            }
-            _ => unreachable!("spec/saved mismatch at layer {li}"),
-        }
-    }
+    let mut visitor = PerExGradVisitor {
+        grads: &mut pergrads.data,
+        p_total,
+    };
+    backward_walk(spec, theta, &saved, dy, &mut visitor, ColsMode::Off);
     (pergrads, losses)
 }
 

@@ -78,6 +78,81 @@ pub mod alloc {
     }
 }
 
+/// Budget for the fused ghost pipeline's per-worker im2col cache:
+/// `2²⁵` f32 elements = 128 MB, the same ceiling the ghost planner
+/// applies to its Gram scratch. Entries past the budget spill — they
+/// are simply not kept, and readers recompute them.
+pub const COLS_CACHE_CAP_ELEMS: usize = 1 << 25;
+
+/// Budget-bounded cache of per-(layer, example) im2col patch
+/// matrices, keyed by `(layer index, example index)`.
+///
+/// The fused ghost pipeline fills one of these during its norm walk
+/// and reads it during the reweighted walk, so each patch matrix is
+/// built once per step instead of twice. Inserts past the element
+/// budget are dropped (*spilled*): a later [`get`](ColsCache::get)
+/// misses and the walk recomputes — `im2col_single` is deterministic,
+/// so a recomputed matrix is bit-identical to a cached one and
+/// spilling never changes results, only work.
+///
+/// Held elements are registered in the [`alloc`] ledger for the
+/// cache's lifetime, so peak-bytes measurements and the memory
+/// regression tests see the cache like any other working memory.
+pub struct ColsCache {
+    cap: usize,
+    used: usize,
+    spills: usize,
+    map: std::collections::HashMap<(usize, usize), Vec<f32>>,
+}
+
+impl ColsCache {
+    pub fn new(cap_elems: usize) -> ColsCache {
+        ColsCache {
+            cap: cap_elems,
+            used: 0,
+            spills: 0,
+            map: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Keep example `b`'s patch matrix for layer `li` — unless it
+    /// would push the cache over budget, in which case it spills.
+    /// Re-inserting a key releases the replaced entry's budget first.
+    pub fn insert(&mut self, li: usize, b: usize, cols: Vec<f32>) {
+        if let Some(old) = self.map.remove(&(li, b)) {
+            self.used -= old.len();
+            alloc::on_free(old.len());
+        }
+        if self.used + cols.len() <= self.cap {
+            self.used += cols.len();
+            alloc::on_alloc(cols.len());
+            self.map.insert((li, b), cols);
+        } else {
+            self.spills += 1;
+        }
+    }
+
+    pub fn get(&self, li: usize, b: usize) -> Option<&[f32]> {
+        self.map.get(&(li, b)).map(|v| v.as_slice())
+    }
+
+    /// How many inserts were dropped for budget.
+    pub fn spills(&self) -> usize {
+        self.spills
+    }
+
+    /// f32 elements currently held.
+    pub fn used_elems(&self) -> usize {
+        self.used
+    }
+}
+
+impl Drop for ColsCache {
+    fn drop(&mut self) {
+        alloc::on_free(self.used);
+    }
+}
+
 /// A dense, row-major f32 tensor.
 #[derive(Debug, PartialEq)]
 pub struct Tensor {
@@ -1291,6 +1366,29 @@ mod tests {
         let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
         let y = conv2d_im2col(&x, &w, None, ConvArgs::default());
         assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn cols_cache_budget_and_spill() {
+        // (the alloc-ledger registration itself is covered by the
+        // serial ghost_memory test binary — the global counters can't
+        // be asserted here without racing parallel unit tests)
+        let mut cache = ColsCache::new(10);
+        cache.insert(0, 0, vec![1.0; 6]);
+        assert_eq!(cache.used_elems(), 6);
+        // over budget: spilled, not stored
+        cache.insert(0, 1, vec![2.0; 6]);
+        assert!(cache.get(0, 1).is_none());
+        assert_eq!(cache.spills(), 1);
+        // still fits: stored
+        cache.insert(1, 0, vec![3.0; 4]);
+        assert_eq!(cache.used_elems(), 10);
+        assert_eq!(cache.get(0, 0).unwrap(), &[1.0; 6][..]);
+        assert_eq!(cache.get(1, 0).unwrap(), &[3.0; 4][..]);
+        // re-inserting a key releases the old entry's budget first
+        cache.insert(0, 0, vec![4.0; 5]);
+        assert_eq!(cache.used_elems(), 9);
+        assert_eq!(cache.get(0, 0).unwrap(), &[4.0; 5][..]);
     }
 
     #[test]

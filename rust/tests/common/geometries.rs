@@ -1,0 +1,161 @@
+//! The one randomized model-geometry generator every numerics test
+//! shares — stride / padding / dilation / groups / channel sweeps,
+//! optional instance norm and pooling — plus the matching random
+//! problem (theta, inputs, labels) and a single-conv-layer case for
+//! the finite-difference gradchecks. `tests/ghostnorm.rs`,
+//! `tests/oracle_gradcheck.rs`, `tests/native_backend.rs` and
+//! `tests/ghost_fused_differential.rs` all draw from here instead of
+//! carrying private copies.
+
+use grad_cnns::check::gen_range;
+use grad_cnns::models::{LayerSpec, ModelSpec};
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::tensor::{ConvArgs, Tensor};
+
+/// Gaussian tensor of the given shape.
+pub fn randn(rng: &mut Xoshiro256pp, shape: &[usize]) -> Tensor {
+    let n = shape.iter().product();
+    let mut data = vec![0.0f32; n];
+    rng.fill_gaussian(&mut data, 1.0);
+    Tensor::from_vec(shape, data)
+}
+
+/// Random model with the geometries the paper sweeps: conv layers with
+/// random stride/padding/dilation/groups, optional instance norm,
+/// relu, occasional pooling, then flatten + linear.
+pub fn random_geometry_spec(r: &mut Xoshiro256pp) -> ModelSpec {
+    let mut layers = Vec::new();
+    let mut c = gen_range(r, 1, 4) * gen_range(r, 1, 3); // groupable channel counts
+    let mut h = gen_range(r, 10, 17);
+    let mut w = h;
+    let input_shape = (c, h, w);
+    let n_conv = gen_range(r, 1, 3);
+    for _ in 0..n_conv {
+        let mut groups = if r.next_f64() < 0.3 { 2 } else { 1 };
+        if c % groups != 0 {
+            groups = 1;
+        }
+        let kh = gen_range(r, 1, 4);
+        let kw = gen_range(r, 1, 4);
+        let mut stride = (gen_range(r, 1, 3), gen_range(r, 1, 3));
+        let mut padding = (gen_range(r, 0, 2), gen_range(r, 0, 2));
+        let mut dilation = (gen_range(r, 1, 3), gen_range(r, 1, 3));
+        let args = |s, p, d| ConvArgs {
+            stride: s,
+            padding: p,
+            dilation: d,
+            groups,
+        };
+        let (mut ho, mut wo) = args(stride, padding, dilation).out_hw(h, w, kh, kw);
+        if ho < 1 || wo < 1 {
+            // degenerate draw: fall back to the safe geometry
+            stride = (1, 1);
+            padding = (1, 1);
+            dilation = (1, 1);
+            let (h2, w2) = args(stride, padding, dilation).out_hw(h, w, kh, kw);
+            ho = h2;
+            wo = w2;
+        }
+        let out_ch = groups * gen_range(r, 1, 5);
+        layers.push(LayerSpec::Conv2d {
+            in_ch: c,
+            out_ch,
+            kernel: (kh, kw),
+            stride,
+            padding,
+            dilation,
+            groups,
+        });
+        c = out_ch;
+        h = ho;
+        w = wo;
+        if r.next_f64() < 0.5 {
+            layers.push(LayerSpec::InstanceNorm {
+                channels: c,
+                eps: 1e-5,
+            });
+        }
+        layers.push(LayerSpec::Relu);
+        if r.next_f64() < 0.4 && h >= 2 && w >= 2 {
+            layers.push(LayerSpec::MaxPool2d {
+                window: (2, 2),
+                stride: (2, 2),
+            });
+            h = (h - 2) / 2 + 1;
+            w = (w - 2) / 2 + 1;
+        }
+    }
+    let num_classes = gen_range(r, 2, 8);
+    layers.push(LayerSpec::Flatten);
+    layers.push(LayerSpec::Linear {
+        in_dim: c * h * w,
+        out_dim: num_classes,
+    });
+    ModelSpec {
+        arch: "randgeom".into(),
+        layers,
+        input_shape,
+        num_classes,
+    }
+}
+
+/// Random `(theta, x, y)` problem instance for a spec.
+pub fn random_problem(
+    spec: &ModelSpec,
+    bsz: usize,
+    r: &mut Xoshiro256pp,
+) -> (Vec<f32>, Tensor, Vec<i32>) {
+    let mut theta = vec![0.0f32; spec.param_count()];
+    r.fill_gaussian(&mut theta, 0.15);
+    let (c, h, w) = spec.input_shape;
+    let mut x = vec![0.0f32; bsz * c * h * w];
+    r.fill_gaussian(&mut x, 1.0);
+    let y: Vec<i32> = (0..bsz)
+        .map(|_| r.next_below(spec.num_classes as u64) as i32)
+        .collect();
+    (theta, Tensor::from_vec(&[bsz, c, h, w], x), y)
+}
+
+/// Random single-conv-layer geometry that is guaranteed valid
+/// (output dims ≥ 1) — the layer-level case the finite-difference
+/// gradchecks probe.
+#[derive(Debug, Clone)]
+pub struct ConvCase {
+    pub args: ConvArgs,
+    pub bsz: usize,
+    pub c: usize,
+    pub d: usize,
+    pub h: usize,
+    pub w: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub seed: u64,
+}
+
+pub fn gen_conv_case(rng: &mut Xoshiro256pp) -> ConvCase {
+    let groups = if rng.next_f64() < 0.3 { 2 } else { 1 };
+    let args = ConvArgs {
+        stride: (gen_range(rng, 1, 3), gen_range(rng, 1, 3)),
+        padding: (gen_range(rng, 0, 2), gen_range(rng, 0, 2)),
+        dilation: (gen_range(rng, 1, 3), gen_range(rng, 1, 3)),
+        groups,
+    };
+    let kh = gen_range(rng, 1, 4);
+    let kw = gen_range(rng, 1, 4);
+    // input big enough that the dilated kernel fits even unpadded
+    let h = args.dilation.0 * (kh - 1) + 1 + gen_range(rng, 1, 5);
+    let w = args.dilation.1 * (kw - 1) + 1 + gen_range(rng, 1, 5);
+    let c = groups * gen_range(rng, 1, 3);
+    let d = groups * gen_range(rng, 1, 3);
+    ConvCase {
+        args,
+        bsz: gen_range(rng, 1, 4),
+        c,
+        d,
+        h,
+        w,
+        kh,
+        kw,
+        seed: rng.next_u64(),
+    }
+}

@@ -1,6 +1,10 @@
-//! Shared helpers for the artifact-dependent integration suites.
-//! (`tests/common/` is not itself a test target; each suite pulls
-//! this in with `mod common;`.)
+//! Shared helpers for the integration suites. (`tests/common/` is
+//! not itself a test target; each suite pulls this in with
+//! `mod common;` and uses its own subset — hence the blanket
+//! dead-code allow.)
+#![allow(dead_code)]
+
+pub mod geometries;
 
 use grad_cnns::runtime::Registry;
 

@@ -1,0 +1,107 @@
+//! Differential harness pinning the fused single-tape ghost pipeline
+//! to the legacy two-pass pipeline, **bit for bit**.
+//!
+//! The fusion's correctness argument is that it only removes
+//! *deterministic recomputation*: the second forward (its tape is a
+//! bit-identical function of the same inputs), the second
+//! softmax-xent (same logits → same loss gradient), and the second
+//! round of im2col (cached patch matrices are bit-identical to
+//! recomputed ones, spilled entries are recomputed). Every f32
+//! operation that remains executes in the same order as the two-pass
+//! pipeline. These tests make that argument empirical: across ≥50
+//! randomized geometries (stride/padding/dilation/groups/channel
+//! sweeps from the shared fixture), planner modes, clip norms and
+//! engine thread counts, norms, losses and clipped sums must be
+//! *identical to the bit* — any drift, however small, is a fusion
+//! bug, not tolerance noise.
+
+mod common;
+
+use common::geometries::{random_geometry_spec, random_problem};
+use grad_cnns::check::gen_range;
+use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode, GhostPipeline, PlanChoice};
+use grad_cnns::rng::Xoshiro256pp;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The acceptance property: fused == two-pass bitwise, over ≥50
+/// randomized geometries with randomized batch sizes, thread counts,
+/// clip norms and planner modes.
+#[test]
+fn fused_bit_identical_to_two_pass_over_geometries() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xF05ED);
+    for case in 0..50u64 {
+        let mut r = rng.fork(case);
+        let spec = random_geometry_spec(&mut r);
+        let bsz = gen_range(&mut r, 1, 7);
+        let threads = gen_range(&mut r, 1, 5);
+        let clip = 0.25 + r.next_f32(); // some examples clip, some don't
+        let mode = match case % 3 {
+            0 => GhostMode::Global(PlanChoice::Auto),
+            1 => GhostMode::Global(PlanChoice::Ghost),
+            _ => GhostMode::Global(PlanChoice::Direct),
+        };
+        let (theta, x, y) = random_problem(&spec, bsz, &mut r);
+
+        let fused = ClippedStepPlanner::new(&spec, &mode).unwrap();
+        assert_eq!(fused.pipeline(), GhostPipeline::Fused, "fused is the default");
+        let two = ClippedStepPlanner::new(&spec, &mode)
+            .unwrap()
+            .with_pipeline(GhostPipeline::TwoPass);
+
+        let a = ghost::clipped_step(&fused, &theta, &x, &y, clip, threads).unwrap();
+        let b = ghost::clipped_step(&two, &theta, &x, &y, clip, threads).unwrap();
+
+        assert_eq!(
+            bits(&a.norms),
+            bits(&b.norms),
+            "case {case} (b{bsz} t{threads} {mode:?}): norms drifted (spec {spec:?})"
+        );
+        assert_eq!(
+            bits(&a.losses),
+            bits(&b.losses),
+            "case {case}: losses drifted"
+        );
+        assert_eq!(
+            bits(&a.grad_sum),
+            bits(&b.grad_sum),
+            "case {case} (b{bsz} t{threads} clip {clip} {mode:?}): \
+             clipped sum drifted (spec {spec:?})"
+        );
+    }
+}
+
+/// Norms stay bit-identical across *engine thread counts* in both
+/// pipelines (each example's norm is a function of its own data
+/// only), and the two pipelines agree bitwise at every count.
+#[test]
+fn norms_thread_count_invariance_holds_in_both_pipelines() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xF05EE);
+    for case in 0..4u64 {
+        let mut r = rng.fork(case);
+        let spec = random_geometry_spec(&mut r);
+        let bsz = 6;
+        let (theta, x, y) = random_problem(&spec, bsz, &mut r);
+        let fused = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let two = ClippedStepPlanner::new(&spec, &GhostMode::default())
+            .unwrap()
+            .with_pipeline(GhostPipeline::TwoPass);
+        let base = ghost::clipped_step(&fused, &theta, &x, &y, 1.0, 1).unwrap();
+        for threads in [1usize, 2, 3, 6, 16] {
+            let a = ghost::clipped_step(&fused, &theta, &x, &y, 1.0, threads).unwrap();
+            let b = ghost::clipped_step(&two, &theta, &x, &y, 1.0, threads).unwrap();
+            assert_eq!(bits(&a.norms), bits(&base.norms), "case {case} t{threads}");
+            assert_eq!(bits(&a.norms), bits(&b.norms), "case {case} t{threads}");
+            assert_eq!(bits(&a.losses), bits(&base.losses), "case {case} t{threads}");
+            // the clipped sum is bit-stable per thread count: fused
+            // vs two-pass must still match exactly at each count
+            assert_eq!(
+                bits(&a.grad_sum),
+                bits(&b.grad_sum),
+                "case {case} t{threads}: pipelines diverged"
+            );
+        }
+    }
+}

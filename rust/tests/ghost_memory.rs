@@ -1,17 +1,62 @@
-//! Peak-allocation property of the ghost-norm engine, asserted via the
-//! tensor allocation counter: the engine's *gradient buffers* are
-//! independent of the batch size (only activations scale with B),
-//! while the materializing strategies hold the full `(B, P)` matrix.
+//! Peak-allocation and forward-pass-count properties of the ghost
+//! engine, asserted via the tensor allocation counter and the tape
+//! build counter:
 //!
-//! This is the one test binary that uses the process-global counter
+//! * the engine's *gradient buffers* are independent of the batch
+//!   size (only activations and the bounded cols cache scale with B),
+//!   while the materializing strategies hold the full `(B, P)` matrix;
+//! * the fused single-tape pipeline builds **exactly one** tape per
+//!   microbatch (the two-pass pipeline builds two), and its peak
+//!   working set stays within the two-pass peak plus the cols-cache
+//!   budget.
+//!
+//! This is the one test binary that uses the process-global counters
 //! for measurements, so it contains exactly one `#[test]` — nothing
-//! else allocates tensors concurrently.
+//! else allocates tensors or builds tapes concurrently.
 
-use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode};
-use grad_cnns::models::ModelSpec;
+use grad_cnns::backward::tape_builds;
+use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode, GhostPipeline};
+use grad_cnns::models::{LayerSpec, ModelSpec};
 use grad_cnns::rng::Xoshiro256pp;
 use grad_cnns::strategies::{Strategy, StrategyRunner};
-use grad_cnns::tensor::{alloc, Tensor};
+use grad_cnns::tensor::{alloc, COLS_CACHE_CAP_ELEMS, ConvArgs, Tensor};
+
+/// Analytic per-example im2col footprint of a spec: Σ over conv
+/// layers of `C·KH·KW·H'·W'` — what the fused pipeline's cols cache
+/// holds per example when nothing spills.
+fn cols_elems_per_example(spec: &ModelSpec) -> usize {
+    let (_, mut h, mut w) = spec.input_shape;
+    let mut total = 0usize;
+    for l in &spec.layers {
+        match l {
+            LayerSpec::Conv2d {
+                in_ch,
+                kernel,
+                stride,
+                padding,
+                dilation,
+                ..
+            } => {
+                let args = ConvArgs {
+                    stride: *stride,
+                    padding: *padding,
+                    dilation: *dilation,
+                    groups: 1,
+                };
+                let (ho, wo) = args.out_hw(h, w, kernel.0, kernel.1);
+                total += in_ch * kernel.0 * kernel.1 * ho * wo;
+                h = ho;
+                w = wo;
+            }
+            LayerSpec::MaxPool2d { window, stride } => {
+                h = (h - window.0) / stride.0 + 1;
+                w = (w - window.1) / stride.1 + 1;
+            }
+            _ => {}
+        }
+    }
+    total
+}
 
 #[test]
 fn ghost_grad_buffers_are_batch_size_independent() {
@@ -46,7 +91,8 @@ fn ghost_grad_buffers_are_batch_size_independent() {
     let peak4 = ghost_peak(4);
     let peak8 = ghost_peak(8);
     let peak16 = ghost_peak(16);
-    // peak(B) = a·B + g with g the batch-independent gradient buffers:
+    // peak(B) = a·B + g with g the batch-independent gradient buffers
+    // (the cols cache and activations land in the B-linear `a` term):
     // both finite-difference estimates of g must agree...
     let g1 = 2 * peak8 - peak16;
     let g2 = 2 * peak4 - peak8;
@@ -64,6 +110,72 @@ fn ghost_grad_buffers_are_batch_size_independent() {
         g1 < 20 * p as i64,
         "gradient buffers {g1} unexpectedly large vs P={p}"
     );
+
+    // --- fused vs two-pass: tape builds + peak regression ---
+    let bsz = 8usize;
+    let mut x = vec![0.0f32; bsz * c * h * w];
+    rng.fill_gaussian(&mut x, 1.0);
+    let x = Tensor::from_vec(&[bsz, c, h, w], x);
+    let y: Vec<i32> = (0..bsz).map(|i| (i % 64) as i32).collect();
+    let two_pass = ClippedStepPlanner::new(&spec, &GhostMode::default())
+        .unwrap()
+        .with_pipeline(GhostPipeline::TwoPass);
+
+    alloc::reset_peak();
+    let base = alloc::live_elems();
+    let t0 = tape_builds();
+    let out_two = ghost::clipped_step(&two_pass, &theta, &x, &y, 1.0, 1).unwrap();
+    assert_eq!(
+        tape_builds() - t0,
+        2,
+        "two-pass pipeline = one norms tape + one reweighted tape"
+    );
+    let two_peak = alloc::peak_elems() - base;
+
+    alloc::reset_peak();
+    let base = alloc::live_elems();
+    let t0 = tape_builds();
+    let out_fused = ghost::clipped_step(&planner, &theta, &x, &y, 1.0, 1).unwrap();
+    assert_eq!(
+        tape_builds() - t0,
+        1,
+        "fused pipeline must build exactly one tape per microbatch"
+    );
+    let fused_peak = alloc::peak_elems() - base;
+    assert_eq!(out_fused.norms, out_two.norms, "pipelines disagree on norms");
+    assert_eq!(
+        out_fused.grad_sum, out_two.grad_sum,
+        "pipelines disagree on the clipped sum"
+    );
+    // memory regression bounds. The hard ceiling is the cols-cache
+    // budget (the ISSUE contract)...
+    assert!(
+        fused_peak <= two_peak + COLS_CACHE_CAP_ELEMS as i64,
+        "fused peak {fused_peak} exceeds two-pass peak {two_peak} + cache cap"
+    );
+    // ...but that slack (33.5M elems) dwarfs this toy workload, so
+    // also pin the *actual* fusion overhead: the analytic cols-cache
+    // footprint for this batch plus P of slack (retained loss
+    // gradient, allocator jitter). A regression to materializing
+    // anything B·P-shaped (~16·P here) would blow straight past this.
+    let cache_elems = (cols_elems_per_example(&spec) * bsz) as i64;
+    assert!(
+        fused_peak <= two_peak + cache_elems + p as i64,
+        "fused peak {fused_peak} exceeds two-pass peak {two_peak} + \
+         cols cache {cache_elems} + P={p} slack"
+    );
+
+    // one tape per *microbatch*: 2 worker ranges → 2 builds (fused),
+    // 4 (two-pass); the norm-only query is always a single walk
+    let t0 = tape_builds();
+    ghost::clipped_step(&planner, &theta, &x, &y, 1.0, 2).unwrap();
+    assert_eq!(tape_builds() - t0, 2, "fused, 2 microbatches");
+    let t0 = tape_builds();
+    ghost::clipped_step(&two_pass, &theta, &x, &y, 1.0, 2).unwrap();
+    assert_eq!(tape_builds() - t0, 4, "two-pass, 2 microbatches");
+    let t0 = tape_builds();
+    ghost::perex_norms(&planner, &theta, &x, &y, 1).unwrap();
+    assert_eq!(tape_builds() - t0, 1, "norm-only query");
 
     // contrast: the materializing crb strategy must hold the full
     // (B, P) matrix — its peak at B=16 dwarfs the ghost engine's

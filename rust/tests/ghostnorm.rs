@@ -9,109 +9,17 @@
 //!   norm-only service answers oracle norms with zero artifacts;
 //! * settings ghostnorm cannot honor are rejected, not degraded.
 
+mod common;
+
+use common::geometries::{random_geometry_spec, random_problem};
 use grad_cnns::check::gen_range;
 use grad_cnns::config::{Config, ExperimentConfig};
 use grad_cnns::coordinator::{GradRequest, NativeServiceConfig, ServiceHandle, Trainer};
 use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode, PlanChoice};
-use grad_cnns::models::{LayerSpec, ModelOracle, ModelSpec};
+use grad_cnns::models::{ModelOracle, ModelSpec};
 use grad_cnns::rng::Xoshiro256pp;
 use grad_cnns::runtime::NativeBackend;
-use grad_cnns::tensor::{clip_reduce, ConvArgs, Tensor};
-
-/// Random model with the geometries the paper sweeps: conv layers with
-/// random stride/padding/dilation/groups, optional instance norm,
-/// relu, occasional pooling, then flatten + linear.
-fn random_geometry_spec(r: &mut Xoshiro256pp) -> ModelSpec {
-    let mut layers = Vec::new();
-    let mut c = gen_range(r, 1, 4) * gen_range(r, 1, 3); // groupable channel counts
-    let mut h = gen_range(r, 10, 17);
-    let mut w = h;
-    let input_shape = (c, h, w);
-    let n_conv = gen_range(r, 1, 3);
-    for _ in 0..n_conv {
-        let mut groups = if r.next_f64() < 0.3 { 2 } else { 1 };
-        if c % groups != 0 {
-            groups = 1;
-        }
-        let kh = gen_range(r, 1, 4);
-        let kw = gen_range(r, 1, 4);
-        let mut stride = (gen_range(r, 1, 3), gen_range(r, 1, 3));
-        let mut padding = (gen_range(r, 0, 2), gen_range(r, 0, 2));
-        let mut dilation = (gen_range(r, 1, 3), gen_range(r, 1, 3));
-        let args = |s, p, d| ConvArgs {
-            stride: s,
-            padding: p,
-            dilation: d,
-            groups,
-        };
-        let (mut ho, mut wo) = args(stride, padding, dilation).out_hw(h, w, kh, kw);
-        if ho < 1 || wo < 1 {
-            // degenerate draw: fall back to the safe geometry
-            stride = (1, 1);
-            padding = (1, 1);
-            dilation = (1, 1);
-            let (h2, w2) = args(stride, padding, dilation).out_hw(h, w, kh, kw);
-            ho = h2;
-            wo = w2;
-        }
-        let out_ch = groups * gen_range(r, 1, 5);
-        layers.push(LayerSpec::Conv2d {
-            in_ch: c,
-            out_ch,
-            kernel: (kh, kw),
-            stride,
-            padding,
-            dilation,
-            groups,
-        });
-        c = out_ch;
-        h = ho;
-        w = wo;
-        if r.next_f64() < 0.5 {
-            layers.push(LayerSpec::InstanceNorm {
-                channels: c,
-                eps: 1e-5,
-            });
-        }
-        layers.push(LayerSpec::Relu);
-        if r.next_f64() < 0.4 && h >= 2 && w >= 2 {
-            layers.push(LayerSpec::MaxPool2d {
-                window: (2, 2),
-                stride: (2, 2),
-            });
-            h = (h - 2) / 2 + 1;
-            w = (w - 2) / 2 + 1;
-        }
-    }
-    let num_classes = gen_range(r, 2, 8);
-    layers.push(LayerSpec::Flatten);
-    layers.push(LayerSpec::Linear {
-        in_dim: c * h * w,
-        out_dim: num_classes,
-    });
-    ModelSpec {
-        arch: "randgeom".into(),
-        layers,
-        input_shape,
-        num_classes,
-    }
-}
-
-fn random_problem(
-    spec: &ModelSpec,
-    bsz: usize,
-    r: &mut Xoshiro256pp,
-) -> (Vec<f32>, Tensor, Vec<i32>) {
-    let mut theta = vec![0.0f32; spec.param_count()];
-    r.fill_gaussian(&mut theta, 0.15);
-    let (c, h, w) = spec.input_shape;
-    let mut x = vec![0.0f32; bsz * c * h * w];
-    r.fill_gaussian(&mut x, 1.0);
-    let y: Vec<i32> = (0..bsz)
-        .map(|_| r.next_below(spec.num_classes as u64) as i32)
-        .collect();
-    (theta, Tensor::from_vec(&[bsz, c, h, w], x), y)
-}
+use grad_cnns::tensor::{clip_reduce, Tensor};
 
 /// The acceptance property: over randomized geometries, for every
 /// planner mode, ghost norms match oracle norms and the ghost clipped

@@ -5,6 +5,9 @@
 //! artifact-free twins of `tests/{runtime_numerics,coordinator_e2e}`
 //! and run on any checkout.
 
+mod common;
+
+use common::geometries::{random_geometry_spec, random_problem};
 use grad_cnns::check::{gen_range, CheckConfig};
 use grad_cnns::config::{Config, ExperimentConfig};
 use grad_cnns::coordinator::{Checkpoint, Trainer};
@@ -12,7 +15,7 @@ use grad_cnns::models::{ModelOracle, ModelSpec};
 use grad_cnns::rng::Xoshiro256pp;
 use grad_cnns::runtime::{Backend, NativeBackend};
 use grad_cnns::strategies::{Strategy, StrategyRunner};
-use grad_cnns::tensor::{clip_reduce, Tensor};
+use grad_cnns::tensor::clip_reduce;
 
 fn spec_from(
     n_layers: usize,
@@ -26,43 +29,20 @@ fn spec_from(
     ModelSpec::toy_cnn(n_layers, first_channels, rate, kernel, norm, input, classes).unwrap()
 }
 
-fn random_problem(spec: &ModelSpec, bsz: usize, seed: u64) -> (Vec<f32>, Tensor, Vec<i32>) {
-    let mut rng = Xoshiro256pp::seed_from_u64(seed);
-    let mut theta = vec![0.0f32; spec.param_count()];
-    rng.fill_gaussian(&mut theta, 0.1);
-    let (c, h, w) = spec.input_shape;
-    let mut x = vec![0.0f32; bsz * c * h * w];
-    rng.fill_gaussian(&mut x, 1.0);
-    let y: Vec<i32> = (0..bsz)
-        .map(|_| rng.next_below(spec.num_classes as u64) as i32)
-        .collect();
-    (theta, Tensor::from_vec(&[bsz, c, h, w], x), y)
-}
-
 /// Cross-strategy agreement on randomized CNNs: naive vs multi vs crb
-/// within 1e-4 of each other and of the oracle, over random depths,
-/// widths, kernels, norms, batch sizes and thread counts.
+/// within 1e-4 of each other and of the oracle, over the shared
+/// stride/padding/dilation/groups geometry sweep, random batch sizes
+/// and thread counts.
 #[test]
 fn strategies_agree_on_randomized_cnns() {
     let cfg = CheckConfig::default();
     let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
     for case in 0..12 {
         let mut r = rng.fork(case);
-        let n_layers = gen_range(&mut r, 1, 4);
-        let first = gen_range(&mut r, 2, 7);
-        let kernel = gen_range(&mut r, 2, 4);
-        let rate = 1.0 + r.next_f64();
-        let norm = if r.next_f64() < 0.5 { "none" } else { "instance" };
-        let c = gen_range(&mut r, 1, 4);
-        // keep spatial dims big enough for n_layers convs + pools
-        let hw_lo = 4 * kernel + n_layers * 2;
-        let hw = gen_range(&mut r, hw_lo, 18.max(hw_lo + 1));
-        let classes = gen_range(&mut r, 2, 11);
+        let spec = random_geometry_spec(&mut r);
         let bsz = gen_range(&mut r, 1, 6);
         let threads = gen_range(&mut r, 1, 5);
-
-        let spec = spec_from(n_layers, first, rate, kernel, norm, (c, hw, hw), classes);
-        let (theta, x, y) = random_problem(&spec, bsz, r.next_u64());
+        let (theta, x, y) = random_problem(&spec, bsz, &mut r);
         let oracle = ModelOracle::new(spec.clone());
         let (want, want_losses) = oracle.perex_grads(&theta, &x, &y);
 
@@ -73,8 +53,7 @@ fn strategies_agree_on_randomized_cnns() {
             let diff = got.max_abs_diff(&want);
             assert!(
                 diff < 1e-4,
-                "case {case} ({n_layers}L k{kernel} {norm} b{bsz} t{threads}): \
-                 {} vs oracle Δ {diff}",
+                "case {case} (b{bsz} t{threads}): {} vs oracle Δ {diff} (spec {spec:?})",
                 strategy.name()
             );
             for (a, b) in losses.iter().zip(&want_losses) {
@@ -97,7 +76,8 @@ fn strategies_agree_on_randomized_cnns() {
 #[test]
 fn native_step_zero_noise_is_clipped_sgd() {
     let spec = spec_from(2, 5, 1.5, 3, "none", (2, 10, 10), 8);
-    let (theta0, x, y) = random_problem(&spec, 4, 24);
+    let mut r = Xoshiro256pp::seed_from_u64(24);
+    let (theta0, x, y) = random_problem(&spec, 4, &mut r);
     let (clip, lr) = (0.5f32, 0.1f32);
     for strategy in Strategy::ALL {
         let mut be = NativeBackend::new(spec.clone(), strategy, 2, clip, 0.0, lr);

@@ -8,11 +8,14 @@
 //!
 //! Pure host math — runs on any checkout (no artifacts, no PJRT).
 
+mod common;
+
+use common::geometries::{gen_conv_case, randn, ConvCase};
 use grad_cnns::check::{forall, gen_range, CheckConfig};
 use grad_cnns::rng::Xoshiro256pp;
 use grad_cnns::tensor::{
     conv2d, conv2d_grad_input, conv2d_grad_input_im2col, instance_norm, instance_norm_grad,
-    linear, perex_conv2d_grad, perex_conv2d_grad_im2col, perex_linear_grad, ConvArgs, Tensor,
+    linear, perex_conv2d_grad, perex_conv2d_grad_im2col, perex_linear_grad, Tensor,
 };
 
 fn cfg() -> CheckConfig {
@@ -21,55 +24,6 @@ fn cfg() -> CheckConfig {
     CheckConfig {
         cases: 24,
         ..CheckConfig::default()
-    }
-}
-
-fn randn(rng: &mut Xoshiro256pp, shape: &[usize]) -> Tensor {
-    let n = shape.iter().product();
-    let mut data = vec![0.0f32; n];
-    rng.fill_gaussian(&mut data, 1.0);
-    Tensor::from_vec(shape, data)
-}
-
-/// Random conv geometry that is guaranteed valid (output dims ≥ 1).
-#[derive(Debug, Clone)]
-struct ConvCase {
-    args: ConvArgs,
-    bsz: usize,
-    c: usize,
-    d: usize,
-    h: usize,
-    w: usize,
-    kh: usize,
-    kw: usize,
-    seed: u64,
-}
-
-fn gen_conv_case(rng: &mut Xoshiro256pp) -> ConvCase {
-    let groups = if rng.next_f64() < 0.3 { 2 } else { 1 };
-    let args = ConvArgs {
-        stride: (gen_range(rng, 1, 3), gen_range(rng, 1, 3)),
-        padding: (gen_range(rng, 0, 2), gen_range(rng, 0, 2)),
-        dilation: (gen_range(rng, 1, 3), gen_range(rng, 1, 3)),
-        groups,
-    };
-    let kh = gen_range(rng, 1, 4);
-    let kw = gen_range(rng, 1, 4);
-    // input big enough that the dilated kernel fits even unpadded
-    let h = args.dilation.0 * (kh - 1) + 1 + gen_range(rng, 1, 5);
-    let w = args.dilation.1 * (kw - 1) + 1 + gen_range(rng, 1, 5);
-    let c = groups * gen_range(rng, 1, 3);
-    let d = groups * gen_range(rng, 1, 3);
-    ConvCase {
-        args,
-        bsz: gen_range(rng, 1, 4),
-        c,
-        d,
-        h,
-        w,
-        kh,
-        kw,
-        seed: rng.next_u64(),
     }
 }
 
