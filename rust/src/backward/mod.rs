@@ -19,7 +19,14 @@
 //!   [`BackwardVisitor`](walk::BackwardVisitor). The walk can fill or
 //!   reuse a [`ColsCache`](crate::tensor::ColsCache), which is how
 //!   the fused ghost pipeline shares patch matrices between its norm
-//!   and reweighted walks.
+//!   and reweighted walks; it can likewise record per-layer dy into a
+//!   [`DyCache`](crate::tensor::DyCache), which
+//!   [`reuse_walk`](walk::reuse_walk) consumes scaled by the clip
+//!   factors — the scaled-reuse pipeline that skips the second
+//!   backward's propagation matmuls entirely (counted by
+//!   [`prop_matmuls`](walk::prop_matmuls)). Conv patch matrices can
+//!   be filled by an intra-microbatch parallel (example × row-chunk)
+//!   work queue with bit-identical results.
 //! * [`visitors`] — the three small visitor implementations:
 //!   [`PerExGradVisitor`](visitors::PerExGradVisitor) (the `crb`
 //!   strategy), [`NormVisitor`](visitors::NormVisitor) (ghost
@@ -27,18 +34,24 @@
 //!   [`ClippedSumVisitor`](visitors::ClippedSumVisitor) (the
 //!   reweighted clipped batch gradient).
 //!
-//! Adding a layer type is now a single-site change: teach the tape
-//! and the walk about it, and every consumer — norms, clipped sums,
-//! per-example gradients — inherits it. The randomized property tests
-//! in `tests/ghostnorm.rs` and the differential harness in
-//! `tests/ghost_fused_differential.rs` pin all three visitors to the
-//! oracle and to each other.
+//! Adding a layer type means teaching the tape and *both* walks —
+//! [`backward_walk`](walk::backward_walk) and the scaled-reuse
+//! [`reuse_walk`](walk::reuse_walk), which deliberately keeps its own
+//! frontier-aware reverse loop so the hot shared walk stays bit-exact
+//! and untouched by reuse concerns (a missed arm fails loud via the
+//! walks' `unreachable!` spec/saved match) — after which every
+//! consumer — norms, clipped sums, per-example gradients — inherits
+//! it. The randomized property tests in `tests/ghostnorm.rs` and the
+//! differential harnesses in `tests/ghost_fused_differential.rs` and
+//! `tests/ghost_reuse_differential.rs` pin all the visitors and walks
+//! to the oracle and to each other.
 
 pub mod tape;
 pub mod visitors;
 pub mod walk;
 
 pub use tape::tape_builds;
+pub use walk::prop_matmuls;
 pub(crate) use tape::{conv_args, forward_with_tape, layer_params};
 pub(crate) use visitors::{ClippedSumVisitor, NormVisitor, PerExGradVisitor};
-pub(crate) use walk::{backward_walk, ColsMode};
+pub(crate) use walk::{backward_walk, reuse_walk, ColsMode, DyMode, WalkCtl};

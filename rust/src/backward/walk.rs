@@ -17,10 +17,48 @@
 //! `im2col_single` is deterministic, so a cached matrix is
 //! bit-identical to a recomputed one — callers may mix modes freely
 //! without changing results.
+//!
+//! Two further controls ride in [`WalkCtl`]:
+//!
+//! * [`DyMode::Fill`] records each plan-marked parametric layer's
+//!   *unscaled* `dy` (conv/linear blocks, instance-norm affine grads)
+//!   into a [`DyCache`](crate::tensor::DyCache) — the ghost engine's
+//!   scaled-reuse pipeline saves them during its norm walk and
+//!   [`reuse_walk`] consumes them scaled by the clip factors instead
+//!   of re-propagating.
+//! * `inner > 1` turns on the intra-microbatch parallel im2col fill:
+//!   each conv layer's patch matrices are carved into (example ×
+//!   row-chunk) units drained off a shared queue by `inner` scoped
+//!   threads. Only the *fill* is parallel — visitor calls still run
+//!   serially in example order, and `im2col_rows` writes are pure and
+//!   disjoint, so results are bit-identical to the serial walk at any
+//!   `inner`.
+//!
+//! Every dy-propagation op (conv/linear input gradients, the
+//! instance-norm backward) bumps a process-global counter readable
+//! via [`prop_matmuls`] — how the tests *prove* the scaled-reuse walk
+//! skips the propagation chain for cached layers.
 
 use super::tape::{conv_args, layer_params, Saved};
+use crate::ghost::planner::ReusePlan;
 use crate::models::{LayerSpec, ModelSpec};
-use crate::tensor::{self, ColsCache, Tensor};
+use crate::tensor::{self, ColsCache, ConvArgs, DyCache, DyEntry, Tensor};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static PROP_MATMULS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of dy-propagation ops (conv/linear input-gradient matmuls,
+/// instance-norm backwards) executed by backward walks since process
+/// start. Global and monotonic, like
+/// [`tape_builds`](super::tape_builds): tests assert on deltas and
+/// must serialize against other walk-running tests in their binary.
+pub fn prop_matmuls() -> u64 {
+    PROP_MATMULS.load(Ordering::Relaxed)
+}
+
+fn count_prop() {
+    PROP_MATMULS.fetch_add(1, Ordering::Relaxed);
+}
 
 /// Geometry of one conv layer, precomputed for the visitor.
 pub(crate) struct ConvCtx {
@@ -80,6 +118,142 @@ pub(crate) enum ColsMode<'c> {
     Read(&'c ColsCache),
 }
 
+/// Whether the walk records per-layer dy for the scaled-reuse walk.
+pub(crate) enum DyMode<'d> {
+    Off,
+    /// Record each plan-marked parametric layer's *unscaled* dy —
+    /// conv/linear per-example blocks, instance-norm per-example
+    /// affine grads — into `cache` (over budget: spill).
+    Fill {
+        cache: &'d mut DyCache,
+        plan: &'d ReusePlan,
+    },
+}
+
+/// Everything that steers one [`backward_walk`] besides the visitor.
+pub(crate) struct WalkCtl<'c, 'd> {
+    pub cols: ColsMode<'c>,
+    pub dy: DyMode<'d>,
+    /// Threads for the intra-microbatch parallel im2col fill; 1 =
+    /// serial. Any value produces bit-identical results.
+    pub inner: usize,
+}
+
+impl WalkCtl<'_, '_> {
+    /// No caches, serial fill — the plain walk.
+    pub fn off() -> WalkCtl<'static, 'static> {
+        WalkCtl {
+            cols: ColsMode::Off,
+            dy: DyMode::Off,
+            inner: 1,
+        }
+    }
+}
+
+/// Below this many elements of im2col fill work for one conv layer
+/// (missing examples × patch-matrix size), the parallel fill's spawn
+/// overhead outweighs the copy and the walk stays serial. The ghost
+/// planner's outer-vs-inner split decision reuses the same constant
+/// against the model's largest per-example layer fill — the quantity
+/// this gate sees in the one-example microbatches where inner
+/// parallelism engages — so the two gates cannot drift apart.
+pub(crate) const INNER_PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// One (example, row-chunk) unit of the parallel im2col fill.
+struct ColsChunk<'a> {
+    b: usize,
+    r0: usize,
+    r1: usize,
+    dst: &'a mut [f32],
+}
+
+/// The shared gate for the intra-microbatch parallel fill, used by
+/// both walks: pre-fill the patch matrices of the examples `need[b]`
+/// when the total fill work covers the spawn overhead, otherwise
+/// `None` (the caller falls back to serial per-example im2col).
+/// `cols_elems` is one example's patch-matrix size.
+fn maybe_prefill_cols(
+    input: &Tensor,
+    kh: usize,
+    kw: usize,
+    args: ConvArgs,
+    need: Vec<bool>,
+    cols_elems: usize,
+    inner: usize,
+) -> Option<Vec<Option<Vec<f32>>>> {
+    let n_need = need.iter().filter(|x| **x).count();
+    if inner <= 1 || n_need * cols_elems < INNER_PAR_MIN_ELEMS {
+        return None;
+    }
+    // the prefill transiently owns every missing example's matrix at
+    // once, outside any budget or ledger — sane only because engine
+    // callers pass inner > 1 solely for one-example microbatches
+    // (the planner split invariant); keep that invariant local
+    debug_assert!(
+        n_need <= 1 || n_need * cols_elems <= crate::tensor::COLS_CACHE_CAP_ELEMS,
+        "parallel im2col prefill would transiently hold {} elems",
+        n_need * cols_elems
+    );
+    Some(fill_cols_parallel(input, kh, kw, args, &need, inner))
+}
+
+/// im2col patch matrices for the examples `need[b]` of one conv
+/// layer, filled by `inner` threads draining (example × row-chunk)
+/// units off a shared queue — work stealing, so one huge example
+/// simply occupies more pulls. `im2col_rows` writes are pure and the
+/// chunks disjoint: the result is bit-identical to serial
+/// `im2col_single` calls.
+fn fill_cols_parallel(
+    input: &Tensor,
+    kh: usize,
+    kw: usize,
+    args: ConvArgs,
+    need: &[bool],
+    inner: usize,
+) -> Vec<Option<Vec<f32>>> {
+    let rows = input.shape[1] * kh * kw;
+    let (ho, wo) = args.out_hw(input.shape[2], input.shape[3], kh, kw);
+    let howo = ho * wo;
+    let mut out: Vec<Option<Vec<f32>>> = need
+        .iter()
+        .map(|n| n.then(|| vec![0.0f32; rows * howo]))
+        .collect();
+    let n_need = need.iter().filter(|n| **n).count();
+    // ~2 units per thread for stealing slack, spread over the examples
+    let chunks_per_ex = (2 * inner).div_ceil(n_need.max(1)).clamp(1, rows);
+    let chunk_rows = rows.div_ceil(chunks_per_ex);
+    let mut units = Vec::with_capacity(n_need * chunks_per_ex);
+    for (b, slot) in out.iter_mut().enumerate() {
+        if let Some(buf) = slot {
+            let mut rest: &mut [f32] = buf;
+            let mut r0 = 0;
+            while r0 < rows {
+                let r1 = (r0 + chunk_rows).min(rows);
+                let (dst, r) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * howo);
+                rest = r;
+                units.push(ColsChunk { b, r0, r1, dst });
+                r0 = r1;
+            }
+        }
+    }
+    let queue = std::sync::Mutex::new(units);
+    let drain = || loop {
+        let Some(u) = queue.lock().unwrap().pop() else {
+            break;
+        };
+        tensor::im2col_rows(input, u.b, kh, kw, args, u.r0, u.r1, u.dst);
+    };
+    std::thread::scope(|s| {
+        for _ in 1..inner.max(1) {
+            s.spawn(drain);
+        }
+        drain(); // this thread works too
+    });
+    // end the queue's borrows of `out` before returning it
+    drop(queue);
+    out
+}
+
 /// Drive one backward pass over the tape, consuming `dy` (the loss
 /// gradient at the network output) and invoking `visitor` at every
 /// parametric layer. Propagation below layer 0 is skipped.
@@ -89,7 +263,7 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
     saved: &[Saved],
     mut dy: Tensor,
     visitor: &mut V,
-    mut cols: ColsMode<'_>,
+    mut ctl: WalkCtl<'_, '_>,
 ) {
     let offsets = spec.param_offsets();
     for (li, l) in spec.layers.iter().enumerate().rev() {
@@ -122,32 +296,59 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                     rows_g,
                     howo,
                 };
+                if let DyMode::Fill { cache, plan } = &mut ctl.dy {
+                    if plan.cache_dy[li] {
+                        cache.insert_blocks(li, dy.data.clone(), d * howo);
+                    }
+                }
                 visitor.conv_layer_start(&ctx);
+                // pre-fill the missing patch matrices in parallel when
+                // there is enough work; visitor calls stay serial in
+                // example order either way (the serial common path
+                // never builds the need vector)
+                let mut prefilled = if ctl.inner > 1 {
+                    let need: Vec<bool> = (0..bsz)
+                        .map(|b| match &ctl.cols {
+                            ColsMode::Read(cache) => cache.get(li, b).is_none(),
+                            _ => true,
+                        })
+                        .collect();
+                    maybe_prefill_cols(
+                        input,
+                        kernel.0,
+                        kernel.1,
+                        args,
+                        need,
+                        groups * rows_g * howo,
+                        ctl.inner,
+                    )
+                } else {
+                    None
+                };
                 for b in 0..bsz {
                     let dy_b = &dy.data[b * d * howo..(b + 1) * d * howo];
-                    match &mut cols {
-                        ColsMode::Read(cache) => match cache.get(li, b) {
-                            Some(c) => visitor.conv_example(&ctx, b, c, dy_b),
-                            None => {
-                                let (c, _, _) =
-                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args);
-                                visitor.conv_example(&ctx, b, &c, dy_b);
+                    let hit = match &ctl.cols {
+                        ColsMode::Read(cache) => cache.get(li, b),
+                        _ => None,
+                    };
+                    match hit {
+                        Some(c) => visitor.conv_example(&ctx, b, c, dy_b),
+                        None => {
+                            let c = prefilled
+                                .as_mut()
+                                .and_then(|p| p[b].take())
+                                .unwrap_or_else(|| {
+                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args).0
+                                });
+                            visitor.conv_example(&ctx, b, &c, dy_b);
+                            if let ColsMode::Fill(cache) = &mut ctl.cols {
+                                cache.insert(li, b, c);
                             }
-                        },
-                        ColsMode::Fill(cache) => {
-                            let (c, _, _) =
-                                tensor::im2col_single(input, b, kernel.0, kernel.1, args);
-                            visitor.conv_example(&ctx, b, &c, dy_b);
-                            cache.insert(li, b, c);
-                        }
-                        ColsMode::Off => {
-                            let (c, _, _) =
-                                tensor::im2col_single(input, b, kernel.0, kernel.1, args);
-                            visitor.conv_example(&ctx, b, &c, dy_b);
                         }
                     }
                 }
                 if li > 0 {
+                    count_prop();
                     let (wv, _) = layer_params(spec, &offsets, theta, li);
                     let w = Tensor::from_vec(&[d, cg, kernel.0, kernel.1], wv.to_vec());
                     dy = tensor::conv2d_grad_input_im2col(
@@ -167,8 +368,14 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                     in_dim: *in_dim,
                     out_dim: *out_dim,
                 };
+                if let DyMode::Fill { cache, plan } = &mut ctl.dy {
+                    if plan.cache_dy[li] {
+                        cache.insert_blocks(li, dy.data.clone(), *out_dim);
+                    }
+                }
                 visitor.linear(&ctx, input, &dy);
                 if li > 0 {
+                    count_prop();
                     let (wv, _) = layer_params(spec, &offsets, theta, li);
                     let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
                     dy = tensor::linear_grad_input(&dy, &w);
@@ -176,11 +383,17 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
             }
             (LayerSpec::InstanceNorm { channels, .. }, Saved::Norm { xhat, inv_std }) => {
                 let (gv, _) = layer_params(spec, &offsets, theta, li);
+                count_prop();
                 let (dgamma, dbeta, dx) = tensor::instance_norm_grad(&dy, xhat, inv_std, gv);
                 let ctx = NormCtx {
                     offset: offsets[li],
                     channels: *channels,
                 };
+                if let DyMode::Fill { cache, plan } = &mut ctl.dy {
+                    if plan.cache_dy[li] {
+                        cache.insert_affine(li, dgamma.data.clone(), dbeta.data.clone());
+                    }
+                }
                 visitor.instance_norm(&ctx, &dgamma, &dbeta);
                 dy = dx;
             }
@@ -192,6 +405,248 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
             }
             (LayerSpec::Flatten, Saved::Flatten { in_shape }) => {
                 dy = dy.reshape(in_shape);
+            }
+            _ => unreachable!("spec/saved mismatch at layer {li}"),
+        }
+    }
+}
+
+/// The scaled-reuse backward: consume the norm walk's cached
+/// per-layer dy, scaled per example by the clip factors `s_b`,
+/// instead of re-propagating the loss gradient.
+///
+/// Backprop is linear in `dy` and every propagation op acts
+/// per-example, so `s_b`-scaling a layer's saved dy block yields the
+/// same per-layer gradient contribution as propagating the scaled
+/// loss gradient — in exact arithmetic. In f32 the two orders round
+/// differently, so this walk is **float-parity** with
+/// [`backward_walk`] over scaled dy (pinned to 1e-5 relative by
+/// `tests/ghost_reuse_differential.rs`), where the fused and two-pass
+/// pipelines are bit-identical.
+///
+/// Spill handling: `dy` must be re-propagated down to the deepest
+/// (lowest-index) parametric layer missing from `dys` — every layer
+/// strictly above that frontier runs the normal propagation chain
+/// (and its visitor reads the live `dy` directly); every layer at or
+/// below it is served from the cache with zero propagation. A fully
+/// cached model therefore performs **zero** dy-propagation matmuls
+/// here ([`prop_matmuls`] proves it), and a fully spilled cache
+/// degenerates to exactly the fused pipeline's reweighted walk,
+/// bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn reuse_walk<V: BackwardVisitor>(
+    spec: &ModelSpec,
+    theta: &[f32],
+    saved: &[Saved],
+    mut dy: Tensor,
+    scales: &[f32],
+    visitor: &mut V,
+    cols: &ColsCache,
+    dys: &DyCache,
+    inner: usize,
+) {
+    let bsz = dy.shape[0];
+    debug_assert_eq!(scales.len(), bsz);
+    // scale the loss-gradient rows once; everything propagated below
+    // is then the clip-scaled gradient (linearity of backprop)
+    let per_ex0 = dy.data.len() / bsz.max(1);
+    for (b, &s) in scales.iter().enumerate() {
+        for v in &mut dy.data[b * per_ex0..(b + 1) * per_ex0] {
+            *v *= s;
+        }
+    }
+    // the propagation frontier: the deepest parametric layer whose dy
+    // spilled. `dy` is live (valid at the current layer) for every
+    // li >= frontier; below it, every parametric layer is cached.
+    let frontier = spec
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(li, l)| l.is_parametric() && dys.get(*li).is_none())
+        .map(|(li, _)| li)
+        .min()
+        .unwrap_or(usize::MAX);
+    let offsets = spec.param_offsets();
+    let mut scaled: Vec<f32> = Vec::new();
+    for (li, l) in spec.layers.iter().enumerate().rev() {
+        let live = frontier != usize::MAX && li >= frontier;
+        match (l, &saved[li]) {
+            (
+                LayerSpec::Conv2d {
+                    in_ch,
+                    out_ch,
+                    kernel,
+                    groups,
+                    ..
+                },
+                Saved::Conv { input },
+            ) => {
+                let args = conv_args(l);
+                let d = *out_ch;
+                let dg = d / groups;
+                let cg = in_ch / groups;
+                let rows_g = cg * kernel.0 * kernel.1;
+                let cached = match dys.get(li) {
+                    Some(DyEntry::Blocks { data, per_ex }) => Some((data.as_slice(), *per_ex)),
+                    _ => None,
+                };
+                let howo = match cached {
+                    Some((_, per_ex)) => per_ex / d,
+                    None => dy.shape[2] * dy.shape[3],
+                };
+                let (wn, _) = spec.layer_param_counts(li);
+                let ctx = ConvCtx {
+                    li,
+                    offset: offsets[li],
+                    wn,
+                    d,
+                    dg,
+                    groups: *groups,
+                    rows_g,
+                    howo,
+                };
+                visitor.conv_layer_start(&ctx);
+                let mut prefilled = if inner > 1 {
+                    let need: Vec<bool> =
+                        (0..bsz).map(|b| cols.get(li, b).is_none()).collect();
+                    maybe_prefill_cols(
+                        input,
+                        kernel.0,
+                        kernel.1,
+                        args,
+                        need,
+                        groups * rows_g * howo,
+                        inner,
+                    )
+                } else {
+                    None
+                };
+                if !live {
+                    scaled.resize(d * howo, 0.0);
+                }
+                for b in 0..bsz {
+                    let dy_b: &[f32] = if live {
+                        &dy.data[b * d * howo..(b + 1) * d * howo]
+                    } else {
+                        let (data, per_ex) =
+                            cached.expect("layer below the propagation frontier must be cached");
+                        let s = scales[b];
+                        for (o, v) in scaled.iter_mut().zip(&data[b * per_ex..(b + 1) * per_ex])
+                        {
+                            *o = s * *v;
+                        }
+                        &scaled
+                    };
+                    match cols.get(li, b) {
+                        Some(c) => visitor.conv_example(&ctx, b, c, dy_b),
+                        None => {
+                            let c = prefilled
+                                .as_mut()
+                                .and_then(|p| p[b].take())
+                                .unwrap_or_else(|| {
+                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args).0
+                                });
+                            visitor.conv_example(&ctx, b, &c, dy_b);
+                        }
+                    }
+                }
+                if li > frontier {
+                    count_prop();
+                    let (wv, _) = layer_params(spec, &offsets, theta, li);
+                    let w = Tensor::from_vec(&[d, cg, kernel.0, kernel.1], wv.to_vec());
+                    dy = tensor::conv2d_grad_input_im2col(
+                        &dy,
+                        &w,
+                        input.shape[2],
+                        input.shape[3],
+                        args,
+                    );
+                }
+            }
+            (LayerSpec::Linear { in_dim, out_dim }, Saved::Linear { input }) => {
+                let (wn, _) = spec.layer_param_counts(li);
+                let ctx = LinearCtx {
+                    offset: offsets[li],
+                    wn,
+                    in_dim: *in_dim,
+                    out_dim: *out_dim,
+                };
+                if live {
+                    visitor.linear(&ctx, input, &dy);
+                } else {
+                    let Some(DyEntry::Blocks { data, per_ex }) = dys.get(li) else {
+                        unreachable!("layer below the propagation frontier must be cached");
+                    };
+                    debug_assert_eq!(*per_ex, *out_dim);
+                    let mut sd = vec![0.0f32; data.len()];
+                    for (b, &s) in scales.iter().enumerate() {
+                        for (o, v) in sd[b * per_ex..(b + 1) * per_ex]
+                            .iter_mut()
+                            .zip(&data[b * per_ex..(b + 1) * per_ex])
+                        {
+                            *o = s * *v;
+                        }
+                    }
+                    let sdy = Tensor::from_vec(&[bsz, *out_dim], sd);
+                    visitor.linear(&ctx, input, &sdy);
+                }
+                if li > frontier {
+                    count_prop();
+                    let (wv, _) = layer_params(spec, &offsets, theta, li);
+                    let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
+                    dy = tensor::linear_grad_input(&dy, &w);
+                }
+            }
+            (LayerSpec::InstanceNorm { channels, .. }, Saved::Norm { xhat, inv_std }) => {
+                let cc = *channels;
+                let ctx = NormCtx {
+                    offset: offsets[li],
+                    channels: cc,
+                };
+                if live {
+                    // the live dy is already scaled, so the computed
+                    // affine grads are too; the backward (including
+                    // the dx we may discard) runs, so it counts —
+                    // mirroring backward_walk's unconditional count
+                    let (gv, _) = layer_params(spec, &offsets, theta, li);
+                    count_prop();
+                    let (dgamma, dbeta, dx) =
+                        tensor::instance_norm_grad(&dy, xhat, inv_std, gv);
+                    visitor.instance_norm(&ctx, &dgamma, &dbeta);
+                    if li > frontier {
+                        dy = dx;
+                    }
+                } else {
+                    let Some(DyEntry::Affine { dgamma, dbeta }) = dys.get(li) else {
+                        unreachable!("layer below the propagation frontier must be cached");
+                    };
+                    let mut sg = vec![0.0f32; dgamma.len()];
+                    let mut sb = vec![0.0f32; dbeta.len()];
+                    for (b, &s) in scales.iter().enumerate() {
+                        for c in 0..cc {
+                            sg[b * cc + c] = s * dgamma[b * cc + c];
+                            sb[b * cc + c] = s * dbeta[b * cc + c];
+                        }
+                    }
+                    let sg = Tensor::from_vec(&[bsz, cc], sg);
+                    let sb = Tensor::from_vec(&[bsz, cc], sb);
+                    visitor.instance_norm(&ctx, &sg, &sb);
+                }
+            }
+            (LayerSpec::Relu, Saved::Relu { pre }) => {
+                if li > frontier {
+                    dy = tensor::relu_grad(&dy, pre);
+                }
+            }
+            (LayerSpec::MaxPool2d { .. }, Saved::Pool { arg, in_shape }) => {
+                if li > frontier {
+                    dy = tensor::maxpool2d_grad(&dy, arg, in_shape);
+                }
+            }
+            (LayerSpec::Flatten, Saved::Flatten { in_shape }) => {
+                if li > frontier {
+                    dy = dy.reshape(in_shape);
+                }
             }
             _ => unreachable!("spec/saved mismatch at layer {li}"),
         }
@@ -246,7 +701,7 @@ mod tests {
         let (logits, saved) = forward_with_tape(&spec, &theta, &x);
         let (_, dy) = tensor::softmax_xent(&logits, &[0, 1]);
         let mut v = TraceVisitor::default();
-        backward_walk(&spec, &theta, &saved, dy, &mut v, ColsMode::Off);
+        backward_walk(&spec, &theta, &saved, dy, &mut v, WalkCtl::off());
         // toy_cnn(1 layer, instance): conv, inorm, relu, [pool], flatten, linear
         // → reverse visit order: linear, norm, conv (b0, b1)
         let conv_li = spec

@@ -6,7 +6,7 @@
 //! through typed accessors with good error messages; [`ExperimentConfig`]
 //! is the typed view the trainer consumes.
 
-use crate::ghost::{GhostMode, PlanChoice};
+use crate::ghost::{GhostMode, GhostPipeline, PlanChoice};
 use crate::jsonx::{self, Value};
 use crate::strategies::Strategy;
 use anyhow::{anyhow, bail, Context, Result};
@@ -229,6 +229,22 @@ pub struct ExperimentConfig {
     /// `"ghost"` / `"direct"` globally, or an array of those per conv
     /// layer. Only consulted when `strategy = "ghostnorm"`.
     pub ghost_norms: GhostMode,
+    /// Ghost execution pipeline (`[train] ghost_pipeline`): `"auto"`
+    /// (the planner picks scaled reuse when the whole model's dy
+    /// footprint fits the budget, else the bit-exact fused pipeline),
+    /// or a forced `"fused"` / `"reuse"` / `"twopass"`. Only consulted
+    /// when `strategy = "ghostnorm"`.
+    pub ghost_pipeline: String,
+    /// Per-worker scratch budget in megabytes for the ghost engine
+    /// (`[train] ghost_budget_mb`, default 128 — the old independent
+    /// cap figure). One knob, two bounds: the dy + im2col caches
+    /// *split* it (their sum stays under it), and each transient
+    /// `T×T` f64 Gram of norm scratch must fit under it on its own
+    /// (the old per-Gram cap) — so worst-case per-worker scratch is
+    /// budget (caches) + 2·budget (the two Grams), not one ceiling
+    /// over the sum. Contradictory with `ghost_pipeline = "twopass"`,
+    /// which runs cache-free.
+    pub ghost_budget_mb: usize,
     /// Debug export: write one batch's per-example gradient matrix to
     /// this CSV path after training (`[train] grad_dump`). Requires a
     /// materializing strategy; rejected with `ghostnorm`.
@@ -336,10 +352,43 @@ impl ExperimentConfig {
                 );
             }
         }
+        let ghost_pipeline = string_or(cfg, "train.ghost_pipeline", "auto")?;
+        if ghost_pipeline != "auto" {
+            GhostPipeline::parse(&ghost_pipeline)
+                .context("config `train.ghost_pipeline` is invalid")?;
+        }
+        let ghost_budget_mb = int_or(cfg, "train.ghost_budget_mb", 128)?;
+        if ghost_budget_mb <= 0 {
+            bail!(
+                "config `train.ghost_budget_mb` must be a positive number of megabytes, \
+                 got {ghost_budget_mb}"
+            );
+        }
+        // hardening: the legacy two-pass pipeline runs cache-free, so
+        // pairing it with a cache budget is contradictory — reject at
+        // config time (mirroring the ghostnorm+grad_dump rejection,
+        // including its strategy gating: these knobs are only
+        // consulted under ghostnorm) instead of silently ignoring the
+        // knob the user sized. Under twopass the Gram norm scratch
+        // keeps its 128 MB default cap.
+        if parsed_strategy == Strategy::GhostNorm
+            && ghost_pipeline == "twopass"
+            && cfg.get("train.ghost_budget_mb").is_some()
+        {
+            bail!(
+                "config conflict: `train.ghost_pipeline = \"twopass\"` runs the legacy \
+                 cache-free pipeline, but `train.ghost_budget_mb` sizes the fused/reuse \
+                 dy + im2col caches — drop the budget (the Gram norm scratch keeps its \
+                 128 MB default cap under twopass), or pick pipeline \"fused\", \
+                 \"reuse\" or \"auto\""
+            );
+        }
         Ok(ExperimentConfig {
             backend,
             strategy,
             ghost_norms: parse_ghost_norms(cfg)?,
+            ghost_pipeline,
+            ghost_budget_mb: ghost_budget_mb as usize,
             grad_dump,
             threads: int_or(cfg, "train.threads", 0)?.max(0) as usize,
             model: native_model_config(cfg)?,
@@ -359,6 +408,13 @@ impl ExperimentConfig {
             eval_every: int_or(cfg, "train.eval_every", 50)? as usize,
             log_every: int_or(cfg, "train.log_every", 10)? as usize,
         })
+    }
+
+    /// The ghost scratch budget in f32-equivalent elements — what the
+    /// [`ClippedStepPlanner`](crate::ghost::ClippedStepPlanner)
+    /// consumes.
+    pub fn ghost_budget_elems(&self) -> usize {
+        self.ghost_budget_mb.saturating_mul(1 << 20) / 4
     }
 }
 
@@ -617,6 +673,63 @@ name = "synthetic # not a comment"
             .unwrap();
         let e = ExperimentConfig::from_config(&c).unwrap();
         assert_eq!(e.grad_dump.as_deref(), Some("/tmp/g.csv"));
+    }
+
+    #[test]
+    fn ghost_pipeline_and_budget_knobs() {
+        // defaults: auto pipeline, 128 MB unified budget
+        let c = Config::parse("[train]\nstrategy = \"ghostnorm\"\n").unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.ghost_pipeline, "auto");
+        assert_eq!(e.ghost_budget_mb, 128);
+        assert_eq!(e.ghost_budget_elems(), 128 * (1 << 20) / 4);
+        // every concrete pipeline parses; budgets are honored
+        for p in ["fused", "reuse", "twopass"] {
+            let c = Config::parse(&format!(
+                "[train]\nstrategy = \"ghostnorm\"\nghost_pipeline = \"{p}\"\n"
+            ))
+            .unwrap();
+            let e = ExperimentConfig::from_config(&c).unwrap();
+            assert_eq!(e.ghost_pipeline, p);
+        }
+        let c = Config::parse(
+            "[train]\nstrategy = \"ghostnorm\"\nghost_pipeline = \"reuse\"\nghost_budget_mb = 64\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.ghost_budget_mb, 64);
+        // bad values are config errors, not defaults
+        let c = Config::parse("[train]\nghost_pipeline = \"fast\"\n").unwrap();
+        let err = format!("{:#}", ExperimentConfig::from_config(&c).unwrap_err());
+        assert!(err.contains("ghost_pipeline"), "{err}");
+        let c = Config::parse("[train]\nghost_budget_mb = 0\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+        let c = Config::parse("[train]\nghost_budget_mb = \"big\"\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+        // the contradiction: twopass runs cache-free, a cache budget
+        // with it is rejected at config-parse time
+        let c = Config::parse(
+            "[train]\nstrategy = \"ghostnorm\"\nghost_pipeline = \"twopass\"\n\
+             ghost_budget_mb = 64\n",
+        )
+        .unwrap();
+        let err = ExperimentConfig::from_config(&c).unwrap_err().to_string();
+        assert!(err.contains("twopass"), "{err}");
+        assert!(err.contains("ghost_budget_mb"), "{err}");
+        // twopass without a budget knob stays fine
+        let c = Config::parse(
+            "[train]\nstrategy = \"ghostnorm\"\nghost_pipeline = \"twopass\"\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_ok());
+        // the conflict is gated on ghostnorm like the grad_dump
+        // precedent: leftover ghost knobs under a materializing
+        // strategy are ignored (both knobs document that), not fatal
+        let c = Config::parse(
+            "[train]\nstrategy = \"crb\"\nghost_pipeline = \"twopass\"\nghost_budget_mb = 64\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_ok());
     }
 
     #[test]

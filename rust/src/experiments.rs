@@ -241,6 +241,14 @@ pub struct NativeSweepOptions {
 }
 
 impl NativeSweepOptions {
+    /// The default batch axis. Leads with the small-batch B=4 point:
+    /// that row is where the intra-microbatch inner split matters
+    /// (outer worker-per-range alone leaves cores idle), so its
+    /// `ghostnorm_reuse` cell is the regression guard for that win.
+    pub fn default_batch_sizes() -> Vec<usize> {
+        vec![4, 8, 16]
+    }
+
     pub fn standard(
         batches: usize,
         proto: Protocol,
@@ -300,7 +308,11 @@ pub struct SweepCell {
 /// directly comparable. A fifth column, `ghostnorm_twopass`, times
 /// the legacy two-pass ghost pipeline on the identical inputs: the
 /// fused-vs-twopass ns/example delta per swept config is the repo's
-/// regression guard for the single-tape fusion.
+/// regression guard for the single-tape fusion. A sixth,
+/// `ghostnorm_reuse`, times the scaled-reuse pipeline the same way:
+/// reuse must come in at or under fused ns/example (it deletes the
+/// reweighted walk's propagation matmuls), and the B=4 row shows the
+/// intra-microbatch inner split.
 ///
 /// Caveat for readers comparing against the paper's Figure 1: the
 /// native `naive` and `multi` strategies share the same (oracle)
@@ -324,6 +336,7 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                 "crb (s)",
                 "ghostnorm (s)",
                 "ghostnorm 2pass (s)",
+                "ghostnorm reuse (s)",
             ],
         );
         for &rate in &opts.rates {
@@ -376,6 +389,26 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
             row.push(stats.pm());
             cells.push(SweepCell {
                 strategy: "ghostnorm_twopass",
+                batch,
+                rate,
+                params: p,
+                ns_per_example: stats.mean / (opts.batches * batch) as f64 * 1e9,
+                peak_bytes,
+                stats,
+            });
+            // scaled-reuse comparison: same model, same inputs, dy
+            // blocks rescaled instead of re-propagated
+            let (stats, peak_bytes) = time_native_cell(
+                &spec,
+                Strategy::GhostNorm,
+                GhostPipeline::FusedReuse,
+                opts,
+                &theta,
+                &batches,
+            )?;
+            row.push(stats.pm());
+            cells.push(SweepCell {
+                strategy: "ghostnorm_reuse",
                 batch,
                 rate,
                 params: p,
@@ -500,6 +533,18 @@ pub fn emit(tables: &[Table], report_dir: &str, slug: &str) -> Result<()> {
 mod tests {
     use super::*;
 
+    #[test]
+    fn default_sweep_leads_with_the_small_batch_point() {
+        // the B=4 cell is the inner-split regression guard — it must
+        // stay in the default axis (and the quick CI sweep) — while
+        // explicitly requested batch lists are honored verbatim
+        assert_eq!(NativeSweepOptions::default_batch_sizes(), vec![4, 8, 16]);
+        assert_eq!(NativeSweepOptions::quick().batch_sizes, vec![4]);
+        let proto = Protocol { warmup: 0, reps: 1 };
+        let opts = NativeSweepOptions::standard(2, proto, 1, vec![16]);
+        assert_eq!(opts.batch_sizes, vec![16]);
+    }
+
     /// The quick sweep must produce one record per strategy (including
     /// ghostnorm) plus the two-pass comparison cell, and a JSON
     /// document that round-trips through the parser with the fields
@@ -509,11 +554,15 @@ mod tests {
         let opts = NativeSweepOptions::quick();
         let (tables, cells) = run_native_sweep(&opts).unwrap();
         assert_eq!(tables.len(), 1);
-        assert_eq!(cells.len(), Strategy::ALL.len() + 1);
+        assert_eq!(cells.len(), Strategy::ALL.len() + 2);
         assert!(cells.iter().any(|c| c.strategy == "ghostnorm"));
         assert!(
             cells.iter().any(|c| c.strategy == "ghostnorm_twopass"),
             "fused-vs-twopass comparison cell missing"
+        );
+        assert!(
+            cells.iter().any(|c| c.strategy == "ghostnorm_reuse"),
+            "scaled-reuse comparison cell missing"
         );
         for c in &cells {
             assert!(c.stats.mean >= 0.0);

@@ -35,19 +35,40 @@
 //! geometries, and `tests/ghost_memory.rs` pins the one-tape-per-
 //! microbatch claim via the tape-build counter.
 //!
+//! The third pipeline, **scaled reuse**
+//! ([`GhostPipeline::FusedReuse`]), exploits that backprop is linear
+//! in `dy`: the norm walk saves each plan-marked layer's per-example
+//! dy blocks in a budget-bounded [`DyCache`], and the reweighted walk
+//! consumes them scaled by `s_b` instead of re-propagating — deleting
+//! the second backward's dy-propagation matmuls outright for cached
+//! layers (all of them when the budget fits; the
+//! [`prop_matmuls`](crate::backward::prop_matmuls) counter proves
+//! it). The price is *float* instead of bit parity with the other two
+//! pipelines (scale-then-propagate vs propagate-then-scale round
+//! differently), pinned to 1e-5 relative by
+//! `tests/ghost_reuse_differential.rs`. The
+//! [`ClippedStepPlanner`] splits one unified scratch budget between
+//! the dy and cols caches per microbatch and decides the
+//! outer-vs-inner thread split (worker microbatches × parallel
+//! im2col fill within each) from `B`, the thread count and the
+//! per-example im2col cost.
+//!
 //! Gradient memory is `O(workers · P + layer temporaries)`,
-//! independent of the batch size; only activations and the cols cache
-//! scale with `B`, as in any batched backward.
+//! independent of the batch size; only activations and the bounded
+//! caches scale with `B`, as in any batched backward.
 //!
 //! Determinism: norms and losses are bit-identical for any thread
-//! count; the clipped sum is bit-deterministic for a *fixed* thread
-//! count (the f32 reduction order follows the worker split) and
-//! agrees across thread counts to float tolerance.
+//! count (outer *and* inner); the clipped sum is bit-deterministic
+//! for a *fixed* thread count (the f32 reduction order follows the
+//! worker split) and agrees across thread counts to float tolerance.
 
 use super::planner::{ClippedStepPlanner, GhostPipeline};
-use crate::backward::{backward_walk, forward_with_tape, ClippedSumVisitor, ColsMode, NormVisitor};
+use crate::backward::{
+    backward_walk, forward_with_tape, reuse_walk, ClippedSumVisitor, ColsMode, DyMode,
+    NormVisitor, WalkCtl,
+};
 use crate::strategies;
-use crate::tensor::{self, ColsCache, Tensor};
+use crate::tensor::{self, ColsCache, DyCache, Tensor};
 use anyhow::{anyhow, bail, Result};
 
 /// What [`clipped_step`] produces.
@@ -61,15 +82,77 @@ pub struct GhostOutcome {
     pub losses: Vec<f32>,
 }
 
-fn resolve_threads(threads: usize, bsz: usize) -> usize {
-    let t = if threads == 0 {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-    } else {
-        threads
-    };
-    t.clamp(1, bsz.max(1))
+/// One worker's slice of the batch: its example range plus disjoint
+/// views of the per-example output buffers.
+struct RangeJob<'a> {
+    start: usize,
+    end: usize,
+    norms: &'a mut [f32],
+    losses: &'a mut [f32],
+}
+
+/// Carve the per-example output buffers into one disjoint job per
+/// worker range.
+fn carve_jobs<'a>(
+    ranges: &[(usize, usize)],
+    mut norms: &'a mut [f32],
+    mut losses: &'a mut [f32],
+) -> Vec<RangeJob<'a>> {
+    let mut jobs = Vec::with_capacity(ranges.len());
+    for &(start, end) in ranges {
+        let n = end - start;
+        let (nc, nr) = std::mem::take(&mut norms).split_at_mut(n);
+        norms = nr;
+        let (lc, lr) = std::mem::take(&mut losses).split_at_mut(n);
+        losses = lr;
+        jobs.push(RangeJob {
+            start,
+            end,
+            norms: nc,
+            losses: lc,
+        });
+    }
+    jobs
+}
+
+/// The one worker fan-out — the split/spawn/join scaffolding that
+/// every engine entry point used to hand-copy: spawn one scoped
+/// thread per job (each job already carries its range and any
+/// disjoint output slices), join them all, and collect each worker's
+/// return value in job order.
+fn fan_out<J, R>(jobs: Vec<J>, label: &'static str, work: impl Fn(J) -> R + Sync) -> Result<Vec<R>>
+where
+    J: Send,
+    R: Send,
+{
+    std::thread::scope(|s| {
+        let work = &work;
+        let handles: Vec<_> = jobs.into_iter().map(|j| s.spawn(move || work(j))).collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .map_err(|_| anyhow!("ghost {label} worker thread panicked"))
+            })
+            .collect()
+    })
+}
+
+/// Sum worker partials into one flat `(P,)` gradient.
+fn fold_partials(p: usize, partials: &[Tensor]) -> Vec<f32> {
+    let mut grad_sum = vec![0.0f32; p];
+    for part in partials {
+        for (a, b) in grad_sum.iter_mut().zip(&part.data) {
+            *a += *b;
+        }
+    }
+    grad_sum
+}
+
+/// Eq. 1 clip factors `s_b = min(1, C/‖g_b‖)`, spelled as in
+/// [`tensor::clip_reduce`] so every pipeline scales identically.
+fn clip_scales(norms: &[f32], clip: f32) -> Vec<f32> {
+    norms.iter().map(|n| 1.0 / (n / clip).max(1.0)).collect()
 }
 
 fn validate(planner: &ClippedStepPlanner, theta: &[f32], x: &Tensor, y: &[i32]) -> Result<()> {
@@ -96,29 +179,22 @@ pub fn perex_norms(
 ) -> Result<(Vec<f32>, Vec<f32>)> {
     validate(planner, theta, x, y)?;
     let bsz = x.shape[0];
+    let split = planner.split(bsz, strategies::resolve_threads(threads));
     let mut norms = vec![0.0f32; bsz];
     let mut losses = vec![0.0f32; bsz];
-    let ranges = strategies::split_ranges(bsz, resolve_threads(threads, bsz));
-    std::thread::scope(|s| -> Result<()> {
-        let mut nrest: &mut [f32] = &mut norms;
-        let mut lrest: &mut [f32] = &mut losses;
-        let mut handles = Vec::with_capacity(ranges.len());
-        for (start, end) in ranges {
-            let n = end - start;
-            let (nchunk, nr) = std::mem::take(&mut nrest).split_at_mut(n);
-            nrest = nr;
-            let (lchunk, lr) = std::mem::take(&mut lrest).split_at_mut(n);
-            lrest = lr;
-            handles.push(s.spawn(move || {
-                let xb = strategies::example_slice(x, start, end);
-                norms_range(planner, theta, &xb, &y[start..end], nchunk, lchunk);
-            }));
-        }
-        for h in handles {
-            h.join()
-                .map_err(|_| anyhow!("ghost norm worker thread panicked"))?;
-        }
-        Ok(())
+    let ranges = strategies::split_ranges(bsz, split.outer);
+    let jobs = carve_jobs(&ranges, &mut norms, &mut losses);
+    fan_out(jobs, "norm", |job: RangeJob<'_>| {
+        let xb = strategies::example_slice(x, job.start, job.end);
+        norms_range(
+            planner,
+            theta,
+            &xb,
+            &y[job.start..job.end],
+            split.inner,
+            job.norms,
+            job.losses,
+        );
     })?;
     Ok((norms, losses))
 }
@@ -136,10 +212,49 @@ pub fn clipped_step(
     validate(planner, theta, x, y)?;
     match planner.pipeline() {
         GhostPipeline::Fused => {
-            clipped_step_fused(planner, theta, x, y, clip, threads, tensor::COLS_CACHE_CAP_ELEMS)
+            clipped_step_fused(planner, theta, x, y, clip, threads, planner.scratch_budget())
         }
+        GhostPipeline::FusedReuse => clipped_step_reuse(planner, theta, x, y, clip, threads),
         GhostPipeline::TwoPass => clipped_step_two_pass(planner, theta, x, y, clip, threads),
     }
+}
+
+/// Shared driver for the single-tape pipelines: split the batch
+/// (outer worker ranges × inner fill threads, per the planner), carve
+/// the output buffers, fan one `range_work` call out per microbatch,
+/// and fold the partial sums. `range_work` gets
+/// `(xb, yb, inner, norms_chunk, losses_chunk)` and returns the
+/// worker's flat `(P,)` partial.
+fn single_tape_step(
+    planner: &ClippedStepPlanner,
+    x: &Tensor,
+    y: &[i32],
+    threads: usize,
+    label: &'static str,
+    range_work: impl Fn(&Tensor, &[i32], usize, &mut [f32], &mut [f32]) -> Tensor + Sync,
+) -> Result<GhostOutcome> {
+    let p = planner.spec().param_count();
+    let bsz = x.shape[0];
+    let split = planner.split(bsz, strategies::resolve_threads(threads));
+    let mut norms = vec![0.0f32; bsz];
+    let mut losses = vec![0.0f32; bsz];
+    let ranges = strategies::split_ranges(bsz, split.outer);
+    let jobs = carve_jobs(&ranges, &mut norms, &mut losses);
+    let partials = fan_out(jobs, label, |job: RangeJob<'_>| {
+        let xb = strategies::example_slice(x, job.start, job.end);
+        range_work(
+            &xb,
+            &y[job.start..job.end],
+            split.inner,
+            job.norms,
+            job.losses,
+        )
+    })?;
+    Ok(GhostOutcome {
+        grad_sum: fold_partials(p, &partials),
+        norms,
+        losses,
+    })
 }
 
 /// Fused single-tape pipeline: per worker microbatch, one
@@ -154,55 +269,40 @@ fn clipped_step_fused(
     threads: usize,
     cache_cap_elems: usize,
 ) -> Result<GhostOutcome> {
-    let spec = planner.spec();
-    let p = spec.param_count();
-    let bsz = x.shape[0];
-    let mut norms = vec![0.0f32; bsz];
-    let mut losses = vec![0.0f32; bsz];
-    let ranges = strategies::split_ranges(bsz, resolve_threads(threads, bsz));
-    let partials: Vec<Tensor> = std::thread::scope(|s| -> Result<Vec<Tensor>> {
-        let mut nrest: &mut [f32] = &mut norms;
-        let mut lrest: &mut [f32] = &mut losses;
-        let mut handles = Vec::with_capacity(ranges.len());
-        for (start, end) in &ranges {
-            let (start, end) = (*start, *end);
-            let n = end - start;
-            let (nchunk, nr) = std::mem::take(&mut nrest).split_at_mut(n);
-            nrest = nr;
-            let (lchunk, lr) = std::mem::take(&mut lrest).split_at_mut(n);
-            lrest = lr;
-            handles.push(s.spawn(move || {
-                let xb = strategies::example_slice(x, start, end);
-                fused_range(
-                    planner,
-                    theta,
-                    &xb,
-                    &y[start..end],
-                    clip,
-                    cache_cap_elems,
-                    nchunk,
-                    lchunk,
-                )
-            }));
-        }
-        handles
-            .into_iter()
-            .map(|h| {
-                h.join()
-                    .map_err(|_| anyhow!("ghost fused worker thread panicked"))
-            })
-            .collect()
-    })?;
-    let mut grad_sum = vec![0.0f32; p];
-    for part in &partials {
-        for (a, b) in grad_sum.iter_mut().zip(&part.data) {
-            *a += *b;
-        }
-    }
-    Ok(GhostOutcome {
-        grad_sum,
-        norms,
-        losses,
+    single_tape_step(planner, x, y, threads, "fused", |xb, yb, inner, norms, losses| {
+        fused_range(
+            planner,
+            theta,
+            xb,
+            yb,
+            clip,
+            cache_cap_elems,
+            inner,
+            norms,
+            losses,
+        )
+    })
+}
+
+/// Scaled-reuse single-tape pipeline ([`GhostPipeline::FusedReuse`]):
+/// like the fused pipeline, but the norm walk also records each
+/// plan-marked layer's per-example dy blocks in a budget-bounded
+/// [`DyCache`], and the reweighted walk *consumes them scaled by the
+/// clip factors* instead of re-propagating the loss gradient —
+/// deleting the second backward's dy-propagation matmuls for every
+/// cached layer (all of them when the budget fits; spilled layers
+/// fall back to propagation down to the deepest spill). Float parity
+/// with `Fused`, not bit parity: see `tests/ghost_reuse_differential.rs`.
+fn clipped_step_reuse(
+    planner: &ClippedStepPlanner,
+    theta: &[f32],
+    x: &Tensor,
+    y: &[i32],
+    clip: f32,
+    threads: usize,
+) -> Result<GhostOutcome> {
+    single_tape_step(planner, x, y, threads, "reuse", |xb, yb, inner, norms, losses| {
+        reuse_range(planner, theta, xb, yb, clip, inner, norms, losses)
     })
 }
 
@@ -210,6 +310,7 @@ fn clipped_step_fused(
 /// filling the cols cache, then the reweighted walk over the same
 /// tape reading it. Returns the worker's flat `(P,)` partial sum;
 /// norms and losses land in the output chunks.
+#[allow(clippy::too_many_arguments)]
 fn fused_range(
     planner: &ClippedStepPlanner,
     theta: &[f32],
@@ -217,6 +318,7 @@ fn fused_range(
     y: &[i32],
     clip: f32,
     cache_cap_elems: usize,
+    inner: usize,
     norms_out: &mut [f32],
     losses_out: &mut [f32],
 ) -> Tensor {
@@ -235,7 +337,11 @@ fn fused_range(
         &saved,
         dy.clone(),
         &mut nv,
-        ColsMode::Fill(&mut cache),
+        WalkCtl {
+            cols: ColsMode::Fill(&mut cache),
+            dy: DyMode::Off,
+            inner,
+        },
     );
     nv.write_norms(norms_out);
 
@@ -250,7 +356,67 @@ fn fused_range(
         }
     }
     let mut cv = ClippedSumVisitor::new(spec.param_count());
-    backward_walk(spec, theta, &saved, dy, &mut cv, ColsMode::Read(&cache));
+    backward_walk(
+        spec,
+        theta,
+        &saved,
+        dy,
+        &mut cv,
+        WalkCtl {
+            cols: ColsMode::Read(&cache),
+            dy: DyMode::Off,
+            inner,
+        },
+    );
+    cv.psum
+}
+
+/// One worker's scaled-reuse microbatch: forward+tape once, norm walk
+/// filling *both* caches (im2col patch matrices + the plan-marked
+/// per-layer dy), then the [`reuse_walk`] consuming the cached dy
+/// scaled by the clip factors — no second propagation chain for
+/// cached layers. Returns the worker's flat `(P,)` partial sum.
+#[allow(clippy::too_many_arguments)]
+fn reuse_range(
+    planner: &ClippedStepPlanner,
+    theta: &[f32],
+    x: &Tensor,
+    y: &[i32],
+    clip: f32,
+    inner: usize,
+    norms_out: &mut [f32],
+    losses_out: &mut [f32],
+) -> Tensor {
+    let spec = planner.spec();
+    let bsz = x.shape[0];
+    let plan = planner.reuse_plan(bsz);
+    let (logits, saved) = forward_with_tape(spec, theta, x);
+    let (losses, dy) = tensor::softmax_xent(&logits, y);
+    losses_out.copy_from_slice(&losses);
+
+    let mut cols = ColsCache::new(plan.cols_budget);
+    let mut dys = DyCache::new(plan.dy_budget);
+    let mut nv = NormVisitor::new(planner, bsz);
+    backward_walk(
+        spec,
+        theta,
+        &saved,
+        dy.clone(),
+        &mut nv,
+        WalkCtl {
+            cols: ColsMode::Fill(&mut cols),
+            dy: DyMode::Fill {
+                cache: &mut dys,
+                plan: &plan,
+            },
+            inner,
+        },
+    );
+    nv.write_norms(norms_out);
+
+    let scales = clip_scales(norms_out, clip);
+    let mut cv = ClippedSumVisitor::new(spec.param_count());
+    reuse_walk(spec, theta, &saved, dy, &scales, &mut cv, &cols, &dys, inner);
     cv.psum
 }
 
@@ -265,38 +431,26 @@ fn clipped_step_two_pass(
     threads: usize,
 ) -> Result<GhostOutcome> {
     let (norms, losses) = perex_norms(planner, theta, x, y, threads)?;
-    // Eq. 1: s_b = min(1, C/‖g_b‖), spelled as in `clip_reduce`
-    let scales: Vec<f32> = norms.iter().map(|n| 1.0 / (n / clip).max(1.0)).collect();
+    let scales = clip_scales(&norms, clip);
     let spec = planner.spec();
     let p = spec.param_count();
     let bsz = x.shape[0];
-    let ranges = strategies::split_ranges(bsz, resolve_threads(threads, bsz));
-    let partials: Vec<Tensor> = std::thread::scope(|s| -> Result<Vec<Tensor>> {
-        let mut handles = Vec::with_capacity(ranges.len());
-        for (start, end) in &ranges {
-            let (start, end) = (*start, *end);
-            let scales = &scales;
-            handles.push(s.spawn(move || {
-                let xb = strategies::example_slice(x, start, end);
-                clipped_sum_range(planner, theta, &xb, &y[start..end], &scales[start..end])
-            }));
-        }
-        handles
-            .into_iter()
-            .map(|h| {
-                h.join()
-                    .map_err(|_| anyhow!("ghost sum worker thread panicked"))
-            })
-            .collect()
+    let split = planner.split(bsz, strategies::resolve_threads(threads));
+    let ranges = strategies::split_ranges(bsz, split.outer);
+    let scales_ref = &scales;
+    let partials = fan_out(ranges, "sum", |(start, end): (usize, usize)| {
+        let xb = strategies::example_slice(x, start, end);
+        clipped_sum_range(
+            planner,
+            theta,
+            &xb,
+            &y[start..end],
+            &scales_ref[start..end],
+            split.inner,
+        )
     })?;
-    let mut grad_sum = vec![0.0f32; p];
-    for part in &partials {
-        for (a, b) in grad_sum.iter_mut().zip(&part.data) {
-            *a += *b;
-        }
-    }
     Ok(GhostOutcome {
-        grad_sum,
+        grad_sum: fold_partials(p, &partials),
         norms,
         losses,
     })
@@ -309,6 +463,7 @@ fn norms_range(
     theta: &[f32],
     x: &Tensor,
     y: &[i32],
+    inner: usize,
     norms_out: &mut [f32],
     losses_out: &mut [f32],
 ) {
@@ -318,7 +473,18 @@ fn norms_range(
     let (losses, dy) = tensor::softmax_xent(&logits, y);
     losses_out.copy_from_slice(&losses);
     let mut nv = NormVisitor::new(planner, bsz);
-    backward_walk(spec, theta, &saved, dy, &mut nv, ColsMode::Off);
+    backward_walk(
+        spec,
+        theta,
+        &saved,
+        dy,
+        &mut nv,
+        WalkCtl {
+            cols: ColsMode::Off,
+            dy: DyMode::Off,
+            inner,
+        },
+    );
     nv.write_norms(norms_out);
 }
 
@@ -331,6 +497,7 @@ fn clipped_sum_range(
     x: &Tensor,
     y: &[i32],
     scales: &[f32],
+    inner: usize,
 ) -> Tensor {
     let spec = planner.spec();
     let bsz = x.shape[0];
@@ -344,7 +511,18 @@ fn clipped_sum_range(
         }
     }
     let mut cv = ClippedSumVisitor::new(spec.param_count());
-    backward_walk(spec, theta, &saved, dy, &mut cv, ColsMode::Off);
+    backward_walk(
+        spec,
+        theta,
+        &saved,
+        dy,
+        &mut cv,
+        WalkCtl {
+            cols: ColsMode::Off,
+            dy: DyMode::Off,
+            inner,
+        },
+    );
     cv.psum
 }
 
@@ -425,6 +603,49 @@ mod tests {
                 assert_eq!(wb, gb, "clipped sum bits (t={threads} cap={cap})");
             }
         }
+    }
+
+    #[test]
+    fn reuse_matches_fused_on_toy() {
+        let spec = ModelSpec::toy_cnn(2, 5, 1.4, 3, "instance", (2, 12, 12), 7).unwrap();
+        let (theta, x, y) = problem(&spec, 5, 31);
+        let fused = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let reuse = ClippedStepPlanner::new(&spec, &GhostMode::default())
+            .unwrap()
+            .with_pipeline(GhostPipeline::FusedReuse);
+        for threads in [1usize, 2, 3] {
+            let want = clipped_step(&fused, &theta, &x, &y, 0.7, threads).unwrap();
+            let got = clipped_step(&reuse, &theta, &x, &y, 0.7, threads).unwrap();
+            // norms and losses ride the identical norm walk: bit-equal
+            assert_eq!(want.norms, got.norms, "norms (t={threads})");
+            assert_eq!(want.losses, got.losses, "losses (t={threads})");
+            // the clipped sum reorders float ops (scale-then-propagate
+            // becomes scale-saved-dy): float parity, not bit parity
+            let scale = want
+                .grad_sum
+                .iter()
+                .fold(0.0f32, |m, v| m.max(v.abs()))
+                .max(1.0);
+            let diff = want
+                .grad_sum
+                .iter()
+                .zip(&got.grad_sum)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff <= 1e-5 * scale, "clipped sum Δ {diff} (t={threads})");
+        }
+        // a zero budget spills every dy block and every patch matrix:
+        // the reuse walk degenerates to exactly the fused reweighted
+        // walk — bit for bit
+        let starved = ClippedStepPlanner::new(&spec, &GhostMode::default())
+            .unwrap()
+            .with_scratch_budget(0)
+            .with_pipeline(GhostPipeline::FusedReuse);
+        let want = clipped_step(&fused, &theta, &x, &y, 0.7, 2).unwrap();
+        let got = clipped_step(&starved, &theta, &x, &y, 0.7, 2).unwrap();
+        let wb: Vec<u32> = want.grad_sum.iter().map(|v| v.to_bits()).collect();
+        let gb: Vec<u32> = got.grad_sum.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(wb, gb, "fully spilled reuse must reproduce fused bits");
     }
 
     #[test]

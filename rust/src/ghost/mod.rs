@@ -16,10 +16,16 @@
 //!   coordinator service's norm query) and [`clipped_step`] (by
 //!   default the fused single-tape pipeline — one forward+tape per
 //!   microbatch whose norm walk feeds the reweighted walk through a
-//!   bounded im2col cache; the legacy two-pass pipeline survives
-//!   behind [`GhostPipeline::TwoPass`] for the differential test and
-//!   the bench comparison). Both walks are visitors over the shared
-//!   reverse layer-walk in [`crate::backward`].
+//!   bounded im2col cache; the scaled-reuse pipeline
+//!   [`GhostPipeline::FusedReuse`] additionally saves per-layer dy
+//!   blocks and rescales them by the clip factors instead of
+//!   re-propagating — float parity, config-selected; the legacy
+//!   two-pass pipeline survives behind [`GhostPipeline::TwoPass`] for
+//!   the differential tests and the bench comparison). All walks are
+//!   visitors over the shared reverse layer-walk in
+//!   [`crate::backward`]; the planner splits one unified scratch
+//!   budget between the dy and cols caches and picks the
+//!   outer-vs-inner thread split per batch.
 //!
 //! Wired in as [`crate::strategies::Strategy::GhostNorm`]: config
 //! `[train] strategy = "ghostnorm"` (+ `ghost_norms` for the per-layer
@@ -31,4 +37,7 @@ pub mod engine;
 pub mod planner;
 
 pub use engine::{clipped_step, perex_norms, GhostOutcome};
-pub use planner::{ClippedStepPlanner, GhostMode, GhostPipeline, LayerPlan, NormPath, PlanChoice};
+pub use planner::{
+    ClippedStepPlanner, GhostMode, GhostPipeline, LayerPlan, NormPath, PlanChoice, ReusePlan,
+    SplitPlan, UNIFIED_SCRATCH_BUDGET_ELEMS,
+};

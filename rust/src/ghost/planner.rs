@@ -105,22 +105,125 @@ pub struct LayerPlan {
 pub enum GhostPipeline {
     /// Single-tape: one forward+tape per microbatch; the norm walk
     /// fills a budget-bounded im2col cache that the reweighted walk
-    /// reuses (spilling to recompute past 128 MB). The default.
+    /// reuses (spilling to recompute past the budget). Bit-identical
+    /// to `TwoPass`; the programmatic default.
     #[default]
     Fused,
+    /// Scaled-reuse single-tape: the norm walk additionally saves each
+    /// plan-marked layer's per-example `dy` blocks in a
+    /// [`DyCache`](crate::tensor::DyCache); the reweighted walk
+    /// consumes them scaled by the clip factors `s_b` instead of
+    /// re-propagating, deleting the second backward's dy-propagation
+    /// matmuls for every cached layer (all of them, when the budget
+    /// fits). Backprop is linear in `dy`, so the result is the same
+    /// clipped sum at **float** (not bit) parity with `Fused` —
+    /// pinned to 1e-5 relative by `tests/ghost_reuse_differential.rs`.
+    /// Config-selected (`ghost_pipeline = "reuse"`, or `"auto"` when
+    /// the budget fits the whole model).
+    FusedReuse,
     /// Legacy two-pass pipeline (a second forward+tape for the
     /// reweighted backward). Kept as the escape hatch the
-    /// differential test and the bench sweep compare against; results
+    /// differential tests and the bench sweep compare against; results
     /// are bit-identical to `Fused` at any fixed thread count.
     TwoPass,
 }
 
-/// The ghost path needs two `T×T` f64 Gram matrices of scratch per
-/// worker. Past this many elements per Gram (128 MB) the trick stops
-/// being a memory win at all, so `Auto` falls back to direct and a
-/// *forced* ghost choice is rejected rather than silently allocating
-/// gigabytes (T grows quadratically with the feature map).
-const GHOST_SCRATCH_CAP_ELEMS: usize = 1 << 24;
+impl GhostPipeline {
+    /// Parse a concrete pipeline name (config resolves `"auto"` itself
+    /// via [`ClippedStepPlanner::auto_pipeline`] before calling this).
+    pub fn parse(s: &str) -> Result<GhostPipeline> {
+        match s {
+            "fused" => Ok(GhostPipeline::Fused),
+            "reuse" => Ok(GhostPipeline::FusedReuse),
+            "twopass" => Ok(GhostPipeline::TwoPass),
+            other => bail!(
+                "unknown ghost pipeline {other:?} (want auto | fused | reuse | twopass)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GhostPipeline::Fused => "fused",
+            GhostPipeline::FusedReuse => "reuse",
+            GhostPipeline::TwoPass => "twopass",
+        }
+    }
+}
+
+/// The planner's one scratch ceiling, in f32-equivalent elements
+/// (128 MB by default — the figure the old independent cols-cache and
+/// Gram-scratch caps each used). It governs all three per-worker
+/// scratch consumers: the [`DyCache`](crate::tensor::DyCache) and
+/// [`ColsCache`](crate::tensor::ColsCache) *split* it (their ledgered
+/// sum stays under it; the plain fused pipeline gives it to cols
+/// whole), while the transient ghost-norm Gram scratch (live only
+/// during one layer's norm reads) is bounded per `T×T` f64 Gram —
+/// the pre-unification rule, so default-budget behavior is unchanged;
+/// `Auto` falls back to direct and a forced ghost choice is rejected
+/// past it. Worst-case per-worker scratch is therefore
+/// caches-at-budget plus the two Grams, which the config doc states
+/// explicitly.
+pub const UNIFIED_SCRATCH_BUDGET_ELEMS: usize = crate::tensor::COLS_CACHE_CAP_ELEMS;
+
+/// f32-equivalent elements of *one* `T×T` f64 Gram of ghost-norm
+/// scratch for a conv layer with `T` output positions. The cap is
+/// per Gram — exactly the pre-unification rule (`T² ≤ 2²⁴` f64 elems
+/// at the default budget), so no geometry that planned ghost before
+/// silently flips to direct or starts failing construction.
+fn gram_scratch_elems(t: usize) -> usize {
+    2 * t * t
+}
+
+/// How one worker microbatch spends the scratch budget in the
+/// scaled-reuse pipeline, and which layers skip dy re-propagation.
+#[derive(Clone, Debug)]
+pub struct ReusePlan {
+    /// One entry per `spec.layers` index: cache this layer's dy
+    /// (conv/linear blocks, instance-norm affine grads) during the
+    /// norm walk. Marked as a *prefix* of the parametric layers in
+    /// forward order — an uncached layer would force re-propagating
+    /// `dy` through every layer above it anyway, so caching above a
+    /// gap buys nothing.
+    pub cache_dy: Vec<bool>,
+    /// Element cap handed to the `DyCache` (exactly the marked
+    /// layers' footprint).
+    pub dy_budget: usize,
+    /// Remaining budget, handed to the `ColsCache`.
+    pub cols_budget: usize,
+}
+
+impl ReusePlan {
+    /// Whether every parametric layer's dy fits (zero dy-propagation
+    /// matmuls in the reweighted walk).
+    pub fn fully_cached(&self, dy_elems: &[usize]) -> bool {
+        dy_elems
+            .iter()
+            .zip(&self.cache_dy)
+            .all(|(e, c)| *e == 0 || *c)
+    }
+}
+
+/// How one `clipped_step` call spreads `threads` workers over a batch
+/// of `B` examples: `outer` worker microbatches × `inner` threads for
+/// each microbatch's im2col fill.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SplitPlan {
+    pub outer: usize,
+    pub inner: usize,
+}
+
+/// Below this much im2col fill work in the model's *largest* conv
+/// layer (per example), the inner split's thread-spawn overhead
+/// outweighs the fill and the planner keeps the microbatch walk
+/// serial. Same constant as the walk's per-layer gate
+/// ([`crate::backward::walk::INNER_PAR_MIN_ELEMS`]), and compared to
+/// the same quantity: `inner > 1` only ever happens with one-example
+/// microbatches (`outer == B < threads`), where the walk's gate sees
+/// exactly one example's fill per layer — so a model the planner
+/// splits inward is guaranteed at least one layer that actually
+/// fills in parallel.
+const INNER_SPLIT_MIN_COLS_ELEMS: usize = crate::backward::walk::INNER_PAR_MIN_ELEMS;
 
 /// Per-layer norm-path plan for one model; built once, consulted by
 /// every ghost-engine pass.
@@ -130,10 +233,31 @@ pub struct ClippedStepPlanner {
     /// One entry per layer; `Some` for convs only.
     paths: Vec<Option<LayerPlan>>,
     pipeline: GhostPipeline,
+    /// Unified per-worker scratch ceiling (f32-equivalent elements).
+    scratch_budget_elems: usize,
+    /// Per-layer dy footprint per example (conv `D·T`, linear `J`,
+    /// instance-norm `2·C`; 0 for non-parametric layers).
+    dy_elems: Vec<usize>,
+    /// Per-layer im2col footprint per example (`C·KH·KW·T`; convs
+    /// only).
+    cols_elems: Vec<usize>,
 }
 
 impl ClippedStepPlanner {
     pub fn new(spec: &ModelSpec, mode: &GhostMode) -> Result<ClippedStepPlanner> {
+        Self::with_budget(spec, mode, UNIFIED_SCRATCH_BUDGET_ELEMS)
+    }
+
+    /// Full constructor: `scratch_budget_elems` is the unified
+    /// per-worker scratch ceiling in f32-equivalent elements (the
+    /// `[train] ghost_budget_mb` knob). It bounds the Gram norm
+    /// scratch here and is split between the dy and cols caches by
+    /// [`reuse_plan`](ClippedStepPlanner::reuse_plan) at run time.
+    pub fn with_budget(
+        spec: &ModelSpec,
+        mode: &GhostMode,
+        scratch_budget_elems: usize,
+    ) -> Result<ClippedStepPlanner> {
         let n_convs = spec
             .layers
             .iter()
@@ -150,6 +274,8 @@ impl ClippedStepPlanner {
         let (_, mut h, mut w) = spec.input_shape;
         let mut conv_i = 0usize;
         let mut paths = Vec::with_capacity(spec.layers.len());
+        let mut dy_elems = Vec::with_capacity(spec.layers.len());
+        let mut cols_elems = Vec::with_capacity(spec.layers.len());
         for l in &spec.layers {
             match l {
                 LayerSpec::Conv2d {
@@ -180,25 +306,25 @@ impl ClippedStepPlanner {
                             list.get(conv_i).copied().unwrap_or(PlanChoice::Auto)
                         }
                     };
-                    let scratch = t * t;
+                    let scratch = gram_scratch_elems(t);
                     let path = match choice {
                         PlanChoice::Ghost => {
-                            if scratch > GHOST_SCRATCH_CAP_ELEMS {
+                            if scratch > scratch_budget_elems {
                                 bail!(
                                     "ghost_norms forces the ghost path on conv layer {conv_i}, \
-                                     but its output has T={t} positions: the two T² Gram \
-                                     matrices need ~{} MB of scratch per worker, over the \
-                                     {} MB-per-Gram cap — use \"auto\" or \"direct\" for this \
-                                     layer",
-                                    scratch * 16 / (1 << 20),
-                                    GHOST_SCRATCH_CAP_ELEMS * 8 / (1 << 20),
+                                     but its output has T={t} positions: each of the two T² \
+                                     Gram matrices needs ~{} MB of scratch per worker, over \
+                                     the {} MB per-Gram scratch cap — use \"auto\" or \
+                                     \"direct\" for this layer, or raise ghost_budget_mb",
+                                    scratch * 4 / (1 << 20),
+                                    scratch_budget_elems * 4 / (1 << 20),
                                 );
                             }
                             NormPath::Ghost
                         }
                         PlanChoice::Direct => NormPath::Direct,
                         PlanChoice::Auto => {
-                            if ghost_cost < direct_cost && scratch <= GHOST_SCRATCH_CAP_ELEMS {
+                            if ghost_cost < direct_cost && scratch <= scratch_budget_elems {
                                 NormPath::Ghost
                             } else {
                                 NormPath::Direct
@@ -212,6 +338,8 @@ impl ClippedStepPlanner {
                         direct_cost,
                         geometry: (t, dg, rows),
                     }));
+                    dy_elems.push(out_ch * t);
+                    cols_elems.push(in_ch * kernel.0 * kernel.1 * t);
                     conv_i += 1;
                     h = ho;
                     w = wo;
@@ -220,14 +348,33 @@ impl ClippedStepPlanner {
                     h = (h - window.0) / stride.0 + 1;
                     w = (w - window.1) / stride.1 + 1;
                     paths.push(None);
+                    dy_elems.push(0);
+                    cols_elems.push(0);
                 }
-                _ => paths.push(None),
+                LayerSpec::Linear { out_dim, .. } => {
+                    paths.push(None);
+                    dy_elems.push(*out_dim);
+                    cols_elems.push(0);
+                }
+                LayerSpec::InstanceNorm { channels, .. } => {
+                    paths.push(None);
+                    dy_elems.push(2 * channels);
+                    cols_elems.push(0);
+                }
+                _ => {
+                    paths.push(None);
+                    dy_elems.push(0);
+                    cols_elems.push(0);
+                }
             }
         }
         Ok(ClippedStepPlanner {
             spec: spec.clone(),
             paths,
             pipeline: GhostPipeline::default(),
+            scratch_budget_elems,
+            dy_elems,
+            cols_elems,
         })
     }
 
@@ -237,8 +384,109 @@ impl ClippedStepPlanner {
         self
     }
 
+    /// Same layer choices, different unified scratch ceiling (builder
+    /// style; test/bench hook — config callers size the budget through
+    /// [`with_budget`](ClippedStepPlanner::with_budget) so forced
+    /// ghost layers are re-validated against it).
+    pub fn with_scratch_budget(mut self, elems: usize) -> ClippedStepPlanner {
+        self.scratch_budget_elems = elems;
+        self
+    }
+
     pub fn pipeline(&self) -> GhostPipeline {
         self.pipeline
+    }
+
+    pub fn scratch_budget(&self) -> usize {
+        self.scratch_budget_elems
+    }
+
+    /// The pipeline `ghost_pipeline = "auto"` resolves to: scaled
+    /// reuse when a `microbatch`-example worker's *whole* scratch
+    /// footprint — every layer's dy blocks **and** every conv's
+    /// im2col patch matrices — fits the budget, so the reweighted
+    /// walk skips every propagation matmul *without* giving up any of
+    /// the fused pipeline's patch-matrix reuse; otherwise the
+    /// bit-exact fused pipeline. Partial reuse is still correct but
+    /// pays propagation down to the deepest spilled layer (and a
+    /// dy-starved cols cache pays im2col recompute), so `auto` only
+    /// picks reuse when it wins outright. The caches are per
+    /// *worker*, so pass the per-worker microbatch size
+    /// ([`auto_pipeline_for`](ClippedStepPlanner::auto_pipeline_for)
+    /// derives it from the full batch and thread count).
+    pub fn auto_pipeline(&self, microbatch: usize) -> GhostPipeline {
+        let plan = self.reuse_plan(microbatch);
+        let cols_need: usize = self.cols_elems.iter().sum::<usize>() * microbatch.max(1);
+        if plan.fully_cached(&self.dy_elems) && cols_need <= plan.cols_budget {
+            GhostPipeline::FusedReuse
+        } else {
+            GhostPipeline::Fused
+        }
+    }
+
+    /// [`auto_pipeline`](ClippedStepPlanner::auto_pipeline) for a full
+    /// `batch` spread over `threads` workers (0 = one per core): the
+    /// budget is per worker, so the decision is made on the largest
+    /// per-worker microbatch, not the whole batch.
+    pub fn auto_pipeline_for(&self, batch: usize, threads: usize) -> GhostPipeline {
+        let t = crate::strategies::resolve_threads(threads);
+        let outer = self.split(batch, t).outer;
+        self.auto_pipeline(batch.max(1).div_ceil(outer))
+    }
+
+    /// Split the unified scratch budget for one `bsz`-example worker
+    /// microbatch: dy blocks are marked as a prefix of the parametric
+    /// layers in forward order (an uncached layer forces `dy`
+    /// re-propagation through everything above it, so caching above a
+    /// gap buys nothing); the cols cache gets the remainder.
+    pub fn reuse_plan(&self, bsz: usize) -> ReusePlan {
+        let b = bsz.max(1);
+        let mut cache_dy = vec![false; self.dy_elems.len()];
+        let mut dy_budget = 0usize;
+        for (li, &elems) in self.dy_elems.iter().enumerate() {
+            if elems == 0 {
+                continue;
+            }
+            let need = elems * b;
+            if dy_budget + need > self.scratch_budget_elems {
+                break;
+            }
+            cache_dy[li] = true;
+            dy_budget += need;
+        }
+        ReusePlan {
+            cache_dy,
+            dy_budget,
+            cols_budget: self.scratch_budget_elems - dy_budget,
+        }
+    }
+
+    /// Per-layer dy footprints per example (layer-indexed; 0 for
+    /// non-parametric layers) — what [`ReusePlan::fully_cached`]
+    /// checks against.
+    pub fn dy_elems_per_example(&self) -> &[usize] {
+        &self.dy_elems
+    }
+
+    /// Spread `threads` workers over a `bsz`-example batch: one worker
+    /// microbatch per outer range (at most one per example, as
+    /// before), and any spare threads assigned to each microbatch's
+    /// intra-microbatch im2col fill — unless the model's per-example
+    /// im2col work is too small to cover the spawn overhead.
+    pub fn split(&self, bsz: usize, threads: usize) -> SplitPlan {
+        let t = threads.max(1);
+        let outer = t.min(bsz.max(1));
+        // decide on the largest single layer's fill: that is what the
+        // walk's per-layer gate will see (inner > 1 implies
+        // one-example microbatches), so splitting inward guarantees
+        // at least one layer genuinely parallelizes
+        let max_layer_cols = self.cols_elems.iter().copied().max().unwrap_or(0);
+        let inner = if outer < t && max_layer_cols >= INNER_SPLIT_MIN_COLS_ELEMS {
+            t / outer
+        } else {
+            1
+        };
+        SplitPlan { outer, inner }
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -410,6 +658,121 @@ mod tests {
         assert_eq!(p.pipeline(), GhostPipeline::Fused);
         let p = p.with_pipeline(GhostPipeline::TwoPass);
         assert_eq!(p.pipeline(), GhostPipeline::TwoPass);
+    }
+
+    #[test]
+    fn pipeline_parse() {
+        assert_eq!(GhostPipeline::parse("fused").unwrap(), GhostPipeline::Fused);
+        assert_eq!(
+            GhostPipeline::parse("reuse").unwrap(),
+            GhostPipeline::FusedReuse
+        );
+        assert_eq!(
+            GhostPipeline::parse("twopass").unwrap(),
+            GhostPipeline::TwoPass
+        );
+        // "auto" is resolved by the planner, never parsed as concrete
+        assert!(GhostPipeline::parse("auto").is_err());
+        assert!(GhostPipeline::parse("fast").is_err());
+        for p in [
+            GhostPipeline::Fused,
+            GhostPipeline::FusedReuse,
+            GhostPipeline::TwoPass,
+        ] {
+            assert_eq!(GhostPipeline::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn reuse_plan_marks_a_parametric_prefix() {
+        let spec = ModelSpec::toy_cnn(2, 4, 1.0, 3, "instance", (2, 12, 12), 5).unwrap();
+        let p = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let dy = p.dy_elems_per_example().to_vec();
+        let bsz = 4usize;
+        let need: usize = dy.iter().map(|e| e * bsz).sum();
+        assert!(need > 0);
+
+        // the default 128 MB budget dwarfs the toy model: everything
+        // cached, zero propagation needed
+        let full = p.reuse_plan(bsz);
+        assert!(full.fully_cached(&dy), "{full:?}");
+        assert_eq!(full.dy_budget, need);
+        assert_eq!(full.dy_budget + full.cols_budget, p.scratch_budget());
+
+        // a budget one element short of the full footprint forces a
+        // spill — and the marked set must stay a *prefix* of the
+        // parametric layers (a gap would force re-propagation through
+        // every cached layer above it anyway)
+        let tight = p.clone().with_scratch_budget(need - 1);
+        let plan = tight.reuse_plan(bsz);
+        assert!(!plan.fully_cached(&dy), "{plan:?}");
+        assert!(plan.dy_budget < need);
+        let mut gap_seen = false;
+        for (li, &e) in dy.iter().enumerate() {
+            if e == 0 {
+                continue;
+            }
+            if !plan.cache_dy[li] {
+                gap_seen = true;
+            } else {
+                assert!(!gap_seen, "non-prefix dy marking at layer {li}: {plan:?}");
+            }
+        }
+        assert!(gap_seen);
+
+        // zero budget: nothing cached, the whole budget (none) to cols
+        let starved = p.with_scratch_budget(0);
+        let plan = starved.reuse_plan(bsz);
+        assert!(plan.cache_dy.iter().all(|c| !c));
+        assert_eq!(plan.dy_budget, 0);
+        assert_eq!(plan.cols_budget, 0);
+    }
+
+    #[test]
+    fn auto_pipeline_follows_the_budget() {
+        let spec = ModelSpec::toy_cnn(2, 4, 1.0, 3, "none", (2, 12, 12), 5).unwrap();
+        let p = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        assert_eq!(p.auto_pipeline(8), GhostPipeline::FusedReuse);
+        let starved = p.with_scratch_budget(16);
+        assert_eq!(starved.auto_pipeline(8), GhostPipeline::Fused);
+    }
+
+    #[test]
+    fn split_spends_spare_threads_inward() {
+        // big kernels on a wide input: per-example im2col work well
+        // over the inner-split threshold
+        let spec = ModelSpec::toy_cnn(2, 16, 1.0, 5, "none", (8, 32, 32), 10).unwrap();
+        let p = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        // threads ≤ B: all outer, no inner split
+        assert_eq!(p.split(16, 4), SplitPlan { outer: 4, inner: 1 });
+        assert_eq!(p.split(4, 4), SplitPlan { outer: 4, inner: 1 });
+        // small B, many threads: spare cores go to the im2col fill
+        assert_eq!(p.split(4, 16), SplitPlan { outer: 4, inner: 4 });
+        assert_eq!(p.split(1, 6), SplitPlan { outer: 1, inner: 6 });
+        // a model with almost no im2col work keeps the walk serial
+        let tiny = ModelSpec {
+            arch: "tiny".into(),
+            layers: vec![
+                LayerSpec::Conv2d {
+                    in_ch: 1,
+                    out_ch: 1,
+                    kernel: (1, 1),
+                    stride: (1, 1),
+                    padding: (0, 0),
+                    dilation: (1, 1),
+                    groups: 1,
+                },
+                LayerSpec::Flatten,
+                LayerSpec::Linear {
+                    in_dim: 16,
+                    out_dim: 2,
+                },
+            ],
+            input_shape: (1, 4, 4),
+            num_classes: 2,
+        };
+        let p = ClippedStepPlanner::new(&tiny, &GhostMode::default()).unwrap();
+        assert_eq!(p.split(2, 8), SplitPlan { outer: 2, inner: 1 });
     }
 
     #[test]

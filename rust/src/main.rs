@@ -110,6 +110,14 @@ fn cmd_train(rest: &[String]) -> Result<()> {
             "ghostnorm layer policy: auto | ghost | direct (overrides config)",
         )
         .opt(
+            "ghost-pipeline",
+            "ghostnorm pipeline: auto | fused | reuse | twopass (overrides config)",
+        )
+        .opt(
+            "ghost-budget-mb",
+            "ghostnorm unified scratch budget in MB (overrides config)",
+        )
+        .opt(
             "grad-dump",
             "write one batch's per-example gradients to this CSV after training",
         )
@@ -138,6 +146,8 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         ("backend", "train.backend"),
         ("strategy", "train.strategy"),
         ("ghost-norms", "train.ghost_norms"),
+        ("ghost-pipeline", "train.ghost_pipeline"),
+        ("ghost-budget-mb", "train.ghost_budget_mb"),
         ("grad-dump", "train.grad_dump"),
         ("threads", "train.threads"),
         ("step-artifact", "train.step_artifact"),
@@ -447,7 +457,7 @@ fn cmd_bench_strategies(rest: &[String]) -> Result<()> {
         let batch_sizes = {
             let given = args.get_all("batch");
             if given.is_empty() {
-                vec![4, 8, 16]
+                NativeSweepOptions::default_batch_sizes()
             } else {
                 given
                     .iter()

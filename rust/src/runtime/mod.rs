@@ -116,7 +116,7 @@ pub fn open_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
         Ok(Box::new(PjrtBackend::new(registry, cfg)?))
     } else {
         let spec = ModelSpec::from_manifest(&cfg.model)?;
-        let backend = NativeBackend::with_mode(
+        let backend = NativeBackend::with_ghost_opts(
             spec,
             strategy,
             cfg.threads,
@@ -124,6 +124,9 @@ pub fn open_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
             cfg.noise_multiplier,
             cfg.lr,
             &cfg.ghost_norms,
+            &cfg.ghost_pipeline,
+            cfg.ghost_budget_elems(),
+            cfg.batch_size,
         )?;
         Ok(Box::new(backend))
     }

@@ -21,10 +21,16 @@
 //! between the norm and reweighted walks) — bit-identical to the
 //! legacy two-pass pipeline, which survives only as the
 //! [`crate::ghost::GhostPipeline::TwoPass`] escape hatch for the
-//! differential test and the bench comparison.
+//! differential test and the bench comparison. Config-driven runs
+//! (`[train] ghost_pipeline = "auto" | "reuse"`) can instead select
+//! the scaled-reuse pipeline, which skips the reweighted walk's
+//! dy-propagation matmuls by rescaling the norm walk's saved
+//! per-layer dy — float (1e-5 relative) rather than bit parity.
 
 use super::{Backend, StepOutcome};
-use crate::ghost::{self, ClippedStepPlanner, GhostMode};
+use crate::ghost::{
+    self, ClippedStepPlanner, GhostMode, GhostPipeline, UNIFIED_SCRATCH_BUDGET_ELEMS,
+};
 use crate::models::{LayerSpec, ModelSpec};
 use crate::rng::Xoshiro256pp;
 use crate::strategies::{Strategy, StrategyRunner};
@@ -57,7 +63,10 @@ impl NativeBackend {
 
     /// Full constructor: `mode` configures the ghost-norm layer paths
     /// (`[train] ghost_norms`; ignored for materializing strategies).
-    /// Errors on an invalid per-layer override list.
+    /// Errors on an invalid per-layer override list. Runs the
+    /// bit-exact fused pipeline at the default budget — config-driven
+    /// callers pick pipeline and budget through
+    /// [`with_ghost_opts`](NativeBackend::with_ghost_opts).
     pub fn with_mode(
         spec: ModelSpec,
         strategy: Strategy,
@@ -67,10 +76,53 @@ impl NativeBackend {
         lr: f32,
         mode: &GhostMode,
     ) -> Result<NativeBackend> {
+        Self::with_ghost_opts(
+            spec,
+            strategy,
+            threads,
+            clip,
+            sigma,
+            lr,
+            mode,
+            "fused",
+            UNIFIED_SCRATCH_BUDGET_ELEMS,
+            0,
+        )
+    }
+
+    /// Fullest constructor: additionally selects the ghost execution
+    /// pipeline (`[train] ghost_pipeline` — `"auto"` lets the planner
+    /// pick scaled reuse when a `batch`-example microbatch's whole dy
+    /// footprint fits `budget_elems`, else the bit-exact fused
+    /// pipeline) and the unified scratch budget. Both are ignored for
+    /// materializing strategies.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_ghost_opts(
+        spec: ModelSpec,
+        strategy: Strategy,
+        threads: usize,
+        clip: f32,
+        sigma: f32,
+        lr: f32,
+        mode: &GhostMode,
+        pipeline: &str,
+        budget_elems: usize,
+        batch: usize,
+    ) -> Result<NativeBackend> {
         let p = spec.param_count();
-        let planner = (strategy == Strategy::GhostNorm)
-            .then(|| ClippedStepPlanner::new(&spec, mode))
-            .transpose()?;
+        let planner = if strategy == Strategy::GhostNorm {
+            let pl = ClippedStepPlanner::with_budget(&spec, mode, budget_elems)?;
+            let pipe = if pipeline == "auto" {
+                // the caches are per worker: decide on the per-worker
+                // microbatch, not the whole batch
+                pl.auto_pipeline_for(batch, threads)
+            } else {
+                GhostPipeline::parse(pipeline)?
+            };
+            Some(pl.with_pipeline(pipe))
+        } else {
+            None
+        };
         Ok(NativeBackend {
             runner: StrategyRunner::new(spec, strategy, threads),
             planner,
@@ -324,6 +376,82 @@ mod tests {
             assert!((a - b).abs() < 1e-4, "norms diverged: {a} vs {b}");
         }
         assert!((out_crb.mean_loss - out_ghost.mean_loss).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ghost_opts_select_pipeline_and_budget() {
+        let s = spec();
+        // programmatic default: the bit-exact fused pipeline
+        let be = NativeBackend::new(s.clone(), Strategy::GhostNorm, 1, 1.0, 0.0, 0.1);
+        assert_eq!(
+            be.ghost_planner().unwrap().pipeline(),
+            GhostPipeline::Fused
+        );
+        // config default: auto resolves to scaled reuse when the toy
+        // model fits the budget...
+        let be = NativeBackend::with_ghost_opts(
+            s.clone(),
+            Strategy::GhostNorm,
+            1,
+            1.0,
+            0.0,
+            0.1,
+            &GhostMode::default(),
+            "auto",
+            crate::ghost::UNIFIED_SCRATCH_BUDGET_ELEMS,
+            8,
+        )
+        .unwrap();
+        assert_eq!(
+            be.ghost_planner().unwrap().pipeline(),
+            GhostPipeline::FusedReuse
+        );
+        // ...and back to fused when it cannot
+        let be = NativeBackend::with_ghost_opts(
+            s.clone(),
+            Strategy::GhostNorm,
+            1,
+            1.0,
+            0.0,
+            0.1,
+            &GhostMode::default(),
+            "auto",
+            16,
+            8,
+        )
+        .unwrap();
+        assert_eq!(be.ghost_planner().unwrap().pipeline(), GhostPipeline::Fused);
+        // forced names parse; junk is rejected
+        let be = NativeBackend::with_ghost_opts(
+            s.clone(),
+            Strategy::GhostNorm,
+            1,
+            1.0,
+            0.0,
+            0.1,
+            &GhostMode::default(),
+            "twopass",
+            crate::ghost::UNIFIED_SCRATCH_BUDGET_ELEMS,
+            8,
+        )
+        .unwrap();
+        assert_eq!(
+            be.ghost_planner().unwrap().pipeline(),
+            GhostPipeline::TwoPass
+        );
+        assert!(NativeBackend::with_ghost_opts(
+            s,
+            Strategy::GhostNorm,
+            1,
+            1.0,
+            0.0,
+            0.1,
+            &GhostMode::default(),
+            "warp",
+            crate::ghost::UNIFIED_SCRATCH_BUDGET_ELEMS,
+            8,
+        )
+        .is_err());
     }
 
     #[test]

@@ -33,7 +33,7 @@
 //! same walk the ghost engine's norm and clipped-sum passes ride.
 
 use crate::backward::{
-    backward_walk, conv_args, forward_with_tape, layer_params, ColsMode, PerExGradVisitor,
+    backward_walk, conv_args, forward_with_tape, layer_params, PerExGradVisitor, WalkCtl,
 };
 use crate::models::{LayerSpec, ModelOracle, ModelSpec};
 use crate::tensor::{self, Tensor};
@@ -112,14 +112,7 @@ impl StrategyRunner {
     }
 
     fn resolve_threads(&self, bsz: usize) -> usize {
-        let t = if self.threads == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        } else {
-            self.threads
-        };
-        t.clamp(1, bsz.max(1))
+        resolve_threads(self.threads).clamp(1, bsz.max(1))
     }
 
     /// Per-example gradients `(B, P)` plus per-example losses `(B,)`,
@@ -204,6 +197,20 @@ impl StrategyRunner {
             Ok(())
         })?;
         Ok(Tensor::from_vec(&[bsz, classes], logits))
+    }
+}
+
+/// The one "0 means one thread per available core" rule, shared by
+/// the strategy runner, the ghost engine and the ghost planner's
+/// outer-vs-inner split decision — so a policy change (say, capping
+/// by a cgroup quota) lands everywhere at once.
+pub(crate) fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
     }
 }
 
@@ -345,7 +352,7 @@ pub fn crb_perex_grads(
         grads: &mut pergrads.data,
         p_total,
     };
-    backward_walk(spec, theta, &saved, dy, &mut visitor, ColsMode::Off);
+    backward_walk(spec, theta, &saved, dy, &mut visitor, WalkCtl::off());
     (pergrads, losses)
 }
 

@@ -153,6 +153,112 @@ impl Drop for ColsCache {
     }
 }
 
+/// What the scaled-reuse pipeline's [`DyCache`] stores for one layer:
+/// everything the reweighted walk needs at that layer, saved by the
+/// norm walk *unscaled* (the reuse walk multiplies each example's
+/// block by its clip factor `s_b` — backprop is linear in `dy`, so
+/// the scaled block equals what re-propagating scaled `dy` would
+/// produce, at float rather than bit parity).
+pub enum DyEntry {
+    /// Per-example activation-gradient blocks, batch-major: conv
+    /// layers store `(D·T)` per example, linear layers `(J)`.
+    Blocks { data: Vec<f32>, per_ex: usize },
+    /// Instance-norm per-example affine gradients, `(B, C)` each —
+    /// cached instead of `dy` because they are what the visitor
+    /// consumes, they are linear in `dy`, and they are `H·W` times
+    /// smaller.
+    Affine { dgamma: Vec<f32>, dbeta: Vec<f32> },
+}
+
+/// Budget-bounded cache of per-layer activation gradients, keyed by
+/// layer index — the [`ColsCache`] sibling that powers the ghost
+/// engine's scaled-reuse pipeline.
+///
+/// The norm walk fills it (for the layers the
+/// [`ReusePlan`](crate::ghost::ReusePlan) marks) and the reuse walk
+/// drains it scaled by the clip factors, skipping the dy-propagation
+/// matmuls for every cached layer. Inserts past the element budget
+/// spill: the reuse walk re-propagates `dy` down to the deepest
+/// spilled layer instead (more work, identical math). Held elements
+/// are registered in the [`alloc`] ledger for the cache's lifetime.
+pub struct DyCache {
+    cap: usize,
+    used: usize,
+    spills: usize,
+    map: std::collections::HashMap<usize, DyEntry>,
+}
+
+impl DyCache {
+    pub fn new(cap_elems: usize) -> DyCache {
+        DyCache {
+            cap: cap_elems,
+            used: 0,
+            spills: 0,
+            map: std::collections::HashMap::new(),
+        }
+    }
+
+    fn entry_elems(e: &DyEntry) -> usize {
+        match e {
+            DyEntry::Blocks { data, .. } => data.len(),
+            DyEntry::Affine { dgamma, dbeta } => dgamma.len() + dbeta.len(),
+        }
+    }
+
+    fn insert(&mut self, li: usize, entry: DyEntry) {
+        // fit check *before* evicting a previous entry for the key:
+        // an over-budget replacement spills and the old entry stays,
+        // rather than destroying cached data and keeping nothing
+        let n = Self::entry_elems(&entry);
+        let freed = self.map.get(&li).map_or(0, Self::entry_elems);
+        if self.used - freed + n > self.cap {
+            self.spills += 1;
+            return;
+        }
+        if let Some(old) = self.map.remove(&li) {
+            let f = Self::entry_elems(&old);
+            self.used -= f;
+            alloc::on_free(f);
+        }
+        self.used += n;
+        alloc::on_alloc(n);
+        self.map.insert(li, entry);
+    }
+
+    /// Keep layer `li`'s per-example dy blocks (`per_ex` elems each)
+    /// — unless that would exceed the budget, in which case it spills.
+    pub fn insert_blocks(&mut self, li: usize, data: Vec<f32>, per_ex: usize) {
+        debug_assert!(per_ex > 0 && data.len() % per_ex == 0);
+        self.insert(li, DyEntry::Blocks { data, per_ex });
+    }
+
+    /// Keep layer `li`'s per-example instance-norm affine gradients.
+    pub fn insert_affine(&mut self, li: usize, dgamma: Vec<f32>, dbeta: Vec<f32>) {
+        debug_assert_eq!(dgamma.len(), dbeta.len());
+        self.insert(li, DyEntry::Affine { dgamma, dbeta });
+    }
+
+    pub fn get(&self, li: usize) -> Option<&DyEntry> {
+        self.map.get(&li)
+    }
+
+    /// How many inserts were dropped for budget.
+    pub fn spills(&self) -> usize {
+        self.spills
+    }
+
+    /// f32 elements currently held.
+    pub fn used_elems(&self) -> usize {
+        self.used
+    }
+}
+
+impl Drop for DyCache {
+    fn drop(&mut self) {
+        alloc::on_free(self.used);
+    }
+}
+
 /// A dense, row-major f32 tensor.
 #[derive(Debug, PartialEq)]
 pub struct Tensor {
@@ -768,32 +874,55 @@ pub fn im2col_single(
 ) -> (Vec<f32>, usize, usize) {
     let (c, h, wd) = (x.shape[1], x.shape[2], x.shape[3]);
     let (ho, wo) = args.out_hw(h, wd, kh, kw);
+    let mut cols = vec![0.0f32; c * kh * kw * ho * wo];
+    im2col_rows(x, b, kh, kw, args, 0, c * kh * kw, &mut cols);
+    (cols, ho, wo)
+}
+
+/// Fill rows `[r0, r1)` of one example's `(C·KH·KW, T)` patch matrix
+/// into `dst`, which holds exactly those rows (`(r1-r0)·T` zeroed
+/// elems). Row `r = (c·KH + ky)·KW + kx`, as in [`im2col_single`] —
+/// which is this over the full row range. Rows are independent, so
+/// the backward walk's intra-microbatch parallel fill carves one
+/// matrix into disjoint row chunks and fills them concurrently with
+/// bit-identical results.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_rows(
+    x: &Tensor,
+    b: usize,
+    kh: usize,
+    kw: usize,
+    args: ConvArgs,
+    r0: usize,
+    r1: usize,
+    dst: &mut [f32],
+) {
+    let (c, h, wd) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (ho, wo) = args.out_hw(h, wd, kh, kw);
     let (ph, pw) = args.padding;
     let howo = ho * wo;
-    let mut cols = vec![0.0f32; c * kh * kw * howo];
-    for ci in 0..c {
-        for ky in 0..kh {
-            for kx in 0..kw {
-                let r = (ci * kh + ky) * kw + kx;
-                let dst = &mut cols[r * howo..(r + 1) * howo];
-                for ty in 0..ho {
-                    let iy = ty * args.stride.0 + ky * args.dilation.0;
-                    if iy < ph || iy - ph >= h {
-                        continue;
-                    }
-                    let src_base = ((b * c + ci) * h + (iy - ph)) * wd;
-                    for tx in 0..wo {
-                        let ix = tx * args.stride.1 + kx * args.dilation.1;
-                        if ix < pw || ix - pw >= wd {
-                            continue;
-                        }
-                        dst[ty * wo + tx] = x.data[src_base + ix - pw];
-                    }
+    debug_assert!(r1 <= c * kh * kw);
+    debug_assert_eq!(dst.len(), (r1 - r0) * howo);
+    for r in r0..r1 {
+        let ci = r / (kh * kw);
+        let ky = (r / kw) % kh;
+        let kx = r % kw;
+        let row = &mut dst[(r - r0) * howo..(r - r0 + 1) * howo];
+        for ty in 0..ho {
+            let iy = ty * args.stride.0 + ky * args.dilation.0;
+            if iy < ph || iy - ph >= h {
+                continue;
+            }
+            let src_base = ((b * c + ci) * h + (iy - ph)) * wd;
+            for tx in 0..wo {
+                let ix = tx * args.stride.1 + kx * args.dilation.1;
+                if ix < pw || ix - pw >= wd {
+                    continue;
                 }
+                row[ty * wo + tx] = x.data[src_base + ix - pw];
             }
         }
     }
-    (cols, ho, wo)
 }
 
 /// Inverse of [`im2col_single`] for gradients: scatter-add a
@@ -1389,6 +1518,45 @@ mod tests {
         cache.insert(0, 0, vec![4.0; 5]);
         assert_eq!(cache.used_elems(), 9);
         assert_eq!(cache.get(0, 0).unwrap(), &[4.0; 5][..]);
+    }
+
+    #[test]
+    fn dy_cache_budget_and_spill() {
+        let mut cache = DyCache::new(12);
+        cache.insert_blocks(0, vec![1.0; 8], 4);
+        assert_eq!(cache.used_elems(), 8);
+        // over budget: spilled, not stored
+        cache.insert_blocks(1, vec![2.0; 8], 4);
+        assert!(cache.get(1).is_none());
+        assert_eq!(cache.spills(), 1);
+        // affine entries count both halves
+        cache.insert_affine(2, vec![3.0; 2], vec![4.0; 2]);
+        assert_eq!(cache.used_elems(), 12);
+        match cache.get(2) {
+            Some(DyEntry::Affine { dgamma, dbeta }) => {
+                assert_eq!(dgamma, &[3.0; 2]);
+                assert_eq!(dbeta, &[4.0; 2]);
+            }
+            other => panic!("expected affine entry, got {:?} elems", other.map(DyCache::entry_elems)),
+        }
+        // re-inserting a key releases the old entry's budget first
+        cache.insert_blocks(0, vec![5.0; 6], 3);
+        assert_eq!(cache.used_elems(), 10);
+        match cache.get(0) {
+            Some(DyEntry::Blocks { data, per_ex }) => {
+                assert_eq!(*per_ex, 3);
+                assert_eq!(data, &[5.0; 6]);
+            }
+            _ => panic!("expected blocks entry"),
+        }
+        // an over-budget replacement spills and KEEPS the old entry
+        cache.insert_blocks(0, vec![6.0; 9], 3);
+        assert_eq!(cache.spills(), 2);
+        assert_eq!(cache.used_elems(), 10);
+        match cache.get(0) {
+            Some(DyEntry::Blocks { data, .. }) => assert_eq!(data, &[5.0; 6]),
+            _ => panic!("old entry must survive a spilled replacement"),
+        }
     }
 
     #[test]

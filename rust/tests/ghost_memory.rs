@@ -176,6 +176,23 @@ fn ghost_grad_buffers_are_batch_size_independent() {
     let t0 = tape_builds();
     ghost::perex_norms(&planner, &theta, &x, &y, 1).unwrap();
     assert_eq!(tape_builds() - t0, 1, "norm-only query");
+    // the scaled-reuse pipeline is single-tape too, and its peak
+    // stays within the same budgeted envelope (its dy + cols caches
+    // split the one budget the fused pipeline gives to cols alone)
+    let reuse = ClippedStepPlanner::new(&spec, &GhostMode::default())
+        .unwrap()
+        .with_pipeline(GhostPipeline::FusedReuse);
+    alloc::reset_peak();
+    let base = alloc::live_elems();
+    let t0 = tape_builds();
+    let out_reuse = ghost::clipped_step(&reuse, &theta, &x, &y, 1.0, 1).unwrap();
+    assert_eq!(tape_builds() - t0, 1, "reuse pipeline builds one tape");
+    let reuse_peak = alloc::peak_elems() - base;
+    assert_eq!(out_reuse.norms, out_two.norms, "reuse norms must match");
+    assert!(
+        reuse_peak <= two_peak + COLS_CACHE_CAP_ELEMS as i64,
+        "reuse peak {reuse_peak} exceeds two-pass peak {two_peak} + unified budget"
+    );
 
     // contrast: the materializing crb strategy must hold the full
     // (B, P) matrix — its peak at B=16 dwarfs the ghost engine's

@@ -261,6 +261,55 @@ fn native_service_validates_at_start() {
     svc.shutdown();
 }
 
+/// Explicit pipeline selection flows config → planner → training: a
+/// forced scaled-reuse run (with a custom budget) trains end to end.
+/// (The default `ghost_pipeline = "auto"` path is exercised by
+/// `ghost_trainer_runs_and_learns`, where the planner resolves it to
+/// reuse because the toy model fits the budget.)
+#[test]
+fn explicit_reuse_pipeline_trains() {
+    let cfg = Config::parse(
+        r#"
+[train]
+backend = "native"
+strategy = "ghostnorm"
+ghost_pipeline = "reuse"
+ghost_budget_mb = 64
+steps = 3
+batch_size = 4
+lr = 0.2
+seed = 9
+eval_every = 0
+log_every = 2
+
+[model]
+n_layers = 2
+first_channels = 6
+kernel_size = 3
+input_shape = [2, 12, 12]
+
+[dp]
+clip_norm = 1.0
+noise_multiplier = 0.0
+target_delta = 1e-5
+
+[data]
+size = 64
+num_classes = 10
+"#,
+    )
+    .unwrap();
+    let exp = ExperimentConfig::from_config(&cfg).unwrap();
+    assert_eq!(exp.ghost_pipeline, "reuse");
+    assert_eq!(exp.ghost_budget_mb, 64);
+    let mut trainer = Trainer::from_config(exp).unwrap();
+    assert_eq!(trainer.backend_name(), "native");
+    trainer.quiet = true;
+    let report = trainer.run(None).unwrap();
+    assert_eq!(report.steps, 3);
+    assert!(report.losses.iter().all(|p| p.loss.is_finite()));
+}
+
 /// Config hardening: combinations ghostnorm cannot honor fail fast
 /// with actionable errors all the way through backend construction.
 #[test]
@@ -279,6 +328,18 @@ fn ghostnorm_conflicts_rejected_end_to_end() {
     .unwrap();
     let err = ExperimentConfig::from_config(&cfg).unwrap_err().to_string();
     assert!(err.contains("native-only"), "{err}");
+    // twopass + cache budget: the legacy pipeline is cache-free, so a
+    // budget with it is a contradiction, rejected at config time
+    let cfg = Config::parse(
+        "[train]\nstrategy = \"ghostnorm\"\nghost_pipeline = \"twopass\"\n\
+         ghost_budget_mb = 32\n",
+    )
+    .unwrap();
+    let err = ExperimentConfig::from_config(&cfg).unwrap_err().to_string();
+    assert!(
+        err.contains("twopass") && err.contains("ghost_budget_mb"),
+        "{err}"
+    );
     // auto + ghostnorm resolves to the native backend
     let mut trainer = Trainer::from_config({
         let mut c = ghost_config(1, 1.0);
