@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
         env_usize("BENCH_BATCHES", 20),
         Protocol::from_env(),
         env_usize("BENCH_THREADS", 0),
-        vec![4, 8, 16],
+        NativeSweepOptions::default_batch_sizes(),
     );
     experiments::run_native_sweep_with_reports(&opts, "reports", "BENCH_strategies.json")
 }

@@ -6,52 +6,55 @@
 //! before this module each carried its own hand-copied ~150-line
 //! reverse walk. Now there is exactly one walk:
 //!
-//! * [`tape`] — [`forward_with_tape`](tape::forward_with_tape) runs
-//!   the fast-kernel forward once and saves what any backward needs
-//!   per layer (the [`Saved`](tape::Saved) tape), counting tape
-//!   builds in a process-global counter ([`tape_builds`]) so tests
-//!   can *prove* how many forwards a pipeline ran.
-//! * [`walk`] — [`backward_walk`](walk::backward_walk) drives the
-//!   reverse loop: it owns all gradient *propagation* (conv/linear
-//!   input gradients, instance-norm dx, relu masks, pool scatter,
-//!   flatten reshape) and all per-example im2col patch-matrix
-//!   construction, and hands each parametric layer to a
-//!   [`BackwardVisitor`](walk::BackwardVisitor). The walk can fill or
+//! * `tape` — `forward_with_tape` runs the fast-kernel forward once
+//!   and saves what any backward needs per layer (the `Saved` tape),
+//!   counting tape builds in a process-global counter
+//!   ([`tape_builds`]) so tests can *prove* how many forwards a
+//!   pipeline ran.
+//! * `walk` — `backward_walk` drives the reverse loop: it owns all
+//!   gradient *propagation* (conv/linear input gradients,
+//!   instance-norm dx, relu masks, pool scatter, flatten reshape) and
+//!   all per-example im2col patch-matrix construction, and hands each
+//!   parametric layer to a `BackwardVisitor`. The walk can fill or
 //!   reuse a [`ColsCache`](crate::tensor::ColsCache), which is how
 //!   the fused ghost pipeline shares patch matrices between its norm
 //!   and reweighted walks; it can likewise record per-layer dy into a
-//!   [`DyCache`](crate::tensor::DyCache), which
-//!   [`reuse_walk`](walk::reuse_walk) consumes scaled by the clip
-//!   factors — the scaled-reuse pipeline that skips the second
-//!   backward's propagation matmuls entirely (counted by
-//!   [`prop_matmuls`](walk::prop_matmuls)). Conv patch matrices can
-//!   be filled by an intra-microbatch parallel (example × row-chunk)
-//!   work queue with bit-identical results.
-//! * [`visitors`] — the three small visitor implementations:
-//!   [`PerExGradVisitor`](visitors::PerExGradVisitor) (the `crb`
-//!   strategy), [`NormVisitor`](visitors::NormVisitor) (ghost
+//!   [`DyCache`](crate::tensor::DyCache), which `reuse_walk` consumes
+//!   scaled by the clip factors — the scaled-reuse pipeline that
+//!   skips the second backward's propagation matmuls entirely
+//!   (counted by [`prop_matmuls`]).
+//! * `visitors` — the three small visitor implementations:
+//!   `PerExGradVisitor` (the `crb` strategy), `NormVisitor` (ghost
 //!   norms, direct or Gram path per the planner), and
-//!   [`ClippedSumVisitor`](visitors::ClippedSumVisitor) (the
-//!   reweighted clipped batch gradient).
+//!   `ClippedSumVisitor` (the reweighted clipped batch gradient).
+//!
+//! With `inner > 1` in the walk control, conv layers take the
+//! **intra-microbatch parallel** path: the im2col fill *and* the
+//! visitor's own workload (the Eq.-4 `dW` matmuls, the direct/Gram
+//! norm kernels, the clipped-sum accumulation, the scaled-reuse dy
+//! rescale) are carved into disjoint-output work units drained off
+//! one shared work-stealing queue — bit-identical to the serial walk
+//! at any split, and observable through the [`visitor_units`]
+//! counter (sibling of [`prop_matmuls`] and [`tape_builds`]).
 //!
 //! Adding a layer type means teaching the tape and *both* walks —
-//! [`backward_walk`](walk::backward_walk) and the scaled-reuse
-//! [`reuse_walk`](walk::reuse_walk), which deliberately keeps its own
-//! frontier-aware reverse loop so the hot shared walk stays bit-exact
-//! and untouched by reuse concerns (a missed arm fails loud via the
-//! walks' `unreachable!` spec/saved match) — after which every
-//! consumer — norms, clipped sums, per-example gradients — inherits
-//! it. The randomized property tests in `tests/ghostnorm.rs` and the
-//! differential harnesses in `tests/ghost_fused_differential.rs` and
+//! `backward_walk` and the scaled-reuse `reuse_walk`, which
+//! deliberately keeps its own frontier-aware reverse loop so the hot
+//! shared walk stays bit-exact and untouched by reuse concerns (a
+//! missed arm fails loud via the walks' `unreachable!` spec/saved
+//! match) — after which every consumer — norms, clipped sums,
+//! per-example gradients — inherits it. The randomized property
+//! tests in `tests/ghostnorm.rs` and the differential harnesses in
+//! `tests/ghost_fused_differential.rs` and
 //! `tests/ghost_reuse_differential.rs` pin all the visitors and walks
 //! to the oracle and to each other.
 
-pub mod tape;
-pub mod visitors;
-pub mod walk;
+pub(crate) mod tape;
+pub(crate) mod visitors;
+pub(crate) mod walk;
 
 pub use tape::tape_builds;
-pub use walk::prop_matmuls;
+pub use walk::{prop_matmuls, visitor_units};
 pub(crate) use tape::{conv_args, forward_with_tape, layer_params};
 pub(crate) use visitors::{ClippedSumVisitor, NormVisitor, PerExGradVisitor};
 pub(crate) use walk::{backward_walk, reuse_walk, ColsMode, DyMode, WalkCtl};

@@ -13,9 +13,31 @@
 //!   rows pre-scaled by the clip factors, every layer's gradient
 //!   accumulated straight into one flat `(P,)` partial (backprop is
 //!   linear in `dy`, so the result is exactly `Σ_b s_b·g_b`).
+//!
+//! Each visitor also overrides the walk's parallel conv-layer hook
+//! (`BackwardVisitor::conv_layer`) to carve its workload into
+//! disjoint-output units on the shared work-stealing queue
+//! (`walk::run_units`) — how the intra-microbatch `inner` threads
+//! reach past the im2col fill into the visitor matmuls themselves.
+//! The decompositions are **bit-identical** to the serial hooks by
+//! construction:
+//!
+//! * row-blocked Eq.-4 matmuls (`tensor::matmul_nt_rows`) perform the
+//!   full call's exact per-element arithmetic on disjoint row ranges
+//!   (pinned bitwise by a `tensor` unit test);
+//! * the clipped-sum units accumulate examples *in ascending order
+//!   within each unit*, reproducing the serial `+=` order per output
+//!   element;
+//! * the norm kernels split into a parallel fill phase over disjoint
+//!   scratch (dW row-chunks, Gram row-chunks) and a serial fold phase
+//!   that reads the scratch in exactly the serial order — the f64
+//!   accumulation sequence per `nsq[b]` never changes.
 
-use super::walk::{BackwardVisitor, ConvCtx, LinearCtx, NormCtx};
+use super::walk::{
+    unit_chunks, BackwardVisitor, Carver, ConvCtx, LinearCtx, NormCtx, UnitKind, WorkUnit,
+};
 use crate::ghost::planner::{ClippedStepPlanner, NormPath};
+use crate::strategies::split_ranges;
 use crate::tensor::{self, Tensor};
 
 // ---------------------------------------------------------------------------
@@ -25,7 +47,9 @@ use crate::tensor::{self, Tensor};
 /// Writes each example's gradient into its row of a flat `(B, P)`
 /// buffer, in the shared theta packing order.
 pub(crate) struct PerExGradVisitor<'a> {
+    /// The flat `(B, P)` output buffer (rows start zeroed).
     pub grads: &'a mut [f32],
+    /// Row stride `P`.
     pub p_total: usize,
 }
 
@@ -56,6 +80,50 @@ impl BackwardVisitor for PerExGradVisitor<'_> {
             }
             dst[ctx.wn + dd] = acc as f32;
         }
+    }
+
+    /// Parallel form: every (example × group × row-chunk) of Eq.-4
+    /// matmul is one unit owning its disjoint slice of the `(B, P)`
+    /// buffer; the per-example bias sums are one unit each. No two
+    /// units share an output element and each performs the serial
+    /// hook's exact arithmetic, so any schedule reproduces the serial
+    /// bits.
+    fn conv_layer(&mut self, ctx: &ConvCtx, cols: &[&[f32]], dy: &[f32], inner: usize) {
+        let bsz = cols.len();
+        let per_ex = ctx.d * ctx.howo;
+        let chunks = unit_chunks(ctx.dg, inner, bsz * ctx.groups);
+        let mut units: Vec<WorkUnit<'_>> =
+            Vec::with_capacity(bsz * (ctx.groups * chunks + 1));
+        let mut carver = Carver::new(self.grads);
+        let (d, dg, groups, rows_g, howo, wn) =
+            (ctx.d, ctx.dg, ctx.groups, ctx.rows_g, ctx.howo, ctx.wn);
+        for b in 0..bsz {
+            let dy_b = &dy[b * per_ex..(b + 1) * per_ex];
+            let cols_b: &[f32] = cols[b];
+            let base = b * self.p_total + ctx.offset;
+            for g in 0..groups {
+                let dyg = &dy_b[g * dg * howo..(g + 1) * dg * howo];
+                let colsg = &cols_b[g * rows_g * howo..(g + 1) * rows_g * howo];
+                for (r0, r1) in split_ranges(dg, chunks) {
+                    let dst = carver.take(base + (g * dg + r0) * rows_g, (r1 - r0) * rows_g);
+                    units.push(Box::new(move || {
+                        tensor::matmul_nt_rows(dyg, colsg, dst, r0, r1, howo, rows_g);
+                    }));
+                }
+            }
+            let dstb = carver.take(base + wn, d);
+            units.push(Box::new(move || {
+                for dd in 0..d {
+                    let row = &dy_b[dd * howo..(dd + 1) * howo];
+                    let mut acc = 0.0f64;
+                    for v in row {
+                        acc += *v as f64;
+                    }
+                    dstb[dd] = acc as f32;
+                }
+            }));
+        }
+        super::walk::run_units(units, inner, UnitKind::Visitor);
     }
 
     fn linear(&mut self, ctx: &LinearCtx, input: &Tensor, dy: &Tensor) {
@@ -90,47 +158,33 @@ impl BackwardVisitor for PerExGradVisitor<'_> {
 // ghost pass 1: per-example squared norms
 // ---------------------------------------------------------------------------
 
-/// `⟨AᵀA, BᵀB⟩` for row-major `A (ra×t)`, `B (rb×t)`: the ghost-norm
-/// contraction. Both Gram matrices are symmetric, so only the upper
-/// triangles are formed; accumulation is f64 to keep the norm within
-/// the 1e-4 oracle tolerance. `ga`/`gb` are caller-owned `t*t`
-/// scratch (this sits in the per-example hot loop — the caller
-/// allocates once per layer, not once per call).
-pub(crate) fn gram_dot(
-    a: &[f32],
-    ra: usize,
-    b: &[f32],
-    rb: usize,
-    t: usize,
-    ga: &mut [f64],
-    gb: &mut [f64],
-) -> f64 {
+/// Fill rows `[i0, i0 + chunk.len()/t)` of the `t×t` upper-triangular
+/// Gram of row-major `A (ra×t)` into `chunk` (the contiguous row
+/// slots `ga[i0·t .. i1·t]`): `chunk` is zeroed, then every element
+/// `G[i,j] = Σ_r A[r,i]·A[r,j]` accumulates over `r` in ascending
+/// order — exactly the full [`gram_dot`] fill restricted to a row
+/// range, so chunked fills are bit-identical to the one-shot fill.
+pub(crate) fn gram_fill_rows(a: &[f32], ra: usize, t: usize, i0: usize, chunk: &mut [f64]) {
     debug_assert_eq!(a.len(), ra * t);
-    debug_assert_eq!(b.len(), rb * t);
-    debug_assert_eq!(ga.len(), t * t);
-    debug_assert_eq!(gb.len(), t * t);
-    ga.fill(0.0);
-    gb.fill(0.0);
+    debug_assert_eq!(chunk.len() % t, 0);
+    let i1 = i0 + chunk.len() / t;
+    debug_assert!(i1 <= t);
+    chunk.fill(0.0);
     for r in 0..ra {
         let row = &a[r * t..(r + 1) * t];
-        for i in 0..t {
+        for i in i0..i1 {
             let ai = row[i] as f64;
-            let dst = &mut ga[i * t + i..(i + 1) * t];
+            let dst = &mut chunk[(i - i0) * t + i..(i - i0 + 1) * t];
             for (d, v) in dst.iter_mut().zip(&row[i..]) {
                 *d += ai * *v as f64;
             }
         }
     }
-    for r in 0..rb {
-        let row = &b[r * t..(r + 1) * t];
-        for i in 0..t {
-            let bi = row[i] as f64;
-            let dst = &mut gb[i * t + i..(i + 1) * t];
-            for (d, v) in dst.iter_mut().zip(&row[i..]) {
-                *d += bi * *v as f64;
-            }
-        }
-    }
+}
+
+/// The `⟨·,·⟩` fold over two filled upper-triangular Grams — the
+/// serial tail of [`gram_dot`].
+pub(crate) fn gram_reduce(ga: &[f64], gb: &[f64], t: usize) -> f64 {
     let mut acc = 0.0f64;
     for i in 0..t {
         acc += ga[i * t + i] * gb[i * t + i];
@@ -143,6 +197,31 @@ pub(crate) fn gram_dot(
         acc += 2.0 * s;
     }
     acc
+}
+
+/// `⟨AᵀA, BᵀB⟩` for row-major `A (ra×t)`, `B (rb×t)`: the ghost-norm
+/// contraction. Both Gram matrices are symmetric, so only the upper
+/// triangles are formed; accumulation is f64 to keep the norm within
+/// the 1e-4 oracle tolerance. `ga`/`gb` are caller-owned `t*t`
+/// scratch (this sits in the per-example hot loop — the caller
+/// allocates once per layer, not once per call). Composed from
+/// [`gram_fill_rows`] (full range) and [`gram_reduce`], which the
+/// parallel norm path reuses chunk by chunk.
+pub(crate) fn gram_dot(
+    a: &[f32],
+    ra: usize,
+    b: &[f32],
+    rb: usize,
+    t: usize,
+    ga: &mut [f64],
+    gb: &mut [f64],
+) -> f64 {
+    debug_assert_eq!(b.len(), rb * t);
+    debug_assert_eq!(ga.len(), t * t);
+    debug_assert_eq!(gb.len(), t * t);
+    gram_fill_rows(a, ra, t, 0, ga);
+    gram_fill_rows(b, rb, t, 0, gb);
+    gram_reduce(ga, gb, t)
 }
 
 /// Accumulates per-example squared gradient norms layer by layer in
@@ -234,6 +313,111 @@ impl BackwardVisitor for NormVisitor<'_> {
         }
     }
 
+    /// The planner's cost model for the chosen kernel — so the walk's
+    /// parallel gate sees the Gram cost on ghost layers, not the
+    /// (potentially much smaller) Eq.-4 default.
+    fn conv_flops(&self, ctx: &ConvCtx) -> usize {
+        match self.planner.path(ctx.li) {
+            NormPath::Direct => ctx.groups * ctx.dg * ctx.rows_g * (ctx.howo + 2),
+            NormPath::Ghost => {
+                ctx.groups * (ctx.howo * (ctx.howo + 1) / 2) * (ctx.dg + ctx.rows_g + 2)
+            }
+        }
+    }
+
+    /// Parallel form, per (example, group): a parallel *fill* phase
+    /// over disjoint scratch — dW row-chunks for the direct kernel,
+    /// Gram row-chunks for the ghost kernel — then the serial fold
+    /// the serial hook performs (square-sum of the whole dW, or the
+    /// triangular `⟨·,·⟩`). The fill chunks reproduce the serial
+    /// fill's per-element arithmetic exactly and the folds read the
+    /// same scratch values in the same order, so `nsq[b]`'s f64
+    /// accumulation sequence is unchanged — norms stay bit-identical
+    /// at any split, the property the thread-invariance tests pin.
+    ///
+    /// The per-group scratch reuse forces one [`run_units`] phase per
+    /// (example, group), so each phase re-checks the work gate for
+    /// *its own* kernel cost: the walk gated the layer's total, and a
+    /// grouped conv can spread that total over many small phases
+    /// whose individual spawn overhead would outweigh the win — those
+    /// phases drain their units serially instead (identical bits,
+    /// cheaper schedule).
+    ///
+    /// [`run_units`]: super::walk::run_units
+    fn conv_layer(&mut self, ctx: &ConvCtx, cols: &[&[f32]], dy: &[f32], inner: usize) {
+        let per_ex = ctx.d * ctx.howo;
+        let path = self.planner.path(ctx.li);
+        let (dg, rows_g, howo, groups) = (ctx.dg, ctx.rows_g, ctx.howo, ctx.groups);
+        let phase_work = self.conv_flops(ctx) / groups.max(1);
+        let phase_inner = if phase_work >= super::walk::INNER_PAR_MIN_WORK {
+            inner
+        } else {
+            1
+        };
+        for (b, cols_b) in cols.iter().enumerate() {
+            let dy_b = &dy[b * per_ex..(b + 1) * per_ex];
+            // bias first — the serial hook's accumulation order
+            for dd in 0..ctx.d {
+                let row = &dy_b[dd * howo..(dd + 1) * howo];
+                let s: f64 = row.iter().map(|v| *v as f64).sum();
+                self.nsq[b] += s * s;
+            }
+            for g in 0..groups {
+                let dyg = &dy_b[g * dg * howo..(g + 1) * dg * howo];
+                let colsg = &cols_b[g * rows_g * howo..(g + 1) * rows_g * howo];
+                match path {
+                    NormPath::Direct => {
+                        self.tmp.fill(0.0);
+                        {
+                            let chunks = unit_chunks(dg, phase_inner, 1);
+                            let mut units: Vec<WorkUnit<'_>> = Vec::with_capacity(chunks);
+                            let mut rest: &mut [f32] = &mut self.tmp;
+                            for (r0, r1) in split_ranges(dg, chunks) {
+                                let (dst, r) = std::mem::take(&mut rest)
+                                    .split_at_mut((r1 - r0) * rows_g);
+                                rest = r;
+                                units.push(Box::new(move || {
+                                    tensor::matmul_nt_rows(dyg, colsg, dst, r0, r1, howo, rows_g);
+                                }));
+                            }
+                            super::walk::run_units(units, phase_inner, UnitKind::Visitor);
+                        }
+                        let sq: f64 =
+                            self.tmp.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+                        self.nsq[b] += sq;
+                    }
+                    NormPath::Ghost => {
+                        let t = howo;
+                        {
+                            let chunks = unit_chunks(t, phase_inner, 2);
+                            let mut units: Vec<WorkUnit<'_>> = Vec::with_capacity(2 * chunks);
+                            let mut rest_a: &mut [f64] = &mut self.ga;
+                            for (i0, i1) in split_ranges(t, chunks) {
+                                let (chunk, r) =
+                                    std::mem::take(&mut rest_a).split_at_mut((i1 - i0) * t);
+                                rest_a = r;
+                                units.push(Box::new(move || {
+                                    gram_fill_rows(dyg, dg, t, i0, chunk);
+                                }));
+                            }
+                            let mut rest_b: &mut [f64] = &mut self.gb;
+                            for (i0, i1) in split_ranges(t, chunks) {
+                                let (chunk, r) =
+                                    std::mem::take(&mut rest_b).split_at_mut((i1 - i0) * t);
+                                rest_b = r;
+                                units.push(Box::new(move || {
+                                    gram_fill_rows(colsg, rows_g, t, i0, chunk);
+                                }));
+                            }
+                            super::walk::run_units(units, phase_inner, UnitKind::Visitor);
+                        }
+                        self.nsq[b] += gram_reduce(&self.ga, &self.gb, t);
+                    }
+                }
+            }
+        }
+    }
+
     fn linear(&mut self, ctx: &LinearCtx, input: &Tensor, dy: &Tensor) {
         // Goodfellow: ‖dy_b ⊗ x_b‖² = ‖x_b‖²·‖dy_b‖²; bias adds ‖dy_b‖²
         let bsz = dy.shape[0];
@@ -273,6 +457,7 @@ impl BackwardVisitor for NormVisitor<'_> {
 /// The fast matmuls all have `+=` semantics, so cross-example
 /// accumulation is free.
 pub(crate) struct ClippedSumVisitor {
+    /// The flat `(P,)` partial sum.
     pub psum: Tensor,
 }
 
@@ -302,6 +487,50 @@ impl BackwardVisitor for ClippedSumVisitor {
                 acc += *v as f64;
             }
             self.psum.data[ctx.offset + ctx.wn + dd] += acc as f32;
+        }
+    }
+
+    /// Parallel form: one unit per (group × row-chunk) of the weight
+    /// block, each accumulating **all examples in ascending order**
+    /// into its disjoint slice of the `(P,)` partial — per output
+    /// element that is the serial hook's exact `+=` sequence (example
+    /// 0's k-blocks, then example 1's, ...), so the clipped sum stays
+    /// bit-identical at any split. The bias column runs serially in
+    /// the serial order (it touches disjoint elements anyway).
+    fn conv_layer(&mut self, ctx: &ConvCtx, cols: &[&[f32]], dy: &[f32], inner: usize) {
+        let bsz = cols.len();
+        let per_ex = ctx.d * ctx.howo;
+        let (dg, rows_g, howo, groups) = (ctx.dg, ctx.rows_g, ctx.howo, ctx.groups);
+        let chunks = unit_chunks(dg, inner, groups);
+        {
+            let mut units: Vec<WorkUnit<'_>> = Vec::with_capacity(groups * chunks);
+            let mut carver = Carver::new(&mut self.psum.data);
+            for g in 0..groups {
+                for (r0, r1) in split_ranges(dg, chunks) {
+                    let dst =
+                        carver.take(ctx.offset + (g * dg + r0) * rows_g, (r1 - r0) * rows_g);
+                    units.push(Box::new(move || {
+                        for (b, cols_b) in cols.iter().enumerate() {
+                            let dyg =
+                                &dy[b * per_ex + g * dg * howo..b * per_ex + (g + 1) * dg * howo];
+                            let colsg = &cols_b[g * rows_g * howo..(g + 1) * rows_g * howo];
+                            tensor::matmul_nt_rows(dyg, colsg, dst, r0, r1, howo, rows_g);
+                        }
+                    }));
+                }
+            }
+            super::walk::run_units(units, inner, UnitKind::Visitor);
+        }
+        for b in 0..bsz {
+            let dy_b = &dy[b * per_ex..(b + 1) * per_ex];
+            for dd in 0..ctx.d {
+                let row = &dy_b[dd * howo..(dd + 1) * howo];
+                let mut acc = 0.0f64;
+                for v in row {
+                    acc += *v as f64;
+                }
+                self.psum.data[ctx.offset + ctx.wn + dd] += acc as f32;
+            }
         }
     }
 
@@ -367,5 +596,31 @@ mod tests {
         // scratch is reusable: a second call must agree exactly
         let again = gram_dot(&a, ra, &b, rb, t, &mut ga, &mut gb);
         assert_eq!(got.to_bits(), again.to_bits());
+    }
+
+    /// The parallel norm path's load-bearing property: a Gram filled
+    /// in disjoint row-range chunks is bit-identical to the one-shot
+    /// fill, at any chunking.
+    #[test]
+    fn gram_fill_rows_bitwise_matches_full_fill() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let (ra, t) = (5usize, 9usize);
+        let mut a = vec![0.0f32; ra * t];
+        rng.fill_gaussian(&mut a, 1.0);
+        let mut want = vec![0.0f64; t * t];
+        gram_fill_rows(&a, ra, t, 0, &mut want);
+        for chunks in [2usize, 3, 9] {
+            let mut got = vec![7.0f64; t * t]; // stale scratch must not leak
+            let step = t.div_ceil(chunks);
+            let mut i0 = 0;
+            while i0 < t {
+                let i1 = (i0 + step).min(t);
+                gram_fill_rows(&a, ra, t, i0, &mut got[i0 * t..i1 * t]);
+                i0 = i1;
+            }
+            let wb: Vec<u64> = want.iter().map(|v| v.to_bits()).collect();
+            let gb_: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb_, "chunked gram fill ({chunks}) drifted");
+        }
     }
 }

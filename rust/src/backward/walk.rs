@@ -26,18 +26,26 @@
 //!   scaled-reuse pipeline saves them during its norm walk and
 //!   [`reuse_walk`] consumes them scaled by the clip factors instead
 //!   of re-propagating.
-//! * `inner > 1` turns on the intra-microbatch parallel im2col fill:
-//!   each conv layer's patch matrices are carved into (example ×
-//!   row-chunk) units drained off a shared queue by `inner` scoped
-//!   threads. Only the *fill* is parallel — visitor calls still run
-//!   serially in example order, and `im2col_rows` writes are pure and
-//!   disjoint, so results are bit-identical to the serial walk at any
-//!   `inner`.
+//! * `inner > 1` turns on the **intra-microbatch parallel** path for
+//!   conv layers: the walk pre-fills the missing patch matrices and
+//!   then hands the visitor the *whole* layer
+//!   ([`BackwardVisitor::conv_layer`]) so the visitor's own workload
+//!   — the Eq.-4 `dW` matmuls, the direct/Gram norm kernels, the
+//!   clipped-sum accumulation — is carved into work units drained off
+//!   the same shared queue the fill uses ([`run_units`]). Every unit
+//!   owns a disjoint output slice and performs the serial path's
+//!   exact per-element arithmetic, and every cross-unit reduction is
+//!   folded serially in the serial order, so results are
+//!   **bit-identical** to the serial walk at any `inner`.
 //!
 //! Every dy-propagation op (conv/linear input gradients, the
 //! instance-norm backward) bumps a process-global counter readable
 //! via [`prop_matmuls`] — how the tests *prove* the scaled-reuse walk
-//! skips the propagation chain for cached layers.
+//! skips the propagation chain for cached layers. A sibling counter,
+//! [`visitor_units`], counts visitor work units executed through the
+//! parallel queue — how the tests *prove* that at `B = 1` with spare
+//! threads the per-microbatch visitor matmuls really run on more than
+//! one thread.
 
 use super::tape::{conv_args, layer_params, Saved};
 use crate::ghost::planner::ReusePlan;
@@ -46,6 +54,7 @@ use crate::tensor::{self, ColsCache, ConvArgs, DyCache, DyEntry, Tensor};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 static PROP_MATMULS: AtomicU64 = AtomicU64::new(0);
+static VISITOR_UNITS: AtomicU64 = AtomicU64::new(0);
 
 /// Number of dy-propagation ops (conv/linear input-gradient matmuls,
 /// instance-norm backwards) executed by backward walks since process
@@ -54,6 +63,18 @@ static PROP_MATMULS: AtomicU64 = AtomicU64::new(0);
 /// must serialize against other walk-running tests in their binary.
 pub fn prop_matmuls() -> u64 {
     PROP_MATMULS.load(Ordering::Relaxed)
+}
+
+/// Number of *visitor* work units (Eq.-4 `dW` row-blocks, norm-kernel
+/// chunks, clipped-sum row-blocks, dy-rescale chunks) executed through
+/// the parallel work-stealing queue since process start — the fill
+/// units of the im2col prefill are deliberately not counted. Zero
+/// whenever walks run serially (`inner <= 1`, or below the work gate);
+/// strictly positive exactly when per-microbatch visitor work ran on
+/// multiple threads. Global and monotonic like [`prop_matmuls`]:
+/// tests assert on deltas and must serialize within their binary.
+pub fn visitor_units() -> u64 {
+    VISITOR_UNITS.load(Ordering::Relaxed)
 }
 
 fn count_prop() {
@@ -72,6 +93,7 @@ pub(crate) struct ConvCtx {
     pub d: usize,
     /// Output channels per group `D/g`.
     pub dg: usize,
+    /// Group count `g`.
     pub groups: usize,
     /// Patch rows per group `R = (C/g)·KH·KW`.
     pub rows_g: usize,
@@ -79,29 +101,171 @@ pub(crate) struct ConvCtx {
     pub howo: usize,
 }
 
+/// Geometry of one linear layer, precomputed for the visitor.
 pub(crate) struct LinearCtx {
+    /// Offset of this layer's parameter block in flat theta.
     pub offset: usize,
+    /// Weight element count (bias follows at `offset + wn`).
     pub wn: usize,
+    /// Input features `I`.
     pub in_dim: usize,
+    /// Output features `J`.
     pub out_dim: usize,
 }
 
+/// Geometry of one instance-norm layer, precomputed for the visitor.
 pub(crate) struct NormCtx {
+    /// Offset of this layer's parameter block in flat theta.
     pub offset: usize,
+    /// Channels `C` (gamma block; beta follows at `offset + C`).
     pub channels: usize,
 }
+
+// ---------------------------------------------------------------------------
+// The shared unit-of-work queue
+// ---------------------------------------------------------------------------
+
+/// One unit of walk work: a closure owning a disjoint output slice
+/// (plus whatever shared read-only inputs it needs). Units are safe to
+/// run in any order on any thread — determinism comes from each unit
+/// performing the serial path's exact per-element arithmetic on its
+/// own slice, never from scheduling.
+pub(crate) type WorkUnit<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// What a batch of units is doing — only [`UnitKind::Visitor`] units
+/// count toward [`visitor_units`] (the fill was already parallel in
+/// PR 4 and has no counter; the new counter isolates the visitor
+/// workload the tests assert on).
+pub(crate) enum UnitKind {
+    /// im2col patch-matrix prefill chunks.
+    Fill,
+    /// Visitor work: Eq.-4 matmul row-blocks, norm-kernel chunks,
+    /// clipped-sum row-blocks, dy-rescale chunks.
+    Visitor,
+}
+
+/// Drain `units` with `inner` threads off one shared work-stealing
+/// queue (a mutexed stack: one huge unit simply occupies more pulls).
+/// With `inner <= 1` — or a single unit — the units run serially on
+/// the caller's thread and nothing is counted.
+pub(crate) fn run_units(units: Vec<WorkUnit<'_>>, inner: usize, kind: UnitKind) {
+    if inner <= 1 || units.len() <= 1 {
+        for u in units {
+            u();
+        }
+        return;
+    }
+    if matches!(kind, UnitKind::Visitor) {
+        VISITOR_UNITS.fetch_add(units.len() as u64, Ordering::Relaxed);
+    }
+    let queue = std::sync::Mutex::new(units);
+    let drain = || loop {
+        let Some(u) = queue.lock().unwrap().pop() else {
+            break;
+        };
+        u();
+    };
+    std::thread::scope(|s| {
+        for _ in 1..inner {
+            s.spawn(drain);
+        }
+        drain(); // this thread works too
+    });
+}
+
+/// Carves ascending, disjoint `&mut` subslices out of one flat
+/// buffer — how a visitor hands each work unit its own output region
+/// of a shared gradient buffer without `unsafe`. `take(at, len)`
+/// yields `buf[at..at + len]`; calls must be non-overlapping and in
+/// ascending order of `at`.
+pub(crate) struct Carver<'a> {
+    rest: &'a mut [f32],
+    pos: usize,
+}
+
+impl<'a> Carver<'a> {
+    pub fn new(buf: &'a mut [f32]) -> Carver<'a> {
+        Carver { rest: buf, pos: 0 }
+    }
+
+    /// The subslice `[at, at + len)` of the original buffer.
+    pub fn take(&mut self, at: usize, len: usize) -> &'a mut [f32] {
+        debug_assert!(
+            at >= self.pos,
+            "Carver::take out of order: at {at} < cursor {}",
+            self.pos
+        );
+        let r = std::mem::take(&mut self.rest);
+        let (_, r) = r.split_at_mut(at - self.pos);
+        let (out, rest) = r.split_at_mut(len);
+        self.rest = rest;
+        self.pos = at + len;
+        out
+    }
+}
+
+/// Number of contiguous chunks to carve `rows` rows into for `inner`
+/// threads: ~2 units per thread for work-stealing slack, never more
+/// than one per row. `parts` callers already fanning over (example ×
+/// group) pass that fan-out so the *total* unit count lands near
+/// `2·inner`.
+pub(crate) fn unit_chunks(rows: usize, inner: usize, parts: usize) -> usize {
+    (2 * inner).div_ceil(parts.max(1)).clamp(1, rows.max(1))
+}
+
+// ---------------------------------------------------------------------------
+// The visitor trait
+// ---------------------------------------------------------------------------
 
 /// What one backward consumer reads off the walk. The walk calls the
 /// conv hook once per example (with that example's patch matrix), the
 /// linear and instance-norm hooks once per layer with full-batch
 /// tensors; `conv_layer_start` lets implementations hoist layer-sized
-/// scratch out of the example loop.
+/// scratch out of the example loop. When the walk runs with
+/// `inner > 1` it instead calls [`conv_layer`](Self::conv_layer) once
+/// per conv layer with every example's patch matrix at hand, so the
+/// implementation can enqueue its work as parallel units — the
+/// default implementation falls back to serial
+/// [`conv_example`](Self::conv_example) calls, and every override
+/// must be bit-identical to that fallback.
 pub(crate) trait BackwardVisitor {
+    /// Layer-sized scratch hoisting hook; called once per conv layer
+    /// before any example.
     fn conv_layer_start(&mut self, _ctx: &ConvCtx) {}
+
     /// One conv layer, one example: `cols` is the `(R·g, T)` im2col
     /// patch matrix, `dy_b` the example's `(D, T)` output gradient.
     fn conv_example(&mut self, ctx: &ConvCtx, b: usize, cols: &[f32], dy_b: &[f32]);
+
+    /// Estimated per-example multiply-accumulates this visitor spends
+    /// in [`conv_example`](Self::conv_example) at this layer — the
+    /// walk adds it to the im2col fill cost when gating the parallel
+    /// path, so a layer whose *visitor* work dominates (1×1 convs with
+    /// many channels, Gram-heavy norm layers) still goes parallel even
+    /// when its fill is tiny. Default: the Eq.-4 `dW` matmul cost.
+    fn conv_flops(&self, ctx: &ConvCtx) -> usize {
+        ctx.groups * ctx.dg * ctx.rows_g * ctx.howo
+    }
+
+    /// One whole conv layer at once: `cols[b]` is example `b`'s
+    /// `(R·g, T)` patch matrix, `dy` the full `(B·D·T)` gradient
+    /// block, `inner` the thread budget for [`run_units`]. Called by
+    /// the walk instead of the per-example hook when the parallel
+    /// path engages. Implementations decompose their workload into
+    /// disjoint-output units; the contract is bit-identity with the
+    /// serial default at any `inner`.
+    fn conv_layer(&mut self, ctx: &ConvCtx, cols: &[&[f32]], dy: &[f32], inner: usize) {
+        let _ = inner;
+        let per_ex = ctx.d * ctx.howo;
+        for (b, c) in cols.iter().enumerate() {
+            self.conv_example(ctx, b, c, &dy[b * per_ex..(b + 1) * per_ex]);
+        }
+    }
+
+    /// One linear layer, full batch: `input` is the saved `(B, I)`
+    /// layer input, `dy` the `(B, J)` output gradient.
     fn linear(&mut self, ctx: &LinearCtx, input: &Tensor, dy: &Tensor);
+
     /// Per-example affine gradients of an instance-norm layer,
     /// `(B, C)` each.
     fn instance_norm(&mut self, ctx: &NormCtx, dgamma: &Tensor, dbeta: &Tensor);
@@ -120,22 +284,28 @@ pub(crate) enum ColsMode<'c> {
 
 /// Whether the walk records per-layer dy for the scaled-reuse walk.
 pub(crate) enum DyMode<'d> {
+    /// Record nothing.
     Off,
     /// Record each plan-marked parametric layer's *unscaled* dy —
     /// conv/linear per-example blocks, instance-norm per-example
     /// affine grads — into `cache` (over budget: spill).
     Fill {
+        /// The destination cache.
         cache: &'d mut DyCache,
+        /// Which layers to record (the planner's prefix marking).
         plan: &'d ReusePlan,
     },
 }
 
 /// Everything that steers one [`backward_walk`] besides the visitor.
 pub(crate) struct WalkCtl<'c, 'd> {
+    /// Patch-matrix sourcing.
     pub cols: ColsMode<'c>,
+    /// Per-layer dy recording.
     pub dy: DyMode<'d>,
-    /// Threads for the intra-microbatch parallel im2col fill; 1 =
-    /// serial. Any value produces bit-identical results.
+    /// Threads for the intra-microbatch parallel path (im2col fill +
+    /// visitor work units); 1 = serial. Any value produces
+    /// bit-identical results.
     pub inner: usize,
 }
 
@@ -150,56 +320,20 @@ impl WalkCtl<'_, '_> {
     }
 }
 
-/// Below this many elements of im2col fill work for one conv layer
-/// (missing examples × patch-matrix size), the parallel fill's spawn
-/// overhead outweighs the copy and the walk stays serial. The ghost
-/// planner's outer-vs-inner split decision reuses the same constant
-/// against the model's largest per-example layer fill — the quantity
+/// Below this much work for one conv layer — im2col fill elements
+/// (missing examples × patch-matrix size) *plus* the visitor's
+/// estimated multiply-accumulates ([`BackwardVisitor::conv_flops`]) —
+/// the parallel path's spawn overhead outweighs the win and the walk
+/// stays serial. The ghost planner's outer-vs-inner split decision
+/// reuses the same constant against the model's most expensive layer
+/// (fill + norm kernel + Eq.-4 matmul per example) — the quantity
 /// this gate sees in the one-example microbatches where inner
 /// parallelism engages — so the two gates cannot drift apart.
-pub(crate) const INNER_PAR_MIN_ELEMS: usize = 1 << 16;
-
-/// One (example, row-chunk) unit of the parallel im2col fill.
-struct ColsChunk<'a> {
-    b: usize,
-    r0: usize,
-    r1: usize,
-    dst: &'a mut [f32],
-}
-
-/// The shared gate for the intra-microbatch parallel fill, used by
-/// both walks: pre-fill the patch matrices of the examples `need[b]`
-/// when the total fill work covers the spawn overhead, otherwise
-/// `None` (the caller falls back to serial per-example im2col).
-/// `cols_elems` is one example's patch-matrix size.
-fn maybe_prefill_cols(
-    input: &Tensor,
-    kh: usize,
-    kw: usize,
-    args: ConvArgs,
-    need: Vec<bool>,
-    cols_elems: usize,
-    inner: usize,
-) -> Option<Vec<Option<Vec<f32>>>> {
-    let n_need = need.iter().filter(|x| **x).count();
-    if inner <= 1 || n_need * cols_elems < INNER_PAR_MIN_ELEMS {
-        return None;
-    }
-    // the prefill transiently owns every missing example's matrix at
-    // once, outside any budget or ledger — sane only because engine
-    // callers pass inner > 1 solely for one-example microbatches
-    // (the planner split invariant); keep that invariant local
-    debug_assert!(
-        n_need <= 1 || n_need * cols_elems <= crate::tensor::COLS_CACHE_CAP_ELEMS,
-        "parallel im2col prefill would transiently hold {} elems",
-        n_need * cols_elems
-    );
-    Some(fill_cols_parallel(input, kh, kw, args, &need, inner))
-}
+pub(crate) const INNER_PAR_MIN_WORK: usize = 1 << 16;
 
 /// im2col patch matrices for the examples `need[b]` of one conv
 /// layer, filled by `inner` threads draining (example × row-chunk)
-/// units off a shared queue — work stealing, so one huge example
+/// units off the shared queue — work stealing, so one huge example
 /// simply occupies more pulls. `im2col_rows` writes are pure and the
 /// chunks disjoint: the result is bit-identical to serial
 /// `im2col_single` calls.
@@ -219,10 +353,12 @@ fn fill_cols_parallel(
         .map(|n| n.then(|| vec![0.0f32; rows * howo]))
         .collect();
     let n_need = need.iter().filter(|n| **n).count();
-    // ~2 units per thread for stealing slack, spread over the examples
-    let chunks_per_ex = (2 * inner).div_ceil(n_need.max(1)).clamp(1, rows);
+    if n_need == 0 {
+        return out;
+    }
+    let chunks_per_ex = unit_chunks(rows, inner, n_need);
     let chunk_rows = rows.div_ceil(chunks_per_ex);
-    let mut units = Vec::with_capacity(n_need * chunks_per_ex);
+    let mut units: Vec<WorkUnit<'_>> = Vec::with_capacity(n_need * chunks_per_ex);
     for (b, slot) in out.iter_mut().enumerate() {
         if let Some(buf) = slot {
             let mut rest: &mut [f32] = buf;
@@ -231,27 +367,82 @@ fn fill_cols_parallel(
                 let r1 = (r0 + chunk_rows).min(rows);
                 let (dst, r) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * howo);
                 rest = r;
-                units.push(ColsChunk { b, r0, r1, dst });
+                units.push(Box::new(move || {
+                    tensor::im2col_rows(input, b, kh, kw, args, r0, r1, dst);
+                }));
                 r0 = r1;
             }
         }
     }
-    let queue = std::sync::Mutex::new(units);
-    let drain = || loop {
-        let Some(u) = queue.lock().unwrap().pop() else {
-            break;
-        };
-        tensor::im2col_rows(input, u.b, kh, kw, args, u.r0, u.r1, u.dst);
-    };
-    std::thread::scope(|s| {
-        for _ in 1..inner.max(1) {
-            s.spawn(drain);
-        }
-        drain(); // this thread works too
-    });
-    // end the queue's borrows of `out` before returning it
-    drop(queue);
+    run_units(units, inner, UnitKind::Fill);
     out
+}
+
+/// Rescale per-example dy blocks by the clip factors, carved into
+/// elementwise chunks on the shared queue — the parallel form of the
+/// reuse walk's `scaled[i] = s_b · dy[i]` loop (pure elementwise
+/// writes: bit-identical at any chunking).
+fn scale_blocks_parallel(
+    data: &[f32],
+    per_ex: usize,
+    scales: &[f32],
+    inner: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; data.len()];
+    let chunks = unit_chunks(per_ex, inner, scales.len());
+    let chunk_len = per_ex.div_ceil(chunks);
+    let mut units: Vec<WorkUnit<'_>> = Vec::with_capacity(scales.len() * chunks);
+    let mut rest: &mut [f32] = &mut out;
+    for (b, &s) in scales.iter().enumerate() {
+        let mut o0 = 0;
+        while o0 < per_ex {
+            let o1 = (o0 + chunk_len).min(per_ex);
+            let (dst, r) = std::mem::take(&mut rest).split_at_mut(o1 - o0);
+            rest = r;
+            let src = &data[b * per_ex + o0..b * per_ex + o1];
+            units.push(Box::new(move || {
+                for (o, v) in dst.iter_mut().zip(src) {
+                    *o = s * *v;
+                }
+            }));
+            o0 = o1;
+        }
+    }
+    run_units(units, inner, UnitKind::Visitor);
+    out
+}
+
+/// The shared gate + assembly for the parallel conv-layer path: when
+/// `inner > 1` and the layer's total work (missing-example fill +
+/// the visitor's estimated flops + `extra` rescale elements) covers
+/// the spawn overhead, pre-fill the missing patch matrices in
+/// parallel and return them; `None` means "stay serial".
+#[allow(clippy::too_many_arguments)]
+fn maybe_parallel_cols(
+    input: &Tensor,
+    kh: usize,
+    kw: usize,
+    args: ConvArgs,
+    need: &[bool],
+    cols_elems: usize,
+    visitor_work: usize,
+    extra: usize,
+    inner: usize,
+) -> Option<Vec<Option<Vec<f32>>>> {
+    let n_need = need.iter().filter(|x| **x).count();
+    if inner <= 1 || n_need * cols_elems + visitor_work + extra < INNER_PAR_MIN_WORK {
+        return None;
+    }
+    // the prefill transiently owns every missing example's matrix at
+    // once, outside any budget or ledger — sane only because engine
+    // callers pass inner > 1 solely for one-example microbatches
+    // (the planner split invariant); keep that invariant local
+    debug_assert!(
+        n_need <= 1 || n_need * cols_elems <= crate::tensor::COLS_CACHE_CAP_ELEMS,
+        "parallel im2col prefill would transiently hold {} elems",
+        n_need * cols_elems
+    );
+    Some(fill_cols_parallel(input, kh, kw, args, need, inner))
 }
 
 /// Drive one backward pass over the tape, consuming `dy` (the loss
@@ -302,47 +493,68 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                     }
                 }
                 visitor.conv_layer_start(&ctx);
-                // pre-fill the missing patch matrices in parallel when
-                // there is enough work; visitor calls stay serial in
-                // example order either way (the serial common path
-                // never builds the need vector)
-                let mut prefilled = if ctl.inner > 1 {
+                // the parallel path: pre-fill the missing patch
+                // matrices, then hand the visitor the whole layer so
+                // its own matmuls ride the unit queue; the serial path
+                // is the per-example loop below. Both are bit-identical.
+                let mut handled = false;
+                if ctl.inner > 1 {
                     let need: Vec<bool> = (0..bsz)
                         .map(|b| match &ctl.cols {
                             ColsMode::Read(cache) => cache.get(li, b).is_none(),
                             _ => true,
                         })
                         .collect();
-                    maybe_prefill_cols(
+                    if let Some(prefilled) = maybe_parallel_cols(
                         input,
                         kernel.0,
                         kernel.1,
                         args,
-                        need,
+                        &need,
                         groups * rows_g * howo,
+                        bsz * visitor.conv_flops(&ctx),
+                        0,
                         ctl.inner,
-                    )
-                } else {
-                    None
-                };
-                for b in 0..bsz {
-                    let dy_b = &dy.data[b * d * howo..(b + 1) * d * howo];
-                    let hit = match &ctl.cols {
-                        ColsMode::Read(cache) => cache.get(li, b),
-                        _ => None,
-                    };
-                    match hit {
-                        Some(c) => visitor.conv_example(&ctx, b, c, dy_b),
-                        None => {
-                            let c = prefilled
-                                .as_mut()
-                                .and_then(|p| p[b].take())
-                                .unwrap_or_else(|| {
-                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args).0
-                                });
-                            visitor.conv_example(&ctx, b, &c, dy_b);
-                            if let ColsMode::Fill(cache) = &mut ctl.cols {
-                                cache.insert(li, b, c);
+                    ) {
+                        {
+                            let colrefs: Vec<&[f32]> = (0..bsz)
+                                .map(|b| match &ctl.cols {
+                                    ColsMode::Read(cache) => cache.get(li, b).unwrap_or_else(
+                                        || prefilled[b].as_deref().expect("miss was prefilled"),
+                                    ),
+                                    _ => prefilled[b]
+                                        .as_deref()
+                                        .expect("prefill covers every example"),
+                                })
+                                .collect();
+                            visitor.conv_layer(&ctx, &colrefs, &dy.data, ctl.inner);
+                        }
+                        if let ColsMode::Fill(cache) = &mut ctl.cols {
+                            for (b, slot) in prefilled.into_iter().enumerate() {
+                                if let Some(c) = slot {
+                                    cache.insert(li, b, c);
+                                }
+                            }
+                        }
+                        handled = true;
+                    }
+                }
+                if !handled {
+                    for b in 0..bsz {
+                        let dy_b = &dy.data[b * d * howo..(b + 1) * d * howo];
+                        let hit = match &ctl.cols {
+                            ColsMode::Read(cache) => cache.get(li, b),
+                            _ => None,
+                        };
+                        match hit {
+                            Some(c) => visitor.conv_example(&ctx, b, c, dy_b),
+                            None => {
+                                let c =
+                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args).0;
+                                visitor.conv_example(&ctx, b, &c, dy_b);
+                                if let ColsMode::Fill(cache) = &mut ctl.cols {
+                                    cache.insert(li, b, c);
+                                }
                             }
                         }
                     }
@@ -433,6 +645,12 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
 /// here ([`prop_matmuls`] proves it), and a fully spilled cache
 /// degenerates to exactly the fused pipeline's reweighted walk,
 /// bit for bit.
+///
+/// With `inner > 1` the conv layers take the same parallel path as
+/// [`backward_walk`] — and for cached layers the `s_b` rescale of the
+/// saved dy blocks is itself carved into parallel units — with the
+/// same bit-identity-at-any-split contract relative to this walk's
+/// serial form.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn reuse_walk<V: BackwardVisitor>(
     spec: &ModelSpec,
@@ -506,47 +724,69 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                     howo,
                 };
                 visitor.conv_layer_start(&ctx);
-                let mut prefilled = if inner > 1 {
-                    let need: Vec<bool> =
-                        (0..bsz).map(|b| cols.get(li, b).is_none()).collect();
-                    maybe_prefill_cols(
+                let mut handled = false;
+                if inner > 1 {
+                    let need: Vec<bool> = (0..bsz).map(|b| cols.get(li, b).is_none()).collect();
+                    let rescale = if live { 0 } else { bsz * d * howo };
+                    if let Some(prefilled) = maybe_parallel_cols(
                         input,
                         kernel.0,
                         kernel.1,
                         args,
-                        need,
+                        &need,
                         groups * rows_g * howo,
+                        bsz * visitor.conv_flops(&ctx),
+                        rescale,
                         inner,
-                    )
-                } else {
-                    None
-                };
-                if !live {
-                    scaled.resize(d * howo, 0.0);
+                    ) {
+                        // dy source: the live propagated gradient, or
+                        // the cached blocks rescaled by the clip
+                        // factors (the rescale rides the unit queue)
+                        let scaled_all;
+                        let dy_block: &[f32] = if live {
+                            &dy.data
+                        } else {
+                            let (data, per_ex) = cached
+                                .expect("layer below the propagation frontier must be cached");
+                            scaled_all = scale_blocks_parallel(data, per_ex, scales, inner);
+                            &scaled_all
+                        };
+                        let colrefs: Vec<&[f32]> = (0..bsz)
+                            .map(|b| {
+                                cols.get(li, b).unwrap_or_else(|| {
+                                    prefilled[b].as_deref().expect("miss was prefilled")
+                                })
+                            })
+                            .collect();
+                        visitor.conv_layer(&ctx, &colrefs, dy_block, inner);
+                        handled = true;
+                    }
                 }
-                for b in 0..bsz {
-                    let dy_b: &[f32] = if live {
-                        &dy.data[b * d * howo..(b + 1) * d * howo]
-                    } else {
-                        let (data, per_ex) =
-                            cached.expect("layer below the propagation frontier must be cached");
-                        let s = scales[b];
-                        for (o, v) in scaled.iter_mut().zip(&data[b * per_ex..(b + 1) * per_ex])
-                        {
-                            *o = s * *v;
-                        }
-                        &scaled
-                    };
-                    match cols.get(li, b) {
-                        Some(c) => visitor.conv_example(&ctx, b, c, dy_b),
-                        None => {
-                            let c = prefilled
-                                .as_mut()
-                                .and_then(|p| p[b].take())
-                                .unwrap_or_else(|| {
-                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args).0
-                                });
-                            visitor.conv_example(&ctx, b, &c, dy_b);
+                if !handled {
+                    if !live {
+                        scaled.resize(d * howo, 0.0);
+                    }
+                    for b in 0..bsz {
+                        let dy_b: &[f32] = if live {
+                            &dy.data[b * d * howo..(b + 1) * d * howo]
+                        } else {
+                            let (data, per_ex) = cached
+                                .expect("layer below the propagation frontier must be cached");
+                            let s = scales[b];
+                            for (o, v) in
+                                scaled.iter_mut().zip(&data[b * per_ex..(b + 1) * per_ex])
+                            {
+                                *o = s * *v;
+                            }
+                            &scaled
+                        };
+                        match cols.get(li, b) {
+                            Some(c) => visitor.conv_example(&ctx, b, c, dy_b),
+                            None => {
+                                let c =
+                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args).0;
+                                visitor.conv_example(&ctx, b, &c, dy_b);
+                            }
                         }
                     }
                 }
@@ -717,5 +957,45 @@ mod tests {
         assert!(v.events.len() >= 4, "{:?}", v.events);
         assert!(v.events[0].starts_with("linear"), "{:?}", v.events);
         assert_eq!(&v.events[v.events.len() - 3..], &want_tail[..], "{:?}", v.events);
+    }
+
+    #[test]
+    fn carver_yields_disjoint_ascending_slices() {
+        let mut buf = vec![0.0f32; 10];
+        {
+            let mut c = Carver::new(&mut buf);
+            let a = c.take(1, 3);
+            let b = c.take(6, 2);
+            a.fill(1.0);
+            b.fill(2.0);
+        }
+        assert_eq!(buf, [0.0, 1.0, 1.0, 1.0, 0.0, 0.0, 2.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn run_units_executes_every_unit_at_any_inner() {
+        for inner in [1usize, 2, 5] {
+            let mut out = vec![0u32; 7];
+            {
+                let mut rest: &mut [u32] = &mut out;
+                let mut units: Vec<WorkUnit<'_>> = Vec::new();
+                for i in 0..7u32 {
+                    let (dst, r) = std::mem::take(&mut rest).split_at_mut(1);
+                    rest = r;
+                    units.push(Box::new(move || dst[0] = i + 1));
+                }
+                run_units(units, inner, UnitKind::Fill);
+            }
+            assert_eq!(out, [1, 2, 3, 4, 5, 6, 7], "inner {inner}");
+        }
+    }
+
+    #[test]
+    fn unit_chunks_targets_two_per_thread() {
+        assert_eq!(unit_chunks(100, 4, 1), 8);
+        assert_eq!(unit_chunks(100, 4, 4), 2);
+        assert_eq!(unit_chunks(3, 8, 1), 3); // never more than rows
+        assert_eq!(unit_chunks(0, 8, 1), 1); // degenerate: one empty-range chunk
+        assert_eq!(unit_chunks(100, 1, 0), 2);
     }
 }

@@ -12,15 +12,22 @@ use std::time::Instant;
 /// Summary statistics over repetitions.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Stats {
+    /// Sample mean.
     pub mean: f64,
+    /// Sample standard deviation (Bessel-corrected; 0 for one rep).
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Sample median.
     pub median: f64,
+    /// Number of samples summarized.
     pub reps: usize,
 }
 
 impl Stats {
+    /// Summarize a non-empty sample set.
     pub fn from_samples(samples: &[f64]) -> Stats {
         assert!(!samples.is_empty());
         let n = samples.len() as f64;
@@ -106,19 +113,25 @@ pub fn measure<F: FnMut()>(proto: Protocol, mut f: F) -> Stats {
 /// One row of a result table.
 #[derive(Clone, Debug)]
 pub struct Row {
+    /// First-column label of the row.
     pub label: String,
+    /// Remaining cells, one per data column.
     pub cells: Vec<String>,
 }
 
 /// A result table that renders as markdown and CSV.
 #[derive(Clone, Debug)]
 pub struct Table {
+    /// Table heading (markdown `###`).
     pub title: String,
+    /// Column headers, label column included.
     pub columns: Vec<String>,
+    /// Data rows.
     pub rows: Vec<Row>,
 }
 
 impl Table {
+    /// Empty table with the given title and column headers.
     pub fn new(title: &str, columns: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -127,6 +140,8 @@ impl Table {
         }
     }
 
+    /// Append one row; panics if the cell count disagrees with the
+    /// column headers.
     pub fn push(&mut self, label: &str, cells: Vec<String>) {
         assert_eq!(
             cells.len() + 1,
@@ -139,6 +154,7 @@ impl Table {
         });
     }
 
+    /// Render as a GitHub-flavored markdown table.
     pub fn to_markdown(&self) -> String {
         let mut out = format!("### {}\n\n", self.title);
         out.push_str(&format!("| {} |\n", self.columns.join(" | ")));
@@ -152,6 +168,7 @@ impl Table {
         out
     }
 
+    /// Render as CSV (header row first).
     pub fn to_csv(&self) -> String {
         let mut out = self.columns.join(",") + "\n";
         for r in &self.rows {

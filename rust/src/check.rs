@@ -11,7 +11,9 @@ use crate::rng::Xoshiro256pp;
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct CheckConfig {
+    /// Number of random cases to run.
     pub cases: usize,
+    /// Master seed (`CHECK_SEED` env var overrides the default).
     pub seed: u64,
 }
 

@@ -10,25 +10,34 @@ use std::collections::BTreeMap;
 /// Declarative option description (used for help and validation).
 #[derive(Clone, Debug)]
 pub struct OptSpec {
+    /// Long option name (without `--`).
     pub name: &'static str,
+    /// Whether the option consumes a value.
     pub takes_value: bool,
+    /// One-line help text.
     pub help: &'static str,
+    /// Default value seeded before parsing, if any.
     pub default: Option<&'static str>,
 }
 
 /// Parsed arguments for one (sub)command.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// Values per option, in occurrence order.
     pub values: BTreeMap<String, Vec<String>>,
+    /// Flags that were present.
     pub flags: Vec<String>,
+    /// Non-option tokens, in order.
     pub positionals: Vec<String>,
 }
 
 impl Args {
+    /// Last value given for `key` (CLI "last wins").
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).and_then(|v| v.last()).map(|s| s.as_str())
     }
 
+    /// Every value given for `key`, in order.
     pub fn get_all(&self, key: &str) -> Vec<&str> {
         self.values
             .get(key)
@@ -36,14 +45,18 @@ impl Args {
             .unwrap_or_default()
     }
 
+    /// Whether the flag was passed.
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// String value or `default`.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Integer value or `default`; a present-but-unparsable value is
+    /// an error.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -53,6 +66,8 @@ impl Args {
         }
     }
 
+    /// Number value or `default`; a present-but-unparsable value is
+    /// an error.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -62,6 +77,8 @@ impl Args {
         }
     }
 
+    /// Integer value or `default`; a present-but-unparsable value is
+    /// an error.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -74,12 +91,16 @@ impl Args {
 
 /// A command parser: known options + free positionals.
 pub struct Command {
+    /// Subcommand name.
     pub name: &'static str,
+    /// One-line description for `--help`.
     pub about: &'static str,
+    /// Known options.
     pub opts: Vec<OptSpec>,
 }
 
 impl Command {
+    /// Command with no options yet.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Command {
             name,
@@ -88,6 +109,7 @@ impl Command {
         }
     }
 
+    /// Add a value-taking option (builder style).
     pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec {
             name,
@@ -98,6 +120,7 @@ impl Command {
         self
     }
 
+    /// Add a value-taking option with a default (builder style).
     pub fn opt_default(
         mut self,
         name: &'static str,
@@ -113,6 +136,7 @@ impl Command {
         self
     }
 
+    /// Add a boolean flag (builder style).
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec {
             name,
@@ -123,6 +147,7 @@ impl Command {
         self
     }
 
+    /// Rendered `--help` text.
     pub fn help_text(&self) -> String {
         let mut out = format!("{} — {}\n\noptions:\n", self.name, self.about);
         for o in &self.opts {

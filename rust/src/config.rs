@@ -15,14 +15,20 @@ use std::collections::BTreeMap;
 /// A parsed config value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum CfgValue {
+    /// A quoted (or bare CLI) string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A homogeneous inline array.
     Arr(Vec<CfgValue>),
 }
 
 impl CfgValue {
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             CfgValue::Str(s) => Some(s),
@@ -30,6 +36,7 @@ impl CfgValue {
         }
     }
 
+    /// The integer payload, if this is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             CfgValue::Int(v) => Some(*v),
@@ -37,6 +44,7 @@ impl CfgValue {
         }
     }
 
+    /// The value as f64 (floats and integers).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             CfgValue::Float(v) => Some(*v),
@@ -45,6 +53,7 @@ impl CfgValue {
         }
     }
 
+    /// The boolean payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             CfgValue::Bool(b) => Some(*b),
@@ -60,6 +69,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Parse the TOML subset from a string.
     pub fn parse(text: &str) -> Result<Config> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
@@ -98,16 +108,19 @@ impl Config {
         Ok(Config { entries })
     }
 
+    /// Parse the TOML subset from a file.
     pub fn from_file(path: &str) -> Result<Config> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {path}"))?;
         Self::parse(&text)
     }
 
+    /// Raw value at `section.key`.
     pub fn get(&self, key: &str) -> Option<&CfgValue> {
         self.entries.get(key)
     }
 
+    /// All `section.key` names, sorted.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(|s| s.as_str())
     }
@@ -134,6 +147,7 @@ impl Config {
         Ok(())
     }
 
+    /// String at `key`, or `default` when missing/mistyped.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key)
             .and_then(|v| v.as_str())
@@ -141,18 +155,22 @@ impl Config {
             .to_string()
     }
 
+    /// Integer at `key`, or `default` when missing/mistyped.
     pub fn i64_or(&self, key: &str, default: i64) -> i64 {
         self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
     }
 
+    /// Number at `key`, or `default` when missing/mistyped.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
     }
 
+    /// Bool at `key`, or `default` when missing/mistyped.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
     }
 
+    /// String at `key`, or an error naming the missing key.
     pub fn require_str(&self, key: &str) -> Result<String> {
         self.get(key)
             .and_then(|v| v.as_str())
@@ -245,6 +263,14 @@ pub struct ExperimentConfig {
     /// over the sum. Contradictory with `ghost_pipeline = "twopass"`,
     /// which runs cache-free.
     pub ghost_budget_mb: usize,
+    /// Intra-microbatch parallelism switch (`[train] inner_parallel`,
+    /// default `true`): whether spare threads beyond one worker per
+    /// example go to the shared work-unit queue inside each microbatch
+    /// (im2col fill + visitor matmuls — the `B = 1` thread-scaling
+    /// lever). Consulted by `ghostnorm` and `crb`; results are
+    /// bit-identical either way, only the thread layout changes. Turn
+    /// off on oversubscribed hosts.
+    pub inner_parallel: bool,
     /// Debug export: write one batch's per-example gradient matrix to
     /// this CSV path after training (`[train] grad_dump`). Requires a
     /// materializing strategy; rejected with `ghostnorm`.
@@ -257,22 +283,33 @@ pub struct ExperimentConfig {
     /// Artifact names (from the manifest); required only by the pjrt
     /// backend.
     pub step_artifact: Option<String>,
+    /// Init artifact name (pjrt).
     pub init_artifact: Option<String>,
+    /// Eval artifact name (pjrt).
     pub eval_artifact: Option<String>,
+    /// Where lowered artifacts live.
     pub artifacts_dir: String,
-    /// Training hyper-parameters.
+    /// Training steps to run.
     pub steps: usize,
+    /// Minibatch size.
     pub batch_size: usize,
+    /// SGD learning rate.
     pub lr: f32,
+    /// DP clip norm `C`.
     pub clip_norm: f32,
+    /// DP noise multiplier `σ`.
     pub noise_multiplier: f32,
+    /// Target δ for the ε report.
     pub target_delta: f64,
-    /// Data synthesis.
+    /// Synthetic dataset size.
     pub dataset_size: usize,
+    /// Synthetic label classes.
     pub num_classes: usize,
+    /// Master experiment seed.
     pub seed: u64,
-    /// Reporting cadence.
+    /// Eval cadence in steps (0 = never).
     pub eval_every: usize,
+    /// Log cadence in steps.
     pub log_every: usize,
 }
 
@@ -307,6 +344,15 @@ fn string_or(cfg: &Config, key: &str, default: &str) -> Result<String> {
     }
 }
 
+fn bool_or_strict(cfg: &Config, key: &str, default: bool) -> Result<bool> {
+    match cfg.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .with_context(|| format!("config `{key}` must be a boolean, got {v:?}")),
+    }
+}
+
 fn opt_string(cfg: &Config, key: &str) -> Result<Option<String>> {
     match cfg.get(key) {
         None => Ok(None),
@@ -318,6 +364,8 @@ fn opt_string(cfg: &Config, key: &str) -> Result<Option<String>> {
 }
 
 impl ExperimentConfig {
+    /// Build the typed view, validating types and rejecting
+    /// contradictory settings at config time.
     pub fn from_config(cfg: &Config) -> Result<ExperimentConfig> {
         let backend = string_or(cfg, "train.backend", "auto")?;
         if !matches!(backend.as_str(), "auto" | "native" | "pjrt") {
@@ -389,6 +437,7 @@ impl ExperimentConfig {
             ghost_norms: parse_ghost_norms(cfg)?,
             ghost_pipeline,
             ghost_budget_mb: ghost_budget_mb as usize,
+            inner_parallel: bool_or_strict(cfg, "train.inner_parallel", true)?,
             grad_dump,
             threads: int_or(cfg, "train.threads", 0)?.max(0) as usize,
             model: native_model_config(cfg)?,
@@ -730,6 +779,20 @@ name = "synthetic # not a comment"
         )
         .unwrap();
         assert!(ExperimentConfig::from_config(&c).is_ok());
+    }
+
+    #[test]
+    fn inner_parallel_knob() {
+        // default on
+        let c = Config::parse("[train]\nstrategy = \"crb\"\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).unwrap().inner_parallel);
+        // explicit off
+        let c = Config::parse("[train]\ninner_parallel = false\n").unwrap();
+        assert!(!ExperimentConfig::from_config(&c).unwrap().inner_parallel);
+        // mistyped values are config errors, not defaults
+        let c = Config::parse("[train]\ninner_parallel = 1\n").unwrap();
+        let err = format!("{:#}", ExperimentConfig::from_config(&c).unwrap_err());
+        assert!(err.contains("inner_parallel"), "{err}");
     }
 
     #[test]

@@ -9,7 +9,9 @@ use std::path::Path;
 /// A restorable training state snapshot.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
+    /// Step counter at snapshot time.
     pub step: usize,
+    /// Flat parameter vector.
     pub theta: Vec<f32>,
     /// The step artifact this theta belongs to — restoring into a
     /// different artifact is almost always a bug, so `load` verifies.

@@ -25,6 +25,7 @@ pub struct BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// Empty queue with a positive capacity bound.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "queue capacity must be positive");
         BoundedQueue {
@@ -117,10 +118,12 @@ impl<T> BoundedQueue<T> {
         self.not_full.notify_all();
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().items.len()
     }
 
+    /// Whether the queue is empty right now.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

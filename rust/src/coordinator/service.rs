@@ -50,7 +50,9 @@ use std::time::{Duration, Instant};
 /// One example submitted for per-example gradient evaluation.
 #[derive(Clone, Debug)]
 pub struct GradRequest {
+    /// Flat `(C·H·W)` pixels.
     pub image: Vec<f32>,
+    /// Integer class label.
     pub label: i32,
 }
 
@@ -72,7 +74,9 @@ pub struct GradResponse {
 pub struct ServiceConfig {
     /// A `grads` artifact name; its manifest batch is the batch size.
     pub artifact: String,
+    /// Where lowered artifacts live.
     pub artifacts_dir: String,
+    /// Executor thread count.
     pub workers: usize,
     /// Flush a partial batch after this long.
     pub max_wait: Duration,
@@ -99,11 +103,16 @@ pub struct NativeServiceConfig {
     pub model: ModelSpec,
     /// Maximum dynamic batch; deadline flushes may run smaller.
     pub batch: usize,
+    /// Executor thread count.
     pub workers: usize,
     /// Ghost-engine worker threads *per service worker* (0 = cores).
     pub threads: usize,
     /// Conv-layer norm-path policy (see [`GhostMode`]).
     pub mode: GhostMode,
+    /// Whether spare ghost-engine threads may take the
+    /// intra-microbatch parallel path (`[train] inner_parallel`);
+    /// results are bit-identical either way.
+    pub inner_parallel: bool,
     /// Flush a partial batch after this long.
     pub max_wait: Duration,
     /// Request-queue capacity (backpressure bound).
@@ -123,6 +132,7 @@ enum WorkerSpec {
         model: ModelSpec,
         threads: usize,
         mode: GhostMode,
+        inner_parallel: bool,
     },
 }
 
@@ -153,6 +163,7 @@ pub struct ServiceHandle {
     requests: Arc<BoundedQueue<QueuedRequest>>,
     pending: Arc<PendingTable>,
     next_id: AtomicU64,
+    /// Service metrics (queue depth, batch sizes, latency).
     pub metrics: Arc<metrics::Registry>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
@@ -227,6 +238,7 @@ impl ServiceHandle {
                 model: cfg.model,
                 threads: cfg.threads,
                 mode: cfg.mode,
+                inner_parallel: cfg.inner_parallel,
             },
             theta,
         )
@@ -347,6 +359,7 @@ impl ServiceHandle {
         &self.label
     }
 
+    /// The frozen parameter vector gradients are taken at.
     pub fn theta(&self) -> &[f32] {
         &self.theta
     }
@@ -458,9 +471,10 @@ fn run_worker(
             model,
             threads,
             mode,
+            inner_parallel,
         } => {
             let planner = match ClippedStepPlanner::new(&model, &mode) {
-                Ok(p) => p,
+                Ok(p) => p.with_inner_parallel(inner_parallel),
                 Err(e) => {
                     complete_all(pending, batches, format!("worker init: {e:#}"));
                     return;

@@ -21,20 +21,26 @@ use std::time::Instant;
 /// One logged training point.
 #[derive(Clone, Debug)]
 pub struct LossPoint {
+    /// Step index.
     pub step: usize,
+    /// Mean minibatch loss.
     pub loss: f32,
     /// Mean pre-clip per-example gradient norm over the batch.
     pub mean_norm: f32,
     /// Fraction of examples actually clipped (norm > C).
     pub clipped_frac: f32,
+    /// Privacy spent so far at the configured δ.
     pub epsilon: f64,
 }
 
 /// One eval checkpoint.
 #[derive(Clone, Debug)]
 pub struct EvalPoint {
+    /// Step index.
     pub step: usize,
+    /// Mean eval loss.
     pub loss: f32,
+    /// Eval accuracy in [0, 1].
     pub accuracy: f32,
 }
 
@@ -42,12 +48,19 @@ pub struct EvalPoint {
 /// this).
 #[derive(Clone, Debug, Default)]
 pub struct TrainReport {
+    /// Logged loss points.
     pub losses: Vec<LossPoint>,
+    /// Logged eval points.
     pub evals: Vec<EvalPoint>,
+    /// Final ε at the configured δ.
     pub final_epsilon: f64,
+    /// The δ the ε is reported at.
     pub final_delta: f64,
+    /// Steps run.
     pub steps: usize,
+    /// Wall-clock seconds of the run.
     pub wall_secs: f64,
+    /// Throughput (`steps / wall_secs`).
     pub steps_per_sec: f64,
 }
 
@@ -94,6 +107,7 @@ pub struct Trainer {
     metrics: metrics::Registry,
     /// When set, checkpoints land at `<dir>/ckpt_<step>`.
     pub checkpoint_dir: Option<String>,
+    /// Checkpoint cadence in steps (0 = never).
     pub checkpoint_every: usize,
     /// Silence per-step stdout (benches, tests).
     pub quiet: bool,
@@ -157,6 +171,7 @@ impl Trainer {
         })
     }
 
+    /// The trainer's metrics registry.
     pub fn metrics(&self) -> &metrics::Registry {
         &self.metrics
     }

@@ -17,14 +17,20 @@ use crate::tensor::Tensor;
 
 /// A full in-memory dataset of images + integer labels.
 pub struct Dataset {
+    /// Flat `(N, C, H, W)` pixel data.
     pub images: Vec<f32>,
+    /// Integer class labels, one per example.
     pub labels: Vec<i32>,
+    /// Example count `N`.
     pub n: usize,
+    /// Per-example shape `(C, H, W)`.
     pub shape: (usize, usize, usize),
+    /// Number of distinct classes.
     pub num_classes: usize,
 }
 
 impl Dataset {
+    /// Borrow example `i`'s pixels + label.
     pub fn example(&self, i: usize) -> (&[f32], i32) {
         let sz = self.shape.0 * self.shape.1 * self.shape.2;
         (&self.images[i * sz..(i + 1) * sz], self.labels[i])
@@ -51,6 +57,8 @@ impl Dataset {
 pub struct GaussianImages;
 
 impl GaussianImages {
+    /// `n` i.i.d. N(0,1) images with uniform labels, deterministic by
+    /// seed.
     pub fn generate(
         n: usize,
         shape: (usize, usize, usize),
@@ -81,6 +89,8 @@ pub struct PatternedClasses {
 }
 
 impl PatternedClasses {
+    /// `n` template+noise images with their class labels,
+    /// deterministic by seed.
     pub fn generate(
         &self,
         n: usize,
@@ -142,6 +152,8 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Batcher over `n` examples with the given sampling scheme,
+    /// deterministic by seed.
     pub fn new(n: usize, batch: usize, sampling: Sampling, seed: u64) -> Batcher {
         assert!(batch <= n, "batch {batch} > dataset {n}");
         let mut rng = Xoshiro256pp::seed_from_u64(seed);

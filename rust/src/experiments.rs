@@ -13,6 +13,7 @@
 //! excluded (warmup pass), exactly as the paper excludes cuDNN
 //! autotuning by averaging over batches.
 
+use crate::backward::{prop_matmuls, visitor_units};
 use crate::bench::{measure, Protocol, Stats, Table};
 use crate::ghost::{self, ClippedStepPlanner, GhostMode, GhostPipeline};
 use crate::jsonx::{self, Value};
@@ -229,6 +230,7 @@ pub fn run_ablation(registry: &Registry, n_batches: usize, proto: Protocol) -> R
 pub struct NativeSweepOptions {
     /// Batches per measurement (paper: 20).
     pub batches: usize,
+    /// Warmup/reps protocol.
     pub proto: Protocol,
     /// Worker threads (0 = one per core).
     pub threads: usize,
@@ -241,14 +243,17 @@ pub struct NativeSweepOptions {
 }
 
 impl NativeSweepOptions {
-    /// The default batch axis. Leads with the small-batch B=4 point:
-    /// that row is where the intra-microbatch inner split matters
-    /// (outer worker-per-range alone leaves cores idle), so its
-    /// `ghostnorm_reuse` cell is the regression guard for that win.
+    /// The default batch axis. Leads with the `B = 1` and `B = 4`
+    /// small-batch points: those rows are where the intra-microbatch
+    /// inner split matters (outer worker-per-range alone leaves all
+    /// but `B` cores idle — at `B = 1`, all but one), so their
+    /// `ghostnorm*` cells — and the `visitor_units` counter column —
+    /// are the regression guard for that win.
     pub fn default_batch_sizes() -> Vec<usize> {
-        vec![4, 8, 16]
+        vec![1, 4, 8, 16]
     }
 
+    /// The full sweep at the default rate axis and clip norm.
     pub fn standard(
         batches: usize,
         proto: Protocol,
@@ -266,14 +271,15 @@ impl NativeSweepOptions {
     }
 
     /// Tiny sweep for CI smoke runs (`bench-strategies --quick`):
-    /// one rate, one batch size, one rep — every strategy (including
-    /// ghostnorm) still exercised end to end.
+    /// one rate, one rep, the `B = 1` and `B = 4` points — every
+    /// strategy (including ghostnorm) and the inner visitor split
+    /// still exercised end to end.
     pub fn quick() -> NativeSweepOptions {
         NativeSweepOptions {
             batches: 2,
             proto: Protocol { warmup: 0, reps: 1 },
             threads: 0,
-            batch_sizes: vec![4],
+            batch_sizes: vec![1, 4],
             rates: vec![1.0],
             clip: 1.0,
         }
@@ -284,16 +290,35 @@ impl NativeSweepOptions {
 /// record behind `BENCH_strategies.json`.
 #[derive(Clone, Debug)]
 pub struct SweepCell {
+    /// Strategy column name (`naive`/`multi`/`crb`/`ghostnorm`, or the
+    /// `ghostnorm_twopass`/`ghostnorm_reuse` comparison cells).
     pub strategy: &'static str,
+    /// Batch size of the point.
     pub batch: usize,
+    /// Channel-rate (model-dims) axis value.
     pub rate: f64,
+    /// Model parameter count.
     pub params: usize,
+    /// Timing summary over the protocol's reps.
     pub stats: Stats,
+    /// `stats.mean` normalized per example.
     pub ns_per_example: f64,
     /// Peak working set (bytes above the pre-generated inputs) during
     /// the measurement, from the tensor allocation counter — tensors
     /// plus the ghost engine's registered scratch.
     pub peak_bytes: u64,
+    /// dy-propagation ops spent during the cell's measurement (the
+    /// [`prop_matmuls`](crate::backward::prop_matmuls) delta; 0 for
+    /// the oracle-kernel strategies, which never enter the shared
+    /// walk) — how the JSON shows `ghostnorm_reuse` skipping the
+    /// reweighted walk's propagation chain.
+    pub prop_matmuls: u64,
+    /// Visitor work units drained off the intra-microbatch parallel
+    /// queue during the measurement (the
+    /// [`visitor_units`](crate::backward::visitor_units) delta) —
+    /// nonzero exactly when the inner split engaged, e.g. the `B = 1`
+    /// rows on a multi-core host.
+    pub visitor_units: u64,
 }
 
 /// Native strategy sweep — the artifact-free miniature of Figure 1,
@@ -311,8 +336,10 @@ pub struct SweepCell {
 /// regression guard for the single-tape fusion. A sixth,
 /// `ghostnorm_reuse`, times the scaled-reuse pipeline the same way:
 /// reuse must come in at or under fused ns/example (it deletes the
-/// reweighted walk's propagation matmuls), and the B=4 row shows the
-/// intra-microbatch inner split.
+/// reweighted walk's propagation matmuls — visible in the JSON's
+/// `prop_matmuls` counter column), and the B=1 / B=4 rows show the
+/// intra-microbatch inner split (`visitor_units` > 0 on multi-core
+/// hosts).
 ///
 /// Caveat for readers comparing against the paper's Figure 1: the
 /// native `naive` and `multi` strategies share the same (oracle)
@@ -357,7 +384,7 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
             }
             let mut row = Vec::new();
             for strategy in Strategy::ALL {
-                let (stats, peak_bytes) = time_native_cell(
+                let (stats, peak_bytes, props, units) = time_native_cell(
                     &spec,
                     strategy,
                     GhostPipeline::Fused,
@@ -373,12 +400,14 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                     params: p,
                     ns_per_example: stats.mean / (opts.batches * batch) as f64 * 1e9,
                     peak_bytes,
+                    prop_matmuls: props,
+                    visitor_units: units,
                     stats,
                 });
             }
             // fused-vs-twopass comparison: same model, same inputs,
             // legacy pipeline
-            let (stats, peak_bytes) = time_native_cell(
+            let (stats, peak_bytes, props, units) = time_native_cell(
                 &spec,
                 Strategy::GhostNorm,
                 GhostPipeline::TwoPass,
@@ -394,11 +423,13 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                 params: p,
                 ns_per_example: stats.mean / (opts.batches * batch) as f64 * 1e9,
                 peak_bytes,
+                prop_matmuls: props,
+                visitor_units: units,
                 stats,
             });
             // scaled-reuse comparison: same model, same inputs, dy
             // blocks rescaled instead of re-propagated
-            let (stats, peak_bytes) = time_native_cell(
+            let (stats, peak_bytes, props, units) = time_native_cell(
                 &spec,
                 Strategy::GhostNorm,
                 GhostPipeline::FusedReuse,
@@ -414,6 +445,8 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                 params: p,
                 ns_per_example: stats.mean / (opts.batches * batch) as f64 * 1e9,
                 peak_bytes,
+                prop_matmuls: props,
+                visitor_units: units,
                 stats,
             });
             table.push(&format!("{rate:.1}"), row);
@@ -426,7 +459,10 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
 
 /// Time one (model, strategy) cell producing the clipped batch
 /// gradient over the pre-generated batches; also report the peak
-/// tensor working set above the inputs, via the allocation counter.
+/// tensor working set above the inputs (allocation counter) and the
+/// cell's dy-propagation / parallel-visitor-unit counter deltas
+/// (spanning warmup + reps — cells run sequentially, so the global
+/// counters are attributable).
 fn time_native_cell(
     spec: &ModelSpec,
     strategy: Strategy,
@@ -434,10 +470,12 @@ fn time_native_cell(
     opts: &NativeSweepOptions,
     theta: &[f32],
     batches: &[(Tensor, Vec<i32>)],
-) -> Result<(Stats, u64)> {
+) -> Result<(Stats, u64, u64, u64)> {
     let stats;
     tensor::alloc::reset_peak();
     let base = tensor::alloc::live_elems();
+    let props0 = prop_matmuls();
+    let units0 = visitor_units();
     if strategy == Strategy::GhostNorm {
         let planner = ClippedStepPlanner::new(spec, &GhostMode::default())?.with_pipeline(pipeline);
         stats = measure(opts.proto, || {
@@ -458,7 +496,7 @@ fn time_native_cell(
         });
     }
     let peak = (tensor::alloc::peak_elems() - base).max(0) as u64 * 4;
-    Ok((stats, peak))
+    Ok((stats, peak, prop_matmuls() - props0, visitor_units() - units0))
 }
 
 /// Render the sweep as the `BENCH_strategies.json` document — the
@@ -492,6 +530,8 @@ pub fn sweep_to_json(opts: &NativeSweepOptions, cells: &[SweepCell]) -> Value {
                             ("std_s", jsonx::num(c.stats.std)),
                             ("ns_per_example", jsonx::num(c.ns_per_example)),
                             ("peak_bytes", jsonx::num(c.peak_bytes as f64)),
+                            ("prop_matmuls", jsonx::num(c.prop_matmuls as f64)),
+                            ("visitor_units", jsonx::num(c.visitor_units as f64)),
                         ])
                     })
                     .collect(),
@@ -535,11 +575,11 @@ mod tests {
 
     #[test]
     fn default_sweep_leads_with_the_small_batch_point() {
-        // the B=4 cell is the inner-split regression guard — it must
-        // stay in the default axis (and the quick CI sweep) — while
-        // explicitly requested batch lists are honored verbatim
-        assert_eq!(NativeSweepOptions::default_batch_sizes(), vec![4, 8, 16]);
-        assert_eq!(NativeSweepOptions::quick().batch_sizes, vec![4]);
+        // the B=1 and B=4 cells are the inner-split regression guard —
+        // they must stay in the default axis (and the quick CI sweep)
+        // — while explicitly requested batch lists are honored verbatim
+        assert_eq!(NativeSweepOptions::default_batch_sizes(), vec![1, 4, 8, 16]);
+        assert_eq!(NativeSweepOptions::quick().batch_sizes, vec![1, 4]);
         let proto = Protocol { warmup: 0, reps: 1 };
         let opts = NativeSweepOptions::standard(2, proto, 1, vec![16]);
         assert_eq!(opts.batch_sizes, vec![16]);
@@ -553,8 +593,10 @@ mod tests {
     fn quick_sweep_json_roundtrips() {
         let opts = NativeSweepOptions::quick();
         let (tables, cells) = run_native_sweep(&opts).unwrap();
-        assert_eq!(tables.len(), 1);
-        assert_eq!(cells.len(), Strategy::ALL.len() + 2);
+        // one table per batch size (B=1 and B=4), 6 cells per
+        // (batch, rate) point: 4 strategies + twopass + reuse
+        assert_eq!(tables.len(), 2);
+        assert_eq!(cells.len(), 2 * (Strategy::ALL.len() + 2));
         assert!(cells.iter().any(|c| c.strategy == "ghostnorm"));
         assert!(
             cells.iter().any(|c| c.strategy == "ghostnorm_twopass"),
@@ -582,6 +624,8 @@ mod tests {
             assert!(r.get("strategy").and_then(|v| v.as_str()).is_some());
             assert!(r.get("ns_per_example").and_then(|v| v.as_f64()).is_some());
             assert!(r.get("peak_bytes").and_then(|v| v.as_f64()).is_some());
+            assert!(r.get("prop_matmuls").and_then(|v| v.as_f64()).is_some());
+            assert!(r.get("visitor_units").and_then(|v| v.as_f64()).is_some());
         }
     }
 }

@@ -49,9 +49,18 @@
 //! `tests/ghost_reuse_differential.rs`. The
 //! [`ClippedStepPlanner`] splits one unified scratch budget between
 //! the dy and cols caches per microbatch and decides the
-//! outer-vs-inner thread split (worker microbatches × parallel
-//! im2col fill within each) from `B`, the thread count and the
-//! per-example im2col cost.
+//! outer-vs-inner thread split (worker microbatches × intra-microbatch
+//! threads within each) from `B`, the thread count and the
+//! per-example work — im2col fill *plus* visitor FLOPs. Inner threads
+//! drain one shared work-unit queue that covers the whole
+//! per-example workload: the im2col fill, the Eq.-4 `dW` matmuls,
+//! the direct/Gram norm kernels, the clipped-sum accumulation and
+//! the scaled-reuse dy rescale — so at `B = 1` (the regime where
+//! ghost norms pay off most, per Lee & Kifer) every strategy still
+//! scales past one core. Results are bit-identical at any
+//! (outer × inner) split for the fused/two-pass pipelines; the
+//! [`visitor_units`](crate::backward::visitor_units) counter makes
+//! the parallelism observable.
 //!
 //! Gradient memory is `O(workers · P + layer temporaries)`,
 //! independent of the batch size; only activations and the bounded

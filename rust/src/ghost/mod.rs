@@ -8,11 +8,11 @@
 //! subsystem computes exactly those, with gradient memory independent
 //! of the batch size:
 //!
-//! * [`planner`] — the [`ClippedStepPlanner`]: per-conv-layer choice
+//! * `planner` — the [`ClippedStepPlanner`]: per-conv-layer choice
 //!   between the Gram-matrix ("ghost", Goodfellow arXiv:1510.01799 /
 //!   Lee & Kifer arXiv:2009.03106) and direct layer-local norm
 //!   kernels, decided from model geometry.
-//! * [`engine`] — the pipeline: [`perex_norms`] (norms only, the
+//! * `engine` — the pipeline: [`perex_norms`] (norms only, the
 //!   coordinator service's norm query) and [`clipped_step`] (by
 //!   default the fused single-tape pipeline — one forward+tape per
 //!   microbatch whose norm walk feeds the reweighted walk through a
@@ -25,7 +25,9 @@
 //!   visitors over the shared reverse layer-walk in
 //!   [`crate::backward`]; the planner splits one unified scratch
 //!   budget between the dy and cols caches and picks the
-//!   outer-vs-inner thread split per batch.
+//!   outer-vs-inner thread split per batch — with spare inner threads
+//!   reaching past the im2col fill into the visitor matmuls
+//!   themselves via the walk's shared work-unit queue.
 //!
 //! Wired in as [`crate::strategies::Strategy::GhostNorm`]: config
 //! `[train] strategy = "ghostnorm"` (+ `ghost_norms` for the per-layer
@@ -33,8 +35,8 @@
 //! step, the coordinator's norm-only service mode, and the
 //! `bench-strategies` sweep.
 
-pub mod engine;
-pub mod planner;
+pub(crate) mod engine;
+pub(crate) mod planner;
 
 pub use engine::{clipped_step, perex_norms, GhostOutcome};
 pub use planner::{

@@ -43,6 +43,7 @@ pub enum NormPath {
 }
 
 impl NormPath {
+    /// The log/bench spelling.
     pub fn name(&self) -> &'static str {
         match self {
             NormPath::Ghost => "ghost",
@@ -56,11 +57,14 @@ impl NormPath {
 pub enum PlanChoice {
     /// Let the planner pick by estimated cost.
     Auto,
+    /// Force the Gram-matrix ghost kernel.
     Ghost,
+    /// Force the direct per-example `dW` kernel.
     Direct,
 }
 
 impl PlanChoice {
+    /// Parse the config spelling (`auto` / `ghost` / `direct`).
     pub fn parse(s: &str) -> Result<PlanChoice> {
         match s {
             "auto" => Ok(PlanChoice::Auto),
@@ -76,7 +80,10 @@ impl PlanChoice {
 /// leaves the remaining convs on `Auto`).
 #[derive(Clone, Debug)]
 pub enum GhostMode {
+    /// One policy for every conv layer.
     Global(PlanChoice),
+    /// Per-conv-layer overrides, in conv order (a shorter list leaves
+    /// the remaining convs on `Auto`).
     PerConv(Vec<PlanChoice>),
 }
 
@@ -91,9 +98,11 @@ impl Default for GhostMode {
 pub struct LayerPlan {
     /// Index into `spec.layers`.
     pub layer_index: usize,
+    /// The chosen kernel.
     pub path: NormPath,
-    /// Estimated multiply-accumulates per example for each path.
+    /// Estimated multiply-accumulates per example for the ghost path.
     pub ghost_cost: u64,
+    /// Estimated multiply-accumulates per example for the direct path.
     pub direct_cost: u64,
     /// `(T, D/groups, R)` — the geometry the decision is made on.
     pub geometry: (usize, usize, usize),
@@ -142,6 +151,7 @@ impl GhostPipeline {
         }
     }
 
+    /// The config spelling.
     pub fn name(&self) -> &'static str {
         match self {
             GhostPipeline::Fused => "fused",
@@ -209,21 +219,24 @@ impl ReusePlan {
 /// each microbatch's im2col fill.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SplitPlan {
+    /// Worker microbatches (contiguous example ranges).
     pub outer: usize,
+    /// Intra-microbatch threads for the walk's work-unit queue.
     pub inner: usize,
 }
 
-/// Below this much im2col fill work in the model's *largest* conv
-/// layer (per example), the inner split's thread-spawn overhead
-/// outweighs the fill and the planner keeps the microbatch walk
-/// serial. Same constant as the walk's per-layer gate
-/// ([`crate::backward::walk::INNER_PAR_MIN_ELEMS`]), and compared to
-/// the same quantity: `inner > 1` only ever happens with one-example
-/// microbatches (`outer == B < threads`), where the walk's gate sees
-/// exactly one example's fill per layer — so a model the planner
-/// splits inward is guaranteed at least one layer that actually
-/// fills in parallel.
-const INNER_SPLIT_MIN_COLS_ELEMS: usize = crate::backward::walk::INNER_PAR_MIN_ELEMS;
+/// Below this much work in the model's most expensive conv layer —
+/// per-example im2col fill elements *plus* the visitor's estimated
+/// multiply-accumulates (norm kernel + the Eq.-4 reweighted matmul) —
+/// the inner split's thread-spawn overhead outweighs the win and the
+/// planner keeps the microbatch walk serial. Same constant as the
+/// walk's per-layer gate (`crate::backward::walk::INNER_PAR_MIN_WORK`),
+/// and compared to the same quantity: `inner > 1` only ever happens
+/// with one-example microbatches (`outer == B < threads`), where the
+/// walk's gate sees exactly one example's fill + visitor work per
+/// layer — so a model the planner splits inward is guaranteed at
+/// least one layer that genuinely goes parallel.
+const INNER_SPLIT_MIN_WORK: usize = crate::backward::walk::INNER_PAR_MIN_WORK;
 
 /// Per-layer norm-path plan for one model; built once, consulted by
 /// every ghost-engine pass.
@@ -241,9 +254,19 @@ pub struct ClippedStepPlanner {
     /// Per-layer im2col footprint per example (`C·KH·KW·T`; convs
     /// only).
     cols_elems: Vec<usize>,
+    /// The most expensive single layer's per-example inner-split work
+    /// (im2col fill + chosen norm kernel + the Eq.-4 reweighted
+    /// matmul) — what [`split`](ClippedStepPlanner::split) gates the
+    /// inner thread budget on.
+    max_inner_work: usize,
+    /// Master switch for the intra-microbatch parallel path
+    /// (`[train] inner_parallel`); off forces `inner = 1` in every
+    /// split.
+    inner_parallel: bool,
 }
 
 impl ClippedStepPlanner {
+    /// Planner at the default unified scratch budget.
     pub fn new(spec: &ModelSpec, mode: &GhostMode) -> Result<ClippedStepPlanner> {
         Self::with_budget(spec, mode, UNIFIED_SCRATCH_BUDGET_ELEMS)
     }
@@ -276,6 +299,7 @@ impl ClippedStepPlanner {
         let mut paths = Vec::with_capacity(spec.layers.len());
         let mut dy_elems = Vec::with_capacity(spec.layers.len());
         let mut cols_elems = Vec::with_capacity(spec.layers.len());
+        let mut max_inner_work = 0usize;
         for l in &spec.layers {
             match l {
                 LayerSpec::Conv2d {
@@ -339,7 +363,18 @@ impl ClippedStepPlanner {
                         geometry: (t, dg, rows),
                     }));
                     dy_elems.push(out_ch * t);
-                    cols_elems.push(in_ch * kernel.0 * kernel.1 * t);
+                    let cols = in_ch * kernel.0 * kernel.1 * t;
+                    cols_elems.push(cols);
+                    // per-example inner-split work for this layer: the
+                    // im2col fill, the chosen norm kernel and the
+                    // Eq.-4 reweighted matmul (≈ direct_cost) — the
+                    // quantity the walk's parallel gate sees
+                    let norm_cost = match path {
+                        NormPath::Ghost => ghost_cost,
+                        NormPath::Direct => direct_cost,
+                    };
+                    max_inner_work =
+                        max_inner_work.max(cols + (direct_cost + norm_cost) as usize);
                     conv_i += 1;
                     h = ho;
                     w = wo;
@@ -375,6 +410,8 @@ impl ClippedStepPlanner {
             scratch_budget_elems,
             dy_elems,
             cols_elems,
+            max_inner_work,
+            inner_parallel: true,
         })
     }
 
@@ -393,12 +430,31 @@ impl ClippedStepPlanner {
         self
     }
 
+    /// Same layer choices, intra-microbatch parallelism forced off
+    /// (builder style) — every [`split`](ClippedStepPlanner::split)
+    /// then answers `inner = 1`. The `[train] inner_parallel = false`
+    /// escape hatch for oversubscribed hosts and scheduling-sensitive
+    /// debugging (results are bit-identical either way; only the
+    /// thread layout changes).
+    pub fn with_inner_parallel(mut self, enabled: bool) -> ClippedStepPlanner {
+        self.inner_parallel = enabled;
+        self
+    }
+
+    /// The configured execution pipeline.
     pub fn pipeline(&self) -> GhostPipeline {
         self.pipeline
     }
 
+    /// The unified per-worker scratch ceiling, f32-equivalent elements.
     pub fn scratch_budget(&self) -> usize {
         self.scratch_budget_elems
+    }
+
+    /// Whether [`split`](ClippedStepPlanner::split) may assign spare
+    /// threads to the intra-microbatch parallel path.
+    pub fn inner_parallel(&self) -> bool {
+        self.inner_parallel
     }
 
     /// The pipeline `ghost_pipeline = "auto"` resolves to: scaled
@@ -470,18 +526,25 @@ impl ClippedStepPlanner {
 
     /// Spread `threads` workers over a `bsz`-example batch: one worker
     /// microbatch per outer range (at most one per example, as
-    /// before), and any spare threads assigned to each microbatch's
-    /// intra-microbatch im2col fill — unless the model's per-example
-    /// im2col work is too small to cover the spawn overhead.
+    /// before), and any spare threads assigned to the intra-microbatch
+    /// parallel path — the im2col fill *and* the per-example visitor
+    /// workload (Eq.-4 `dW` matmuls, direct/Gram norm kernels, the
+    /// clipped-sum accumulation, the scaled-reuse dy rescale) — unless
+    /// the model's most expensive layer (fill + visitor FLOPs per
+    /// example) is too small to cover the spawn overhead, or
+    /// [`with_inner_parallel`](ClippedStepPlanner::with_inner_parallel)
+    /// turned the inner path off.
     pub fn split(&self, bsz: usize, threads: usize) -> SplitPlan {
         let t = threads.max(1);
         let outer = t.min(bsz.max(1));
-        // decide on the largest single layer's fill: that is what the
+        // decide on the most expensive single layer: that is what the
         // walk's per-layer gate will see (inner > 1 implies
         // one-example microbatches), so splitting inward guarantees
-        // at least one layer genuinely parallelizes
-        let max_layer_cols = self.cols_elems.iter().copied().max().unwrap_or(0);
-        let inner = if outer < t && max_layer_cols >= INNER_SPLIT_MIN_COLS_ELEMS {
+        // at least one layer genuinely goes parallel
+        let inner = if self.inner_parallel
+            && outer < t
+            && self.max_inner_work >= INNER_SPLIT_MIN_WORK
+        {
             t / outer
         } else {
             1
@@ -489,6 +552,7 @@ impl ClippedStepPlanner {
         SplitPlan { outer, inner }
     }
 
+    /// The model this plan was made for.
     pub fn spec(&self) -> &ModelSpec {
         &self.spec
     }
@@ -507,6 +571,7 @@ impl ClippedStepPlanner {
         self.paths.iter().flatten()
     }
 
+    /// How many conv layers chose the ghost path.
     pub fn ghost_layer_count(&self) -> usize {
         self.plans().filter(|p| p.path == NormPath::Ghost).count()
     }
@@ -746,10 +811,19 @@ mod tests {
         // threads ≤ B: all outer, no inner split
         assert_eq!(p.split(16, 4), SplitPlan { outer: 4, inner: 1 });
         assert_eq!(p.split(4, 4), SplitPlan { outer: 4, inner: 1 });
-        // small B, many threads: spare cores go to the im2col fill
+        // small B, many threads: spare cores go to the inner path
+        // (im2col fill + visitor work units)
         assert_eq!(p.split(4, 16), SplitPlan { outer: 4, inner: 4 });
         assert_eq!(p.split(1, 6), SplitPlan { outer: 1, inner: 6 });
-        // a model with almost no im2col work keeps the walk serial
+        // the escape hatch pins the walk serial at any thread count
+        let off = ClippedStepPlanner::new(&spec, &GhostMode::default())
+            .unwrap()
+            .with_inner_parallel(false);
+        assert!(!off.inner_parallel());
+        assert_eq!(off.split(1, 6), SplitPlan { outer: 1, inner: 1 });
+        assert_eq!(off.split(4, 16), SplitPlan { outer: 4, inner: 1 });
+        // a model with almost no per-layer work (fill + visitor
+        // flops both tiny) keeps the walk serial
         let tiny = ModelSpec {
             arch: "tiny".into(),
             layers: vec![

@@ -11,17 +11,26 @@ use std::fmt;
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object, key order preserved.
     Obj(Vec<(String, Value)>),
 }
 
+/// Parse failure with the byte position it occurred at.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset into the input.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -36,6 +45,7 @@ impl std::error::Error for ParseError {}
 impl Value {
     // -- typed accessors ------------------------------------------------
 
+    /// Object field lookup (`None` for non-objects/missing keys).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -43,6 +53,7 @@ impl Value {
         }
     }
 
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -50,6 +61,7 @@ impl Value {
         }
     }
 
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -57,6 +69,7 @@ impl Value {
         }
     }
 
+    /// The number as an integer, if it has no fractional part.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Num(n) if n.fract() == 0.0 => Some(*n as i64),
@@ -64,10 +77,12 @@ impl Value {
         }
     }
 
+    /// The number as a usize, if integral and non-negative.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().and_then(|v| usize::try_from(v).ok())
     }
 
+    /// The boolean payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -75,6 +90,7 @@ impl Value {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -82,6 +98,7 @@ impl Value {
         }
     }
 
+    /// The key/value pairs, if this is an object.
     pub fn as_obj(&self) -> Option<&[(String, Value)]> {
         match self {
             Value::Obj(o) => Some(o),
@@ -119,6 +136,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
+/// Parse one JSON document (whole input must be consumed).
 pub fn parse(input: &str) -> Result<Value, ParseError> {
     let mut p = Parser {
         bytes: input.as_bytes(),
@@ -407,14 +425,17 @@ pub fn obj(kv: Vec<(&str, Value)>) -> Value {
     Value::Obj(kv.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Number literal.
 pub fn num(n: f64) -> Value {
     Value::Num(n)
 }
 
+/// String literal.
 pub fn s(v: &str) -> Value {
     Value::Str(v.to_string())
 }
 
+/// Array literal.
 pub fn arr(v: Vec<Value>) -> Value {
     Value::Arr(v)
 }

@@ -38,6 +38,12 @@
 // rewrites would obscure them. CI runs `clippy -- -D warnings`, so
 // these blanket allows keep the lint meaningful everywhere else.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+// Every public item carries docs; the CI `cargo doc --no-deps` job
+// runs with RUSTDOCFLAGS="-D warnings", so an undocumented public
+// item or a broken intra-doc link fails the build — the rustdoc and
+// docs/ARCHITECTURE.md are the architecture book, and this is what
+// keeps it from rotting.
+#![warn(missing_docs)]
 
 pub mod backward;
 pub mod bench;

@@ -118,6 +118,10 @@ fn cmd_train(rest: &[String]) -> Result<()> {
             "ghostnorm unified scratch budget in MB (overrides config)",
         )
         .opt(
+            "inner-parallel",
+            "true | false: spend spare threads inside each microbatch (overrides config)",
+        )
+        .opt(
             "grad-dump",
             "write one batch's per-example gradients to this CSV after training",
         )
@@ -148,6 +152,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         ("ghost-norms", "train.ghost_norms"),
         ("ghost-pipeline", "train.ghost_pipeline"),
         ("ghost-budget-mb", "train.ghost_budget_mb"),
+        ("inner-parallel", "train.inner_parallel"),
         ("grad-dump", "train.grad_dump"),
         ("threads", "train.threads"),
         ("step-artifact", "train.step_artifact"),
@@ -365,6 +370,7 @@ fn serve_start_native(
             workers,
             threads: exp.threads,
             mode: exp.ghost_norms.clone(),
+            inner_parallel: exp.inner_parallel,
             max_wait,
             queue_capacity: 256,
         },
@@ -445,11 +451,11 @@ fn cmd_bench_strategies(rest: &[String]) -> Result<()> {
     .opt_default("batches", "20", "batches per measurement (paper: 20)")
     .opt_default("reps", "3", "repetitions (paper: 10)")
     .opt_default("warmup", "1", "warmup measurements")
-    .opt("batch", "batch size; repeat for a sweep (default: 4 8 16)")
+    .opt("batch", "batch size; repeat for a sweep (default: 1 4 8 16)")
     .opt_default("threads", "0", "worker threads (0 = all cores)")
     .opt_default("report-dir", "reports", "md/csv output dir")
     .opt_default("json", "BENCH_strategies.json", "machine-readable results path")
-    .flag("quick", "tiny CI smoke sweep (1 rate, B=4, 1 rep)");
+    .flag("quick", "tiny CI smoke sweep (1 rate, B=1 and B=4, 1 rep)");
     let args = cmd.parse(rest)?;
     let opts = if args.has_flag("quick") {
         NativeSweepOptions::quick()

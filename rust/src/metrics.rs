@@ -16,14 +16,17 @@ pub struct Counter {
 }
 
 impl Counter {
+    /// Add one.
     pub fn inc(&self) {
         self.v.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Add `n`.
     pub fn add(&self, n: u64) {
         self.v.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.v.load(Ordering::Relaxed)
     }
@@ -36,10 +39,12 @@ pub struct Gauge {
 }
 
 impl Gauge {
+    /// Overwrite the value.
     pub fn set(&self, v: f64) {
         self.bits.store(v.to_bits(), Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> f64 {
         f64::from_bits(self.bits.load(Ordering::Relaxed))
     }
@@ -65,6 +70,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Record one latency observation.
     pub fn observe_secs(&self, secs: f64) {
         let us = (secs * 1e6).max(0.0) as u64;
         let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(HIST_BUCKETS - 1);
@@ -73,10 +79,12 @@ impl Histogram {
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Observations recorded so far.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean latency in seconds (0 when empty).
     pub fn mean_secs(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -117,6 +125,7 @@ struct RegistryInner {
 }
 
 impl Registry {
+    /// The counter named `name` (created on first use).
     pub fn counter(&self, name: &str) -> Arc<Counter> {
         self.inner
             .lock()
@@ -127,6 +136,7 @@ impl Registry {
             .clone()
     }
 
+    /// The gauge named `name` (created on first use).
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
         self.inner
             .lock()
@@ -137,6 +147,7 @@ impl Registry {
             .clone()
     }
 
+    /// The histogram named `name` (created on first use).
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         self.inner
             .lock()
@@ -177,6 +188,7 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing; the drop records into `hist`.
     pub fn start(hist: Arc<Histogram>) -> Timer {
         Timer {
             hist,

@@ -17,35 +17,54 @@ use anyhow::{bail, Context, Result};
 /// One layer of a sequential CNN (PyTorch semantics throughout).
 #[derive(Clone, Debug, PartialEq)]
 pub enum LayerSpec {
+    /// 2D convolution (stride/padding/dilation/groups as in PyTorch).
     Conv2d {
+        /// Input channels `C`.
         in_ch: usize,
+        /// Output channels `D`.
         out_ch: usize,
+        /// Kernel size `(KH, KW)`.
         kernel: (usize, usize),
+        /// Stride `(SH, SW)`.
         stride: (usize, usize),
+        /// Zero padding `(PH, PW)`.
         padding: (usize, usize),
+        /// Dilation `(DH, DW)`.
         dilation: (usize, usize),
+        /// Group count `g` (`C` and `D` both divisible by it).
         groups: usize,
     },
+    /// Fully-connected layer.
     Linear {
+        /// Input features `I`.
         in_dim: usize,
+        /// Output features `J`.
         out_dim: usize,
     },
     /// Per-example, per-channel normalization with affine params — the
     /// paper's §4.2 batch-norm alternative (batch norm mixes examples
     /// and is excluded).
     InstanceNorm {
+        /// Channel count `C` (gamma/beta are `(C,)` each).
         channels: usize,
+        /// Variance floor.
         eps: f32,
     },
+    /// Elementwise max(0, x).
     Relu,
+    /// Max pooling.
     MaxPool2d {
+        /// Pool window `(WH, WW)`.
         window: (usize, usize),
+        /// Stride `(SH, SW)`.
         stride: (usize, usize),
     },
+    /// Collapse `(B, C, H, W)` to `(B, C·H·W)`.
     Flatten,
 }
 
 impl LayerSpec {
+    /// Whether this layer carries trainable parameters.
     pub fn is_parametric(&self) -> bool {
         matches!(
             self,
@@ -73,9 +92,13 @@ impl LayerSpec {
 /// A full architecture plus its provenance config.
 #[derive(Clone, Debug)]
 pub struct ModelSpec {
+    /// Architecture family name (`toy_cnn` / `alexnet` / ...).
     pub arch: String,
+    /// The sequential layer list.
     pub layers: Vec<LayerSpec>,
+    /// Per-example input shape `(C, H, W)`.
     pub input_shape: (usize, usize, usize),
+    /// Classifier output width.
     pub num_classes: usize,
 }
 
@@ -472,6 +495,7 @@ fn build_vgg16(
 /// with the jax side, entirely in rust — the independent check on the
 /// PJRT artifacts, and a native implementation of the paper's math.
 pub struct ModelOracle {
+    /// The architecture being differentiated.
     pub spec: ModelSpec,
 }
 
@@ -485,6 +509,7 @@ enum Saved {
 }
 
 impl ModelOracle {
+    /// Oracle over `spec`.
     pub fn new(spec: ModelSpec) -> Self {
         Self { spec }
     }

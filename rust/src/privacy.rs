@@ -106,10 +106,13 @@ pub struct DpSgdAccountant {
     orders: Vec<u64>,
     /// Composed RDP per order.
     rdp: Vec<f64>,
+    /// Steps accounted so far.
     pub steps: u64,
 }
 
 impl DpSgdAccountant {
+    /// Fresh accountant for sampling rate `q` and noise multiplier
+    /// `sigma`.
     pub fn new(q: f64, sigma: f64) -> DpSgdAccountant {
         let orders = default_orders();
         let rdp = vec![0.0; orders.len()];

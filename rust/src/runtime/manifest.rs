@@ -16,11 +16,14 @@ use std::path::{Path, PathBuf};
 /// contains these two; anything else is a compile-path bug).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
 impl DType {
+    /// Parse the manifest spelling (`"float32"` / `"int32"`).
     pub fn parse(s: &str) -> Result<DType> {
         match s {
             "float32" => Ok(DType::F32),
@@ -29,6 +32,7 @@ impl DType {
         }
     }
 
+    /// The manifest spelling.
     pub fn name(&self) -> &'static str {
         match self {
             DType::F32 => "float32",
@@ -40,11 +44,14 @@ impl DType {
 /// Shape + dtype of one artifact input or output.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TensorSig {
+    /// Dimension sizes.
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: DType,
 }
 
 impl TensorSig {
+    /// Product of the dimensions.
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
     }
@@ -66,16 +73,21 @@ impl TensorSig {
 /// One named parameter slice inside the flat theta vector.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PackEntry {
+    /// Parameter name on the python side.
     pub name: String,
+    /// Start offset in flat theta.
     pub offset: usize,
+    /// Parameter tensor shape.
     pub shape: Vec<usize>,
 }
 
 impl PackEntry {
+    /// Element count of the slice.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Whether the slice is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -84,6 +96,7 @@ impl PackEntry {
 /// Everything the manifest records about one artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Artifact name (the manifest key).
     pub name: String,
     /// HLO text file, relative to the artifacts dir.
     pub file: String,
@@ -97,8 +110,11 @@ pub struct ArtifactMeta {
     /// The python-side model config dict, kept as raw json so
     /// `models::ModelSpec::from_manifest` can rebuild the layer list.
     pub model: Value,
+    /// Static batch size, when the artifact has one.
     pub batch: Option<usize>,
+    /// Input signatures, in call order.
     pub inputs: Vec<TensorSig>,
+    /// Output signatures, in result order.
     pub outputs: Vec<TensorSig>,
     /// Total flat parameter count (model artifacts only).
     pub param_count: Option<usize>,
@@ -196,7 +212,9 @@ impl ArtifactMeta {
 /// The parsed manifest: artifact name → metadata.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest (and HLO files) live in.
     pub dir: PathBuf,
+    /// Artifact metadata by name.
     pub artifacts: BTreeMap<String, ArtifactMeta>,
 }
 
@@ -226,6 +244,7 @@ impl Manifest {
         Ok(Manifest { dir, artifacts })
     }
 
+    /// Metadata for `name`, with a run-`make artifacts` hint on miss.
     pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
         self.artifacts.get(name).with_context(|| {
             format!(

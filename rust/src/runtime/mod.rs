@@ -42,6 +42,7 @@ use std::path::Path;
 /// What one training step reports back to the trainer.
 #[derive(Clone, Debug)]
 pub struct StepOutcome {
+    /// Mean per-example loss of the minibatch.
     pub mean_loss: f32,
     /// Pre-clip per-example gradient norms (B,) — the quantity DP-SGD
     /// clips; the trainer logs their distribution.
@@ -127,6 +128,7 @@ pub fn open_backend(cfg: &ExperimentConfig) -> Result<Box<dyn Backend>> {
             &cfg.ghost_pipeline,
             cfg.ghost_budget_elems(),
             cfg.batch_size,
+            cfg.inner_parallel,
         )?;
         Ok(Box::new(backend))
     }

@@ -49,6 +49,8 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Backend with the default ghost plan (auto layer paths, fused
+    /// pipeline, default budget, inner parallelism on).
     pub fn new(
         spec: ModelSpec,
         strategy: Strategy,
@@ -87,6 +89,7 @@ impl NativeBackend {
             "fused",
             UNIFIED_SCRATCH_BUDGET_ELEMS,
             0,
+            true,
         )
     }
 
@@ -94,8 +97,10 @@ impl NativeBackend {
     /// pipeline (`[train] ghost_pipeline` — `"auto"` lets the planner
     /// pick scaled reuse when a `batch`-example microbatch's whole dy
     /// footprint fits `budget_elems`, else the bit-exact fused
-    /// pipeline) and the unified scratch budget. Both are ignored for
-    /// materializing strategies.
+    /// pipeline) and the unified scratch budget (both ignored for
+    /// materializing strategies), plus the `[train] inner_parallel`
+    /// switch for the intra-microbatch parallel path (consulted by
+    /// `ghostnorm` *and* `crb`; results are bit-identical either way).
     #[allow(clippy::too_many_arguments)]
     pub fn with_ghost_opts(
         spec: ModelSpec,
@@ -108,10 +113,12 @@ impl NativeBackend {
         pipeline: &str,
         budget_elems: usize,
         batch: usize,
+        inner_parallel: bool,
     ) -> Result<NativeBackend> {
         let p = spec.param_count();
         let planner = if strategy == Strategy::GhostNorm {
-            let pl = ClippedStepPlanner::with_budget(&spec, mode, budget_elems)?;
+            let pl = ClippedStepPlanner::with_budget(&spec, mode, budget_elems)?
+                .with_inner_parallel(inner_parallel);
             let pipe = if pipeline == "auto" {
                 // the caches are per worker: decide on the per-worker
                 // microbatch, not the whole batch
@@ -123,8 +130,10 @@ impl NativeBackend {
         } else {
             None
         };
+        let mut runner = StrategyRunner::new(spec, strategy, threads);
+        runner.inner_parallel = inner_parallel;
         Ok(NativeBackend {
-            runner: StrategyRunner::new(spec, strategy, threads),
+            runner,
             planner,
             theta: vec![0.0; p],
             clip,
@@ -133,6 +142,7 @@ impl NativeBackend {
         })
     }
 
+    /// The configured strategy.
     pub fn strategy(&self) -> Strategy {
         self.runner.strategy
     }
@@ -400,6 +410,7 @@ mod tests {
             "auto",
             crate::ghost::UNIFIED_SCRATCH_BUDGET_ELEMS,
             8,
+            true,
         )
         .unwrap();
         assert_eq!(
@@ -418,6 +429,7 @@ mod tests {
             "auto",
             16,
             8,
+            true,
         )
         .unwrap();
         assert_eq!(be.ghost_planner().unwrap().pipeline(), GhostPipeline::Fused);
@@ -433,6 +445,7 @@ mod tests {
             "twopass",
             crate::ghost::UNIFIED_SCRATCH_BUDGET_ELEMS,
             8,
+            true,
         )
         .unwrap();
         assert_eq!(
@@ -450,6 +463,7 @@ mod tests {
             "warp",
             crate::ghost::UNIFIED_SCRATCH_BUDGET_ELEMS,
             8,
+            true,
         )
         .is_err());
     }

@@ -40,6 +40,7 @@ impl Registry {
         Self::with_manifest(manifest)
     }
 
+    /// Registry over an already-parsed manifest.
     pub fn with_manifest(manifest: Manifest) -> Result<Registry> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Registry {
@@ -50,14 +51,17 @@ impl Registry {
         })
     }
 
+    /// The manifest this registry serves.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (for logs).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// (artifact, seconds) compile log so far.
     pub fn compile_log(&self) -> Vec<(String, f64)> {
         self.compile_log.borrow().clone()
     }
@@ -200,12 +204,14 @@ pub struct DeviceStep {
     clip: xla::Literal,
     sigma: xla::Literal,
     lr: xla::Literal,
+    /// Steps executed since construction.
     pub steps_run: usize,
 }
 
 /// Per-step scalar results of [`DeviceStep::step`].
 #[derive(Clone, Debug)]
 pub struct StepResult {
+    /// Mean per-example loss of the minibatch.
     pub mean_loss: f32,
     /// Pre-clip per-example gradient norms (B,) — the quantity DP-SGD
     /// clips; the trainer logs their distribution.
@@ -213,6 +219,7 @@ pub struct StepResult {
 }
 
 impl DeviceStep {
+    /// Compile + wrap one step artifact with its hyper-parameters.
     pub fn new(
         registry: &Registry,
         name: &str,
@@ -241,6 +248,7 @@ impl DeviceStep {
         })
     }
 
+    /// The artifact's manifest metadata.
     pub fn meta(&self) -> &ArtifactMeta {
         &self.meta
     }
@@ -312,6 +320,8 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Backend over `registry` configured by `cfg` (requires a step
+    /// artifact).
     pub fn new(registry: Registry, cfg: &ExperimentConfig) -> Result<PjrtBackend> {
         let step_name = cfg
             .step_artifact

@@ -13,11 +13,24 @@ use anyhow::{bail, Context, Result};
 /// A host tensor: shape plus typed storage.
 #[derive(Clone, Debug, PartialEq)]
 pub enum HostValue {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
+    /// An f32 array.
+    F32 {
+        /// Dimension sizes (empty = scalar).
+        shape: Vec<usize>,
+        /// Row-major elements.
+        data: Vec<f32>,
+    },
+    /// An i32 array.
+    I32 {
+        /// Dimension sizes (empty = scalar).
+        shape: Vec<usize>,
+        /// Row-major elements.
+        data: Vec<i32>,
+    },
 }
 
 impl HostValue {
+    /// Rank-0 f32 value.
     pub fn scalar_f32(v: f32) -> HostValue {
         HostValue::F32 {
             shape: vec![],
@@ -25,6 +38,7 @@ impl HostValue {
         }
     }
 
+    /// Rank-0 i32 value.
     pub fn scalar_i32(v: i32) -> HostValue {
         HostValue::I32 {
             shape: vec![],
@@ -32,6 +46,7 @@ impl HostValue {
         }
     }
 
+    /// f32 array (length must match the shape product).
     pub fn f32(shape: &[usize], data: Vec<f32>) -> HostValue {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         HostValue::F32 {
@@ -40,6 +55,7 @@ impl HostValue {
         }
     }
 
+    /// i32 array (length must match the shape product).
     pub fn i32(shape: &[usize], data: Vec<i32>) -> HostValue {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         HostValue::I32 {
@@ -48,12 +64,14 @@ impl HostValue {
         }
     }
 
+    /// Dimension sizes.
     pub fn shape(&self) -> &[usize] {
         match self {
             HostValue::F32 { shape, .. } | HostValue::I32 { shape, .. } => shape,
         }
     }
 
+    /// Element type.
     pub fn dtype(&self) -> DType {
         match self {
             HostValue::F32 { .. } => DType::F32,
@@ -61,6 +79,7 @@ impl HostValue {
         }
     }
 
+    /// Total element count.
     pub fn element_count(&self) -> usize {
         match self {
             HostValue::F32 { data, .. } => data.len(),
@@ -76,6 +95,7 @@ impl HostValue {
         }
     }
 
+    /// Borrow i32 storage (errors on f32 values).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             HostValue::I32 { data, .. } => Ok(data),

@@ -27,14 +27,18 @@
 //! count), and must agree with [`ModelOracle`] within 1e-4 — enforced
 //! by `tests/native_backend.rs`.
 //!
-//! The crb backward itself is one visitor
-//! ([`PerExGradVisitor`](crate::backward::visitors::PerExGradVisitor))
-//! over the shared reverse layer-walk in [`crate::backward`] — the
-//! same walk the ghost engine's norm and clipped-sum passes ride.
+//! The crb backward itself is one visitor (`PerExGradVisitor`) over
+//! the shared reverse layer-walk in [`crate::backward`] — the same
+//! walk the ghost engine's norm and clipped-sum passes ride,
+//! including its intra-microbatch parallel path: spare threads beyond
+//! one worker per example go to the walk's work-unit queue (im2col
+//! fill + the Eq.-4 matmuls), bit-identical at any split.
 
 use crate::backward::{
-    backward_walk, conv_args, forward_with_tape, layer_params, PerExGradVisitor, WalkCtl,
+    backward_walk, conv_args, forward_with_tape, layer_params, ColsMode, DyMode,
+    PerExGradVisitor, WalkCtl,
 };
+use crate::ghost::planner::{ClippedStepPlanner, GhostMode, SplitPlan};
 use crate::models::{LayerSpec, ModelOracle, ModelSpec};
 use crate::tensor::{self, Tensor};
 use anyhow::{anyhow, bail, Result};
@@ -42,8 +46,11 @@ use anyhow::{anyhow, bail, Result};
 /// Which per-example gradient computation to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
+    /// One independent backward pass per example (paper baseline).
     Naive,
+    /// One batched backward per worker sub-batch, per-example reads.
     Multi,
+    /// The paper's chain-rule-based Eq.-4 / Algorithm-2 formulation.
     Crb,
     /// Ghost-norm engine: per-example norms from layer activations and
     /// backprops (Goodfellow 2015), clipped batch gradient from a
@@ -67,6 +74,7 @@ impl Strategy {
     /// accepts).
     pub const MATERIALIZING: [Strategy; 3] = [Strategy::Naive, Strategy::Multi, Strategy::Crb];
 
+    /// Parse a strategy name (the config/CLI spelling).
     pub fn parse(s: &str) -> Result<Strategy> {
         match s {
             "naive" => Ok(Strategy::Naive),
@@ -77,6 +85,7 @@ impl Strategy {
         }
     }
 
+    /// The config/CLI spelling.
     pub fn name(&self) -> &'static str {
         match self {
             Strategy::Naive => "naive",
@@ -95,24 +104,54 @@ impl Strategy {
 /// Executes one strategy for a [`ModelSpec`], multi-threaded across
 /// the batch.
 pub struct StrategyRunner {
+    /// The model being differentiated.
     pub spec: ModelSpec,
+    /// Which per-example gradient computation to run.
     pub strategy: Strategy,
     /// Worker threads; 0 means one per available core (capped at the
-    /// batch size either way).
+    /// batch size for the outer fan-out — for `crb`, spare threads
+    /// beyond one-per-example go to the intra-microbatch parallel
+    /// visitor path instead of idling).
     pub threads: usize,
+    /// Whether `crb` may spend spare threads on the intra-microbatch
+    /// parallel path (the shared work-unit queue the ghost engine's
+    /// walks also ride); results are bit-identical either way. On by
+    /// default; `[train] inner_parallel = false` turns it off.
+    pub inner_parallel: bool,
 }
 
 impl StrategyRunner {
+    /// Runner with the default thread policy (inner parallelism on).
     pub fn new(spec: ModelSpec, strategy: Strategy, threads: usize) -> StrategyRunner {
         StrategyRunner {
             spec,
             strategy,
             threads,
+            inner_parallel: true,
         }
     }
 
     fn resolve_threads(&self, bsz: usize) -> usize {
         resolve_threads(self.threads).clamp(1, bsz.max(1))
+    }
+
+    /// The (outer workers × inner threads) split for one `bsz` batch:
+    /// `crb` rides the ghost planner's one split rule (so the two
+    /// consumers of the shared walk cannot drift apart); everything
+    /// else stays outer-only — `naive`/`multi` run oracle kernels the
+    /// unit queue does not reach.
+    fn split(&self, bsz: usize) -> SplitPlan {
+        let t = resolve_threads(self.threads);
+        if self.strategy == Strategy::Crb && self.inner_parallel {
+            ClippedStepPlanner::new(&self.spec, &GhostMode::default())
+                .expect("the default (auto) ghost plan cannot fail on a valid spec")
+                .split(bsz, t)
+        } else {
+            SplitPlan {
+                outer: t.clamp(1, bsz.max(1)),
+                inner: 1,
+            }
+        }
     }
 
     /// Per-example gradients `(B, P)` plus per-example losses `(B,)`,
@@ -137,7 +176,8 @@ impl StrategyRunner {
         }
         let mut grads = vec![0.0f32; bsz * p];
         let mut losses = vec![0.0f32; bsz];
-        let ranges = split_ranges(bsz, self.resolve_threads(bsz));
+        let split = self.split(bsz);
+        let ranges = split_ranges(bsz, split.outer);
         let spec = &self.spec;
         let strategy = self.strategy;
         std::thread::scope(|s| -> Result<()> {
@@ -153,7 +193,18 @@ impl StrategyRunner {
                 let (lchunk, lrest) = std::mem::take(&mut loss_rest).split_at_mut(n);
                 loss_rest = lrest;
                 handles.push(s.spawn(move || {
-                    run_range(spec, strategy, theta, x, y, start, end, gchunk, lchunk)
+                    run_range(
+                        spec,
+                        strategy,
+                        theta,
+                        x,
+                        y,
+                        start,
+                        end,
+                        split.inner,
+                        gchunk,
+                        lchunk,
+                    )
                 }));
             }
             for h in handles {
@@ -251,6 +302,7 @@ fn run_range(
     y: &[i32],
     start: usize,
     end: usize,
+    inner: usize,
     grads_out: &mut [f32],
     losses_out: &mut [f32],
 ) -> Result<()> {
@@ -275,7 +327,7 @@ fn run_range(
         }
         Strategy::Crb => {
             let xb = example_slice(x, start, end);
-            let (g, l) = crb_perex_grads(spec, theta, &xb, &y[start..end]);
+            let (g, l) = crb_perex_grads(spec, theta, &xb, &y[start..end], inner);
             grads_out.copy_from_slice(&g.data);
             losses_out.copy_from_slice(&l);
         }
@@ -333,13 +385,18 @@ pub fn fast_forward(spec: &ModelSpec, theta: &[f32], x: &Tensor) -> Tensor {
 
 /// Per-example gradients via the chain-rule decomposition with the
 /// Algorithm-2 im2col kernels: the native `crb` strategy, as the
-/// [`PerExGradVisitor`] over the shared backward walk. Same output
-/// contract as [`ModelOracle::perex_grads`].
+/// `PerExGradVisitor` over the shared backward walk. Same output
+/// contract as `ModelOracle::perex_grads`. With `inner > 1` the conv
+/// layers' im2col fill *and* the Eq.-4 `dW` matmuls are carved into
+/// work units drained by `inner` threads — bit-identical to the
+/// serial walk at any value (disjoint output slices, unchanged
+/// per-element arithmetic).
 pub fn crb_perex_grads(
     spec: &ModelSpec,
     theta: &[f32],
     x: &Tensor,
     labels: &[i32],
+    inner: usize,
 ) -> (Tensor, Vec<f32>) {
     let bsz = x.shape[0];
     let p_total = spec.param_count();
@@ -352,7 +409,12 @@ pub fn crb_perex_grads(
         grads: &mut pergrads.data,
         p_total,
     };
-    backward_walk(spec, theta, &saved, dy, &mut visitor, WalkCtl::off());
+    let ctl = WalkCtl {
+        cols: ColsMode::Off,
+        dy: DyMode::Off,
+        inner,
+    };
+    backward_walk(spec, theta, &saved, dy, &mut visitor, ctl);
     (pergrads, losses)
 }
 
@@ -451,6 +513,31 @@ mod tests {
                 assert_eq!(base.1, got.1);
             }
         }
+    }
+
+    /// crb's inner visitor split (spare threads beyond one worker per
+    /// example) must not change a single bit — the per-unit matmuls
+    /// are row-range restrictions of the serial calls.
+    #[test]
+    fn crb_inner_split_is_bit_identical() {
+        // big kernels on a wide input: over the inner-split work gate
+        let spec = ModelSpec::toy_cnn(2, 16, 1.0, 5, "none", (8, 32, 32), 10).unwrap();
+        let (theta, x, y) = random_problem(&spec, 2, 77);
+        let base = StrategyRunner::new(spec.clone(), Strategy::Crb, 1)
+            .perex_grads(&theta, &x, &y)
+            .unwrap();
+        for threads in [4usize, 8] {
+            let got = StrategyRunner::new(spec.clone(), Strategy::Crb, threads)
+                .perex_grads(&theta, &x, &y)
+                .unwrap();
+            assert_eq!(base.0.data, got.0.data, "inner split drifted at {threads} threads");
+            assert_eq!(base.1, got.1);
+        }
+        // the escape hatch reproduces the same bits serially
+        let mut off = StrategyRunner::new(spec, Strategy::Crb, 8);
+        off.inner_parallel = false;
+        let got = off.perex_grads(&theta, &x, &y).unwrap();
+        assert_eq!(base.0.data, got.0.data);
     }
 
     #[test]

@@ -66,6 +66,8 @@ pub mod alloc {
         elems: usize,
     }
 
+    /// Register `elems` f32-equivalent elements of scratch until the
+    /// returned guard drops.
     pub fn track_scratch(elems: usize) -> ScratchGuard {
         on_alloc(elems);
         ScratchGuard { elems }
@@ -106,6 +108,7 @@ pub struct ColsCache {
 }
 
 impl ColsCache {
+    /// Empty cache with an element budget.
     pub fn new(cap_elems: usize) -> ColsCache {
         ColsCache {
             cap: cap_elems,
@@ -132,6 +135,7 @@ impl ColsCache {
         }
     }
 
+    /// Example `b`'s cached patch matrix for layer `li`, if kept.
     pub fn get(&self, li: usize, b: usize) -> Option<&[f32]> {
         self.map.get(&(li, b)).map(|v| v.as_slice())
     }
@@ -162,12 +166,22 @@ impl Drop for ColsCache {
 pub enum DyEntry {
     /// Per-example activation-gradient blocks, batch-major: conv
     /// layers store `(D·T)` per example, linear layers `(J)`.
-    Blocks { data: Vec<f32>, per_ex: usize },
+    Blocks {
+        /// The `(B · per_ex)` flat block.
+        data: Vec<f32>,
+        /// Elements per example.
+        per_ex: usize,
+    },
     /// Instance-norm per-example affine gradients, `(B, C)` each —
     /// cached instead of `dy` because they are what the visitor
     /// consumes, they are linear in `dy`, and they are `H·W` times
     /// smaller.
-    Affine { dgamma: Vec<f32>, dbeta: Vec<f32> },
+    Affine {
+        /// Per-example gamma gradients, `(B, C)`.
+        dgamma: Vec<f32>,
+        /// Per-example beta gradients, `(B, C)`.
+        dbeta: Vec<f32>,
+    },
 }
 
 /// Budget-bounded cache of per-layer activation gradients, keyed by
@@ -189,6 +203,7 @@ pub struct DyCache {
 }
 
 impl DyCache {
+    /// Empty cache with an element budget.
     pub fn new(cap_elems: usize) -> DyCache {
         DyCache {
             cap: cap_elems,
@@ -238,6 +253,7 @@ impl DyCache {
         self.insert(li, DyEntry::Affine { dgamma, dbeta });
     }
 
+    /// Layer `li`'s cached entry, if kept.
     pub fn get(&self, li: usize) -> Option<&DyEntry> {
         self.map.get(&li)
     }
@@ -262,7 +278,9 @@ impl Drop for DyCache {
 /// A dense, row-major f32 tensor.
 #[derive(Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major elements (`shape.iter().product()` of them).
     pub data: Vec<f32>,
 }
 
@@ -282,6 +300,7 @@ impl Drop for Tensor {
 }
 
 impl Tensor {
+    /// Zero-filled tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
         alloc::on_alloc(n);
@@ -291,6 +310,7 @@ impl Tensor {
         }
     }
 
+    /// Wrap existing data (length must match the shape product).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -305,14 +325,17 @@ impl Tensor {
         }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
@@ -324,23 +347,27 @@ impl Tensor {
         ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
     }
 
+    /// Read a 4D element.
     #[inline]
     pub fn get4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
         self.data[self.at4(a, b, c, d)]
     }
 
+    /// Write a 4D element.
     #[inline]
     pub fn set4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
         let i = self.at4(a, b, c, d);
         self.data[i] = v;
     }
 
+    /// Accumulate into a 4D element.
     #[inline]
     pub fn add4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
         let i = self.at4(a, b, c, d);
         self.data[i] += v;
     }
 
+    /// Same data, new shape (element counts must agree).
     pub fn reshape(mut self, shape: &[usize]) -> Self {
         assert_eq!(shape.iter().product::<usize>(), self.data.len());
         self.shape = shape.to_vec();
@@ -366,9 +393,13 @@ impl Tensor {
 /// Convolution hyper-parameters (PyTorch semantics).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ConvArgs {
+    /// Stride `(SH, SW)`.
     pub stride: (usize, usize),
+    /// Zero padding `(PH, PW)`.
     pub padding: (usize, usize),
+    /// Dilation `(DH, DW)`.
     pub dilation: (usize, usize),
+    /// Group count.
     pub groups: usize,
 }
 
@@ -857,6 +888,30 @@ pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
             }
         }
     }
+}
+
+/// Output rows `[i0, i1)` of `C (m×n) += A (m×k) · Bᵀ` — exactly
+/// [`matmul_nt`] restricted to a row range of `A` and `C`. Every
+/// output element is an independent dot of an `A` row and a `B` row
+/// (blocked over `k` inside [`matmul_nt`]), so a row-range call
+/// performs bit-identical arithmetic to the corresponding rows of the
+/// full call: carving one matmul into disjoint row-range units and
+/// running them in any order, on any thread, reproduces the full
+/// result bit for bit. This is the kernel the backward walk's
+/// parallel visitor units are built from; the
+/// `matmul_nt_rows_bitwise_matches_full_call` unit test pins the
+/// equivalence. `c_rows` holds exactly rows `[i0, i1)` — `(i1-i0)·n`
+/// elements.
+pub fn matmul_nt_rows(
+    a: &[f32],
+    b: &[f32],
+    c_rows: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k: usize,
+    n: usize,
+) {
+    matmul_nt(&a[i0 * k..i1 * k], b, c_rows, i1 - i0, k, n)
 }
 
 /// im2col for one example: the `(C·KH·KW, H'·W')` patch matrix whose
@@ -1438,6 +1493,34 @@ mod tests {
         matmul_tn(&at, &b.data, &mut c, m, k, n);
         for (got, w) in c.iter().zip(&want) {
             assert!((got - w).abs() < 1e-4);
+        }
+    }
+
+    /// The parallel visitor units' load-bearing property: a matmul
+    /// carved into disjoint row-range calls is bit-identical to the
+    /// single full call, at any chunking (k chosen to span more than
+    /// one internal k-block, and C pre-filled so the `+=` semantics
+    /// are exercised too).
+    #[test]
+    fn matmul_nt_rows_bitwise_matches_full_call() {
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        let (m, k, n) = (7usize, 1500usize, 5usize);
+        let a = randn(&mut rng, &[m, k]);
+        let b = randn(&mut rng, &[n, k]);
+        let mut want = vec![0.25f32; m * n];
+        matmul_nt(&a.data, &b.data, &mut want, m, k, n);
+        for chunks in [1usize, 2, 3, 7] {
+            let mut got = vec![0.25f32; m * n];
+            let step = m.div_ceil(chunks);
+            let mut r0 = 0;
+            while r0 < m {
+                let r1 = (r0 + step).min(m);
+                matmul_nt_rows(&a.data, &b.data, &mut got[r0 * n..r1 * n], r0, r1, k, n);
+                r0 = r1;
+            }
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb, "row-chunked ({chunks}) drifted from the full matmul");
         }
     }
 

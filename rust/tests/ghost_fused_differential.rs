@@ -20,6 +20,7 @@ mod common;
 use common::geometries::{random_geometry_spec, random_problem};
 use grad_cnns::check::gen_range;
 use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode, GhostPipeline, PlanChoice};
+use grad_cnns::models::ModelSpec;
 use grad_cnns::rng::Xoshiro256pp;
 
 fn bits(v: &[f32]) -> Vec<u32> {
@@ -70,6 +71,65 @@ fn fused_bit_identical_to_two_pass_over_geometries() {
             "case {case} (b{bsz} t{threads} clip {clip} {mode:?}): \
              clipped sum drifted (spec {spec:?})"
         );
+    }
+}
+
+/// The inner visitor-split acceptance property: at a *fixed outer
+/// split* every inner thread count — including the ones that carve
+/// the visitor matmuls (Eq.-4 dW products, direct square-sums, Gram
+/// fills, clipped-sum row-blocks) into parallel units — must
+/// reproduce the serial walk **bit for bit**, in both single-tape
+/// pipelines and under every norm-kernel choice. `B = 1` pins the
+/// outer split at 1, so *any* thread count exercises a pure inner
+/// sweep; `B = 2` holds outer at 2 while inner grows.
+#[test]
+fn inner_visitor_split_is_bit_identical() {
+    // big kernels on a wide input: well over the inner-split work
+    // gate, so spare threads really do carve visitor units
+    let spec = ModelSpec::toy_cnn(2, 16, 1.0, 5, "instance", (8, 32, 32), 10).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(0xF05EF);
+    for mode in [
+        GhostMode::Global(PlanChoice::Auto),
+        GhostMode::Global(PlanChoice::Ghost),
+        GhostMode::Global(PlanChoice::Direct),
+    ] {
+        let fused = ClippedStepPlanner::new(&spec, &mode).unwrap();
+        let two = ClippedStepPlanner::new(&spec, &mode)
+            .unwrap()
+            .with_pipeline(GhostPipeline::TwoPass);
+        for bsz in [1usize, 2] {
+            let mut r = rng.fork(bsz as u64);
+            let (theta, x, y) = random_problem(&spec, bsz, &mut r);
+            // baseline: outer = bsz, inner = 1
+            let base = ghost::clipped_step(&fused, &theta, &x, &y, 0.7, bsz).unwrap();
+            for threads in [2 * bsz, 4 * bsz, 8 * bsz] {
+                assert_eq!(
+                    fused.split(bsz, threads).outer,
+                    bsz,
+                    "outer split must stay pinned for this sweep"
+                );
+                assert!(fused.split(bsz, threads).inner > 1, "gate must engage");
+                let a = ghost::clipped_step(&fused, &theta, &x, &y, 0.7, threads).unwrap();
+                let b = ghost::clipped_step(&two, &theta, &x, &y, 0.7, threads).unwrap();
+                assert_eq!(
+                    bits(&a.norms),
+                    bits(&base.norms),
+                    "norms drifted ({mode:?} b{bsz} t{threads})"
+                );
+                assert_eq!(
+                    bits(&a.grad_sum),
+                    bits(&base.grad_sum),
+                    "fused clipped sum drifted under the inner split \
+                     ({mode:?} b{bsz} t{threads})"
+                );
+                assert_eq!(
+                    bits(&b.grad_sum),
+                    bits(&base.grad_sum),
+                    "two-pass clipped sum drifted under the inner split \
+                     ({mode:?} b{bsz} t{threads})"
+                );
+            }
+        }
     }
 }
 

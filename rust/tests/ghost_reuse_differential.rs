@@ -24,9 +24,9 @@ mod common;
 use std::sync::Mutex;
 
 use common::geometries::{random_geometry_spec, random_problem};
-use grad_cnns::backward::prop_matmuls;
+use grad_cnns::backward::{prop_matmuls, visitor_units};
 use grad_cnns::check::gen_range;
-use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode, GhostPipeline, PlanChoice};
+use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode, GhostPipeline, PlanChoice, SplitPlan};
 use grad_cnns::models::{LayerSpec, ModelSpec};
 use grad_cnns::rng::Xoshiro256pp;
 
@@ -181,6 +181,97 @@ fn reuse_thread_count_invariance() {
             );
         }
     }
+}
+
+/// The reuse half of the inner-split acceptance property: at a fixed
+/// outer split, sweeping the inner visitor-matmul split (including
+/// the parallel dy-block rescale) keeps norms bit-equal and the
+/// clipped sum within the pipeline's 1e-5-relative contract — against
+/// both the serial reuse walk and the fused pipeline.
+#[test]
+fn reuse_inner_split_stays_within_tolerance() {
+    let _g = lock();
+    let spec = ModelSpec::toy_cnn(2, 16, 1.0, 5, "instance", (8, 32, 32), 10).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5CA1F1);
+    for bsz in [1usize, 2] {
+        let mut r = rng.fork(bsz as u64);
+        let (theta, x, y) = random_problem(&spec, bsz, &mut r);
+        let fused = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let reuse = reuse_planner(&spec, &GhostMode::default());
+        let want = ghost::clipped_step(&fused, &theta, &x, &y, 0.8, bsz).unwrap();
+        let base = ghost::clipped_step(&reuse, &theta, &x, &y, 0.8, bsz).unwrap();
+        for threads in [2 * bsz, 8 * bsz] {
+            assert!(reuse.split(bsz, threads).inner > 1, "gate must engage");
+            let got = ghost::clipped_step(&reuse, &theta, &x, &y, 0.8, threads).unwrap();
+            assert_eq!(bits(&base.norms), bits(&got.norms), "b{bsz} t{threads}");
+            assert_close(
+                &got.grad_sum,
+                &base.grad_sum,
+                1e-5,
+                &format!("reuse inner split vs serial reuse (b{bsz} t{threads})"),
+            );
+            assert_close(
+                &got.grad_sum,
+                &want.grad_sum,
+                1e-5,
+                &format!("reuse inner split vs fused (b{bsz} t{threads})"),
+            );
+        }
+    }
+}
+
+/// The counter half of the acceptance property: at `B = 1` with spare
+/// threads, the per-microbatch visitor matmuls demonstrably run
+/// through the parallel unit queue ([`visitor_units`] moves), a
+/// serial run never touches it, and the `inner_parallel = false`
+/// escape hatch pins it at zero — all three bit-identical.
+#[test]
+fn inner_split_drives_visitor_units_at_b1() {
+    let _g = lock();
+    let spec = ModelSpec::toy_cnn(2, 16, 1.0, 5, "none", (8, 32, 32), 10).unwrap();
+    let planner = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+    assert_eq!(planner.split(1, 4), SplitPlan { outer: 1, inner: 4 });
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5CA1F2);
+    let (theta, x, y) = random_problem(&spec, 1, &mut rng);
+
+    let before = visitor_units();
+    let want = ghost::clipped_step(&planner, &theta, &x, &y, 1.0, 1).unwrap();
+    assert_eq!(
+        visitor_units() - before,
+        0,
+        "a serial walk must not touch the parallel unit queue"
+    );
+
+    let before = visitor_units();
+    let got = ghost::clipped_step(&planner, &theta, &x, &y, 1.0, 4).unwrap();
+    let units = visitor_units() - before;
+    assert!(
+        units > 1,
+        "B=1 with 4 threads must drain >1 visitor unit off the parallel queue, got {units}"
+    );
+    assert_eq!(bits(&want.norms), bits(&got.norms));
+    assert_eq!(
+        bits(&want.grad_sum),
+        bits(&got.grad_sum),
+        "inner visitor split changed the fused bits"
+    );
+
+    let off = ClippedStepPlanner::new(&spec, &GhostMode::default())
+        .unwrap()
+        .with_inner_parallel(false);
+    let before = visitor_units();
+    let serial = ghost::clipped_step(&off, &theta, &x, &y, 1.0, 4).unwrap();
+    assert_eq!(visitor_units() - before, 0, "escape hatch must stay serial");
+    assert_eq!(bits(&want.grad_sum), bits(&serial.grad_sum));
+
+    // the reuse pipeline's rescale units ride the same queue
+    let reuse = reuse_planner(&spec, &GhostMode::default());
+    let before = visitor_units();
+    ghost::clipped_step(&reuse, &theta, &x, &y, 1.0, 4).unwrap();
+    assert!(
+        visitor_units() - before > 1,
+        "reuse pipeline must also drain parallel visitor units"
+    );
 }
 
 /// dy-propagation ops one backward walk performs for this spec (the

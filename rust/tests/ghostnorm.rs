@@ -164,6 +164,7 @@ fn native_service_serves_oracle_norms() {
             workers: 2,
             threads: 1,
             mode: GhostMode::default(),
+            inner_parallel: true,
             max_wait: std::time::Duration::from_millis(5),
             queue_capacity: 32,
         },
@@ -224,6 +225,7 @@ fn native_service_validates_at_start() {
         workers: 1,
         threads: 1,
         mode: GhostMode::default(),
+        inner_parallel: true,
         max_wait: std::time::Duration::from_millis(5),
         queue_capacity: 8,
     };
