@@ -29,6 +29,8 @@ pub(crate) enum Saved {
     Linear { input: Tensor },
     Relu { pre: Tensor },
     Pool { arg: Vec<usize>, in_shape: Vec<usize> },
+    AvgPool { in_shape: Vec<usize> },
+    Residual,
     Flatten { in_shape: Vec<usize> },
 }
 
@@ -44,6 +46,18 @@ pub(crate) fn conv_args(l: &LayerSpec) -> ConvArgs {
             stride: *stride,
             padding: *padding,
             dilation: *dilation,
+            groups: *groups,
+        },
+        LayerSpec::Conv1d {
+            stride,
+            padding,
+            dilation,
+            groups,
+            ..
+        } => ConvArgs {
+            stride: (1, *stride),
+            padding: (0, *padding),
+            dilation: (1, *dilation),
             groups: *groups,
         },
         _ => unreachable!("conv_args on non-conv layer"),
@@ -75,7 +89,12 @@ pub(crate) fn forward_with_tape(
     let offsets = spec.param_offsets();
     let mut cur = x.clone();
     let mut saved = Vec::with_capacity(spec.layers.len());
+    let opens = crate::models::residual_opens(&spec.layers);
+    let mut stash: std::collections::HashMap<usize, Tensor> = std::collections::HashMap::new();
     for (li, l) in spec.layers.iter().enumerate() {
+        if opens.contains(&li) {
+            stash.insert(li, cur.clone());
+        }
         match l {
             LayerSpec::Conv2d {
                 in_ch,
@@ -93,6 +112,20 @@ pub(crate) fn forward_with_tape(
                 saved.push(Saved::Conv { input: cur });
                 cur = y;
             }
+            LayerSpec::Conv1d {
+                in_ch,
+                out_ch,
+                kernel,
+                groups,
+                ..
+            } => {
+                debug_assert_eq!(cur.shape[2], 1, "Conv1d needs (B, C, 1, L) activations");
+                let (wv, bv) = layer_params(spec, &offsets, theta, li);
+                let w = Tensor::from_vec(&[*out_ch, in_ch / groups, 1, *kernel], wv.to_vec());
+                let y = tensor::conv2d_im2col(&cur, &w, Some(bv), conv_args(l));
+                saved.push(Saved::Conv { input: cur });
+                cur = y;
+            }
             LayerSpec::Linear { in_dim, out_dim } => {
                 let (wv, bv) = layer_params(spec, &offsets, theta, li);
                 let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
@@ -103,6 +136,12 @@ pub(crate) fn forward_with_tape(
             LayerSpec::InstanceNorm { eps, .. } => {
                 let (gv, bv) = layer_params(spec, &offsets, theta, li);
                 let (y, xhat, inv_std) = tensor::instance_norm(&cur, gv, bv, *eps);
+                saved.push(Saved::Norm { xhat, inv_std });
+                cur = y;
+            }
+            LayerSpec::GroupNorm { groups, eps, .. } => {
+                let (gv, bv) = layer_params(spec, &offsets, theta, li);
+                let (y, xhat, inv_std) = tensor::group_norm(&cur, gv, bv, *groups, *eps);
                 saved.push(Saved::Norm { xhat, inv_std });
                 cur = y;
             }
@@ -118,6 +157,22 @@ pub(crate) fn forward_with_tape(
                     in_shape: cur.shape.clone(),
                 });
                 cur = y;
+            }
+            LayerSpec::AvgPool2d { window, stride } => {
+                let y = tensor::avgpool2d(&cur, *window, *stride);
+                saved.push(Saved::AvgPool {
+                    in_shape: cur.shape.clone(),
+                });
+                cur = y;
+            }
+            LayerSpec::ResidualAdd { span } => {
+                let skip = stash
+                    .get(&(li - span))
+                    .expect("validated spec: skip opens before its join");
+                for (a, b) in cur.data.iter_mut().zip(&skip.data) {
+                    *a += *b;
+                }
+                saved.push(Saved::Residual);
             }
             LayerSpec::Flatten => {
                 let in_shape = cur.shape.clone();

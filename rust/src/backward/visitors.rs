@@ -446,6 +446,55 @@ impl BackwardVisitor for NormVisitor<'_> {
             }
         }
     }
+
+    /// GroupNorm affine norms through the planner's per-layer choice.
+    /// Direct reads the already-computed per-example `dgamma`/`dbeta`
+    /// (same square-sum as instance norm). Ghost applies the Gram
+    /// trick to the affine pair jointly: stacking `xhat_c` and an
+    /// all-ones row as a 2×T "cols" against the 1×T `dy_c` gives
+    /// `⟨colsᵀcols, dyᵀdy⟩ = (Σ dy·x̂)² + (Σ dy)² = dgamma_c² +
+    /// dbeta_c²` — both affine grads in one contraction, without
+    /// materializing them. Falls back to direct when the raw
+    /// `(dy, xhat)` pair is unavailable (cached-dy replay below the
+    /// reuse frontier only carries the affine grads themselves).
+    fn group_norm(
+        &mut self,
+        ctx: &NormCtx,
+        dgamma: &Tensor,
+        dbeta: &Tensor,
+        raw: Option<(&Tensor, &Tensor)>,
+    ) {
+        match (self.planner.path(ctx.li), raw) {
+            (NormPath::Ghost, Some((dy, xhat))) => {
+                let bsz = dgamma.shape[0];
+                let cc = ctx.channels;
+                let t = xhat.shape[2] * xhat.shape[3];
+                let mut ga = vec![0.0f64; t * t];
+                let mut gb = vec![0.0f64; t * t];
+                let mut cols = vec![0.0f32; 2 * t];
+                let _scratch = tensor::alloc::track_scratch(
+                    2 * (ga.len() + gb.len()) + cols.len(),
+                );
+                cols[t..].fill(1.0);
+                for b in 0..bsz {
+                    for c in 0..cc {
+                        let base = (b * cc + c) * t;
+                        cols[..t].copy_from_slice(&xhat.data[base..base + t]);
+                        self.nsq[b] += gram_dot(
+                            &dy.data[base..base + t],
+                            1,
+                            &cols,
+                            2,
+                            t,
+                            &mut ga,
+                            &mut gb,
+                        );
+                    }
+                }
+            }
+            _ => self.instance_norm(ctx, dgamma, dbeta),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -113,12 +113,39 @@ pub(crate) struct LinearCtx {
     pub out_dim: usize,
 }
 
-/// Geometry of one instance-norm layer, precomputed for the visitor.
+/// Geometry of one normalization layer (instance or group norm),
+/// precomputed for the visitor.
 pub(crate) struct NormCtx {
+    /// Index into `spec.layers` (what the ghost planner keys on — the
+    /// GroupNorm ghost/direct choice reads it).
+    pub li: usize,
     /// Offset of this layer's parameter block in flat theta.
     pub offset: usize,
     /// Channels `C` (gamma block; beta follows at `offset + C`).
     pub channels: usize,
+}
+
+/// The `(in_ch, out_ch, (kh, kw), groups)` geometry both conv kinds
+/// share — a Conv1d is a `(1, k)` Conv2d over `(B, C, 1, L)`, so the
+/// walks drive one conv arm off this.
+fn conv_geom(l: &LayerSpec) -> (usize, usize, (usize, usize), usize) {
+    match l {
+        LayerSpec::Conv2d {
+            in_ch,
+            out_ch,
+            kernel,
+            groups,
+            ..
+        } => (*in_ch, *out_ch, *kernel, *groups),
+        LayerSpec::Conv1d {
+            in_ch,
+            out_ch,
+            kernel,
+            groups,
+            ..
+        } => (*in_ch, *out_ch, (1, *kernel), *groups),
+        _ => unreachable!("conv_geom on non-conv layer"),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -269,6 +296,25 @@ pub(crate) trait BackwardVisitor {
     /// Per-example affine gradients of an instance-norm layer,
     /// `(B, C)` each.
     fn instance_norm(&mut self, ctx: &NormCtx, dgamma: &Tensor, dbeta: &Tensor);
+
+    /// Per-example affine gradients of a group-norm layer, `(B, C)`
+    /// each. `raw` carries the layer's `(B, C, H, W)` output gradient
+    /// and saved `xhat` when they are live (every walk but the
+    /// scaled-reuse cached path, which passes `None`) — what the norm
+    /// visitor's Gram path contracts instead of reading
+    /// `dgamma`/`dbeta`. Default: affine grads handled exactly like
+    /// instance norm (the right reading for per-example gradients and
+    /// clipped sums).
+    fn group_norm(
+        &mut self,
+        ctx: &NormCtx,
+        dgamma: &Tensor,
+        dbeta: &Tensor,
+        raw: Option<(&Tensor, &Tensor)>,
+    ) {
+        let _ = raw;
+        self.instance_norm(ctx, dgamma, dbeta);
+    }
 }
 
 /// Where the walk gets conv patch matrices from.
@@ -457,21 +503,19 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
     mut ctl: WalkCtl<'_, '_>,
 ) {
     let offsets = spec.param_offsets();
+    // skip-join rule: `pending[j]` accumulates the dy copies stashed by
+    // every ResidualAdd whose skip opens at layer j's input; they fold
+    // into the stream once the walk has dy w.r.t. that input
+    let mut pending: Vec<Option<Tensor>> = (0..spec.layers.len()).map(|_| None).collect();
     for (li, l) in spec.layers.iter().enumerate().rev() {
         match (l, &saved[li]) {
             (
-                LayerSpec::Conv2d {
-                    in_ch,
-                    out_ch,
-                    kernel,
-                    groups,
-                    ..
-                },
+                LayerSpec::Conv2d { .. } | LayerSpec::Conv1d { .. },
                 Saved::Conv { input },
             ) => {
+                let (in_ch, d, kernel, groups) = conv_geom(l);
                 let args = conv_args(l);
                 let bsz = dy.shape[0];
-                let d = *out_ch;
                 let dg = d / groups;
                 let cg = in_ch / groups;
                 let rows_g = cg * kernel.0 * kernel.1;
@@ -483,7 +527,7 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                     wn,
                     d,
                     dg,
-                    groups: *groups,
+                    groups,
                     rows_g,
                     howo,
                 };
@@ -559,7 +603,7 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                         }
                     }
                 }
-                if li > 0 {
+                if li > 0 || pending[li].is_some() {
                     count_prop();
                     let (wv, _) = layer_params(spec, &offsets, theta, li);
                     let w = Tensor::from_vec(&[d, cg, kernel.0, kernel.1], wv.to_vec());
@@ -586,7 +630,7 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                     }
                 }
                 visitor.linear(&ctx, input, &dy);
-                if li > 0 {
+                if li > 0 || pending[li].is_some() {
                     count_prop();
                     let (wv, _) = layer_params(spec, &offsets, theta, li);
                     let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
@@ -598,6 +642,7 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                 count_prop();
                 let (dgamma, dbeta, dx) = tensor::instance_norm_grad(&dy, xhat, inv_std, gv);
                 let ctx = NormCtx {
+                    li,
                     offset: offsets[li],
                     channels: *channels,
                 };
@@ -609,16 +654,62 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                 visitor.instance_norm(&ctx, &dgamma, &dbeta);
                 dy = dx;
             }
+            (
+                LayerSpec::GroupNorm {
+                    groups, channels, ..
+                },
+                Saved::Norm { xhat, inv_std },
+            ) => {
+                let (gv, _) = layer_params(spec, &offsets, theta, li);
+                count_prop();
+                let (dgamma, dbeta, dx) =
+                    tensor::group_norm_grad(&dy, xhat, inv_std, gv, *groups);
+                let ctx = NormCtx {
+                    li,
+                    offset: offsets[li],
+                    channels: *channels,
+                };
+                if let DyMode::Fill { cache, plan } = &mut ctl.dy {
+                    if plan.cache_dy[li] {
+                        cache.insert_affine(li, dgamma.data.clone(), dbeta.data.clone());
+                    }
+                }
+                visitor.group_norm(&ctx, &dgamma, &dbeta, Some((&dy, xhat)));
+                dy = dx;
+            }
             (LayerSpec::Relu, Saved::Relu { pre }) => {
                 dy = tensor::relu_grad(&dy, pre);
             }
             (LayerSpec::MaxPool2d { .. }, Saved::Pool { arg, in_shape }) => {
                 dy = tensor::maxpool2d_grad(&dy, arg, in_shape);
             }
+            (LayerSpec::AvgPool2d { window, stride }, Saved::AvgPool { in_shape }) => {
+                dy = tensor::avgpool2d_grad(&dy, *window, *stride, in_shape);
+            }
+            (LayerSpec::ResidualAdd { span }, Saved::Residual) => {
+                // dy passes through unchanged; a copy waits at the
+                // skip-open layer's input
+                let open = li - span;
+                match &mut pending[open] {
+                    Some(t) => {
+                        for (a, b) in t.data.iter_mut().zip(&dy.data) {
+                            *a += *b;
+                        }
+                    }
+                    None => pending[open] = Some(dy.clone()),
+                }
+            }
             (LayerSpec::Flatten, Saved::Flatten { in_shape }) => {
                 dy = dy.reshape(in_shape);
             }
             _ => unreachable!("spec/saved mismatch at layer {li}"),
+        }
+        // dy is now the gradient w.r.t. layer li's input: fold in any
+        // skip gradient joining here
+        if let Some(extra) = pending[li].take() {
+            for (a, b) in dy.data.iter_mut().zip(&extra.data) {
+                *a += *b;
+            }
         }
     }
 }
@@ -686,21 +777,20 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
         .unwrap_or(usize::MAX);
     let offsets = spec.param_offsets();
     let mut scaled: Vec<f32> = Vec::new();
+    // skip-join rule, gated to the live region: cached dy entries were
+    // recorded by the norm walk *after* its own skip joins, and
+    // clip-scaling is linear in dy, so joins only need replaying where
+    // dy is actually propagated
+    let mut pending: Vec<Option<Tensor>> = (0..spec.layers.len()).map(|_| None).collect();
     for (li, l) in spec.layers.iter().enumerate().rev() {
         let live = frontier != usize::MAX && li >= frontier;
         match (l, &saved[li]) {
             (
-                LayerSpec::Conv2d {
-                    in_ch,
-                    out_ch,
-                    kernel,
-                    groups,
-                    ..
-                },
+                LayerSpec::Conv2d { .. } | LayerSpec::Conv1d { .. },
                 Saved::Conv { input },
             ) => {
+                let (in_ch, d, kernel, groups) = conv_geom(l);
                 let args = conv_args(l);
-                let d = *out_ch;
                 let dg = d / groups;
                 let cg = in_ch / groups;
                 let rows_g = cg * kernel.0 * kernel.1;
@@ -719,7 +809,7 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                     wn,
                     d,
                     dg,
-                    groups: *groups,
+                    groups,
                     rows_g,
                     howo,
                 };
@@ -840,6 +930,7 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
             (LayerSpec::InstanceNorm { channels, .. }, Saved::Norm { xhat, inv_std }) => {
                 let cc = *channels;
                 let ctx = NormCtx {
+                    li,
                     offset: offsets[li],
                     channels: cc,
                 };
@@ -873,6 +964,44 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                     visitor.instance_norm(&ctx, &sg, &sb);
                 }
             }
+            (
+                LayerSpec::GroupNorm {
+                    groups, channels, ..
+                },
+                Saved::Norm { xhat, inv_std },
+            ) => {
+                let cc = *channels;
+                let ctx = NormCtx {
+                    li,
+                    offset: offsets[li],
+                    channels: cc,
+                };
+                if live {
+                    let (gv, _) = layer_params(spec, &offsets, theta, li);
+                    count_prop();
+                    let (dgamma, dbeta, dx) =
+                        tensor::group_norm_grad(&dy, xhat, inv_std, gv, *groups);
+                    visitor.group_norm(&ctx, &dgamma, &dbeta, Some((&dy, xhat)));
+                    if li > frontier {
+                        dy = dx;
+                    }
+                } else {
+                    let Some(DyEntry::Affine { dgamma, dbeta }) = dys.get(li) else {
+                        unreachable!("layer below the propagation frontier must be cached");
+                    };
+                    let mut sg = vec![0.0f32; dgamma.len()];
+                    let mut sb = vec![0.0f32; dbeta.len()];
+                    for (b, &s) in scales.iter().enumerate() {
+                        for c in 0..cc {
+                            sg[b * cc + c] = s * dgamma[b * cc + c];
+                            sb[b * cc + c] = s * dbeta[b * cc + c];
+                        }
+                    }
+                    let sg = Tensor::from_vec(&[bsz, cc], sg);
+                    let sb = Tensor::from_vec(&[bsz, cc], sb);
+                    visitor.group_norm(&ctx, &sg, &sb, None);
+                }
+            }
             (LayerSpec::Relu, Saved::Relu { pre }) => {
                 if li > frontier {
                     dy = tensor::relu_grad(&dy, pre);
@@ -883,12 +1012,39 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                     dy = tensor::maxpool2d_grad(&dy, arg, in_shape);
                 }
             }
+            (LayerSpec::AvgPool2d { window, stride }, Saved::AvgPool { in_shape }) => {
+                if li > frontier {
+                    dy = tensor::avgpool2d_grad(&dy, *window, *stride, in_shape);
+                }
+            }
+            (LayerSpec::ResidualAdd { span }, Saved::Residual) => {
+                // only the live region replays joins: cached dy blocks
+                // below the frontier already carry skip contributions
+                if li > frontier {
+                    let open = li - span;
+                    match &mut pending[open] {
+                        Some(t) => {
+                            for (a, b) in t.data.iter_mut().zip(&dy.data) {
+                                *a += *b;
+                            }
+                        }
+                        None => pending[open] = Some(dy.clone()),
+                    }
+                }
+            }
             (LayerSpec::Flatten, Saved::Flatten { in_shape }) => {
                 if li > frontier {
                     dy = dy.reshape(in_shape);
                 }
             }
             _ => unreachable!("spec/saved mismatch at layer {li}"),
+        }
+        if li > frontier {
+            if let Some(extra) = pending[li].take() {
+                for (a, b) in dy.data.iter_mut().zip(&extra.data) {
+                    *a += *b;
+                }
+            }
         }
     }
 }

@@ -238,6 +238,9 @@ pub struct NativeSweepOptions {
     pub batch_sizes: Vec<usize>,
     /// Channel rates to sweep (model-dims axis).
     pub rates: Vec<f64>,
+    /// Model architectures to sweep (`"toy_cnn"`, `"residual_gn"`):
+    /// the zoo axis. Each model is built at every swept channel rate.
+    pub models: Vec<&'static str>,
     /// Clip norm C for the timed clipped-gradient computation.
     pub clip: f32,
 }
@@ -266,6 +269,7 @@ impl NativeSweepOptions {
             threads,
             batch_sizes,
             rates: vec![1.0, 2.0, 3.0],
+            models: vec!["toy_cnn", "residual_gn"],
             clip: 1.0,
         }
     }
@@ -273,7 +277,9 @@ impl NativeSweepOptions {
     /// Tiny sweep for CI smoke runs (`bench-strategies --quick`):
     /// one rate, one rep, the `B = 1` and `B = 4` points — every
     /// strategy (including ghostnorm) and the inner visitor split
-    /// still exercised end to end.
+    /// still exercised end to end, on both the toy CNN and the
+    /// residual-GroupNorm zoo model (skip joins + GroupNorm affine
+    /// grads + average pooling in the timed path).
     pub fn quick() -> NativeSweepOptions {
         NativeSweepOptions {
             batches: 2,
@@ -281,7 +287,23 @@ impl NativeSweepOptions {
             threads: 0,
             batch_sizes: vec![1, 4],
             rates: vec![1.0],
+            models: vec!["toy_cnn", "residual_gn"],
             clip: 1.0,
+        }
+    }
+
+    /// Build the swept model for one (arch, rate) point. The rate
+    /// scales the channel width; `residual_gn` rounds it to a multiple
+    /// of its group count.
+    pub fn build_model(arch: &str, rate: f64) -> Result<ModelSpec> {
+        match arch {
+            "toy_cnn" => ModelSpec::toy_cnn(2, 8, rate, 3, "none", (3, 16, 16), 10),
+            "residual_gn" => {
+                let groups = 4usize;
+                let ch = (((8.0 * rate) / groups as f64).round().max(1.0) as usize) * groups;
+                ModelSpec::residual_gn(2, ch, groups, (3, 16, 16), 10)
+            }
+            other => anyhow::bail!("unknown sweep model {other:?}"),
         }
     }
 }
@@ -293,6 +315,8 @@ pub struct SweepCell {
     /// Strategy column name (`naive`/`multi`/`crb`/`ghostnorm`, or the
     /// `ghostnorm_twopass`/`ghostnorm_reuse` comparison cells).
     pub strategy: &'static str,
+    /// Model-architecture axis value (`"toy_cnn"`, `"residual_gn"`).
+    pub model: &'static str,
     /// Batch size of the point.
     pub batch: usize,
     /// Channel-rate (model-dims) axis value.
@@ -357,7 +381,7 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                 opts.batches
             ),
             &[
-                "channel rate",
+                "model / rate",
                 "naive (s)",
                 "multi (s)",
                 "crb (s)",
@@ -366,35 +390,61 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                 "ghostnorm reuse (s)",
             ],
         );
-        for &rate in &opts.rates {
-            let spec = ModelSpec::toy_cnn(2, 8, rate, 3, "none", (3, 16, 16), 10)?;
-            let p = spec.param_count();
-            let (c, h, w) = spec.input_shape;
-            let mut rng = Xoshiro256pp::seed_from_u64(81);
-            let mut theta = vec![0.0f32; p];
-            rng.fill_gaussian(&mut theta, 0.1);
-            let mut batches = Vec::with_capacity(opts.batches);
-            for _ in 0..opts.batches {
-                let mut x = vec![0.0f32; batch * c * h * w];
-                rng.fill_gaussian(&mut x, 1.0);
-                let y: Vec<i32> = (0..batch)
-                    .map(|_| rng.next_below(spec.num_classes as u64) as i32)
-                    .collect();
-                batches.push((Tensor::from_vec(&[batch, c, h, w], x), y));
-            }
-            let mut row = Vec::new();
-            for strategy in Strategy::ALL {
+        for &model in &opts.models {
+            for &rate in &opts.rates {
+                let spec = NativeSweepOptions::build_model(model, rate)?;
+                let p = spec.param_count();
+                let (c, h, w) = spec.input_shape;
+                let mut rng = Xoshiro256pp::seed_from_u64(81);
+                let mut theta = vec![0.0f32; p];
+                rng.fill_gaussian(&mut theta, 0.1);
+                let mut batches = Vec::with_capacity(opts.batches);
+                for _ in 0..opts.batches {
+                    let mut x = vec![0.0f32; batch * c * h * w];
+                    rng.fill_gaussian(&mut x, 1.0);
+                    let y: Vec<i32> = (0..batch)
+                        .map(|_| rng.next_below(spec.num_classes as u64) as i32)
+                        .collect();
+                    batches.push((Tensor::from_vec(&[batch, c, h, w], x), y));
+                }
+                let mut row = Vec::new();
+                for strategy in Strategy::ALL {
+                    let (stats, peak_bytes, props, units) = time_native_cell(
+                        &spec,
+                        strategy,
+                        GhostPipeline::Fused,
+                        opts,
+                        &theta,
+                        &batches,
+                    )?;
+                    row.push(stats.pm());
+                    cells.push(SweepCell {
+                        strategy: strategy.name(),
+                        model,
+                        batch,
+                        rate,
+                        params: p,
+                        ns_per_example: stats.mean / (opts.batches * batch) as f64 * 1e9,
+                        peak_bytes,
+                        prop_matmuls: props,
+                        visitor_units: units,
+                        stats,
+                    });
+                }
+                // fused-vs-twopass comparison: same model, same
+                // inputs, legacy pipeline
                 let (stats, peak_bytes, props, units) = time_native_cell(
                     &spec,
-                    strategy,
-                    GhostPipeline::Fused,
+                    Strategy::GhostNorm,
+                    GhostPipeline::TwoPass,
                     opts,
                     &theta,
                     &batches,
                 )?;
                 row.push(stats.pm());
                 cells.push(SweepCell {
-                    strategy: strategy.name(),
+                    strategy: "ghostnorm_twopass",
+                    model,
                     batch,
                     rate,
                     params: p,
@@ -404,53 +454,32 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                     visitor_units: units,
                     stats,
                 });
+                // scaled-reuse comparison: same model, same inputs,
+                // dy blocks rescaled instead of re-propagated
+                let (stats, peak_bytes, props, units) = time_native_cell(
+                    &spec,
+                    Strategy::GhostNorm,
+                    GhostPipeline::FusedReuse,
+                    opts,
+                    &theta,
+                    &batches,
+                )?;
+                row.push(stats.pm());
+                cells.push(SweepCell {
+                    strategy: "ghostnorm_reuse",
+                    model,
+                    batch,
+                    rate,
+                    params: p,
+                    ns_per_example: stats.mean / (opts.batches * batch) as f64 * 1e9,
+                    peak_bytes,
+                    prop_matmuls: props,
+                    visitor_units: units,
+                    stats,
+                });
+                table.push(&format!("{model} {rate:.1}"), row);
+                eprintln!("  native {model} B={batch} rate {rate}: done");
             }
-            // fused-vs-twopass comparison: same model, same inputs,
-            // legacy pipeline
-            let (stats, peak_bytes, props, units) = time_native_cell(
-                &spec,
-                Strategy::GhostNorm,
-                GhostPipeline::TwoPass,
-                opts,
-                &theta,
-                &batches,
-            )?;
-            row.push(stats.pm());
-            cells.push(SweepCell {
-                strategy: "ghostnorm_twopass",
-                batch,
-                rate,
-                params: p,
-                ns_per_example: stats.mean / (opts.batches * batch) as f64 * 1e9,
-                peak_bytes,
-                prop_matmuls: props,
-                visitor_units: units,
-                stats,
-            });
-            // scaled-reuse comparison: same model, same inputs, dy
-            // blocks rescaled instead of re-propagated
-            let (stats, peak_bytes, props, units) = time_native_cell(
-                &spec,
-                Strategy::GhostNorm,
-                GhostPipeline::FusedReuse,
-                opts,
-                &theta,
-                &batches,
-            )?;
-            row.push(stats.pm());
-            cells.push(SweepCell {
-                strategy: "ghostnorm_reuse",
-                batch,
-                rate,
-                params: p,
-                ns_per_example: stats.mean / (opts.batches * batch) as f64 * 1e9,
-                peak_bytes,
-                prop_matmuls: props,
-                visitor_units: units,
-                stats,
-            });
-            table.push(&format!("{rate:.1}"), row);
-            eprintln!("  native B={batch} rate {rate}: done");
         }
         tables.push(table);
     }
@@ -523,6 +552,7 @@ pub fn sweep_to_json(opts: &NativeSweepOptions, cells: &[SweepCell]) -> Value {
                     .map(|c| {
                         jsonx::obj(vec![
                             ("strategy", jsonx::s(c.strategy)),
+                            ("model", jsonx::s(c.model)),
                             ("batch", jsonx::num(c.batch as f64)),
                             ("channel_rate", jsonx::num(c.rate)),
                             ("params", jsonx::num(c.params as f64)),
@@ -594,10 +624,21 @@ mod tests {
         let opts = NativeSweepOptions::quick();
         let (tables, cells) = run_native_sweep(&opts).unwrap();
         // one table per batch size (B=1 and B=4), 6 cells per
-        // (batch, rate) point: 4 strategies + twopass + reuse
+        // (batch, model, rate) point: 4 strategies + twopass + reuse,
+        // over the toy CNN and the residual-GroupNorm zoo model
         assert_eq!(tables.len(), 2);
-        assert_eq!(cells.len(), 2 * (Strategy::ALL.len() + 2));
+        assert_eq!(opts.models.len(), 2);
+        assert_eq!(
+            cells.len(),
+            2 * opts.models.len() * (Strategy::ALL.len() + 2)
+        );
         assert!(cells.iter().any(|c| c.strategy == "ghostnorm"));
+        assert!(
+            cells
+                .iter()
+                .any(|c| c.model == "residual_gn" && c.strategy == "ghostnorm_reuse"),
+            "zoo model missing from the sweep"
+        );
         assert!(
             cells.iter().any(|c| c.strategy == "ghostnorm_twopass"),
             "fused-vs-twopass comparison cell missing"
@@ -622,6 +663,7 @@ mod tests {
         assert_eq!(results.len(), cells.len());
         for r in results {
             assert!(r.get("strategy").and_then(|v| v.as_str()).is_some());
+            assert!(r.get("model").and_then(|v| v.as_str()).is_some());
             assert!(r.get("ns_per_example").and_then(|v| v.as_f64()).is_some());
             assert!(r.get("peak_bytes").and_then(|v| v.as_f64()).is_some());
             assert!(r.get("prop_matmuls").and_then(|v| v.as_f64()).is_some());

@@ -26,7 +26,11 @@
 //!
 //! Linear layers always factorize (`‖dy_b ⊗ x_b‖² = ‖dy_b‖²·‖x_b‖²`)
 //! and instance-norm affine grads are channel-sized sums, so neither
-//! needs a decision — only convs are planned.
+//! needs a decision. Planned layers are the convs — `Conv1d` rides the
+//! same cost model as a `(1, k)` geometry — plus `GroupNorm`, whose
+//! affine pair admits a per-channel Gram contraction (`cols =
+//! [x̂_c; 1]`, 2×T) that only beats reading the already-formed
+//! `dgamma`/`dbeta` on single-position activations (T = 1).
 
 use crate::models::{LayerSpec, ModelSpec};
 use crate::tensor::ConvArgs;
@@ -105,6 +109,8 @@ pub struct LayerPlan {
     /// Estimated multiply-accumulates per example for the direct path.
     pub direct_cost: u64,
     /// `(T, D/groups, R)` — the geometry the decision is made on.
+    /// For `GroupNorm` the per-channel affine pair reads as a
+    /// `(T, 1, 2)` product (`dy_c` against `[x̂_c; 1]`).
     pub geometry: (usize, usize, usize),
 }
 
@@ -243,7 +249,8 @@ const INNER_SPLIT_MIN_WORK: usize = crate::backward::walk::INNER_PAR_MIN_WORK;
 #[derive(Clone, Debug)]
 pub struct ClippedStepPlanner {
     spec: ModelSpec,
-    /// One entry per layer; `Some` for convs only.
+    /// One entry per layer; `Some` for planned layers (convs and
+    /// GroupNorm) only.
     paths: Vec<Option<LayerPlan>>,
     pipeline: GhostPipeline,
     /// Unified per-worker scratch ceiling (f32-equivalent elements).
@@ -284,7 +291,7 @@ impl ClippedStepPlanner {
         let n_convs = spec
             .layers
             .iter()
-            .filter(|l| matches!(l, LayerSpec::Conv2d { .. }))
+            .filter(|l| matches!(l, LayerSpec::Conv2d { .. } | LayerSpec::Conv1d { .. }))
             .count();
         if let GhostMode::PerConv(list) = mode {
             if list.len() > n_convs {
@@ -302,21 +309,51 @@ impl ClippedStepPlanner {
         let mut max_inner_work = 0usize;
         for l in &spec.layers {
             match l {
-                LayerSpec::Conv2d {
-                    in_ch,
-                    out_ch,
-                    kernel,
-                    stride,
-                    padding,
-                    dilation,
-                    groups,
-                } => {
-                    let args = ConvArgs {
-                        stride: *stride,
-                        padding: *padding,
-                        dilation: *dilation,
-                        groups: *groups,
+                LayerSpec::Conv2d { .. } | LayerSpec::Conv1d { .. } => {
+                    // Conv1d is exactly the (1, k) geometry on (C, 1, L)
+                    // activations — one cost model serves both
+                    let (in_ch, out_ch, kernel, args) = match l {
+                        LayerSpec::Conv2d {
+                            in_ch,
+                            out_ch,
+                            kernel,
+                            stride,
+                            padding,
+                            dilation,
+                            groups,
+                        } => (
+                            *in_ch,
+                            *out_ch,
+                            *kernel,
+                            ConvArgs {
+                                stride: *stride,
+                                padding: *padding,
+                                dilation: *dilation,
+                                groups: *groups,
+                            },
+                        ),
+                        LayerSpec::Conv1d {
+                            in_ch,
+                            out_ch,
+                            kernel,
+                            stride,
+                            padding,
+                            dilation,
+                            groups,
+                        } => (
+                            *in_ch,
+                            *out_ch,
+                            (1, *kernel),
+                            ConvArgs {
+                                stride: (1, *stride),
+                                padding: (0, *padding),
+                                dilation: (1, *dilation),
+                                groups: *groups,
+                            },
+                        ),
+                        _ => unreachable!(),
                     };
+                    let groups = args.groups;
                     let (ho, wo) = args.out_hw(h, w, kernel.0, kernel.1);
                     let t = ho * wo;
                     let dg = out_ch / groups;
@@ -379,7 +416,8 @@ impl ClippedStepPlanner {
                     h = ho;
                     w = wo;
                 }
-                LayerSpec::MaxPool2d { window, stride } => {
+                LayerSpec::MaxPool2d { window, stride }
+                | LayerSpec::AvgPool2d { window, stride } => {
                     h = (h - window.0) / stride.0 + 1;
                     w = (w - window.1) / stride.1 + 1;
                     paths.push(None);
@@ -393,6 +431,56 @@ impl ClippedStepPlanner {
                 }
                 LayerSpec::InstanceNorm { channels, .. } => {
                     paths.push(None);
+                    dy_elems.push(2 * channels);
+                    cols_elems.push(0);
+                }
+                LayerSpec::GroupNorm { channels, .. } => {
+                    // the affine pair per channel is a (1×T)·(2×T)ᵀ
+                    // product: dy_c against [x̂_c; 1]. Ghost scores the
+                    // Gram contraction (dg=1, rows=2); direct scores
+                    // reading the already-formed dgamma/dbeta plus the
+                    // sums that formed them. Ghost only wins at T=1.
+                    let t = h * w;
+                    let ghost_cost = (channels * (t * (t + 1) / 2) * 5) as u64;
+                    let direct_cost = (channels * 2 * (t + 2)) as u64;
+                    // per-conv override lists address convs only; a
+                    // global policy covers norm layers too
+                    let choice = match mode {
+                        GhostMode::Global(c) => *c,
+                        GhostMode::PerConv(_) => PlanChoice::Auto,
+                    };
+                    let scratch = gram_scratch_elems(t);
+                    let path = match choice {
+                        PlanChoice::Ghost => {
+                            if scratch > scratch_budget_elems {
+                                bail!(
+                                    "ghost_norms forces the ghost path on a GroupNorm layer \
+                                     with T={t} positions: each of the two T² Gram matrices \
+                                     needs ~{} MB of scratch per worker, over the {} MB \
+                                     per-Gram scratch cap — use \"auto\" or \"direct\", or \
+                                     raise ghost_budget_mb",
+                                    scratch * 4 / (1 << 20),
+                                    scratch_budget_elems * 4 / (1 << 20),
+                                );
+                            }
+                            NormPath::Ghost
+                        }
+                        PlanChoice::Direct => NormPath::Direct,
+                        PlanChoice::Auto => {
+                            if ghost_cost < direct_cost && scratch <= scratch_budget_elems {
+                                NormPath::Ghost
+                            } else {
+                                NormPath::Direct
+                            }
+                        }
+                    };
+                    paths.push(Some(LayerPlan {
+                        layer_index: paths.len(),
+                        path,
+                        ghost_cost,
+                        direct_cost,
+                        geometry: (t, 1, 2),
+                    }));
                     dy_elems.push(2 * channels);
                     cols_elems.push(0);
                 }
@@ -557,8 +645,8 @@ impl ClippedStepPlanner {
         &self.spec
     }
 
-    /// Norm path for layer `li`; only meaningful for conv layers
-    /// (anything else answers `Direct`).
+    /// Norm path for layer `li`; only meaningful for planned layers —
+    /// convs and GroupNorm (anything else answers `Direct`).
     pub fn path(&self, li: usize) -> NormPath {
         self.paths
             .get(li)
@@ -655,6 +743,141 @@ mod tests {
         let p = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
         assert_eq!(p.path(0), NormPath::Direct);
         assert_eq!(p.ghost_layer_count(), 0);
+    }
+
+    fn conv1d_spec(length: usize) -> ModelSpec {
+        // 32 -> 32 channels, k=9: dg=32, rows=288, crossover near T≈57
+        let t = length - 8;
+        ModelSpec {
+            arch: "custom".into(),
+            layers: vec![
+                LayerSpec::Conv1d {
+                    in_ch: 32,
+                    out_ch: 32,
+                    kernel: 9,
+                    stride: 1,
+                    padding: 0,
+                    dilation: 1,
+                    groups: 1,
+                },
+                LayerSpec::Flatten,
+                LayerSpec::Linear {
+                    in_dim: 32 * t,
+                    out_dim: 4,
+                },
+            ],
+            input_shape: (32, 1, length),
+            num_classes: 4,
+        }
+    }
+
+    #[test]
+    fn conv1d_crossover_pins_both_sides() {
+        // T=16: ghost ≈ 16·17/2·322 ≈ 44k < direct ≈ 32·288·18 ≈ 166k
+        let p = ClippedStepPlanner::new(&conv1d_spec(24), &GhostMode::default()).unwrap();
+        let plans: Vec<&LayerPlan> = p.plans().collect();
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].geometry, (16, 32, 288));
+        assert!(plans[0].ghost_cost < plans[0].direct_cost);
+        assert_eq!(p.path(0), NormPath::Ghost);
+        // T=256: ghost ≈ 256·257/2·322 ≈ 10.6M > direct ≈ 2.4M
+        let p = ClippedStepPlanner::new(&conv1d_spec(264), &GhostMode::default()).unwrap();
+        let plans: Vec<&LayerPlan> = p.plans().collect();
+        assert_eq!(plans[0].geometry, (256, 32, 288));
+        assert!(plans[0].ghost_cost > plans[0].direct_cost);
+        assert_eq!(p.path(0), NormPath::Direct);
+        // Conv1d counts against a per-conv override list
+        let per = ClippedStepPlanner::new(
+            &conv1d_spec(264),
+            &GhostMode::PerConv(vec![PlanChoice::Ghost]),
+        )
+        .unwrap();
+        assert_eq!(per.path(0), NormPath::Ghost);
+    }
+
+    fn groupnorm_spec(hw: (usize, usize)) -> ModelSpec {
+        ModelSpec {
+            arch: "custom".into(),
+            layers: vec![
+                LayerSpec::GroupNorm {
+                    groups: 2,
+                    channels: 8,
+                    eps: 1e-5,
+                },
+                LayerSpec::Flatten,
+                LayerSpec::Linear {
+                    in_dim: 8 * hw.0 * hw.1,
+                    out_dim: 3,
+                },
+            ],
+            input_shape: (8, hw.0, hw.1),
+            num_classes: 3,
+        }
+    }
+
+    #[test]
+    fn groupnorm_crossover_pins_both_sides() {
+        // T=1: ghost = C·1·5 = 40 < direct = C·2·3 = 48 — the single
+        // degenerate geometry where the affine Gram pays off
+        let p = ClippedStepPlanner::new(&groupnorm_spec((1, 1)), &GhostMode::default()).unwrap();
+        let plans: Vec<&LayerPlan> = p.plans().collect();
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].geometry, (1, 1, 2));
+        assert!(plans[0].ghost_cost < plans[0].direct_cost);
+        assert_eq!(p.path(0), NormPath::Ghost);
+        // T=2 already flips: ghost = C·3·5 = 120 > direct = C·2·4 = 64
+        let p = ClippedStepPlanner::new(&groupnorm_spec((1, 2)), &GhostMode::default()).unwrap();
+        let plans: Vec<&LayerPlan> = p.plans().collect();
+        assert_eq!(plans[0].geometry, (2, 1, 2));
+        assert!(plans[0].ghost_cost > plans[0].direct_cost);
+        assert_eq!(p.path(0), NormPath::Direct);
+        // per-conv override lists address convs only: GroupNorm stays
+        // on auto under PerConv, but a global force does apply
+        let per = ClippedStepPlanner::new(
+            &groupnorm_spec((1, 2)),
+            &GhostMode::PerConv(vec![]),
+        )
+        .unwrap();
+        assert_eq!(per.path(0), NormPath::Direct);
+        let forced = ClippedStepPlanner::new(
+            &groupnorm_spec((1, 2)),
+            &GhostMode::Global(PlanChoice::Ghost),
+        )
+        .unwrap();
+        assert_eq!(forced.path(0), NormPath::Ghost);
+    }
+
+    #[test]
+    fn avgpool_walks_spatial_dims_like_maxpool() {
+        // conv after a 2×2 avg-pool sees the halved map: T = 5·5 = 25
+        let spec = ModelSpec {
+            arch: "custom".into(),
+            layers: vec![
+                LayerSpec::AvgPool2d {
+                    window: (2, 2),
+                    stride: (2, 2),
+                },
+                LayerSpec::Conv2d {
+                    in_ch: 2,
+                    out_ch: 3,
+                    kernel: (2, 2),
+                    stride: (1, 1),
+                    padding: (0, 0),
+                    dilation: (1, 1),
+                    groups: 1,
+                },
+                LayerSpec::Flatten,
+                LayerSpec::Linear {
+                    in_dim: 3 * 5 * 5,
+                    out_dim: 2,
+                },
+            ],
+            input_shape: (2, 12, 12),
+            num_classes: 2,
+        };
+        let p = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let plans: Vec<&LayerPlan> = p.plans().collect();
+        assert_eq!(plans[0].geometry.0, 25);
     }
 
     #[test]

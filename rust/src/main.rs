@@ -628,12 +628,19 @@ fn cmd_selftest(rest: &[String]) -> Result<()> {
     }
 }
 
-/// Native strategies vs oracle, over models with/without instance norm.
+/// Native strategies vs oracle, over models with/without instance
+/// norm plus the residual GroupNorm zoo preset (skip joins, GroupNorm
+/// affine grads and average pooling through every strategy).
 fn selftest_native(tol: f32, seed: u64, threads: usize) -> Result<()> {
     println!("=== native strategies vs rust oracle (tol {tol:e}) ===");
     let mut failures = 0;
-    for (tag, norm) in [("toy", "none"), ("toy_inorm", "instance")] {
-        let spec = ModelSpec::toy_cnn(2, 6, 1.5, 3, norm, (3, 12, 12), 10)?;
+    for tag in ["toy", "toy_inorm", "residual_gn"] {
+        let spec = match tag {
+            "toy" => ModelSpec::toy_cnn(2, 6, 1.5, 3, "none", (3, 12, 12), 10)?,
+            "toy_inorm" => ModelSpec::toy_cnn(2, 6, 1.5, 3, "instance", (3, 12, 12), 10)?,
+            "residual_gn" => ModelSpec::residual_gn(2, 8, 4, (3, 12, 12), 10)?,
+            _ => unreachable!(),
+        };
         let p = spec.param_count();
         let (c, h, w) = spec.input_shape;
         let b = 4usize;

@@ -50,6 +50,18 @@ pub enum LayerSpec {
         /// Variance floor.
         eps: f32,
     },
+    /// Group normalization (Wu & He 2018): per-example statistics
+    /// pooled over channel groups. `groups == channels` degenerates to
+    /// [`LayerSpec::InstanceNorm`]; `groups == 1` is layer norm over
+    /// `(C, H, W)`.
+    GroupNorm {
+        /// Group count `G` (must divide `channels`).
+        groups: usize,
+        /// Channel count `C` (gamma/beta are `(C,)` each).
+        channels: usize,
+        /// Variance floor.
+        eps: f32,
+    },
     /// Elementwise max(0, x).
     Relu,
     /// Max pooling.
@@ -58,6 +70,42 @@ pub enum LayerSpec {
         window: (usize, usize),
         /// Stride `(SH, SW)`.
         stride: (usize, usize),
+    },
+    /// Average pooling (windows always fully inside the input).
+    AvgPool2d {
+        /// Pool window `(WH, WW)`.
+        window: (usize, usize),
+        /// Stride `(SH, SW)`.
+        stride: (usize, usize),
+    },
+    /// 1D convolution over `(B, C, 1, L)` activations — rides the 2D
+    /// im2col machinery as a `(1, K)` kernel geometry with its own
+    /// planner cost model.
+    Conv1d {
+        /// Input channels `C`.
+        in_ch: usize,
+        /// Output channels `D`.
+        out_ch: usize,
+        /// Kernel length `K`.
+        kernel: usize,
+        /// Stride along `L`.
+        stride: usize,
+        /// Zero padding along `L`.
+        padding: usize,
+        /// Dilation along `L`.
+        dilation: usize,
+        /// Group count `g`.
+        groups: usize,
+    },
+    /// Skip-connection join: adds the activation that *entered* layer
+    /// `index − span` to this layer's input (shapes must match, see
+    /// [`ModelSpec::validate`]). The backward walk mirrors it with the
+    /// skip-join rule: dy passes through unchanged, and a pending copy
+    /// is accumulated into the stream once the walk reaches the
+    /// opening layer's input.
+    ResidualAdd {
+        /// How many layers back the skip opens (`1 ≤ span ≤ index`).
+        span: usize,
     },
     /// Collapse `(B, C, H, W)` to `(B, C·H·W)`.
     Flatten,
@@ -68,7 +116,11 @@ impl LayerSpec {
     pub fn is_parametric(&self) -> bool {
         matches!(
             self,
-            LayerSpec::Conv2d { .. } | LayerSpec::Linear { .. } | LayerSpec::InstanceNorm { .. }
+            LayerSpec::Conv2d { .. }
+                | LayerSpec::Conv1d { .. }
+                | LayerSpec::Linear { .. }
+                | LayerSpec::InstanceNorm { .. }
+                | LayerSpec::GroupNorm { .. }
         )
     }
 
@@ -82,8 +134,16 @@ impl LayerSpec {
                 groups,
                 ..
             } => out_ch * (in_ch / groups) * kernel.0 * kernel.1 + out_ch,
+            LayerSpec::Conv1d {
+                in_ch,
+                out_ch,
+                kernel,
+                groups,
+                ..
+            } => out_ch * (in_ch / groups) * kernel + out_ch,
             LayerSpec::Linear { in_dim, out_dim } => out_dim * in_dim + out_dim,
             LayerSpec::InstanceNorm { channels, .. } => 2 * channels,
+            LayerSpec::GroupNorm { channels, .. } => 2 * channels,
             _ => 0,
         }
     }
@@ -155,8 +215,16 @@ impl ModelSpec {
                 groups,
                 ..
             } => (out_ch * (in_ch / groups) * kernel.0 * kernel.1, *out_ch),
+            LayerSpec::Conv1d {
+                in_ch,
+                out_ch,
+                kernel,
+                groups,
+                ..
+            } => (out_ch * (in_ch / groups) * kernel, *out_ch),
             LayerSpec::Linear { in_dim, out_dim } => (out_dim * in_dim, *out_dim),
             LayerSpec::InstanceNorm { channels, .. } => (*channels, *channels),
+            LayerSpec::GroupNorm { channels, .. } => (*channels, *channels),
             _ => (0, 0),
         }
     }
@@ -184,7 +252,24 @@ impl ModelSpec {
                     w = wo;
                     flat = c * h * w;
                 }
-                LayerSpec::MaxPool2d { window, stride } => {
+                LayerSpec::Conv1d {
+                    in_ch,
+                    out_ch,
+                    kernel,
+                    stride,
+                    padding,
+                    dilation,
+                    groups,
+                } => {
+                    let (_, lo) =
+                        conv_out(h, w, (1, *kernel), (1, *stride), (0, *padding), (1, *dilation));
+                    total += (2 * lo * out_ch * (in_ch / groups) * kernel) as u64;
+                    c = *out_ch;
+                    w = lo;
+                    flat = c * h * w;
+                }
+                LayerSpec::MaxPool2d { window, stride }
+                | LayerSpec::AvgPool2d { window, stride } => {
                     let (ho, wo) = pool_out(h, w, *window, *stride);
                     h = ho;
                     w = wo;
@@ -195,14 +280,207 @@ impl ModelSpec {
                     total += (2 * in_dim * out_dim) as u64;
                     flat = *out_dim;
                 }
-                LayerSpec::InstanceNorm { .. } => {
+                LayerSpec::InstanceNorm { .. } | LayerSpec::GroupNorm { .. } => {
                     total += (6 * c * h * w) as u64;
+                }
+                LayerSpec::ResidualAdd { .. } => {
+                    total += (c * h * w) as u64;
                 }
                 LayerSpec::Relu => {}
             }
         }
         let _ = flat;
         total
+    }
+
+    /// Structural validation: walk activation shapes through the layer
+    /// list and reject inconsistent specs with actionable messages.
+    /// Called by [`ModelSpec::from_manifest`] (so a bad `[model]`
+    /// config section dies at config-parse time) and available to
+    /// hand-built specs.
+    pub fn validate(&self) -> Result<()> {
+        // activation shape *entering* each layer: Some((c, h, w))
+        // before flatten, None (with the flat width tracked aside)
+        // after
+        #[derive(Clone, Copy, PartialEq, Debug)]
+        enum Act {
+            Spatial(usize, usize, usize),
+            Flat(usize),
+        }
+        let (c0, h0, w0) = self.input_shape;
+        if c0 == 0 || h0 == 0 || w0 == 0 {
+            bail!("input_shape {:?} has a zero dimension", self.input_shape);
+        }
+        let mut cur = Act::Spatial(c0, h0, w0);
+        let mut inputs: Vec<Act> = Vec::with_capacity(self.layers.len());
+        for (li, l) in self.layers.iter().enumerate() {
+            inputs.push(cur);
+            match l {
+                LayerSpec::Conv2d {
+                    in_ch,
+                    out_ch,
+                    kernel,
+                    stride,
+                    padding,
+                    dilation,
+                    groups,
+                } => {
+                    let Act::Spatial(c, h, w) = cur else {
+                        bail!("layer {li} (Conv2d) cannot follow Flatten");
+                    };
+                    if *in_ch != c {
+                        bail!("layer {li} (Conv2d) expects {in_ch} input channels, gets {c}");
+                    }
+                    if *groups == 0 || in_ch % groups != 0 || out_ch % groups != 0 {
+                        bail!(
+                            "layer {li} (Conv2d) groups {groups} must divide in_ch {in_ch} \
+                             and out_ch {out_ch}"
+                        );
+                    }
+                    if kernel.0 == 0 || kernel.1 == 0 || stride.0 == 0 || stride.1 == 0
+                        || dilation.0 == 0 || dilation.1 == 0
+                    {
+                        bail!("layer {li} (Conv2d) kernel/stride/dilation must be >= 1");
+                    }
+                    let (ho, wo) = conv_out(h, w, *kernel, *stride, *padding, *dilation);
+                    if ho == 0 || wo == 0 {
+                        bail!(
+                            "layer {li} (Conv2d) collapses the {h}x{w} input to {ho}x{wo} — \
+                             kernel {kernel:?} does not fit"
+                        );
+                    }
+                    cur = Act::Spatial(*out_ch, ho, wo);
+                }
+                LayerSpec::Conv1d {
+                    in_ch,
+                    out_ch,
+                    kernel,
+                    stride,
+                    padding,
+                    dilation,
+                    groups,
+                } => {
+                    let Act::Spatial(c, h, w) = cur else {
+                        bail!("layer {li} (Conv1d) cannot follow Flatten");
+                    };
+                    if h != 1 {
+                        bail!(
+                            "layer {li} (Conv1d) needs height-1 activations (B, C, 1, L), \
+                             gets height {h} — Conv1d models use input_shape (C, 1, L)"
+                        );
+                    }
+                    if *in_ch != c {
+                        bail!("layer {li} (Conv1d) expects {in_ch} input channels, gets {c}");
+                    }
+                    if *groups == 0 || in_ch % groups != 0 || out_ch % groups != 0 {
+                        bail!(
+                            "layer {li} (Conv1d) groups {groups} must divide in_ch {in_ch} \
+                             and out_ch {out_ch}"
+                        );
+                    }
+                    if *kernel == 0 || *stride == 0 || *dilation == 0 {
+                        bail!("layer {li} (Conv1d) kernel/stride/dilation must be >= 1");
+                    }
+                    let (_, lo) =
+                        conv_out(h, w, (1, *kernel), (1, *stride), (0, *padding), (1, *dilation));
+                    if lo == 0 {
+                        bail!(
+                            "layer {li} (Conv1d) collapses the length-{w} input — kernel \
+                             {kernel} (dilation {dilation}) does not fit"
+                        );
+                    }
+                    cur = Act::Spatial(*out_ch, 1, lo);
+                }
+                LayerSpec::Linear { in_dim, out_dim } => {
+                    let n = match cur {
+                        Act::Flat(n) => n,
+                        Act::Spatial(..) => bail!(
+                            "layer {li} (Linear) needs a flattened activation — insert \
+                             Flatten first"
+                        ),
+                    };
+                    if *in_dim != n {
+                        bail!("layer {li} (Linear) expects in_dim {in_dim}, gets {n}");
+                    }
+                    if *out_dim == 0 {
+                        bail!("layer {li} (Linear) out_dim must be >= 1");
+                    }
+                    cur = Act::Flat(*out_dim);
+                }
+                LayerSpec::InstanceNorm { channels, .. } => {
+                    let Act::Spatial(c, ..) = cur else {
+                        bail!("layer {li} (InstanceNorm) cannot follow Flatten");
+                    };
+                    if *channels != c {
+                        bail!(
+                            "layer {li} (InstanceNorm) expects {channels} channels, gets {c}"
+                        );
+                    }
+                }
+                LayerSpec::GroupNorm {
+                    groups, channels, ..
+                } => {
+                    let Act::Spatial(c, ..) = cur else {
+                        bail!("layer {li} (GroupNorm) cannot follow Flatten");
+                    };
+                    if *channels != c {
+                        bail!("layer {li} (GroupNorm) expects {channels} channels, gets {c}");
+                    }
+                    if *groups == 0 || channels % groups != 0 {
+                        bail!(
+                            "layer {li} (GroupNorm) groups {groups} does not divide \
+                             channels {channels}"
+                        );
+                    }
+                }
+                LayerSpec::MaxPool2d { window, stride }
+                | LayerSpec::AvgPool2d { window, stride } => {
+                    let kind = if matches!(l, LayerSpec::MaxPool2d { .. }) {
+                        "MaxPool2d"
+                    } else {
+                        "AvgPool2d"
+                    };
+                    let Act::Spatial(c, h, w) = cur else {
+                        bail!("layer {li} ({kind}) cannot pool a flattened activation");
+                    };
+                    if window.0 == 0 || window.1 == 0 || stride.0 == 0 || stride.1 == 0 {
+                        bail!("layer {li} ({kind}) window/stride must be >= 1");
+                    }
+                    let (ho, wo) = pool_out(h, w, *window, *stride);
+                    if ho == 0 || wo == 0 {
+                        bail!(
+                            "layer {li} ({kind}) window {window:?} exceeds the {h}x{w} input"
+                        );
+                    }
+                    cur = Act::Spatial(c, ho, wo);
+                }
+                LayerSpec::ResidualAdd { span } => {
+                    if *span == 0 || *span > li {
+                        bail!(
+                            "layer {li} (ResidualAdd) span {span} must satisfy \
+                             1 <= span <= {li} (the layer index)"
+                        );
+                    }
+                    let open = inputs[li - span];
+                    if open != cur {
+                        bail!(
+                            "layer {li} (ResidualAdd) skip shape mismatch: the skip opens \
+                             at layer {} with {open:?}, but the join input is {cur:?} — \
+                             the spanned layers must preserve shape",
+                            li - span
+                        );
+                    }
+                }
+                LayerSpec::Relu => {}
+                LayerSpec::Flatten => {
+                    let Act::Spatial(c, h, w) = cur else {
+                        bail!("layer {li} (Flatten) applied twice");
+                    };
+                    cur = Act::Flat(c * h * w);
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Convenience builder for the toy CNN the examples, benches and
@@ -262,14 +540,75 @@ impl ModelSpec {
             "toy_cnn" => build_toy_cnn(cfg, input_shape, num_classes)?,
             "alexnet" => build_alexnet(cfg, input_shape, num_classes)?,
             "vgg16" => build_vgg16(cfg, input_shape, num_classes)?,
+            "residual_gn" => build_residual_gn(cfg, input_shape, num_classes)?,
+            "linear_head" => build_linear_head(cfg, input_shape, num_classes)?,
             other => bail!("unknown arch {other:?}"),
         };
-        Ok(ModelSpec {
+        let spec = ModelSpec {
             arch: arch.to_string(),
             layers,
             input_shape,
             num_classes,
-        })
+        };
+        spec.validate()
+            .with_context(|| format!("invalid {arch} model config"))?;
+        Ok(spec)
+    }
+
+    /// Convenience builder for the residual GroupNorm zoo preset —
+    /// goes through [`ModelSpec::from_manifest`] like
+    /// [`ModelSpec::toy_cnn`] does.
+    pub fn residual_gn(
+        n_blocks: usize,
+        channels: usize,
+        groups: usize,
+        input_shape: (usize, usize, usize),
+        num_classes: usize,
+    ) -> Result<ModelSpec> {
+        let cfg = jsonx::obj(vec![
+            ("arch", jsonx::s("residual_gn")),
+            ("n_layers", jsonx::num(n_blocks as f64)),
+            ("first_channels", jsonx::num(channels as f64)),
+            ("groups", jsonx::num(groups as f64)),
+            (
+                "input_shape",
+                jsonx::arr(vec![
+                    jsonx::num(input_shape.0 as f64),
+                    jsonx::num(input_shape.1 as f64),
+                    jsonx::num(input_shape.2 as f64),
+                ]),
+            ),
+            ("num_classes", jsonx::num(num_classes as f64)),
+        ]);
+        Self::from_manifest(&cfg)
+    }
+
+    /// Convenience builder for the linear-heavy head zoo preset (the
+    /// Gram-degenerate regime) — goes through
+    /// [`ModelSpec::from_manifest`].
+    pub fn linear_head(
+        n_hidden: usize,
+        channels: usize,
+        hidden_dim: usize,
+        input_shape: (usize, usize, usize),
+        num_classes: usize,
+    ) -> Result<ModelSpec> {
+        let cfg = jsonx::obj(vec![
+            ("arch", jsonx::s("linear_head")),
+            ("n_layers", jsonx::num(n_hidden as f64)),
+            ("first_channels", jsonx::num(channels as f64)),
+            ("hidden_dim", jsonx::num(hidden_dim as f64)),
+            (
+                "input_shape",
+                jsonx::arr(vec![
+                    jsonx::num(input_shape.0 as f64),
+                    jsonx::num(input_shape.1 as f64),
+                    jsonx::num(input_shape.2 as f64),
+                ]),
+            ),
+            ("num_classes", jsonx::num(num_classes as f64)),
+        ]);
+        Self::from_manifest(&cfg)
     }
 }
 
@@ -340,6 +679,141 @@ fn build_toy_cnn(
     layers.push(LayerSpec::Flatten);
     layers.push(LayerSpec::Linear {
         in_dim: c * h * w,
+        out_dim: num_classes,
+    });
+    Ok(layers)
+}
+
+/// The residual GroupNorm zoo preset: a shape-preserving conv stem,
+/// `n_layers` residual blocks of `[Conv2d 3x3 pad 1, GroupNorm, Relu,
+/// ResidualAdd(span 3)]`, average pooling, then the linear classifier.
+/// Knobs: `n_layers` (blocks, default 2), `first_channels` (block
+/// width, default 8), `groups` (GroupNorm groups, default 4).
+fn build_residual_gn(
+    cfg: &Value,
+    input_shape: (usize, usize, usize),
+    num_classes: usize,
+) -> Result<Vec<LayerSpec>> {
+    let n_blocks = cfg.get("n_layers").and_then(|v| v.as_usize()).unwrap_or(2);
+    let ch = cfg
+        .get("first_channels")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(8);
+    let groups = cfg.get("groups").and_then(|v| v.as_usize()).unwrap_or(4);
+    let (c, mut h, mut w) = input_shape;
+    let mut layers = vec![
+        // stem: bring the input to the block width, shape-preserving
+        LayerSpec::Conv2d {
+            in_ch: c,
+            out_ch: ch,
+            kernel: (3, 3),
+            stride: (1, 1),
+            padding: (1, 1),
+            dilation: (1, 1),
+            groups: 1,
+        },
+        LayerSpec::GroupNorm {
+            groups,
+            channels: ch,
+            eps: 1e-5,
+        },
+        LayerSpec::Relu,
+    ];
+    for _ in 0..n_blocks {
+        layers.push(LayerSpec::Conv2d {
+            in_ch: ch,
+            out_ch: ch,
+            kernel: (3, 3),
+            stride: (1, 1),
+            padding: (1, 1),
+            dilation: (1, 1),
+            groups: 1,
+        });
+        layers.push(LayerSpec::GroupNorm {
+            groups,
+            channels: ch,
+            eps: 1e-5,
+        });
+        layers.push(LayerSpec::Relu);
+        // the skip opens at the block's conv input: conv/norm/relu
+        // preserve shape, so the join always matches
+        layers.push(LayerSpec::ResidualAdd { span: 3 });
+    }
+    if h >= 2 && w >= 2 {
+        layers.push(LayerSpec::AvgPool2d {
+            window: (2, 2),
+            stride: (2, 2),
+        });
+        let (ho, wo) = pool_out(h, w, (2, 2), (2, 2));
+        h = ho;
+        w = wo;
+    }
+    layers.push(LayerSpec::Flatten);
+    layers.push(LayerSpec::Linear {
+        in_dim: ch * h * w,
+        out_dim: num_classes,
+    });
+    Ok(layers)
+}
+
+/// The linear-heavy head zoo preset — a minimal conv stem feeding a
+/// stack of dense layers, the regime where the Gram trick degenerates
+/// (T = 1 per linear layer, so ghost costs ~p·d with none of the T²
+/// savings). Knobs: `n_layers` (hidden linears, default 2),
+/// `first_channels` (stem width, default 6), `hidden_dim`
+/// (default 32).
+fn build_linear_head(
+    cfg: &Value,
+    input_shape: (usize, usize, usize),
+    num_classes: usize,
+) -> Result<Vec<LayerSpec>> {
+    let n_hidden = cfg.get("n_layers").and_then(|v| v.as_usize()).unwrap_or(2);
+    let ch = cfg
+        .get("first_channels")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(6);
+    let hidden = cfg
+        .get("hidden_dim")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(32);
+    let (c, h, w) = input_shape;
+    let mut layers = vec![
+        LayerSpec::Conv2d {
+            in_ch: c,
+            out_ch: ch,
+            kernel: (3, 3),
+            stride: (1, 1),
+            padding: (0, 0),
+            dilation: (1, 1),
+            groups: 1,
+        },
+        LayerSpec::Relu,
+    ];
+    let (mut ho, mut wo) = conv_out(h, w, (3, 3), (1, 1), (0, 0), (1, 1));
+    if ho >= 2 && wo >= 2 {
+        layers.push(LayerSpec::MaxPool2d {
+            window: (2, 2),
+            stride: (2, 2),
+        });
+        let (hp, wp) = pool_out(ho, wo, (2, 2), (2, 2));
+        ho = hp;
+        wo = wp;
+    }
+    if ho == 0 || wo == 0 {
+        bail!("linear_head spatial dims collapsed; input too small");
+    }
+    layers.push(LayerSpec::Flatten);
+    let mut in_dim = ch * ho * wo;
+    for _ in 0..n_hidden {
+        layers.push(LayerSpec::Linear {
+            in_dim,
+            out_dim: hidden,
+        });
+        layers.push(LayerSpec::Relu);
+        in_dim = hidden;
+    }
+    layers.push(LayerSpec::Linear {
+        in_dim,
         out_dim: num_classes,
     });
     Ok(layers)
@@ -505,7 +979,23 @@ enum Saved {
     Linear { input: Tensor },
     Relu { pre: Tensor },
     Pool { arg: Vec<usize>, in_shape: Vec<usize> },
+    AvgPool { in_shape: Vec<usize> },
+    Residual,
     Flatten { in_shape: Vec<usize> },
+}
+
+/// The skip-open layer index of every `ResidualAdd` in `layers` —
+/// forward passes stash a clone of the activation entering each of
+/// these, backward walks accumulate the pending skip gradient there.
+pub(crate) fn residual_opens(layers: &[LayerSpec]) -> Vec<usize> {
+    layers
+        .iter()
+        .enumerate()
+        .filter_map(|(li, l)| match l {
+            LayerSpec::ResidualAdd { span } => Some(li - span),
+            _ => None,
+        })
+        .collect()
 }
 
 impl ModelOracle {
@@ -528,36 +1018,28 @@ impl ModelOracle {
                 dilation: *dilation,
                 groups: *groups,
             },
+            LayerSpec::Conv1d {
+                stride,
+                padding,
+                dilation,
+                groups,
+                ..
+            } => ConvArgs {
+                stride: (1, *stride),
+                padding: (0, *padding),
+                dilation: (1, *dilation),
+                groups: *groups,
+            },
             _ => unreachable!(),
         }
     }
 
     /// Slice (weight, bias) views for layer `li` out of flat theta.
     fn layer_params<'t>(&self, theta: &'t [f32], li: usize) -> (&'t [f32], &'t [f32]) {
-        let mut off = 0;
-        for (i, l) in self.spec.layers.iter().enumerate() {
-            let n = l.param_count();
-            if i == li {
-                let (wn, bn) = match l {
-                    LayerSpec::Conv2d {
-                        in_ch,
-                        out_ch,
-                        kernel,
-                        groups,
-                        ..
-                    } => (
-                        out_ch * (in_ch / groups) * kernel.0 * kernel.1,
-                        *out_ch,
-                    ),
-                    LayerSpec::Linear { in_dim, out_dim } => (out_dim * in_dim, *out_dim),
-                    LayerSpec::InstanceNorm { channels, .. } => (*channels, *channels),
-                    _ => (0, 0),
-                };
-                return (&theta[off..off + wn], &theta[off + wn..off + wn + bn]);
-            }
-            off += n;
-        }
-        panic!("layer {li} out of range");
+        assert!(li < self.spec.layers.len(), "layer {li} out of range");
+        let off = self.spec.param_offsets()[li];
+        let (wn, bn) = self.spec.layer_param_counts(li);
+        (&theta[off..off + wn], &theta[off + wn..off + wn + bn])
     }
 
     /// Forward pass. x: (B, C, H, W) -> logits (B, num_classes).
@@ -573,7 +1055,12 @@ impl ModelOracle {
         );
         let mut cur = x.clone();
         let mut saved = Vec::new();
+        let opens = residual_opens(&self.spec.layers);
+        let mut stash: std::collections::HashMap<usize, Tensor> = std::collections::HashMap::new();
         for (li, l) in self.spec.layers.iter().enumerate() {
+            if opens.contains(&li) {
+                stash.insert(li, cur.clone());
+            }
             match l {
                 LayerSpec::Conv2d {
                     in_ch,
@@ -591,6 +1078,21 @@ impl ModelOracle {
                     saved.push(Saved::Conv { input: cur });
                     cur = y;
                 }
+                LayerSpec::Conv1d {
+                    in_ch,
+                    out_ch,
+                    kernel,
+                    groups,
+                    ..
+                } => {
+                    assert_eq!(cur.shape[2], 1, "Conv1d needs (B, C, 1, L) activations");
+                    let (wv, bv) = self.layer_params(theta, li);
+                    let w =
+                        Tensor::from_vec(&[*out_ch, in_ch / groups, 1, *kernel], wv.to_vec());
+                    let y = tensor::conv2d(&cur, &w, Some(bv), Self::conv_args(l));
+                    saved.push(Saved::Conv { input: cur });
+                    cur = y;
+                }
                 LayerSpec::Linear { in_dim, out_dim } => {
                     let (wv, bv) = self.layer_params(theta, li);
                     let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
@@ -601,6 +1103,12 @@ impl ModelOracle {
                 LayerSpec::InstanceNorm { eps, .. } => {
                     let (gv, bv) = self.layer_params(theta, li);
                     let (y, xhat, inv_std) = tensor::instance_norm(&cur, gv, bv, *eps);
+                    saved.push(Saved::Norm { xhat, inv_std });
+                    cur = y;
+                }
+                LayerSpec::GroupNorm { groups, eps, .. } => {
+                    let (gv, bv) = self.layer_params(theta, li);
+                    let (y, xhat, inv_std) = tensor::group_norm(&cur, gv, bv, *groups, *eps);
                     saved.push(Saved::Norm { xhat, inv_std });
                     cur = y;
                 }
@@ -616,6 +1124,23 @@ impl ModelOracle {
                         in_shape: cur.shape.clone(),
                     });
                     cur = y;
+                }
+                LayerSpec::AvgPool2d { window, stride } => {
+                    let y = tensor::avgpool2d(&cur, *window, *stride);
+                    saved.push(Saved::AvgPool {
+                        in_shape: cur.shape.clone(),
+                    });
+                    cur = y;
+                }
+                LayerSpec::ResidualAdd { span } => {
+                    let skip = stash
+                        .get(&(li - span))
+                        .expect("validated spec: skip opens before its join");
+                    assert_eq!(cur.shape, skip.shape, "residual shape mismatch");
+                    for (a, b) in cur.data.iter_mut().zip(&skip.data) {
+                        *a += *b;
+                    }
+                    saved.push(Saved::Residual);
                 }
                 LayerSpec::Flatten => {
                     let in_shape = cur.shape.clone();
@@ -641,9 +1166,12 @@ impl ModelOracle {
         let (logits, saved) = self.forward_saved(theta, x);
         let (losses, mut dy) = tensor::softmax_xent(&logits, labels);
 
-        // walk backwards, filling per-layer grads into the flat matrix
+        // walk backwards, filling per-layer grads into the flat
+        // matrix. `pending[j]` holds skip gradients waiting for the
+        // walk to reach layer j's input (the skip-join rule).
         let mut pergrads = Tensor::zeros(&[bsz, p_total]);
         let offsets = self.spec.param_offsets();
+        let mut pending: Vec<Option<Tensor>> = (0..self.spec.layers.len()).map(|_| None).collect();
         for (li, l) in self.spec.layers.iter().enumerate().rev() {
             let s = &saved[li];
             match (l, s) {
@@ -661,7 +1189,6 @@ impl ModelOracle {
                     // Eq. 4: per-example weight grads
                     let dw = tensor::perex_conv2d_grad(input, &dy, kernel.0, kernel.1, args);
                     let wn = out_ch * (in_ch / groups) * kernel.0 * kernel.1;
-                    let per = wn + out_ch; // weights + bias
                     for b in 0..bsz {
                         let dst = &mut pergrads.data[b * p_total + offsets[li]..];
                         dst[..wn].copy_from_slice(&dw.data[b * wn..(b + 1) * wn]);
@@ -674,14 +1201,52 @@ impl ModelOracle {
                             }
                             dst[wn + d] = acc as f32;
                         }
-                        let _ = per;
                     }
-                    if li > 0 {
+                    if li > 0 || pending[li].is_some() {
                         let (wv, _) = self.layer_params(theta, li);
                         let w = Tensor::from_vec(
                             &[*out_ch, in_ch / groups, kernel.0, kernel.1],
                             wv.to_vec(),
                         );
+                        dy = tensor::conv2d_grad_input(
+                            &dy,
+                            &w,
+                            input.shape[2],
+                            input.shape[3],
+                            args,
+                        );
+                    }
+                }
+                (
+                    LayerSpec::Conv1d {
+                        in_ch,
+                        out_ch,
+                        kernel,
+                        groups,
+                        ..
+                    },
+                    Saved::Conv { input, .. },
+                ) => {
+                    // a Conv1d is a (1, k) Conv2d on (B, C, 1, L)
+                    let args = Self::conv_args(l);
+                    let dw = tensor::perex_conv2d_grad(input, &dy, 1, *kernel, args);
+                    let wn = out_ch * (in_ch / groups) * kernel;
+                    for b in 0..bsz {
+                        let dst = &mut pergrads.data[b * p_total + offsets[li]..];
+                        dst[..wn].copy_from_slice(&dw.data[b * wn..(b + 1) * wn]);
+                        let lo = dy.shape[2] * dy.shape[3];
+                        for d in 0..*out_ch {
+                            let mut acc = 0.0f64;
+                            for t in 0..lo {
+                                acc += dy.data[((b * out_ch + d) * lo) + t] as f64;
+                            }
+                            dst[wn + d] = acc as f32;
+                        }
+                    }
+                    if li > 0 || pending[li].is_some() {
+                        let (wv, _) = self.layer_params(theta, li);
+                        let w =
+                            Tensor::from_vec(&[*out_ch, in_ch / groups, 1, *kernel], wv.to_vec());
                         dy = tensor::conv2d_grad_input(
                             &dy,
                             &w,
@@ -700,7 +1265,7 @@ impl ModelOracle {
                         dst[wn..wn + out_dim]
                             .copy_from_slice(&dy.data[b * out_dim..(b + 1) * out_dim]);
                     }
-                    if li > 0 {
+                    if li > 0 || pending[li].is_some() {
                         let (wv, _) = self.layer_params(theta, li);
                         let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
                         dy = tensor::linear_grad_input(&dy, &w);
@@ -721,16 +1286,56 @@ impl ModelOracle {
                     }
                     dy = dx;
                 }
+                (
+                    LayerSpec::GroupNorm {
+                        groups, channels, ..
+                    },
+                    Saved::Norm { xhat, inv_std },
+                ) => {
+                    let (gv, _) = self.layer_params(theta, li);
+                    let (dgamma, dbeta, dx) =
+                        tensor::group_norm_grad(&dy, xhat, inv_std, gv, *groups);
+                    let cc = *channels;
+                    for b in 0..bsz {
+                        let dst = &mut pergrads.data[b * p_total + offsets[li]..];
+                        dst[..cc].copy_from_slice(&dgamma.data[b * cc..(b + 1) * cc]);
+                        dst[cc..2 * cc].copy_from_slice(&dbeta.data[b * cc..(b + 1) * cc]);
+                    }
+                    dy = dx;
+                }
                 (LayerSpec::Relu, Saved::Relu { pre }) => {
                     dy = tensor::relu_grad(&dy, pre);
                 }
                 (LayerSpec::MaxPool2d { .. }, Saved::Pool { arg, in_shape }) => {
                     dy = tensor::maxpool2d_grad(&dy, arg, in_shape);
                 }
+                (LayerSpec::AvgPool2d { window, stride }, Saved::AvgPool { in_shape }) => {
+                    dy = tensor::avgpool2d_grad(&dy, *window, *stride, in_shape);
+                }
+                (LayerSpec::ResidualAdd { span }, Saved::Residual) => {
+                    // skip-join: dy flows through unchanged AND a copy
+                    // waits for the opening layer's input
+                    let open = li - span;
+                    match &mut pending[open] {
+                        Some(t) => {
+                            for (a, b) in t.data.iter_mut().zip(&dy.data) {
+                                *a += *b;
+                            }
+                        }
+                        None => pending[open] = Some(dy.clone()),
+                    }
+                }
                 (LayerSpec::Flatten, Saved::Flatten { in_shape }) => {
                     dy = dy.reshape(in_shape);
                 }
                 _ => unreachable!("spec/saved mismatch at layer {li}"),
+            }
+            // dy is now the gradient w.r.t. layer li's input: fold in
+            // any skip gradient that joins here
+            if let Some(extra) = pending[li].take() {
+                for (a, b) in dy.data.iter_mut().zip(&extra.data) {
+                    *a += *b;
+                }
             }
         }
         (pergrads, losses)
@@ -880,6 +1485,185 @@ mod tests {
             let spec = ModelSpec::from_manifest(&cfg).unwrap();
             let by_sum: usize = spec.layers.iter().map(|l| l.param_count()).sum();
             assert_eq!(by_sum, spec.param_count());
+        }
+    }
+
+    fn spec_of(layers: Vec<LayerSpec>, input_shape: (usize, usize, usize)) -> ModelSpec {
+        ModelSpec {
+            arch: "handmade".into(),
+            layers,
+            input_shape,
+            num_classes: 10,
+        }
+    }
+
+    /// Structural validation rejects inconsistent zoo specs with
+    /// messages that say *what* is wrong and *where*.
+    #[test]
+    fn validate_rejects_bad_zoo_specs() {
+        // GroupNorm groups not dividing channels
+        let s = spec_of(
+            vec![LayerSpec::GroupNorm {
+                groups: 3,
+                channels: 8,
+                eps: 1e-5,
+            }],
+            (8, 4, 4),
+        );
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("does not divide"), "{e}");
+
+        // pooling a flattened activation
+        let s = spec_of(
+            vec![
+                LayerSpec::Flatten,
+                LayerSpec::AvgPool2d {
+                    window: (2, 2),
+                    stride: (2, 2),
+                },
+            ],
+            (2, 4, 4),
+        );
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("cannot pool a flattened activation"), "{e}");
+
+        // residual join whose spanned layers change shape
+        let s = spec_of(
+            vec![
+                LayerSpec::MaxPool2d {
+                    window: (2, 2),
+                    stride: (2, 2),
+                },
+                LayerSpec::ResidualAdd { span: 1 },
+            ],
+            (2, 4, 4),
+        );
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("skip shape mismatch"), "{e}");
+
+        // residual span out of range
+        let s = spec_of(vec![LayerSpec::ResidualAdd { span: 1 }], (2, 4, 4));
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("span"), "{e}");
+
+        // Conv1d on a height > 1 activation
+        let s = spec_of(
+            vec![LayerSpec::Conv1d {
+                in_ch: 2,
+                out_ch: 3,
+                kernel: 3,
+                stride: 1,
+                padding: 0,
+                dilation: 1,
+                groups: 1,
+            }],
+            (2, 4, 4),
+        );
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("height-1"), "{e}");
+
+        // valid zoo specs pass
+        spec_of(
+            vec![
+                LayerSpec::GroupNorm {
+                    groups: 4,
+                    channels: 8,
+                    eps: 1e-5,
+                },
+                LayerSpec::Relu,
+                LayerSpec::ResidualAdd { span: 2 },
+            ],
+            (8, 4, 4),
+        )
+        .validate()
+        .unwrap();
+        spec_of(
+            vec![LayerSpec::Conv1d {
+                in_ch: 2,
+                out_ch: 3,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+                dilation: 1,
+                groups: 1,
+            }],
+            (2, 1, 12),
+        )
+        .validate()
+        .unwrap();
+    }
+
+    #[test]
+    fn residual_gn_preset_structure() {
+        let spec = ModelSpec::residual_gn(2, 8, 4, (3, 8, 8), 10).unwrap();
+        let count = |f: &dyn Fn(&LayerSpec) -> bool| spec.layers.iter().filter(|l| f(l)).count();
+        assert_eq!(count(&|l| matches!(l, LayerSpec::Conv2d { .. })), 3);
+        assert_eq!(count(&|l| matches!(l, LayerSpec::GroupNorm { .. })), 3);
+        assert_eq!(count(&|l| matches!(l, LayerSpec::ResidualAdd { .. })), 2);
+        assert_eq!(count(&|l| matches!(l, LayerSpec::AvgPool2d { .. })), 1);
+        // groups that don't divide the block width die in from_manifest
+        let e = ModelSpec::residual_gn(1, 8, 3, (3, 8, 8), 10)
+            .unwrap_err()
+            .to_string();
+        assert!(format!("{e:#}").contains("does not divide") || e.contains("invalid"), "{e}");
+    }
+
+    #[test]
+    fn linear_head_preset_structure() {
+        let spec = ModelSpec::linear_head(2, 6, 32, (3, 16, 16), 10).unwrap();
+        let linears = spec
+            .layers
+            .iter()
+            .filter(|l| matches!(l, LayerSpec::Linear { .. }))
+            .count();
+        assert_eq!(linears, 3, "2 hidden + classifier");
+        assert!(spec
+            .layers
+            .iter()
+            .any(|l| matches!(l, LayerSpec::MaxPool2d { .. })));
+    }
+
+    /// FD gradcheck for a mixed zoo model: residual blocks, GroupNorm,
+    /// average pooling — the oracle's skip-join backward must agree
+    /// with central differences of the per-example loss.
+    #[test]
+    fn zoo_oracle_grads_match_finite_difference() {
+        let spec = ModelSpec::residual_gn(1, 4, 2, (2, 6, 6), 5).unwrap();
+        let oracle = ModelOracle::new(spec);
+        let p = oracle.spec.param_count();
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let mut theta = vec![0.0f32; p];
+        rng.fill_gaussian(&mut theta, 0.1);
+        let bsz = 2;
+        let mut xdata = vec![0.0f32; bsz * 2 * 6 * 6];
+        rng.fill_gaussian(&mut xdata, 1.0);
+        let x = Tensor::from_vec(&[bsz, 2, 6, 6], xdata);
+        let labels = [1i32, 3];
+        let (grads, losses) = oracle.perex_grads(&theta, &x, &labels);
+        assert!(losses.iter().all(|l| l.is_finite()));
+        let eps = 1e-2f32;
+        let probes = [0usize, p / 4, p / 2, 3 * p / 4, p - 1];
+        for &i in &probes {
+            let orig = theta[i];
+            theta[i] = orig + eps;
+            let lp = {
+                let logits = oracle.forward(&theta, &x);
+                tensor::softmax_xent(&logits, &labels).0
+            };
+            theta[i] = orig - eps;
+            let lm = {
+                let logits = oracle.forward(&theta, &x);
+                tensor::softmax_xent(&logits, &labels).0
+            };
+            theta[i] = orig;
+            for b in 0..bsz {
+                let fd = (lp[b] - lm[b]) / (2.0 * eps);
+                let an = grads.data[b * p + i];
+                assert!(
+                    (fd - an).abs() < 3e-2,
+                    "theta[{i}] example {b}: fd {fd} vs analytic {an}"
+                );
+            }
         }
     }
 }

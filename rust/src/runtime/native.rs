@@ -153,8 +153,8 @@ impl NativeBackend {
     }
 
     /// He-style initialization, deterministic by seed: conv/linear
-    /// weights ~ N(0, 2/fan_in), biases 0, instance-norm gamma 1 /
-    /// beta 0 (the same scheme the jax init artifacts use).
+    /// weights ~ N(0, 2/fan_in), biases 0, norm (instance/group)
+    /// gamma 1 / beta 0 (the same scheme the jax init artifacts use).
     pub fn init_vector(spec: &ModelSpec, seed: u64) -> Vec<f32> {
         let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xA5A5_5A5A_D00D_FEED);
         let mut theta = vec![0.0f32; spec.param_count()];
@@ -173,11 +173,21 @@ impl NativeBackend {
                     let std = (2.0 / fan_in as f32).sqrt();
                     rng.fill_gaussian(&mut theta[off..off + wn], std);
                 }
+                LayerSpec::Conv1d {
+                    in_ch,
+                    kernel,
+                    groups,
+                    ..
+                } => {
+                    let fan_in = ((in_ch / groups) * kernel).max(1);
+                    let std = (2.0 / fan_in as f32).sqrt();
+                    rng.fill_gaussian(&mut theta[off..off + wn], std);
+                }
                 LayerSpec::Linear { in_dim, .. } => {
                     let std = (2.0 / (*in_dim).max(1) as f32).sqrt();
                     rng.fill_gaussian(&mut theta[off..off + wn], std);
                 }
-                LayerSpec::InstanceNorm { .. } => {
+                LayerSpec::InstanceNorm { .. } | LayerSpec::GroupNorm { .. } => {
                     for v in &mut theta[off..off + wn] {
                         *v = 1.0; // gamma; beta stays 0
                     }

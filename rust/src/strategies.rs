@@ -344,7 +344,13 @@ pub fn fast_forward(spec: &ModelSpec, theta: &[f32], x: &Tensor) -> Tensor {
     assert_eq!(theta.len(), spec.param_count(), "theta length mismatch");
     let offsets = spec.param_offsets();
     let mut cur = x.clone();
+    // residual skips: stash the activation entering each span opener
+    let opens = crate::models::residual_opens(&spec.layers);
+    let mut stash: std::collections::HashMap<usize, Tensor> = std::collections::HashMap::new();
     for (li, l) in spec.layers.iter().enumerate() {
+        if opens.contains(&li) {
+            stash.insert(li, cur.clone());
+        }
         cur = match l {
             LayerSpec::Conv2d {
                 in_ch,
@@ -360,6 +366,17 @@ pub fn fast_forward(spec: &ModelSpec, theta: &[f32], x: &Tensor) -> Tensor {
                 );
                 tensor::conv2d_im2col(&cur, &w, Some(bv), conv_args(l))
             }
+            LayerSpec::Conv1d {
+                in_ch,
+                out_ch,
+                kernel,
+                groups,
+                ..
+            } => {
+                let (wv, bv) = layer_params(spec, &offsets, theta, li);
+                let w = Tensor::from_vec(&[*out_ch, in_ch / groups, 1, *kernel], wv.to_vec());
+                tensor::conv2d_im2col(&cur, &w, Some(bv), conv_args(l))
+            }
             LayerSpec::Linear { in_dim, out_dim } => {
                 let (wv, bv) = layer_params(spec, &offsets, theta, li);
                 let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
@@ -369,9 +386,26 @@ pub fn fast_forward(spec: &ModelSpec, theta: &[f32], x: &Tensor) -> Tensor {
                 let (gv, bv) = layer_params(spec, &offsets, theta, li);
                 tensor::instance_norm(&cur, gv, bv, *eps).0
             }
+            LayerSpec::GroupNorm { groups, eps, .. } => {
+                let (gv, bv) = layer_params(spec, &offsets, theta, li);
+                tensor::group_norm(&cur, gv, bv, *groups, *eps).0
+            }
             LayerSpec::Relu => tensor::relu(&cur),
             LayerSpec::MaxPool2d { window, stride } => {
                 tensor::maxpool2d(&cur, *window, *stride).0
+            }
+            LayerSpec::AvgPool2d { window, stride } => {
+                tensor::avgpool2d(&cur, *window, *stride)
+            }
+            LayerSpec::ResidualAdd { span } => {
+                let skip = stash
+                    .get(&(li - span))
+                    .expect("validated spec: skip opens before its join");
+                let mut out = cur;
+                for (a, b) in out.data.iter_mut().zip(&skip.data) {
+                    *a += *b;
+                }
+                out
             }
             LayerSpec::Flatten => {
                 let b = cur.shape[0];

@@ -758,6 +758,169 @@ pub fn instance_norm_grad(
     (dgamma, dbeta, dx)
 }
 
+/// Group-norm forward — instance norm's group-pooled sibling (Wu &
+/// He 2018), the normalization DP practitioners reach for when
+/// channels are too narrow to normalize alone.
+///
+/// x: (B, C, H, W), gamma/beta: (C,), `groups` dividing C  ->
+/// (y, xhat, inv_std) where xhat is the per-(example, group)
+/// normalized input (population variance over the group's channels ×
+/// spatial dims) and inv_std is 1/sqrt(var + eps) per (b, g) — both
+/// needed by the backward pass. `groups == C` recovers
+/// [`instance_norm`] exactly (same accumulation order per slice).
+pub fn group_norm(
+    x: &Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    groups: usize,
+    eps: f32,
+) -> (Tensor, Tensor, Vec<f32>) {
+    let (bsz, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(c % groups, 0, "groups must divide channels");
+    let cn = c / groups;
+    let hw = h * w;
+    let n = cn * hw;
+    let mut y = Tensor::zeros(&x.shape);
+    let mut xhat = Tensor::zeros(&x.shape);
+    let mut inv_std = vec![0.0f32; bsz * groups];
+    for b in 0..bsz {
+        for g in 0..groups {
+            let base = (b * c + g * cn) * hw;
+            let slice = &x.data[base..base + n];
+            let mean = slice.iter().map(|v| *v as f64).sum::<f64>() / n as f64;
+            let var = slice
+                .iter()
+                .map(|v| (*v as f64 - mean) * (*v as f64 - mean))
+                .sum::<f64>()
+                / n as f64;
+            let istd = 1.0 / (var + eps as f64).sqrt();
+            inv_std[b * groups + g] = istd as f32;
+            for i in 0..n {
+                let ci = g * cn + i / hw;
+                let xh = ((x.data[base + i] as f64 - mean) * istd) as f32;
+                xhat.data[base + i] = xh;
+                y.data[base + i] = gamma[ci] * xh + beta[ci];
+            }
+        }
+    }
+    (y, xhat, inv_std)
+}
+
+/// Group-norm backward: per-example affine grads + input grad.
+///
+/// Returns (dgamma (B, C), dbeta (B, C), dx (B, C, H, W)); dgamma and
+/// dbeta are *per-example* (the quantity DP-SGD clips) and are the
+/// same per-channel reductions as instance norm's — only dx differs,
+/// because the normalization statistics pool `C/groups` channels.
+pub fn group_norm_grad(
+    dy: &Tensor,
+    xhat: &Tensor,
+    inv_std: &[f32],
+    gamma: &[f32],
+    groups: usize,
+) -> (Tensor, Tensor, Tensor) {
+    let (bsz, c, h, w) = (dy.shape[0], dy.shape[1], dy.shape[2], dy.shape[3]);
+    let cn = c / groups;
+    let hw = h * w;
+    let n = cn * hw;
+    let mut dgamma = Tensor::zeros(&[bsz, c]);
+    let mut dbeta = Tensor::zeros(&[bsz, c]);
+    let mut dx = Tensor::zeros(&dy.shape);
+    for b in 0..bsz {
+        for g in 0..groups {
+            let base = (b * c + g * cn) * hw;
+            // group-wide sums of dyh = gamma_c·dy (and dyh·xhat), plus
+            // the per-channel affine reductions, in one sweep
+            let mut sum_dyh = 0.0f64;
+            let mut sum_dyh_xhat = 0.0f64;
+            for ci in 0..cn {
+                let cc = g * cn + ci;
+                let cbase = base + ci * hw;
+                let mut sum_dy = 0.0f64;
+                let mut sum_dy_xhat = 0.0f64;
+                for i in 0..hw {
+                    sum_dy += dy.data[cbase + i] as f64;
+                    sum_dy_xhat += (dy.data[cbase + i] * xhat.data[cbase + i]) as f64;
+                }
+                dgamma.data[b * c + cc] = sum_dy_xhat as f32;
+                dbeta.data[b * c + cc] = sum_dy as f32;
+                sum_dyh += gamma[cc] as f64 * sum_dy;
+                sum_dyh_xhat += gamma[cc] as f64 * sum_dy_xhat;
+            }
+            let mean_dyh = sum_dyh / n as f64;
+            let mean_dyh_xhat = sum_dyh_xhat / n as f64;
+            let istd = inv_std[b * groups + g] as f64;
+            for ci in 0..cn {
+                let cc = g * cn + ci;
+                let cbase = base + ci * hw;
+                let gm = gamma[cc] as f64;
+                for i in 0..hw {
+                    dx.data[cbase + i] = (istd
+                        * (gm * dy.data[cbase + i] as f64
+                            - mean_dyh
+                            - xhat.data[cbase + i] as f64 * mean_dyh_xhat))
+                        as f32;
+                }
+            }
+        }
+    }
+    (dgamma, dbeta, dx)
+}
+
+/// Average-pool forward (no padding, PyTorch `count_include_pad`
+/// irrelevant since windows always lie fully inside the input).
+pub fn avgpool2d(x: &Tensor, window: (usize, usize), stride: (usize, usize)) -> Tensor {
+    let (bsz, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h - window.0) / stride.0 + 1;
+    let wo = (w - window.1) / stride.1 + 1;
+    let area = (window.0 * window.1) as f64;
+    let mut y = Tensor::zeros(&[bsz, c, ho, wo]);
+    for b in 0..bsz {
+        for ci in 0..c {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = 0.0f64;
+                    for ky in 0..window.0 {
+                        for kx in 0..window.1 {
+                            acc += x.get4(b, ci, oy * stride.0 + ky, ox * stride.1 + kx) as f64;
+                        }
+                    }
+                    y.set4(b, ci, oy, ox, (acc / area) as f32);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Average-pool backward: scatter `dy/area` to every input position
+/// inside each window (windows may overlap when stride < window).
+pub fn avgpool2d_grad(
+    dy: &Tensor,
+    window: (usize, usize),
+    stride: (usize, usize),
+    input_shape: &[usize],
+) -> Tensor {
+    let (bsz, c, ho, wo) = (dy.shape[0], dy.shape[1], dy.shape[2], dy.shape[3]);
+    let inv_area = 1.0 / (window.0 * window.1) as f32;
+    let mut dx = Tensor::zeros(input_shape);
+    for b in 0..bsz {
+        for ci in 0..c {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let g = dy.get4(b, ci, oy, ox) * inv_area;
+                    for ky in 0..window.0 {
+                        for kx in 0..window.1 {
+                            dx.add4(b, ci, oy * stride.0 + ky, ox * stride.1 + kx, g);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
 /// Softmax cross-entropy: returns (per-example losses, dlogits) where
 /// dlogits is the gradient of the SUM of losses (so each row is the
 /// per-example gradient — what the crb taps see).
@@ -1435,6 +1598,134 @@ mod tests {
                 dx.data[i]
             );
         }
+    }
+
+    /// groups == channels degenerates to instance norm — same slices,
+    /// same accumulation order, so forward and backward must agree to
+    /// the bit.
+    #[test]
+    fn group_norm_with_groups_eq_channels_is_instance_norm() {
+        let mut rng = Xoshiro256pp::seed_from_u64(30);
+        let x = randn(&mut rng, &[2, 3, 4, 5]);
+        let gamma = [1.1f32, 0.8, 1.4];
+        let beta = [0.2f32, -0.3, 0.0];
+        let (yi, xhi, isi) = instance_norm(&x, &gamma, &beta, 1e-5);
+        let (yg, xhg, isg) = group_norm(&x, &gamma, &beta, 3, 1e-5);
+        assert_eq!(yi.data, yg.data);
+        assert_eq!(xhi.data, xhg.data);
+        assert_eq!(isi, isg);
+        let m = randn(&mut rng, &[2, 3, 4, 5]);
+        let (dgi, dbi, dxi) = instance_norm_grad(&m, &xhi, &isi, &gamma);
+        let (dgg, dbg, dxg) = group_norm_grad(&m, &xhg, &isg, &gamma, 3);
+        assert_eq!(dgi.data, dgg.data);
+        assert_eq!(dbi.data, dbg.data);
+        // dx formulas are algebraically identical at cn=1 but ordered
+        // differently (group sweep vs channel sweep) — float tolerance
+        assert!(dxi.max_abs_diff(&dxg) < 1e-6);
+    }
+
+    #[test]
+    fn group_norm_grad_matches_finite_difference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let (bsz, c, h, w, groups) = (2usize, 4usize, 3usize, 3usize, 2usize);
+        let x = randn(&mut rng, &[bsz, c, h, w]);
+        let gamma = [1.3f32, 0.7, 1.0, 0.9];
+        let beta = [0.1f32, -0.2, 0.3, 0.0];
+        let eps = 1e-5f32;
+        let m = randn(&mut rng, &[bsz, c, h, w]); // per-example loss mask
+        let (_, xhat, inv_std) = group_norm(&x, &gamma, &beta, groups, eps);
+        let (dgamma, dbeta, dx) = group_norm_grad(&m, &xhat, &inv_std, &gamma, groups);
+
+        let n = c * h * w;
+        let loss = |x: &Tensor, gamma: &[f32], beta: &[f32], b: usize| -> f64 {
+            let (y, _, _) = group_norm(x, gamma, beta, groups, eps);
+            y.data[b * n..(b + 1) * n]
+                .iter()
+                .zip(&m.data[b * n..(b + 1) * n])
+                .map(|(a, c)| (a * c) as f64)
+                .sum()
+        };
+        let fd_eps = 1e-3f32;
+        for b in 0..bsz {
+            for ci in 0..c {
+                let mut gp = gamma;
+                gp[ci] += fd_eps;
+                let mut gm = gamma;
+                gm[ci] -= fd_eps;
+                let fd =
+                    (loss(&x, &gp, &beta, b) - loss(&x, &gm, &beta, b)) / (2.0 * fd_eps as f64);
+                let an = dgamma.data[b * c + ci];
+                assert!((fd as f32 - an).abs() < 2e-2, "dgamma[{b},{ci}] {fd} vs {an}");
+
+                let mut bp = beta;
+                bp[ci] += fd_eps;
+                let mut bm = beta;
+                bm[ci] -= fd_eps;
+                let fd =
+                    (loss(&x, &gamma, &bp, b) - loss(&x, &gamma, &bm, b)) / (2.0 * fd_eps as f64);
+                let an = dbeta.data[b * c + ci];
+                assert!((fd as f32 - an).abs() < 2e-2, "dbeta[{b},{ci}] {fd} vs {an}");
+            }
+        }
+        let mut xp = x.clone();
+        for &i in &[0usize, 10, 30, xp.data.len() - 1] {
+            let b = i / n;
+            let orig = xp.data[i];
+            xp.data[i] = orig + fd_eps;
+            let lp = loss(&xp, &gamma, &beta, b);
+            xp.data[i] = orig - fd_eps;
+            let lm = loss(&xp, &gamma, &beta, b);
+            xp.data[i] = orig;
+            let fd = (lp - lm) / (2.0 * fd_eps as f64);
+            assert!(
+                (fd as f32 - dx.data[i]).abs() < 2e-2,
+                "dx[{i}] {fd} vs {}",
+                dx.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn avgpool_forward_and_grad() {
+        let x = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            vec![
+                1.0, 2.0, 5.0, 3.0, //
+                4.0, 0.0, 1.0, 2.0, //
+                7.0, 8.0, 3.0, 1.0, //
+                0.0, 2.0, 9.0, 4.0,
+            ],
+        );
+        let y = avgpool2d(&x, (2, 2), (2, 2));
+        assert_eq!(y.data, vec![1.75, 2.75, 4.25, 4.25]);
+        let dy = Tensor::from_vec(&[1, 1, 2, 2], vec![4.0, 8.0, 12.0, 16.0]);
+        let dx = avgpool2d_grad(&dy, (2, 2), (2, 2), &x.shape);
+        // each input cell of window (oy, ox) receives dy/4
+        assert_eq!(dx.get4(0, 0, 0, 0), 1.0);
+        assert_eq!(dx.get4(0, 0, 1, 1), 1.0);
+        assert_eq!(dx.get4(0, 0, 0, 2), 2.0);
+        assert_eq!(dx.get4(0, 0, 2, 1), 3.0);
+        assert_eq!(dx.get4(0, 0, 3, 3), 4.0);
+        // overlapping windows accumulate: stride 1 over a 1x2 window
+        let y1 = avgpool2d(&x, (1, 2), (1, 1));
+        assert_eq!(y1.shape, vec![1, 1, 4, 3]);
+        let dy1 = Tensor::from_vec(&[1, 1, 4, 3], vec![2.0; 12]);
+        let dx1 = avgpool2d_grad(&dy1, (1, 2), (1, 1), &x.shape);
+        // interior columns sit in two windows: 2·(2/2) = 2
+        assert_eq!(dx1.get4(0, 0, 0, 0), 1.0);
+        assert_eq!(dx1.get4(0, 0, 0, 1), 2.0);
+        assert_eq!(dx1.get4(0, 0, 0, 3), 1.0);
+    }
+
+    /// A 1×1 average pool is the identity (and its gradient too).
+    #[test]
+    fn avgpool_1x1_is_identity() {
+        let mut rng = Xoshiro256pp::seed_from_u64(32);
+        let x = randn(&mut rng, &[2, 3, 4, 4]);
+        let y = avgpool2d(&x, (1, 1), (1, 1));
+        assert_eq!(y.data, x.data);
+        let dx = avgpool2d_grad(&y, (1, 1), (1, 1), &x.shape);
+        assert_eq!(dx.data, x.data);
     }
 
     #[test]

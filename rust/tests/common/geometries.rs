@@ -1,10 +1,12 @@
 //! The one randomized model-geometry generator every numerics test
 //! shares — stride / padding / dilation / groups / channel sweeps,
-//! optional instance norm and pooling — plus the matching random
+//! optional norms (instance and group), pooling (max and average),
+//! residual blocks and Conv1d geometries — plus the matching random
 //! problem (theta, inputs, labels) and a single-conv-layer case for
 //! the finite-difference gradchecks. `tests/ghostnorm.rs`,
-//! `tests/oracle_gradcheck.rs`, `tests/native_backend.rs` and
-//! `tests/ghost_fused_differential.rs` all draw from here instead of
+//! `tests/oracle_gradcheck.rs`, `tests/native_backend.rs`,
+//! `tests/ghost_fused_differential.rs` and
+//! `tests/ghost_reuse_differential.rs` all draw from here instead of
 //! carrying private copies.
 
 use grad_cnns::check::gen_range;
@@ -20,9 +22,19 @@ pub fn randn(rng: &mut Xoshiro256pp, shape: &[usize]) -> Tensor {
     Tensor::from_vec(shape, data)
 }
 
+/// Random group count: a divisor of `c`, drawn uniformly so the
+/// degenerate `groups == channels` (instance norm) and `groups == 1`
+/// (layer-norm-over-space) corners both show up.
+fn pick_groups(r: &mut Xoshiro256pp, c: usize) -> usize {
+    let divs: Vec<usize> = (1..=c).filter(|g| c % g == 0).collect();
+    divs[gen_range(r, 0, divs.len())]
+}
+
 /// Random model with the geometries the paper sweeps: conv layers with
-/// random stride/padding/dilation/groups, optional instance norm,
-/// relu, occasional pooling, then flatten + linear.
+/// random stride/padding/dilation/groups, optional norms (instance or
+/// group), relu, occasional pooling (max or average, sometimes the
+/// 1×1 identity window), an occasional shape-preserving residual
+/// block, then flatten + linear.
 pub fn random_geometry_spec(r: &mut Xoshiro256pp) -> ModelSpec {
     let mut layers = Vec::new();
     let mut c = gen_range(r, 1, 4) * gen_range(r, 1, 3); // groupable channel counts
@@ -70,20 +82,61 @@ pub fn random_geometry_spec(r: &mut Xoshiro256pp) -> ModelSpec {
         h = ho;
         w = wo;
         if r.next_f64() < 0.5 {
-            layers.push(LayerSpec::InstanceNorm {
-                channels: c,
-                eps: 1e-5,
-            });
+            if r.next_f64() < 0.5 {
+                layers.push(LayerSpec::InstanceNorm {
+                    channels: c,
+                    eps: 1e-5,
+                });
+            } else {
+                layers.push(LayerSpec::GroupNorm {
+                    groups: pick_groups(r, c),
+                    channels: c,
+                    eps: 1e-5,
+                });
+            }
         }
         layers.push(LayerSpec::Relu);
         if r.next_f64() < 0.4 && h >= 2 && w >= 2 {
-            layers.push(LayerSpec::MaxPool2d {
-                window: (2, 2),
-                stride: (2, 2),
-            });
-            h = (h - 2) / 2 + 1;
-            w = (w - 2) / 2 + 1;
+            // sometimes the 1×1 identity window — the pool degeneracy
+            let window = if r.next_f64() < 0.2 { (1, 1) } else { (2, 2) };
+            if r.next_f64() < 0.5 {
+                layers.push(LayerSpec::MaxPool2d {
+                    window,
+                    stride: window,
+                });
+            } else {
+                layers.push(LayerSpec::AvgPool2d {
+                    window,
+                    stride: window,
+                });
+            }
+            h = (h - window.0) / window.0 + 1;
+            w = (w - window.1) / window.1 + 1;
         }
+    }
+    if r.next_f64() < 0.35 {
+        // shape-preserving residual block: the skip opens at the
+        // activation entering the 3×3 conv and joins at ResidualAdd
+        layers.push(LayerSpec::Conv2d {
+            in_ch: c,
+            out_ch: c,
+            kernel: (3, 3),
+            stride: (1, 1),
+            padding: (1, 1),
+            dilation: (1, 1),
+            groups: 1,
+        });
+        let mut span = 2;
+        if r.next_f64() < 0.5 {
+            layers.push(LayerSpec::GroupNorm {
+                groups: pick_groups(r, c),
+                channels: c,
+                eps: 1e-5,
+            });
+            span = 3;
+        }
+        layers.push(LayerSpec::Relu);
+        layers.push(LayerSpec::ResidualAdd { span });
     }
     let num_classes = gen_range(r, 2, 8);
     layers.push(LayerSpec::Flatten);
@@ -97,6 +150,147 @@ pub fn random_geometry_spec(r: &mut Xoshiro256pp) -> ModelSpec {
         input_shape,
         num_classes,
     }
+}
+
+/// Random Conv1d model on a `(C, 1, L)` input: conv1d with random
+/// kernel/stride/padding/dilation/groups (falling back to the safe
+/// geometry on degenerate draws), relu, flatten, linear.
+pub fn random_conv1d_spec(r: &mut Xoshiro256pp) -> ModelSpec {
+    let groups = if r.next_f64() < 0.3 { 2 } else { 1 };
+    let c = groups * gen_range(r, 1, 3);
+    let l = gen_range(r, 6, 17);
+    let kernel = gen_range(r, 1, 5);
+    let mut stride = gen_range(r, 1, 3);
+    let mut padding = gen_range(r, 0, 2);
+    let mut dilation = gen_range(r, 1, 3);
+    let lo = |s: usize, p: usize, d: usize| {
+        let span = d * (kernel - 1) + 1;
+        (l + 2 * p).checked_sub(span).map(|n| n / s + 1)
+    };
+    if lo(stride, padding, dilation).is_none() {
+        stride = 1;
+        padding = kernel / 2;
+        dilation = 1;
+    }
+    let l_out = lo(stride, padding, dilation).unwrap();
+    let out_ch = groups * gen_range(r, 1, 4);
+    let num_classes = gen_range(r, 2, 8);
+    ModelSpec {
+        arch: "randconv1d".into(),
+        layers: vec![
+            LayerSpec::Conv1d {
+                in_ch: c,
+                out_ch,
+                kernel,
+                stride,
+                padding,
+                dilation,
+                groups,
+            },
+            LayerSpec::Relu,
+            LayerSpec::Flatten,
+            LayerSpec::Linear {
+                in_dim: out_ch * l_out,
+                out_dim: num_classes,
+            },
+        ],
+        input_shape: (c, 1, l),
+        num_classes,
+    }
+}
+
+/// The fixed degenerate zoo corners every matrix test must include:
+/// `groups == channels` GroupNorm, 1×1 pools (max and average), and a
+/// Conv1d whose kernel spans the whole input (length-1 output).
+pub fn degenerate_zoo_specs() -> Vec<ModelSpec> {
+    let conv = |out_ch: usize| LayerSpec::Conv2d {
+        in_ch: 2,
+        out_ch,
+        kernel: (3, 3),
+        stride: (1, 1),
+        padding: (1, 1),
+        dilation: (1, 1),
+        groups: 1,
+    };
+    let tail = |in_dim: usize| {
+        vec![
+            LayerSpec::Flatten,
+            LayerSpec::Linear { in_dim, out_dim: 5 },
+        ]
+    };
+    let mut specs = Vec::new();
+    // groups == channels: GroupNorm collapses to InstanceNorm
+    let mut layers = vec![
+        conv(4),
+        LayerSpec::GroupNorm {
+            groups: 4,
+            channels: 4,
+            eps: 1e-5,
+        },
+        LayerSpec::Relu,
+    ];
+    layers.extend(tail(4 * 6 * 6));
+    specs.push(ModelSpec {
+        arch: "zoo_gn_degenerate".into(),
+        layers,
+        input_shape: (2, 6, 6),
+        num_classes: 5,
+    });
+    // 1×1 pools: identity windows for both pool kinds
+    let mut layers = vec![
+        conv(3),
+        LayerSpec::Relu,
+        LayerSpec::MaxPool2d {
+            window: (1, 1),
+            stride: (1, 1),
+        },
+        LayerSpec::AvgPool2d {
+            window: (1, 1),
+            stride: (1, 1),
+        },
+    ];
+    layers.extend(tail(3 * 6 * 6));
+    specs.push(ModelSpec {
+        arch: "zoo_pool_degenerate".into(),
+        layers,
+        input_shape: (2, 6, 6),
+        num_classes: 5,
+    });
+    // Conv1d with kernel == L: a single output position per channel
+    let mut layers = vec![
+        LayerSpec::Conv1d {
+            in_ch: 2,
+            out_ch: 4,
+            kernel: 7,
+            stride: 1,
+            padding: 0,
+            dilation: 1,
+            groups: 1,
+        },
+        LayerSpec::Relu,
+    ];
+    layers.extend(tail(4));
+    specs.push(ModelSpec {
+        arch: "zoo_conv1d_degenerate".into(),
+        layers,
+        input_shape: (2, 1, 7),
+        num_classes: 5,
+    });
+    specs
+}
+
+/// The zoo case list the differential matrices iterate: a few random
+/// mixed geometries (which may draw GroupNorm / pooling / residual
+/// blocks), a few random Conv1d models, and the fixed degenerate
+/// corners.
+pub fn zoo_case_specs(r: &mut Xoshiro256pp, n_random: usize) -> Vec<ModelSpec> {
+    let mut specs = Vec::new();
+    for _ in 0..n_random {
+        specs.push(random_geometry_spec(r));
+        specs.push(random_conv1d_spec(r));
+    }
+    specs.extend(degenerate_zoo_specs());
+    specs
 }
 
 /// Random `(theta, x, y)` problem instance for a spec.

@@ -17,7 +17,7 @@
 
 mod common;
 
-use common::geometries::{random_geometry_spec, random_problem};
+use common::geometries::{random_geometry_spec, random_problem, zoo_case_specs};
 use grad_cnns::check::gen_range;
 use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode, GhostPipeline, PlanChoice};
 use grad_cnns::models::ModelSpec;
@@ -71,6 +71,51 @@ fn fused_bit_identical_to_two_pass_over_geometries() {
             "case {case} (b{bsz} t{threads} clip {clip} {mode:?}): \
              clipped sum drifted (spec {spec:?})"
         );
+    }
+}
+
+/// The zoo matrix: every new layer kind (GroupNorm, average pooling,
+/// Conv1d, residual joins) and the fixed degenerate corners stay
+/// fused == two-pass **bitwise** at thread counts 1 and N, across all
+/// three global planner modes.
+#[test]
+fn zoo_cases_bit_identical_at_thread_counts() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xF05F0);
+    for (case, spec) in zoo_case_specs(&mut rng, 2).into_iter().enumerate() {
+        let bsz = 4;
+        let (theta, x, y) = random_problem(&spec, bsz, &mut rng);
+        for mode in [
+            GhostMode::Global(PlanChoice::Auto),
+            GhostMode::Global(PlanChoice::Ghost),
+            GhostMode::Global(PlanChoice::Direct),
+        ] {
+            let fused = ClippedStepPlanner::new(&spec, &mode).unwrap();
+            let two = ClippedStepPlanner::new(&spec, &mode)
+                .unwrap()
+                .with_pipeline(GhostPipeline::TwoPass);
+            for threads in [1usize, 4] {
+                let a = ghost::clipped_step(&fused, &theta, &x, &y, 0.8, threads).unwrap();
+                let b = ghost::clipped_step(&two, &theta, &x, &y, 0.8, threads).unwrap();
+                assert_eq!(
+                    bits(&a.norms),
+                    bits(&b.norms),
+                    "zoo case {case} ({}) {mode:?} t{threads}: norms drifted",
+                    spec.arch
+                );
+                assert_eq!(
+                    bits(&a.losses),
+                    bits(&b.losses),
+                    "zoo case {case} ({}) {mode:?} t{threads}: losses drifted",
+                    spec.arch
+                );
+                assert_eq!(
+                    bits(&a.grad_sum),
+                    bits(&b.grad_sum),
+                    "zoo case {case} ({}) {mode:?} t{threads}: clipped sum drifted",
+                    spec.arch
+                );
+            }
+        }
     }
 }
 

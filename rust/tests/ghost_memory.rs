@@ -8,7 +8,11 @@
 //! * the fused single-tape pipeline builds **exactly one** tape per
 //!   microbatch (the two-pass pipeline builds two), and its peak
 //!   working set stays within the two-pass peak plus the cols-cache
-//!   budget.
+//!   budget;
+//! * the cache ledger never leaks: after every fused/reuse step the
+//!   live element count returns to its pre-step baseline (all
+//!   ColsCache/DyCache entries released), including on a residual
+//!   GroupNorm zoo model.
 //!
 //! This is the one test binary that uses the process-global counters
 //! for measurements, so it contains exactly one `#[test]` — nothing
@@ -193,6 +197,49 @@ fn ghost_grad_buffers_are_batch_size_independent() {
         reuse_peak <= two_peak + COLS_CACHE_CAP_ELEMS as i64,
         "reuse peak {reuse_peak} exceeds two-pass peak {two_peak} + unified budget"
     );
+
+    // --- cache-ledger leak check: after each fused/reuse microbatch
+    // returns, every ColsCache/DyCache entry must be off the ledger —
+    // live elements return to the pre-step baseline (outputs dropped).
+    for pl in [&planner, &reuse] {
+        for threads in [1usize, 2] {
+            let live0 = alloc::live_elems();
+            let out = ghost::clipped_step(pl, &theta, &x, &y, 1.0, threads).unwrap();
+            drop(out);
+            assert_eq!(
+                alloc::live_elems(),
+                live0,
+                "cache ledger leaked after a {:?} step at t{threads}",
+                pl.pipeline()
+            );
+        }
+    }
+    // the zoo cache paths leak-check too: a residual GroupNorm model
+    // exercises the DyCache affine entries and the skip-join stash
+    {
+        let zspec = ModelSpec::residual_gn(1, 4, 2, (2, 8, 8), 5).unwrap();
+        let zp = zspec.param_count();
+        let mut ztheta = vec![0.0f32; zp];
+        rng.fill_gaussian(&mut ztheta, 0.1);
+        let (zc, zh, zw) = zspec.input_shape;
+        let mut zx = vec![0.0f32; 4 * zc * zh * zw];
+        rng.fill_gaussian(&mut zx, 1.0);
+        let zx = Tensor::from_vec(&[4, zc, zh, zw], zx);
+        let zy: Vec<i32> = (0..4).map(|i| (i % 5) as i32).collect();
+        for pipeline in [GhostPipeline::Fused, GhostPipeline::FusedReuse] {
+            let pl = ClippedStepPlanner::new(&zspec, &GhostMode::default())
+                .unwrap()
+                .with_pipeline(pipeline);
+            let live0 = alloc::live_elems();
+            let out = ghost::clipped_step(&pl, &ztheta, &zx, &zy, 1.0, 2).unwrap();
+            drop(out);
+            assert_eq!(
+                alloc::live_elems(),
+                live0,
+                "cache ledger leaked after a {pipeline:?} step on residual_gn"
+            );
+        }
+    }
 
     // contrast: the materializing crb strategy must hold the full
     // (B, P) matrix — its peak at B=16 dwarfs the ghost engine's

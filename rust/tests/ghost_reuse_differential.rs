@@ -23,7 +23,7 @@ mod common;
 
 use std::sync::Mutex;
 
-use common::geometries::{random_geometry_spec, random_problem};
+use common::geometries::{random_geometry_spec, random_problem, zoo_case_specs};
 use grad_cnns::backward::{prop_matmuls, visitor_units};
 use grad_cnns::check::gen_range;
 use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode, GhostPipeline, PlanChoice, SplitPlan};
@@ -100,6 +100,46 @@ fn reuse_matches_fused_over_geometries() {
             1e-5,
             &format!("case {case} (b{bsz} t{threads} clip {clip} {mode:?}, spec {spec:?})"),
         );
+    }
+}
+
+/// The zoo matrix, reuse half: every new layer kind (GroupNorm,
+/// average pooling, Conv1d, residual joins — whose skip contributions
+/// the cached dy blocks already carry below the frontier) and the
+/// fixed degenerate corners stay within the pipeline's 1e-5-relative
+/// contract against fused at thread counts 1 and N, with bit-equal
+/// norms and losses.
+#[test]
+fn zoo_cases_reuse_matches_fused_at_thread_counts() {
+    let _g = lock();
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5CA1F3);
+    for (case, spec) in zoo_case_specs(&mut rng, 2).into_iter().enumerate() {
+        let bsz = 4;
+        let (theta, x, y) = random_problem(&spec, bsz, &mut rng);
+        let fused = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let reuse = reuse_planner(&spec, &GhostMode::default());
+        for threads in [1usize, 4] {
+            let a = ghost::clipped_step(&fused, &theta, &x, &y, 0.8, threads).unwrap();
+            let b = ghost::clipped_step(&reuse, &theta, &x, &y, 0.8, threads).unwrap();
+            assert_eq!(
+                bits(&a.norms),
+                bits(&b.norms),
+                "zoo case {case} ({}) t{threads}: norms drifted",
+                spec.arch
+            );
+            assert_eq!(
+                bits(&a.losses),
+                bits(&b.losses),
+                "zoo case {case} ({}) t{threads}: losses drifted",
+                spec.arch
+            );
+            assert_close(
+                &b.grad_sum,
+                &a.grad_sum,
+                1e-5,
+                &format!("zoo case {case} ({}) t{threads}", spec.arch),
+            );
+        }
     }
 }
 

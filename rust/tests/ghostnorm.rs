@@ -11,7 +11,7 @@
 
 mod common;
 
-use common::geometries::{random_geometry_spec, random_problem};
+use common::geometries::{random_geometry_spec, random_problem, zoo_case_specs};
 use grad_cnns::check::gen_range;
 use grad_cnns::config::{Config, ExperimentConfig};
 use grad_cnns::coordinator::{GradRequest, NativeServiceConfig, ServiceHandle, Trainer};
@@ -63,6 +63,58 @@ fn ghost_matches_oracle_over_randomized_geometries() {
             assert!(
                 sum_diff < 1e-4,
                 "case {case} {mode:?}: clipped sum Δ {sum_diff} (spec {spec:?})"
+            );
+        }
+    }
+}
+
+/// The zoo matrix: over the shared zoo case list (GroupNorm / pooling
+/// / residual mixes, Conv1d models, and the fixed degenerate
+/// corners), ghost norms and the clipped sum match the oracle for
+/// auto, forced-ghost and forced-direct planning.
+#[test]
+fn ghost_matches_oracle_over_zoo_cases() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xB0B);
+    for (case, spec) in zoo_case_specs(&mut rng, 2).into_iter().enumerate() {
+        let bsz = gen_range(&mut rng, 2, 5);
+        let (theta, x, y) = random_problem(&spec, bsz, &mut rng);
+
+        let oracle = ModelOracle::new(spec.clone());
+        let (per, want_losses) = oracle.perex_grads(&theta, &x, &y);
+        let clip = 1.0f32;
+        let (want_sum, want_norms) = clip_reduce(&per, clip);
+
+        for mode in [
+            GhostMode::Global(PlanChoice::Auto),
+            GhostMode::Global(PlanChoice::Ghost),
+            GhostMode::Global(PlanChoice::Direct),
+        ] {
+            let planner = ClippedStepPlanner::new(&spec, &mode).unwrap();
+            let out = ghost::clipped_step(&planner, &theta, &x, &y, clip, 2).unwrap();
+            for (i, (a, want)) in out.norms.iter().zip(&want_norms).enumerate() {
+                assert!(
+                    (a - want).abs() < 1e-4,
+                    "zoo case {case} ({}) {mode:?}: norm[{i}] {a} vs {want}",
+                    spec.arch
+                );
+            }
+            for (a, want) in out.losses.iter().zip(&want_losses) {
+                assert!(
+                    (a - want).abs() < 1e-4,
+                    "zoo case {case} ({}) {mode:?}: losses",
+                    spec.arch
+                );
+            }
+            let sum_diff = out
+                .grad_sum
+                .iter()
+                .zip(&want_sum)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                sum_diff < 1e-4,
+                "zoo case {case} ({}) {mode:?}: clipped sum Δ {sum_diff}",
+                spec.arch
             );
         }
     }

@@ -10,12 +10,14 @@
 
 mod common;
 
-use common::geometries::{gen_conv_case, randn, ConvCase};
+use common::geometries::{gen_conv_case, randn, random_problem, zoo_case_specs, ConvCase};
 use grad_cnns::check::{forall, gen_range, CheckConfig};
+use grad_cnns::models::ModelOracle;
 use grad_cnns::rng::Xoshiro256pp;
 use grad_cnns::tensor::{
-    conv2d, conv2d_grad_input, conv2d_grad_input_im2col, instance_norm, instance_norm_grad,
-    linear, perex_conv2d_grad, perex_conv2d_grad_im2col, perex_linear_grad, Tensor,
+    self, avgpool2d, avgpool2d_grad, conv2d, conv2d_grad_input, conv2d_grad_input_im2col,
+    group_norm, group_norm_grad, instance_norm, instance_norm_grad, linear, perex_conv2d_grad,
+    perex_conv2d_grad_im2col, perex_linear_grad, Tensor,
 };
 
 fn cfg() -> CheckConfig {
@@ -264,4 +266,189 @@ fn instance_norm_grad_matches_fd() {
             Ok(())
         },
     );
+}
+
+/// Group-norm per-example affine grads + input grad match finite
+/// differences over randomized shapes and group counts — including
+/// the `groups == channels` corner where it degenerates to instance
+/// norm.
+#[test]
+fn group_norm_grad_matches_fd() {
+    forall(
+        cfg(),
+        |rng| {
+            let c = gen_range(rng, 1, 5);
+            let divs: Vec<usize> = (1..=c).filter(|g| c % g == 0).collect();
+            (
+                gen_range(rng, 1, 4),                // bsz
+                c,                                   // channels
+                divs[gen_range(rng, 0, divs.len())], // groups
+                gen_range(rng, 2, 6),                // h
+                gen_range(rng, 2, 6),                // w
+                rng.next_u64(),
+            )
+        },
+        |&(bsz, c, groups, h, w, seed)| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let eps_n = 1e-5f32;
+            let x = randn(&mut rng, &[bsz, c, h, w]);
+            let gamma: Vec<f32> = (0..c).map(|_| 0.5 + rng.next_f32()).collect();
+            let beta: Vec<f32> = (0..c).map(|_| rng.next_f32() - 0.5).collect();
+            let m = randn(&mut rng, &[bsz, c, h, w]);
+            let (_, xhat, inv_std) = group_norm(&x, &gamma, &beta, groups, eps_n);
+            let (dgamma, dbeta, dx) = group_norm_grad(&m, &xhat, &inv_std, &gamma, groups);
+
+            let n = c * h * w;
+            let loss = |x: &Tensor, gamma: &[f32], beta: &[f32], b: usize| -> f64 {
+                let (y, _, _) = group_norm(x, gamma, beta, groups, eps_n);
+                y.data[b * n..(b + 1) * n]
+                    .iter()
+                    .zip(&m.data[b * n..(b + 1) * n])
+                    .map(|(a, c)| (a * c) as f64)
+                    .sum()
+            };
+            let fd_eps = 1e-3f32;
+            for b in 0..bsz {
+                for ci in 0..c {
+                    let mut gp = gamma.clone();
+                    gp[ci] += fd_eps;
+                    let mut gm = gamma.clone();
+                    gm[ci] -= fd_eps;
+                    let fd = ((loss(&x, &gp, &beta, b) - loss(&x, &gm, &beta, b))
+                        / (2.0 * fd_eps as f64)) as f32;
+                    let an = dgamma.data[b * c + ci];
+                    if (fd - an).abs() > 3e-2 {
+                        return Err(format!(
+                            "groups={groups}: dgamma[{b},{ci}]: fd {fd} vs {an}"
+                        ));
+                    }
+
+                    let mut bp = beta.clone();
+                    bp[ci] += fd_eps;
+                    let mut bm = beta.clone();
+                    bm[ci] -= fd_eps;
+                    let fd = ((loss(&x, &gamma, &bp, b) - loss(&x, &gamma, &bm, b))
+                        / (2.0 * fd_eps as f64)) as f32;
+                    let an = dbeta.data[b * c + ci];
+                    if (fd - an).abs() > 3e-2 {
+                        return Err(format!(
+                            "groups={groups}: dbeta[{b},{ci}]: fd {fd} vs {an}"
+                        ));
+                    }
+                }
+            }
+            // dx at a few random coordinates
+            let mut xp = x.clone();
+            for _ in 0..4 {
+                let i = gen_range(&mut rng, 0, xp.data.len());
+                let b = i / n;
+                let orig = xp.data[i];
+                xp.data[i] = orig + fd_eps;
+                let lp = loss(&xp, &gamma, &beta, b);
+                xp.data[i] = orig - fd_eps;
+                let lm = loss(&xp, &gamma, &beta, b);
+                xp.data[i] = orig;
+                let fd = ((lp - lm) / (2.0 * fd_eps as f64)) as f32;
+                if (fd - dx.data[i]).abs() > 3e-2 {
+                    return Err(format!(
+                        "groups={groups}: dx[{i}]: fd {fd} vs {}",
+                        dx.data[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Average-pool input grads match finite differences over randomized
+/// windows — including the 1×1 identity window.
+#[test]
+fn avgpool_grad_matches_fd() {
+    forall(
+        cfg(),
+        |rng| {
+            (
+                gen_range(rng, 1, 3), // bsz
+                gen_range(rng, 1, 3), // channels
+                gen_range(rng, 2, 7), // h
+                gen_range(rng, 2, 7), // w
+                gen_range(rng, 1, 3), // window h (1 = identity corner)
+                gen_range(rng, 1, 3), // window w
+                rng.next_u64(),
+            )
+        },
+        |&(bsz, c, h, w, wh, ww, seed)| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let mut x = randn(&mut rng, &[bsz, c, h, w]);
+            let y = avgpool2d(&x, (wh, ww), (wh, ww));
+            let m = randn(&mut rng, &y.shape);
+            let dx = avgpool2d_grad(&m, (wh, ww), (wh, ww), &x.shape);
+            let fd_eps = 1e-2f32;
+            for _ in 0..6 {
+                let i = gen_range(&mut rng, 0, x.data.len());
+                let orig = x.data[i];
+                x.data[i] = orig + fd_eps;
+                let yp = avgpool2d(&x, (wh, ww), (wh, ww));
+                x.data[i] = orig - fd_eps;
+                let ym = avgpool2d(&x, (wh, ww), (wh, ww));
+                x.data[i] = orig;
+                let fd: f64 = yp
+                    .data
+                    .iter()
+                    .zip(&ym.data)
+                    .zip(&m.data)
+                    .map(|((p, q), mm)| ((p - q) * mm) as f64)
+                    .sum::<f64>()
+                    / (2.0 * fd_eps as f64);
+                if (fd as f32 - dx.data[i]).abs() > 2e-2 {
+                    return Err(format!(
+                        "window ({wh},{ww}): dx[{i}]: fd {fd} vs {}",
+                        dx.data[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Full-model oracle per-example grads match finite differences over
+/// the shared zoo case list: mixed GroupNorm / pooling / residual
+/// geometries, Conv1d models, and the fixed degenerate corners.
+#[test]
+fn zoo_model_perex_grads_match_fd() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x200);
+    for spec in zoo_case_specs(&mut rng, 3) {
+        spec.validate()
+            .unwrap_or_else(|e| panic!("{}: generated invalid spec: {e}", spec.arch));
+        let arch = spec.arch.clone();
+        let oracle = ModelOracle::new(spec);
+        let p = oracle.spec.param_count();
+        let bsz = 2;
+        let (mut theta, x, labels) = random_problem(&oracle.spec, bsz, &mut rng);
+        let (grads, losses) = oracle.perex_grads(&theta, &x, &labels);
+        assert!(
+            losses.iter().all(|l| l.is_finite()),
+            "{arch}: non-finite loss"
+        );
+        let eps = 1e-2f32;
+        for _ in 0..5 {
+            let i = gen_range(&mut rng, 0, p);
+            let orig = theta[i];
+            theta[i] = orig + eps;
+            let lp = tensor::softmax_xent(&oracle.forward(&theta, &x), &labels).0;
+            theta[i] = orig - eps;
+            let lm = tensor::softmax_xent(&oracle.forward(&theta, &x), &labels).0;
+            theta[i] = orig;
+            for b in 0..bsz {
+                let fd = (lp[b] - lm[b]) / (2.0 * eps);
+                let an = grads.data[b * p + i];
+                assert!(
+                    (fd - an).abs() < 4e-2,
+                    "{arch}: theta[{i}] example {b}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
 }

@@ -1,0 +1,91 @@
+//! Seeded end-to-end determinism: the same config + seed must produce
+//! a **bitwise-identical** post-step checkpoint across two full
+//! `repro train` runs on the native backend, for every strategy —
+//! including on a mixed residual/GroupNorm/pooling zoo model and with
+//! DP noise enabled (the per-step noise seed is derived, not drawn).
+//!
+//! This pins the whole chain: seeded init, Poisson batcher, the ghost
+//! engine's serial-order folds, noise addition and the SGD update.
+
+use grad_cnns::config::{Config, ExperimentConfig};
+use grad_cnns::coordinator::{Checkpoint, Trainer};
+use grad_cnns::strategies::Strategy;
+
+fn zoo_config(strategy: &str, threads: usize) -> ExperimentConfig {
+    let cfg = Config::parse(&format!(
+        r#"
+[train]
+backend = "native"
+strategy = "{strategy}"
+steps = 3
+batch_size = 4
+lr = 0.2
+seed = 41
+threads = {threads}
+eval_every = 0
+log_every = 8
+
+[model]
+arch = "residual_gn"
+n_layers = 1
+first_channels = 8
+groups = 4
+input_shape = [2, 10, 10]
+
+[dp]
+clip_norm = 1.0
+noise_multiplier = 0.7
+target_delta = 1e-5
+
+[data]
+size = 32
+num_classes = 10
+"#
+    ))
+    .unwrap();
+    ExperimentConfig::from_config(&cfg).unwrap()
+}
+
+/// One full training run to a post-step checkpoint on disk; returns
+/// the checkpointed theta.
+fn run_to_checkpoint(cfg: ExperimentConfig, dir: &std::path::Path) -> Vec<f32> {
+    let _ = std::fs::remove_dir_all(dir);
+    let steps = cfg.steps;
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    trainer.quiet = true;
+    trainer.checkpoint_dir = Some(dir.to_str().unwrap().to_string());
+    trainer.checkpoint_every = steps;
+    let report = trainer.run(None).unwrap();
+    assert_eq!(report.steps, steps);
+    Checkpoint::load(&format!("{}/ckpt_{steps}", dir.display()))
+        .unwrap()
+        .theta
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The acceptance property: for every strategy, two runs of the same
+/// config land on bit-identical parameters — at one worker thread and
+/// at several.
+#[test]
+fn same_seed_same_config_is_bitwise_reproducible() {
+    for strategy in Strategy::ALL {
+        for threads in [1usize, 4] {
+            let name = strategy.name();
+            let base = std::env::temp_dir().join(format!(
+                "grad_cnns_determinism_{name}_t{threads}"
+            ));
+            let a = run_to_checkpoint(zoo_config(name, threads), &base.join("a"));
+            let b = run_to_checkpoint(zoo_config(name, threads), &base.join("b"));
+            assert_eq!(a.len(), b.len(), "{name} t{threads}: theta length");
+            assert_eq!(
+                bits(&a),
+                bits(&b),
+                "{name} t{threads}: two seeded runs diverged bitwise"
+            );
+            let _ = std::fs::remove_dir_all(&base);
+        }
+    }
+}
