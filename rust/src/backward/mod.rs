@@ -48,6 +48,13 @@
 //! `tests/ghost_fused_differential.rs` and
 //! `tests/ghost_reuse_differential.rs` pin all the visitors and walks
 //! to the oracle and to each other.
+//!
+//! All three counters ([`tape_builds`], [`prop_matmuls`],
+//! [`visitor_units`]) live in the global metrics registry
+//! ([`crate::metrics::global`]) under `backward.*` names — the free
+//! functions here are thin shims kept for the existing tests — and
+//! the walks carry the [`crate::obs`] tracer's spans (one enabled
+//! check per walk; zero events and zero cost when tracing is off).
 
 pub(crate) mod tape;
 pub(crate) mod visitors;

@@ -7,18 +7,30 @@
 //! assert the fused ghost pipeline builds exactly one tape per
 //! microbatch where the two-pass pipeline builds two.
 
+use crate::metrics;
 use crate::models::{LayerSpec, ModelSpec};
+use crate::obs;
 use crate::tensor::{self, ConvArgs, Tensor};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
-static TAPE_BUILDS: AtomicU64 = AtomicU64::new(0);
+// The counter lives in the global metrics registry (so one snapshot
+// returns it next to its siblings); the OnceLock caches the Arc so
+// the hot path pays one atomic load + one fetch_add, same as the
+// plain static it replaced.
+static TAPE_BUILDS: OnceLock<Arc<metrics::Counter>> = OnceLock::new();
 
-/// Number of [`forward_with_tape`] calls since process start. The
-/// counter is global and monotonic: tests that assert on it take
-/// deltas around the region of interest and must not run concurrently
-/// with other tape-building tests in the same binary.
+fn tape_counter() -> &'static Arc<metrics::Counter> {
+    TAPE_BUILDS.get_or_init(|| metrics::global().counter("backward.tape_builds"))
+}
+
+/// Number of [`forward_with_tape`] calls since process start — a thin
+/// shim over the `backward.tape_builds` counter in
+/// [`metrics::global`]. The counter is global and monotonic: tests
+/// that assert on it take deltas around the region of interest and
+/// must not run concurrently with other tape-building tests in the
+/// same binary.
 pub fn tape_builds() -> u64 {
-    TAPE_BUILDS.load(Ordering::Relaxed)
+    tape_counter().get()
 }
 
 /// What each layer's backward pass needs from the forward pass —
@@ -85,7 +97,9 @@ pub(crate) fn forward_with_tape(
     x: &Tensor,
 ) -> (Tensor, Vec<Saved>) {
     assert_eq!(theta.len(), spec.param_count(), "theta length mismatch");
-    TAPE_BUILDS.fetch_add(1, Ordering::Relaxed);
+    tape_counter().inc();
+    // one enabled check per tape build; dead span when tracing is off
+    let _span = obs::Span::begin(obs::enabled(), obs::Phase::TapeBuild, -1);
     let offsets = spec.param_offsets();
     let mut cur = x.clone();
     let mut saved = Vec::with_capacity(spec.layers.len());

@@ -262,6 +262,12 @@ impl<'p> NormVisitor<'p> {
 }
 
 impl BackwardVisitor for NormVisitor<'_> {
+    /// Norm-walk visitor time is the direct/Gram norm kernels, not
+    /// Eq.-4 matmuls — trace spans label it accordingly.
+    fn phase(&self) -> crate::obs::Phase {
+        crate::obs::Phase::NormKernel
+    }
+
     fn conv_layer_start(&mut self, ctx: &ConvCtx) {
         match self.planner.path(ctx.li) {
             NormPath::Direct => {

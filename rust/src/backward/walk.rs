@@ -49,20 +49,35 @@
 
 use super::tape::{conv_args, layer_params, Saved};
 use crate::ghost::planner::ReusePlan;
+use crate::metrics;
 use crate::models::{LayerSpec, ModelSpec};
+use crate::obs;
 use crate::tensor::{self, ColsCache, ConvArgs, DyCache, DyEntry, Tensor};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
-static PROP_MATMULS: AtomicU64 = AtomicU64::new(0);
-static VISITOR_UNITS: AtomicU64 = AtomicU64::new(0);
+// Both counters live in the global metrics registry (so one snapshot
+// returns them next to their siblings); the OnceLocks cache the Arcs
+// so the hot path pays one atomic load + one fetch_add, same as the
+// plain statics they replaced.
+static PROP_MATMULS: OnceLock<Arc<metrics::Counter>> = OnceLock::new();
+static VISITOR_UNITS: OnceLock<Arc<metrics::Counter>> = OnceLock::new();
+
+fn prop_counter() -> &'static Arc<metrics::Counter> {
+    PROP_MATMULS.get_or_init(|| metrics::global().counter("backward.prop_matmuls"))
+}
+
+fn visitor_counter() -> &'static Arc<metrics::Counter> {
+    VISITOR_UNITS.get_or_init(|| metrics::global().counter("backward.visitor_units"))
+}
 
 /// Number of dy-propagation ops (conv/linear input-gradient matmuls,
 /// instance-norm backwards) executed by backward walks since process
-/// start. Global and monotonic, like
+/// start — a thin shim over the `backward.prop_matmuls` counter in
+/// [`metrics::global`]. Global and monotonic, like
 /// [`tape_builds`](super::tape_builds): tests assert on deltas and
 /// must serialize against other walk-running tests in their binary.
 pub fn prop_matmuls() -> u64 {
-    PROP_MATMULS.load(Ordering::Relaxed)
+    prop_counter().get()
 }
 
 /// Number of *visitor* work units (Eq.-4 `dW` row-blocks, norm-kernel
@@ -71,14 +86,16 @@ pub fn prop_matmuls() -> u64 {
 /// units of the im2col prefill are deliberately not counted. Zero
 /// whenever walks run serially (`inner <= 1`, or below the work gate);
 /// strictly positive exactly when per-microbatch visitor work ran on
-/// multiple threads. Global and monotonic like [`prop_matmuls`]:
-/// tests assert on deltas and must serialize within their binary.
+/// multiple threads. A thin shim over the `backward.visitor_units`
+/// counter in [`metrics::global`]; global and monotonic like
+/// [`prop_matmuls`]: tests assert on deltas and must serialize within
+/// their binary.
 pub fn visitor_units() -> u64 {
-    VISITOR_UNITS.load(Ordering::Relaxed)
+    visitor_counter().get()
 }
 
 fn count_prop() {
-    PROP_MATMULS.fetch_add(1, Ordering::Relaxed);
+    prop_counter().inc();
 }
 
 /// Geometry of one conv layer, precomputed for the visitor.
@@ -183,14 +200,36 @@ pub(crate) fn run_units(units: Vec<WorkUnit<'_>>, inner: usize, kind: UnitKind) 
         return;
     }
     if matches!(kind, UnitKind::Visitor) {
-        VISITOR_UNITS.fetch_add(units.len() as u64, Ordering::Relaxed);
+        visitor_counter().add(units.len() as u64);
     }
+    // one enabled check per drain; when tracing, each thread records
+    // one QueueDrain event (units pulled + busy time, so dur - busy is
+    // idle/steal-wait) — the untraced branch is the pre-tracing loop
+    let on = obs::enabled();
     let queue = std::sync::Mutex::new(units);
-    let drain = || loop {
-        let Some(u) = queue.lock().unwrap().pop() else {
-            break;
-        };
-        u();
+    let drain = || {
+        if on {
+            let t0 = obs::stamp_us();
+            let (mut n, mut busy) = (0u64, 0u64);
+            loop {
+                let Some(u) = queue.lock().unwrap().pop() else {
+                    break;
+                };
+                let u0 = obs::stamp_us();
+                u();
+                busy += obs::stamp_us().saturating_sub(u0);
+                n += 1;
+            }
+            let t1 = obs::stamp_us();
+            obs::record_drain(-1, t0, t1.saturating_sub(t0), n, busy);
+        } else {
+            loop {
+                let Some(u) = queue.lock().unwrap().pop() else {
+                    break;
+                };
+                u();
+            }
+        }
     };
     std::thread::scope(|s| {
         for _ in 1..inner {
@@ -256,6 +295,14 @@ pub(crate) fn unit_chunks(rows: usize, inner: usize, parts: usize) -> usize {
 /// [`conv_example`](Self::conv_example) calls, and every override
 /// must be bit-identical to that fallback.
 pub(crate) trait BackwardVisitor {
+    /// The leaf phase trace spans attribute this visitor's work to:
+    /// [`obs::Phase::DwMatmul`] for the gradient-assembling visitors
+    /// (the Eq.-4 matmuls and clipped sums); the norm visitor
+    /// overrides with [`obs::Phase::NormKernel`].
+    fn phase(&self) -> obs::Phase {
+        obs::Phase::DwMatmul
+    }
+
     /// Layer-sized scratch hoisting hook; called once per conv layer
     /// before any example.
     fn conv_layer_start(&mut self, _ctx: &ConvCtx) {}
@@ -491,6 +538,73 @@ fn maybe_parallel_cols(
     Some(fill_cols_parallel(input, kh, kw, args, need, inner))
 }
 
+/// Locally accumulated phase durations for the serial conv loops:
+/// batches the per-example clock reads into **one**
+/// [`obs::record_span`] per phase per layer, and reads no clock at
+/// all when tracing is off (the `on` flag is the walk's single
+/// enabled check, threaded through).
+struct SerialAcc {
+    on: bool,
+    start_us: u64,
+    fill_us: u64,
+    visit_us: u64,
+    rescale_us: u64,
+}
+
+impl SerialAcc {
+    fn new(on: bool) -> SerialAcc {
+        SerialAcc {
+            on,
+            start_us: if on { obs::stamp_us() } else { 0 },
+            fill_us: 0,
+            visit_us: 0,
+            rescale_us: 0,
+        }
+    }
+
+    fn timed<R>(on: bool, acc: &mut u64, f: impl FnOnce() -> R) -> R {
+        if !on {
+            return f();
+        }
+        let t0 = obs::stamp_us();
+        let r = f();
+        *acc += obs::stamp_us().saturating_sub(t0);
+        r
+    }
+
+    /// Time `f` as im2col fill work.
+    fn fill<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        Self::timed(self.on, &mut self.fill_us, f)
+    }
+
+    /// Time `f` as visitor work.
+    fn visit<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        Self::timed(self.on, &mut self.visit_us, f)
+    }
+
+    /// Time `f` as dy-rescale work.
+    fn rescale<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        Self::timed(self.on, &mut self.rescale_us, f)
+    }
+
+    /// Emit one event per non-empty phase for layer `li`, attributing
+    /// visitor time to `visit_phase` ([`BackwardVisitor::phase`]).
+    fn emit(self, li: usize, visit_phase: obs::Phase) {
+        if !self.on {
+            return;
+        }
+        for (us, phase) in [
+            (self.fill_us, obs::Phase::Im2colFill),
+            (self.visit_us, visit_phase),
+            (self.rescale_us, obs::Phase::DyRescale),
+        ] {
+            if us > 0 {
+                obs::record_span(phase, li as i32, self.start_us, us);
+            }
+        }
+    }
+}
+
 /// Drive one backward pass over the tape, consuming `dy` (the loss
 /// gradient at the network output) and invoking `visitor` at every
 /// parametric layer. Propagation below layer 0 is skipped.
@@ -503,6 +617,9 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
     mut ctl: WalkCtl<'_, '_>,
 ) {
     let offsets = spec.param_offsets();
+    // one enabled check per walk; every span below threads it through
+    let on = obs::enabled();
+    let vphase = visitor.phase();
     // skip-join rule: `pending[j]` accumulates the dy copies stashed by
     // every ResidualAdd whose skip opens at layer j's input; they fold
     // into the stream once the walk has dy w.r.t. that input
@@ -549,17 +666,21 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                             _ => true,
                         })
                         .collect();
-                    if let Some(prefilled) = maybe_parallel_cols(
-                        input,
-                        kernel.0,
-                        kernel.1,
-                        args,
-                        &need,
-                        groups * rows_g * howo,
-                        bsz * visitor.conv_flops(&ctx),
-                        0,
-                        ctl.inner,
-                    ) {
+                    let prefilled = {
+                        let _sp = obs::Span::begin(on, obs::Phase::Im2colFill, li as i32);
+                        maybe_parallel_cols(
+                            input,
+                            kernel.0,
+                            kernel.1,
+                            args,
+                            &need,
+                            groups * rows_g * howo,
+                            bsz * visitor.conv_flops(&ctx),
+                            0,
+                            ctl.inner,
+                        )
+                    };
+                    if let Some(prefilled) = prefilled {
                         {
                             let colrefs: Vec<&[f32]> = (0..bsz)
                                 .map(|b| match &ctl.cols {
@@ -571,6 +692,7 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                                         .expect("prefill covers every example"),
                                 })
                                 .collect();
+                            let _sv = obs::Span::begin(on, vphase, li as i32);
                             visitor.conv_layer(&ctx, &colrefs, &dy.data, ctl.inner);
                         }
                         if let ColsMode::Fill(cache) = &mut ctl.cols {
@@ -584,6 +706,7 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                     }
                 }
                 if !handled {
+                    let mut acc = SerialAcc::new(on);
                     for b in 0..bsz {
                         let dy_b = &dy.data[b * d * howo..(b + 1) * d * howo];
                         let hit = match &ctl.cols {
@@ -591,20 +714,23 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                             _ => None,
                         };
                         match hit {
-                            Some(c) => visitor.conv_example(&ctx, b, c, dy_b),
+                            Some(c) => acc.visit(|| visitor.conv_example(&ctx, b, c, dy_b)),
                             None => {
-                                let c =
-                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args).0;
-                                visitor.conv_example(&ctx, b, &c, dy_b);
+                                let c = acc.fill(|| {
+                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args).0
+                                });
+                                acc.visit(|| visitor.conv_example(&ctx, b, &c, dy_b));
                                 if let ColsMode::Fill(cache) = &mut ctl.cols {
                                     cache.insert(li, b, c);
                                 }
                             }
                         }
                     }
+                    acc.emit(li, vphase);
                 }
                 if li > 0 || pending[li].is_some() {
                     count_prop();
+                    let _sp = obs::Span::begin(on, obs::Phase::DyProp, li as i32);
                     let (wv, _) = layer_params(spec, &offsets, theta, li);
                     let w = Tensor::from_vec(&[d, cg, kernel.0, kernel.1], wv.to_vec());
                     dy = tensor::conv2d_grad_input_im2col(
@@ -629,9 +755,13 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                         cache.insert_blocks(li, dy.data.clone(), *out_dim);
                     }
                 }
-                visitor.linear(&ctx, input, &dy);
+                {
+                    let _sv = obs::Span::begin(on, vphase, li as i32);
+                    visitor.linear(&ctx, input, &dy);
+                }
                 if li > 0 || pending[li].is_some() {
                     count_prop();
+                    let _sp = obs::Span::begin(on, obs::Phase::DyProp, li as i32);
                     let (wv, _) = layer_params(spec, &offsets, theta, li);
                     let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
                     dy = tensor::linear_grad_input(&dy, &w);
@@ -640,7 +770,9 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
             (LayerSpec::InstanceNorm { channels, .. }, Saved::Norm { xhat, inv_std }) => {
                 let (gv, _) = layer_params(spec, &offsets, theta, li);
                 count_prop();
+                let sp = obs::Span::begin(on, obs::Phase::DyProp, li as i32);
                 let (dgamma, dbeta, dx) = tensor::instance_norm_grad(&dy, xhat, inv_std, gv);
+                drop(sp);
                 let ctx = NormCtx {
                     li,
                     offset: offsets[li],
@@ -651,7 +783,10 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                         cache.insert_affine(li, dgamma.data.clone(), dbeta.data.clone());
                     }
                 }
-                visitor.instance_norm(&ctx, &dgamma, &dbeta);
+                {
+                    let _sv = obs::Span::begin(on, vphase, li as i32);
+                    visitor.instance_norm(&ctx, &dgamma, &dbeta);
+                }
                 dy = dx;
             }
             (
@@ -662,8 +797,10 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
             ) => {
                 let (gv, _) = layer_params(spec, &offsets, theta, li);
                 count_prop();
+                let sp = obs::Span::begin(on, obs::Phase::DyProp, li as i32);
                 let (dgamma, dbeta, dx) =
                     tensor::group_norm_grad(&dy, xhat, inv_std, gv, *groups);
+                drop(sp);
                 let ctx = NormCtx {
                     li,
                     offset: offsets[li],
@@ -674,7 +811,10 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                         cache.insert_affine(li, dgamma.data.clone(), dbeta.data.clone());
                     }
                 }
-                visitor.group_norm(&ctx, &dgamma, &dbeta, Some((&dy, xhat)));
+                {
+                    let _sv = obs::Span::begin(on, vphase, li as i32);
+                    visitor.group_norm(&ctx, &dgamma, &dbeta, Some((&dy, xhat)));
+                }
                 dy = dx;
             }
             (LayerSpec::Relu, Saved::Relu { pre }) => {
@@ -756,12 +896,18 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
 ) {
     let bsz = dy.shape[0];
     debug_assert_eq!(scales.len(), bsz);
+    // one enabled check per walk; every span below threads it through
+    let on = obs::enabled();
+    let vphase = visitor.phase();
     // scale the loss-gradient rows once; everything propagated below
     // is then the clip-scaled gradient (linearity of backprop)
     let per_ex0 = dy.data.len() / bsz.max(1);
-    for (b, &s) in scales.iter().enumerate() {
-        for v in &mut dy.data[b * per_ex0..(b + 1) * per_ex0] {
-            *v *= s;
+    {
+        let _sr = obs::Span::begin(on, obs::Phase::DyRescale, -1);
+        for (b, &s) in scales.iter().enumerate() {
+            for v in &mut dy.data[b * per_ex0..(b + 1) * per_ex0] {
+                *v *= s;
+            }
         }
     }
     // the propagation frontier: the deepest parametric layer whose dy
@@ -818,17 +964,21 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                 if inner > 1 {
                     let need: Vec<bool> = (0..bsz).map(|b| cols.get(li, b).is_none()).collect();
                     let rescale = if live { 0 } else { bsz * d * howo };
-                    if let Some(prefilled) = maybe_parallel_cols(
-                        input,
-                        kernel.0,
-                        kernel.1,
-                        args,
-                        &need,
-                        groups * rows_g * howo,
-                        bsz * visitor.conv_flops(&ctx),
-                        rescale,
-                        inner,
-                    ) {
+                    let prefilled = {
+                        let _sp = obs::Span::begin(on, obs::Phase::Im2colFill, li as i32);
+                        maybe_parallel_cols(
+                            input,
+                            kernel.0,
+                            kernel.1,
+                            args,
+                            &need,
+                            groups * rows_g * howo,
+                            bsz * visitor.conv_flops(&ctx),
+                            rescale,
+                            inner,
+                        )
+                    };
+                    if let Some(prefilled) = prefilled {
                         // dy source: the live propagated gradient, or
                         // the cached blocks rescaled by the clip
                         // factors (the rescale rides the unit queue)
@@ -838,6 +988,8 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                         } else {
                             let (data, per_ex) = cached
                                 .expect("layer below the propagation frontier must be cached");
+                            let _sr =
+                                obs::Span::begin(on, obs::Phase::DyRescale, li as i32);
                             scaled_all = scale_blocks_parallel(data, per_ex, scales, inner);
                             &scaled_all
                         };
@@ -848,6 +1000,7 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                                 })
                             })
                             .collect();
+                        let _sv = obs::Span::begin(on, vphase, li as i32);
                         visitor.conv_layer(&ctx, &colrefs, dy_block, inner);
                         handled = true;
                     }
@@ -856,6 +1009,7 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                     if !live {
                         scaled.resize(d * howo, 0.0);
                     }
+                    let mut acc = SerialAcc::new(on);
                     for b in 0..bsz {
                         let dy_b: &[f32] = if live {
                             &dy.data[b * d * howo..(b + 1) * d * howo]
@@ -863,25 +1017,30 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                             let (data, per_ex) = cached
                                 .expect("layer below the propagation frontier must be cached");
                             let s = scales[b];
-                            for (o, v) in
-                                scaled.iter_mut().zip(&data[b * per_ex..(b + 1) * per_ex])
-                            {
-                                *o = s * *v;
-                            }
+                            acc.rescale(|| {
+                                for (o, v) in
+                                    scaled.iter_mut().zip(&data[b * per_ex..(b + 1) * per_ex])
+                                {
+                                    *o = s * *v;
+                                }
+                            });
                             &scaled
                         };
                         match cols.get(li, b) {
-                            Some(c) => visitor.conv_example(&ctx, b, c, dy_b),
+                            Some(c) => acc.visit(|| visitor.conv_example(&ctx, b, c, dy_b)),
                             None => {
-                                let c =
-                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args).0;
-                                visitor.conv_example(&ctx, b, &c, dy_b);
+                                let c = acc.fill(|| {
+                                    tensor::im2col_single(input, b, kernel.0, kernel.1, args).0
+                                });
+                                acc.visit(|| visitor.conv_example(&ctx, b, &c, dy_b));
                             }
                         }
                     }
+                    acc.emit(li, vphase);
                 }
                 if li > frontier {
                     count_prop();
+                    let _sp = obs::Span::begin(on, obs::Phase::DyProp, li as i32);
                     let (wv, _) = layer_params(spec, &offsets, theta, li);
                     let w = Tensor::from_vec(&[d, cg, kernel.0, kernel.1], wv.to_vec());
                     dy = tensor::conv2d_grad_input_im2col(
@@ -902,12 +1061,14 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                     out_dim: *out_dim,
                 };
                 if live {
+                    let _sv = obs::Span::begin(on, vphase, li as i32);
                     visitor.linear(&ctx, input, &dy);
                 } else {
                     let Some(DyEntry::Blocks { data, per_ex }) = dys.get(li) else {
                         unreachable!("layer below the propagation frontier must be cached");
                     };
                     debug_assert_eq!(*per_ex, *out_dim);
+                    let sr = obs::Span::begin(on, obs::Phase::DyRescale, li as i32);
                     let mut sd = vec![0.0f32; data.len()];
                     for (b, &s) in scales.iter().enumerate() {
                         for (o, v) in sd[b * per_ex..(b + 1) * per_ex]
@@ -917,11 +1078,14 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                             *o = s * *v;
                         }
                     }
+                    drop(sr);
                     let sdy = Tensor::from_vec(&[bsz, *out_dim], sd);
+                    let _sv = obs::Span::begin(on, vphase, li as i32);
                     visitor.linear(&ctx, input, &sdy);
                 }
                 if li > frontier {
                     count_prop();
+                    let _sp = obs::Span::begin(on, obs::Phase::DyProp, li as i32);
                     let (wv, _) = layer_params(spec, &offsets, theta, li);
                     let w = Tensor::from_vec(&[*out_dim, *in_dim], wv.to_vec());
                     dy = tensor::linear_grad_input(&dy, &w);
@@ -941,9 +1105,14 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                     // mirroring backward_walk's unconditional count
                     let (gv, _) = layer_params(spec, &offsets, theta, li);
                     count_prop();
+                    let sp = obs::Span::begin(on, obs::Phase::DyProp, li as i32);
                     let (dgamma, dbeta, dx) =
                         tensor::instance_norm_grad(&dy, xhat, inv_std, gv);
-                    visitor.instance_norm(&ctx, &dgamma, &dbeta);
+                    drop(sp);
+                    {
+                        let _sv = obs::Span::begin(on, vphase, li as i32);
+                        visitor.instance_norm(&ctx, &dgamma, &dbeta);
+                    }
                     if li > frontier {
                         dy = dx;
                     }
@@ -951,6 +1120,7 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                     let Some(DyEntry::Affine { dgamma, dbeta }) = dys.get(li) else {
                         unreachable!("layer below the propagation frontier must be cached");
                     };
+                    let sr = obs::Span::begin(on, obs::Phase::DyRescale, li as i32);
                     let mut sg = vec![0.0f32; dgamma.len()];
                     let mut sb = vec![0.0f32; dbeta.len()];
                     for (b, &s) in scales.iter().enumerate() {
@@ -959,8 +1129,10 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                             sb[b * cc + c] = s * dbeta[b * cc + c];
                         }
                     }
+                    drop(sr);
                     let sg = Tensor::from_vec(&[bsz, cc], sg);
                     let sb = Tensor::from_vec(&[bsz, cc], sb);
+                    let _sv = obs::Span::begin(on, vphase, li as i32);
                     visitor.instance_norm(&ctx, &sg, &sb);
                 }
             }
@@ -979,9 +1151,14 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                 if live {
                     let (gv, _) = layer_params(spec, &offsets, theta, li);
                     count_prop();
+                    let sp = obs::Span::begin(on, obs::Phase::DyProp, li as i32);
                     let (dgamma, dbeta, dx) =
                         tensor::group_norm_grad(&dy, xhat, inv_std, gv, *groups);
-                    visitor.group_norm(&ctx, &dgamma, &dbeta, Some((&dy, xhat)));
+                    drop(sp);
+                    {
+                        let _sv = obs::Span::begin(on, vphase, li as i32);
+                        visitor.group_norm(&ctx, &dgamma, &dbeta, Some((&dy, xhat)));
+                    }
                     if li > frontier {
                         dy = dx;
                     }
@@ -989,6 +1166,7 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                     let Some(DyEntry::Affine { dgamma, dbeta }) = dys.get(li) else {
                         unreachable!("layer below the propagation frontier must be cached");
                     };
+                    let sr = obs::Span::begin(on, obs::Phase::DyRescale, li as i32);
                     let mut sg = vec![0.0f32; dgamma.len()];
                     let mut sb = vec![0.0f32; dbeta.len()];
                     for (b, &s) in scales.iter().enumerate() {
@@ -997,8 +1175,10 @@ pub(crate) fn reuse_walk<V: BackwardVisitor>(
                             sb[b * cc + c] = s * dbeta[b * cc + c];
                         }
                     }
+                    drop(sr);
                     let sg = Tensor::from_vec(&[bsz, cc], sg);
                     let sb = Tensor::from_vec(&[bsz, cc], sb);
+                    let _sv = obs::Span::begin(on, vphase, li as i32);
                     visitor.group_norm(&ctx, &sg, &sb, None);
                 }
             }

@@ -275,6 +275,15 @@ pub struct ExperimentConfig {
     /// this CSV path after training (`[train] grad_dump`). Requires a
     /// materializing strategy; rejected with `ghostnorm`.
     pub grad_dump: Option<String>,
+    /// Phase-level tracing (`[train] profile` / `--profile`): turn on
+    /// the [`crate::obs`] span tracer for the run and print a per-step
+    /// phase breakdown at the end. Off by default (the tracer is
+    /// zero-cost when disabled).
+    pub profile: bool,
+    /// Where to write the `trace/v1` JSON document (`[train]
+    /// trace_out` / `--trace-out`): step reports plus a
+    /// chrome://tracing-compatible event stream. Requires `profile`.
+    pub trace_out: Option<String>,
     /// Native-backend worker threads (0 = one per core).
     pub threads: usize,
     /// Native-backend model config (`[model]` section), in the same
@@ -431,6 +440,19 @@ impl ExperimentConfig {
                  \"reuse\" or \"auto\""
             );
         }
+        let profile = bool_or_strict(cfg, "train.profile", false)?;
+        let trace_out = opt_string(cfg, "train.trace_out")?;
+        // hardening: a trace path without the tracer on would silently
+        // write nothing — reject the contradiction at config time
+        // (mirroring the ghostnorm+grad_dump precedent)
+        if trace_out.is_some() && !profile {
+            bail!(
+                "config conflict: `train.trace_out` names a trace file, but profiling is \
+                 off — the tracer records no spans without `train.profile = true` \
+                 (`--profile`), so the trace would be empty; enable profiling or drop \
+                 `train.trace_out`"
+            );
+        }
         let model = native_model_config(cfg)?;
         // build the spec once here so a bad [model] section (groups
         // not dividing channels, a residual span with no room, ...)
@@ -446,6 +468,8 @@ impl ExperimentConfig {
             ghost_budget_mb: ghost_budget_mb as usize,
             inner_parallel: bool_or_strict(cfg, "train.inner_parallel", true)?,
             grad_dump,
+            profile,
+            trace_out,
             threads: int_or(cfg, "train.threads", 0)?.max(0) as usize,
             model,
             step_artifact,
@@ -857,6 +881,38 @@ name = "synthetic # not a comment"
         )
         .unwrap();
         assert!(ExperimentConfig::from_config(&c).is_ok());
+    }
+
+    #[test]
+    fn profile_and_trace_out_knobs() {
+        // defaults: profiling off, no trace path
+        let c = Config::parse("[train]\nstrategy = \"crb\"\n").unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert!(!e.profile);
+        assert_eq!(e.trace_out, None);
+        // profile alone is fine (summary only, no file)
+        let c = Config::parse("[train]\nprofile = true\n").unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert!(e.profile);
+        // profile + trace path
+        let c = Config::parse(
+            "[train]\nprofile = true\ntrace_out = \"trace.json\"\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.trace_out.as_deref(), Some("trace.json"));
+        // the contradiction: a trace path with profiling off would
+        // write an empty trace — rejected at config-parse time
+        let c = Config::parse("[train]\ntrace_out = \"trace.json\"\n").unwrap();
+        let err = ExperimentConfig::from_config(&c).unwrap_err().to_string();
+        assert!(err.contains("trace_out"), "{err}");
+        assert!(err.contains("profile"), "{err}");
+        // mistyped values are config errors, not defaults
+        let c = Config::parse("[train]\nprofile = 1\n").unwrap();
+        let err = format!("{:#}", ExperimentConfig::from_config(&c).unwrap_err());
+        assert!(err.contains("train.profile"), "{err}");
+        let c = Config::parse("[train]\nprofile = true\ntrace_out = 3\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
     }
 
     #[test]

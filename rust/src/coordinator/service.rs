@@ -359,6 +359,16 @@ impl ServiceHandle {
         &self.label
     }
 
+    /// One unified metrics snapshot: the service's own registry
+    /// (queue depth, batch fill, per-worker latency histograms)
+    /// followed by the process-global registry
+    /// ([`metrics::global_snapshot`]) — the backward counters
+    /// (`backward.*`) and the allocation-ledger gauges — so callers
+    /// never have to stitch the two views together.
+    pub fn metrics_snapshot(&self) -> String {
+        format!("{}{}", self.metrics.snapshot(), metrics::global_snapshot())
+    }
+
     /// The frozen parameter vector gradients are taken at.
     pub fn theta(&self) -> &[f32] {
         &self.theta

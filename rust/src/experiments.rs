@@ -18,6 +18,7 @@ use crate::bench::{measure, Protocol, Stats, Table};
 use crate::ghost::{self, ClippedStepPlanner, GhostMode, GhostPipeline};
 use crate::jsonx::{self, Value};
 use crate::models::ModelSpec;
+use crate::obs;
 use crate::rng::Xoshiro256pp;
 use crate::runtime::{HostValue, Registry};
 use crate::strategies::{Strategy, StrategyRunner};
@@ -308,6 +309,24 @@ impl NativeSweepOptions {
     }
 }
 
+/// Leaf-phase busy seconds for one sweep cell, from a single profiled
+/// pass of the cell's workload run *after* (and outside) the timed
+/// measurement — the per-cell phase breakdown `BENCH_strategies.json`
+/// carries next to the end-to-end numbers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseBusy {
+    /// im2col patch-matrix construction (fills + cache-miss recompute).
+    pub im2col_s: f64,
+    /// Eq.-4 `dW` matmuls (per-example grads or clipped sums).
+    pub dw_matmul_s: f64,
+    /// Direct square-sum / Gram norm kernels (ghostnorm cells only).
+    pub norm_kernel_s: f64,
+    /// dy propagation to the previous layer (chain-rule matmuls).
+    pub dy_prop_s: f64,
+    /// Cached-dy rescaling (the `ghostnorm_reuse` cells).
+    pub dy_rescale_s: f64,
+}
+
 /// One measured point of the native sweep — the machine-readable
 /// record behind `BENCH_strategies.json`.
 #[derive(Clone, Debug)]
@@ -343,6 +362,10 @@ pub struct SweepCell {
     /// nonzero exactly when the inner split engaged, e.g. the `B = 1`
     /// rows on a multi-core host.
     pub visitor_units: u64,
+    /// Per-phase busy seconds from the cell's profiled pass (one
+    /// workload pass with the [`crate::obs`] tracer on, run after the
+    /// timed measurement so tracing never perturbs the numbers).
+    pub phases: PhaseBusy,
 }
 
 /// Native strategy sweep — the artifact-free miniature of Figure 1,
@@ -409,7 +432,7 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                 }
                 let mut row = Vec::new();
                 for strategy in Strategy::ALL {
-                    let (stats, peak_bytes, props, units) = time_native_cell(
+                    let (stats, peak_bytes, props, units, phases) = time_native_cell(
                         &spec,
                         strategy,
                         GhostPipeline::Fused,
@@ -428,12 +451,13 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                         peak_bytes,
                         prop_matmuls: props,
                         visitor_units: units,
+                        phases,
                         stats,
                     });
                 }
                 // fused-vs-twopass comparison: same model, same
                 // inputs, legacy pipeline
-                let (stats, peak_bytes, props, units) = time_native_cell(
+                let (stats, peak_bytes, props, units, phases) = time_native_cell(
                     &spec,
                     Strategy::GhostNorm,
                     GhostPipeline::TwoPass,
@@ -452,11 +476,12 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                     peak_bytes,
                     prop_matmuls: props,
                     visitor_units: units,
+                    phases,
                     stats,
                 });
                 // scaled-reuse comparison: same model, same inputs,
                 // dy blocks rescaled instead of re-propagated
-                let (stats, peak_bytes, props, units) = time_native_cell(
+                let (stats, peak_bytes, props, units, phases) = time_native_cell(
                     &spec,
                     Strategy::GhostNorm,
                     GhostPipeline::FusedReuse,
@@ -475,6 +500,7 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                     peak_bytes,
                     prop_matmuls: props,
                     visitor_units: units,
+                    phases,
                     stats,
                 });
                 table.push(&format!("{model} {rate:.1}"), row);
@@ -499,33 +525,75 @@ fn time_native_cell(
     opts: &NativeSweepOptions,
     theta: &[f32],
     batches: &[(Tensor, Vec<i32>)],
-) -> Result<(Stats, u64, u64, u64)> {
-    let stats;
+) -> Result<(Stats, u64, u64, u64, PhaseBusy)> {
     tensor::alloc::reset_peak();
     let base = tensor::alloc::live_elems();
     let props0 = prop_matmuls();
     let units0 = visitor_units();
     if strategy == Strategy::GhostNorm {
         let planner = ClippedStepPlanner::new(spec, &GhostMode::default())?.with_pipeline(pipeline);
-        stats = measure(opts.proto, || {
+        Ok(finish_cell(opts.proto, base, props0, units0, || {
             for (x, y) in batches {
                 ghost::clipped_step(&planner, theta, x, y, opts.clip, opts.threads)
                     .expect("ghost bench step failed");
             }
-        });
+        }))
     } else {
         let runner = StrategyRunner::new(spec.clone(), strategy, opts.threads);
-        stats = measure(opts.proto, || {
+        Ok(finish_cell(opts.proto, base, props0, units0, || {
             for (x, y) in batches {
                 let (g, _) = runner
                     .perex_grads(theta, x, y)
                     .expect("native bench step failed");
                 let _ = tensor::clip_reduce(&g, opts.clip);
             }
-        });
+        }))
     }
+}
+
+/// The shared tail of a cell: run the timed measurement, snapshot the
+/// peak/counter columns (they span warmup + reps only), then run ONE
+/// more workload pass with the tracer on for the per-phase breakdown —
+/// strictly after the measurement and the snapshots, so tracing can
+/// never perturb the timed numbers or the counter columns.
+fn finish_cell(
+    proto: Protocol,
+    base: i64,
+    props0: u64,
+    units0: u64,
+    run: impl Fn(),
+) -> (Stats, u64, u64, u64, PhaseBusy) {
+    let stats = measure(proto, &run);
     let peak = (tensor::alloc::peak_elems() - base).max(0) as u64 * 4;
-    Ok((stats, peak, prop_matmuls() - props0, visitor_units() - units0))
+    let props = prop_matmuls() - props0;
+    let units = visitor_units() - units0;
+    let phases = profile_phases(run);
+    (stats, peak, props, units, phases)
+}
+
+/// One profiled pass: enable the tracer, run the workload, restore
+/// the previous tracer state, and fold the drained events' busy time
+/// into the five leaf-phase columns.
+fn profile_phases(run: impl Fn()) -> PhaseBusy {
+    let was = obs::enabled();
+    obs::set_enabled(true);
+    obs::drain_events();
+    run();
+    obs::set_enabled(was);
+    let mut out = PhaseBusy::default();
+    for e in obs::drain_events() {
+        let s = e.busy_us as f64 / 1e6;
+        match e.phase {
+            obs::Phase::Im2colFill => out.im2col_s += s,
+            obs::Phase::DwMatmul => out.dw_matmul_s += s,
+            obs::Phase::NormKernel => out.norm_kernel_s += s,
+            obs::Phase::DyProp => out.dy_prop_s += s,
+            obs::Phase::DyRescale => out.dy_rescale_s += s,
+            _ => {}
+        }
+    }
+    obs::drain_cache_notes();
+    out
 }
 
 /// Render the sweep as the `BENCH_strategies.json` document — the
@@ -562,6 +630,11 @@ pub fn sweep_to_json(opts: &NativeSweepOptions, cells: &[SweepCell]) -> Value {
                             ("peak_bytes", jsonx::num(c.peak_bytes as f64)),
                             ("prop_matmuls", jsonx::num(c.prop_matmuls as f64)),
                             ("visitor_units", jsonx::num(c.visitor_units as f64)),
+                            ("phase_im2col_s", jsonx::num(c.phases.im2col_s)),
+                            ("phase_dw_matmul_s", jsonx::num(c.phases.dw_matmul_s)),
+                            ("phase_norm_kernel_s", jsonx::num(c.phases.norm_kernel_s)),
+                            ("phase_dy_prop_s", jsonx::num(c.phases.dy_prop_s)),
+                            ("phase_dy_rescale_s", jsonx::num(c.phases.dy_rescale_s)),
                         ])
                     })
                     .collect(),
@@ -621,6 +694,9 @@ mod tests {
     /// the perf trajectory needs.
     #[test]
     fn quick_sweep_json_roundtrips() {
+        // the per-cell profiled pass flips the process-global tracer —
+        // serialize with the obs tests on the crate-wide guard
+        let _g = crate::obs::test_guard();
         let opts = NativeSweepOptions::quick();
         let (tables, cells) = run_native_sweep(&opts).unwrap();
         // one table per batch size (B=1 and B=4), 6 cells per
@@ -651,7 +727,24 @@ mod tests {
             assert!(c.stats.mean >= 0.0);
             assert!(c.ns_per_example >= 0.0);
             assert!(c.params > 0);
+            assert!(c.phases.im2col_s >= 0.0);
         }
+        // phase attribution: ghostnorm cells spend norm-kernel time,
+        // reuse cells spend dy-rescale time, crb spends dW-matmul time
+        assert!(
+            cells
+                .iter()
+                .filter(|c| c.strategy == "ghostnorm")
+                .any(|c| c.phases.norm_kernel_s > 0.0),
+            "ghostnorm cells recorded no norm-kernel busy time"
+        );
+        assert!(
+            cells
+                .iter()
+                .filter(|c| c.strategy == "crb")
+                .any(|c| c.phases.dw_matmul_s > 0.0),
+            "crb cells recorded no dW-matmul busy time"
+        );
         let doc = sweep_to_json(&opts, &cells);
         let text = jsonx::to_string(&doc);
         let back = jsonx::parse(&text).unwrap();
@@ -668,6 +761,18 @@ mod tests {
             assert!(r.get("peak_bytes").and_then(|v| v.as_f64()).is_some());
             assert!(r.get("prop_matmuls").and_then(|v| v.as_f64()).is_some());
             assert!(r.get("visitor_units").and_then(|v| v.as_f64()).is_some());
+            for key in [
+                "phase_im2col_s",
+                "phase_dw_matmul_s",
+                "phase_norm_kernel_s",
+                "phase_dy_prop_s",
+                "phase_dy_rescale_s",
+            ] {
+                assert!(
+                    r.get(key).and_then(|v| v.as_f64()).is_some(),
+                    "missing phase column {key}"
+                );
+            }
         }
     }
 }

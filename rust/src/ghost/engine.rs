@@ -76,6 +76,7 @@ use crate::backward::{
     backward_walk, forward_with_tape, reuse_walk, ClippedSumVisitor, ColsMode, DyMode,
     NormVisitor, WalkCtl,
 };
+use crate::obs;
 use crate::strategies;
 use crate::tensor::{self, ColsCache, DyCache, Tensor};
 use anyhow::{anyhow, bail, Result};
@@ -162,6 +163,32 @@ fn fold_partials(p: usize, partials: &[Tensor]) -> Vec<f32> {
 /// [`tensor::clip_reduce`] so every pipeline scales identically.
 fn clip_scales(norms: &[f32], clip: f32) -> Vec<f32> {
     norms.iter().map(|n| 1.0 / (n / clip).max(1.0)).collect()
+}
+
+/// Report the cols cache's tallies to the tracer (callers gate on the
+/// walk's pre-read enabled flag — reading the tallies is free, the
+/// point is not to push events when tracing is off).
+fn note_cols_cache(c: &ColsCache) {
+    obs::record_cache(obs::CacheNote {
+        kind: obs::CacheKind::Cols,
+        fills: c.fills() as u64,
+        hits: c.hits(),
+        misses: c.misses(),
+        spills: c.spills() as u64,
+        used_elems: c.used_elems() as u64,
+    });
+}
+
+/// Report the dy cache's tallies to the tracer.
+fn note_dy_cache(c: &DyCache) {
+    obs::record_cache(obs::CacheNote {
+        kind: obs::CacheKind::Dy,
+        fills: c.fills() as u64,
+        hits: c.hits(),
+        misses: c.misses(),
+        spills: c.spills() as u64,
+        used_elems: c.used_elems() as u64,
+    });
 }
 
 fn validate(planner: &ClippedStepPlanner, theta: &[f32], x: &Tensor, y: &[i32]) -> Result<()> {
@@ -333,25 +360,33 @@ fn fused_range(
 ) -> Tensor {
     let spec = planner.spec();
     let bsz = x.shape[0];
+    // one enabled check per microbatch; spans below thread it through
+    let on = obs::enabled();
     let (logits, saved) = forward_with_tape(spec, theta, x);
     let classes = logits.shape[1];
-    let (losses, mut dy) = tensor::softmax_xent(&logits, y);
+    let (losses, mut dy) = {
+        let _sl = obs::Span::begin(on, obs::Phase::Loss, -1);
+        tensor::softmax_xent(&logits, y)
+    };
     losses_out.copy_from_slice(&losses);
 
     let mut cache = ColsCache::new(cache_cap_elems);
     let mut nv = NormVisitor::new(planner, bsz);
-    backward_walk(
-        spec,
-        theta,
-        &saved,
-        dy.clone(),
-        &mut nv,
-        WalkCtl {
-            cols: ColsMode::Fill(&mut cache),
-            dy: DyMode::Off,
-            inner,
-        },
-    );
+    {
+        let _sw = obs::Span::begin(on, obs::Phase::NormWalk, -1);
+        backward_walk(
+            spec,
+            theta,
+            &saved,
+            dy.clone(),
+            &mut nv,
+            WalkCtl {
+                cols: ColsMode::Fill(&mut cache),
+                dy: DyMode::Off,
+                inner,
+            },
+        );
+    }
     nv.write_norms(norms_out);
 
     // Eq. 1: s_b = min(1, C/‖g_b‖), spelled as in `clip_reduce`;
@@ -365,18 +400,24 @@ fn fused_range(
         }
     }
     let mut cv = ClippedSumVisitor::new(spec.param_count());
-    backward_walk(
-        spec,
-        theta,
-        &saved,
-        dy,
-        &mut cv,
-        WalkCtl {
-            cols: ColsMode::Read(&cache),
-            dy: DyMode::Off,
-            inner,
-        },
-    );
+    {
+        let _sw = obs::Span::begin(on, obs::Phase::SumWalk, -1);
+        backward_walk(
+            spec,
+            theta,
+            &saved,
+            dy,
+            &mut cv,
+            WalkCtl {
+                cols: ColsMode::Read(&cache),
+                dy: DyMode::Off,
+                inner,
+            },
+        );
+    }
+    if on {
+        note_cols_cache(&cache);
+    }
     cv.psum
 }
 
@@ -399,33 +440,48 @@ fn reuse_range(
     let spec = planner.spec();
     let bsz = x.shape[0];
     let plan = planner.reuse_plan(bsz);
+    // one enabled check per microbatch; spans below thread it through
+    let on = obs::enabled();
     let (logits, saved) = forward_with_tape(spec, theta, x);
-    let (losses, dy) = tensor::softmax_xent(&logits, y);
+    let (losses, dy) = {
+        let _sl = obs::Span::begin(on, obs::Phase::Loss, -1);
+        tensor::softmax_xent(&logits, y)
+    };
     losses_out.copy_from_slice(&losses);
 
     let mut cols = ColsCache::new(plan.cols_budget);
     let mut dys = DyCache::new(plan.dy_budget);
     let mut nv = NormVisitor::new(planner, bsz);
-    backward_walk(
-        spec,
-        theta,
-        &saved,
-        dy.clone(),
-        &mut nv,
-        WalkCtl {
-            cols: ColsMode::Fill(&mut cols),
-            dy: DyMode::Fill {
-                cache: &mut dys,
-                plan: &plan,
+    {
+        let _sw = obs::Span::begin(on, obs::Phase::NormWalk, -1);
+        backward_walk(
+            spec,
+            theta,
+            &saved,
+            dy.clone(),
+            &mut nv,
+            WalkCtl {
+                cols: ColsMode::Fill(&mut cols),
+                dy: DyMode::Fill {
+                    cache: &mut dys,
+                    plan: &plan,
+                },
+                inner,
             },
-            inner,
-        },
-    );
+        );
+    }
     nv.write_norms(norms_out);
 
     let scales = clip_scales(norms_out, clip);
     let mut cv = ClippedSumVisitor::new(spec.param_count());
-    reuse_walk(spec, theta, &saved, dy, &scales, &mut cv, &cols, &dys, inner);
+    {
+        let _sw = obs::Span::begin(on, obs::Phase::SumWalk, -1);
+        reuse_walk(spec, theta, &saved, dy, &scales, &mut cv, &cols, &dys, inner);
+    }
+    if on {
+        note_cols_cache(&cols);
+        note_dy_cache(&dys);
+    }
     cv.psum
 }
 
@@ -478,10 +534,15 @@ fn norms_range(
 ) {
     let spec = planner.spec();
     let bsz = x.shape[0];
+    let on = obs::enabled();
     let (logits, saved) = forward_with_tape(spec, theta, x);
-    let (losses, dy) = tensor::softmax_xent(&logits, y);
+    let (losses, dy) = {
+        let _sl = obs::Span::begin(on, obs::Phase::Loss, -1);
+        tensor::softmax_xent(&logits, y)
+    };
     losses_out.copy_from_slice(&losses);
     let mut nv = NormVisitor::new(planner, bsz);
+    let _sw = obs::Span::begin(on, obs::Phase::NormWalk, -1);
     backward_walk(
         spec,
         theta,
@@ -494,6 +555,7 @@ fn norms_range(
             inner,
         },
     );
+    drop(_sw);
     nv.write_norms(norms_out);
 }
 
@@ -510,9 +572,13 @@ fn clipped_sum_range(
 ) -> Tensor {
     let spec = planner.spec();
     let bsz = x.shape[0];
+    let on = obs::enabled();
     let (logits, saved) = forward_with_tape(spec, theta, x);
     let classes = logits.shape[1];
-    let (_, mut dy) = tensor::softmax_xent(&logits, y);
+    let (_, mut dy) = {
+        let _sl = obs::Span::begin(on, obs::Phase::Loss, -1);
+        tensor::softmax_xent(&logits, y)
+    };
     for b in 0..bsz {
         let s = scales[b];
         for v in &mut dy.data[b * classes..(b + 1) * classes] {
@@ -520,6 +586,7 @@ fn clipped_sum_range(
         }
     }
     let mut cv = ClippedSumVisitor::new(spec.param_count());
+    let _sw = obs::Span::begin(on, obs::Phase::SumWalk, -1);
     backward_walk(
         spec,
         theta,
@@ -532,6 +599,7 @@ fn clipped_sum_range(
             inner,
         },
     );
+    drop(_sw);
     cv.psum
 }
 

@@ -57,6 +57,7 @@ pub mod ghost;
 pub mod jsonx;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod privacy;
 pub mod rng;
 pub mod runtime;

@@ -31,7 +31,7 @@ use grad_cnns::privacy::DpSgdAccountant;
 use grad_cnns::runtime::{HostValue, NativeBackend, Registry};
 use grad_cnns::strategies::{Strategy, StrategyRunner};
 use grad_cnns::tensor::{clip_reduce, Tensor};
-use grad_cnns::{experiments, models, rng};
+use grad_cnns::{experiments, jsonx, models, obs, rng};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -139,7 +139,16 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         .opt("checkpoint-dir", "write checkpoints here")
         .opt_default("checkpoint-every", "0", "checkpoint cadence (steps)")
         .opt("report", "write the markdown train report here")
-        .flag("quiet", "suppress per-step logging");
+        .opt(
+            "trace-out",
+            "write the trace/v1 JSON (step reports + chrome://tracing events) here; \
+             requires --profile",
+        )
+        .flag("quiet", "suppress per-step logging")
+        .flag(
+            "profile",
+            "trace the backward hot path per phase and print a step-report summary",
+        );
     let args = cmd.parse(rest)?;
 
     let mut cfg = match args.get("config") {
@@ -164,12 +173,21 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         ("clip", "dp.clip_norm"),
         ("sigma", "dp.noise_multiplier"),
         ("artifacts", "train.artifacts_dir"),
+        ("trace-out", "train.trace_out"),
     ] {
         if let Some(v) = args.get(cli_key) {
             cfg.set(cfg_key, v)?;
         }
     }
+    if args.has_flag("profile") {
+        cfg.set("train.profile", "true")?;
+    }
     let exp = ExperimentConfig::from_config(&cfg)?;
+    let profile = exp.profile;
+    let trace_out = exp.trace_out.clone();
+    if profile {
+        obs::set_enabled(true);
+    }
 
     let mut trainer = Trainer::from_config(exp)?;
     println!("backend: {}", trainer.backend_name());
@@ -194,7 +212,68 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         std::fs::write(path, report.to_markdown())?;
         println!("report written to {path}");
     }
+    if profile {
+        obs::set_enabled(false);
+        let reports = obs::take_reports();
+        print_profile_summary(&reports);
+        if let Some(path) = &trace_out {
+            let doc = jsonx::to_string(&obs::trace_json(&reports));
+            std::fs::write(path, doc)?;
+            println!("trace written to {path} (load at chrome://tracing for the flame view)");
+        }
+    }
     Ok(())
+}
+
+/// Render the profiled run: per-phase busy time aggregated over every
+/// step's [`obs::StepReport`] (walk scopes enclose the leaf phases, so
+/// only leaves count toward utilization — see `docs/ARCHITECTURE.md`).
+fn print_profile_summary(reports: &[obs::StepReport]) {
+    if reports.is_empty() {
+        println!("\nprofile: no step reports recorded (did the run take any native steps?)");
+        return;
+    }
+    let wall_us: u64 = reports.iter().map(|r| r.wall_us).sum();
+    let busy_us: u64 = reports.iter().map(|r| r.busy_us).sum();
+    let util =
+        reports.iter().map(|r| r.utilization).sum::<f64>() / reports.len() as f64;
+    let gflops =
+        reports.iter().map(|r| r.achieved_gflops).sum::<f64>() / reports.len() as f64;
+    println!(
+        "\nprofile: {} steps, {:.1} ms stepped wall, {} threads; mean leaf utilization \
+         {:.1}%, mean modeled {:.2} GFLOP/s",
+        reports.len(),
+        wall_us as f64 / 1e3,
+        reports[0].threads,
+        100.0 * util,
+        gflops
+    );
+    let mut by_phase: std::collections::BTreeMap<&'static str, (u64, u64, bool)> =
+        Default::default();
+    for r in reports {
+        let slices = r
+            .globals
+            .iter()
+            .chain(r.layers.iter().flat_map(|l| l.phases.iter()));
+        for ps in slices {
+            let e = by_phase.entry(ps.phase.name()).or_default();
+            e.0 += ps.busy_us;
+            e.1 += ps.events;
+            e.2 = ps.phase.is_leaf();
+        }
+    }
+    let mut rows: Vec<_> = by_phase.into_iter().collect();
+    rows.sort_by(|a, b| b.1 .0.cmp(&a.1 .0));
+    println!("| phase | busy ms | events | % of leaf busy |");
+    println!("|---|---|---|---|");
+    for (name, (us, events, leaf)) in rows {
+        let share = if leaf && busy_us > 0 {
+            format!("{:.1}%", 100.0 * us as f64 / busy_us as f64)
+        } else {
+            "scope".to_string()
+        };
+        println!("| {name} | {:.2} | {events} | {share} |", us as f64 / 1e3);
+    }
 }
 
 const DEFAULT_TRAIN_CONFIG: &str = r#"
@@ -292,7 +371,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let mean_norm: f32 =
         responses.iter().map(|r| r.grad_norm).sum::<f32>() / responses.len() as f32;
     println!("mean per-example ‖g‖ = {mean_norm:.4}");
-    println!("{}", svc.metrics.snapshot());
+    // the unified view: service queue/latency metrics plus the
+    // process-global backward counters and allocation gauges
+    print!("{}", svc.metrics_snapshot());
     svc.shutdown();
     Ok(())
 }

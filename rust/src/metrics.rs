@@ -94,12 +94,21 @@ impl Histogram {
     }
 
     /// Approximate quantile from bucket boundaries (upper bound).
+    ///
+    /// Edge cases are well-defined rather than accidental: an empty
+    /// histogram returns 0.0 for every `q`; `q` outside `[0, 1]`
+    /// (including NaN) is clamped into the range; and the target rank
+    /// is at least 1, so `q = 0` returns the first *occupied* bucket's
+    /// bound (for a single-sample histogram, every quantile is that
+    /// one sample's bucket bound).
     pub fn quantile_secs(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
             return 0.0;
         }
-        let target = (q * total as f64).ceil() as u64;
+        // f64::clamp propagates NaN, so strip it first
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
         let mut seen = 0;
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
@@ -181,6 +190,31 @@ impl Registry {
     }
 }
 
+static GLOBAL: std::sync::OnceLock<Registry> = std::sync::OnceLock::new();
+
+/// The process-global registry: the one place the crate's ad-hoc
+/// global counters live. The backward substrate publishes here
+/// (`backward.tape_builds`, `backward.prop_matmuls`,
+/// `backward.visitor_units` — the free functions in
+/// [`crate::backward`] are thin shims over these), and
+/// [`global_snapshot`] adds the allocation-ledger gauges, so one
+/// snapshot call returns them all.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::default)
+}
+
+/// Refresh the allocation-ledger gauges (`tensor.alloc.live_elems`,
+/// `tensor.alloc.peak_elems`) and render the [`global`] registry's
+/// snapshot — counters, gauges and histograms in one string.
+pub fn global_snapshot() -> String {
+    let g = global();
+    g.gauge("tensor.alloc.live_elems")
+        .set(crate::tensor::alloc::live_elems() as f64);
+    g.gauge("tensor.alloc.peak_elems")
+        .set(crate::tensor::alloc::peak_elems() as f64);
+    g.snapshot()
+}
+
 /// RAII timer recording into a histogram on drop.
 pub struct Timer {
     hist: Arc<Histogram>,
@@ -243,6 +277,41 @@ mod tests {
         h.observe_secs(1e9); // clamps into last bucket
         assert_eq!(h.count(), 2);
         assert!(h.quantile_secs(1.0) > 0.0);
+    }
+
+    #[test]
+    fn quantiles_on_empty_histogram_are_zero() {
+        let h = Histogram::default();
+        for q in [-1.0, 0.0, 0.5, 0.99, 1.0, 2.0, f64::NAN] {
+            assert_eq!(h.quantile_secs(q), 0.0, "q = {q}");
+        }
+        assert_eq!(h.mean_secs(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_histogram_quantiles_are_the_sample_bucket() {
+        let h = Histogram::default();
+        h.observe_secs(0.005); // 5ms → the 4096..8192us bucket
+        let want = h.quantile_secs(0.5);
+        assert!(want > 0.0);
+        // that one sample's bucket bound answers every quantile,
+        // including the q=0 / out-of-range / NaN corners
+        for q in [-0.5, 0.0, 0.01, 0.5, 0.99, 1.0, 7.0, f64::NAN] {
+            assert_eq!(h.quantile_secs(q), want, "q = {q}");
+        }
+        // and the bound brackets the sample within one 2x bucket
+        assert!(want >= 0.005 && want <= 0.02, "bound {want}");
+    }
+
+    #[test]
+    fn global_registry_is_one_instance() {
+        let a = global().counter("test.metrics.global_probe");
+        a.add(3);
+        assert_eq!(global().counter("test.metrics.global_probe").get(), 3);
+        let snap = global_snapshot();
+        assert!(snap.contains("test.metrics.global_probe = 3"), "{snap}");
+        assert!(snap.contains("tensor.alloc.live_elems"), "{snap}");
+        assert!(snap.contains("tensor.alloc.peak_elems"), "{snap}");
     }
 
     #[test]

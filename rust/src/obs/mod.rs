@@ -1,0 +1,406 @@
+//! Observability: a low-overhead span tracer over the backward hot
+//! path, plus the per-step report it aggregates into.
+//!
+//! The tracer instruments the native step end to end — tape build,
+//! loss, the norm walk, the reweighted/reuse walk, the per-layer
+//! visitor phases (im2col fill, Eq.-4 `dW` matmuls, direct/Gram norm
+//! kernels, dy rescale, dy propagation), cache fill/hit/spill
+//! accounting, and the work-unit queue drain — and aggregates one
+//! training step's events into a structured [`StepReport`] carrying
+//! per-layer × per-phase wall time, the planner's own modeled FLOPs,
+//! achieved flops-utilization, and counter deltas. Reports export as
+//! JSON (`repro train --profile --trace-out trace.json`), including a
+//! chrome://tracing-compatible event stream for flame views.
+//!
+//! Two hard guarantees, pinned by `tests/obs_trace.rs`:
+//!
+//! * **Zero cost when disabled.** Every instrumented scope checks
+//!   [`enabled`] once (one relaxed atomic load per walk / per scope);
+//!   a disabled [`Span`] holds `None`, never reads a clock, never
+//!   allocates, and its `Drop` is a no-op. Disabled mode emits zero
+//!   events and registers nothing in the allocation ledger.
+//! * **No determinism perturbation.** Spans only read clocks and push
+//!   records; they never touch tensor data, reorder work units, or
+//!   change a fold order — outputs are bit-identical with tracing on
+//!   vs off (the existing differential matrices hold either way).
+//!
+//! State is process-global (like the counters it reports): one
+//! enabled flag, one event sink, one report store. Profile one
+//! workload at a time; concurrent profiled workloads interleave their
+//! events.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+mod report;
+
+pub use report::{trace_json, CounterDeltas, LayerReport, PhaseSlice, StepReport};
+
+/// The span taxonomy: where time goes inside one native step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// `forward_with_tape`: the taped forward pass.
+    TapeBuild,
+    /// Softmax cross-entropy loss + initial `dy`.
+    Loss,
+    /// The whole norm walk (per-example norms off the tape).
+    NormWalk,
+    /// The whole reweighted / reuse walk (clipped batch gradient).
+    SumWalk,
+    /// Building im2col patch matrices (fill or cache-miss recompute).
+    Im2colFill,
+    /// The Eq.-4 `dW` matmuls (per-example grads or clipped sums).
+    DwMatmul,
+    /// Direct square-sum or Gram norm kernels (the ghost trick).
+    NormKernel,
+    /// Propagating `dy` to the previous layer (chain rule matmuls).
+    DyProp,
+    /// Rescaling cached `dy` blocks by the clip factors (reuse walk).
+    DyRescale,
+    /// One work-unit queue drain by one thread (units + busy time).
+    QueueDrain,
+}
+
+impl Phase {
+    /// Every phase, in taxonomy order.
+    pub const ALL: [Phase; 10] = [
+        Phase::TapeBuild,
+        Phase::Loss,
+        Phase::NormWalk,
+        Phase::SumWalk,
+        Phase::Im2colFill,
+        Phase::DwMatmul,
+        Phase::NormKernel,
+        Phase::DyProp,
+        Phase::DyRescale,
+        Phase::QueueDrain,
+    ];
+
+    /// The snake_case name used in JSON exports and bench columns.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::TapeBuild => "tape_build",
+            Phase::Loss => "loss",
+            Phase::NormWalk => "norm_walk",
+            Phase::SumWalk => "sum_walk",
+            Phase::Im2colFill => "im2col_fill",
+            Phase::DwMatmul => "dw_matmul",
+            Phase::NormKernel => "norm_kernel",
+            Phase::DyProp => "dy_prop",
+            Phase::DyRescale => "dy_rescale",
+            Phase::QueueDrain => "queue_drain",
+        }
+    }
+
+    /// Whether this phase is a *leaf* compute phase: leaf busy times
+    /// are disjoint per thread, so their sum is bounded by
+    /// `wall × threads` — the invariant `tools/check_trace.py`
+    /// validates. Walk-level scopes ([`Phase::NormWalk`],
+    /// [`Phase::SumWalk`]) and [`Phase::QueueDrain`] *enclose* leaf
+    /// spans and are excluded from the busy sum to avoid double
+    /// counting.
+    pub fn is_leaf(&self) -> bool {
+        matches!(
+            self,
+            Phase::TapeBuild
+                | Phase::Loss
+                | Phase::Im2colFill
+                | Phase::DwMatmul
+                | Phase::NormKernel
+                | Phase::DyProp
+                | Phase::DyRescale
+        )
+    }
+}
+
+/// One recorded span (or queue-drain record).
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// What kind of work the span covers.
+    pub phase: Phase,
+    /// Layer index the span belongs to, or -1 for step-global spans.
+    pub layer: i32,
+    /// Small per-thread id (stable within a process, first-use order).
+    pub tid: u64,
+    /// Start, in microseconds since the process trace epoch.
+    pub start_us: u64,
+    /// Wall duration of the span in microseconds.
+    pub dur_us: u64,
+    /// Work units drained ([`Phase::QueueDrain`] only; else 0).
+    pub units: u64,
+    /// Busy time within the span: equals `dur_us` for plain spans;
+    /// for [`Phase::QueueDrain`] the time actually spent running
+    /// units (so `dur_us - busy_us` is idle/steal-wait time).
+    pub busy_us: u64,
+}
+
+/// Which budget-bounded cache a [`CacheNote`] describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheKind {
+    /// The per-(layer, example) im2col patch-matrix cache.
+    Cols,
+    /// The per-layer dy cache of the scaled-reuse pipeline.
+    Dy,
+}
+
+impl CacheKind {
+    /// The name used in JSON exports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CacheKind::Cols => "cols",
+            CacheKind::Dy => "dy",
+        }
+    }
+}
+
+/// One cache's fill/hit/spill accounting for one walk, pushed by the
+/// ghost engine after the walk completes (per worker microbatch;
+/// [`StepReport`] sums them per kind).
+#[derive(Clone, Copy, Debug)]
+pub struct CacheNote {
+    /// Which cache.
+    pub kind: CacheKind,
+    /// Successful inserts.
+    pub fills: u64,
+    /// Reads that found their entry.
+    pub hits: u64,
+    /// Reads that missed (spilled or never-inserted entries).
+    pub misses: u64,
+    /// Inserts dropped for budget.
+    pub spills: u64,
+    /// f32 elements held at note time.
+    pub used_elems: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EVENTS: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static CACHE_NOTES: Mutex<Vec<CacheNote>> = Mutex::new(Vec::new());
+static REPORTS: Mutex<Vec<StepReport>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Turn the tracer on or off (process-global). The hot path reads the
+/// flag once per instrumented scope; flipping it mid-walk is safe but
+/// yields a partial event set for that walk.
+pub fn set_enabled(on: bool) {
+    if on {
+        // pin the trace epoch before the first span reads the clock
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether the tracer is recording. Instrumented scopes read this
+/// once and thread the answer through their spans.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Microseconds since the process trace epoch.
+fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// This thread's small stable id (assigned on first use).
+pub fn thread_id() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            v
+        } else {
+            let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            t.set(v);
+            v
+        }
+    })
+}
+
+fn push(ev: Event) {
+    EVENTS.lock().unwrap().push(ev);
+}
+
+/// Record a finished span directly (used where the hot path
+/// accumulates durations locally — e.g. the serial per-example conv
+/// loop emits *one* event per phase per layer, not one per example).
+pub(crate) fn record_span(phase: Phase, layer: i32, start_us: u64, dur_us: u64) {
+    push(Event {
+        phase,
+        layer,
+        tid: thread_id(),
+        start_us,
+        dur_us,
+        units: 0,
+        busy_us: dur_us,
+    });
+}
+
+/// Record one thread's work-unit queue drain: `units` units run,
+/// `busy_us` of them actually executing, inside a `dur_us` drain.
+pub(crate) fn record_drain(layer: i32, start_us: u64, dur_us: u64, units: u64, busy_us: u64) {
+    push(Event {
+        phase: Phase::QueueDrain,
+        layer,
+        tid: thread_id(),
+        start_us,
+        dur_us,
+        units,
+        busy_us,
+    });
+}
+
+/// Record one cache's accounting for the walk that just finished.
+pub(crate) fn record_cache(note: CacheNote) {
+    CACHE_NOTES.lock().unwrap().push(note);
+}
+
+/// The wall-clock timestamp spans use, for hot-path code that batches
+/// its own measurements (only call under an [`enabled`] check — the
+/// disabled path must never read a clock).
+pub(crate) fn stamp_us() -> u64 {
+    now_us()
+}
+
+/// Drain and return all recorded events (oldest first).
+pub fn drain_events() -> Vec<Event> {
+    std::mem::take(&mut *EVENTS.lock().unwrap())
+}
+
+/// Drain and return all recorded cache notes.
+pub fn drain_cache_notes() -> Vec<CacheNote> {
+    std::mem::take(&mut *CACHE_NOTES.lock().unwrap())
+}
+
+/// Events currently buffered (tests pin disabled mode to 0).
+pub fn event_count() -> usize {
+    EVENTS.lock().unwrap().len()
+}
+
+/// Append a finished step report to the process-global store,
+/// assigning it the next step index. Returns that index.
+pub fn push_report(mut r: StepReport) -> usize {
+    let mut store = REPORTS.lock().unwrap();
+    r.step = store.len();
+    let idx = r.step;
+    store.push(r);
+    idx
+}
+
+/// Drain and return all step reports (oldest first).
+pub fn take_reports() -> Vec<StepReport> {
+    std::mem::take(&mut *REPORTS.lock().unwrap())
+}
+
+/// Serializes lib tests that flip the process-global tracer state:
+/// any test that calls [`set_enabled`] or asserts on drained
+/// events/reports must hold this guard (the lib test binary runs
+/// tests in parallel). Recovers from poisoning so one failing test
+/// does not cascade into spurious lock panics.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// An RAII span: times a scope and records one [`Event`] on drop.
+///
+/// Construct with the scope's pre-read enabled flag: a disabled span
+/// is `None` inside — no clock read, no allocation, no-op drop — so
+/// the disabled-mode cost of an instrumented scope is one branch.
+pub struct Span {
+    state: Option<(Phase, i32, u64)>,
+}
+
+impl Span {
+    /// Start a span for `phase` on `layer` (-1 for step-global) if
+    /// `on`; a dead span otherwise.
+    pub fn begin(on: bool, phase: Phase, layer: i32) -> Span {
+        Span {
+            state: on.then(|| (phase, layer, now_us())),
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((phase, layer, start_us)) = self.state.take() {
+            let dur_us = now_us().saturating_sub(start_us);
+            record_span(phase, layer, start_us, dur_us);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // obs state is process-global; every test here serializes on the
+    // crate-wide tracer guard and leaves the tracer disabled and
+    // drained.
+
+    #[test]
+    fn disabled_span_emits_nothing() {
+        let _g = test_guard();
+        set_enabled(false);
+        drain_events();
+        {
+            let _s = Span::begin(enabled(), Phase::TapeBuild, -1);
+        }
+        assert_eq!(event_count(), 0);
+    }
+
+    #[test]
+    fn enabled_span_records_one_event() {
+        let _g = test_guard();
+        set_enabled(true);
+        drain_events();
+        {
+            let _s = Span::begin(enabled(), Phase::Im2colFill, 3);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        set_enabled(false);
+        let evs = drain_events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].phase, Phase::Im2colFill);
+        assert_eq!(evs[0].layer, 3);
+        assert!(evs[0].dur_us >= 1000, "dur {}", evs[0].dur_us);
+        assert_eq!(evs[0].busy_us, evs[0].dur_us);
+        assert!(evs[0].tid > 0);
+    }
+
+    #[test]
+    fn drain_records_units_and_idle() {
+        let _g = test_guard();
+        set_enabled(true);
+        drain_events();
+        record_drain(2, 10, 100, 7, 60);
+        set_enabled(false);
+        let evs = drain_events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].phase, Phase::QueueDrain);
+        assert_eq!(evs[0].units, 7);
+        assert_eq!(evs[0].dur_us - evs[0].busy_us, 40);
+        assert!(!Phase::QueueDrain.is_leaf());
+    }
+
+    #[test]
+    fn phase_names_are_unique_and_snake() {
+        let mut seen = std::collections::BTreeSet::new();
+        for p in Phase::ALL {
+            assert!(seen.insert(p.name()), "duplicate {}", p.name());
+            assert!(p.name().chars().all(|c| c.is_ascii_lowercase() || c == '_'));
+        }
+    }
+
+    #[test]
+    fn thread_ids_are_stable_per_thread() {
+        let a = thread_id();
+        assert_eq!(a, thread_id());
+        let b = std::thread::spawn(thread_id).join().unwrap();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,390 @@
+//! Step reports: one native training step's trace, aggregated.
+//!
+//! [`StepReport::build`] joins the step's drained [`Event`]s against
+//! the planner's own per-layer plan, so the per-layer phase list is
+//! *by construction* the planner's layer list — the acceptance
+//! criterion the profile smoke test pins. [`trace_json`] renders a
+//! report set as one JSON document (`schema = "trace/v1"`) that also
+//! carries a chrome://tracing-compatible `traceEvents` stream.
+
+use super::{CacheKind, CacheNote, Event, Phase};
+use crate::ghost::{ClippedStepPlanner, NormPath};
+use crate::jsonx::{arr, num, obj, s, Value};
+
+/// Aggregated busy time for one phase (within one layer or globally).
+#[derive(Clone, Debug)]
+pub struct PhaseSlice {
+    /// Which phase.
+    pub phase: Phase,
+    /// Summed busy microseconds across the step's events.
+    pub busy_us: u64,
+    /// Number of events aggregated.
+    pub events: u64,
+    /// Work units drained (nonzero only for [`Phase::QueueDrain`]).
+    pub units: u64,
+}
+
+/// One planned layer's slice of the step.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    /// Layer index in the model spec.
+    pub layer_index: usize,
+    /// The planner's chosen norm path for the layer
+    /// (`"ghost"` / `"direct"`).
+    pub path: &'static str,
+    /// The planner's modeled FLOPs for the layer's norm work over the
+    /// whole batch (`chosen per-example cost × B`).
+    pub modeled_flops: u64,
+    /// Per-phase busy time observed at this layer, taxonomy order.
+    pub phases: Vec<PhaseSlice>,
+}
+
+/// Process-global counter deltas over the step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CounterDeltas {
+    /// Taped forwards built ([`crate::backward::tape_builds`]).
+    pub tape_builds: u64,
+    /// dy-propagation ops ([`crate::backward::prop_matmuls`]).
+    pub prop_matmuls: u64,
+    /// Parallel work units drained ([`crate::backward::visitor_units`]).
+    pub visitor_units: u64,
+}
+
+/// One training step's aggregated trace.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// Step index (assigned by [`super::push_report`]).
+    pub step: usize,
+    /// Step wall time in microseconds.
+    pub wall_us: u64,
+    /// Worker threads available to the step.
+    pub threads: usize,
+    /// Batch size of the step.
+    pub batch: usize,
+    /// Σ of the layers' modeled FLOPs (the planner's norm-work
+    /// estimate for the batch — a lower bound on the step's real
+    /// FLOPs, which also include the forward and the propagation).
+    pub modeled_flops: u64,
+    /// `modeled_flops / wall` in GFLOP/s — the planner's estimate
+    /// divided by observed time, the "did reality match the model"
+    /// number.
+    pub achieved_gflops: f64,
+    /// Σ busy microseconds over *leaf* phases ([`Phase::is_leaf`]) —
+    /// disjoint per thread, so `busy_us ≤ wall_us × threads`.
+    pub busy_us: u64,
+    /// `busy_us / (wall_us × threads)`: the fraction of the thread
+    /// pool the instrumented leaf phases kept busy.
+    pub utilization: f64,
+    /// Process-global counter deltas over the step.
+    pub counters: CounterDeltas,
+    /// Cache accounting, summed per cache kind.
+    pub caches: Vec<CacheNote>,
+    /// Per-planned-layer phase breakdown (the planner's layer list).
+    pub layers: Vec<LayerReport>,
+    /// Step-global phases (tape build, loss, walk scopes, queue
+    /// drains, and leaf work recorded outside any planned layer).
+    pub globals: Vec<PhaseSlice>,
+    /// The raw spans (for the chrome `traceEvents` export).
+    pub events: Vec<Event>,
+}
+
+fn slice_phases(events: &[Event], pick: impl Fn(&Event) -> bool) -> Vec<PhaseSlice> {
+    let mut out: Vec<PhaseSlice> = Vec::new();
+    for p in Phase::ALL {
+        let mut busy = 0u64;
+        let mut n = 0u64;
+        let mut units = 0u64;
+        for e in events.iter().filter(|e| e.phase == p && pick(e)) {
+            busy += e.busy_us;
+            n += 1;
+            units += e.units;
+        }
+        if n > 0 {
+            out.push(PhaseSlice {
+                phase: p,
+                busy_us: busy,
+                events: n,
+                units,
+            });
+        }
+    }
+    out
+}
+
+fn sum_caches(notes: &[CacheNote]) -> Vec<CacheNote> {
+    let mut out = Vec::new();
+    for kind in [CacheKind::Cols, CacheKind::Dy] {
+        let mut total = CacheNote {
+            kind,
+            fills: 0,
+            hits: 0,
+            misses: 0,
+            spills: 0,
+            used_elems: 0,
+        };
+        let mut any = false;
+        for n in notes.iter().filter(|n| n.kind == kind) {
+            any = true;
+            total.fills += n.fills;
+            total.hits += n.hits;
+            total.misses += n.misses;
+            total.spills += n.spills;
+            total.used_elems += n.used_elems;
+        }
+        if any {
+            out.push(total);
+        }
+    }
+    out
+}
+
+impl StepReport {
+    /// Aggregate one step's drained events into a report, joining the
+    /// per-layer phases against `planner`'s plan (so `layers` always
+    /// mirrors the planner's layer list, observed or not).
+    pub fn build(
+        wall_us: u64,
+        threads: usize,
+        batch: usize,
+        planner: &ClippedStepPlanner,
+        events: Vec<Event>,
+        cache_notes: &[CacheNote],
+        counters: CounterDeltas,
+    ) -> StepReport {
+        let mut layers = Vec::new();
+        let mut planned = std::collections::BTreeSet::new();
+        for plan in planner.plans() {
+            let li = plan.layer_index;
+            planned.insert(li);
+            let per_ex = match plan.path {
+                NormPath::Ghost => plan.ghost_cost,
+                NormPath::Direct => plan.direct_cost,
+            };
+            layers.push(LayerReport {
+                layer_index: li,
+                path: plan.path.name(),
+                modeled_flops: per_ex.saturating_mul(batch as u64),
+                phases: slice_phases(&events, |e| e.layer == li as i32),
+            });
+        }
+        let globals = slice_phases(&events, |e| {
+            e.layer < 0 || !planned.contains(&(e.layer as usize))
+        });
+        let modeled_flops: u64 = layers.iter().map(|l| l.modeled_flops).sum();
+        let busy_us: u64 = events
+            .iter()
+            .filter(|e| e.phase.is_leaf())
+            .map(|e| e.busy_us)
+            .sum();
+        let wall_s = wall_us.max(1) as f64 / 1e6;
+        StepReport {
+            step: 0,
+            wall_us,
+            threads,
+            batch,
+            modeled_flops,
+            achieved_gflops: modeled_flops as f64 / wall_s / 1e9,
+            busy_us,
+            utilization: busy_us as f64 / (wall_us.max(1) as f64 * threads.max(1) as f64),
+            counters,
+            caches: sum_caches(cache_notes),
+            layers,
+            globals,
+            events,
+        }
+    }
+
+    /// The report as a JSON object (the `steps[]` entry schema of
+    /// `trace/v1`).
+    pub fn to_json(&self) -> Value {
+        let phase_json = |p: &PhaseSlice| {
+            obj(vec![
+                ("phase", s(p.phase.name())),
+                ("busy_us", num(p.busy_us as f64)),
+                ("events", num(p.events as f64)),
+                ("units", num(p.units as f64)),
+            ])
+        };
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                obj(vec![
+                    ("layer", num(l.layer_index as f64)),
+                    ("path", s(l.path)),
+                    ("modeled_flops", num(l.modeled_flops as f64)),
+                    ("phases", arr(l.phases.iter().map(phase_json).collect())),
+                ])
+            })
+            .collect();
+        let caches = self
+            .caches
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("cache", s(c.kind.name())),
+                    ("fills", num(c.fills as f64)),
+                    ("hits", num(c.hits as f64)),
+                    ("misses", num(c.misses as f64)),
+                    ("spills", num(c.spills as f64)),
+                    ("used_elems", num(c.used_elems as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("step", num(self.step as f64)),
+            ("wall_us", num(self.wall_us as f64)),
+            ("threads", num(self.threads as f64)),
+            ("batch", num(self.batch as f64)),
+            ("modeled_flops", num(self.modeled_flops as f64)),
+            ("achieved_gflops", num(self.achieved_gflops)),
+            ("busy_us", num(self.busy_us as f64)),
+            ("utilization", num(self.utilization)),
+            (
+                "counters",
+                obj(vec![
+                    ("tape_builds", num(self.counters.tape_builds as f64)),
+                    ("prop_matmuls", num(self.counters.prop_matmuls as f64)),
+                    ("visitor_units", num(self.counters.visitor_units as f64)),
+                ]),
+            ),
+            ("caches", arr(caches)),
+            ("layers", arr(layers)),
+            ("globals", arr(self.globals.iter().map(phase_json).collect())),
+        ])
+    }
+}
+
+/// Render a report set as the `trace/v1` JSON document: the
+/// per-step aggregates plus a chrome://tracing-compatible
+/// `traceEvents` array (load it at `chrome://tracing` or in Perfetto
+/// for the flame view; `tid` distinguishes worker threads).
+pub fn trace_json(reports: &[StepReport]) -> Value {
+    let mut trace_events = Vec::new();
+    for r in reports {
+        for e in &r.events {
+            trace_events.push(obj(vec![
+                ("name", s(e.phase.name())),
+                ("ph", s("X")),
+                ("ts", num(e.start_us as f64)),
+                ("dur", num(e.dur_us as f64)),
+                ("pid", num(0.0)),
+                ("tid", num(e.tid as f64)),
+                (
+                    "args",
+                    obj(vec![
+                        ("step", num(r.step as f64)),
+                        ("layer", num(e.layer as f64)),
+                        ("units", num(e.units as f64)),
+                        ("busy_us", num(e.busy_us as f64)),
+                    ]),
+                ),
+            ]));
+        }
+    }
+    obj(vec![
+        ("schema", s("trace/v1")),
+        ("steps", arr(reports.iter().map(StepReport::to_json).collect())),
+        ("traceEvents", arr(trace_events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ghost::GhostMode;
+    use crate::models::ModelSpec;
+
+    fn fake_event(phase: Phase, layer: i32, busy: u64) -> Event {
+        Event {
+            phase,
+            layer,
+            tid: 1,
+            start_us: 0,
+            dur_us: busy,
+            units: 0,
+            busy_us: busy,
+        }
+    }
+
+    #[test]
+    fn report_layers_mirror_the_plan() {
+        let spec = ModelSpec::residual_gn(2, 8, 4, (3, 12, 12), 10).unwrap();
+        let planner = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let n_planned = planner.plans().count();
+        // events for one planned layer only: the others still appear
+        let li = planner.plans().next().unwrap().layer_index as i32;
+        let events = vec![
+            fake_event(Phase::Im2colFill, li, 100),
+            fake_event(Phase::NormKernel, li, 50),
+            fake_event(Phase::TapeBuild, -1, 400),
+        ];
+        let r = StepReport::build(1000, 2, 4, &planner, events, &[], CounterDeltas::default());
+        assert_eq!(r.layers.len(), n_planned);
+        assert_eq!(r.layers[0].phases.len(), 2);
+        assert!(r.layers[1..].iter().all(|l| l.phases.is_empty()));
+        assert!(r.modeled_flops > 0);
+        // leaf busy: 100 + 50 + 400, inside wall × threads
+        assert_eq!(r.busy_us, 550);
+        assert!(r.utilization <= 1.0);
+        assert_eq!(r.globals.len(), 1);
+        assert_eq!(r.globals[0].phase, Phase::TapeBuild);
+    }
+
+    #[test]
+    fn walk_scopes_do_not_double_count_busy() {
+        let spec = ModelSpec::toy_cnn(2, 5, 1.0, 3, "none", (2, 8, 8), 10).unwrap();
+        let planner = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let events = vec![
+            fake_event(Phase::NormWalk, -1, 900),
+            fake_event(Phase::Im2colFill, 0, 300),
+        ];
+        let r = StepReport::build(1000, 1, 1, &planner, events, &[], CounterDeltas::default());
+        assert_eq!(r.busy_us, 300, "walk scopes are not leaves");
+    }
+
+    #[test]
+    fn trace_json_has_schema_steps_and_events() {
+        let spec = ModelSpec::toy_cnn(2, 5, 1.0, 3, "none", (2, 8, 8), 10).unwrap();
+        let planner = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let events = vec![fake_event(Phase::DwMatmul, 0, 10)];
+        let mut r =
+            StepReport::build(100, 1, 1, &planner, events, &[], CounterDeltas::default());
+        r.step = 0;
+        let v = trace_json(&[r]);
+        let text = crate::jsonx::to_string(&v);
+        assert!(text.contains("\"schema\":\"trace/v1\""), "{text}");
+        assert!(text.contains("\"traceEvents\""), "{text}");
+        assert!(text.contains("\"ph\":\"X\""), "{text}");
+        // round-trips through the parser
+        crate::jsonx::parse(&text).unwrap();
+    }
+
+    #[test]
+    fn cache_notes_sum_per_kind() {
+        let notes = [
+            CacheNote {
+                kind: CacheKind::Cols,
+                fills: 2,
+                hits: 3,
+                misses: 1,
+                spills: 0,
+                used_elems: 10,
+            },
+            CacheNote {
+                kind: CacheKind::Cols,
+                fills: 1,
+                hits: 1,
+                misses: 0,
+                spills: 2,
+                used_elems: 5,
+            },
+        ];
+        let summed = sum_caches(&notes);
+        assert_eq!(summed.len(), 1);
+        assert_eq!(summed[0].fills, 3);
+        assert_eq!(summed[0].hits, 4);
+        assert_eq!(summed[0].spills, 2);
+        assert_eq!(summed[0].used_elems, 15);
+    }
+}

@@ -32,6 +32,7 @@ use crate::ghost::{
     self, ClippedStepPlanner, GhostMode, GhostPipeline, UNIFIED_SCRATCH_BUDGET_ELEMS,
 };
 use crate::models::{LayerSpec, ModelSpec};
+use crate::obs;
 use crate::rng::Xoshiro256pp;
 use crate::strategies::{Strategy, StrategyRunner};
 use crate::tensor::{self, Tensor};
@@ -238,6 +239,21 @@ impl Backend for NativeBackend {
     }
 
     fn step(&mut self, x: &Tensor, y: &[i32], seed: i64) -> Result<StepOutcome> {
+        // When tracing is on, bracket the step: discard spans leaked
+        // by earlier untracked work, stamp the wall clock and the
+        // process-global counter baselines. Off → one bool check.
+        let trace0 = if obs::enabled() {
+            obs::drain_events();
+            obs::drain_cache_notes();
+            Some((
+                obs::stamp_us(),
+                crate::backward::tape_builds(),
+                crate::backward::prop_matmuls(),
+                crate::backward::visitor_units(),
+            ))
+        } else {
+            None
+        };
         // Eq. 1: per-example clip to norm C, then sum — materializing
         // strategies form (B, P) and clip-reduce; ghostnorm produces
         // the same two quantities with batch-level gradient memory.
@@ -273,6 +289,38 @@ impl Backend for NativeBackend {
         let b = y.len().max(1) as f32;
         for (t, g) in self.theta.iter_mut().zip(&gsum) {
             *t -= self.lr * *g / b;
+        }
+        if let Some((wall0, tb0, pm0, vu0)) = trace0 {
+            let wall_us = obs::stamp_us().saturating_sub(wall0);
+            let counters = obs::CounterDeltas {
+                tape_builds: crate::backward::tape_builds().saturating_sub(tb0),
+                prop_matmuls: crate::backward::prop_matmuls().saturating_sub(pm0),
+                visitor_units: crate::backward::visitor_units().saturating_sub(vu0),
+            };
+            let events = obs::drain_events();
+            let notes = obs::drain_cache_notes();
+            let threads = crate::strategies::resolve_threads(self.runner.threads)
+                .clamp(1, y.len().max(1));
+            // materializing strategies carry no planner; the default
+            // plan still models the per-layer norm work for the report
+            let fallback;
+            let planner = match self.planner.as_ref() {
+                Some(p) => p,
+                None => {
+                    fallback =
+                        ClippedStepPlanner::new(&self.runner.spec, &GhostMode::default())?;
+                    &fallback
+                }
+            };
+            obs::push_report(obs::StepReport::build(
+                wall_us,
+                threads,
+                y.len(),
+                planner,
+                events,
+                &notes,
+                counters,
+            ));
         }
         Ok(StepOutcome {
             mean_loss: losses.iter().sum::<f32>() / b,

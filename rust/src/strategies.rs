@@ -434,8 +434,12 @@ pub fn crb_perex_grads(
 ) -> (Tensor, Vec<f32>) {
     let bsz = x.shape[0];
     let p_total = spec.param_count();
+    let on = crate::obs::enabled();
     let (logits, saved) = forward_with_tape(spec, theta, x);
-    let (losses, dy) = tensor::softmax_xent(&logits, labels);
+    let (losses, dy) = {
+        let _sl = crate::obs::Span::begin(on, crate::obs::Phase::Loss, -1);
+        tensor::softmax_xent(&logits, labels)
+    };
     // backward: Eq. 4 (conv, via im2col matmuls) + Eq. 2 (linear),
     // written straight into the rows of the (B, P) matrix
     let mut pergrads = Tensor::zeros(&[bsz, p_total]);

@@ -100,10 +100,19 @@ pub const COLS_CACHE_CAP_ELEMS: usize = 1 << 25;
 /// Held elements are registered in the [`alloc`] ledger for the
 /// cache's lifetime, so peak-bytes measurements and the memory
 /// regression tests see the cache like any other working memory.
+///
+/// The cache keeps always-on fill/hit/miss/spill tallies (plain
+/// integer bumps — each cache is owned by one worker, so the read
+/// counters are `Cell`s, not atomics); the ghost engine reports them
+/// to the tracer as [`CacheNote`](crate::obs::CacheNote)s when
+/// profiling is enabled.
 pub struct ColsCache {
     cap: usize,
     used: usize,
     spills: usize,
+    fills: usize,
+    hits: std::cell::Cell<u64>,
+    misses: std::cell::Cell<u64>,
     map: std::collections::HashMap<(usize, usize), Vec<f32>>,
 }
 
@@ -114,6 +123,9 @@ impl ColsCache {
             cap: cap_elems,
             used: 0,
             spills: 0,
+            fills: 0,
+            hits: std::cell::Cell::new(0),
+            misses: std::cell::Cell::new(0),
             map: std::collections::HashMap::new(),
         }
     }
@@ -128,6 +140,7 @@ impl ColsCache {
         }
         if self.used + cols.len() <= self.cap {
             self.used += cols.len();
+            self.fills += 1;
             alloc::on_alloc(cols.len());
             self.map.insert((li, b), cols);
         } else {
@@ -137,7 +150,25 @@ impl ColsCache {
 
     /// Example `b`'s cached patch matrix for layer `li`, if kept.
     pub fn get(&self, li: usize, b: usize) -> Option<&[f32]> {
-        self.map.get(&(li, b)).map(|v| v.as_slice())
+        let r = self.map.get(&(li, b)).map(|v| v.as_slice());
+        let tally = if r.is_some() { &self.hits } else { &self.misses };
+        tally.set(tally.get() + 1);
+        r
+    }
+
+    /// How many inserts were kept.
+    pub fn fills(&self) -> usize {
+        self.fills
+    }
+
+    /// How many reads found their entry.
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// How many reads missed (spilled or never-inserted entries).
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
     }
 
     /// How many inserts were dropped for budget.
@@ -195,10 +226,16 @@ pub enum DyEntry {
 /// spill: the reuse walk re-propagates `dy` down to the deepest
 /// spilled layer instead (more work, identical math). Held elements
 /// are registered in the [`alloc`] ledger for the cache's lifetime.
+///
+/// Like [`ColsCache`], the cache keeps always-on fill/hit/miss/spill
+/// tallies the ghost engine reports to the tracer when profiling.
 pub struct DyCache {
     cap: usize,
     used: usize,
     spills: usize,
+    fills: usize,
+    hits: std::cell::Cell<u64>,
+    misses: std::cell::Cell<u64>,
     map: std::collections::HashMap<usize, DyEntry>,
 }
 
@@ -209,6 +246,9 @@ impl DyCache {
             cap: cap_elems,
             used: 0,
             spills: 0,
+            fills: 0,
+            hits: std::cell::Cell::new(0),
+            misses: std::cell::Cell::new(0),
             map: std::collections::HashMap::new(),
         }
     }
@@ -236,6 +276,7 @@ impl DyCache {
             alloc::on_free(f);
         }
         self.used += n;
+        self.fills += 1;
         alloc::on_alloc(n);
         self.map.insert(li, entry);
     }
@@ -255,7 +296,25 @@ impl DyCache {
 
     /// Layer `li`'s cached entry, if kept.
     pub fn get(&self, li: usize) -> Option<&DyEntry> {
-        self.map.get(&li)
+        let r = self.map.get(&li);
+        let tally = if r.is_some() { &self.hits } else { &self.misses };
+        tally.set(tally.get() + 1);
+        r
+    }
+
+    /// How many inserts were kept.
+    pub fn fills(&self) -> usize {
+        self.fills
+    }
+
+    /// How many reads found their entry.
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// How many reads missed (spilled or never-inserted entries).
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
     }
 
     /// How many inserts were dropped for budget.

@@ -1,0 +1,195 @@
+//! Integration pins for the `obs` tracer — the observability layer's
+//! acceptance criteria:
+//!
+//! * disabled mode emits zero events and registers nothing in the
+//!   allocation ledger;
+//! * tracing on vs off is bit-identical for the fused and reuse ghost
+//!   pipelines (spans only read clocks);
+//! * queue-drain records nest inside the walk scopes under the
+//!   (outer × inner) work-stealing split;
+//! * a profiled native step produces a `StepReport` whose per-layer
+//!   phase list mirrors the planner's plan, with leaf busy time
+//!   bounded by `wall × threads`.
+
+use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode, GhostPipeline};
+use grad_cnns::models::ModelSpec;
+use grad_cnns::obs;
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::runtime::NativeBackend;
+use grad_cnns::strategies::Strategy;
+use grad_cnns::tensor::{alloc, Tensor};
+use std::sync::Mutex;
+
+// obs state is process-global and the test binary runs tests in
+// parallel threads — serialize every test here on one lock (recover
+// from poisoning so one failure does not cascade).
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A residual-GroupNorm model plus a deterministic random batch.
+fn setup(ch: usize, hw: usize, b: usize, seed: u64) -> (ModelSpec, Vec<f32>, Tensor, Vec<i32>) {
+    let spec = ModelSpec::residual_gn(2, ch, 4, (3, hw, hw), 10).unwrap();
+    let p = spec.param_count();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut theta = vec![0.0f32; p];
+    rng.fill_gaussian(&mut theta, 0.1);
+    let (c, h, w) = spec.input_shape;
+    let mut x = vec![0.0f32; b * c * h * w];
+    rng.fill_gaussian(&mut x, 1.0);
+    let y: Vec<i32> = (0..b).map(|_| rng.next_below(10) as i32).collect();
+    (spec, theta, Tensor::from_vec(&[b, c, h, w], x), y)
+}
+
+/// Leave the tracer off with every sink drained.
+fn reset_tracer() {
+    obs::set_enabled(false);
+    obs::drain_events();
+    obs::drain_cache_notes();
+    let _ = obs::take_reports();
+}
+
+#[test]
+fn disabled_mode_emits_zero_events_and_registers_no_allocations() {
+    let _g = lock();
+    reset_tracer();
+    let (spec, theta, x, y) = setup(8, 12, 2, 3);
+    let planner = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+    let live0 = alloc::live_elems();
+    ghost::clipped_step(&planner, &theta, &x, &y, 1.0, 2).unwrap();
+    assert_eq!(obs::event_count(), 0, "disabled tracer recorded events");
+    assert!(
+        obs::drain_cache_notes().is_empty(),
+        "disabled tracer recorded cache notes"
+    );
+    assert_eq!(
+        alloc::live_elems(),
+        live0,
+        "nothing may stay live in the ledger after a disabled-mode step"
+    );
+}
+
+#[test]
+fn tracing_does_not_perturb_fused_or_reuse_outputs() {
+    let _g = lock();
+    reset_tracer();
+    let (spec, theta, x, y) = setup(8, 12, 4, 7);
+    for pipeline in [GhostPipeline::Fused, GhostPipeline::FusedReuse] {
+        let planner = ClippedStepPlanner::new(&spec, &GhostMode::default())
+            .unwrap()
+            .with_pipeline(pipeline);
+        obs::set_enabled(false);
+        let off = ghost::clipped_step(&planner, &theta, &x, &y, 1.0, 2).unwrap();
+        obs::set_enabled(true);
+        let on = ghost::clipped_step(&planner, &theta, &x, &y, 1.0, 2).unwrap();
+        obs::set_enabled(false);
+        assert!(
+            obs::event_count() > 0,
+            "enabled {pipeline:?} run recorded no spans"
+        );
+        obs::drain_events();
+        obs::drain_cache_notes();
+        assert_eq!(off.grad_sum, on.grad_sum, "{pipeline:?}: grad_sum diverged");
+        assert_eq!(off.norms, on.norms, "{pipeline:?}: norms diverged");
+        assert_eq!(off.losses, on.losses, "{pipeline:?}: losses diverged");
+    }
+}
+
+#[test]
+fn queue_drains_nest_inside_the_walk_scopes() {
+    let _g = lock();
+    reset_tracer();
+    // B = 1 with 4 threads: the planner split is (outer 1 × inner 4),
+    // so the conv layers run the work-stealing unit queue; the model
+    // is sized so the layer work clears the inner-parallel gate
+    let (spec, theta, x, y) = setup(16, 16, 1, 11);
+    let planner = ClippedStepPlanner::new(&spec, &GhostMode::default())
+        .unwrap()
+        .with_pipeline(GhostPipeline::Fused);
+    obs::set_enabled(true);
+    obs::drain_events();
+    ghost::clipped_step(&planner, &theta, &x, &y, 1.0, 4).unwrap();
+    obs::set_enabled(false);
+    let events = obs::drain_events();
+    obs::drain_cache_notes();
+    let drains: Vec<_> = events
+        .iter()
+        .filter(|e| e.phase == obs::Phase::QueueDrain)
+        .collect();
+    assert!(
+        !drains.is_empty(),
+        "B=1 × 4 threads must engage the inner work-unit split"
+    );
+    assert!(
+        drains.iter().any(|e| e.units > 0),
+        "no drain record pulled any units"
+    );
+    let walks: Vec<_> = events
+        .iter()
+        .filter(|e| matches!(e.phase, obs::Phase::NormWalk | obs::Phase::SumWalk))
+        .collect();
+    assert!(!walks.is_empty(), "walk scopes missing");
+    for d in &drains {
+        assert!(d.busy_us <= d.dur_us, "drain busy exceeds its wall time");
+        assert!(
+            walks.iter().any(|w| w.start_us <= d.start_us
+                && d.start_us + d.dur_us <= w.start_us + w.dur_us),
+            "drain [{} +{}us] not enclosed by any walk scope",
+            d.start_us,
+            d.dur_us
+        );
+    }
+}
+
+#[test]
+fn profiled_step_report_mirrors_the_planner_plan() {
+    let _g = lock();
+    reset_tracer();
+    let spec = ModelSpec::residual_gn(2, 8, 4, (3, 12, 12), 10).unwrap();
+    let mut be = NativeBackend::new(spec.clone(), Strategy::GhostNorm, 2, 1.0, 0.0, 0.1);
+    be.init_theta(5).unwrap();
+    let n_planned = be.ghost_planner().unwrap().plans().count();
+    let (c, h, w) = spec.input_shape;
+    let b = 3usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let mut x = vec![0.0f32; b * c * h * w];
+    rng.fill_gaussian(&mut x, 1.0);
+    let x = Tensor::from_vec(&[b, c, h, w], x);
+    let y = vec![0i32, 4, 7];
+    obs::set_enabled(true);
+    be.step(&x, &y, 1).unwrap();
+    obs::set_enabled(false);
+    let reports = obs::take_reports();
+    assert_eq!(reports.len(), 1, "one step must push one report");
+    let r = &reports[0];
+    assert_eq!(
+        r.layers.len(),
+        n_planned,
+        "per-layer phase list must mirror the planner's plan"
+    );
+    assert_eq!(r.batch, b);
+    assert!(r.wall_us > 0);
+    assert!(r.modeled_flops > 0, "planner FLOPs model missing");
+    assert!(
+        r.layers.iter().any(|l| !l.phases.is_empty()),
+        "no planned layer observed any phase"
+    );
+    // leaf busy times are disjoint per thread: bounded by
+    // wall × threads (slack of one µs-rounding per event)
+    let bound = (r.wall_us + r.events.len() as u64).saturating_mul(r.threads.max(1) as u64);
+    assert!(
+        r.busy_us <= bound,
+        "leaf busy {} exceeds wall×threads bound {}",
+        r.busy_us,
+        bound
+    );
+    assert!(r.counters.tape_builds >= 1, "fused step builds tapes");
+    assert!(
+        r.caches.iter().any(|c| c.kind == obs::CacheKind::Cols),
+        "fused pipeline must note its cols cache"
+    );
+    // the step after the drain starts a fresh report store
+    assert!(obs::take_reports().is_empty());
+}

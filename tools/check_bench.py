@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over `BENCH_strategies.json`.
+
+Compares a freshly generated sweep against a committed baseline,
+cell by cell (keyed on strategy x model x batch x channel_rate), and
+fails when any cell's `ns_per_example` regresses past the threshold.
+
+    python tools/check_bench.py fresh.json [baseline.json]
+
+The baseline path defaults to `bench_baselines/BENCH_strategies.json`
+(relative to the repo root). When no baseline exists yet the check
+exits 0 with a notice — committing a baseline measured on a dedicated
+bench machine is the ROADMAP item that arms this gate; CI boxes are
+too noisy to self-baseline.
+
+Exit 0 on pass (or no baseline), 1 on a regression or malformed input.
+Stdlib only.
+"""
+
+import json
+import os
+import sys
+
+# a cell fails when fresh ns/example exceeds baseline x threshold;
+# generous because even dedicated machines jitter at small batch sizes
+DEFAULT_THRESHOLD = 1.5
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(ROOT, "bench_baselines", "BENCH_strategies.json")
+
+
+def cell_key(rec):
+    return (
+        rec["strategy"],
+        rec["model"],
+        rec["batch"],
+        rec["channel_rate"],
+    )
+
+
+def load_cells(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "bench-strategies/v1":
+        print(f"check_bench: FAIL: {path}: unknown schema {doc.get('schema')!r}")
+        sys.exit(1)
+    cells = {}
+    for rec in doc["results"]:
+        cells[cell_key(rec)] = rec
+    return cells
+
+
+def main():
+    if len(sys.argv) not in (2, 3):
+        print(__doc__)
+        sys.exit(2)
+    fresh_path = sys.argv[1]
+    baseline_path = sys.argv[2] if len(sys.argv) == 3 else DEFAULT_BASELINE
+
+    fresh = load_cells(fresh_path)
+    if not fresh:
+        print(f"check_bench: FAIL: {fresh_path} has no result cells")
+        sys.exit(1)
+
+    if not os.path.exists(baseline_path):
+        print(
+            f"check_bench: no baseline at {baseline_path} — skipping the "
+            "regression gate (commit one from a dedicated bench machine to "
+            "arm it; see ROADMAP.md)"
+        )
+        sys.exit(0)
+
+    baseline = load_cells(baseline_path)
+    threshold = float(os.environ.get("BENCH_THRESHOLD", DEFAULT_THRESHOLD))
+
+    regressions = []
+    compared = 0
+    for key, base in sorted(baseline.items()):
+        cur = fresh.get(key)
+        if cur is None:
+            # a cell the fresh sweep did not run (e.g. --quick vs full
+            # baseline) is not a regression — axes are allowed to differ
+            continue
+        compared += 1
+        # allow per-cell threshold overrides in the committed baseline
+        cell_threshold = base.get("threshold", threshold)
+        limit = base["ns_per_example"] * cell_threshold
+        if cur["ns_per_example"] > limit:
+            regressions.append(
+                f"  {'/'.join(str(k) for k in key)}: "
+                f"{cur['ns_per_example']:.0f} ns/ex > "
+                f"{base['ns_per_example']:.0f} x {cell_threshold:.2f} = "
+                f"{limit:.0f} ns/ex"
+            )
+
+    if compared == 0:
+        print(
+            "check_bench: WARNING: baseline and fresh sweep share no cells "
+            "(different axes?) — nothing compared"
+        )
+        sys.exit(0)
+    if regressions:
+        print(f"check_bench: FAIL: {len(regressions)} cell(s) regressed:")
+        print("\n".join(regressions))
+        sys.exit(1)
+    print(f"check_bench: OK: {compared} cell(s) within threshold")
+
+
+if __name__ == "__main__":
+    main()

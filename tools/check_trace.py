@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Validate a `trace/v1` JSON document written by `repro train
+--profile --trace-out <path>`.
+
+Checks the schema the obs subsystem documents (docs/ARCHITECTURE.md,
+"Observability"): required top-level and per-step keys, the per-layer
+phase shape, the chrome://tracing `traceEvents` shape, and the tracer's
+core accounting invariant — summed *leaf*-phase busy time is bounded by
+`wall_us x threads` per step (leaf spans are disjoint per thread).
+
+    python tools/check_trace.py trace.json
+
+Exit 0 on a valid trace, 1 with a message on the first violation.
+Stdlib only.
+"""
+
+import json
+import sys
+
+# keep in sync with rust/src/obs/mod.rs (Phase::name / Phase::is_leaf)
+PHASES = {
+    "tape_build",
+    "loss",
+    "norm_walk",
+    "sum_walk",
+    "im2col_fill",
+    "dw_matmul",
+    "norm_kernel",
+    "dy_prop",
+    "dy_rescale",
+    "queue_drain",
+}
+SCOPE_PHASES = {"norm_walk", "sum_walk", "queue_drain"}
+LEAF_PHASES = PHASES - SCOPE_PHASES
+
+STEP_KEYS = {
+    "step",
+    "wall_us",
+    "threads",
+    "batch",
+    "modeled_flops",
+    "achieved_gflops",
+    "busy_us",
+    "utilization",
+    "counters",
+    "caches",
+    "layers",
+    "globals",
+}
+COUNTER_KEYS = {"tape_builds", "prop_matmuls", "visitor_units"}
+PHASE_SLICE_KEYS = {"phase", "busy_us", "events", "units"}
+LAYER_KEYS = {"layer", "path", "modeled_flops", "phases"}
+CACHE_KEYS = {"cache", "fills", "hits", "misses", "spills", "used_elems"}
+TRACE_EVENT_KEYS = {"name", "ph", "ts", "dur", "pid", "tid", "args"}
+
+# one microsecond of rounding slack per recorded event (span start and
+# end stamps each truncate to whole microseconds)
+ROUNDING_SLACK_US_PER_EVENT = 1
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}")
+    sys.exit(1)
+
+
+def require_keys(obj, keys, where):
+    missing = keys - set(obj)
+    if missing:
+        fail(f"{where}: missing keys {sorted(missing)}")
+
+
+def check_phase_slice(ps, where):
+    require_keys(ps, PHASE_SLICE_KEYS, where)
+    if ps["phase"] not in PHASES:
+        fail(f"{where}: unknown phase {ps['phase']!r}")
+    for k in ("busy_us", "events", "units"):
+        if not isinstance(ps[k], (int, float)) or ps[k] < 0:
+            fail(f"{where}: {k} must be a non-negative number, got {ps[k]!r}")
+    if ps["units"] and ps["phase"] != "queue_drain":
+        fail(f"{where}: units on non-drain phase {ps['phase']!r}")
+
+
+def check_step(step, i, n_events):
+    where = f"steps[{i}]"
+    require_keys(step, STEP_KEYS, where)
+    require_keys(step["counters"], COUNTER_KEYS, f"{where}.counters")
+    for j, layer in enumerate(step["layers"]):
+        lw = f"{where}.layers[{j}]"
+        require_keys(layer, LAYER_KEYS, lw)
+        if layer["path"] not in ("ghost", "direct"):
+            fail(f"{lw}: unknown path {layer['path']!r}")
+        for k, ps in enumerate(layer["phases"]):
+            check_phase_slice(ps, f"{lw}.phases[{k}]")
+    for k, ps in enumerate(step["globals"]):
+        check_phase_slice(ps, f"{where}.globals[{k}]")
+    for j, cache in enumerate(step["caches"]):
+        cw = f"{where}.caches[{j}]"
+        require_keys(cache, CACHE_KEYS, cw)
+        if cache["cache"] not in ("cols", "dy"):
+            fail(f"{cw}: unknown cache kind {cache['cache']!r}")
+
+    # the accounting invariant: leaf busy is disjoint per thread
+    leaf_busy = 0
+    slices = list(step["globals"])
+    for layer in step["layers"]:
+        slices.extend(layer["phases"])
+    for ps in slices:
+        if ps["phase"] in LEAF_PHASES:
+            leaf_busy += ps["busy_us"]
+    if abs(leaf_busy - step["busy_us"]) > ROUNDING_SLACK_US_PER_EVENT:
+        fail(
+            f"{where}: busy_us {step['busy_us']} != summed leaf busy {leaf_busy}"
+        )
+    threads = max(1, int(step["threads"]))
+    bound = (step["wall_us"] + n_events * ROUNDING_SLACK_US_PER_EVENT) * threads
+    if leaf_busy > bound:
+        fail(
+            f"{where}: leaf busy {leaf_busy}us exceeds wall x threads bound "
+            f"{bound}us (wall {step['wall_us']}us x {threads} threads)"
+        )
+    if step["utilization"] < 0:
+        fail(f"{where}: negative utilization")
+
+
+def check_trace_event(ev, i):
+    where = f"traceEvents[{i}]"
+    require_keys(ev, TRACE_EVENT_KEYS, where)
+    if ev["name"] not in PHASES:
+        fail(f"{where}: unknown phase name {ev['name']!r}")
+    if ev["ph"] != "X":
+        fail(f"{where}: expected complete-event ph 'X', got {ev['ph']!r}")
+    if ev["dur"] < 0 or ev["ts"] < 0:
+        fail(f"{where}: negative ts/dur")
+    require_keys(ev["args"], {"step", "layer", "units", "busy_us"}, f"{where}.args")
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__)
+        sys.exit(2)
+    path = sys.argv[1]
+    with open(path) as f:
+        doc = json.load(f)
+
+    require_keys(doc, {"schema", "steps", "traceEvents"}, "trace")
+    if doc["schema"] != "trace/v1":
+        fail(f"unknown schema {doc['schema']!r}")
+    if not doc["steps"]:
+        fail("no steps recorded (was the run profiled, and native?)")
+
+    # attribute traceEvents to their step for the per-step slack bound
+    events_per_step = {}
+    for i, ev in enumerate(doc["traceEvents"]):
+        check_trace_event(ev, i)
+        s = ev["args"]["step"]
+        events_per_step[s] = events_per_step.get(s, 0) + 1
+
+    for i, step in enumerate(doc["steps"]):
+        check_step(step, i, events_per_step.get(step.get("step", i), 0))
+
+    n = len(doc["steps"])
+    print(
+        f"check_trace: OK: {n} step(s), {len(doc['traceEvents'])} trace "
+        f"event(s), schema trace/v1"
+    )
+
+
+if __name__ == "__main__":
+    main()
