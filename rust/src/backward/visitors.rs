@@ -34,10 +34,12 @@
 //!   accumulation sequence per `nsq[b]` never changes.
 
 use super::walk::{
-    unit_chunks, BackwardVisitor, Carver, ConvCtx, LinearCtx, NormCtx, UnitKind, WorkUnit,
+    split_ranges_aligned, unit_chunks, BackwardVisitor, Carver, ConvCtx, LinearCtx, NormCtx,
+    UnitKind, WorkUnit,
 };
 use crate::ghost::planner::{ClippedStepPlanner, NormPath};
 use crate::strategies::split_ranges;
+use crate::tensor::kernels::PatchSource;
 use crate::tensor::{self, Tensor};
 
 // ---------------------------------------------------------------------------
@@ -82,6 +84,38 @@ impl BackwardVisitor for PerExGradVisitor<'_> {
         }
     }
 
+    /// Eq. 4 is a pure patch-matrix GEMM — fusable.
+    fn conv_fused_ready(&self, _ctx: &ConvCtx) -> bool {
+        true
+    }
+
+    /// [`conv_example`](BackwardVisitor::conv_example) with the patch
+    /// matrix packed on the fly — bit-identical on the packed tier.
+    fn conv_example_fused(&mut self, ctx: &ConvCtx, b: usize, src: &PatchSource<'_>, dy_b: &[f32]) {
+        let dst = &mut self.grads[b * self.p_total + ctx.offset..];
+        for g in 0..ctx.groups {
+            let dyg = &dy_b[g * ctx.dg * ctx.howo..(g + 1) * ctx.dg * ctx.howo];
+            let w0 = g * ctx.dg * ctx.rows_g;
+            tensor::kernels::matmul_nt_patches(
+                dyg,
+                src,
+                g * ctx.rows_g,
+                &mut dst[w0..w0 + ctx.dg * ctx.rows_g],
+                ctx.dg,
+                ctx.howo,
+                ctx.rows_g,
+            );
+        }
+        for dd in 0..ctx.d {
+            let row = &dy_b[dd * ctx.howo..(dd + 1) * ctx.howo];
+            let mut acc = 0.0f64;
+            for v in row {
+                acc += *v as f64;
+            }
+            dst[ctx.wn + dd] = acc as f32;
+        }
+    }
+
     /// Parallel form: every (example × group × row-chunk) of Eq.-4
     /// matmul is one unit owning its disjoint slice of the `(B, P)`
     /// buffer; the per-example bias sums are one unit each. No two
@@ -104,7 +138,7 @@ impl BackwardVisitor for PerExGradVisitor<'_> {
             for g in 0..groups {
                 let dyg = &dy_b[g * dg * howo..(g + 1) * dg * howo];
                 let colsg = &cols_b[g * rows_g * howo..(g + 1) * rows_g * howo];
-                for (r0, r1) in split_ranges(dg, chunks) {
+                for (r0, r1) in split_ranges_aligned(dg, chunks) {
                     let dst = carver.take(base + (g * dg + r0) * rows_g, (r1 - r0) * rows_g);
                     units.push(Box::new(move || {
                         tensor::matmul_nt_rows(dyg, colsg, dst, r0, r1, howo, rows_g);
@@ -319,6 +353,40 @@ impl BackwardVisitor for NormVisitor<'_> {
         }
     }
 
+    /// Only the direct path is a pure patch-matrix GEMM; the Gram
+    /// contraction reads the materialized matrix row by row and stays
+    /// on the materializing path.
+    fn conv_fused_ready(&self, ctx: &ConvCtx) -> bool {
+        matches!(self.planner.path(ctx.li), NormPath::Direct)
+    }
+
+    /// Direct-path [`conv_example`](BackwardVisitor::conv_example)
+    /// with the patch matrix packed on the fly: the dW scratch holds
+    /// bit-identical values on the packed tier, so the f64 square-sum
+    /// into `nsq[b]` is unchanged.
+    fn conv_example_fused(&mut self, ctx: &ConvCtx, b: usize, src: &PatchSource<'_>, dy_b: &[f32]) {
+        for dd in 0..ctx.d {
+            let row = &dy_b[dd * ctx.howo..(dd + 1) * ctx.howo];
+            let s: f64 = row.iter().map(|v| *v as f64).sum();
+            self.nsq[b] += s * s;
+        }
+        for g in 0..ctx.groups {
+            let dyg = &dy_b[g * ctx.dg * ctx.howo..(g + 1) * ctx.dg * ctx.howo];
+            self.tmp.fill(0.0);
+            tensor::kernels::matmul_nt_patches(
+                dyg,
+                src,
+                g * ctx.rows_g,
+                &mut self.tmp,
+                ctx.dg,
+                ctx.howo,
+                ctx.rows_g,
+            );
+            let sq: f64 = self.tmp.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+            self.nsq[b] += sq;
+        }
+    }
+
     /// The planner's cost model for the chosen kernel — so the walk's
     /// parallel gate sees the Gram cost on ghost layers, not the
     /// (potentially much smaller) Eq.-4 default.
@@ -378,7 +446,7 @@ impl BackwardVisitor for NormVisitor<'_> {
                             let chunks = unit_chunks(dg, phase_inner, 1);
                             let mut units: Vec<WorkUnit<'_>> = Vec::with_capacity(chunks);
                             let mut rest: &mut [f32] = &mut self.tmp;
-                            for (r0, r1) in split_ranges(dg, chunks) {
+                            for (r0, r1) in split_ranges_aligned(dg, chunks) {
                                 let (dst, r) = std::mem::take(&mut rest)
                                     .split_at_mut((r1 - r0) * rows_g);
                                 rest = r;
@@ -545,6 +613,41 @@ impl BackwardVisitor for ClippedSumVisitor {
         }
     }
 
+    /// The clipped sum is a pure accumulating patch-matrix GEMM —
+    /// fusable.
+    fn conv_fused_ready(&self, _ctx: &ConvCtx) -> bool {
+        true
+    }
+
+    /// [`conv_example`](BackwardVisitor::conv_example) with the patch
+    /// matrix packed on the fly — the `+=` accumulation per output
+    /// element follows the identical example order, bit-identical on
+    /// the packed tier.
+    fn conv_example_fused(&mut self, ctx: &ConvCtx, _b: usize, src: &PatchSource<'_>, dy_b: &[f32]) {
+        for g in 0..ctx.groups {
+            let dyg = &dy_b[g * ctx.dg * ctx.howo..(g + 1) * ctx.dg * ctx.howo];
+            let w0 = ctx.offset + g * ctx.dg * ctx.rows_g;
+            let dst = &mut self.psum.data[w0..w0 + ctx.dg * ctx.rows_g];
+            tensor::kernels::matmul_nt_patches(
+                dyg,
+                src,
+                g * ctx.rows_g,
+                dst,
+                ctx.dg,
+                ctx.howo,
+                ctx.rows_g,
+            );
+        }
+        for dd in 0..ctx.d {
+            let row = &dy_b[dd * ctx.howo..(dd + 1) * ctx.howo];
+            let mut acc = 0.0f64;
+            for v in row {
+                acc += *v as f64;
+            }
+            self.psum.data[ctx.offset + ctx.wn + dd] += acc as f32;
+        }
+    }
+
     /// Parallel form: one unit per (group × row-chunk) of the weight
     /// block, each accumulating **all examples in ascending order**
     /// into its disjoint slice of the `(P,)` partial — per output
@@ -561,7 +664,7 @@ impl BackwardVisitor for ClippedSumVisitor {
             let mut units: Vec<WorkUnit<'_>> = Vec::with_capacity(groups * chunks);
             let mut carver = Carver::new(&mut self.psum.data);
             for g in 0..groups {
-                for (r0, r1) in split_ranges(dg, chunks) {
+                for (r0, r1) in split_ranges_aligned(dg, chunks) {
                     let dst =
                         carver.take(ctx.offset + (g * dg + r0) * rows_g, (r1 - r0) * rows_g);
                     units.push(Box::new(move || {

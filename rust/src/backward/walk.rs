@@ -279,6 +279,33 @@ pub(crate) fn unit_chunks(rows: usize, inner: usize, parts: usize) -> usize {
     (2 * inner).div_ceil(parts.max(1)).clamp(1, rows.max(1))
 }
 
+/// [`split_ranges`](crate::strategies::split_ranges) with every chunk
+/// boundary snapped to the packed tier's micro-panel row quantum
+/// ([`tensor::kernels::unit_row_quantum`]; 1 when the SIMD dispatch
+/// is off, where this degenerates to plain `split_ranges`). Whole
+/// quanta are distributed as evenly as possible and the tail chunk
+/// absorbs the remainder rows. Alignment is a scheduling nicety only:
+/// row carving is bitwise-invariant at *any* boundary on both tiers,
+/// so this never changes results — it just stops work units from
+/// splitting micro-panels mid-tile.
+pub(crate) fn split_ranges_aligned(rows: usize, chunks: usize) -> Vec<(usize, usize)> {
+    split_ranges_quantized(rows, chunks, tensor::kernels::unit_row_quantum())
+}
+
+/// The quantum-explicit body of [`split_ranges_aligned`], separated so
+/// tests can pin the snapping arithmetic without caring whether the
+/// process-global SIMD dispatch resolved to the packed tier.
+fn split_ranges_quantized(rows: usize, chunks: usize, q: usize) -> Vec<(usize, usize)> {
+    if q <= 1 {
+        return crate::strategies::split_ranges(rows, chunks);
+    }
+    let blocks = rows.div_ceil(q);
+    crate::strategies::split_ranges(blocks, chunks)
+        .into_iter()
+        .map(|(b0, b1)| ((b0 * q).min(rows), (b1 * q).min(rows)))
+        .collect()
+}
+
 // ---------------------------------------------------------------------------
 // The visitor trait
 // ---------------------------------------------------------------------------
@@ -310,6 +337,33 @@ pub(crate) trait BackwardVisitor {
     /// One conv layer, one example: `cols` is the `(R·g, T)` im2col
     /// patch matrix, `dy_b` the example's `(D, T)` output gradient.
     fn conv_example(&mut self, ctx: &ConvCtx, b: usize, cols: &[f32], dy_b: &[f32]);
+
+    /// Whether [`conv_example_fused`](Self::conv_example_fused) can
+    /// consume this layer straight from a packed patch view — true
+    /// only for visitors whose conv work is pure patch-matrix GEMMs
+    /// (Eq.-4 / clipped-sum / direct-norm shapes). Visitors that read
+    /// the materialized matrix any other way (the Gram contraction)
+    /// leave the default `false`.
+    fn conv_fused_ready(&self, _ctx: &ConvCtx) -> bool {
+        false
+    }
+
+    /// Fused-patch form of [`conv_example`](Self::conv_example): the
+    /// same per-example work, reading the patch matrix through `src`
+    /// instead of a materialized buffer. Only called when
+    /// [`conv_fused_ready`](Self::conv_fused_ready) returned true and
+    /// the packed tier is active for the layer's GEMM shape; the
+    /// contract is **bit-identity** with `conv_example` on that tier
+    /// (the packed kernels pack identical values either way).
+    fn conv_example_fused(
+        &mut self,
+        _ctx: &ConvCtx,
+        _b: usize,
+        _src: &tensor::kernels::PatchSource<'_>,
+        _dy_b: &[f32],
+    ) {
+        unreachable!("conv_example_fused without conv_fused_ready");
+    }
 
     /// Estimated per-example multiply-accumulates this visitor spends
     /// in [`conv_example`](Self::conv_example) at this layer — the
@@ -706,15 +760,46 @@ pub(crate) fn backward_walk<V: BackwardVisitor>(
                     }
                 }
                 if !handled {
+                    // fused-patch gate: when the packed tier covers
+                    // this layer's GEMM shape, the visitor can read
+                    // patches directly, and no cache would keep the
+                    // materialized matrix anyway (Off, or a Fill whose
+                    // insert would spill on budget), skip the im2col
+                    // materialization entirely — bit-identical on the
+                    // packed tier. The Read path is untouched: hits
+                    // serve the cache, misses keep the materializing
+                    // recompute.
+                    let fuse_ok = visitor.conv_fused_ready(&ctx)
+                        && tensor::kernels::packed_active(howo, rows_g);
                     let mut acc = SerialAcc::new(on);
                     for b in 0..bsz {
                         let dy_b = &dy.data[b * d * howo..(b + 1) * d * howo];
+                        // per example: the Fill budget shrinks as
+                        // earlier examples insert, so re-check what
+                        // insert would actually do for *this* entry
+                        let fuse = fuse_ok
+                            && match &ctl.cols {
+                                ColsMode::Off => true,
+                                ColsMode::Fill(cache) => {
+                                    !cache.would_keep(groups * rows_g * howo)
+                                }
+                                ColsMode::Read(_) => false,
+                            };
                         let hit = match &ctl.cols {
                             ColsMode::Read(cache) => cache.get(li, b),
                             _ => None,
                         };
                         match hit {
                             Some(c) => acc.visit(|| visitor.conv_example(&ctx, b, c, dy_b)),
+                            None if fuse => {
+                                let src = tensor::kernels::PatchSource::new(
+                                    input, b, kernel.0, kernel.1, args,
+                                );
+                                acc.visit(|| visitor.conv_example_fused(&ctx, b, &src, dy_b));
+                                if let ColsMode::Fill(cache) = &mut ctl.cols {
+                                    cache.note_spill();
+                                }
+                            }
                             None => {
                                 let c = acc.fill(|| {
                                     tensor::im2col_single(input, b, kernel.0, kernel.1, args).0
@@ -1333,5 +1418,40 @@ mod tests {
         assert_eq!(unit_chunks(3, 8, 1), 3); // never more than rows
         assert_eq!(unit_chunks(0, 8, 1), 1); // degenerate: one empty-range chunk
         assert_eq!(unit_chunks(100, 1, 0), 2);
+    }
+
+    /// The aligned carve covers `[0, rows)` contiguously, snaps every
+    /// interior boundary to the quantum, and degenerates to the plain
+    /// `split_ranges` distribution when the quantum is 1 (scalar tier).
+    #[test]
+    fn aligned_carve_snaps_boundaries_to_the_quantum() {
+        // q == 1: byte-for-byte the plain strategy split
+        for (rows, chunks) in [(10, 3), (0, 2), (7, 7), (5, 9)] {
+            assert_eq!(
+                split_ranges_quantized(rows, chunks, 1),
+                crate::strategies::split_ranges(rows, chunks)
+            );
+        }
+        // q == 4 (the packed micro-panel height): interior boundaries
+        // are multiples of 4, the cover is contiguous and exact
+        for (rows, chunks) in [(11, 3), (16, 4), (3, 2), (100, 7), (4, 9)] {
+            let ranges = split_ranges_quantized(rows, chunks, 4);
+            let mut cursor = 0usize;
+            for &(lo, hi) in &ranges {
+                assert_eq!(lo, cursor, "gap in the carve of {rows} rows");
+                assert!(lo < hi, "empty chunk ({lo}, {hi})");
+                assert!(
+                    hi == rows || hi % 4 == 0,
+                    "interior boundary {hi} not quantum-aligned"
+                );
+                cursor = hi;
+            }
+            assert_eq!(cursor, rows, "carve of {rows} rows ends early");
+            assert!(ranges.len() <= chunks.max(1));
+        }
+        // spot-check the distribution: 11 rows = 3 quanta → chunks of
+        // whole quanta with the tail absorbing the remainder
+        assert_eq!(split_ranges_quantized(11, 3, 4), vec![(0, 4), (4, 8), (8, 11)]);
+        assert_eq!(split_ranges_quantized(3, 2, 4), vec![(0, 3)]);
     }
 }

@@ -271,6 +271,13 @@ pub struct ExperimentConfig {
     /// bit-identical either way, only the thread layout changes. Turn
     /// off on oversubscribed hosts.
     pub inner_parallel: bool,
+    /// Packed SIMD kernel dispatch (`[train] simd` / `--simd`,
+    /// default `"auto"`): `auto` uses the packed microkernel tier
+    /// ([`crate::tensor::kernels`]) whenever the CPU supports it,
+    /// `off` forces the scalar reference kernels — the determinism
+    /// ladder's bitwise tier. The `GRAD_CNNS_SIMD=off` env var is a
+    /// hard gate `auto` cannot override (how CI pins its scalar leg).
+    pub simd: String,
     /// Debug export: write one batch's per-example gradient matrix to
     /// this CSV path after training (`[train] grad_dump`). Requires a
     /// materializing strategy; rejected with `ghostnorm`.
@@ -440,6 +447,13 @@ impl ExperimentConfig {
                  \"reuse\" or \"auto\""
             );
         }
+        let simd = string_or(cfg, "train.simd", "auto")?;
+        if crate::tensor::kernels::SimdMode::parse(&simd).is_none() {
+            bail!(
+                "config `train.simd` must be \"auto\" (packed SIMD kernels when the CPU \
+                 supports them) or \"off\" (scalar reference kernels), got {simd:?}"
+            );
+        }
         let profile = bool_or_strict(cfg, "train.profile", false)?;
         let trace_out = opt_string(cfg, "train.trace_out")?;
         // hardening: a trace path without the tracer on would silently
@@ -467,6 +481,7 @@ impl ExperimentConfig {
             ghost_pipeline,
             ghost_budget_mb: ghost_budget_mb as usize,
             inner_parallel: bool_or_strict(cfg, "train.inner_parallel", true)?,
+            simd,
             grad_dump,
             profile,
             trace_out,
@@ -927,6 +942,24 @@ name = "synthetic # not a comment"
         let c = Config::parse("[train]\ninner_parallel = 1\n").unwrap();
         let err = format!("{:#}", ExperimentConfig::from_config(&c).unwrap_err());
         assert!(err.contains("inner_parallel"), "{err}");
+    }
+
+    #[test]
+    fn simd_knob() {
+        // default auto
+        let c = Config::parse("[train]\nstrategy = \"crb\"\n").unwrap();
+        assert_eq!(ExperimentConfig::from_config(&c).unwrap().simd, "auto");
+        // explicit off
+        let c = Config::parse("[train]\nsimd = \"off\"\n").unwrap();
+        assert_eq!(ExperimentConfig::from_config(&c).unwrap().simd, "off");
+        // unknown spellings are key-named config errors
+        let c = Config::parse("[train]\nsimd = \"fast\"\n").unwrap();
+        let err = format!("{:#}", ExperimentConfig::from_config(&c).unwrap_err());
+        assert!(err.contains("train.simd"), "{err}");
+        // mistyped values are config errors, not defaults
+        let c = Config::parse("[train]\nsimd = 1\n").unwrap();
+        let err = format!("{:#}", ExperimentConfig::from_config(&c).unwrap_err());
+        assert!(err.contains("simd"), "{err}");
     }
 
     #[test]

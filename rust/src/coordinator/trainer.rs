@@ -130,6 +130,14 @@ impl Trainer {
 
     /// Wrap a trainer around any backend.
     pub fn with_backend(cfg: ExperimentConfig, backend: Box<dyn Backend>) -> Result<Trainer> {
+        // resolve the SIMD knob before any step runs: the kernel
+        // dispatch is process-global (every matmul consults it), and
+        // this is the single construction point all trainer paths
+        // funnel through. "auto" still defers to the GRAD_CNNS_SIMD
+        // env hard gate and the CPU probe.
+        let mode = crate::tensor::kernels::SimdMode::parse(&cfg.simd)
+            .unwrap_or(crate::tensor::kernels::SimdMode::Auto);
+        crate::tensor::kernels::set_simd_mode(mode);
         // The model spec tells us the input shape to synthesize.
         let spec = backend.model();
         // one generation pass, then a train/eval split: the held-out

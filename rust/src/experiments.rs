@@ -366,6 +366,13 @@ pub struct SweepCell {
     /// workload pass with the [`crate::obs`] tracer on, run after the
     /// timed measurement so tracing never perturbs the numbers).
     pub phases: PhaseBusy,
+    /// Planner-modeled throughput in GFLOP/s: the default-[`GhostMode`]
+    /// planner's [`modeled_step_flops`](ClippedStepPlanner::modeled_step_flops)
+    /// for this model × `batches`, divided by the measured `stats.mean`
+    /// seconds. The same model (chosen ghost/direct path per layer) is
+    /// used for every strategy column so cells are comparable on one
+    /// axis; 0.0 when the measurement degenerates to a zero mean.
+    pub flops_util: f64,
 }
 
 /// Native strategy sweep — the artifact-free miniature of Figure 1,
@@ -452,6 +459,7 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                         prop_matmuls: props,
                         visitor_units: units,
                         phases,
+                        flops_util: modeled_gflops(&spec, batch, opts.batches, stats.mean)?,
                         stats,
                     });
                 }
@@ -477,6 +485,7 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                     prop_matmuls: props,
                     visitor_units: units,
                     phases,
+                    flops_util: modeled_gflops(&spec, batch, opts.batches, stats.mean)?,
                     stats,
                 });
                 // scaled-reuse comparison: same model, same inputs,
@@ -501,6 +510,7 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
                     prop_matmuls: props,
                     visitor_units: units,
                     phases,
+                    flops_util: modeled_gflops(&spec, batch, opts.batches, stats.mean)?,
                     stats,
                 });
                 table.push(&format!("{model} {rate:.1}"), row);
@@ -510,6 +520,20 @@ pub fn run_native_sweep(opts: &NativeSweepOptions) -> Result<(Vec<Table>, Vec<Sw
         tables.push(table);
     }
     Ok((tables, cells))
+}
+
+/// Planner-modeled throughput of one sweep cell in GFLOP/s. Uses the
+/// default-[`GhostMode`] planner so the FLOP model (the per-layer
+/// ghost/direct choice) is identical across strategy columns — the
+/// column measures how fast each strategy moves through the *same*
+/// modeled work, not per-strategy accounting.
+fn modeled_gflops(spec: &ModelSpec, batch: usize, batches: usize, mean_secs: f64) -> Result<f64> {
+    if mean_secs <= 0.0 {
+        return Ok(0.0);
+    }
+    let planner = ClippedStepPlanner::new(spec, &GhostMode::default())?;
+    let flops = planner.modeled_step_flops(batch) as f64;
+    Ok(flops * batches as f64 / mean_secs / 1e9)
 }
 
 /// Time one (model, strategy) cell producing the clipped batch
@@ -635,6 +659,7 @@ pub fn sweep_to_json(opts: &NativeSweepOptions, cells: &[SweepCell]) -> Value {
                             ("phase_norm_kernel_s", jsonx::num(c.phases.norm_kernel_s)),
                             ("phase_dy_prop_s", jsonx::num(c.phases.dy_prop_s)),
                             ("phase_dy_rescale_s", jsonx::num(c.phases.dy_rescale_s)),
+                            ("flops_util", jsonx::num(c.flops_util)),
                         ])
                     })
                     .collect(),
@@ -728,6 +753,17 @@ mod tests {
             assert!(c.ns_per_example >= 0.0);
             assert!(c.params > 0);
             assert!(c.phases.im2col_s >= 0.0);
+            // the planner models nonzero work for every zoo model, and
+            // a real measurement has mean > 0, so the modeled
+            // throughput must come out positive and finite
+            assert!(
+                c.flops_util > 0.0 && c.flops_util.is_finite(),
+                "degenerate flops_util {} for {}/{} B={}",
+                c.flops_util,
+                c.strategy,
+                c.model,
+                c.batch
+            );
         }
         // phase attribution: ghostnorm cells spend norm-kernel time,
         // reuse cells spend dy-rescale time, crb spends dW-matmul time
@@ -767,6 +803,7 @@ mod tests {
                 "phase_norm_kernel_s",
                 "phase_dy_prop_s",
                 "phase_dy_rescale_s",
+                "flops_util",
             ] {
                 assert!(
                     r.get(key).and_then(|v| v.as_f64()).is_some(),

@@ -664,6 +664,25 @@ impl ClippedStepPlanner {
         self.plans().filter(|p| p.path == NormPath::Ghost).count()
     }
 
+    /// Planner-modeled FLOPs for one whole step at batch size `bsz`:
+    /// Σ over planned layers of the *chosen* path's per-example cost
+    /// × B — the same per-layer quantity the profiler's
+    /// [`StepReport`](crate::obs::StepReport) layers record as
+    /// `modeled_flops`, folded to a step total. The bench sweep
+    /// divides measured wall time by this to get its `flops_util`
+    /// column (modeled GFLOP/s).
+    pub fn modeled_step_flops(&self, bsz: usize) -> u64 {
+        self.plans()
+            .map(|p| {
+                match p.path {
+                    NormPath::Ghost => p.ghost_cost,
+                    NormPath::Direct => p.direct_cost,
+                }
+                .saturating_mul(bsz as u64)
+            })
+            .sum()
+    }
+
     /// One-line description for logs and bench output, e.g.
     /// `"L0:direct L3:ghost"`.
     pub fn summary(&self) -> String {

@@ -122,6 +122,10 @@ fn cmd_train(rest: &[String]) -> Result<()> {
             "true | false: spend spare threads inside each microbatch (overrides config)",
         )
         .opt(
+            "simd",
+            "auto | off: packed SIMD kernel dispatch (overrides config)",
+        )
+        .opt(
             "grad-dump",
             "write one batch's per-example gradients to this CSV after training",
         )
@@ -162,6 +166,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         ("ghost-pipeline", "train.ghost_pipeline"),
         ("ghost-budget-mb", "train.ghost_budget_mb"),
         ("inner-parallel", "train.inner_parallel"),
+        ("simd", "train.simd"),
         ("grad-dump", "train.grad_dump"),
         ("threads", "train.threads"),
         ("step-artifact", "train.step_artifact"),

@@ -346,7 +346,10 @@ impl ModelSpec {
                     if ho == 0 || wo == 0 {
                         bail!(
                             "layer {li} (Conv2d) collapses the {h}x{w} input to {ho}x{wo} — \
-                             kernel {kernel:?} does not fit"
+                             kernel {kernel:?} (stride {stride:?}, padding {padding:?}, \
+                             dilation {dilation:?}) does not fit; shrink the layer's \
+                             `model.kernel_size`/`model.dilation`, add `model.padding`, or \
+                             enlarge `model.input_shape`"
                         );
                     }
                     cur = Act::Spatial(*out_ch, ho, wo);
@@ -385,8 +388,11 @@ impl ModelSpec {
                         conv_out(h, w, (1, *kernel), (1, *stride), (0, *padding), (1, *dilation));
                     if lo == 0 {
                         bail!(
-                            "layer {li} (Conv1d) collapses the length-{w} input — kernel \
-                             {kernel} (dilation {dilation}) does not fit"
+                            "layer {li} (Conv1d) collapses the length-{w} input to length 0 — \
+                             kernel {kernel} (stride {stride}, padding {padding}, dilation \
+                             {dilation}) does not fit; shrink the layer's \
+                             `model.kernel_size`/`model.dilation`, add `model.padding`, or \
+                             enlarge `model.input_shape`"
                         );
                     }
                     cur = Act::Spatial(*out_ch, 1, lo);

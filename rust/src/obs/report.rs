@@ -72,8 +72,16 @@ pub struct StepReport {
     /// Σ busy microseconds over *leaf* phases ([`Phase::is_leaf`]) —
     /// disjoint per thread, so `busy_us ≤ wall_us × threads`.
     pub busy_us: u64,
-    /// `busy_us / (wall_us × threads)`: the fraction of the thread
-    /// pool the instrumented leaf phases kept busy.
+    /// Distinct thread ids observed on leaf events — the threads that
+    /// actually participated in the step (the drain can run on fewer
+    /// live threads than the planner split, or on more when the
+    /// caller's thread pitches in).
+    pub threads_observed: usize,
+    /// `busy_us / (wall_us × max(threads, threads_observed))`,
+    /// clamped to `[0, 1]`: the fraction of the thread pool the
+    /// instrumented leaf phases kept busy. The denominator counts
+    /// observed participants so extra helper threads cannot push the
+    /// ratio past 1, and the clamp absorbs per-event timer rounding.
     pub utilization: f64,
     /// Process-global counter deltas over the step.
     pub counters: CounterDeltas,
@@ -176,7 +184,23 @@ impl StepReport {
             .filter(|e| e.phase.is_leaf())
             .map(|e| e.busy_us)
             .sum();
+        let threads_observed = {
+            let mut tids: Vec<u64> = events
+                .iter()
+                .filter(|e| e.phase.is_leaf())
+                .map(|e| e.tid)
+                .collect();
+            tids.sort_unstable();
+            tids.dedup();
+            tids.len()
+        };
         let wall_s = wall_us.max(1) as f64 / 1e6;
+        // denominator: every thread that could have contributed —
+        // the configured pool or the observed participants, whichever
+        // is larger — with floors so a trivial step (wall ≈ 0, no
+        // events) divides by ≥ 1 instead of producing NaN/inf; the
+        // final clamp absorbs per-event timer rounding
+        let util_denom = wall_us.max(1) as f64 * threads.max(threads_observed).max(1) as f64;
         StepReport {
             step: 0,
             wall_us,
@@ -185,7 +209,8 @@ impl StepReport {
             modeled_flops,
             achieved_gflops: modeled_flops as f64 / wall_s / 1e9,
             busy_us,
-            utilization: busy_us as f64 / (wall_us.max(1) as f64 * threads.max(1) as f64),
+            threads_observed,
+            utilization: (busy_us as f64 / util_denom).min(1.0),
             counters,
             caches: sum_caches(cache_notes),
             layers,
@@ -239,6 +264,7 @@ impl StepReport {
             ("modeled_flops", num(self.modeled_flops as f64)),
             ("achieved_gflops", num(self.achieved_gflops)),
             ("busy_us", num(self.busy_us as f64)),
+            ("threads_observed", num(self.threads_observed as f64)),
             ("utilization", num(self.utilization)),
             (
                 "counters",
@@ -327,8 +353,42 @@ mod tests {
         // leaf busy: 100 + 50 + 400, inside wall × threads
         assert_eq!(r.busy_us, 550);
         assert!(r.utilization <= 1.0);
+        assert_eq!(r.threads_observed, 1, "all fake events share tid 1");
         assert_eq!(r.globals.len(), 1);
         assert_eq!(r.globals[0].phase, Phase::TapeBuild);
+    }
+
+    #[test]
+    fn utilization_counts_observed_threads_and_never_exceeds_one() {
+        let spec = ModelSpec::toy_cnn(2, 5, 1.0, 3, "none", (2, 8, 8), 10).unwrap();
+        let planner = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let tid_event = |tid: u64, busy: u64| Event {
+            phase: Phase::DwMatmul,
+            layer: 0,
+            tid,
+            start_us: 0,
+            dur_us: busy,
+            units: 0,
+            busy_us: busy,
+        };
+        // three participating threads but a planner split of 1: the
+        // old `busy / (wall × threads)` would read 1.8 here
+        let events = vec![tid_event(1, 600), tid_event(2, 600), tid_event(3, 600)];
+        let r = StepReport::build(1000, 1, 1, &planner, events, &[], CounterDeltas::default());
+        assert_eq!(r.threads_observed, 3);
+        assert!((r.utilization - 0.6).abs() < 1e-12, "{}", r.utilization);
+
+        // per-event timer rounding can push busy past wall × observed:
+        // the clamp holds the invariant
+        let events = vec![tid_event(1, 1003)];
+        let r = StepReport::build(1000, 1, 1, &planner, events, &[], CounterDeltas::default());
+        assert_eq!(r.utilization, 1.0);
+
+        // a trivial step (wall ≈ 0, no events) must not go NaN
+        let r = StepReport::build(0, 0, 1, &planner, vec![], &[], CounterDeltas::default());
+        assert_eq!(r.threads_observed, 0);
+        assert!(r.utilization.is_finite());
+        assert_eq!(r.utilization, 0.0);
     }
 
     #[test]

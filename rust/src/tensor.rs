@@ -16,6 +16,8 @@
 //!   strategy (`strategies.rs`) is built from these; property tests
 //!   pin each fast kernel to its oracle twin within 1e-4.
 
+pub mod kernels;
+
 /// Process-wide accounting of f32 elements held by live [`Tensor`]s.
 ///
 /// Every `Tensor` constructor records its element count and `Drop`
@@ -146,6 +148,24 @@ impl ColsCache {
         } else {
             self.spills += 1;
         }
+    }
+
+    /// Whether an insert of `elems` elements would currently be kept
+    /// rather than spilled — the backward walk's fused-patch gate:
+    /// when a fill-walk entry would spill anyway, materializing it
+    /// just to throw it away is pure waste, so the packed tier
+    /// consumes the patches directly instead. A skipped insert is
+    /// tallied via [`note_spill`](Self::note_spill) so the
+    /// fill/spill ledger reads the same either way.
+    pub fn would_keep(&self, elems: usize) -> bool {
+        self.used + elems <= self.cap
+    }
+
+    /// Record a budget spill for an insert that was never attempted
+    /// (the fused-patch path skips materializing doomed entries but
+    /// keeps the spill tally honest).
+    pub fn note_spill(&mut self) {
+        self.spills += 1;
     }
 
     /// Example `b`'s cached patch matrix for layer `li`, if kept.
@@ -1038,10 +1058,25 @@ pub fn clip_reduce(g: &Tensor, clip: f32) -> (Vec<f32>, Vec<f32>) {
 // Fast tier: cache-blocked matmuls + im2col convolution kernels
 // ---------------------------------------------------------------------------
 
-/// `C (m×n) += A (m×k) · B (k×n)` — all row-major, cache-blocked over
-/// `k` and `n` so the innermost loop streams contiguous rows of `B`
-/// and `C` (autovectorizer-friendly, no unsafe).
+/// `C (m×n) += A (m×k) · B (k×n)` — all row-major. Dispatches to the
+/// packed SIMD tier ([`kernels`]) when it is active and the problem
+/// is large enough, else runs the scalar reference loop
+/// ([`scalar_matmul`]). The threshold depends on `(k, n)` only, so
+/// row-carved calls pick the same tier as their full call.
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    if kernels::packed_active(k, n) {
+        kernels::matmul_packed(a, b, c, m, k, n);
+    } else {
+        scalar_matmul(a, b, c, m, k, n);
+    }
+}
+
+/// The scalar reference `C += A·B`: cache-blocked over `k` and `n` so
+/// the innermost loop streams contiguous rows of `B` and `C`
+/// (autovectorizer-friendly, no unsafe). This is the determinism
+/// ladder's bitwise reference — its per-element arithmetic must never
+/// change.
+pub fn scalar_matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
@@ -1066,9 +1101,21 @@ pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize)
     }
 }
 
-/// `C (m×n) += A (m×k) · Bᵀ` with `B` stored row-major as `(n×k)`:
-/// every product is a dot of two contiguous rows, blocked over `k`.
+/// `C (m×n) += A (m×k) · Bᵀ` with `B` stored row-major as `(n×k)`.
+/// Dispatches to the packed SIMD tier when active (threshold on
+/// `(k, n)` only — see [`matmul`]), else [`scalar_matmul_nt`].
 pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    if kernels::packed_active(k, n) {
+        kernels::matmul_nt_packed(a, b, c, m, k, n);
+    } else {
+        scalar_matmul_nt(a, b, c, m, k, n);
+    }
+}
+
+/// The scalar reference `C += A·Bᵀ`: every product is a dot of two
+/// contiguous rows, blocked over `k`. Bitwise reference — the
+/// per-element arithmetic must never change.
+pub fn scalar_matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
@@ -1090,8 +1137,21 @@ pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
 }
 
 /// `C (m×n) += Aᵀ · B` with `A` stored row-major as `(k×m)` and `B`
-/// as `(k×n)`: a sequence of rank-1 updates, blocked over `n`.
+/// as `(k×n)`. Dispatches to the packed SIMD tier when active
+/// (threshold on `(k, n)` only — see [`matmul`]), else
+/// [`scalar_matmul_tn`].
 pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    if kernels::packed_active(k, n) {
+        kernels::matmul_tn_packed(a, b, c, m, k, n);
+    } else {
+        scalar_matmul_tn(a, b, c, m, k, n);
+    }
+}
+
+/// The scalar reference `C += Aᵀ·B`: a sequence of rank-1 updates,
+/// blocked over `n`. Bitwise reference — the per-element arithmetic
+/// must never change.
+pub fn scalar_matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
@@ -1123,7 +1183,10 @@ pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
 /// parallel visitor units are built from; the
 /// `matmul_nt_rows_bitwise_matches_full_call` unit test pins the
 /// equivalence. `c_rows` holds exactly rows `[i0, i1)` — `(i1-i0)·n`
-/// elements.
+/// elements. The property holds on both dispatch tiers: the packed
+/// tier's threshold ignores `m`, so a carved call lands on the same
+/// tier as its full call, and the packed per-element FMA chains are
+/// row-range invariant too (pinned in [`kernels`]).
 pub fn matmul_nt_rows(
     a: &[f32],
     b: &[f32],
@@ -1295,6 +1358,23 @@ pub fn perex_conv2d_grad_im2col(
     let rows_g = cg * kh * kw;
     let howo = hp * wp;
     let mut out = Tensor::zeros(&[bsz, d, cg, kh, kw]);
+    if kernels::packed_active(howo, rows_g) {
+        // fused im2col-pack: the packed tier reads patches straight
+        // from `x` panel-by-panel — bit-identical to materializing
+        // the patch matrix first (pinned in [`kernels`]), without
+        // ever allocating it
+        for b in 0..bsz {
+            let src = kernels::PatchSource::new(x, b, kh, kw, args);
+            debug_assert_eq!(src.howo, howo, "dy spatial dims disagree with conv output");
+            for g in 0..args.groups {
+                let dyg = &dy.data[(b * d + g * dg) * howo..(b * d + (g + 1) * dg) * howo];
+                let og =
+                    &mut out.data[(b * d + g * dg) * rows_g..(b * d + (g + 1) * dg) * rows_g];
+                kernels::matmul_nt_patches(dyg, &src, g * rows_g, og, dg, howo, rows_g);
+            }
+        }
+        return out;
+    }
     for b in 0..bsz {
         let (cols, ho, wo) = im2col_single(x, b, kh, kw, args);
         debug_assert_eq!((ho, wo), (hp, wp), "dy spatial dims disagree with conv output");

@@ -279,6 +279,91 @@ pub fn degenerate_zoo_specs() -> Vec<ModelSpec> {
     specs
 }
 
+/// Degenerate conv geometries that [`ModelSpec::validate`] must
+/// *reject*: each pair is a spec whose conv output collapses to zero
+/// extent (H'·W' == 0 for Conv2d, L' == 0 for Conv1d) and a substring
+/// the validation error must contain. The negative-path complement of
+/// [`degenerate_zoo_specs`] — those are valid corners, these are
+/// invalid ones.
+pub fn invalid_geometry_specs() -> Vec<(ModelSpec, &'static str)> {
+    let tail = |in_dim: usize| {
+        vec![
+            LayerSpec::Flatten,
+            LayerSpec::Linear { in_dim, out_dim: 5 },
+        ]
+    };
+    let spec = |arch: &str, layers: Vec<LayerSpec>, input_shape| ModelSpec {
+        arch: arch.into(),
+        layers,
+        input_shape,
+        num_classes: 5,
+    };
+    let mut cases = Vec::new();
+    // Conv2d kernel larger than the (unpadded) input
+    let mut layers = vec![LayerSpec::Conv2d {
+        in_ch: 2,
+        out_ch: 4,
+        kernel: (5, 5),
+        stride: (1, 1),
+        padding: (0, 0),
+        dilation: (1, 1),
+        groups: 1,
+    }];
+    layers.extend(tail(4));
+    cases.push((spec("bad_kernel_too_big", layers, (2, 4, 4)), "does not fit"));
+    // Conv2d whose *dilated* kernel span overflows a padded input the
+    // plain kernel would fit
+    let mut layers = vec![LayerSpec::Conv2d {
+        in_ch: 1,
+        out_ch: 2,
+        kernel: (3, 3),
+        stride: (1, 1),
+        padding: (1, 1),
+        dilation: (4, 4),
+        groups: 1,
+    }];
+    layers.extend(tail(2));
+    cases.push((spec("bad_dilation_overflow", layers, (1, 6, 6)), "does not fit"));
+    // Conv1d kernel longer than the sequence
+    let mut layers = vec![LayerSpec::Conv1d {
+        in_ch: 2,
+        out_ch: 4,
+        kernel: 9,
+        stride: 1,
+        padding: 0,
+        dilation: 1,
+        groups: 1,
+    }];
+    layers.extend(tail(4));
+    cases.push((spec("bad_conv1d_too_long", layers, (2, 1, 7)), "does not fit"));
+    // mid-model collapse: a strided conv shrinks the map below what
+    // the next conv needs — the error must name the *second* layer
+    let mut layers = vec![
+        LayerSpec::Conv2d {
+            in_ch: 2,
+            out_ch: 3,
+            kernel: (3, 3),
+            stride: (3, 3),
+            padding: (0, 0),
+            dilation: (1, 1),
+            groups: 1,
+        },
+        LayerSpec::Relu,
+        LayerSpec::Conv2d {
+            in_ch: 3,
+            out_ch: 3,
+            kernel: (4, 4),
+            stride: (1, 1),
+            padding: (0, 0),
+            dilation: (1, 1),
+            groups: 1,
+        },
+    ];
+    layers.extend(tail(3));
+    cases.push((spec("bad_midmodel_collapse", layers, (2, 8, 8)), "layer 2"));
+    cases
+}
+
 /// The zoo case list the differential matrices iterate: a few random
 /// mixed geometries (which may draw GroupNorm / pooling / residual
 /// blocks), a few random Conv1d models, and the fixed degenerate

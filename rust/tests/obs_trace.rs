@@ -185,6 +185,17 @@ fn profiled_step_report_mirrors_the_planner_plan() {
         r.busy_us,
         bound
     );
+    // utilization is computed against the *observed* participating
+    // threads and clamped — never > 1.0, never NaN
+    assert!(
+        r.threads_observed >= 1,
+        "a profiled step with events must observe at least one thread"
+    );
+    assert!(
+        r.utilization.is_finite() && (0.0..=1.0).contains(&r.utilization),
+        "utilization {} outside [0, 1]",
+        r.utilization
+    );
     assert!(r.counters.tape_builds >= 1, "fused step builds tapes");
     assert!(
         r.caches.iter().any(|c| c.kind == obs::CacheKind::Cols),

@@ -10,7 +10,9 @@
 
 mod common;
 
-use common::geometries::{gen_conv_case, randn, random_problem, zoo_case_specs, ConvCase};
+use common::geometries::{
+    gen_conv_case, invalid_geometry_specs, randn, random_problem, zoo_case_specs, ConvCase,
+};
 use grad_cnns::check::{forall, gen_range, CheckConfig};
 use grad_cnns::models::ModelOracle;
 use grad_cnns::rng::Xoshiro256pp;
@@ -411,6 +413,32 @@ fn avgpool_grad_matches_fd() {
             Ok(())
         },
     );
+}
+
+/// The negative-path complement of the zoo matrix: specs whose conv
+/// geometry collapses to a zero-extent output (kernel too big, dilated
+/// span overflowing, Conv1d kernel longer than the sequence, mid-model
+/// collapse after a strided shrink) must be *rejected* by
+/// `ModelSpec::validate` with an error naming the offending layer and
+/// the config keys to fix — they must never reach the kernels.
+#[test]
+fn zoo_validate_rejects_degenerate_conv_geometries() {
+    for (spec, needle) in invalid_geometry_specs() {
+        let err = spec
+            .validate()
+            .expect_err(&format!("{}: collapsed geometry validated", spec.arch));
+        let msg = err.to_string();
+        assert!(
+            msg.contains(needle),
+            "{}: error {msg:?} missing {needle:?}",
+            spec.arch
+        );
+        assert!(
+            msg.contains("collapses"),
+            "{}: error {msg:?} does not describe the collapse",
+            spec.arch
+        );
+    }
 }
 
 /// Full-model oracle per-example grads match finite differences over

@@ -1,0 +1,379 @@
+//! Scalar-vs-SIMD differential suite for the packed GEMM kernel tier.
+//!
+//! The determinism ladder keeps its **bitwise** reference on the
+//! scalar path: with the dispatch forced off, every matmul variant
+//! must reproduce the pre-PR loops bit for bit (pinned here against
+//! local verbatim copies of those loops), and full training runs must
+//! stay bitwise reproducible. The packed tier is pinned *within float
+//! tolerance* (≤ 1e-5 relative) against the scalar tier on gradients,
+//! norms and clipped steps over the shared zoo geometry fixture — and
+//! the ghost planner's per-layer decisions must not move at all
+//! between the two dispatch modes.
+//!
+//! The SIMD mode is process-global, so every test here serializes on
+//! one lock and restores the previous mode on exit (including panic
+//! unwinds) — the same discipline `tests/obs_trace.rs` uses for the
+//! tracer flag.
+
+mod common;
+
+use common::geometries::{random_problem, zoo_case_specs};
+use grad_cnns::config::{Config, ExperimentConfig};
+use grad_cnns::coordinator::{Checkpoint, Trainer};
+use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode};
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::strategies::{Strategy, StrategyRunner};
+use grad_cnns::tensor::kernels::{set_simd_mode, simd_mode, SimdMode};
+use grad_cnns::tensor;
+use std::sync::Mutex;
+
+// The SIMD dispatch mode is process-global and the test binary runs
+// tests on parallel threads — serialize every test here on one lock
+// (recover from poisoning so one failure does not cascade).
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Forces a dispatch mode and restores the previous one on drop, so a
+/// failing assertion cannot leak a forced mode into later tests.
+struct ModeGuard(SimdMode);
+
+impl ModeGuard {
+    fn force(mode: SimdMode) -> ModeGuard {
+        let prev = simd_mode();
+        set_simd_mode(mode);
+        ModeGuard(prev)
+    }
+}
+
+impl Drop for ModeGuard {
+    fn drop(&mut self) {
+        set_simd_mode(self.0);
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn randv(r: &mut Xoshiro256pp, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    r.fill_gaussian(&mut v, 1.0);
+    v
+}
+
+/// `|a - b| ≤ tol · max(1, |a|, |b|)` elementwise — relative with an
+/// absolute floor so near-zero gradient entries don't demand exact
+/// zero agreement from a reassociated summation.
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}[{i}]: scalar {x} vs simd {y} (rel {})",
+            (x - y).abs() / scale
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pre-PR kernel pin: the scalar dispatch must be the old loops, bit
+// for bit
+// ---------------------------------------------------------------------------
+
+// Verbatim copies of the pre-PR matmul bodies, kept *here* so a future
+// edit to `tensor::scalar_matmul*` (or a dispatch threshold bug that
+// routes these shapes to the packed tier with the mode forced off)
+// breaks this pin instead of silently moving the bitwise reference.
+
+fn reference_matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    const KC: usize = 256;
+    const NC: usize = 512;
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        for j0 in (0..n).step_by(NC) {
+            let j1 = (j0 + NC).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + j0..i * n + j1];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    let brow = &b[kk * n + j0..kk * n + j1];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * *bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn reference_matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    const KC: usize = 1024;
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        for i in 0..m {
+            let arow = &a[i * k + k0..i * k + k1];
+            for j in 0..n {
+                let brow = &b[j * k + k0..j * k + k1];
+                let mut acc = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow) {
+                    acc += *av * *bv;
+                }
+                c[i * n + j] += acc;
+            }
+        }
+    }
+}
+
+fn reference_matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    const NC: usize = 512;
+    for j0 in (0..n).step_by(NC) {
+        let j1 = (j0 + NC).min(n);
+        for kk in 0..k {
+            let arow = &a[kk * m..(kk + 1) * m];
+            let brow = &b[kk * n + j0..kk * n + j1];
+            for i in 0..m {
+                let av = arow[i];
+                let crow = &mut c[i * n + j0..i * n + j1];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * *bv;
+                }
+            }
+        }
+    }
+}
+
+/// With the dispatch forced off, all three public matmul variants are
+/// the pre-PR loops bit for bit — including on shapes big enough that
+/// `auto` would take the packed tier.
+#[test]
+fn scalar_dispatch_is_bitwise_identical_to_pre_pr_kernels() {
+    let _g = lock();
+    let _m = ModeGuard::force(SimdMode::Off);
+    let mut r = Xoshiro256pp::seed_from_u64(0x51D0);
+    // small (below the packed threshold either way), medium, and
+    // large-(k·n) shapes that only the forced-off mode keeps scalar,
+    // plus blocking-edge cases straddling KC=256 / NC=512 / KC=1024
+    for (m, k, n) in [
+        (1, 1, 1),
+        (3, 7, 5),
+        (4, 40, 30),
+        (9, 300, 17),
+        (5, 1030, 3),
+        (8, 64, 520),
+        (2, 257, 513),
+    ] {
+        let a = randv(&mut r, m * k);
+        let b_mn = randv(&mut r, k * n);
+        let b_nt = randv(&mut r, n * k);
+        let a_tn = randv(&mut r, k * m);
+
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        tensor::matmul(&a, &b_mn, &mut got, m, k, n);
+        reference_matmul(&a, &b_mn, &mut want, m, k, n);
+        assert_eq!(bits(&got), bits(&want), "matmul ({m},{k},{n}) drifted");
+
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        tensor::matmul_nt(&a, &b_nt, &mut got, m, k, n);
+        reference_matmul_nt(&a, &b_nt, &mut want, m, k, n);
+        assert_eq!(bits(&got), bits(&want), "matmul_nt ({m},{k},{n}) drifted");
+
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        tensor::matmul_tn(&a_tn, &b_mn, &mut got, m, k, n);
+        reference_matmul_tn(&a_tn, &b_mn, &mut want, m, k, n);
+        assert_eq!(bits(&got), bits(&want), "matmul_tn ({m},{k},{n}) drifted");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint-level scalar determinism
+// ---------------------------------------------------------------------------
+
+/// `tests/train_determinism.rs`'s zoo config with the `simd` knob
+/// threaded through — the trainer resolves the knob into the
+/// process-global dispatch, so full runs toggle via config like a
+/// user would.
+fn zoo_config(strategy: &str, threads: usize, simd: &str) -> ExperimentConfig {
+    let cfg = Config::parse(&format!(
+        r#"
+[train]
+backend = "native"
+strategy = "{strategy}"
+simd = "{simd}"
+steps = 3
+batch_size = 4
+lr = 0.2
+seed = 41
+threads = {threads}
+eval_every = 0
+log_every = 8
+
+[model]
+arch = "residual_gn"
+n_layers = 1
+first_channels = 8
+groups = 4
+input_shape = [2, 10, 10]
+
+[dp]
+clip_norm = 1.0
+noise_multiplier = 0.7
+target_delta = 1e-5
+
+[data]
+size = 32
+num_classes = 10
+"#
+    ))
+    .unwrap();
+    ExperimentConfig::from_config(&cfg).unwrap()
+}
+
+/// One full training run to a post-step checkpoint on disk; returns
+/// the checkpointed theta.
+fn run_to_checkpoint(cfg: ExperimentConfig, dir: &std::path::Path) -> Vec<f32> {
+    let _ = std::fs::remove_dir_all(dir);
+    let steps = cfg.steps;
+    let mut trainer = Trainer::from_config(cfg).unwrap();
+    trainer.quiet = true;
+    trainer.checkpoint_dir = Some(dir.to_str().unwrap().to_string());
+    trainer.checkpoint_every = steps;
+    let report = trainer.run(None).unwrap();
+    assert_eq!(report.steps, steps);
+    Checkpoint::load(&format!("{}/ckpt_{steps}", dir.display()))
+        .unwrap()
+        .theta
+}
+
+/// With `simd = "off"` in the config, seeded zoo training is bitwise
+/// reproducible run-to-run AND across worker thread counts — the
+/// scalar rung of the determinism ladder holds end to end, and (with
+/// the kernel pin above) it is the pre-PR arithmetic exactly.
+#[test]
+fn zoo_checkpoints_with_simd_off_stay_bitwise_deterministic() {
+    let _g = lock();
+    let _m = ModeGuard::force(SimdMode::Auto); // the config must win
+    for strategy in ["crb", "ghostnorm"] {
+        let base = std::env::temp_dir().join(format!("grad_cnns_simd_off_{strategy}"));
+        let t1a = run_to_checkpoint(zoo_config(strategy, 1, "off"), &base.join("t1a"));
+        let t1b = run_to_checkpoint(zoo_config(strategy, 1, "off"), &base.join("t1b"));
+        let t4 = run_to_checkpoint(zoo_config(strategy, 4, "off"), &base.join("t4"));
+        assert_eq!(
+            bits(&t1a),
+            bits(&t1b),
+            "{strategy} simd=off: two seeded runs diverged bitwise"
+        );
+        assert_eq!(
+            bits(&t1a),
+            bits(&t4),
+            "{strategy} simd=off: thread count changed the checkpoint"
+        );
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}
+
+/// The `auto` rung is reproducible too (whatever tier the host CPU
+/// resolves to), and a full `auto` run tracks the `off` run within the
+/// float tolerance the tier is pinned to.
+#[test]
+fn zoo_checkpoints_with_simd_auto_are_reproducible_and_track_scalar() {
+    let _g = lock();
+    let _m = ModeGuard::force(SimdMode::Off); // the config must win
+    let base = std::env::temp_dir().join("grad_cnns_simd_auto");
+    let auto_a = run_to_checkpoint(zoo_config("ghostnorm", 4, "auto"), &base.join("a"));
+    let auto_b = run_to_checkpoint(zoo_config("ghostnorm", 4, "auto"), &base.join("b"));
+    assert_eq!(
+        bits(&auto_a),
+        bits(&auto_b),
+        "ghostnorm simd=auto: two seeded runs diverged bitwise"
+    );
+    let off = run_to_checkpoint(zoo_config("ghostnorm", 4, "off"), &base.join("off"));
+    // 3 SGD steps with noise amplify kernel-level 1e-5 drift a little;
+    // 1e-3 here is loose on purpose — the tight per-step bound is
+    // pinned below on raw grads/norms/clipped sums
+    assert_close(&auto_a, &off, 1e-3, "ghostnorm auto-vs-off checkpoint");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+// ---------------------------------------------------------------------------
+// Packed-tier float tolerance + planner stability over the zoo
+// ---------------------------------------------------------------------------
+
+/// Over the shared zoo geometry fixture, the packed tier stays within
+/// 1e-5 relative of the scalar tier on per-example gradients and
+/// norms (materializing strategies) and on ghost norms + clipped
+/// sums — and the ghost planner's per-layer ghost/direct decisions
+/// are identical under both dispatch modes.
+#[test]
+fn zoo_grads_norms_and_clipped_steps_match_scalar_within_tolerance() {
+    let _g = lock();
+    let mut rng = Xoshiro256pp::seed_from_u64(0x51D1);
+    for (case, spec) in zoo_case_specs(&mut rng, 2).into_iter().enumerate() {
+        let bsz = 3;
+        let (theta, x, y) = random_problem(&spec, bsz, &mut rng);
+        let arch = spec.arch.clone();
+
+        // materializing strategy (crb exercises the im2col-matmul
+        // kernels the packed tier replaces)
+        let runner = StrategyRunner::new(spec.clone(), Strategy::Crb, 1);
+        let _m = ModeGuard::force(SimdMode::Off);
+        let (g_off, l_off) = runner.perex_grads(&theta, &x, &y).unwrap();
+        set_simd_mode(SimdMode::Auto);
+        let (g_auto, l_auto) = runner.perex_grads(&theta, &x, &y).unwrap();
+        assert_close(
+            &g_off.data,
+            &g_auto.data,
+            1e-5,
+            &format!("zoo case {case} ({arch}): crb grads"),
+        );
+        assert_close(
+            &l_off,
+            &l_auto,
+            1e-5,
+            &format!("zoo case {case} ({arch}): crb losses"),
+        );
+
+        // ghost engine: planner decisions first, then the step
+        set_simd_mode(SimdMode::Off);
+        let planner_off = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let off = ghost::clipped_step(&planner_off, &theta, &x, &y, 1.0, 2).unwrap();
+        set_simd_mode(SimdMode::Auto);
+        let planner_auto = ClippedStepPlanner::new(&spec, &GhostMode::default()).unwrap();
+        let auto = ghost::clipped_step(&planner_auto, &theta, &x, &y, 1.0, 2).unwrap();
+        assert_eq!(
+            planner_off.summary(),
+            planner_auto.summary(),
+            "zoo case {case} ({arch}): planner decisions moved with the dispatch mode"
+        );
+        assert_eq!(
+            planner_off.modeled_step_flops(bsz),
+            planner_auto.modeled_step_flops(bsz),
+            "zoo case {case} ({arch}): modeled FLOPs moved with the dispatch mode"
+        );
+        assert_close(
+            &off.norms,
+            &auto.norms,
+            1e-5,
+            &format!("zoo case {case} ({arch}): ghost norms"),
+        );
+        assert_close(
+            &off.losses,
+            &auto.losses,
+            1e-5,
+            &format!("zoo case {case} ({arch}): ghost losses"),
+        );
+        assert_close(
+            &off.grad_sum,
+            &auto.grad_sum,
+            1e-5,
+            &format!("zoo case {case} ({arch}): clipped grad sum"),
+        );
+    }
+}

@@ -6,12 +6,18 @@ cell by cell (keyed on strategy x model x batch x channel_rate), and
 fails when any cell's `ns_per_example` regresses past the threshold.
 
     python tools/check_bench.py fresh.json [baseline.json]
+    python tools/check_bench.py --selftest
 
 The baseline path defaults to `bench_baselines/BENCH_strategies.json`
 (relative to the repo root). When no baseline exists yet the check
 exits 0 with a notice — committing a baseline measured on a dedicated
 bench machine is the ROADMAP item that arms this gate; CI boxes are
 too noisy to self-baseline.
+
+`--selftest` runs the checker against the committed fixtures under
+`tools/fixtures/` (a passing pair, a duplicate-key document, a record
+missing its model axis, and a regressed cell) and verifies each exits
+the way it should — the gate that the gate itself still gates.
 
 Exit 0 on pass (or no baseline), 1 on a regression or malformed input.
 Stdlib only.
@@ -29,13 +35,11 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_BASELINE = os.path.join(ROOT, "bench_baselines", "BENCH_strategies.json")
 
 
+KEY_FIELDS = ("strategy", "model", "batch", "channel_rate")
+
+
 def cell_key(rec):
-    return (
-        rec["strategy"],
-        rec["model"],
-        rec["batch"],
-        rec["channel_rate"],
-    )
+    return tuple(rec[k] for k in KEY_FIELDS)
 
 
 def load_cells(path):
@@ -45,12 +49,60 @@ def load_cells(path):
         print(f"check_bench: FAIL: {path}: unknown schema {doc.get('schema')!r}")
         sys.exit(1)
     cells = {}
-    for rec in doc["results"]:
-        cells[cell_key(rec)] = rec
+    for i, rec in enumerate(doc["results"]):
+        missing = [k for k in KEY_FIELDS if k not in rec]
+        if missing:
+            print(
+                f"check_bench: FAIL: {path}: results[{i}] missing key "
+                f"field(s) {missing} — every record must carry the full "
+                f"(strategy, model, batch, channel_rate) cell key"
+            )
+            sys.exit(1)
+        key = cell_key(rec)
+        if key in cells:
+            # a silent overwrite here would let a generator bug (e.g. a
+            # dropped axis) erase half the sweep and still "pass"
+            print(
+                f"check_bench: FAIL: {path}: duplicate cell "
+                f"{'/'.join(str(k) for k in key)} — each "
+                "(strategy, model, batch, channel_rate) must appear once"
+            )
+            sys.exit(1)
+        cells[key] = rec
     return cells
 
 
+def selftest():
+    import subprocess
+
+    fixtures = os.path.join(ROOT, "tools", "fixtures")
+    cases = [
+        (["bench_ok_fresh.json", "bench_ok_baseline.json"], 0),
+        (["bench_bad_duplicate.json", "bench_ok_baseline.json"], 1),
+        (["bench_bad_missing_model.json", "bench_ok_baseline.json"], 1),
+        (["bench_bad_regression.json", "bench_ok_baseline.json"], 1),
+    ]
+    for args, want in cases:
+        paths = [os.path.join(fixtures, a) for a in args]
+        r = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), *paths],
+            capture_output=True,
+            text=True,
+        )
+        if r.returncode != want:
+            print(
+                f"check_bench: SELFTEST FAIL: {args[0]} exited "
+                f"{r.returncode}, wanted {want}\n{r.stdout}{r.stderr}"
+            )
+            sys.exit(1)
+        print(f"check_bench: selftest: {args[0]} -> exit {r.returncode} (ok)")
+    print(f"check_bench: selftest OK: {len(cases)} fixture case(s)")
+
+
 def main():
+    if len(sys.argv) == 2 and sys.argv[1] == "--selftest":
+        selftest()
+        return
     if len(sys.argv) not in (2, 3):
         print(__doc__)
         sys.exit(2)

@@ -9,6 +9,16 @@ core accounting invariant — summed *leaf*-phase busy time is bounded by
 `wall_us x threads` per step (leaf spans are disjoint per thread).
 
     python tools/check_trace.py trace.json
+    python tools/check_trace.py --selftest
+
+Also enforces the utilization invariant: `utilization` is computed
+against the observed participating threads and clamped, so it must be
+finite and inside `[0, 1]`, and a step that recorded busy time must
+have observed at least one thread (`threads_observed >= 1`).
+
+`--selftest` validates the committed fixtures under `tools/fixtures/`
+(one minimal valid trace, one with utilization > 1) and verifies each
+exits the way it should.
 
 Exit 0 on a valid trace, 1 with a message on the first violation.
 Stdlib only.
@@ -37,6 +47,7 @@ STEP_KEYS = {
     "step",
     "wall_us",
     "threads",
+    "threads_observed",
     "batch",
     "modeled_flops",
     "achieved_gflops",
@@ -118,8 +129,20 @@ def check_step(step, i, n_events):
             f"{where}: leaf busy {leaf_busy}us exceeds wall x threads bound "
             f"{bound}us (wall {step['wall_us']}us x {threads} threads)"
         )
-    if step["utilization"] < 0:
-        fail(f"{where}: negative utilization")
+    # utilization is busy / (wall x observed-participating threads),
+    # clamped on the rust side — a value outside [0, 1] (or NaN) means
+    # the report builder regressed to counting configured-but-idle
+    # threads or dividing by zero wall time
+    util = step["utilization"]
+    if not isinstance(util, (int, float)) or util != util:
+        fail(f"{where}: utilization must be a number, got {util!r}")
+    if util < 0 or util > 1 + 1e-9:
+        fail(f"{where}: utilization {util} outside [0, 1]")
+    tobs = step["threads_observed"]
+    if not isinstance(tobs, (int, float)) or tobs != int(tobs) or tobs < 0:
+        fail(f"{where}: threads_observed must be a non-negative integer, got {tobs!r}")
+    if leaf_busy > 0 and tobs < 1:
+        fail(f"{where}: busy time recorded but threads_observed is 0")
 
 
 def check_trace_event(ev, i):
@@ -134,7 +157,39 @@ def check_trace_event(ev, i):
     require_keys(ev["args"], {"step", "layer", "units", "busy_us"}, f"{where}.args")
 
 
+def selftest():
+    import os
+    import subprocess
+
+    fixtures = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "tools",
+        "fixtures",
+    )
+    cases = [
+        ("trace_ok_minimal.json", 0),
+        ("trace_bad_utilization.json", 1),
+    ]
+    for name, want in cases:
+        r = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), os.path.join(fixtures, name)],
+            capture_output=True,
+            text=True,
+        )
+        if r.returncode != want:
+            print(
+                f"check_trace: SELFTEST FAIL: {name} exited "
+                f"{r.returncode}, wanted {want}\n{r.stdout}{r.stderr}"
+            )
+            sys.exit(1)
+        print(f"check_trace: selftest: {name} -> exit {r.returncode} (ok)")
+    print(f"check_trace: selftest OK: {len(cases)} fixture case(s)")
+
+
 def main():
+    if len(sys.argv) == 2 and sys.argv[1] == "--selftest":
+        selftest()
+        return
     if len(sys.argv) != 2:
         print(__doc__)
         sys.exit(2)
