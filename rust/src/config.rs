@@ -513,6 +513,90 @@ impl ExperimentConfig {
     }
 }
 
+/// Typed view of the `[service]` section — the norm service's sizing
+/// and fault-handling knobs, shared by `repro serve` and `repro
+/// loadtest` (each also exposes the same names as CLI flags, which
+/// win over the file). Uses the strict accessors: a present-but-
+/// mistyped value is an error, never a silent default.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceTuning {
+    /// Executor threads (`[service] workers`, default 2).
+    pub workers: usize,
+    /// Max dynamic batch (`[service] batch`, default 8).
+    pub batch: usize,
+    /// Partial-batch flush deadline in ms (`[service] max_wait_ms`,
+    /// default 20).
+    pub max_wait_ms: u64,
+    /// Request-queue capacity — the backpressure/admission bound
+    /// (`[service] queue_capacity`, default 256).
+    pub queue_capacity: usize,
+    /// Per-request deadline budget in ms (`[service] deadline_ms`);
+    /// 0 (the default) means no deadline — requests are never shed.
+    pub deadline_ms: u64,
+    /// Supervisor worker-restart budget (`[service] restart_budget`,
+    /// default 3). Once spent, the next worker death fails the
+    /// service fast with a typed error instead of hanging clients.
+    pub restart_budget: u32,
+    /// Per-request execution attempt cap (`[service] max_attempts`,
+    /// default 2): a failing batch is split and retried until each
+    /// request has spent this many attempts.
+    pub max_attempts: u32,
+}
+
+impl ServiceTuning {
+    /// Read the `[service]` section, validating types and bounds.
+    pub fn from_config(cfg: &Config) -> Result<ServiceTuning> {
+        let workers = int_or(cfg, "service.workers", 2)?;
+        if workers <= 0 {
+            bail!("config `service.workers` must be >= 1, got {workers}");
+        }
+        let batch = int_or(cfg, "service.batch", 8)?;
+        if batch <= 0 {
+            bail!("config `service.batch` must be >= 1, got {batch}");
+        }
+        let max_wait_ms = int_or(cfg, "service.max_wait_ms", 20)?;
+        if max_wait_ms < 0 {
+            bail!("config `service.max_wait_ms` must be >= 0, got {max_wait_ms}");
+        }
+        let queue_capacity = int_or(cfg, "service.queue_capacity", 256)?;
+        if queue_capacity <= 0 {
+            bail!("config `service.queue_capacity` must be >= 1, got {queue_capacity}");
+        }
+        let deadline_ms = int_or(cfg, "service.deadline_ms", 0)?;
+        if deadline_ms < 0 {
+            bail!(
+                "config `service.deadline_ms` must be >= 0 (0 disables deadlines), \
+                 got {deadline_ms}"
+            );
+        }
+        let restart_budget = int_or(cfg, "service.restart_budget", 3)?;
+        if restart_budget < 0 {
+            bail!("config `service.restart_budget` must be >= 0, got {restart_budget}");
+        }
+        let max_attempts = int_or(cfg, "service.max_attempts", 2)?;
+        if max_attempts <= 0 {
+            bail!(
+                "config `service.max_attempts` must be >= 1 (every request needs at \
+                 least one execution attempt), got {max_attempts}"
+            );
+        }
+        Ok(ServiceTuning {
+            workers: workers as usize,
+            batch: batch as usize,
+            max_wait_ms: max_wait_ms as u64,
+            queue_capacity: queue_capacity as usize,
+            deadline_ms: deadline_ms as u64,
+            restart_budget: restart_budget as u32,
+            max_attempts: max_attempts as u32,
+        })
+    }
+
+    /// The per-request deadline as a `Duration`, `None` when disabled.
+    pub fn deadline(&self) -> Option<std::time::Duration> {
+        (self.deadline_ms > 0).then(|| std::time::Duration::from_millis(self.deadline_ms))
+    }
+}
+
 /// Parse `[train] ghost_norms`: a string applies one policy to every
 /// conv layer; an array overrides per conv layer (in conv order, the
 /// rest defaulting to auto — a too-long list is rejected later by the
@@ -1010,6 +1094,50 @@ name = "synthetic # not a comment"
         assert!(Config::parse("keynovalue\n").is_err());
         assert!(Config::parse("k = \"open\n").is_err());
         assert!(Config::parse("k = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn service_tuning_defaults_and_validation() {
+        // defaults from an empty config
+        let c = Config::parse("").unwrap();
+        let s = ServiceTuning::from_config(&c).unwrap();
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.batch, 8);
+        assert_eq!(s.max_wait_ms, 20);
+        assert_eq!(s.queue_capacity, 256);
+        assert_eq!(s.deadline_ms, 0);
+        assert_eq!(s.deadline(), None, "0 disables deadlines");
+        assert_eq!(s.restart_budget, 3);
+        assert_eq!(s.max_attempts, 2);
+        // a populated section flows through
+        let c = Config::parse(
+            "[service]\nworkers = 4\nbatch = 16\nmax_wait_ms = 5\nqueue_capacity = 32\n\
+             deadline_ms = 250\nrestart_budget = 1\nmax_attempts = 3\n",
+        )
+        .unwrap();
+        let s = ServiceTuning::from_config(&c).unwrap();
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.batch, 16);
+        assert_eq!(s.queue_capacity, 32);
+        assert_eq!(s.deadline(), Some(std::time::Duration::from_millis(250)));
+        assert_eq!(s.restart_budget, 1);
+        assert_eq!(s.max_attempts, 3);
+        // out-of-range values are key-named config errors
+        for bad in [
+            "[service]\nworkers = 0\n",
+            "[service]\nbatch = 0\n",
+            "[service]\nqueue_capacity = 0\n",
+            "[service]\nmax_attempts = 0\n",
+            "[service]\ndeadline_ms = -1\n",
+            "[service]\nrestart_budget = -1\n",
+        ] {
+            let c = Config::parse(bad).unwrap();
+            assert!(ServiceTuning::from_config(&c).is_err(), "{bad}");
+        }
+        // mistyped values are config errors, not defaults
+        let c = Config::parse("[service]\nworkers = \"many\"\n").unwrap();
+        let err = format!("{:#}", ServiceTuning::from_config(&c).unwrap_err());
+        assert!(err.contains("service.workers"), "{err}");
     }
 
     #[test]

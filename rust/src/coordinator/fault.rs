@@ -1,0 +1,280 @@
+//! Deterministic fault injection for the norm service.
+//!
+//! The robustness contract of [`super::service`] — *every submitted
+//! request resolves, `Ok` or typed error, in bounded time* — is only
+//! worth anything if it is exercised under real failure shapes: worker
+//! panics mid-batch, executors that die at construction, injected
+//! latency that blows request deadlines. This module is the harness
+//! that produces those failures *deterministically*, so
+//! `tests/service_robustness.rs` and the `repro loadtest --chaos`
+//! smoke can assert exact outcomes (which requests fail, with which
+//! error, how many supervisor restarts) instead of shaking the service
+//! and hoping.
+//!
+//! Design rules, mirroring the `obs` tracer's:
+//!
+//! * **off by default, zero-cost when off** — a service without a
+//!   [`FaultPlan`] carries `faults: None`, and the per-batch check is
+//!   one `Option` branch ([`super::service`] never even locks the plan
+//!   mutex). Chaos-off service output is pinned bit-identical to the
+//!   pre-fault-layer path.
+//! * **consume-once** — each planned fault fires exactly once (the
+//!   entry is removed when taken), so a retried batch re-executes
+//!   clean and a restarted worker comes up healthy unless the plan
+//!   says otherwise.
+//! * **seed-driven** — [`FaultPlan::seeded`] expands one `u64` into a
+//!   reproducible mix of panics, errors, delays and one init failure,
+//!   keyed off [`crate::rng::Xoshiro256pp`]; the same seed always
+//!   yields the same plan.
+
+use crate::rng::Xoshiro256pp;
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One injected failure, applied to a single (worker, batch) slot.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic inside batch execution. The worker's `catch_unwind`
+    /// contains it: the batch fails typed, the worker thread survives.
+    Panic,
+    /// A clean executor error — the transient-failure shape that
+    /// drives the split-and-retry path.
+    Error,
+    /// Sleep this long before executing the batch — deadline pressure
+    /// without any failure (the batch then runs normally).
+    Delay(Duration),
+    /// Fail the batch, then exit the worker thread — the supervisor
+    /// restart path.
+    Die,
+}
+
+/// A deterministic schedule of injected faults, keyed by worker slot.
+///
+/// Batch faults are keyed by the worker's *cumulative* batch sequence
+/// number (counted across restarts, starting at 0); init faults by the
+/// worker's incarnation (0 = the original spawn, 1 = first restart…).
+/// Attach a plan to a service via
+/// [`FaultPolicy::faults`]; without one the service runs the exact
+/// pre-fault-layer code path.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    batch: Vec<(usize, u64, Fault)>,
+    init: Vec<(usize, u32)>,
+}
+
+impl FaultPlan {
+    /// An empty plan (inject nothing).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Inject `fault` at worker `worker`'s `nth` batch (cumulative
+    /// across restarts, 0-based). Consumed once when it fires.
+    pub fn on_batch(mut self, worker: usize, nth: u64, fault: Fault) -> Self {
+        self.batch.push((worker, nth, fault));
+        self
+    }
+
+    /// Fail worker `worker`'s executor construction on its
+    /// `incarnation`th life (0 = original spawn, 1 = first restart…).
+    pub fn fail_init(mut self, worker: usize, incarnation: u32) -> Self {
+        self.init.push((worker, incarnation));
+        self
+    }
+
+    /// Expand one seed into a reproducible chaos mix over `workers`
+    /// worker slots and a `horizon` of batches per slot: exactly one
+    /// init failure (so the supervisor restart counter is
+    /// deterministically nonzero — what the CI smoke greps for) plus
+    /// roughly `horizon / 4` panic/error/delay faults per slot.
+    pub fn seeded(seed: u64, workers: usize, horizon: u64) -> FaultPlan {
+        let workers = workers.max(1);
+        let horizon = horizon.max(1);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut plan = FaultPlan::new().fail_init(seed as usize % workers, 0);
+        for w in 0..workers {
+            let mut seqs: HashSet<u64> = HashSet::new();
+            for _ in 0..(horizon / 4).max(1) {
+                seqs.insert(rng.next_below(horizon));
+            }
+            let mut seqs: Vec<u64> = seqs.into_iter().collect();
+            seqs.sort_unstable();
+            for nth in seqs {
+                let fault = match rng.next_below(3) {
+                    0 => Fault::Panic,
+                    1 => Fault::Error,
+                    _ => Fault::Delay(Duration::from_millis(1 + rng.next_below(4))),
+                };
+                plan = plan.on_batch(w, nth, fault);
+            }
+        }
+        plan
+    }
+
+    /// Whether the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.batch.is_empty() && self.init.is_empty()
+    }
+
+    /// Human-readable one-liner, e.g. for the loadtest banner.
+    pub fn summary(&self) -> String {
+        let (mut panics, mut errors, mut delays, mut dies) = (0, 0, 0, 0);
+        for (_, _, f) in &self.batch {
+            match f {
+                Fault::Panic => panics += 1,
+                Fault::Error => errors += 1,
+                Fault::Delay(_) => delays += 1,
+                Fault::Die => dies += 1,
+            }
+        }
+        format!(
+            "{} panic, {} error, {} delay, {} die, {} init-fail",
+            panics,
+            errors,
+            delays,
+            dies,
+            self.init.len()
+        )
+    }
+}
+
+/// Runtime fault store for one service instance: the plan's entries,
+/// consumed as they fire. Internal to the coordinator — workers probe
+/// it, clients never see it.
+pub(crate) struct FaultState {
+    inner: Mutex<FaultEntries>,
+}
+
+struct FaultEntries {
+    batch: HashMap<(usize, u64), Fault>,
+    init: HashSet<(usize, u32)>,
+}
+
+impl FaultState {
+    pub(crate) fn new(plan: &FaultPlan) -> FaultState {
+        FaultState {
+            inner: Mutex::new(FaultEntries {
+                batch: plan
+                    .batch
+                    .iter()
+                    .map(|(w, n, f)| ((*w, *n), f.clone()))
+                    .collect(),
+                init: plan.init.iter().copied().collect(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, FaultEntries> {
+        // a panicking fault-injected worker must not poison the plan
+        // for every other worker
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The fault planned for worker `worker`'s `seq`th batch, if any;
+    /// removed so it fires once.
+    pub(crate) fn take_batch(&self, worker: usize, seq: u64) -> Option<Fault> {
+        self.lock().batch.remove(&(worker, seq))
+    }
+
+    /// Whether worker `worker`'s `incarnation`th init is planned to
+    /// fail; removed so it fires once.
+    pub(crate) fn take_init(&self, worker: usize, incarnation: u32) -> bool {
+        self.lock().init.remove(&(worker, incarnation))
+    }
+}
+
+/// Fault-handling policy for one service: restart and retry budgets,
+/// plus the optional injection plan. One field on
+/// [`super::ServiceConfig`] / [`super::NativeServiceConfig`];
+/// `Default` gives production behavior with chaos off.
+#[derive(Clone, Debug)]
+pub struct FaultPolicy {
+    /// Total worker restarts the supervisor may spend across the
+    /// service's lifetime. Once exhausted, the next worker death fails
+    /// the service fast: every pending and future request resolves
+    /// with a typed [`super::ServiceError::WorkerFailed`] instead of
+    /// hanging.
+    pub restart_budget: u32,
+    /// First restart backoff; doubles per restart of the same worker
+    /// slot (capped by [`backoff_cap`](Self::backoff_cap)).
+    pub backoff_base: Duration,
+    /// Upper bound on the exponential restart backoff.
+    pub backoff_cap: Duration,
+    /// Per-request execution attempt cap. A batch failing with
+    /// attempts left is split into single-request batches and retried
+    /// (so one poisoned example cannot take down its B−1 neighbors);
+    /// at the cap the requests fail typed.
+    pub max_attempts: u32,
+    /// Injected-fault schedule; `None` (the default) runs the exact
+    /// pre-fault-layer code path.
+    pub faults: Option<FaultPlan>,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            restart_budget: 3,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(500),
+            max_attempts: 2,
+            faults: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entries_fire_exactly_once() {
+        let plan = FaultPlan::new()
+            .on_batch(0, 3, Fault::Panic)
+            .fail_init(1, 2);
+        let state = FaultState::new(&plan);
+        assert_eq!(state.take_batch(0, 0), None);
+        assert_eq!(state.take_batch(1, 3), None);
+        assert_eq!(state.take_batch(0, 3), Some(Fault::Panic));
+        assert_eq!(state.take_batch(0, 3), None, "consumed");
+        assert!(!state.take_init(1, 0));
+        assert!(state.take_init(1, 2));
+        assert!(!state.take_init(1, 2), "consumed");
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_restart_bearing() {
+        let a = FaultPlan::seeded(42, 3, 20);
+        let b = FaultPlan::seeded(42, 3, 20);
+        assert_eq!(a, b, "same seed, same plan");
+        let c = FaultPlan::seeded(43, 3, 20);
+        assert_ne!(a, c, "different seed, different plan");
+        // exactly one init failure → the supervisor restart counter is
+        // deterministically nonzero under chaos
+        assert_eq!(a.init.len(), 1);
+        assert!(a.init[0].0 < 3);
+        assert!(!a.is_empty());
+        assert!(a.summary().contains("1 init-fail"), "{}", a.summary());
+    }
+
+    #[test]
+    fn seeded_seqs_stay_inside_the_horizon() {
+        let plan = FaultPlan::seeded(7, 2, 16);
+        for (w, n, _) in &plan.batch {
+            assert!(*w < 2);
+            assert!(*n < 16);
+        }
+        // degenerate inputs are clamped, not panics
+        let tiny = FaultPlan::seeded(7, 0, 0);
+        assert!(!tiny.is_empty());
+    }
+
+    #[test]
+    fn default_policy_is_chaos_off() {
+        let p = FaultPolicy::default();
+        assert!(p.faults.is_none());
+        assert_eq!(p.max_attempts, 2);
+        assert!(p.restart_budget > 0);
+        assert!(p.backoff_base <= p.backoff_cap);
+    }
+}

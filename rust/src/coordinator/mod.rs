@@ -17,20 +17,30 @@
 //!   ([`ServiceHandle::start_native`]), which serves norm-only
 //!   queries on a clean checkout without ever materializing a
 //!   gradient. This is the "DP gradient sidecar" shape a production
-//!   DP-training system deploys.
+//!   DP-training system deploys. The service is fault-tolerant by
+//!   construction: panic-contained workers, a supervisor with a
+//!   restart budget, per-request deadlines with pre-execution
+//!   shedding, bounded split-retry, and typed
+//!   [`ServiceError`] outcomes — every submitted request resolves in
+//!   bounded time under any fault.
+//! * [`fault`] — the deterministic fault-injection harness
+//!   ([`FaultPlan`]) and the service's fault-handling knobs
+//!   ([`FaultPolicy`]); off by default, zero-cost when off.
 //! * [`queue`] — the bounded MPMC queue (condvar-based; no tokio in
 //!   the vendor set) that gives the service backpressure.
 //! * [`checkpoint`] — flat-theta checkpoints with a json sidecar, so
 //!   training resumes bit-exactly (modulo the in-graph noise stream).
 
 pub mod checkpoint;
+pub mod fault;
 pub mod queue;
 pub mod service;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
+pub use fault::{Fault, FaultPlan, FaultPolicy};
 pub use queue::BoundedQueue;
 pub use service::{
-    GradRequest, GradResponse, NativeServiceConfig, ServiceConfig, ServiceHandle,
+    GradRequest, GradResponse, NativeServiceConfig, ServiceConfig, ServiceError, ServiceHandle,
 };
 pub use trainer::{TrainReport, Trainer};

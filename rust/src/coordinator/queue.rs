@@ -127,6 +127,14 @@ impl<T> BoundedQueue<T> {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Whether the queue has been closed. Lets producers distinguish a
+    /// rejected push (`Err`) caused by shutdown from one caused by a
+    /// full queue — the service maps the former to `ShuttingDown` and
+    /// the latter to `Overloaded`.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
 }
 
 #[cfg(test)]
@@ -205,6 +213,39 @@ mod tests {
         for c in churners {
             c.join().unwrap();
         }
+    }
+
+    /// Regression: a producer blocked in `push` on a full queue must
+    /// be released by `close()` — with its item handed back — instead
+    /// of sleeping forever on the `not_full` condvar. This is the
+    /// batch former's unblock path when the service fails fast.
+    #[test]
+    fn close_releases_blocked_push_with_item() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 1, "producer must be blocked on the full queue");
+        q.close();
+        assert_eq!(t.join().unwrap(), Err(2), "blocked push returns its item");
+        // the item queued before the close still drains
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    /// Regression: `try_push` after close is a clean rejection even
+    /// with free capacity, and `is_closed` reports the transition.
+    #[test]
+    fn try_push_after_close_rejected() {
+        let q = BoundedQueue::new(4);
+        assert!(!q.is_closed());
+        q.try_push(1).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.try_push(2), Err(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Per-example-gradient service: dynamic batching over an executor.
+//! Per-example-gradient service: dynamic batching over an executor,
+//! fault-tolerant by construction.
 //!
 //! The deployment shape of the paper's technique in a DP training
 //! platform: clients hand over single examples, and want back that
@@ -9,8 +10,9 @@
 //! * **pjrt** ([`ServiceHandle::start`]) — the original path: each
 //!   worker owns a PJRT registry (PJRT handles are `!Send`) and runs a
 //!   pre-lowered `grads` artifact, norms read off the materialized
-//!   rows. Static artifact shapes force exact-B batches, so partial
-//!   batches are padded and padded slots dropped on the way out.
+//!   rows. Static artifact shapes force exact-B batches, so the
+//!   executor pads partial batches (repeating the last example) and
+//!   drops the padded slots on the way out.
 //! * **native ghost-norm** ([`ServiceHandle::start_native`]) — the
 //!   norm-only query served natively: each worker runs
 //!   [`ghost::perex_norms`] over the formed batch, so per-example
@@ -24,17 +26,40 @@
 //! ```text
 //!   submit() ─▶ request queue (bounded, backpressure)
 //!                  │  batch former: flush at B requests
-//!                  ▼  or after max_wait
+//!                  ▼  or after max_wait; sheds expired
 //!              batch queue (bounded)
 //!                  │
 //!       ┌──────────┼──────────┐
 //!       ▼          ▼          ▼
-//!    worker 0   worker 1   worker 2
-//!       └──────────┴──────────┘
+//!    worker 0   worker 1   worker 2     ◀── supervisor (restarts,
+//!       └──────────┴──────────┘             restart budget, backoff)
 //!                  ▼
-//!           response table (+condvar), wait(id)
+//!           response table (+condvar), wait(id) / wait_timeout(id)
 //! ```
+//!
+//! **The fault contract.** Every submitted request resolves — `Ok` or
+//! a typed [`ServiceError`] — within bounded time, under any fault:
+//!
+//! * workers wrap batch execution in `catch_unwind`, so a panic fails
+//!   the batch typed instead of killing the thread and orphaning it;
+//! * a batch that fails with attempts left is split into single-slot
+//!   batches and retried ([`crate::coordinator::fault::FaultPolicy::max_attempts`]), so one
+//!   poisoned example cannot take down its B−1 neighbors' answers;
+//! * a supervisor thread joins dead workers and restarts them with
+//!   capped exponential backoff; once the restart budget is exhausted
+//!   it fails the service *fast* — every pending and future request
+//!   resolves with [`ServiceError::WorkerFailed`], nothing hangs;
+//! * per-request deadlines ([`ServiceHandle::submit_with_deadline`] +
+//!   [`ServiceHandle::wait_timeout`]) shed expired requests before
+//!   execution; [`ServiceHandle::try_submit`] gives non-blocking
+//!   admission control ([`ServiceError::Overloaded`]);
+//! * the deterministic fault-injection hook
+//!   ([`crate::coordinator::fault::FaultPlan`]) drives all of the
+//!   above in `tests/service_robustness.rs`; with no plan attached the
+//!   per-batch probe is one `Option` branch and the served answers are
+//!   bit-identical to the pre-fault-layer path.
 
+use crate::coordinator::fault::{Fault, FaultPolicy, FaultState};
 use crate::coordinator::queue::BoundedQueue;
 use crate::ghost::{self, ClippedStepPlanner, GhostMode};
 use crate::metrics;
@@ -42,9 +67,10 @@ use crate::models::ModelSpec;
 use crate::runtime::{HostValue, Registry};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// One example submitted for per-example gradient evaluation.
@@ -69,6 +95,58 @@ pub struct GradResponse {
     pub latency: Duration,
 }
 
+/// Typed request outcome errors — the service's failure vocabulary.
+///
+/// Every submit/wait API returns one of these instead of a stringly
+/// error, so callers can branch on the failure shape (shed vs retry-
+/// exhausted vs shutdown) instead of parsing messages.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Non-blocking admission ([`ServiceHandle::try_submit`]) found
+    /// the request queue full. Back off and retry, or shed load.
+    Overloaded,
+    /// The request's deadline passed before an answer was produced —
+    /// either shed by the batch former pre-execution, or the waiter
+    /// gave up in [`ServiceHandle::wait_timeout`].
+    DeadlineExceeded,
+    /// Execution failed after `attempts` attempts (panic, executor
+    /// error, or worker death), or the supervisor's restart budget ran
+    /// out and the service failed fast.
+    WorkerFailed {
+        /// Execution attempts spent on this request (or, for the
+        /// budget-exhaustion blanket error, supervisor restarts spent).
+        attempts: u32,
+        /// Last underlying failure, for logs — not for branching.
+        detail: String,
+    },
+    /// The service is shutting down and no longer admits requests.
+    ShuttingDown,
+    /// The request was rejected at the door (e.g. wrong image size)
+    /// and never entered the pipeline.
+    InvalidRequest(String),
+    /// [`ServiceHandle::wait`] was asked about an id that was never
+    /// issued by [`ServiceHandle::submit`] — waiting on it would hang
+    /// forever, so it is rejected immediately.
+    UnknownId(u64),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Overloaded => write!(f, "service overloaded: request queue is full"),
+            ServiceError::DeadlineExceeded => write!(f, "request deadline exceeded"),
+            ServiceError::WorkerFailed { attempts, detail } => {
+                write!(f, "worker failed after {attempts} attempt(s): {detail}")
+            }
+            ServiceError::ShuttingDown => write!(f, "service is shutting down"),
+            ServiceError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            ServiceError::UnknownId(id) => write!(f, "request id {id} was never issued"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
 /// PJRT service parameters.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -82,6 +160,8 @@ pub struct ServiceConfig {
     pub max_wait: Duration,
     /// Request-queue capacity (backpressure bound).
     pub queue_capacity: usize,
+    /// Fault handling: restart/retry budgets, optional injection plan.
+    pub policy: FaultPolicy,
 }
 
 impl Default for ServiceConfig {
@@ -92,6 +172,7 @@ impl Default for ServiceConfig {
             workers: 2,
             max_wait: Duration::from_millis(20),
             queue_capacity: 256,
+            policy: FaultPolicy::default(),
         }
     }
 }
@@ -117,6 +198,8 @@ pub struct NativeServiceConfig {
     pub max_wait: Duration,
     /// Request-queue capacity (backpressure bound).
     pub queue_capacity: usize,
+    /// Fault handling: restart/retry budgets, optional injection plan.
+    pub policy: FaultPolicy,
 }
 
 /// What a worker thread needs to build its executor. One clone per
@@ -136,34 +219,118 @@ enum WorkerSpec {
     },
 }
 
+// Service lifecycle states (Shared::state).
+const RUNNING: usize = 0;
+const CLOSING: usize = 1;
+const FAILED: usize = 2;
+
+/// Response table state under the one mutex.
+#[derive(Default)]
+struct PendingState {
+    /// Finished requests awaiting their waiter.
+    done: HashMap<u64, Result<GradResponse, ServiceError>>,
+    /// Ids whose waiter timed out in `wait_timeout` — a late answer
+    /// is dropped instead of leaking an entry nobody will collect.
+    abandoned: HashSet<u64>,
+    /// Set once when the service fails fast (restart budget
+    /// exhausted): the blanket answer for every id not in `done`.
+    failed: Option<ServiceError>,
+}
+
 struct PendingTable {
-    done: Mutex<HashMap<u64, Result<GradResponse, String>>>,
+    state: Mutex<PendingState>,
     cv: Condvar,
+}
+
+impl Default for PendingTable {
+    fn default() -> Self {
+        PendingTable {
+            state: Mutex::new(PendingState::default()),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl PendingTable {
+    /// Lock with poison recovery: a panicking worker (pre-
+    /// `catch_unwind` eras, or a panic in an unwind-unsafe corner)
+    /// must not cascade panics into every waiting client. The state is
+    /// a plain map of finished answers — always consistent between
+    /// statements — so recovering the guard is sound.
+    fn lock(&self) -> MutexGuard<'_, PendingState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Fail-fast switch: every current and future waiter whose id has
+    /// no `done` entry resolves with `err`.
+    fn fail_all(&self, err: ServiceError) {
+        let mut g = self.lock();
+        if g.failed.is_none() {
+            g.failed = Some(err);
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    fn failed_error(&self) -> Option<ServiceError> {
+        self.lock().failed.clone()
+    }
 }
 
 struct QueuedRequest {
     id: u64,
     req: GradRequest,
     enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+/// One request's place in a formed batch.
+#[derive(Clone)]
+struct Slot {
+    id: u64,
+    enqueued: Instant,
+    deadline: Option<Instant>,
 }
 
 struct Batch {
-    /// (request id, enqueue time) per real slot; padded slots absent.
-    slots: Vec<(u64, Instant)>,
+    slots: Vec<Slot>,
     x: Vec<f32>,
     y: Vec<i32>,
+    /// Execution attempts already spent on these slots (0 = fresh).
+    attempts: u32,
 }
 
-/// Handle to a running service; dropping it shuts the workers down.
-pub struct ServiceHandle {
-    label: String,
+/// Everything the pipeline threads share.
+struct Shared {
+    /// RUNNING → CLOSING (shutdown) or FAILED (budget exhausted).
+    state: AtomicUsize,
     /// Flat length every submitted image must have (C·H·W).
     example_len: usize,
+    /// Per-request execution attempt cap (from the policy, min 1).
+    max_attempts: u32,
+    requests: BoundedQueue<QueuedRequest>,
+    batches: BoundedQueue<Batch>,
+    pending: PendingTable,
+    /// Per worker slot: cumulative batches popped, counted across
+    /// restarts — the `FaultPlan`'s batch-sequence key.
+    batch_seq: Vec<AtomicU64>,
+    /// Injected-fault store; `None` (production) costs one branch.
+    faults: Option<FaultState>,
+    shed: Arc<metrics::Counter>,
+    retries: Arc<metrics::Counter>,
+    worker_failures: Arc<metrics::Counter>,
+}
+
+/// Handle to a running service; [`shutdown`](ServiceHandle::shutdown)
+/// joins every thread (supervisor and workers included).
+pub struct ServiceHandle {
+    label: String,
     theta: Arc<Vec<f32>>,
-    requests: Arc<BoundedQueue<QueuedRequest>>,
-    pending: Arc<PendingTable>,
+    shared: Arc<Shared>,
     next_id: AtomicU64,
-    /// Service metrics (queue depth, batch sizes, latency).
+    /// Service metrics (queue depth, batch sizes, latency, fault
+    /// counters: `service.shed` / `service.retries` /
+    /// `service.worker_failures` / `service.worker_restarts`).
     pub metrics: Arc<metrics::Registry>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
@@ -199,10 +366,10 @@ impl ServiceHandle {
             format!("pjrt:{}", cfg.artifact),
             batch,
             example_len,
-            true, // static artifact shapes need exact-B batches
             cfg.workers,
             cfg.max_wait,
             cfg.queue_capacity,
+            cfg.policy,
             WorkerSpec::Pjrt {
                 artifacts_dir: cfg.artifacts_dir,
                 artifact: cfg.artifact,
@@ -230,10 +397,10 @@ impl ServiceHandle {
             format!("native:ghostnorm:{}", cfg.model.arch),
             cfg.batch,
             c * h * w,
-            false, // the ghost engine takes any batch size
             cfg.workers,
             cfg.max_wait,
             cfg.queue_capacity,
+            cfg.policy,
             WorkerSpec::Native {
                 model: cfg.model,
                 threads: cfg.threads,
@@ -249,105 +416,88 @@ impl ServiceHandle {
         label: String,
         batch: usize,
         example_len: usize,
-        pad: bool,
         workers: usize,
         max_wait: Duration,
         queue_capacity: usize,
+        policy: FaultPolicy,
         wspec: WorkerSpec,
         theta: Vec<f32>,
     ) -> Result<ServiceHandle> {
-        let requests: Arc<BoundedQueue<QueuedRequest>> =
-            Arc::new(BoundedQueue::new(queue_capacity));
-        let batches: Arc<BoundedQueue<Batch>> = Arc::new(BoundedQueue::new(workers.max(1) * 2));
-        let pending = Arc::new(PendingTable {
-            done: Mutex::new(HashMap::new()),
-            cv: Condvar::new(),
-        });
+        let workers = workers.max(1);
         let metrics = Arc::new(metrics::Registry::default());
         let theta = Arc::new(theta);
+        let shared = Arc::new(Shared {
+            state: AtomicUsize::new(RUNNING),
+            example_len,
+            max_attempts: policy.max_attempts.max(1),
+            requests: BoundedQueue::new(queue_capacity),
+            // `+ batch` of slack so one failing full batch can always
+            // split into singles without tripping the retry-shed path
+            batches: BoundedQueue::new(workers * 2 + batch),
+            pending: PendingTable::default(),
+            batch_seq: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            faults: policy.faults.as_ref().map(FaultState::new),
+            shed: metrics.counter("service.shed"),
+            retries: metrics.counter("service.retries"),
+            worker_failures: metrics.counter("service.worker_failures"),
+        });
+        let restarts = metrics.counter("service.worker_restarts");
+        // sized so worker exit reports never block: one slot per
+        // possible worker life (initial spawns + restart budget)
+        let events: Arc<BoundedQueue<WorkerEvent>> = Arc::new(BoundedQueue::new(
+            workers + policy.restart_budget as usize + 4,
+        ));
 
         let mut threads = Vec::new();
 
         // --- batch former -------------------------------------------------
         {
-            let requests = requests.clone();
-            let batches = batches.clone();
-            let batch_gauge = metrics.histogram("service.batch_fill");
+            let shared = shared.clone();
+            let batch_fill = metrics.histogram("service.batch_fill");
             threads.push(
                 std::thread::Builder::new()
                     .name("batch-former".into())
-                    .spawn(move || {
-                        loop {
-                            // block for the batch head…
-                            let Some(first) = requests.pop() else {
-                                break;
-                            };
-                            let deadline = Instant::now() + max_wait;
-                            let mut got = vec![first];
-                            // …then fill until B or deadline
-                            while got.len() < batch {
-                                let left = deadline.saturating_duration_since(Instant::now());
-                                if left.is_zero() {
-                                    break;
-                                }
-                                match requests.pop_timeout(left) {
-                                    Ok(Some(r)) => got.push(r),
-                                    Ok(None) => break, // timed out
-                                    Err(()) => break,  // closed: flush what we have
-                                }
-                            }
-                            batch_gauge.observe_secs(got.len() as f64 / batch as f64);
-                            let mut slots = Vec::with_capacity(got.len());
-                            let mut x = Vec::with_capacity(batch * example_len);
-                            let mut y = Vec::with_capacity(batch);
-                            for q in &got {
-                                slots.push((q.id, q.enqueued));
-                                x.extend_from_slice(&q.req.image);
-                                y.push(q.req.label);
-                            }
-                            if pad {
-                                // static shapes: repeat the last example;
-                                // padded slots are dropped on the way out
-                                while y.len() < batch {
-                                    let last = &got.last().unwrap().req;
-                                    x.extend_from_slice(&last.image);
-                                    y.push(last.label);
-                                }
-                            }
-                            if batches.push(Batch { slots, x, y }).is_err() {
-                                break;
-                            }
-                        }
-                        batches.close();
-                    })
+                    .spawn(move || run_batch_former(&shared, batch, max_wait, &batch_fill))
                     .expect("spawning batch former"),
             );
         }
 
-        // --- workers -------------------------------------------------------
-        for worker_id in 0..workers.max(1) {
-            let batches = batches.clone();
-            let pending = pending.clone();
-            let theta = theta.clone();
-            let wspec = wspec.clone();
-            let exec_hist = metrics.histogram(&format!("service.worker{worker_id}.exec_secs"));
-            let served = metrics.counter(&format!("service.worker{worker_id}.served"));
+        // --- workers + supervisor -----------------------------------------
+        let spawner = WorkerSpawner {
+            wspec,
+            theta: theta.clone(),
+            shared: shared.clone(),
+            events: events.clone(),
+            metrics: metrics.clone(),
+        };
+        let handles: Vec<Option<std::thread::JoinHandle<()>>> =
+            (0..workers).map(|w| Some(spawner.spawn(w, 0))).collect();
+        {
+            let sup = Supervisor {
+                shared: shared.clone(),
+                spawner,
+                handles,
+                incarnation: vec![0; workers],
+                per_worker: vec![0; workers],
+                used: 0,
+                live: workers,
+                budget: policy.restart_budget,
+                backoff_base: policy.backoff_base,
+                backoff_cap: policy.backoff_cap,
+                restarts,
+            };
             threads.push(
                 std::thread::Builder::new()
-                    .name(format!("grad-worker-{worker_id}"))
-                    .spawn(move || {
-                        run_worker(worker_id, wspec, &theta, &batches, &pending, exec_hist, served)
-                    })
-                    .expect("spawning grad worker"),
+                    .name("service-supervisor".into())
+                    .spawn(move || sup.run(&events))
+                    .expect("spawning service supervisor"),
             );
         }
 
         Ok(ServiceHandle {
             label,
-            example_len,
             theta,
-            requests,
-            pending,
+            shared,
             next_id: AtomicU64::new(0),
             metrics,
             threads,
@@ -360,12 +510,18 @@ impl ServiceHandle {
     }
 
     /// One unified metrics snapshot: the service's own registry
-    /// (queue depth, batch fill, per-worker latency histograms)
-    /// followed by the process-global registry
-    /// ([`metrics::global_snapshot`]) — the backward counters
+    /// (queue-depth gauges refreshed here, batch fill, fault counters,
+    /// per-worker latency histograms) followed by the process-global
+    /// registry ([`metrics::global_snapshot`]) — the backward counters
     /// (`backward.*`) and the allocation-ledger gauges — so callers
     /// never have to stitch the two views together.
     pub fn metrics_snapshot(&self) -> String {
+        self.metrics
+            .gauge("service.queue_depth")
+            .set(self.shared.requests.len() as f64);
+        self.metrics
+            .gauge("service.batch_queue_depth")
+            .set(self.shared.batches.len() as f64);
         format!("{}{}", self.metrics.snapshot(), metrics::global_snapshot())
     }
 
@@ -378,173 +534,818 @@ impl ServiceHandle {
     /// Blocks when the request queue is full (backpressure).
     ///
     /// A wrong-sized image is rejected here — past this point it
-    /// would only surface as a shape panic inside a worker, leaving
-    /// the whole batch waiting forever.
-    pub fn submit(&self, req: GradRequest) -> Result<u64> {
-        if req.image.len() != self.example_len {
-            bail!(
+    /// would only surface as a shape failure inside a worker, costing
+    /// the whole batch an execution attempt.
+    pub fn submit(&self, req: GradRequest) -> Result<u64, ServiceError> {
+        self.enqueue(req, None, true)
+    }
+
+    /// Non-blocking admission control: like
+    /// [`submit`](Self::submit), but a full request queue returns
+    /// [`ServiceError::Overloaded`] immediately instead of blocking
+    /// the caller — the load-shedding entry point.
+    pub fn try_submit(&self, req: GradRequest) -> Result<u64, ServiceError> {
+        self.enqueue(req, None, false)
+    }
+
+    /// Submit with a deadline `budget` from now. If the deadline
+    /// passes before the request executes, the batch former sheds it
+    /// pre-execution and its waiter gets
+    /// [`ServiceError::DeadlineExceeded`]; pair with
+    /// [`wait_timeout`](Self::wait_timeout) to also bound the wait.
+    pub fn submit_with_deadline(
+        &self,
+        req: GradRequest,
+        budget: Duration,
+    ) -> Result<u64, ServiceError> {
+        self.enqueue(req, Some(Instant::now() + budget), true)
+    }
+
+    fn enqueue(
+        &self,
+        req: GradRequest,
+        deadline: Option<Instant>,
+        blocking: bool,
+    ) -> Result<u64, ServiceError> {
+        if req.image.len() != self.shared.example_len {
+            return Err(ServiceError::InvalidRequest(format!(
                 "request image has {} values, model expects {}",
                 req.image.len(),
-                self.example_len
-            );
+                self.shared.example_len
+            )));
+        }
+        match self.shared.state.load(Ordering::Relaxed) {
+            CLOSING => return Err(ServiceError::ShuttingDown),
+            FAILED => return Err(self.failed_error()),
+            _ => {}
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.requests
-            .push(QueuedRequest {
-                id,
-                req,
-                enqueued: Instant::now(),
-            })
-            .map_err(|_| anyhow::anyhow!("service is shut down"))?;
-        Ok(id)
+        let q = QueuedRequest {
+            id,
+            req,
+            enqueued: Instant::now(),
+            deadline,
+        };
+        let accepted = if blocking {
+            self.shared.requests.push(q).is_ok()
+        } else {
+            self.shared.requests.try_push(q).is_ok()
+        };
+        if accepted {
+            return Ok(id);
+        }
+        if self.shared.requests.is_closed() {
+            match self.shared.state.load(Ordering::Relaxed) {
+                FAILED => Err(self.failed_error()),
+                _ => Err(ServiceError::ShuttingDown),
+            }
+        } else {
+            Err(ServiceError::Overloaded)
+        }
+    }
+
+    fn failed_error(&self) -> ServiceError {
+        self.shared
+            .pending
+            .failed_error()
+            .unwrap_or(ServiceError::ShuttingDown)
     }
 
     /// Block until request `id` completes.
-    pub fn wait(&self, id: u64) -> Result<GradResponse> {
-        let mut done = self.pending.done.lock().unwrap();
+    ///
+    /// An id that was never issued is rejected immediately with
+    /// [`ServiceError::UnknownId`] — waiting on it would hang forever.
+    /// If the service has failed fast, the stored failure answers
+    /// instead of blocking.
+    pub fn wait(&self, id: u64) -> Result<GradResponse, ServiceError> {
+        if id >= self.next_id.load(Ordering::Relaxed) {
+            return Err(ServiceError::UnknownId(id));
+        }
+        let mut g = self.shared.pending.lock();
         loop {
-            if let Some(res) = done.remove(&id) {
-                return res.map_err(|e| anyhow::anyhow!(e));
+            if let Some(res) = g.done.remove(&id) {
+                return res;
             }
-            done = self.pending.cv.wait(done).unwrap();
+            if let Some(err) = &g.failed {
+                return Err(err.clone());
+            }
+            g = self
+                .shared
+                .pending
+                .cv
+                .wait(g)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Like [`wait`](Self::wait), but give up after `timeout`: the id
+    /// is marked abandoned (a late answer is dropped, not leaked) and
+    /// [`ServiceError::DeadlineExceeded`] is returned. Guarantees the
+    /// caller resolves in bounded time no matter what the pipeline
+    /// does.
+    pub fn wait_timeout(&self, id: u64, timeout: Duration) -> Result<GradResponse, ServiceError> {
+        if id >= self.next_id.load(Ordering::Relaxed) {
+            return Err(ServiceError::UnknownId(id));
+        }
+        let deadline = Instant::now() + timeout;
+        let mut g = self.shared.pending.lock();
+        loop {
+            if let Some(res) = g.done.remove(&id) {
+                return res;
+            }
+            if let Some(err) = &g.failed {
+                return Err(err.clone());
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                g.abandoned.insert(id);
+                return Err(ServiceError::DeadlineExceeded);
+            }
+            let (guard, _timed_out) = self
+                .shared
+                .pending
+                .cv
+                .wait_timeout(g, left)
+                .unwrap_or_else(|p| p.into_inner());
+            g = guard;
         }
     }
 
     /// Convenience: submit a whole slice and wait for every answer,
     /// preserving order.
-    pub fn submit_all(&self, reqs: &[GradRequest]) -> Result<Vec<GradResponse>> {
+    pub fn submit_all(&self, reqs: &[GradRequest]) -> Result<Vec<GradResponse>, ServiceError> {
         let ids: Vec<u64> = reqs
             .iter()
             .map(|r| self.submit(r.clone()))
-            .collect::<Result<_>>()?;
+            .collect::<Result<_, ServiceError>>()?;
         ids.into_iter().map(|id| self.wait(id)).collect()
     }
 
-    /// Drain and stop all threads.
+    /// Drain and stop all threads (batch former, supervisor, and —
+    /// through the supervisor — every worker).
     pub fn shutdown(mut self) {
-        self.requests.close();
-        // batch former closes `batches` on its way out
+        let _ = self.shared.state.compare_exchange(
+            RUNNING,
+            CLOSING,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+        self.shared.requests.close();
+        // batch former closes `batches` on its way out; the
+        // supervisor joins workers as they drain and exit
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
 }
 
-/// One executor thread: build the backend this worker owns, then
-/// serve batches until the queue closes.
+// ---------------------------------------------------------------------------
+// batch former
+// ---------------------------------------------------------------------------
+
+/// Pop requests, form batches of up to `batch` (flushing after
+/// `max_wait`), shed already-expired requests pre-execution, push to
+/// the batch queue. Exits when the request queue closes (shutdown) or
+/// the batch queue closes under it (service failure).
+fn run_batch_former(
+    shared: &Shared,
+    batch: usize,
+    max_wait: Duration,
+    batch_fill: &metrics::Histogram,
+) {
+    loop {
+        // block for the batch head…
+        let Some(first) = shared.requests.pop() else {
+            break;
+        };
+        let Some(first) = admit(shared, first) else {
+            continue;
+        };
+        let flush_at = Instant::now() + max_wait;
+        let mut got = vec![first];
+        // …then fill until B or deadline
+        while got.len() < batch {
+            let left = flush_at.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match shared.requests.pop_timeout(left) {
+                Ok(Some(r)) => {
+                    if let Some(r) = admit(shared, r) {
+                        got.push(r);
+                    }
+                }
+                Ok(None) => break, // timed out
+                Err(()) => break,  // closed: flush what we have
+            }
+        }
+        batch_fill.observe_secs(got.len() as f64 / batch as f64);
+        let mut slots = Vec::with_capacity(got.len());
+        let mut x = Vec::with_capacity(got.len() * shared.example_len);
+        let mut y = Vec::with_capacity(got.len());
+        for q in got {
+            slots.push(Slot {
+                id: q.id,
+                enqueued: q.enqueued,
+                deadline: q.deadline,
+            });
+            x.extend_from_slice(&q.req.image);
+            y.push(q.req.label);
+        }
+        let b = Batch {
+            slots,
+            x,
+            y,
+            attempts: 0,
+        };
+        if shared.batches.push(b).is_err() {
+            // batch queue closed under us: the service failed fast and
+            // `pending.failed` already answers these slots' waiters
+            break;
+        }
+    }
+    shared.batches.close();
+}
+
+/// Deadline gate at batch formation: an expired request is shed —
+/// completed with [`ServiceError::DeadlineExceeded`] — instead of
+/// wasting an executor slot on an answer nobody will take.
+fn admit(shared: &Shared, q: QueuedRequest) -> Option<QueuedRequest> {
+    if !q.deadline.is_some_and(|d| d <= Instant::now()) {
+        return Some(q);
+    }
+    shared.shed.inc();
+    let mut g = shared.pending.lock();
+    if !g.abandoned.remove(&q.id) {
+        g.done.insert(q.id, Err(ServiceError::DeadlineExceeded));
+    }
+    drop(g);
+    shared.pending.cv.notify_all();
+    None
+}
+
+// ---------------------------------------------------------------------------
+// workers
+// ---------------------------------------------------------------------------
+
+/// Why a worker thread ended — its exit report to the supervisor.
+enum ExitReason {
+    /// Batch queue closed and drained: normal shutdown.
+    Clean,
+    /// The worker died mid-stream (injected death, or an exit the
+    /// liveness sweep had to synthesize a report for).
+    Crashed(String),
+    /// Executor construction failed; no batch was ever served.
+    InitFailed(String),
+}
+
+struct WorkerEvent {
+    worker: usize,
+    reason: ExitReason,
+}
+
+/// Everything needed to (re)spawn a worker thread — the supervisor
+/// holds one to restart dead workers.
+struct WorkerSpawner {
+    wspec: WorkerSpec,
+    theta: Arc<Vec<f32>>,
+    shared: Arc<Shared>,
+    events: Arc<BoundedQueue<WorkerEvent>>,
+    metrics: Arc<metrics::Registry>,
+}
+
+impl WorkerSpawner {
+    fn spawn(&self, worker_id: usize, incarnation: u32) -> std::thread::JoinHandle<()> {
+        let exec_hist = self
+            .metrics
+            .histogram(&format!("service.worker{worker_id}.exec_secs"));
+        let served = self.metrics.counter(&format!("service.worker{worker_id}.served"));
+        let wspec = self.wspec.clone();
+        let theta = self.theta.clone();
+        let shared = self.shared.clone();
+        let events = self.events.clone();
+        std::thread::Builder::new()
+            .name(format!("grad-worker-{worker_id}"))
+            .spawn(move || {
+                let reason =
+                    run_worker(worker_id, incarnation, &wspec, &theta, &shared, &exec_hist, &served);
+                // sized to the worker-life count, so this never fills;
+                // if it somehow did, the liveness sweep synthesizes
+                // the report from the finished join handle
+                let _ = events.try_push(WorkerEvent {
+                    worker: worker_id,
+                    reason,
+                });
+            })
+            .expect("spawning grad worker")
+    }
+}
+
+/// The executor a worker owns: built once per incarnation, runs one
+/// batch at a time. Padding for static PJRT shapes happens *here*
+/// (repeat the last example, drop padded slots on the way out), so a
+/// retried single-slot batch re-pads uniformly.
+enum Executor {
+    Pjrt {
+        registry: Registry,
+        artifact: String,
+        x_shape: Vec<usize>,
+        batch: usize,
+        example_len: usize,
+        theta_v: HostValue,
+    },
+    Native {
+        planner: ClippedStepPlanner,
+        threads: usize,
+        shape: (usize, usize, usize),
+        theta: Arc<Vec<f32>>,
+    },
+}
+
+impl Executor {
+    fn build(wspec: &WorkerSpec, theta: &Arc<Vec<f32>>, example_len: usize) -> Result<Executor> {
+        match wspec {
+            WorkerSpec::Pjrt {
+                artifacts_dir,
+                artifact,
+                x_shape,
+            } => {
+                // each worker owns its registry: PJRT handles are not
+                // Send, and this gives compile-once execute-many per
+                // thread.
+                let registry = Registry::open(artifacts_dir)?;
+                let theta_v = HostValue::f32(&[theta.len()], theta.to_vec());
+                Ok(Executor::Pjrt {
+                    registry,
+                    artifact: artifact.clone(),
+                    batch: x_shape[0],
+                    x_shape: x_shape.clone(),
+                    example_len,
+                    theta_v,
+                })
+            }
+            WorkerSpec::Native {
+                model,
+                threads,
+                mode,
+                inner_parallel,
+            } => {
+                let planner =
+                    ClippedStepPlanner::new(model, mode)?.with_inner_parallel(*inner_parallel);
+                Ok(Executor::Native {
+                    planner,
+                    threads: *threads,
+                    shape: model.input_shape,
+                    theta: theta.clone(),
+                })
+            }
+        }
+    }
+
+    /// Run one batch to `(norms, losses)` for its real slots. Every
+    /// failure — executor error, short/mistyped output — comes back as
+    /// `Err(detail)`; nothing in here is allowed to index past what
+    /// the executor actually returned.
+    fn run(&self, b: &Batch) -> Result<(Vec<f32>, Vec<f32>), String> {
+        match self {
+            Executor::Pjrt {
+                registry,
+                artifact,
+                x_shape,
+                batch,
+                example_len,
+                theta_v,
+            } => {
+                let n = b.y.len();
+                let mut x = b.x.clone();
+                let mut y = b.y.clone();
+                // static shapes: pad by repeating the last real
+                // example; padded slots are dropped below
+                while y.len() < *batch {
+                    x.extend_from_within((n - 1) * example_len..n * example_len);
+                    y.push(y[n - 1]);
+                }
+                let xv = HostValue::f32(x_shape, x);
+                let yv = HostValue::i32(&[y.len()], y);
+                let out = registry
+                    .run(artifact, &[theta_v.clone(), xv, yv])
+                    .map_err(|e| format!("{e:#}"))?;
+                if out.len() < 2 {
+                    return Err(format!("artifact returned {} outputs, want 2", out.len()));
+                }
+                // out[0]: (B, P) per-example grads, out[1]: (B,) losses
+                let grads = out[0].as_f32().map_err(|e| format!("grads output: {e:#}"))?;
+                let losses = out[1].as_f32().map_err(|e| format!("losses output: {e:#}"))?;
+                if losses.len() < n || grads.len() % losses.len().max(1) != 0 {
+                    return Err(format!(
+                        "artifact output shape mismatch: {} grads / {} losses for {} requests",
+                        grads.len(),
+                        losses.len(),
+                        n
+                    ));
+                }
+                let p = grads.len() / losses.len();
+                let norms: Vec<f32> = (0..n)
+                    .map(|slot| crate::tensor::l2_norm(&grads[slot * p..(slot + 1) * p]))
+                    .collect();
+                Ok((norms, losses[..n].to_vec()))
+            }
+            Executor::Native {
+                planner,
+                threads,
+                shape,
+                theta,
+            } => {
+                let n = b.y.len();
+                let (c, h, w) = *shape;
+                let xt = Tensor::from_vec(&[n, c, h, w], b.x.clone());
+                ghost::perex_norms(planner, theta, &xt, &b.y, *threads)
+                    .map_err(|e| format!("{e:#}"))
+            }
+        }
+    }
+}
+
+/// One executor thread life: build the backend this worker owns, then
+/// serve batches until the queue closes, a planned death fires, or
+/// init fails. Batch execution is panic-contained; the return value is
+/// the exit report the spawner pushes to the supervisor.
 fn run_worker(
     worker_id: usize,
-    wspec: WorkerSpec,
-    theta: &[f32],
-    batches: &BoundedQueue<Batch>,
-    pending: &PendingTable,
-    exec_hist: Arc<metrics::Histogram>,
-    served: Arc<metrics::Counter>,
-) {
-    match wspec {
-        WorkerSpec::Pjrt {
-            artifacts_dir,
-            artifact,
-            x_shape,
-        } => {
-            // each worker owns its registry: PJRT handles are not
-            // Send, and this gives compile-once execute-many per
-            // thread.
-            let registry = match Registry::open(&artifacts_dir) {
-                Ok(r) => r,
-                Err(e) => {
-                    complete_all(pending, batches, format!("worker init: {e:#}"));
-                    return;
-                }
-            };
-            let theta_v = HostValue::f32(&[theta.len()], theta.to_vec());
-            while let Some(b) = batches.pop() {
-                let t0 = Instant::now();
-                let xv = HostValue::f32(&x_shape, b.x);
-                let yv = HostValue::i32(&[b.y.len()], b.y);
-                let result = registry.run(&artifact, &[theta_v.clone(), xv, yv]);
-                exec_hist.observe_secs(t0.elapsed().as_secs_f64());
-                let answers = result.map(|out| {
-                    // out[0]: (B, P) per-example grads, out[1]: (B,) losses
-                    let grads = out[0].as_f32().unwrap();
-                    let losses = out[1].as_f32().unwrap();
-                    let p = grads.len() / losses.len();
-                    let norms: Vec<f32> = (0..losses.len())
-                        .map(|slot| crate::tensor::l2_norm(&grads[slot * p..(slot + 1) * p]))
-                        .collect();
-                    (norms, losses.to_vec())
-                });
-                complete_batch(pending, &b.slots, worker_id, answers, &served);
-            }
+    incarnation: u32,
+    wspec: &WorkerSpec,
+    theta: &Arc<Vec<f32>>,
+    shared: &Shared,
+    exec_hist: &metrics::Histogram,
+    served: &metrics::Counter,
+) -> ExitReason {
+    if let Some(f) = &shared.faults {
+        if f.take_init(worker_id, incarnation) {
+            return ExitReason::InitFailed("injected init failure".into());
         }
-        WorkerSpec::Native {
-            model,
-            threads,
-            mode,
-            inner_parallel,
-        } => {
-            let planner = match ClippedStepPlanner::new(&model, &mode) {
-                Ok(p) => p.with_inner_parallel(inner_parallel),
-                Err(e) => {
-                    complete_all(pending, batches, format!("worker init: {e:#}"));
-                    return;
-                }
-            };
-            let (c, h, w) = model.input_shape;
-            while let Some(b) = batches.pop() {
-                let t0 = Instant::now();
-                let n = b.y.len();
-                let xt = Tensor::from_vec(&[n, c, h, w], b.x);
-                let result = ghost::perex_norms(&planner, theta, &xt, &b.y, threads)
-                    .map_err(|e| anyhow::anyhow!("{e:#}"));
-                exec_hist.observe_secs(t0.elapsed().as_secs_f64());
-                complete_batch(pending, &b.slots, worker_id, result, &served);
+    }
+    let exec = match Executor::build(wspec, theta, shared.example_len) {
+        Ok(e) => e,
+        Err(e) => return ExitReason::InitFailed(format!("worker init: {e:#}")),
+    };
+    loop {
+        let Some(b) = shared.batches.pop() else {
+            return ExitReason::Clean;
+        };
+        let seq = shared.batch_seq[worker_id].fetch_add(1, Ordering::Relaxed);
+        let mut fault = shared.faults.as_ref().and_then(|f| f.take_batch(worker_id, seq));
+        if let Some(Fault::Delay(d)) = fault {
+            std::thread::sleep(d);
+            fault = None; // a delayed batch then executes normally
+        }
+        let die = matches!(fault, Some(Fault::Die));
+        let t0 = Instant::now();
+        let outcome = match fault {
+            Some(Fault::Error) => Err("injected executor error".to_string()),
+            Some(Fault::Die) => Err("injected worker death".to_string()),
+            _ => run_contained(&exec, &b, matches!(fault, Some(Fault::Panic))),
+        };
+        exec_hist.observe_secs(t0.elapsed().as_secs_f64());
+        match outcome {
+            Ok((norms, losses))
+                if norms.len() >= b.slots.len() && losses.len() >= b.slots.len() =>
+            {
+                complete_ok(shared, &b, worker_id, &norms, &losses, served);
             }
+            Ok((norms, losses)) => {
+                // guarded here so a short executor output fails the
+                // batch typed instead of panicking on `norms[slot]`
+                let detail = format!(
+                    "executor returned {} norms / {} losses for {} requests",
+                    norms.len(),
+                    losses.len(),
+                    b.slots.len()
+                );
+                handle_failure(shared, b, detail);
+            }
+            Err(detail) => handle_failure(shared, b, detail),
+        }
+        if die {
+            return ExitReason::Crashed("injected worker death".into());
         }
     }
 }
 
-/// Publish one batch's answers (or its shared error) and wake waiters.
-fn complete_batch(
-    pending: &PendingTable,
-    slots: &[(u64, Instant)],
+/// Panic containment around one batch execution: a panic (injected or
+/// real — a shape bug, an index out of range) fails the *batch*, not
+/// the worker thread.
+fn run_contained(exec: &Executor, b: &Batch, inject_panic: bool) -> Result<(Vec<f32>, Vec<f32>), String> {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        if inject_panic {
+            panic!("injected worker panic");
+        }
+        exec.run(b)
+    }));
+    match result {
+        Ok(r) => r,
+        Err(payload) => Err(format!("worker panicked: {}", panic_message(&payload))),
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Publish one batch's answers and wake waiters. Caller guarantees
+/// `norms`/`losses` cover every slot.
+fn complete_ok(
+    shared: &Shared,
+    b: &Batch,
     worker_id: usize,
-    answers: Result<(Vec<f32>, Vec<f32>), anyhow::Error>,
+    norms: &[f32],
+    losses: &[f32],
     served: &metrics::Counter,
 ) {
-    let mut done = pending.done.lock().unwrap();
-    match answers {
-        Ok((norms, losses)) => {
-            for (slot, (id, enq)) in slots.iter().enumerate() {
-                done.insert(
-                    *id,
-                    Ok(GradResponse {
-                        grad_norm: norms[slot],
-                        loss: losses[slot],
-                        worker: worker_id,
-                        latency: enq.elapsed(),
-                    }),
-                );
-                served.inc();
+    let mut g = shared.pending.lock();
+    for (slot_idx, slot) in b.slots.iter().enumerate() {
+        if g.abandoned.remove(&slot.id) {
+            continue; // waiter already timed out; drop the late answer
+        }
+        g.done.insert(
+            slot.id,
+            Ok(GradResponse {
+                grad_norm: norms[slot_idx],
+                loss: losses[slot_idx],
+                worker: worker_id,
+                latency: slot.enqueued.elapsed(),
+            }),
+        );
+        served.inc();
+    }
+    drop(g);
+    shared.pending.cv.notify_all();
+}
+
+/// Publish one shared error for `slots` and wake waiters.
+fn complete_err(shared: &Shared, slots: &[Slot], err: &ServiceError) {
+    let mut g = shared.pending.lock();
+    for slot in slots {
+        if g.abandoned.remove(&slot.id) {
+            continue;
+        }
+        g.done.insert(slot.id, Err(err.clone()));
+    }
+    drop(g);
+    shared.pending.cv.notify_all();
+}
+
+/// A batch failed. With attempts left (and the service still
+/// running), split it into single-slot batches and requeue them —
+/// bounded retry, so one poisoned example can't take down its B−1
+/// neighbors. At the attempt cap, every slot fails typed.
+fn handle_failure(shared: &Shared, b: Batch, detail: String) {
+    shared.worker_failures.inc();
+    let attempts = b.attempts + 1;
+    let retryable =
+        attempts < shared.max_attempts && shared.state.load(Ordering::Relaxed) == RUNNING;
+    if !retryable {
+        complete_err(shared, &b.slots, &ServiceError::WorkerFailed { attempts, detail });
+        return;
+    }
+    let now = Instant::now();
+    let len = shared.example_len;
+    for (i, slot) in b.slots.iter().enumerate() {
+        if slot.deadline.is_some_and(|d| d <= now) {
+            // no point retrying an answer nobody will take
+            shared.shed.inc();
+            complete_err(shared, std::slice::from_ref(slot), &ServiceError::DeadlineExceeded);
+            continue;
+        }
+        let single = Batch {
+            slots: vec![slot.clone()],
+            x: b.x[i * len..(i + 1) * len].to_vec(),
+            y: vec![b.y[i]],
+            attempts,
+        };
+        if shared.batches.try_push(single).is_ok() {
+            shared.retries.inc();
+        } else {
+            // retry queue full or closed: resolve now rather than
+            // block a worker (the no-hang invariant outranks retry)
+            complete_err(
+                shared,
+                std::slice::from_ref(slot),
+                &ServiceError::WorkerFailed {
+                    attempts,
+                    detail: format!("{detail} (retry queue unavailable)"),
+                },
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// supervisor
+// ---------------------------------------------------------------------------
+
+/// The supervision loop's state: join handles, incarnation counters,
+/// the restart budget. Runs on its own thread; exits once every
+/// worker slot is down.
+struct Supervisor {
+    shared: Arc<Shared>,
+    spawner: WorkerSpawner,
+    handles: Vec<Option<std::thread::JoinHandle<()>>>,
+    incarnation: Vec<u32>,
+    /// Restarts spent per worker slot — keys the exponential backoff.
+    per_worker: Vec<u32>,
+    /// Restarts spent service-wide, against `budget`.
+    used: u32,
+    live: usize,
+    budget: u32,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+    restarts: Arc<metrics::Counter>,
+}
+
+impl Supervisor {
+    fn run(mut self, events: &BoundedQueue<WorkerEvent>) {
+        while self.live > 0 {
+            match events.pop_timeout(Duration::from_millis(100)) {
+                Ok(Some(ev)) => self.on_event(ev),
+                Ok(None) => self.sweep(events),
+                Err(()) => break,
             }
         }
-        Err(e) => {
-            for (id, _) in slots {
-                done.insert(*id, Err(format!("{e:#}")));
+        self.finish();
+    }
+
+    /// One worker exit report: join the thread, then either count it
+    /// down (clean exit / shutting down), restart it (budget left), or
+    /// fail the service fast (budget exhausted).
+    fn on_event(&mut self, ev: WorkerEvent) {
+        if let Some(h) = self.handles[ev.worker].take() {
+            let _ = h.join();
+        }
+        let detail = match ev.reason {
+            ExitReason::Clean => {
+                self.live -= 1;
+                return;
+            }
+            ExitReason::Crashed(msg) | ExitReason::InitFailed(msg) => msg,
+        };
+        if self.shared.state.load(Ordering::Relaxed) != RUNNING {
+            // shutting down (or already failed): no restarts, just
+            // count the slot down; remaining workers drain the queue
+            self.live -= 1;
+            return;
+        }
+        if self.used >= self.budget {
+            self.live -= 1;
+            self.enter_failed(&detail);
+            return;
+        }
+        // capped exponential backoff, keyed to this slot's restarts
+        let shift = self.per_worker[ev.worker].min(16);
+        let backoff = self
+            .backoff_base
+            .saturating_mul(1u32 << shift)
+            .min(self.backoff_cap);
+        std::thread::sleep(backoff);
+        self.used += 1;
+        self.per_worker[ev.worker] += 1;
+        self.incarnation[ev.worker] += 1;
+        self.restarts.inc();
+        self.handles[ev.worker] =
+            Some(self.spawner.spawn(ev.worker, self.incarnation[ev.worker]));
+    }
+
+    /// Idle-tick liveness sweep: catch a worker that died without
+    /// reporting (its event push failed, or a panic escaped the
+    /// containment). Finished handles are recorded *before* draining
+    /// the event queue — the report push happens-before thread exit,
+    /// so a handle still unreported after the drain genuinely sent
+    /// nothing and gets a synthesized crash report.
+    fn sweep(&mut self, events: &BoundedQueue<WorkerEvent>) {
+        let finished: Vec<usize> = (0..self.handles.len())
+            .filter(|&w| self.handles[w].as_ref().is_some_and(|h| h.is_finished()))
+            .collect();
+        while let Ok(Some(ev)) = events.pop_timeout(Duration::ZERO) {
+            self.on_event(ev);
+        }
+        for w in finished {
+            if self.handles[w].as_ref().is_some_and(|h| h.is_finished()) {
+                self.on_event(WorkerEvent {
+                    worker: w,
+                    reason: ExitReason::Crashed("worker exited without reporting".into()),
+                });
             }
         }
     }
-    drop(done);
-    pending.cv.notify_all();
+
+    /// Restart budget exhausted: fail *fast*. Pending waiters resolve
+    /// with the stored error, future submits are refused with it, and
+    /// both queues close so producers unblock.
+    fn enter_failed(&self, detail: &str) {
+        self.shared.state.store(FAILED, Ordering::Relaxed);
+        self.shared.pending.fail_all(ServiceError::WorkerFailed {
+            attempts: self.used,
+            detail: format!(
+                "worker restart budget ({}) exhausted; last error: {detail}",
+                self.budget
+            ),
+        });
+        self.shared.batches.close();
+        self.shared.requests.close();
+    }
+
+    /// All worker slots are down. If the pipeline is still open (the
+    /// batch former could keep producing batches nobody will serve —
+    /// the old `complete_all` hang), fail the service; then drain and
+    /// resolve whatever batches are still queued, and reap any
+    /// handles left.
+    fn finish(&mut self) {
+        if self.shared.state.load(Ordering::Relaxed) != FAILED && !self.shared.batches.is_closed()
+        {
+            self.enter_failed("all workers exited");
+        }
+        while let Some(b) = self.shared.batches.pop() {
+            let err = self
+                .shared
+                .pending
+                .failed_error()
+                .unwrap_or(ServiceError::WorkerFailed {
+                    attempts: b.attempts + 1,
+                    detail: "no live workers".into(),
+                });
+            complete_err(&self.shared, &b.slots, &err);
+        }
+        for slot in self.handles.iter_mut() {
+            if let Some(h) = slot.take() {
+                let _ = h.join();
+            }
+        }
+    }
 }
 
-fn complete_all(pending: &PendingTable, batches: &BoundedQueue<Batch>, err: String) {
-    while let Some(b) = batches.pop() {
-        let mut done = pending.done.lock().unwrap();
-        for (id, _) in &b.slots {
-            done.insert(*id, Err(err.clone()));
-        }
-        drop(done);
-        pending.cv.notify_all();
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_error_display_is_typed_and_actionable() {
+        assert!(ServiceError::Overloaded.to_string().contains("overloaded"));
+        assert!(ServiceError::DeadlineExceeded.to_string().contains("deadline"));
+        assert!(ServiceError::ShuttingDown.to_string().contains("shutting down"));
+        assert!(ServiceError::UnknownId(7).to_string().contains("7"));
+        let e = ServiceError::WorkerFailed {
+            attempts: 2,
+            detail: "boom".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("2 attempt"), "{s}");
+        assert!(s.contains("boom"), "{s}");
+        // the submit-side shape error keeps its long-standing message
+        let e = ServiceError::InvalidRequest("request image has 3 values, model expects 12".into());
+        assert!(e.to_string().contains("values"), "{e}");
+        // and the typed error converts into anyhow contexts via `?`
+        let any: anyhow::Error = ServiceError::Overloaded.into();
+        assert!(format!("{any:#}").contains("overloaded"));
+    }
+
+    #[test]
+    fn pending_table_recovers_from_poison_and_fails_all() {
+        let table = Arc::new(PendingTable::default());
+        // poison the mutex from a panicking thread
+        let t2 = table.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = t2.state.lock().unwrap();
+            panic!("poisoning");
+        })
+        .join();
+        assert!(table.state.lock().is_err(), "mutex is poisoned");
+        // the recovering accessor still works…
+        table.lock().done.insert(
+            1,
+            Err(ServiceError::WorkerFailed {
+                attempts: 1,
+                detail: "x".into(),
+            }),
+        );
+        // …and so does the fail-fast switch (first error wins)
+        table.fail_all(ServiceError::ShuttingDown);
+        table.fail_all(ServiceError::Overloaded);
+        assert_eq!(table.failed_error(), Some(ServiceError::ShuttingDown));
+    }
+
+    #[test]
+    fn panic_messages_unwrap_str_and_string_payloads() {
+        let p = catch_unwind(|| panic!("static str")).unwrap_err();
+        assert_eq!(panic_message(&*p), "static str");
+        let msg = format!("formatted {}", 42);
+        let p = catch_unwind(AssertUnwindSafe(|| std::panic::panic_any(msg))).unwrap_err();
+        assert_eq!(panic_message(&*p), "formatted 42");
+        let p = catch_unwind(|| std::panic::panic_any(7u32)).unwrap_err();
+        assert_eq!(panic_message(&*p), "non-string panic payload");
     }
 }

@@ -4,6 +4,8 @@
 //!   train             DP-SGD training: native backend by default,
 //!                     fused step artifact with --backend pjrt
 //!   serve             run the per-example-gradient service demo (pjrt)
+//!   loadtest          concurrent-client norm-service load generator,
+//!                     with a seeded --chaos fault-injection smoke
 //!   bench-strategies  native naive/multi/crb sweep (no artifacts)
 //!   bench-fig1 / bench-fig2 / bench-fig3 / bench-table1 / bench-ablation
 //!                     regenerate the paper's figures/tables (pjrt)
@@ -19,9 +21,10 @@
 use anyhow::{bail, Context, Result};
 use grad_cnns::bench::Protocol;
 use grad_cnns::cli::{subcommand, Command};
-use grad_cnns::config::{Config, ExperimentConfig};
+use grad_cnns::config::{Config, ExperimentConfig, ServiceTuning};
 use grad_cnns::coordinator::{
-    Checkpoint, GradRequest, NativeServiceConfig, ServiceConfig, ServiceHandle, Trainer,
+    Checkpoint, FaultPlan, FaultPolicy, GradRequest, NativeServiceConfig, ServiceConfig,
+    ServiceError, ServiceHandle, Trainer,
 };
 use grad_cnns::data::GaussianImages;
 use grad_cnns::experiments::NativeSweepOptions;
@@ -49,6 +52,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match name {
         "train" => cmd_train(rest),
         "serve" => cmd_serve(rest),
+        "loadtest" => cmd_loadtest(rest),
         "bench-fig1" => cmd_bench_fig(rest, "fig1"),
         "bench-fig3" => cmd_bench_fig(rest, "fig3"),
         "bench-fig2" => cmd_bench_fig2(rest),
@@ -76,7 +80,12 @@ usage: repro <subcommand> [options]
                    --backend native|pjrt|auto — native needs no artifacts;
                    --strategy ghostnorm for batch-independent gradient memory
   serve            per-example-gradient service demo (dynamic batching);
-                   --backend native serves ghost norms with zero artifacts
+                   --backend native serves ghost norms with zero artifacts;
+                   --deadline-ms bounds each request (shed + wait_timeout)
+  loadtest         concurrent-client load generator for the native norm
+                   service → BENCH_service.json; --chaos injects a seeded
+                   FaultPlan (panics/errors/delays/init failure) to smoke
+                   the fault-tolerance layer
   bench-strategies native naive/multi/crb/ghostnorm sweep (strategy × batch ×
                    model dims → BENCH_strategies.json) — clean checkout
   bench-fig1       channel-rate sweep, kernel 3       (paper Fig. 1; pjrt)
@@ -308,27 +317,84 @@ size = 2048
 // serve
 // ---------------------------------------------------------------------------
 
-fn cmd_serve(rest: &[String]) -> Result<()> {
-    let cmd = Command::new("serve", "per-example gradient service demo")
-        .opt_default(
-            "backend",
-            "auto",
-            "native (ghost-norm engine, no artifacts) | pjrt | auto",
+/// Options every service-shaped command shares (serve, loadtest).
+/// Each is a plain `opt` (no CLI default) so a value from the config
+/// file's `[service]` section shows through unless the flag is given.
+fn service_opts(cmd: Command) -> Command {
+    cmd.opt("workers", "worker threads (overrides [service])")
+        .opt("max-wait-ms", "partial-batch flush deadline in ms (overrides [service])")
+        .opt("queue-cap", "request-queue capacity (overrides [service])")
+        .opt(
+            "deadline-ms",
+            "per-request deadline in ms, 0 = none — expired requests are shed \
+             and waits bounded (overrides [service])",
         )
-        .opt("config", "TOML config for the native model ([model] section)")
-        .opt_default("artifacts", "artifacts", "artifacts dir (pjrt)")
-        .opt_default("artifact", "core_toy_crb_pallas_grads_b4", "grads artifact (pjrt)")
-        .opt_default("batch", "8", "max dynamic batch (native)")
-        .opt_default("workers", "2", "worker threads")
-        .opt_default("requests", "64", "number of requests to replay")
-        .opt_default("max-wait-ms", "20", "batch deadline (ms)")
-        .opt_default("seed", "7", "rng seed");
+        .opt(
+            "restart-budget",
+            "supervisor worker-restart budget before the service fails fast \
+             (overrides [service])",
+        )
+        .opt(
+            "max-attempts",
+            "per-request execution attempt cap for split-retry (overrides [service])",
+        )
+}
+
+/// Resolve the service tuning: `[service]` section (strictly typed)
+/// as the base, CLI flags on top.
+fn service_tuning(args: &grad_cnns::cli::Args, cfg: &Config) -> Result<ServiceTuning> {
+    let mut t = ServiceTuning::from_config(cfg)?;
+    t.workers = args.usize_or("workers", t.workers)?.max(1);
+    t.batch = args.usize_or("batch", t.batch)?;
+    if t.batch == 0 {
+        bail!("--batch must be >= 1");
+    }
+    t.max_wait_ms = args.u64_or("max-wait-ms", t.max_wait_ms)?;
+    t.queue_capacity = args.usize_or("queue-cap", t.queue_capacity)?.max(1);
+    t.deadline_ms = args.u64_or("deadline-ms", t.deadline_ms)?;
+    t.restart_budget = args.u64_or("restart-budget", t.restart_budget as u64)? as u32;
+    t.max_attempts = args.u64_or("max-attempts", t.max_attempts as u64)?.max(1) as u32;
+    Ok(t)
+}
+
+/// The tuning's knobs as a [`FaultPolicy`] (backoff keeps defaults),
+/// with an optional injected chaos plan.
+fn fault_policy(t: &ServiceTuning, faults: Option<FaultPlan>) -> FaultPolicy {
+    FaultPolicy {
+        restart_budget: t.restart_budget,
+        max_attempts: t.max_attempts,
+        faults,
+        ..FaultPolicy::default()
+    }
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let cmd = service_opts(
+        Command::new("serve", "per-example gradient service demo")
+            .opt_default(
+                "backend",
+                "auto",
+                "native (ghost-norm engine, no artifacts) | pjrt | auto",
+            )
+            .opt(
+                "config",
+                "TOML config for the native model ([model]) and service ([service])",
+            )
+            .opt_default("artifacts", "artifacts", "artifacts dir (pjrt)")
+            .opt_default("artifact", "core_toy_crb_pallas_grads_b4", "grads artifact (pjrt)")
+            .opt("batch", "max dynamic batch (native; overrides [service])")
+            .opt_default("requests", "64", "number of requests to replay")
+            .opt_default("seed", "7", "rng seed"),
+    );
     let args = cmd.parse(rest)?;
     let dir = args.str_or("artifacts", "artifacts");
     let n_requests = args.usize_or("requests", 64)?;
     let seed = args.u64_or("seed", 7)?;
-    let workers = args.usize_or("workers", 2)?;
-    let max_wait = std::time::Duration::from_millis(args.u64_or("max-wait-ms", 20)?);
+    let cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::parse("[train]\nbackend = \"native\"\n")?,
+    };
+    let tuning = service_tuning(&args, &cfg)?;
 
     let use_pjrt = match args.str_or("backend", "auto").as_str() {
         "native" => false,
@@ -340,9 +406,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     };
 
     let (svc, spec) = if use_pjrt {
-        serve_start_pjrt(&args, &dir, workers, max_wait, seed)?
+        serve_start_pjrt(&args, &dir, &tuning, seed)?
     } else {
-        serve_start_native(&args, workers, max_wait, seed)?
+        serve_start_native(&cfg, &args, &tuning, seed)?
     };
     println!("service: {}", svc.label());
 
@@ -358,24 +424,57 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         })
         .collect();
     let t0 = std::time::Instant::now();
-    let responses = svc.submit_all(&reqs)?;
+    let (responses, shed) = match tuning.deadline() {
+        // no deadline (the default): the blocking submit/wait path
+        None => (svc.submit_all(&reqs)?, 0usize),
+        // deadline mode: non-blocking admission + bounded waits — the
+        // typed errors (Overloaded, DeadlineExceeded) are outcomes to
+        // tally, not reasons to abort the demo
+        Some(budget) => {
+            let mut out = Vec::new();
+            let mut shed = 0usize;
+            for req in reqs {
+                let id = match svc.try_submit(req) {
+                    Ok(id) => id,
+                    Err(ServiceError::Overloaded) => {
+                        shed += 1;
+                        continue;
+                    }
+                    Err(e) => return Err(e.into()),
+                };
+                match svc.wait_timeout(id, budget) {
+                    Ok(r) => out.push(r),
+                    Err(ServiceError::DeadlineExceeded) => shed += 1,
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            (out, shed)
+        }
+    };
     let wall = t0.elapsed().as_secs_f64();
 
-    let mut lat: Vec<f64> = responses.iter().map(|r| r.latency.as_secs_f64()).collect();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p50 = lat[lat.len() / 2];
-    let p99 = lat[(lat.len() * 99 / 100).min(lat.len() - 1)];
-    println!(
-        "served {} requests in {:.3}s ({:.1} req/s); latency p50 {:.1}ms p99 {:.1}ms",
-        n_requests,
-        wall,
-        n_requests as f64 / wall,
-        1e3 * p50,
-        1e3 * p99
-    );
-    let mean_norm: f32 =
-        responses.iter().map(|r| r.grad_norm).sum::<f32>() / responses.len() as f32;
-    println!("mean per-example ‖g‖ = {mean_norm:.4}");
+    if responses.is_empty() {
+        println!("served 0/{n_requests} requests ({shed} shed) in {wall:.3}s");
+    } else {
+        let mut lat: Vec<f64> =
+            responses.iter().map(|r| r.latency.as_secs_f64()).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = lat[lat.len() / 2];
+        let p99 = lat[(lat.len() * 99 / 100).min(lat.len() - 1)];
+        println!(
+            "served {}/{} requests ({} shed) in {:.3}s ({:.1} req/s); latency p50 {:.1}ms p99 {:.1}ms",
+            responses.len(),
+            n_requests,
+            shed,
+            wall,
+            responses.len() as f64 / wall,
+            1e3 * p50,
+            1e3 * p99
+        );
+        let mean_norm: f32 =
+            responses.iter().map(|r| r.grad_norm).sum::<f32>() / responses.len() as f32;
+        println!("mean per-example ‖g‖ = {mean_norm:.4}");
+    }
     // the unified view: service queue/latency metrics plus the
     // process-global backward counters and allocation gauges
     print!("{}", svc.metrics_snapshot());
@@ -387,8 +486,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 fn serve_start_pjrt(
     args: &grad_cnns::cli::Args,
     dir: &str,
-    workers: usize,
-    max_wait: std::time::Duration,
+    tuning: &ServiceTuning,
     seed: u64,
 ) -> Result<(ServiceHandle, ModelSpec)> {
     let artifact = args.str_or("artifact", "core_toy_crb_pallas_grads_b4");
@@ -422,9 +520,10 @@ fn serve_start_pjrt(
         ServiceConfig {
             artifact,
             artifacts_dir: dir.to_string(),
-            workers,
-            max_wait,
-            queue_capacity: 256,
+            workers: tuning.workers,
+            max_wait: std::time::Duration::from_millis(tuning.max_wait_ms),
+            queue_capacity: tuning.queue_capacity,
+            policy: fault_policy(tuning, None),
         },
         theta,
     )?;
@@ -435,16 +534,12 @@ fn serve_start_pjrt(
 /// section (or the default toy CNN), native He init — answers the
 /// norm-only query with zero artifacts.
 fn serve_start_native(
+    cfg: &Config,
     args: &grad_cnns::cli::Args,
-    workers: usize,
-    max_wait: std::time::Duration,
+    tuning: &ServiceTuning,
     seed: u64,
 ) -> Result<(ServiceHandle, ModelSpec)> {
-    let cfg = match args.get("config") {
-        Some(path) => Config::from_file(path)?,
-        None => Config::parse("[train]\nbackend = \"native\"\n")?,
-    };
-    let exp = ExperimentConfig::from_config(&cfg)?;
+    let exp = ExperimentConfig::from_config(cfg)?;
     let spec = ModelSpec::from_manifest(&exp.model)?;
     let theta = NativeBackend::init_vector(&spec, seed);
     let planner = ClippedStepPlanner::new(&spec, &exp.ghost_norms)?;
@@ -452,17 +547,245 @@ fn serve_start_native(
     let svc = ServiceHandle::start_native(
         NativeServiceConfig {
             model: spec.clone(),
-            batch: args.usize_or("batch", 8)?,
-            workers,
+            batch: args.usize_or("batch", tuning.batch)?,
+            workers: tuning.workers,
             threads: exp.threads,
             mode: exp.ghost_norms.clone(),
             inner_parallel: exp.inner_parallel,
-            max_wait,
-            queue_capacity: 256,
+            max_wait: std::time::Duration::from_millis(tuning.max_wait_ms),
+            queue_capacity: tuning.queue_capacity,
+            policy: fault_policy(tuning, None),
         },
         theta,
     )?;
     Ok((svc, spec))
+}
+
+// ---------------------------------------------------------------------------
+// loadtest
+// ---------------------------------------------------------------------------
+
+/// Per-client outcome tally for the loadtest.
+#[derive(Default)]
+struct ClientStats {
+    ok: u64,
+    deadline: u64,
+    worker_failed: u64,
+    overloaded: u64,
+    other: u64,
+    lat: Vec<f64>,
+}
+
+impl ClientStats {
+    fn record(&mut self, outcome: &Result<grad_cnns::coordinator::GradResponse, ServiceError>) {
+        match outcome {
+            Ok(r) => {
+                self.ok += 1;
+                self.lat.push(r.latency.as_secs_f64());
+            }
+            Err(ServiceError::DeadlineExceeded) => self.deadline += 1,
+            Err(ServiceError::WorkerFailed { .. }) => self.worker_failed += 1,
+            Err(ServiceError::Overloaded) => self.overloaded += 1,
+            Err(_) => self.other += 1,
+        }
+    }
+
+    fn merge(mut self, other: ClientStats) -> ClientStats {
+        self.ok += other.ok;
+        self.deadline += other.deadline;
+        self.worker_failed += other.worker_failed;
+        self.overloaded += other.overloaded;
+        self.other += other.other;
+        self.lat.extend(other.lat);
+        self
+    }
+}
+
+/// Concurrent-client load generator for the native norm service.
+/// Every request resolves — `Ok` or a typed `ServiceError` — within
+/// its bound; the tally plus latency percentiles land in
+/// `BENCH_service.json`. `--chaos` attaches a seeded [`FaultPlan`]
+/// (the CI smoke greps the restart/shed counters out of the metrics
+/// snapshot afterwards).
+fn cmd_loadtest(rest: &[String]) -> Result<()> {
+    let cmd = service_opts(
+        Command::new("loadtest", "norm-service load generator (native, chaos-capable)")
+            .opt(
+                "config",
+                "TOML config for the native model ([model]) and service ([service])",
+            )
+            .opt("batch", "max dynamic batch (overrides [service])")
+            .opt_default("requests", "256", "total requests to fire")
+            .opt_default("clients", "4", "concurrent client threads")
+            .opt_default("seed", "7", "data/theta rng seed")
+            .opt("chaos-seed", "fault-plan seed (default: --seed)")
+            .opt_default("json", "BENCH_service.json", "machine-readable results path")
+            .flag(
+                "chaos",
+                "attach a seeded FaultPlan: worker panics/errors/delays plus one \
+                 init failure (exercises supervision, retry, shed)",
+            ),
+    );
+    let args = cmd.parse(rest)?;
+    let cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::parse("[train]\nbackend = \"native\"\n")?,
+    };
+    let tuning = service_tuning(&args, &cfg)?;
+    let n_requests = args.usize_or("requests", 256)?.max(1);
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let seed = args.u64_or("seed", 7)?;
+    let chaos = args.has_flag("chaos");
+    let chaos_seed = args.u64_or("chaos-seed", seed)?;
+
+    let exp = ExperimentConfig::from_config(&cfg)?;
+    let spec = ModelSpec::from_manifest(&exp.model)?;
+    let theta = NativeBackend::init_vector(&spec, seed);
+
+    let plan = chaos.then(|| {
+        // spread faults over the expected batch stream of the run
+        let horizon = (n_requests / tuning.batch).max(8) as u64;
+        FaultPlan::seeded(chaos_seed, tuning.workers, horizon)
+    });
+    if let Some(p) = &plan {
+        println!("chaos plan (seed {chaos_seed}): {}", p.summary());
+    }
+    let svc = ServiceHandle::start_native(
+        NativeServiceConfig {
+            model: spec.clone(),
+            batch: tuning.batch,
+            workers: tuning.workers,
+            threads: exp.threads,
+            mode: exp.ghost_norms.clone(),
+            inner_parallel: exp.inner_parallel,
+            max_wait: std::time::Duration::from_millis(tuning.max_wait_ms),
+            queue_capacity: tuning.queue_capacity,
+            policy: fault_policy(&tuning, plan),
+        },
+        theta,
+    )?;
+    println!(
+        "service: {} ({} workers, batch {}, queue {}, deadline {})",
+        svc.label(),
+        tuning.workers,
+        tuning.batch,
+        tuning.queue_capacity,
+        if tuning.deadline_ms > 0 {
+            format!("{}ms", tuning.deadline_ms)
+        } else {
+            "none".into()
+        }
+    );
+
+    let (c, h, w) = spec.input_shape;
+    let data = GaussianImages::generate(n_requests, (c, h, w), spec.num_classes, seed);
+    let deadline = tuning.deadline();
+    let mut canary = ClientStats::default();
+    if chaos {
+        // zero-budget canaries: guaranteed already-expired at batch
+        // formation, so a chaos run always exercises (and the CI smoke
+        // can always grep) the shed path
+        let (img, label) = data.example(0);
+        for _ in 0..2 {
+            let req = GradRequest {
+                image: img.to_vec(),
+                label,
+            };
+            let outcome = svc
+                .submit_with_deadline(req, std::time::Duration::ZERO)
+                .and_then(|id| svc.wait_timeout(id, std::time::Duration::from_secs(30)));
+            canary.record(&outcome);
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let stats: ClientStats = std::thread::scope(|s| {
+        let svc = &svc;
+        let data = &data;
+        let handles: Vec<_> = (0..clients)
+            .map(|cidx| {
+                s.spawn(move || {
+                    let mut st = ClientStats::default();
+                    let mut i = cidx;
+                    while i < n_requests {
+                        let (img, label) = data.example(i);
+                        let req = GradRequest {
+                            image: img.to_vec(),
+                            label,
+                        };
+                        let outcome = match deadline {
+                            Some(d) => svc.submit_with_deadline(req, d),
+                            None => svc.submit(req),
+                        }
+                        // 30 s is the loadtest's own no-hang bound: a
+                        // wait that long is a bug, not load
+                        .and_then(|id| svc.wait_timeout(id, std::time::Duration::from_secs(30)));
+                        st.record(&outcome);
+                        i += clients;
+                    }
+                    st
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadtest client panicked"))
+            .fold(ClientStats::default(), ClientStats::merge)
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = stats.merge(canary);
+
+    let resolved =
+        stats.ok + stats.deadline + stats.worker_failed + stats.overloaded + stats.other;
+    println!(
+        "resolved {resolved} requests in {wall:.3}s ({:.1} req/s): {} ok, {} deadline, \
+         {} worker-failed, {} overloaded, {} other",
+        stats.ok as f64 / wall.max(1e-9),
+        stats.ok,
+        stats.deadline,
+        stats.worker_failed,
+        stats.overloaded,
+        stats.other
+    );
+    let (p50, p99) = if stats.lat.is_empty() {
+        (0.0, 0.0)
+    } else {
+        let mut lat = stats.lat.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            lat[lat.len() / 2],
+            lat[(lat.len() * 99 / 100).min(lat.len() - 1)],
+        )
+    };
+    if !stats.lat.is_empty() {
+        println!("ok-latency p50 {:.1}ms p99 {:.1}ms", 1e3 * p50, 1e3 * p99);
+    }
+    let snapshot = svc.metrics_snapshot();
+    print!("{snapshot}");
+    svc.shutdown();
+
+    let doc = jsonx::obj(vec![
+        ("version", jsonx::s("service/v1")),
+        ("requests", jsonx::num(n_requests as f64)),
+        ("clients", jsonx::num(clients as f64)),
+        ("workers", jsonx::num(tuning.workers as f64)),
+        ("batch", jsonx::num(tuning.batch as f64)),
+        ("deadline_ms", jsonx::num(tuning.deadline_ms as f64)),
+        ("chaos", jsonx::Value::Bool(chaos)),
+        ("chaos_seed", jsonx::num(chaos_seed as f64)),
+        ("wall_secs", jsonx::num(wall)),
+        ("ok", jsonx::num(stats.ok as f64)),
+        ("deadline_exceeded", jsonx::num(stats.deadline as f64)),
+        ("worker_failed", jsonx::num(stats.worker_failed as f64)),
+        ("overloaded", jsonx::num(stats.overloaded as f64)),
+        ("other_errors", jsonx::num(stats.other as f64)),
+        ("ok_per_sec", jsonx::num(stats.ok as f64 / wall.max(1e-9))),
+        ("latency_p50_ms", jsonx::num(1e3 * p50)),
+        ("latency_p99_ms", jsonx::num(1e3 * p99)),
+    ]);
+    let path = args.str_or("json", "BENCH_service.json");
+    std::fs::write(&path, jsonx::to_string(&doc))?;
+    println!("results written to {path}");
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------

@@ -167,6 +167,19 @@ impl Registry {
             .clone()
     }
 
+    /// Read a counter's value without creating it: `None` if no such
+    /// counter has ever been touched. The probe tests and the loadtest
+    /// summary use this so *observing* a counter can't make it spring
+    /// into existence in the snapshot.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .map(|c| c.get())
+    }
+
     /// Human-readable snapshot (sorted, stable).
     pub fn snapshot(&self) -> String {
         let inner = self.inner.lock().unwrap();
@@ -253,6 +266,16 @@ mod tests {
         let g = r.gauge("eps");
         g.set(1.25);
         assert_eq!(r.gauge("eps").get(), 1.25);
+    }
+
+    #[test]
+    fn counter_value_probe_is_read_only() {
+        let r = Registry::default();
+        assert_eq!(r.counter_value("never.touched"), None);
+        // probing must not create the counter
+        assert!(!r.snapshot().contains("never.touched"));
+        r.counter("service.shed").add(3);
+        assert_eq!(r.counter_value("service.shed"), Some(3));
     }
 
     #[test]

@@ -182,6 +182,7 @@ fn service_end_to_end_norms_match_direct_run() {
             workers: 2,
             max_wait: std::time::Duration::from_millis(5),
             queue_capacity: 32,
+            ..Default::default()
         },
         theta.clone(),
     )

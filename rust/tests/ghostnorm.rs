@@ -219,6 +219,7 @@ fn native_service_serves_oracle_norms() {
             inner_parallel: true,
             max_wait: std::time::Duration::from_millis(5),
             queue_capacity: 32,
+            policy: Default::default(),
         },
         theta.clone(),
     )
@@ -280,6 +281,7 @@ fn native_service_validates_at_start() {
         inner_parallel: true,
         max_wait: std::time::Duration::from_millis(5),
         queue_capacity: 8,
+        policy: Default::default(),
     };
     let err = ServiceHandle::start_native(base.clone(), vec![0.0; 3])
         .map(|s| s.shutdown())

@@ -1,0 +1,435 @@
+//! The norm service's fault contract, exercised under deterministic
+//! injected faults: *every submitted request resolves — `Ok` or a
+//! typed [`ServiceError`] — within bounded time, under any fault*.
+//!
+//! Every wait in this file goes through `wait_timeout` with a generous
+//! bound, so a contract violation surfaces as a failed assertion, not
+//! a hung test binary. All tests run the native ghost-norm executor on
+//! a tiny model — no artifacts, no PJRT — and pin:
+//!
+//! * panic containment (the worker thread survives an executor panic);
+//! * bounded split-retry (one poisoned example fails alone, its B−1
+//!   neighbors are rescued);
+//! * supervisor restarts with a budget, then fail-fast, never hang;
+//! * pre-execution deadline shedding and wait-side abandonment;
+//! * `try_submit` admission control under saturation;
+//! * never-issued ids rejected immediately;
+//! * chaos-off output bit-identical to a direct engine run.
+
+use grad_cnns::coordinator::{
+    Fault, FaultPlan, FaultPolicy, GradRequest, NativeServiceConfig, ServiceError, ServiceHandle,
+};
+use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode};
+use grad_cnns::models::ModelSpec;
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::runtime::NativeBackend;
+use grad_cnns::tensor::Tensor;
+use std::time::{Duration, Instant};
+
+/// The no-hang bound: every wait in this suite resolves well inside
+/// this, or the contract is broken and the assertion fires.
+const WAIT: Duration = Duration::from_secs(30);
+
+fn toy() -> (ModelSpec, Vec<f32>) {
+    let spec = ModelSpec::toy_cnn(1, 3, 1.0, 3, "none", (1, 8, 8), 4).unwrap();
+    let theta = NativeBackend::init_vector(&spec, 11);
+    (spec, theta)
+}
+
+fn cfg(spec: &ModelSpec, batch: usize, workers: usize, policy: FaultPolicy) -> NativeServiceConfig {
+    NativeServiceConfig {
+        model: spec.clone(),
+        batch,
+        workers,
+        threads: 1,
+        mode: GhostMode::default(),
+        inner_parallel: false,
+        // generous fill window so "submit k quickly -> one batch of k"
+        // is deterministic in CI
+        max_wait: Duration::from_millis(400),
+        queue_capacity: 64,
+        policy,
+    }
+}
+
+/// Fast-backoff policy with a plan attached — tests should not spend
+/// wall-clock on production restart pacing.
+fn policy(max_attempts: u32, plan: FaultPlan) -> FaultPolicy {
+    FaultPolicy {
+        restart_budget: 3,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(20),
+        max_attempts,
+        faults: Some(plan),
+    }
+}
+
+fn requests(spec: &ModelSpec, n: usize, seed: u64) -> Vec<GradRequest> {
+    let (c, h, w) = spec.input_shape;
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let mut img = vec![0.0f32; c * h * w];
+            rng.fill_gaussian(&mut img, 1.0);
+            GradRequest {
+                image: img,
+                label: rng.next_below(spec.num_classes as u64) as i32,
+            }
+        })
+        .collect()
+}
+
+fn counter(svc: &ServiceHandle, name: &str) -> u64 {
+    svc.metrics.counter_value(name).unwrap_or(0)
+}
+
+/// An injected panic fails the batch *typed* and the worker thread
+/// survives to serve the next request — no restart spent.
+#[test]
+fn injected_panic_is_contained_worker_survives() {
+    let (spec, theta) = toy();
+    let plan = FaultPlan::new().on_batch(0, 0, Fault::Panic);
+    // max_attempts = 1: the panicked batch fails immediately, no retry
+    let svc = ServiceHandle::start_native(cfg(&spec, 1, 1, policy(1, plan)), theta).unwrap();
+    let reqs = requests(&spec, 2, 1);
+
+    let id0 = svc.submit(reqs[0].clone()).unwrap();
+    match svc.wait_timeout(id0, WAIT).unwrap_err() {
+        ServiceError::WorkerFailed { attempts, detail } => {
+            assert_eq!(attempts, 1);
+            assert!(detail.contains("injected worker panic"), "{detail}");
+        }
+        e => panic!("want WorkerFailed, got {e:?}"),
+    }
+
+    // same worker thread, next batch: served fine
+    let id1 = svc.submit(reqs[1].clone()).unwrap();
+    svc.wait_timeout(id1, WAIT)
+        .expect("worker must survive a contained panic");
+    assert_eq!(counter(&svc, "service.worker_restarts"), 0);
+    assert_eq!(counter(&svc, "service.worker_failures"), 1);
+    svc.shutdown();
+}
+
+/// A batch of 4 fails once; with an attempt left it splits into
+/// single-request batches and every request is rescued.
+#[test]
+fn split_retry_rescues_neighbors() {
+    let (spec, theta) = toy();
+    let plan = FaultPlan::new().on_batch(0, 0, Fault::Panic);
+    let svc = ServiceHandle::start_native(cfg(&spec, 4, 1, policy(2, plan)), theta).unwrap();
+    let reqs = requests(&spec, 4, 2);
+
+    let ids: Vec<u64> = reqs.iter().map(|r| svc.submit(r.clone()).unwrap()).collect();
+    for id in ids {
+        svc.wait_timeout(id, WAIT)
+            .expect("every slot of the panicked batch must be rescued by retry");
+    }
+    assert_eq!(counter(&svc, "service.retries"), 4);
+    assert_eq!(counter(&svc, "service.worker_failures"), 1);
+    assert_eq!(counter(&svc, "service.worker_restarts"), 0);
+    svc.shutdown();
+}
+
+/// A poisoned example fails alone at the attempt cap; its neighbors
+/// still get answers. Retried singles are requeued in slot order and
+/// served FIFO by the single worker, so batch seq 1 is slot 0's retry.
+#[test]
+fn poisoned_example_fails_alone() {
+    let (spec, theta) = toy();
+    let plan = FaultPlan::new()
+        .on_batch(0, 0, Fault::Panic) // the whole 4-batch fails once
+        .on_batch(0, 1, Fault::Panic); // ...then slot 0's retry fails too
+    let svc = ServiceHandle::start_native(cfg(&spec, 4, 1, policy(2, plan)), theta).unwrap();
+    let reqs = requests(&spec, 4, 3);
+
+    let ids: Vec<u64> = reqs.iter().map(|r| svc.submit(r.clone()).unwrap()).collect();
+    let results: Vec<_> = ids.iter().map(|&id| svc.wait_timeout(id, WAIT)).collect();
+    match &results[0] {
+        Err(ServiceError::WorkerFailed { attempts, .. }) => assert_eq!(*attempts, 2),
+        r => panic!("slot 0 must fail at the attempt cap, got {r:?}"),
+    }
+    for (i, r) in results.iter().enumerate().skip(1) {
+        assert!(r.is_ok(), "neighbor slot {i} must be rescued: {r:?}");
+    }
+    assert_eq!(counter(&svc, "service.retries"), 4);
+    assert_eq!(counter(&svc, "service.worker_failures"), 2);
+    svc.shutdown();
+}
+
+/// Worker init keeps failing; the supervisor spends its whole restart
+/// budget, then fails the service *fast*: every pending wait resolves
+/// typed and new submits are refused at the door. Nothing hangs.
+#[test]
+fn restart_budget_exhaustion_fails_fast_and_typed() {
+    let (spec, theta) = toy();
+    let plan = FaultPlan::new()
+        .fail_init(0, 0)
+        .fail_init(0, 1)
+        .fail_init(0, 2);
+    let pol = FaultPolicy {
+        restart_budget: 2,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(5),
+        max_attempts: 2,
+        faults: Some(plan),
+    };
+    let svc = ServiceHandle::start_native(cfg(&spec, 2, 1, pol), theta).unwrap();
+    let reqs = requests(&spec, 3, 4);
+
+    // submissions race the dying worker lives: either admitted (and
+    // resolved by the fail-fast blanket) or refused typed at the door
+    for r in &reqs {
+        match svc.submit(r.clone()) {
+            Ok(id) => {
+                let err = svc.wait_timeout(id, WAIT).unwrap_err();
+                assert!(
+                    matches!(
+                        err,
+                        ServiceError::WorkerFailed { .. } | ServiceError::ShuttingDown
+                    ),
+                    "pending request must resolve via the fail-fast blanket, got {err:?}"
+                );
+            }
+            Err(e) => assert!(
+                matches!(e, ServiceError::WorkerFailed { .. } | ServiceError::ShuttingDown),
+                "refusal must be typed, got {e:?}"
+            ),
+        }
+    }
+
+    // once failed, a fresh submit is refused immediately with the
+    // stored budget-exhaustion error
+    let deadline = Instant::now() + WAIT;
+    let refused = loop {
+        match svc.submit(reqs[0].clone()) {
+            Err(e) => break e,
+            Ok(id) => {
+                let err = svc.wait_timeout(id, WAIT).unwrap_err();
+                assert!(
+                    !matches!(err, ServiceError::DeadlineExceeded),
+                    "no deadline was set; got {err:?}"
+                );
+            }
+        }
+        assert!(Instant::now() < deadline, "service never failed fast");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    match refused {
+        ServiceError::WorkerFailed { attempts, detail } => {
+            assert_eq!(attempts, 2, "budget restarts spent: {detail}");
+            assert!(detail.contains("restart budget"), "{detail}");
+        }
+        e => panic!("want the budget-exhaustion error, got {e:?}"),
+    }
+    assert_eq!(counter(&svc, "service.worker_restarts"), 2);
+    svc.shutdown();
+}
+
+/// Deadlines at both ends: an already-expired request is shed by the
+/// batch former before any executor sees it, and a waiter that gives
+/// up abandons its id so the late answer is dropped — and the
+/// pipeline stays healthy for the next request.
+#[test]
+fn deadline_shed_and_wait_timeout_abandon() {
+    let (spec, theta) = toy();
+    let plan = FaultPlan::new().on_batch(0, 0, Fault::Delay(Duration::from_millis(300)));
+    let svc = ServiceHandle::start_native(cfg(&spec, 1, 1, policy(2, plan)), theta).unwrap();
+    let reqs = requests(&spec, 3, 5);
+
+    // (a) pre-execution shed: its deadline has passed by the time the
+    // former pops it, so it never consumes a worker batch
+    let shed_id = svc
+        .submit_with_deadline(reqs[0].clone(), Duration::ZERO)
+        .unwrap();
+    assert_eq!(
+        svc.wait_timeout(shed_id, WAIT).unwrap_err(),
+        ServiceError::DeadlineExceeded
+    );
+
+    // (b) wait-side abandonment: batch seq 0 is delayed 300ms; the
+    // waiter gives up at 30ms and the late answer is discarded
+    let slow_id = svc.submit(reqs[1].clone()).unwrap();
+    assert_eq!(
+        svc.wait_timeout(slow_id, Duration::from_millis(30))
+            .unwrap_err(),
+        ServiceError::DeadlineExceeded
+    );
+
+    // (c) the pipeline is healthy afterwards
+    let ok_id = svc.submit(reqs[2].clone()).unwrap();
+    svc.wait_timeout(ok_id, WAIT)
+        .expect("service must serve normally after a shed and an abandon");
+    assert_eq!(counter(&svc, "service.shed"), 1);
+    assert_eq!(counter(&svc, "service.retries"), 0);
+    svc.shutdown();
+}
+
+/// `try_submit` refuses with `Overloaded` once the bounded pipeline is
+/// full (worker stalled by an injected delay), and every admitted
+/// request still resolves.
+#[test]
+fn try_submit_sheds_when_saturated() {
+    let (spec, theta) = toy();
+    let plan = FaultPlan::new().on_batch(0, 0, Fault::Delay(Duration::from_millis(500)));
+    let mut c = cfg(&spec, 1, 1, policy(2, plan));
+    c.queue_capacity = 1;
+    let svc = ServiceHandle::start_native(c, theta).unwrap();
+    let req = requests(&spec, 1, 6).remove(0);
+
+    // the stalled pipeline holds at most ~6 requests (worker + formed
+    // batches + former's hand + request queue); 64 admissions cannot
+    // all fit, so Overloaded must fire
+    let mut ids = Vec::new();
+    let mut overloaded = false;
+    for _ in 0..64 {
+        match svc.try_submit(req.clone()) {
+            Ok(id) => ids.push(id),
+            Err(ServiceError::Overloaded) => {
+                overloaded = true;
+                break;
+            }
+            Err(e) => panic!("want Overloaded, got {e:?}"),
+        }
+    }
+    assert!(overloaded, "admitted {} without refusal", ids.len());
+    for id in ids {
+        svc.wait_timeout(id, WAIT)
+            .expect("admitted requests must resolve after the stall");
+    }
+    svc.shutdown();
+}
+
+/// Never-issued ids are rejected immediately — waiting on one would
+/// hang forever, which the contract forbids.
+#[test]
+fn unknown_ids_are_rejected_not_hung() {
+    let (spec, theta) = toy();
+    let svc =
+        ServiceHandle::start_native(cfg(&spec, 1, 1, FaultPolicy::default()), theta).unwrap();
+    assert_eq!(svc.wait(0).unwrap_err(), ServiceError::UnknownId(0));
+    assert_eq!(
+        svc.wait_timeout(3, WAIT).unwrap_err(),
+        ServiceError::UnknownId(3)
+    );
+    let req = requests(&spec, 1, 7).remove(0);
+    let id = svc.submit(req).unwrap();
+    svc.wait_timeout(id, WAIT).unwrap();
+    assert_eq!(svc.wait(id + 1).unwrap_err(), ServiceError::UnknownId(id + 1));
+    svc.shutdown();
+}
+
+/// A worker death mid-batch: the batch is requeued as a single, the
+/// supervisor restarts the worker, and the restarted incarnation
+/// serves the retry. Shutdown joins everything cleanly afterwards.
+#[test]
+fn worker_death_restarts_and_request_retries() {
+    let (spec, theta) = toy();
+    let plan = FaultPlan::new().on_batch(0, 0, Fault::Die);
+    let svc = ServiceHandle::start_native(cfg(&spec, 1, 1, policy(2, plan)), theta).unwrap();
+    let req = requests(&spec, 1, 8).remove(0);
+
+    let id = svc.submit(req).unwrap();
+    let resp = svc
+        .wait_timeout(id, WAIT)
+        .expect("the restarted worker must serve the retried request");
+    assert!(resp.grad_norm.is_finite() && resp.loss.is_finite());
+    assert_eq!(counter(&svc, "service.worker_restarts"), 1);
+    assert_eq!(counter(&svc, "service.retries"), 1);
+    assert_eq!(counter(&svc, "service.worker_failures"), 1);
+    svc.shutdown();
+}
+
+/// The loadtest's chaos shape in miniature: a seeded plan (panics,
+/// errors, delays, exactly one init failure) over multiple workers —
+/// every request resolves Ok or `WorkerFailed`, and the restart
+/// counter matches the plan's single init failure exactly.
+#[test]
+fn seeded_chaos_resolves_every_request() {
+    let (spec, theta) = toy();
+    let workers = 2;
+    let n = 16;
+    let plan = FaultPlan::seeded(9, workers, 16);
+    let pol = FaultPolicy {
+        restart_budget: 4,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(20),
+        max_attempts: 3,
+        faults: Some(plan),
+    };
+    let svc = ServiceHandle::start_native(cfg(&spec, 2, workers, pol), theta).unwrap();
+    let reqs = requests(&spec, n, 9);
+
+    let ids: Vec<u64> = reqs.iter().map(|r| svc.submit(r.clone()).unwrap()).collect();
+    let (mut ok, mut failed) = (0, 0);
+    for id in ids {
+        match svc.wait_timeout(id, WAIT) {
+            Ok(_) => ok += 1,
+            Err(ServiceError::WorkerFailed { .. }) => failed += 1,
+            Err(e) => {
+                panic!("without deadlines, chaos may only yield Ok or WorkerFailed: {e:?}")
+            }
+        }
+    }
+    assert_eq!(ok + failed, n, "every request resolved");
+    // seeded plans carry exactly one init failure and no Die faults,
+    // so the supervisor spends exactly one restart
+    assert_eq!(counter(&svc, "service.worker_restarts"), 1);
+    svc.shutdown();
+}
+
+/// Chaos off (`faults: None`): the fault layer must be invisible — no
+/// shed/retry/restart counters move, and the served norms and losses
+/// are *bit-identical* to a direct `ghost::perex_norms` run over the
+/// same batch with the same thread count.
+#[test]
+fn chaos_off_is_bit_identical_to_direct_engine() {
+    let (spec, theta) = toy();
+    let svc = ServiceHandle::start_native(
+        cfg(&spec, 4, 1, FaultPolicy::default()),
+        theta.clone(),
+    )
+    .unwrap();
+    let reqs = requests(&spec, 4, 10);
+
+    let ids: Vec<u64> = reqs.iter().map(|r| svc.submit(r.clone()).unwrap()).collect();
+    let resp: Vec<_> = ids
+        .iter()
+        .map(|&id| svc.wait_timeout(id, WAIT).unwrap())
+        .collect();
+    for name in [
+        "service.shed",
+        "service.retries",
+        "service.worker_failures",
+        "service.worker_restarts",
+    ] {
+        assert_eq!(counter(&svc, name), 0, "{name} moved with chaos off");
+    }
+    svc.shutdown();
+
+    // the exact computation the one worker ran: one 4-batch, threads=1
+    let planner = ClippedStepPlanner::new(&spec, &GhostMode::default())
+        .unwrap()
+        .with_inner_parallel(false);
+    let (c, h, w) = spec.input_shape;
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for r in &reqs {
+        x.extend_from_slice(&r.image);
+        y.push(r.label);
+    }
+    let xt = Tensor::from_vec(&[4, c, h, w], x);
+    let (norms, losses) = ghost::perex_norms(&planner, &theta, &xt, &y, 1).unwrap();
+    for i in 0..4 {
+        assert_eq!(
+            resp[i].grad_norm.to_bits(),
+            norms[i].to_bits(),
+            "norm {i} must be bit-identical with chaos off"
+        );
+        assert_eq!(
+            resp[i].loss.to_bits(),
+            losses[i].to_bits(),
+            "loss {i} must be bit-identical with chaos off"
+        );
+    }
+}
