@@ -379,6 +379,40 @@ fn opt_string(cfg: &Config, key: &str) -> Result<Option<String>> {
     }
 }
 
+/// An absent array key is the empty vec; a present one must be an
+/// array of strings, every element checked.
+fn string_arr(cfg: &Config, key: &str) -> Result<Vec<String>> {
+    match cfg.get(key) {
+        None => Ok(Vec::new()),
+        Some(CfgValue::Arr(a)) => a
+            .iter()
+            .map(|v| {
+                v.as_str().map(str::to_string).with_context(|| {
+                    format!("config `{key}` entries must be strings, got {v:?}")
+                })
+            })
+            .collect(),
+        Some(v) => bail!("config `{key}` must be an array of strings, got {v:?}"),
+    }
+}
+
+/// An absent array key is the empty vec; a present one must be an
+/// array of numbers, every element checked.
+fn float_arr(cfg: &Config, key: &str) -> Result<Vec<f64>> {
+    match cfg.get(key) {
+        None => Ok(Vec::new()),
+        Some(CfgValue::Arr(a)) => a
+            .iter()
+            .map(|v| {
+                v.as_f64().with_context(|| {
+                    format!("config `{key}` entries must be numbers, got {v:?}")
+                })
+            })
+            .collect(),
+        Some(v) => bail!("config `{key}` must be an array of numbers, got {v:?}"),
+    }
+}
+
 impl ExperimentConfig {
     /// Build the typed view, validating types and rejecting
     /// contradictory settings at config time.
@@ -520,13 +554,19 @@ impl ExperimentConfig {
 /// mistyped value is an error, never a silent default.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServiceTuning {
-    /// Executor threads (`[service] workers`, default 2).
-    pub workers: usize,
+    /// Worker shards — each shard is one executor thread with its own
+    /// batch queue (`[service] shards`; defaults to `[service]
+    /// workers` for configs that predate sharding, then 2).
+    pub shards: usize,
     /// Max dynamic batch (`[service] batch`, default 8).
     pub batch: usize,
-    /// Partial-batch flush deadline in ms (`[service] max_wait_ms`,
-    /// default 20).
-    pub max_wait_ms: u64,
+    /// Coalescing window: how long the dispatcher holds an under-
+    /// filled microbatch open for more concurrent requests
+    /// (`[service] coalesce_max_wait_ms`; defaults to `[service]
+    /// max_wait_ms` — the pre-sharding name for the same knob — then
+    /// 20). 0 disables coalescing: every request runs as its own
+    /// batch of one.
+    pub coalesce_max_wait_ms: u64,
     /// Request-queue capacity — the backpressure/admission bound
     /// (`[service] queue_capacity`, default 256).
     pub queue_capacity: usize,
@@ -546,9 +586,15 @@ pub struct ServiceTuning {
 impl ServiceTuning {
     /// Read the `[service]` section, validating types and bounds.
     pub fn from_config(cfg: &Config) -> Result<ServiceTuning> {
+        // `workers` is the pre-sharding name for the same knob;
+        // `shards` wins when both are set.
         let workers = int_or(cfg, "service.workers", 2)?;
         if workers <= 0 {
             bail!("config `service.workers` must be >= 1, got {workers}");
+        }
+        let shards = int_or(cfg, "service.shards", workers)?;
+        if shards <= 0 {
+            bail!("config `service.shards` must be >= 1, got {shards}");
         }
         let batch = int_or(cfg, "service.batch", 8)?;
         if batch <= 0 {
@@ -557,6 +603,13 @@ impl ServiceTuning {
         let max_wait_ms = int_or(cfg, "service.max_wait_ms", 20)?;
         if max_wait_ms < 0 {
             bail!("config `service.max_wait_ms` must be >= 0, got {max_wait_ms}");
+        }
+        let coalesce_max_wait_ms = int_or(cfg, "service.coalesce_max_wait_ms", max_wait_ms)?;
+        if coalesce_max_wait_ms < 0 {
+            bail!(
+                "config `service.coalesce_max_wait_ms` must be >= 0 (0 disables \
+                 coalescing), got {coalesce_max_wait_ms}"
+            );
         }
         let queue_capacity = int_or(cfg, "service.queue_capacity", 256)?;
         if queue_capacity <= 0 {
@@ -581,9 +634,9 @@ impl ServiceTuning {
             );
         }
         Ok(ServiceTuning {
-            workers: workers as usize,
+            shards: shards as usize,
             batch: batch as usize,
-            max_wait_ms: max_wait_ms as u64,
+            coalesce_max_wait_ms: coalesce_max_wait_ms as u64,
             queue_capacity: queue_capacity as usize,
             deadline_ms: deadline_ms as u64,
             restart_budget: restart_budget as u32,
@@ -594,6 +647,157 @@ impl ServiceTuning {
     /// The per-request deadline as a `Duration`, `None` when disabled.
     pub fn deadline(&self) -> Option<std::time::Duration> {
         (self.deadline_ms > 0).then(|| std::time::Duration::from_millis(self.deadline_ms))
+    }
+
+    /// The coalescing window as a `Duration`, `None` when disabled
+    /// (window 0: every request runs as its own batch of one).
+    pub fn coalesce_window(&self) -> Option<std::time::Duration> {
+        (self.coalesce_max_wait_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.coalesce_max_wait_ms))
+    }
+}
+
+/// Typed view of the `[tenants]` section: the shared DP-SGD noise
+/// geometry every tenant's accountant is built with, plus per-tenant
+/// ε-budgets. `names` and `budgets` are paired arrays — entry `i` of
+/// each describes one tenant; `weights` (optional, same length when
+/// present) sets the fair-admission weight. A budget of 0 means
+/// unlimited: the tenant is still metered (its ε shows up in reports)
+/// but never rejected. Same strictness contract as [`ServiceTuning`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantTuning {
+    /// Subsampling rate `q` for every tenant's accountant
+    /// (`[tenants] q`, default 0.01).
+    pub q: f64,
+    /// Gaussian noise multiplier σ (`[tenants] sigma`, default 1.1).
+    pub sigma: f64,
+    /// Target δ used when converting RDP to ε (`[tenants] delta`,
+    /// default 1e-5).
+    pub delta: f64,
+    /// ε-budget for tenants not listed in `names`
+    /// (`[tenants] default_budget`, default 0 = unlimited).
+    pub default_budget: f64,
+    /// Explicit per-tenant `(name, ε-budget)` pairs from the paired
+    /// `names`/`budgets` arrays.
+    pub budgets: Vec<(String, f64)>,
+    /// Per-tenant fair-admission weights aligned with `names`; empty
+    /// when the optional `weights` array is absent (weight 1 for
+    /// everyone).
+    pub weights: Vec<u32>,
+}
+
+impl Default for TenantTuning {
+    fn default() -> Self {
+        TenantTuning {
+            q: 0.01,
+            sigma: 1.1,
+            delta: 1e-5,
+            default_budget: 0.0,
+            budgets: Vec::new(),
+            weights: Vec::new(),
+        }
+    }
+}
+
+impl TenantTuning {
+    /// Read the `[tenants]` section, validating types and bounds.
+    pub fn from_config(cfg: &Config) -> Result<TenantTuning> {
+        let d = TenantTuning::default();
+        let q = float_or(cfg, "tenants.q", d.q)?;
+        if !(q > 0.0 && q <= 1.0) {
+            bail!("config `tenants.q` must be in (0, 1], got {q}");
+        }
+        let sigma = float_or(cfg, "tenants.sigma", d.sigma)?;
+        if sigma <= 0.0 {
+            bail!("config `tenants.sigma` must be > 0, got {sigma}");
+        }
+        let delta = float_or(cfg, "tenants.delta", d.delta)?;
+        if !(delta > 0.0 && delta < 1.0) {
+            bail!("config `tenants.delta` must be in (0, 1), got {delta}");
+        }
+        let default_budget = float_or(cfg, "tenants.default_budget", d.default_budget)?;
+        if !(default_budget >= 0.0) {
+            bail!(
+                "config `tenants.default_budget` must be >= 0 (0 = unlimited), \
+                 got {default_budget}"
+            );
+        }
+        let names = string_arr(cfg, "tenants.names")?;
+        let budget_vals = float_arr(cfg, "tenants.budgets")?;
+        if names.len() != budget_vals.len() {
+            bail!(
+                "config `tenants.names` and `tenants.budgets` are paired arrays and \
+                 must have equal length, got {} names vs {} budgets",
+                names.len(),
+                budget_vals.len()
+            );
+        }
+        for (name, b) in names.iter().zip(&budget_vals) {
+            if name.is_empty() {
+                bail!("config `tenants.names` entries must be non-empty strings");
+            }
+            if !(*b >= 0.0) {
+                bail!(
+                    "config `tenants.budgets` entries must be >= 0 (0 = unlimited), \
+                     got {b} for tenant `{name}`"
+                );
+            }
+        }
+        {
+            let mut seen = std::collections::BTreeSet::new();
+            for name in &names {
+                if !seen.insert(name.clone()) {
+                    bail!("config `tenants.names` lists tenant `{name}` twice");
+                }
+            }
+        }
+        let weight_vals = float_arr(cfg, "tenants.weights")?;
+        if !weight_vals.is_empty() && weight_vals.len() != names.len() {
+            bail!(
+                "config `tenants.weights` must match `tenants.names` in length when \
+                 present, got {} weights vs {} names",
+                weight_vals.len(),
+                names.len()
+            );
+        }
+        let mut weights = Vec::with_capacity(weight_vals.len());
+        for w in &weight_vals {
+            if !(*w >= 1.0 && w.fract() == 0.0) {
+                bail!("config `tenants.weights` entries must be integers >= 1, got {w}");
+            }
+            weights.push(*w as u32);
+        }
+        Ok(TenantTuning {
+            q,
+            sigma,
+            delta,
+            default_budget,
+            budgets: names.into_iter().zip(budget_vals).collect(),
+            weights,
+        })
+    }
+
+    /// The configured ε-budget for `name`: the explicit entry when one
+    /// exists, else `default_budget`.
+    pub fn budget_for(&self, name: &str) -> f64 {
+        self.budgets
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, b)| *b)
+            .unwrap_or(self.default_budget)
+    }
+
+    /// The fair-admission weight for `name` (1 when not listed or when
+    /// no `weights` array was given).
+    pub fn weight_for(&self, name: &str) -> u32 {
+        if self.weights.is_empty() {
+            return 1;
+        }
+        self.budgets
+            .iter()
+            .position(|(n, _)| n == name)
+            .and_then(|i| self.weights.get(i).copied())
+            .unwrap_or(1)
     }
 }
 
@@ -1101,9 +1305,9 @@ name = "synthetic # not a comment"
         // defaults from an empty config
         let c = Config::parse("").unwrap();
         let s = ServiceTuning::from_config(&c).unwrap();
-        assert_eq!(s.workers, 2);
+        assert_eq!(s.shards, 2);
         assert_eq!(s.batch, 8);
-        assert_eq!(s.max_wait_ms, 20);
+        assert_eq!(s.coalesce_max_wait_ms, 20);
         assert_eq!(s.queue_capacity, 256);
         assert_eq!(s.deadline_ms, 0);
         assert_eq!(s.deadline(), None, "0 disables deadlines");
@@ -1111,24 +1315,44 @@ name = "synthetic # not a comment"
         assert_eq!(s.max_attempts, 2);
         // a populated section flows through
         let c = Config::parse(
-            "[service]\nworkers = 4\nbatch = 16\nmax_wait_ms = 5\nqueue_capacity = 32\n\
-             deadline_ms = 250\nrestart_budget = 1\nmax_attempts = 3\n",
+            "[service]\nshards = 4\nbatch = 16\ncoalesce_max_wait_ms = 5\n\
+             queue_capacity = 32\ndeadline_ms = 250\nrestart_budget = 1\nmax_attempts = 3\n",
         )
         .unwrap();
         let s = ServiceTuning::from_config(&c).unwrap();
-        assert_eq!(s.workers, 4);
+        assert_eq!(s.shards, 4);
         assert_eq!(s.batch, 16);
         assert_eq!(s.queue_capacity, 32);
         assert_eq!(s.deadline(), Some(std::time::Duration::from_millis(250)));
+        assert_eq!(
+            s.coalesce_window(),
+            Some(std::time::Duration::from_millis(5))
+        );
         assert_eq!(s.restart_budget, 1);
         assert_eq!(s.max_attempts, 3);
+        // the pre-sharding names still work; the new names win when
+        // both are set
+        let c = Config::parse("[service]\nworkers = 3\nmax_wait_ms = 7\n").unwrap();
+        let s = ServiceTuning::from_config(&c).unwrap();
+        assert_eq!(s.shards, 3, "`workers` feeds `shards` when unset");
+        assert_eq!(s.coalesce_max_wait_ms, 7, "`max_wait_ms` feeds the window");
+        let c = Config::parse(
+            "[service]\nworkers = 3\nshards = 5\nmax_wait_ms = 7\ncoalesce_max_wait_ms = 0\n",
+        )
+        .unwrap();
+        let s = ServiceTuning::from_config(&c).unwrap();
+        assert_eq!(s.shards, 5);
+        assert_eq!(s.coalesce_max_wait_ms, 0);
+        assert_eq!(s.coalesce_window(), None, "0 disables coalescing");
         // out-of-range values are key-named config errors
         for bad in [
             "[service]\nworkers = 0\n",
+            "[service]\nshards = 0\n",
             "[service]\nbatch = 0\n",
             "[service]\nqueue_capacity = 0\n",
             "[service]\nmax_attempts = 0\n",
             "[service]\ndeadline_ms = -1\n",
+            "[service]\ncoalesce_max_wait_ms = -1\n",
             "[service]\nrestart_budget = -1\n",
         ] {
             let c = Config::parse(bad).unwrap();
@@ -1138,6 +1362,50 @@ name = "synthetic # not a comment"
         let c = Config::parse("[service]\nworkers = \"many\"\n").unwrap();
         let err = format!("{:#}", ServiceTuning::from_config(&c).unwrap_err());
         assert!(err.contains("service.workers"), "{err}");
+    }
+
+    #[test]
+    fn tenant_tuning_defaults_pairing_and_validation() {
+        // defaults from an empty config: everything unlimited
+        let c = Config::parse("").unwrap();
+        let t = TenantTuning::from_config(&c).unwrap();
+        assert_eq!(t, TenantTuning::default());
+        assert_eq!(t.budget_for("anyone"), 0.0, "default budget is unlimited");
+        assert_eq!(t.weight_for("anyone"), 1);
+        // paired arrays flow through; lookups fall back to defaults
+        let c = Config::parse(
+            "[tenants]\nq = 0.02\nsigma = 1.5\ndelta = 1e-6\ndefault_budget = 8.0\n\
+             names = [\"acme\", \"globex\"]\nbudgets = [2.5, 0.0]\nweights = [3, 1]\n",
+        )
+        .unwrap();
+        let t = TenantTuning::from_config(&c).unwrap();
+        assert_eq!(t.q, 0.02);
+        assert_eq!(t.sigma, 1.5);
+        assert_eq!(t.delta, 1e-6);
+        assert_eq!(t.budget_for("acme"), 2.5);
+        assert_eq!(t.budget_for("globex"), 0.0, "explicit 0 stays unlimited");
+        assert_eq!(t.budget_for("unlisted"), 8.0, "falls back to default_budget");
+        assert_eq!(t.weight_for("acme"), 3);
+        assert_eq!(t.weight_for("unlisted"), 1);
+        // structural and range errors are key-named config errors
+        for bad in [
+            "[tenants]\nnames = [\"a\"]\nbudgets = [1.0, 2.0]\n",
+            "[tenants]\nnames = [\"a\", \"a\"]\nbudgets = [1.0, 2.0]\n",
+            "[tenants]\nnames = [\"a\"]\nbudgets = [-1.0]\n",
+            "[tenants]\nnames = [\"\"]\nbudgets = [1.0]\n",
+            "[tenants]\nnames = [\"a\"]\nbudgets = [1.0]\nweights = [1, 2]\n",
+            "[tenants]\nnames = [\"a\"]\nbudgets = [1.0]\nweights = [0]\n",
+            "[tenants]\nq = 0.0\n",
+            "[tenants]\nq = 1.5\n",
+            "[tenants]\nsigma = 0.0\n",
+            "[tenants]\ndelta = 0.0\n",
+            "[tenants]\ndefault_budget = -1.0\n",
+            "[tenants]\nnames = \"acme\"\n",
+            "[tenants]\nbudgets = [\"cheap\"]\n",
+        ] {
+            let c = Config::parse(bad).unwrap();
+            assert!(TenantTuning::from_config(&c).is_err(), "{bad}");
+        }
     }
 
     #[test]

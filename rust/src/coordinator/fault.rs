@@ -2,7 +2,7 @@
 //!
 //! The robustness contract of [`super::service`] — *every submitted
 //! request resolves, `Ok` or typed error, in bounded time* — is only
-//! worth anything if it is exercised under real failure shapes: worker
+//! worth anything if it is exercised under real failure shapes: shard
 //! panics mid-batch, executors that die at construction, injected
 //! latency that blows request deadlines. This module is the harness
 //! that produces those failures *deterministically*, so
@@ -20,7 +20,7 @@
 //!   pre-fault-layer path.
 //! * **consume-once** — each planned fault fires exactly once (the
 //!   entry is removed when taken), so a retried batch re-executes
-//!   clean and a restarted worker comes up healthy unless the plan
+//!   clean and a restarted shard comes up healthy unless the plan
 //!   says otherwise.
 //! * **seed-driven** — [`FaultPlan::seeded`] expands one `u64` into a
 //!   reproducible mix of panics, errors, delays and one init failure,
@@ -32,11 +32,11 @@ use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// One injected failure, applied to a single (worker, batch) slot.
+/// One injected failure, applied to a single (shard, batch) slot.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Fault {
-    /// Panic inside batch execution. The worker's `catch_unwind`
-    /// contains it: the batch fails typed, the worker thread survives.
+    /// Panic inside batch execution. The shard's `catch_unwind`
+    /// contains it: the batch fails typed, the shard thread survives.
     Panic,
     /// A clean executor error — the transient-failure shape that
     /// drives the split-and-retry path.
@@ -44,16 +44,16 @@ pub enum Fault {
     /// Sleep this long before executing the batch — deadline pressure
     /// without any failure (the batch then runs normally).
     Delay(Duration),
-    /// Fail the batch, then exit the worker thread — the supervisor
+    /// Fail the batch, then exit the shard thread — the supervisor
     /// restart path.
     Die,
 }
 
-/// A deterministic schedule of injected faults, keyed by worker slot.
+/// A deterministic schedule of injected faults, keyed by shard slot.
 ///
-/// Batch faults are keyed by the worker's *cumulative* batch sequence
+/// Batch faults are keyed by the shard's *cumulative* batch sequence
 /// number (counted across restarts, starting at 0); init faults by the
-/// worker's incarnation (0 = the original spawn, 1 = first restart…).
+/// shard's incarnation (0 = the original spawn, 1 = first restart…).
 /// Attach a plan to a service via
 /// [`FaultPolicy::faults`]; without one the service runs the exact
 /// pre-fault-layer code path.
@@ -69,31 +69,31 @@ impl FaultPlan {
         FaultPlan::default()
     }
 
-    /// Inject `fault` at worker `worker`'s `nth` batch (cumulative
+    /// Inject `fault` at shard `shard`'s `nth` batch (cumulative
     /// across restarts, 0-based). Consumed once when it fires.
-    pub fn on_batch(mut self, worker: usize, nth: u64, fault: Fault) -> Self {
-        self.batch.push((worker, nth, fault));
+    pub fn on_batch(mut self, shard: usize, nth: u64, fault: Fault) -> Self {
+        self.batch.push((shard, nth, fault));
         self
     }
 
-    /// Fail worker `worker`'s executor construction on its
+    /// Fail shard `shard`'s executor construction on its
     /// `incarnation`th life (0 = original spawn, 1 = first restart…).
-    pub fn fail_init(mut self, worker: usize, incarnation: u32) -> Self {
-        self.init.push((worker, incarnation));
+    pub fn fail_init(mut self, shard: usize, incarnation: u32) -> Self {
+        self.init.push((shard, incarnation));
         self
     }
 
-    /// Expand one seed into a reproducible chaos mix over `workers`
-    /// worker slots and a `horizon` of batches per slot: exactly one
+    /// Expand one seed into a reproducible chaos mix over `shards`
+    /// shard slots and a `horizon` of batches per slot: exactly one
     /// init failure (so the supervisor restart counter is
     /// deterministically nonzero — what the CI smoke greps for) plus
     /// roughly `horizon / 4` panic/error/delay faults per slot.
-    pub fn seeded(seed: u64, workers: usize, horizon: u64) -> FaultPlan {
-        let workers = workers.max(1);
+    pub fn seeded(seed: u64, shards: usize, horizon: u64) -> FaultPlan {
+        let shards = shards.max(1);
         let horizon = horizon.max(1);
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
-        let mut plan = FaultPlan::new().fail_init(seed as usize % workers, 0);
-        for w in 0..workers {
+        let mut plan = FaultPlan::new().fail_init(seed as usize % shards, 0);
+        for w in 0..shards {
             let mut seqs: HashSet<u64> = HashSet::new();
             for _ in 0..(horizon / 4).max(1) {
                 seqs.insert(rng.next_below(horizon));
@@ -140,7 +140,7 @@ impl FaultPlan {
 }
 
 /// Runtime fault store for one service instance: the plan's entries,
-/// consumed as they fire. Internal to the coordinator — workers probe
+/// consumed as they fire. Internal to the coordinator — shards probe
 /// it, clients never see it.
 pub(crate) struct FaultState {
     inner: Mutex<FaultEntries>,
@@ -166,21 +166,21 @@ impl FaultState {
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, FaultEntries> {
-        // a panicking fault-injected worker must not poison the plan
-        // for every other worker
+        // a panicking fault-injected shard must not poison the plan
+        // for every other shard
         self.inner.lock().unwrap_or_else(|p| p.into_inner())
     }
 
-    /// The fault planned for worker `worker`'s `seq`th batch, if any;
+    /// The fault planned for shard `shard`'s `seq`th batch, if any;
     /// removed so it fires once.
-    pub(crate) fn take_batch(&self, worker: usize, seq: u64) -> Option<Fault> {
-        self.lock().batch.remove(&(worker, seq))
+    pub(crate) fn take_batch(&self, shard: usize, seq: u64) -> Option<Fault> {
+        self.lock().batch.remove(&(shard, seq))
     }
 
-    /// Whether worker `worker`'s `incarnation`th init is planned to
+    /// Whether shard `shard`'s `incarnation`th init is planned to
     /// fail; removed so it fires once.
-    pub(crate) fn take_init(&self, worker: usize, incarnation: u32) -> bool {
-        self.lock().init.remove(&(worker, incarnation))
+    pub(crate) fn take_init(&self, shard: usize, incarnation: u32) -> bool {
+        self.lock().init.remove(&(shard, incarnation))
     }
 }
 
@@ -190,8 +190,8 @@ impl FaultState {
 /// `Default` gives production behavior with chaos off.
 #[derive(Clone, Debug)]
 pub struct FaultPolicy {
-    /// Total worker restarts the supervisor may spend across the
-    /// service's lifetime. Once exhausted, the next worker death fails
+    /// Total shard restarts the supervisor may spend across the
+    /// service's lifetime. Once exhausted, the next shard death fails
     /// the service fast: every pending and future request resolves
     /// with a typed [`super::ServiceError::WorkerFailed`] instead of
     /// hanging.

@@ -8,21 +8,27 @@
 //!   paper's §1 motivation): batches → step artifact → clipped noisy
 //!   update, with the RDP accountant tracking ε and the loss curve
 //!   recorded for `EXPERIMENTS.md`.
-//! * [`service`] — a per-example-gradient *service*: requests arrive
-//!   one example at a time, a dynamic batcher forms batches (size or
-//!   deadline triggered), worker threads answer each request with its
-//!   example's gradient norm and loss. Two executors: the PJRT grads
-//!   artifact (each worker owns a registry — PJRT handles are
-//!   thread-local), and the native ghost-norm engine
-//!   ([`ServiceHandle::start_native`]), which serves norm-only
-//!   queries on a clean checkout without ever materializing a
-//!   gradient. This is the "DP gradient sidecar" shape a production
-//!   DP-training system deploys. The service is fault-tolerant by
-//!   construction: panic-contained workers, a supervisor with a
-//!   restart budget, per-request deadlines with pre-execution
-//!   shedding, bounded split-retry, and typed
+//! * [`service`] — a multi-tenant per-example-gradient *service*:
+//!   requests arrive one example at a time tagged with a tenant id, a
+//!   dispatcher admits them fairly (weighted round-robin over
+//!   per-tenant queues), coalesces concurrent small requests into one
+//!   microbatch per worker shard (size or coalesce-window triggered),
+//!   and scatters per-example norms back to their originating
+//!   requests. Two executors: the PJRT grads artifact (each shard
+//!   owns a registry — PJRT handles are thread-local), and the native
+//!   ghost-norm engine ([`ServiceHandle::start_native`]), which
+//!   serves norm-only queries on a clean checkout without ever
+//!   materializing a gradient. This is the "DP gradient sidecar"
+//!   shape a production DP-training system deploys. The service is
+//!   fault-tolerant by construction: panic-contained shards, a
+//!   supervisor with a restart budget, per-request deadlines with
+//!   pre-execution shedding, bounded split-retry, and typed
 //!   [`ServiceError`] outcomes — every submitted request resolves in
 //!   bounded time under any fault.
+//! * [`tenants`] — per-tenant ε-budget accounting: one
+//!   [`crate::privacy::DpSgdAccountant`] per tenant, peeked before
+//!   each admission so over-budget tenants get a typed
+//!   `BudgetExhausted` while healthy tenants proceed.
 //! * [`fault`] — the deterministic fault-injection harness
 //!   ([`FaultPlan`]) and the service's fault-handling knobs
 //!   ([`FaultPolicy`]); off by default, zero-cost when off.
@@ -35,12 +41,14 @@ pub mod checkpoint;
 pub mod fault;
 pub mod queue;
 pub mod service;
+pub mod tenants;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use fault::{Fault, FaultPlan, FaultPolicy};
-pub use queue::BoundedQueue;
+pub use queue::{BoundedQueue, FairQueue};
 pub use service::{
     GradRequest, GradResponse, NativeServiceConfig, ServiceConfig, ServiceError, ServiceHandle,
 };
+pub use tenants::{Charge, TenantState, TenantTable, DEFAULT_TENANT};
 pub use trainer::{TrainReport, Trainer};

@@ -1,14 +1,23 @@
-//! Bounded MPMC queue with blocking push/pop — the backpressure
-//! primitive for the coordinator (no `tokio`/`crossbeam` in the
-//! offline vendor set, so this is a small condvar build).
+//! Bounded MPMC queues with blocking push/pop — the backpressure
+//! primitives for the coordinator (no `tokio`/`crossbeam` in the
+//! offline vendor set, so these are small condvar builds).
 //!
-//! Semantics:
-//! * `push` blocks while the queue is at capacity (backpressure);
-//!   returns `Err` with the item if the queue is closed.
+//! Two shapes:
+//! * [`BoundedQueue`] — one FIFO lane, the original primitive (batch
+//!   queues, supervisor events).
+//! * [`FairQueue`] — one bounded FIFO lane *per key* (the service's
+//!   tenants) drained by weighted round-robin, so one hot key cannot
+//!   starve the rest. This replaces the single request FIFO in the
+//!   multi-tenant service.
+//!
+//! Shared semantics:
+//! * `push` blocks while the (per-key) lane is at capacity
+//!   (backpressure); returns `Err` with the item if the queue is
+//!   closed.
 //! * `pop` blocks while the queue is empty; returns `None` once the
 //!   queue is closed *and* drained — the worker shutdown signal.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 
 struct Inner<T> {
@@ -132,6 +141,247 @@ impl<T> BoundedQueue<T> {
     /// rejected push (`Err`) caused by shutdown from one caused by a
     /// full queue — the service maps the former to `ShuttingDown` and
     /// the latter to `Overloaded`.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FairQueue
+// ---------------------------------------------------------------------------
+
+struct Lane<T> {
+    items: VecDeque<T>,
+    weight: u32,
+}
+
+struct FairInner<T> {
+    /// One bounded FIFO lane per key; `BTreeMap` so the round-robin
+    /// visit order is deterministic (sorted by key).
+    lanes: BTreeMap<String, Lane<T>>,
+    /// The key the round-robin cursor is parked on.
+    cursor: String,
+    /// Consecutive pops the cursor key may still take before the
+    /// cursor yields to the next non-empty key (its weight refills it).
+    credit: u32,
+    closed: bool,
+    len: usize,
+}
+
+/// A keyed bounded MPMC queue drained by weighted round-robin.
+///
+/// Producers push into their key's FIFO lane (each lane individually
+/// bounded, so one hot key saturates only its own lane); the consumer
+/// side visits non-empty lanes in sorted-key round-robin, taking up to
+/// `weight` consecutive items per visit. Within a lane, FIFO order is
+/// preserved. This is the service's per-tenant fair-admission
+/// structure: a tenant flooding its lane delays only itself, and every
+/// other key's items surface within one round-robin cycle (pinned by
+/// `wrr_interleaves_hot_and_cold_keys`).
+pub struct FairQueue<T> {
+    inner: Mutex<FairInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    per_key_capacity: usize,
+}
+
+impl<T> FairQueue<T> {
+    /// Empty queue; every key's lane is bounded by `per_key_capacity`.
+    pub fn new(per_key_capacity: usize) -> Self {
+        assert!(per_key_capacity > 0, "lane capacity must be positive");
+        FairQueue {
+            inner: Mutex::new(FairInner {
+                lanes: BTreeMap::new(),
+                cursor: String::new(),
+                credit: 0,
+                closed: false,
+                len: 0,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            per_key_capacity,
+        }
+    }
+
+    /// Set `key`'s round-robin weight: up to `weight` consecutive pops
+    /// per visit (default 1, clamped to at least 1). Creates the lane
+    /// if the key has never pushed.
+    pub fn set_weight(&self, key: &str, weight: u32) {
+        let mut g = self.inner.lock().unwrap();
+        let lane = g.lanes.entry(key.to_string()).or_insert_with(|| Lane {
+            items: VecDeque::new(),
+            weight: 1,
+        });
+        lane.weight = weight.max(1);
+    }
+
+    /// Blocking push into `key`'s lane; `Err(item)` if closed.
+    pub fn push(&self, key: &str, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            let room = !g
+                .lanes
+                .get(key)
+                .is_some_and(|l| l.items.len() >= self.per_key_capacity);
+            if room {
+                g.lanes
+                    .entry(key.to_string())
+                    .or_insert_with(|| Lane {
+                        items: VecDeque::new(),
+                        weight: 1,
+                    })
+                    .items
+                    .push_back(item);
+                g.len += 1;
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking push; `Err(item)` when `key`'s lane is full or the
+    /// queue is closed.
+    pub fn try_push(&self, key: &str, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        let full = g.closed
+            || g.lanes
+                .get(key)
+                .is_some_and(|l| l.items.len() >= self.per_key_capacity);
+        if full {
+            return Err(item);
+        }
+        g.lanes
+            .entry(key.to_string())
+            .or_insert_with(|| Lane {
+                items: VecDeque::new(),
+                weight: 1,
+            })
+            .items
+            .push_back(item);
+        g.len += 1;
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking weighted-round-robin pop; `None` once closed and
+    /// drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = Self::take(&mut g) {
+                self.not_full.notify_all();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with a deadline; `Ok(None)` on timeout, `Err(())` when
+    /// closed and drained. Remaining time is recomputed against the
+    /// absolute deadline every iteration, mirroring
+    /// [`BoundedQueue::pop_timeout`].
+    pub fn pop_timeout(&self, timeout: std::time::Duration) -> Result<Option<T>, ()> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = Self::take(&mut g) {
+                self.not_full.notify_all();
+                return Ok(Some(item));
+            }
+            if g.closed {
+                return Err(());
+            }
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
+                return Ok(None);
+            }
+            let (guard, _t) = self.not_empty.wait_timeout(g, left).unwrap();
+            g = guard;
+        }
+    }
+
+    /// The WRR core: take one item under the lock, or `None` if every
+    /// lane is empty. The cursor key keeps serving while it has both
+    /// credit and items; any switch to another key refills the credit
+    /// from that key's weight.
+    fn take(g: &mut FairInner<T>) -> Option<T> {
+        if g.len == 0 {
+            return None;
+        }
+        let keys: Vec<String> = g.lanes.keys().cloned().collect();
+        let n = keys.len();
+        // with credit left, resume at the cursor; otherwise start the
+        // scan at the key after it (its turn is over). An unknown
+        // cursor (fresh queue) starts at the first key.
+        let start = match keys.iter().position(|k| *k == g.cursor) {
+            Some(at) if g.credit > 0 => at,
+            Some(at) => at + 1,
+            None => 0,
+        };
+        for i in 0..n {
+            let key = &keys[(start + i) % n];
+            let lane = g.lanes.get_mut(key).expect("lane for listed key");
+            if let Some(item) = lane.items.pop_front() {
+                if *key != g.cursor || g.credit == 0 {
+                    g.credit = lane.weight.max(1);
+                    g.cursor = key.clone();
+                }
+                g.credit -= 1;
+                g.len -= 1;
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Close the queue: producers fail fast, consumers drain then stop.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items queued across every lane.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    /// Whether every lane is empty right now.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Items queued in `key`'s lane (0 for unknown keys).
+    pub fn depth(&self, key: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .lanes
+            .get(key)
+            .map_or(0, |l| l.items.len())
+    }
+
+    /// Every known key with its current lane depth, sorted by key.
+    pub fn depths(&self) -> Vec<(String, usize)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .lanes
+            .iter()
+            .map(|(k, l)| (k.clone(), l.items.len()))
+            .collect()
+    }
+
+    /// Whether the queue has been closed (same producer-side
+    /// disambiguation as [`BoundedQueue::is_closed`]).
     pub fn is_closed(&self) -> bool {
         self.inner.lock().unwrap().closed
     }
@@ -293,5 +543,102 @@ mod tests {
             .flat_map(|p| (0..100u64).map(move |i| p * 1000 + i))
             .sum();
         assert_eq!(total, expect);
+    }
+
+    // --- FairQueue -------------------------------------------------------
+
+    /// The fairness pin: a hot key with a deep backlog cannot starve
+    /// cold keys — every cold item surfaces within one round-robin
+    /// cycle of its push, regardless of the hot backlog ahead of it.
+    #[test]
+    fn wrr_interleaves_hot_and_cold_keys() {
+        let q: FairQueue<String> = FairQueue::new(64);
+        for i in 0..30 {
+            q.push("hot", format!("hot{i}")).unwrap();
+        }
+        for i in 0..3 {
+            q.push("cold_a", format!("a{i}")).unwrap();
+            q.push("cold_b", format!("b{i}")).unwrap();
+        }
+        // 3 keys, weight 1 each: every cycle of 3 pops takes one item
+        // per non-empty key, so after 9 pops all 6 cold items are out
+        let first9: Vec<String> = (0..9).map(|_| q.pop().unwrap()).collect();
+        for want in ["a0", "a1", "a2", "b0", "b1", "b2"] {
+            assert!(
+                first9.iter().any(|s| s == want),
+                "cold item {want} starved behind the hot backlog: {first9:?}"
+            );
+        }
+        // within each lane, FIFO order held
+        let hot: Vec<&String> = first9.iter().filter(|s| s.starts_with("hot")).collect();
+        assert_eq!(hot, ["hot0", "hot1", "hot2"], "lane order is FIFO");
+        // the rest is the remaining hot backlog
+        for i in 3..30 {
+            assert_eq!(q.pop().unwrap(), format!("hot{i}"));
+        }
+        assert!(q.is_empty());
+    }
+
+    /// Weights grant consecutive pops: weight 2 takes two items per
+    /// visit before yielding.
+    #[test]
+    fn wrr_weights_grant_consecutive_pops() {
+        let q: FairQueue<u32> = FairQueue::new(16);
+        q.set_weight("a", 2);
+        for i in 0..4 {
+            q.push("a", 10 + i).unwrap();
+            q.push("b", 20 + i).unwrap();
+        }
+        let order: Vec<u32> = (0..8).map(|_| q.pop().unwrap()).collect();
+        // deterministic: sorted keys, cursor starts before "a"
+        assert_eq!(order, [10, 11, 20, 12, 13, 21, 22, 23]);
+    }
+
+    /// Per-key capacity: a full lane rejects `try_push` for that key
+    /// only; other keys still have room. Blocking `push` is released
+    /// by a pop on the full lane.
+    #[test]
+    fn per_key_capacity_isolates_keys() {
+        let q: Arc<FairQueue<u32>> = Arc::new(FairQueue::new(1));
+        q.try_push("a", 1).unwrap();
+        assert_eq!(q.try_push("a", 2), Err(2), "a's lane is full");
+        q.try_push("b", 3).unwrap();
+        assert_eq!(q.depth("a"), 1);
+        assert_eq!(q.depth("b"), 1);
+        assert_eq!(q.len(), 2);
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push("a", 4).is_ok());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 2, "producer must be blocked on a's full lane");
+        assert_eq!(q.pop(), Some(1));
+        assert!(t.join().unwrap());
+        assert_eq!(q.depths().len(), 2);
+    }
+
+    /// Close semantics mirror `BoundedQueue`: producers fail fast with
+    /// their item, consumers drain then stop, `pop_timeout` reports
+    /// closed-and-drained as `Err`.
+    #[test]
+    fn fair_close_drains_then_stops() {
+        let q: FairQueue<u32> = FairQueue::new(4);
+        q.push("a", 1).unwrap();
+        q.push("b", 2).unwrap();
+        assert!(!q.is_closed());
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.push("a", 3), Err(3));
+        assert_eq!(q.try_push("c", 4), Err(4));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)), Err(()));
+    }
+
+    #[test]
+    fn fair_pop_timeout_empty_times_out() {
+        let q: FairQueue<u32> = FairQueue::new(4);
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), Ok(None));
+        q.push("a", 7).unwrap();
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), Ok(Some(7)));
     }
 }

@@ -1,51 +1,84 @@
-//! Per-example-gradient service: dynamic batching over an executor,
-//! fault-tolerant by construction.
+//! Multi-tenant per-example-gradient service: fair admission, dynamic
+//! microbatch coalescing across worker shards, fault-tolerant by
+//! construction.
 //!
 //! The deployment shape of the paper's technique in a DP training
-//! platform: clients hand over single examples, and want back that
-//! example's gradient *norm* and loss — never the full `(P,)` row,
-//! exactly like a DP-SGD implementation would clip-and-aggregate it
-//! in place. Two executors serve that contract:
+//! platform: clients hand over single examples tagged with a tenant
+//! id, and want back that example's gradient *norm* and loss — never
+//! the full `(P,)` row, exactly like a DP-SGD implementation would
+//! clip-and-aggregate it in place. Two executors serve that contract:
 //!
 //! * **pjrt** ([`ServiceHandle::start`]) — the original path: each
-//!   worker owns a PJRT registry (PJRT handles are `!Send`) and runs a
+//!   shard owns a PJRT registry (PJRT handles are `!Send`) and runs a
 //!   pre-lowered `grads` artifact, norms read off the materialized
 //!   rows. Static artifact shapes force exact-B batches, so the
 //!   executor pads partial batches (repeating the last example) and
 //!   drops the padded slots on the way out.
 //! * **native ghost-norm** ([`ServiceHandle::start_native`]) — the
-//!   norm-only query served natively: each worker runs
+//!   norm-only query served natively: each shard runs
 //!   [`ghost::perex_norms`] over the formed batch, so per-example
 //!   norms are answered without any gradient ever being materialized,
 //!   on a clean checkout with zero artifacts. Batches are
-//!   shape-flexible: the tail of a deadline-flushed batch simply runs
+//!   shape-flexible: the tail of a window-flushed batch simply runs
 //!   smaller, no padding.
 //!
 //! Topology (shared by both):
 //!
 //! ```text
-//!   submit() ─▶ request queue (bounded, backpressure)
-//!                  │  batch former: flush at B requests
-//!                  ▼  or after max_wait; sheds expired
-//!              batch queue (bounded)
+//!   submit() ─▶ ε-budget gate (per-tenant DpSgdAccountant peek;
+//!               over-budget → BudgetExhausted, nothing queued)
 //!                  │
+//!                  ▼
+//!          per-tenant lanes (FairQueue: bounded per lane,
+//!                  │          weighted round-robin pop)
+//!                  ▼  dispatcher: coalesce up to B requests
+//!                  │  within coalesce_max_wait; sheds expired;
+//!                  │  routes round-robin across shards
 //!       ┌──────────┼──────────┐
 //!       ▼          ▼          ▼
-//!    worker 0   worker 1   worker 2     ◀── supervisor (restarts,
+//!   shard q 0   shard q 1  shard q 2     (bounded, per shard)
+//!       ▼          ▼          ▼
+//!    shard 0    shard 1    shard 2      ◀── supervisor (restarts,
 //!       └──────────┴──────────┘             restart budget, backoff)
 //!                  ▼
 //!           response table (+condvar), wait(id) / wait_timeout(id)
 //! ```
 //!
+//! **Coalescing semantics.** The dispatcher holds an under-filled
+//! microbatch open for up to `coalesce_max_wait`, so concurrent small
+//! requests share one tape/walk — the amortization the paper's batch
+//! formulation exists for. A window of 0 disables coalescing: every
+//! request runs as its own batch of one. Batches may mix tenants
+//! (tenancy is accounting and admission order, not data isolation —
+//! norms are per-example by construction), and per-example norms are
+//! scattered back to their originating requests. Coalesced answers
+//! are **bitwise identical** to one-by-one submission: every
+//! per-example kernel (GEMM rows, per-example norm reductions) is an
+//! independent serial FMA chain, pinned by
+//! `tests/service_coalescing.rs`.
+//!
+//! **Fairness rule.** Admission is weighted round-robin over
+//! per-tenant lanes: a tenant with weight *w* gets up to *w*
+//! consecutive pops when its lane is non-empty, then the cursor moves
+//! on — one hot tenant can delay an idle service by at most its lane
+//! capacity, never starve another lane. Backpressure is per tenant
+//! too (`queue_capacity` bounds each lane, not their sum).
+//!
+//! **Budget accounting.** Every tenant has its own
+//! [`crate::privacy::DpSgdAccountant`]; admission *peeks* one step
+//! ahead and refuses with [`ServiceError::BudgetExhausted`] before
+//! the ledger records anything (see [`crate::coordinator::tenants`]).
+//!
 //! **The fault contract.** Every submitted request resolves — `Ok` or
 //! a typed [`ServiceError`] — within bounded time, under any fault:
 //!
-//! * workers wrap batch execution in `catch_unwind`, so a panic fails
+//! * shards wrap batch execution in `catch_unwind`, so a panic fails
 //!   the batch typed instead of killing the thread and orphaning it;
 //! * a batch that fails with attempts left is split into single-slot
-//!   batches and retried ([`crate::coordinator::fault::FaultPolicy::max_attempts`]), so one
+//!   batches and retried on its own shard
+//!   ([`crate::coordinator::fault::FaultPolicy::max_attempts`]), so one
 //!   poisoned example cannot take down its B−1 neighbors' answers;
-//! * a supervisor thread joins dead workers and restarts them with
+//! * a supervisor thread joins dead shards and restarts them with
 //!   capped exponential backoff; once the restart budget is exhausted
 //!   it fails the service *fast* — every pending and future request
 //!   resolves with [`ServiceError::WorkerFailed`], nothing hangs;
@@ -54,13 +87,16 @@
 //!   execution; [`ServiceHandle::try_submit`] gives non-blocking
 //!   admission control ([`ServiceError::Overloaded`]);
 //! * the deterministic fault-injection hook
-//!   ([`crate::coordinator::fault::FaultPlan`]) drives all of the
-//!   above in `tests/service_robustness.rs`; with no plan attached the
-//!   per-batch probe is one `Option` branch and the served answers are
+//!   ([`crate::coordinator::fault::FaultPlan`], keyed per shard)
+//!   drives all of the above in `tests/service_robustness.rs` and
+//!   `tests/service_tenants.rs`; with no plan attached the per-batch
+//!   probe is one `Option` branch and the served answers are
 //!   bit-identical to the pre-fault-layer path.
 
+use crate::config::TenantTuning;
 use crate::coordinator::fault::{Fault, FaultPolicy, FaultState};
-use crate::coordinator::queue::BoundedQueue;
+use crate::coordinator::queue::{BoundedQueue, FairQueue};
+use crate::coordinator::tenants::{Charge, TenantTable, DEFAULT_TENANT};
 use crate::ghost::{self, ClippedStepPlanner, GhostMode};
 use crate::metrics;
 use crate::models::ModelSpec;
@@ -80,6 +116,28 @@ pub struct GradRequest {
     pub image: Vec<f32>,
     /// Integer class label.
     pub label: i32,
+    /// The tenant this request is accounted and queued under. An
+    /// empty string is normalized to
+    /// [`DEFAULT_TENANT`](crate::coordinator::tenants::DEFAULT_TENANT)
+    /// at submit, so single-tenant callers never think about tenancy.
+    pub tenant: String,
+}
+
+impl GradRequest {
+    /// A request under the default tenant.
+    pub fn new(image: Vec<f32>, label: i32) -> GradRequest {
+        GradRequest {
+            image,
+            label,
+            tenant: DEFAULT_TENANT.to_string(),
+        }
+    }
+
+    /// Re-tag this request with a tenant id (builder style).
+    pub fn with_tenant(mut self, tenant: &str) -> GradRequest {
+        self.tenant = tenant.to_string();
+        self
+    }
 }
 
 /// What the service answers with.
@@ -89,8 +147,8 @@ pub struct GradResponse {
     pub grad_norm: f32,
     /// This example's loss.
     pub loss: f32,
-    /// Which worker served it (observability).
-    pub worker: usize,
+    /// Which worker shard served it (observability).
+    pub shard: usize,
     /// Queue + batching + execute time, as seen by the service.
     pub latency: Duration,
 }
@@ -100,11 +158,22 @@ pub struct GradResponse {
 /// Every submit/wait API returns one of these instead of a stringly
 /// error, so callers can branch on the failure shape (shed vs retry-
 /// exhausted vs shutdown) instead of parsing messages.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum ServiceError {
     /// Non-blocking admission ([`ServiceHandle::try_submit`]) found
-    /// the request queue full. Back off and retry, or shed load.
+    /// the tenant's request lane full. Back off and retry, or shed
+    /// load.
     Overloaded,
+    /// The tenant's ε-budget cannot afford another accounted step.
+    /// Nothing was charged or queued; other tenants are unaffected.
+    BudgetExhausted {
+        /// The refused tenant.
+        tenant: String,
+        /// ε the tenant's ledger would reach if this request ran.
+        epsilon: f64,
+        /// The configured ε-budget it would exceed.
+        budget: f64,
+    },
     /// The request's deadline passed before an answer was produced —
     /// either shed by the batch former pre-execution, or the waiter
     /// gave up in [`ServiceHandle::wait_timeout`].
@@ -134,6 +203,15 @@ impl std::fmt::Display for ServiceError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ServiceError::Overloaded => write!(f, "service overloaded: request queue is full"),
+            ServiceError::BudgetExhausted {
+                tenant,
+                epsilon,
+                budget,
+            } => write!(
+                f,
+                "tenant {tenant} privacy budget exhausted: \
+                 next request would reach epsilon {epsilon:.4} > budget {budget:.4}"
+            ),
             ServiceError::DeadlineExceeded => write!(f, "request deadline exceeded"),
             ServiceError::WorkerFailed { attempts, detail } => {
                 write!(f, "worker failed after {attempts} attempt(s): {detail}")
@@ -154,14 +232,21 @@ pub struct ServiceConfig {
     pub artifact: String,
     /// Where lowered artifacts live.
     pub artifacts_dir: String,
-    /// Executor thread count.
-    pub workers: usize,
-    /// Flush a partial batch after this long.
-    pub max_wait: Duration,
-    /// Request-queue capacity (backpressure bound).
+    /// Worker shard count — executor threads, each with its own batch
+    /// queue.
+    pub shards: usize,
+    /// Coalescing window: hold an under-filled microbatch open this
+    /// long for more concurrent requests (0 = no coalescing, every
+    /// request is its own batch of one).
+    pub coalesce_max_wait: Duration,
+    /// Per-tenant request-lane capacity (backpressure bound — each
+    /// tenant gets its own bounded lane).
     pub queue_capacity: usize,
     /// Fault handling: restart/retry budgets, optional injection plan.
     pub policy: FaultPolicy,
+    /// Tenant accounting: shared noise geometry + per-tenant
+    /// ε-budgets and fair-admission weights.
+    pub tenants: TenantTuning,
 }
 
 impl Default for ServiceConfig {
@@ -169,10 +254,11 @@ impl Default for ServiceConfig {
         ServiceConfig {
             artifact: String::new(),
             artifacts_dir: "artifacts".into(),
-            workers: 2,
-            max_wait: Duration::from_millis(20),
+            shards: 2,
+            coalesce_max_wait: Duration::from_millis(20),
             queue_capacity: 256,
             policy: FaultPolicy::default(),
+            tenants: TenantTuning::default(),
         }
     }
 }
@@ -182,11 +268,12 @@ impl Default for ServiceConfig {
 pub struct NativeServiceConfig {
     /// The model gradients norms are taken against.
     pub model: ModelSpec,
-    /// Maximum dynamic batch; deadline flushes may run smaller.
+    /// Maximum dynamic batch; window flushes may run smaller.
     pub batch: usize,
-    /// Executor thread count.
-    pub workers: usize,
-    /// Ghost-engine worker threads *per service worker* (0 = cores).
+    /// Worker shard count — executor threads, each with its own batch
+    /// queue.
+    pub shards: usize,
+    /// Ghost-engine worker threads *per shard* (0 = cores).
     pub threads: usize,
     /// Conv-layer norm-path policy (see [`GhostMode`]).
     pub mode: GhostMode,
@@ -194,12 +281,18 @@ pub struct NativeServiceConfig {
     /// intra-microbatch parallel path (`[train] inner_parallel`);
     /// results are bit-identical either way.
     pub inner_parallel: bool,
-    /// Flush a partial batch after this long.
-    pub max_wait: Duration,
-    /// Request-queue capacity (backpressure bound).
+    /// Coalescing window: hold an under-filled microbatch open this
+    /// long for more concurrent requests (0 = no coalescing, every
+    /// request is its own batch of one).
+    pub coalesce_max_wait: Duration,
+    /// Per-tenant request-lane capacity (backpressure bound — each
+    /// tenant gets its own bounded lane).
     pub queue_capacity: usize,
     /// Fault handling: restart/retry budgets, optional injection plan.
     pub policy: FaultPolicy,
+    /// Tenant accounting: shared noise geometry + per-tenant
+    /// ε-budgets and fair-admission weights.
+    pub tenants: TenantTuning,
 }
 
 /// What a worker thread needs to build its executor. One clone per
@@ -288,6 +381,9 @@ struct QueuedRequest {
 #[derive(Clone)]
 struct Slot {
     id: u64,
+    /// The tenant charged for this slot — keys the per-tenant
+    /// served/shed/retry counters at completion time.
+    tenant: String,
     enqueued: Instant,
     deadline: Option<Instant>,
 }
@@ -308,17 +404,42 @@ struct Shared {
     example_len: usize,
     /// Per-request execution attempt cap (from the policy, min 1).
     max_attempts: u32,
-    requests: BoundedQueue<QueuedRequest>,
-    batches: BoundedQueue<Batch>,
+    /// Per-tenant request lanes, popped weighted-round-robin by the
+    /// dispatcher.
+    requests: FairQueue<QueuedRequest>,
+    /// One bounded batch queue per shard — the dispatcher routes
+    /// formed microbatches round-robin across these.
+    batches: Vec<BoundedQueue<Batch>>,
     pending: PendingTable,
-    /// Per worker slot: cumulative batches popped, counted across
-    /// restarts — the `FaultPlan`'s batch-sequence key.
+    /// Per shard: cumulative batches popped, counted across restarts
+    /// — the `FaultPlan`'s batch-sequence key.
     batch_seq: Vec<AtomicU64>,
     /// Injected-fault store; `None` (production) costs one branch.
     faults: Option<FaultState>,
+    /// Per-tenant ε-budget ledgers (charge at submit, refund on
+    /// failed admission).
+    tenants: TenantTable,
+    /// The service registry — held here so pipeline threads can mint
+    /// per-tenant counters (`service.tenant.<name>.*`) on first use.
+    metrics: Arc<metrics::Registry>,
     shed: Arc<metrics::Counter>,
     retries: Arc<metrics::Counter>,
     worker_failures: Arc<metrics::Counter>,
+}
+
+impl Shared {
+    /// Per-tenant counter in the service registry, e.g.
+    /// `service.tenant.acme.served`.
+    fn tenant_counter(&self, tenant: &str, kind: &str) -> Arc<metrics::Counter> {
+        self.metrics.counter(&format!("service.tenant.{tenant}.{kind}"))
+    }
+
+    /// Close every shard's batch queue (shutdown / fail-fast).
+    fn close_batches(&self) {
+        for q in &self.batches {
+            q.close();
+        }
+    }
 }
 
 /// Handle to a running service; [`shutdown`](ServiceHandle::shutdown)
@@ -366,10 +487,11 @@ impl ServiceHandle {
             format!("pjrt:{}", cfg.artifact),
             batch,
             example_len,
-            cfg.workers,
-            cfg.max_wait,
+            cfg.shards,
+            cfg.coalesce_max_wait,
             cfg.queue_capacity,
             cfg.policy,
+            cfg.tenants,
             WorkerSpec::Pjrt {
                 artifacts_dir: cfg.artifacts_dir,
                 artifact: cfg.artifact,
@@ -397,10 +519,11 @@ impl ServiceHandle {
             format!("native:ghostnorm:{}", cfg.model.arch),
             cfg.batch,
             c * h * w,
-            cfg.workers,
-            cfg.max_wait,
+            cfg.shards,
+            cfg.coalesce_max_wait,
             cfg.queue_capacity,
             cfg.policy,
+            cfg.tenants,
             WorkerSpec::Native {
                 model: cfg.model,
                 threads: cfg.threads,
@@ -416,53 +539,59 @@ impl ServiceHandle {
         label: String,
         batch: usize,
         example_len: usize,
-        workers: usize,
-        max_wait: Duration,
+        shards: usize,
+        coalesce_max_wait: Duration,
         queue_capacity: usize,
         policy: FaultPolicy,
+        tenants: TenantTuning,
         wspec: WorkerSpec,
         theta: Vec<f32>,
     ) -> Result<ServiceHandle> {
-        let workers = workers.max(1);
+        let shards = shards.max(1);
         let metrics = Arc::new(metrics::Registry::default());
         let theta = Arc::new(theta);
         let shared = Arc::new(Shared {
             state: AtomicUsize::new(RUNNING),
             example_len,
             max_attempts: policy.max_attempts.max(1),
-            requests: BoundedQueue::new(queue_capacity),
-            // `+ batch` of slack so one failing full batch can always
-            // split into singles without tripping the retry-shed path
-            batches: BoundedQueue::new(workers * 2 + batch),
+            requests: FairQueue::new(queue_capacity),
+            // `2 + batch` slack per shard so one failing full batch
+            // can always split into singles on its own shard without
+            // tripping the retry-shed path
+            batches: (0..shards)
+                .map(|_| BoundedQueue::new(2 + batch))
+                .collect(),
             pending: PendingTable::default(),
-            batch_seq: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            batch_seq: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             faults: policy.faults.as_ref().map(FaultState::new),
+            tenants: TenantTable::new(tenants),
+            metrics: metrics.clone(),
             shed: metrics.counter("service.shed"),
             retries: metrics.counter("service.retries"),
             worker_failures: metrics.counter("service.worker_failures"),
         });
         let restarts = metrics.counter("service.worker_restarts");
-        // sized so worker exit reports never block: one slot per
-        // possible worker life (initial spawns + restart budget)
+        // sized so shard exit reports never block: one slot per
+        // possible shard life (initial spawns + restart budget)
         let events: Arc<BoundedQueue<WorkerEvent>> = Arc::new(BoundedQueue::new(
-            workers + policy.restart_budget as usize + 4,
+            shards + policy.restart_budget as usize + 4,
         ));
 
         let mut threads = Vec::new();
 
-        // --- batch former -------------------------------------------------
+        // --- dispatcher ---------------------------------------------------
         {
             let shared = shared.clone();
             let batch_fill = metrics.histogram("service.batch_fill");
             threads.push(
                 std::thread::Builder::new()
-                    .name("batch-former".into())
-                    .spawn(move || run_batch_former(&shared, batch, max_wait, &batch_fill))
-                    .expect("spawning batch former"),
+                    .name("service-dispatcher".into())
+                    .spawn(move || run_dispatcher(&shared, batch, coalesce_max_wait, &batch_fill))
+                    .expect("spawning service dispatcher"),
             );
         }
 
-        // --- workers + supervisor -----------------------------------------
+        // --- shards + supervisor ------------------------------------------
         let spawner = WorkerSpawner {
             wspec,
             theta: theta.clone(),
@@ -471,16 +600,16 @@ impl ServiceHandle {
             metrics: metrics.clone(),
         };
         let handles: Vec<Option<std::thread::JoinHandle<()>>> =
-            (0..workers).map(|w| Some(spawner.spawn(w, 0))).collect();
+            (0..shards).map(|w| Some(spawner.spawn(w, 0))).collect();
         {
             let sup = Supervisor {
                 shared: shared.clone(),
                 spawner,
                 handles,
-                incarnation: vec![0; workers],
-                per_worker: vec![0; workers],
+                incarnation: vec![0; shards],
+                per_worker: vec![0; shards],
                 used: 0,
-                live: workers,
+                live: shards,
                 budget: policy.restart_budget,
                 backoff_base: policy.backoff_base,
                 backoff_cap: policy.backoff_cap,
@@ -519,10 +648,22 @@ impl ServiceHandle {
         self.metrics
             .gauge("service.queue_depth")
             .set(self.shared.requests.len() as f64);
+        let batch_depth: usize = self.shared.batches.iter().map(|q| q.len()).sum();
         self.metrics
             .gauge("service.batch_queue_depth")
-            .set(self.shared.batches.len() as f64);
+            .set(batch_depth as f64);
+        for (tenant, depth) in self.shared.requests.depths() {
+            self.metrics
+                .gauge(&format!("service.tenant.{tenant}.depth"))
+                .set(depth as f64);
+        }
         format!("{}{}", self.metrics.snapshot(), metrics::global_snapshot())
+    }
+
+    /// The per-tenant ε ledgers — budgets, charged steps, current ε —
+    /// for reporting (the loadtest bench's per-tenant rows).
+    pub fn tenants(&self) -> &TenantTable {
+        &self.shared.tenants
     }
 
     /// The frozen parameter vector gradients are taken at.
@@ -563,10 +704,13 @@ impl ServiceHandle {
 
     fn enqueue(
         &self,
-        req: GradRequest,
+        mut req: GradRequest,
         deadline: Option<Instant>,
         blocking: bool,
     ) -> Result<u64, ServiceError> {
+        if req.tenant.is_empty() {
+            req.tenant = DEFAULT_TENANT.to_string();
+        }
         if req.image.len() != self.shared.example_len {
             return Err(ServiceError::InvalidRequest(format!(
                 "request image has {} values, model expects {}",
@@ -579,6 +723,20 @@ impl ServiceHandle {
             FAILED => return Err(self.failed_error()),
             _ => {}
         }
+        // ε-budget gate: peek-then-charge atomically; a refused
+        // request charges nothing and never enters a queue.
+        let tenant = req.tenant.clone();
+        if let Charge::Refused { epsilon, budget } = self.shared.tenants.charge(&tenant) {
+            self.shared.tenant_counter(&tenant, "budget_exhausted").inc();
+            return Err(ServiceError::BudgetExhausted {
+                tenant,
+                epsilon,
+                budget,
+            });
+        }
+        self.shared
+            .requests
+            .set_weight(&tenant, self.shared.tenants.weight(&tenant));
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let q = QueuedRequest {
             id,
@@ -587,13 +745,15 @@ impl ServiceHandle {
             deadline,
         };
         let accepted = if blocking {
-            self.shared.requests.push(q).is_ok()
+            self.shared.requests.push(&tenant, q).is_ok()
         } else {
-            self.shared.requests.try_push(q).is_ok()
+            self.shared.requests.try_push(&tenant, q).is_ok()
         };
         if accepted {
             return Ok(id);
         }
+        // the tenant must not pay ε for a request that never ran
+        self.shared.tenants.refund(&tenant);
         if self.shared.requests.is_closed() {
             match self.shared.state.load(Ordering::Relaxed) {
                 FAILED => Err(self.failed_error()),
@@ -681,8 +841,37 @@ impl ServiceHandle {
         ids.into_iter().map(|id| self.wait(id)).collect()
     }
 
-    /// Drain and stop all threads (batch former, supervisor, and —
-    /// through the supervisor — every worker).
+    /// Like [`submit_all`](Self::submit_all), but with one deadline
+    /// `budget` covering the whole slice. The absolute deadline is
+    /// snapshotted **once**, before the first submit — computing it
+    /// per request from the then-current clock would silently grant
+    /// later requests in a large slice longer deadlines than earlier
+    /// ones (submission itself takes time, and a blocking submit can
+    /// park the caller arbitrarily long). Every answer is collected
+    /// per request, so one shed slot doesn't discard its neighbors'
+    /// results.
+    pub fn submit_all_with_deadline(
+        &self,
+        reqs: &[GradRequest],
+        budget: Duration,
+    ) -> Vec<Result<GradResponse, ServiceError>> {
+        let deadline = Instant::now() + budget;
+        let tickets: Vec<Result<u64, ServiceError>> = reqs
+            .iter()
+            .map(|r| self.enqueue(r.clone(), Some(deadline), true))
+            .collect();
+        tickets
+            .into_iter()
+            .map(|t| {
+                let id = t?;
+                let left = deadline.saturating_duration_since(Instant::now());
+                self.wait_timeout(id, left)
+            })
+            .collect()
+    }
+
+    /// Drain and stop all threads (dispatcher, supervisor, and —
+    /// through the supervisor — every shard).
     pub fn shutdown(mut self) {
         let _ = self.shared.state.compare_exchange(
             RUNNING,
@@ -691,8 +880,8 @@ impl ServiceHandle {
             Ordering::Relaxed,
         );
         self.shared.requests.close();
-        // batch former closes `batches` on its way out; the
-        // supervisor joins workers as they drain and exit
+        // the dispatcher closes every shard queue on its way out; the
+        // supervisor joins shards as they drain and exit
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -700,19 +889,23 @@ impl ServiceHandle {
 }
 
 // ---------------------------------------------------------------------------
-// batch former
+// dispatcher
 // ---------------------------------------------------------------------------
 
-/// Pop requests, form batches of up to `batch` (flushing after
-/// `max_wait`), shed already-expired requests pre-execution, push to
-/// the batch queue. Exits when the request queue closes (shutdown) or
-/// the batch queue closes under it (service failure).
-fn run_batch_former(
+/// Pop requests weighted-round-robin from the per-tenant lanes,
+/// coalesce up to `batch` of them within the `window` (0 = no
+/// coalescing: singleton batches), shed already-expired requests
+/// pre-execution, and route formed microbatches round-robin across
+/// the shard queues. Exits when the request queue closes (shutdown)
+/// or every shard queue closes under it (service failure).
+fn run_dispatcher(
     shared: &Shared,
     batch: usize,
-    max_wait: Duration,
+    window: Duration,
     batch_fill: &metrics::Histogram,
 ) {
+    let shards = shared.batches.len();
+    let mut next_shard = 0usize;
     loop {
         // block for the batch head…
         let Some(first) = shared.requests.pop() else {
@@ -721,22 +914,25 @@ fn run_batch_former(
         let Some(first) = admit(shared, first) else {
             continue;
         };
-        let flush_at = Instant::now() + max_wait;
         let mut got = vec![first];
-        // …then fill until B or deadline
-        while got.len() < batch {
-            let left = flush_at.saturating_duration_since(Instant::now());
-            if left.is_zero() {
-                break;
-            }
-            match shared.requests.pop_timeout(left) {
-                Ok(Some(r)) => {
-                    if let Some(r) = admit(shared, r) {
-                        got.push(r);
-                    }
+        // …then coalesce until B or the window closes; WRR pop order
+        // means a coalesced batch interleaves tenants fairly
+        if !window.is_zero() {
+            let flush_at = Instant::now() + window;
+            while got.len() < batch {
+                let left = flush_at.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
                 }
-                Ok(None) => break, // timed out
-                Err(()) => break,  // closed: flush what we have
+                match shared.requests.pop_timeout(left) {
+                    Ok(Some(r)) => {
+                        if let Some(r) = admit(shared, r) {
+                            got.push(r);
+                        }
+                    }
+                    Ok(None) => break, // window closed
+                    Err(()) => break,  // queue closed: flush what we have
+                }
             }
         }
         batch_fill.observe_secs(got.len() as f64 / batch as f64);
@@ -746,6 +942,7 @@ fn run_batch_former(
         for q in got {
             slots.push(Slot {
                 id: q.id,
+                tenant: q.req.tenant.clone(),
                 enqueued: q.enqueued,
                 deadline: q.deadline,
             });
@@ -758,13 +955,28 @@ fn run_batch_former(
             y,
             attempts: 0,
         };
-        if shared.batches.push(b).is_err() {
-            // batch queue closed under us: the service failed fast and
-            // `pending.failed` already answers these slots' waiters
-            break;
+        // route: try the round-robin home shard, then any shard with
+        // room, then block on the home shard (backpressure)
+        let home = next_shard % shards;
+        next_shard = next_shard.wrapping_add(1);
+        let mut unplaced = Some(b);
+        for i in 0..shards {
+            let candidate = unplaced.take().expect("batch still unrouted");
+            match shared.batches[(home + i) % shards].try_push(candidate) {
+                Ok(()) => break,
+                Err(back) => unplaced = Some(back),
+            }
+        }
+        if let Some(b) = unplaced {
+            if shared.batches[home].push(b).is_err() {
+                // shard queue closed under us: the service failed fast
+                // and `pending.failed` already answers these slots'
+                // waiters
+                break;
+            }
         }
     }
-    shared.batches.close();
+    shared.close_batches();
 }
 
 /// Deadline gate at batch formation: an expired request is shed —
@@ -775,6 +987,7 @@ fn admit(shared: &Shared, q: QueuedRequest) -> Option<QueuedRequest> {
         return Some(q);
     }
     shared.shed.inc();
+    shared.tenant_counter(&q.req.tenant, "shed").inc();
     let mut g = shared.pending.lock();
     if !g.abandoned.remove(&q.id) {
         g.done.insert(q.id, Err(ServiceError::DeadlineExceeded));
@@ -966,12 +1179,12 @@ impl Executor {
     }
 }
 
-/// One executor thread life: build the backend this worker owns, then
-/// serve batches until the queue closes, a planned death fires, or
-/// init fails. Batch execution is panic-contained; the return value is
-/// the exit report the spawner pushes to the supervisor.
+/// One shard thread life: build the executor this shard owns, then
+/// serve its own batch queue until it closes, a planned death fires,
+/// or init fails. Batch execution is panic-contained; the return
+/// value is the exit report the spawner pushes to the supervisor.
 fn run_worker(
-    worker_id: usize,
+    shard_id: usize,
     incarnation: u32,
     wspec: &WorkerSpec,
     theta: &Arc<Vec<f32>>,
@@ -980,7 +1193,7 @@ fn run_worker(
     served: &metrics::Counter,
 ) -> ExitReason {
     if let Some(f) = &shared.faults {
-        if f.take_init(worker_id, incarnation) {
+        if f.take_init(shard_id, incarnation) {
             return ExitReason::InitFailed("injected init failure".into());
         }
     }
@@ -989,11 +1202,11 @@ fn run_worker(
         Err(e) => return ExitReason::InitFailed(format!("worker init: {e:#}")),
     };
     loop {
-        let Some(b) = shared.batches.pop() else {
+        let Some(b) = shared.batches[shard_id].pop() else {
             return ExitReason::Clean;
         };
-        let seq = shared.batch_seq[worker_id].fetch_add(1, Ordering::Relaxed);
-        let mut fault = shared.faults.as_ref().and_then(|f| f.take_batch(worker_id, seq));
+        let seq = shared.batch_seq[shard_id].fetch_add(1, Ordering::Relaxed);
+        let mut fault = shared.faults.as_ref().and_then(|f| f.take_batch(shard_id, seq));
         if let Some(Fault::Delay(d)) = fault {
             std::thread::sleep(d);
             fault = None; // a delayed batch then executes normally
@@ -1010,7 +1223,7 @@ fn run_worker(
             Ok((norms, losses))
                 if norms.len() >= b.slots.len() && losses.len() >= b.slots.len() =>
             {
-                complete_ok(shared, &b, worker_id, &norms, &losses, served);
+                complete_ok(shared, &b, shard_id, &norms, &losses, served);
             }
             Ok((norms, losses)) => {
                 // guarded here so a short executor output fails the
@@ -1021,9 +1234,9 @@ fn run_worker(
                     losses.len(),
                     b.slots.len()
                 );
-                handle_failure(shared, b, detail);
+                handle_failure(shared, shard_id, b, detail);
             }
-            Err(detail) => handle_failure(shared, b, detail),
+            Err(detail) => handle_failure(shared, shard_id, b, detail),
         }
         if die {
             return ExitReason::Crashed("injected worker death".into());
@@ -1062,7 +1275,7 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 fn complete_ok(
     shared: &Shared,
     b: &Batch,
-    worker_id: usize,
+    shard_id: usize,
     norms: &[f32],
     losses: &[f32],
     served: &metrics::Counter,
@@ -1077,11 +1290,12 @@ fn complete_ok(
             Ok(GradResponse {
                 grad_norm: norms[slot_idx],
                 loss: losses[slot_idx],
-                worker: worker_id,
+                shard: shard_id,
                 latency: slot.enqueued.elapsed(),
             }),
         );
         served.inc();
+        shared.tenant_counter(&slot.tenant, "served").inc();
     }
     drop(g);
     shared.pending.cv.notify_all();
@@ -1101,10 +1315,12 @@ fn complete_err(shared: &Shared, slots: &[Slot], err: &ServiceError) {
 }
 
 /// A batch failed. With attempts left (and the service still
-/// running), split it into single-slot batches and requeue them —
-/// bounded retry, so one poisoned example can't take down its B−1
-/// neighbors. At the attempt cap, every slot fails typed.
-fn handle_failure(shared: &Shared, b: Batch, detail: String) {
+/// running), split it into single-slot batches and requeue them on
+/// the *same shard* — bounded retry, so one poisoned example can't
+/// take down its B−1 neighbors, and the shard's batch-sequence fault
+/// keying stays deterministic. At the attempt cap, every slot fails
+/// typed.
+fn handle_failure(shared: &Shared, shard_id: usize, b: Batch, detail: String) {
     shared.worker_failures.inc();
     let attempts = b.attempts + 1;
     let retryable =
@@ -1119,6 +1335,7 @@ fn handle_failure(shared: &Shared, b: Batch, detail: String) {
         if slot.deadline.is_some_and(|d| d <= now) {
             // no point retrying an answer nobody will take
             shared.shed.inc();
+            shared.tenant_counter(&slot.tenant, "shed").inc();
             complete_err(shared, std::slice::from_ref(slot), &ServiceError::DeadlineExceeded);
             continue;
         }
@@ -1128,8 +1345,9 @@ fn handle_failure(shared: &Shared, b: Batch, detail: String) {
             y: vec![b.y[i]],
             attempts,
         };
-        if shared.batches.try_push(single).is_ok() {
+        if shared.batches[shard_id].try_push(single).is_ok() {
             shared.retries.inc();
+            shared.tenant_counter(&slot.tenant, "retries").inc();
         } else {
             // retry queue full or closed: resolve now rather than
             // block a worker (the no-hang invariant outranks retry)
@@ -1255,30 +1473,33 @@ impl Supervisor {
                 self.budget
             ),
         });
-        self.shared.batches.close();
+        self.shared.close_batches();
         self.shared.requests.close();
     }
 
-    /// All worker slots are down. If the pipeline is still open (the
-    /// batch former could keep producing batches nobody will serve —
+    /// All shard slots are down. If the pipeline is still open (the
+    /// dispatcher could keep producing batches nobody will serve —
     /// the old `complete_all` hang), fail the service; then drain and
-    /// resolve whatever batches are still queued, and reap any
-    /// handles left.
+    /// resolve whatever batches are still queued on any shard, and
+    /// reap any handles left.
     fn finish(&mut self) {
-        if self.shared.state.load(Ordering::Relaxed) != FAILED && !self.shared.batches.is_closed()
+        if self.shared.state.load(Ordering::Relaxed) != FAILED
+            && self.shared.batches.iter().any(|q| !q.is_closed())
         {
             self.enter_failed("all workers exited");
         }
-        while let Some(b) = self.shared.batches.pop() {
-            let err = self
-                .shared
-                .pending
-                .failed_error()
-                .unwrap_or(ServiceError::WorkerFailed {
-                    attempts: b.attempts + 1,
-                    detail: "no live workers".into(),
-                });
-            complete_err(&self.shared, &b.slots, &err);
+        for q in &self.shared.batches {
+            while let Some(b) = q.pop() {
+                let err = self
+                    .shared
+                    .pending
+                    .failed_error()
+                    .unwrap_or(ServiceError::WorkerFailed {
+                        attempts: b.attempts + 1,
+                        detail: "no live workers".into(),
+                    });
+                complete_err(&self.shared, &b.slots, &err);
+            }
         }
         for slot in self.handles.iter_mut() {
             if let Some(h) = slot.take() {
@@ -1305,12 +1526,30 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("2 attempt"), "{s}");
         assert!(s.contains("boom"), "{s}");
+        let e = ServiceError::BudgetExhausted {
+            tenant: "acme".into(),
+            epsilon: 3.25,
+            budget: 3.0,
+        };
+        let s = e.to_string();
+        assert!(s.contains("acme"), "{s}");
+        assert!(s.contains("3.25"), "{s}");
+        assert!(s.contains("budget"), "{s}");
         // the submit-side shape error keeps its long-standing message
         let e = ServiceError::InvalidRequest("request image has 3 values, model expects 12".into());
         assert!(e.to_string().contains("values"), "{e}");
         // and the typed error converts into anyhow contexts via `?`
         let any: anyhow::Error = ServiceError::Overloaded.into();
         assert!(format!("{any:#}").contains("overloaded"));
+    }
+
+    #[test]
+    fn grad_request_builders_tag_tenants() {
+        let r = GradRequest::new(vec![0.0; 4], 1);
+        assert_eq!(r.tenant, DEFAULT_TENANT);
+        let r = r.with_tenant("acme");
+        assert_eq!(r.tenant, "acme");
+        assert_eq!(r.label, 1);
     }
 
     #[test]

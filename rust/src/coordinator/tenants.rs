@@ -1,0 +1,280 @@
+//! Per-tenant ε-budget accounting for the multi-tenant norm service.
+//!
+//! Every tenant gets its own [`DpSgdAccountant`] (Rényi composition of
+//! the subsampled Gaussian, `privacy.rs`) built from the shared
+//! `[tenants]` noise geometry. The service charges one accounted step
+//! per admitted request and *peeks* before charging: a request that
+//! would push the tenant's ε past its budget is refused with a typed
+//! `BudgetExhausted` **before** the ledger records anything, so a
+//! rejected tenant's ε is exactly the ε of the requests that actually
+//! ran. A charge taken for a request that then fails admission at the
+//! queue (e.g. `Overloaded`) is refunded via the accountant's exact
+//! [`DpSgdAccountant::unstep`] rollback.
+//!
+//! Budget 0 means *unlimited*: the tenant is still metered — its ε
+//! shows up in reports and the loadtest bench — but never refused.
+//! Unknown tenants are created lazily with the `[tenants]`
+//! `default_budget`, so the single-tenant deployments of earlier PRs
+//! keep working untouched (everything lands on [`DEFAULT_TENANT`]).
+
+use crate::config::TenantTuning;
+use crate::privacy::DpSgdAccountant;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+
+/// The tenant a [`super::GradRequest`] belongs to when none is named.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// One tenant's accounting state.
+#[derive(Clone, Debug)]
+pub struct TenantState {
+    /// The tenant's private RDP ledger.
+    pub accountant: DpSgdAccountant,
+    /// ε-budget; 0 = unlimited (metered but never refused).
+    pub budget: f64,
+    /// Fair-admission weight (≥ 1) for the dispatcher's WRR queue.
+    pub weight: u32,
+}
+
+/// Outcome of a budget charge attempt.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Charge {
+    /// The step was charged; `epsilon` is the ledger's ε afterwards.
+    Charged {
+        /// ε after the charge, at the table's δ.
+        epsilon: f64,
+    },
+    /// The step would exceed the budget; nothing was charged.
+    Refused {
+        /// ε the ledger *would* reach if the request ran.
+        epsilon: f64,
+        /// The budget it would exceed.
+        budget: f64,
+    },
+}
+
+/// Thread-safe map of tenant name → accounting state, shared between
+/// the service front door (charges/refunds) and the bench reporter.
+#[derive(Debug)]
+pub struct TenantTable {
+    tuning: TenantTuning,
+    tenants: Mutex<BTreeMap<String, TenantState>>,
+}
+
+impl TenantTable {
+    /// Build the table, pre-creating every tenant listed in the
+    /// `[tenants]` paired arrays (so their budgets/weights are live
+    /// before their first request).
+    pub fn new(tuning: TenantTuning) -> TenantTable {
+        let mut tenants = BTreeMap::new();
+        for (name, budget) in &tuning.budgets {
+            tenants.insert(
+                name.clone(),
+                TenantState {
+                    accountant: DpSgdAccountant::new(tuning.q, tuning.sigma),
+                    budget: *budget,
+                    weight: tuning.weight_for(name),
+                },
+            );
+        }
+        TenantTable {
+            tuning,
+            tenants: Mutex::new(tenants),
+        }
+    }
+
+    /// Lock with poison recovery — the map is always consistent
+    /// between statements, same argument as the service's pending
+    /// table.
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<String, TenantState>> {
+        self.tenants.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn ensure<'a>(
+        &self,
+        g: &'a mut BTreeMap<String, TenantState>,
+        name: &str,
+    ) -> &'a mut TenantState {
+        g.entry(name.to_string()).or_insert_with(|| TenantState {
+            accountant: DpSgdAccountant::new(self.tuning.q, self.tuning.sigma),
+            budget: self.tuning.budget_for(name),
+            weight: self.tuning.weight_for(name),
+        })
+    }
+
+    /// Charge one accounted step to `name`, peeking first: when the
+    /// tenant has a finite budget and one more step would push ε past
+    /// it, refuse without touching the ledger. Peek and charge happen
+    /// under one lock, so two racing requests cannot both squeeze
+    /// through the last slot of a budget.
+    pub fn charge(&self, name: &str) -> Charge {
+        let delta = self.tuning.delta;
+        let mut g = self.lock();
+        let t = self.ensure(&mut g, name);
+        let (after, _) = t.accountant.epsilon_after(1, delta);
+        if t.budget > 0.0 && after > t.budget {
+            return Charge::Refused {
+                epsilon: after,
+                budget: t.budget,
+            };
+        }
+        t.accountant.step(1);
+        Charge::Charged { epsilon: after }
+    }
+
+    /// Refund one charged step — used when the charged request then
+    /// fails to enter the service (queue full, service closing): the
+    /// tenant must not pay ε for a query that never ran. Exact inverse
+    /// of the charge (see `DpSgdAccountant::unstep`).
+    pub fn refund(&self, name: &str) {
+        let mut g = self.lock();
+        if let Some(t) = g.get_mut(name) {
+            t.accountant.unstep(1);
+        }
+    }
+
+    /// The tenant's current ε at the table's δ (∞ when σ ≤ 0).
+    pub fn epsilon(&self, name: &str) -> f64 {
+        let g = self.lock();
+        g.get(name)
+            .map(|t| t.accountant.epsilon(self.tuning.delta).0)
+            .unwrap_or(0.0)
+    }
+
+    /// The fair-admission weight for `name` (creates nothing; unknown
+    /// tenants report the `[tenants]` default of 1 or their configured
+    /// weight).
+    pub fn weight(&self, name: &str) -> u32 {
+        let g = self.lock();
+        g.get(name)
+            .map(|t| t.weight)
+            .unwrap_or_else(|| self.tuning.weight_for(name))
+    }
+
+    /// The δ every ε in this table is reported at.
+    pub fn delta(&self) -> f64 {
+        self.tuning.delta
+    }
+
+    /// Snapshot `(name, steps, ε, budget)` for every tenant the table
+    /// has seen, in name order — the loadtest bench's per-tenant rows.
+    pub fn report(&self) -> Vec<(String, u64, f64, f64)> {
+        let g = self.lock();
+        g.iter()
+            .map(|(name, t)| {
+                (
+                    name.clone(),
+                    t.accountant.steps,
+                    t.accountant.epsilon(self.tuning.delta).0,
+                    t.budget,
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tuning(names: &[(&str, f64)]) -> TenantTuning {
+        TenantTuning {
+            budgets: names
+                .iter()
+                .map(|(n, b)| (n.to_string(), *b))
+                .collect(),
+            ..TenantTuning::default()
+        }
+    }
+
+    #[test]
+    fn unlimited_tenants_meter_but_never_refuse() {
+        let table = TenantTable::new(tuning(&[]));
+        for _ in 0..5 {
+            assert!(matches!(
+                table.charge(DEFAULT_TENANT),
+                Charge::Charged { .. }
+            ));
+        }
+        let report = table.report();
+        assert_eq!(report.len(), 1);
+        let (name, steps, eps, budget) = &report[0];
+        assert_eq!(name, DEFAULT_TENANT);
+        assert_eq!(*steps, 5);
+        assert!(*eps > 0.0 && eps.is_finite());
+        assert_eq!(*budget, 0.0);
+    }
+
+    #[test]
+    fn budget_refuses_exactly_at_the_boundary() {
+        // Find how many steps a budget of ε=1.0 admits, then pin that
+        // the table admits exactly that many and refuses the next,
+        // with the refused ε exceeding the budget.
+        let t = tuning(&[("capped", 1.0)]);
+        let allowed = DpSgdAccountant::new(t.q, t.sigma).steps_until(1.0, t.delta);
+        assert!(allowed > 0 && allowed < 10_000, "toy geometry sanity");
+        let table = TenantTable::new(t);
+        for i in 0..allowed {
+            assert!(
+                matches!(table.charge("capped"), Charge::Charged { .. }),
+                "step {i} of {allowed} should fit the budget"
+            );
+        }
+        match table.charge("capped") {
+            Charge::Refused { epsilon, budget } => {
+                assert_eq!(budget, 1.0);
+                assert!(epsilon > 1.0, "refused ε {epsilon} must exceed the budget");
+            }
+            other => panic!("expected refusal past the budget, got {other:?}"),
+        }
+        // the refusal charged nothing: the ledger still holds exactly
+        // `allowed` steps and stays under budget
+        let report = table.report();
+        assert_eq!(report[0].1, allowed);
+        assert!(report[0].2 <= 1.0);
+        // ...and the tenant stays refused (idempotent rejection)
+        assert!(matches!(table.charge("capped"), Charge::Refused { .. }));
+    }
+
+    #[test]
+    fn refund_is_exact_inverse_of_charge() {
+        let table = TenantTable::new(tuning(&[]));
+        for _ in 0..3 {
+            table.charge("t");
+        }
+        let eps3 = table.epsilon("t");
+        table.charge("t");
+        table.refund("t");
+        assert_eq!(
+            table.epsilon("t"),
+            eps3,
+            "charge→refund must restore ε bitwise"
+        );
+        // refunding an unknown tenant is a no-op, not a panic
+        table.refund("never-seen");
+    }
+
+    #[test]
+    fn lazily_created_tenants_get_default_budget_and_weight() {
+        let mut t = tuning(&[("vip", 0.0)]);
+        t.default_budget = 1.0;
+        t.weights = vec![4];
+        let table = TenantTable::new(t);
+        assert_eq!(table.weight("vip"), 4);
+        assert_eq!(table.weight("walk-in"), 1);
+        // walk-in inherits default_budget=1.0 and eventually refuses
+        let mut refused = false;
+        for _ in 0..10_000 {
+            if matches!(table.charge("walk-in"), Charge::Refused { budget, .. } if budget == 1.0)
+            {
+                refused = true;
+                break;
+            }
+        }
+        assert!(refused, "default_budget must bind lazily created tenants");
+        // vip has explicit budget 0 → unlimited
+        for _ in 0..5 {
+            assert!(matches!(table.charge("vip"), Charge::Charged { .. }));
+        }
+    }
+}

@@ -668,6 +668,137 @@ pub fn sweep_to_json(opts: &NativeSweepOptions, cells: &[SweepCell]) -> Value {
     ])
 }
 
+/// One tenant's row in the `service/v1` loadtest bench: outcome
+/// tallies, ok-latency percentiles, and the tenant's ε ledger as the
+/// service left it.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantCell {
+    /// Tenant name (unique within one bench doc).
+    pub tenant: String,
+    /// Requests this tenant's clients fired (including refused ones).
+    pub requests: u64,
+    /// Requests answered `Ok`.
+    pub ok: u64,
+    /// Requests shed or abandoned past their deadline.
+    pub deadline_exceeded: u64,
+    /// Requests that failed typed after retries / fail-fast.
+    pub worker_failed: u64,
+    /// Requests refused at admission (lane full).
+    pub overloaded: u64,
+    /// Requests refused by the ε-budget gate.
+    pub budget_exhausted: u64,
+    /// Anything else typed (shutdown, invalid, unknown id).
+    pub other_errors: u64,
+    /// Median ok-latency, ms (0 when nothing succeeded).
+    pub latency_p50_ms: f64,
+    /// 99th-percentile ok-latency, ms.
+    pub latency_p99_ms: f64,
+    /// The tenant's ε after the run, at the service's δ.
+    pub epsilon: f64,
+    /// The tenant's configured ε-budget (0 = unlimited).
+    pub budget: f64,
+}
+
+impl TenantCell {
+    fn to_json(&self) -> Value {
+        jsonx::obj(vec![
+            ("tenant", jsonx::s(&self.tenant)),
+            ("requests", jsonx::num(self.requests as f64)),
+            ("ok", jsonx::num(self.ok as f64)),
+            ("deadline_exceeded", jsonx::num(self.deadline_exceeded as f64)),
+            ("worker_failed", jsonx::num(self.worker_failed as f64)),
+            ("overloaded", jsonx::num(self.overloaded as f64)),
+            ("budget_exhausted", jsonx::num(self.budget_exhausted as f64)),
+            ("other_errors", jsonx::num(self.other_errors as f64)),
+            ("latency_p50_ms", jsonx::num(self.latency_p50_ms)),
+            ("latency_p99_ms", jsonx::num(self.latency_p99_ms)),
+            ("epsilon", jsonx::num(self.epsilon)),
+            ("budget", jsonx::num(self.budget)),
+        ])
+    }
+}
+
+/// Everything one `repro loadtest` run reports — the typed source of
+/// the `service/v1` schema `tools/check_bench.py --service` validates.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceBench {
+    /// Total requests fired across all tenants and canaries.
+    pub requests: u64,
+    /// Concurrent client threads.
+    pub clients: u64,
+    /// Worker shard count.
+    pub shards: u64,
+    /// Max dynamic microbatch.
+    pub batch: u64,
+    /// Coalescing window in ms (0 = no coalescing).
+    pub coalesce_ms: u64,
+    /// Per-request deadline in ms (0 = none).
+    pub deadline_ms: u64,
+    /// Whether a seeded chaos plan was attached.
+    pub chaos: bool,
+    /// The chaos plan's seed (meaningful when `chaos`).
+    pub chaos_seed: u64,
+    /// Wall-clock seconds for the client phase.
+    pub wall_secs: f64,
+    /// Aggregate outcome tallies (sum over tenants + canaries).
+    pub ok: u64,
+    /// Aggregate deadline sheds/abandons.
+    pub deadline_exceeded: u64,
+    /// Aggregate typed execution failures.
+    pub worker_failed: u64,
+    /// Aggregate admission refusals.
+    pub overloaded: u64,
+    /// Aggregate ε-budget refusals.
+    pub budget_exhausted: u64,
+    /// Aggregate other typed errors.
+    pub other_errors: u64,
+    /// Aggregate median ok-latency, ms.
+    pub latency_p50_ms: f64,
+    /// Aggregate p99 ok-latency, ms.
+    pub latency_p99_ms: f64,
+    /// Per-tenant rows, in tenant-name order.
+    pub tenants: Vec<TenantCell>,
+}
+
+impl ServiceBench {
+    /// The `service/v1` JSON document. Throughput columns are derived
+    /// here so every writer agrees: `ok_per_sec` = ok / wall, and
+    /// `examples_per_sec_per_core` divides by the shard count — the
+    /// "examples/sec/core" the amortization argument is about.
+    pub fn to_json(&self) -> Value {
+        let ok_per_sec = self.ok as f64 / self.wall_secs.max(1e-9);
+        jsonx::obj(vec![
+            ("version", jsonx::s("service/v1")),
+            ("requests", jsonx::num(self.requests as f64)),
+            ("clients", jsonx::num(self.clients as f64)),
+            ("shards", jsonx::num(self.shards as f64)),
+            ("batch", jsonx::num(self.batch as f64)),
+            ("coalesce_ms", jsonx::num(self.coalesce_ms as f64)),
+            ("deadline_ms", jsonx::num(self.deadline_ms as f64)),
+            ("chaos", Value::Bool(self.chaos)),
+            ("chaos_seed", jsonx::num(self.chaos_seed as f64)),
+            ("wall_secs", jsonx::num(self.wall_secs)),
+            ("ok", jsonx::num(self.ok as f64)),
+            ("deadline_exceeded", jsonx::num(self.deadline_exceeded as f64)),
+            ("worker_failed", jsonx::num(self.worker_failed as f64)),
+            ("overloaded", jsonx::num(self.overloaded as f64)),
+            ("budget_exhausted", jsonx::num(self.budget_exhausted as f64)),
+            ("other_errors", jsonx::num(self.other_errors as f64)),
+            ("ok_per_sec", jsonx::num(ok_per_sec)),
+            (
+                "examples_per_sec_per_core",
+                jsonx::num(ok_per_sec / self.shards.max(1) as f64),
+            ),
+            ("latency_p50_ms", jsonx::num(self.latency_p50_ms)),
+            ("latency_p99_ms", jsonx::num(self.latency_p99_ms)),
+            (
+                "tenants",
+                jsonx::arr(self.tenants.iter().map(TenantCell::to_json).collect()),
+            ),
+        ])
+    }
+}
+
 /// Run the sweep and write tables + `BENCH_strategies.json`.
 pub fn run_native_sweep_with_reports(
     opts: &NativeSweepOptions,
@@ -700,6 +831,72 @@ pub fn emit(tables: &[Table], report_dir: &str, slug: &str) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn service_bench_doc_round_trips_with_derived_throughput() {
+        let bench = ServiceBench {
+            requests: 64,
+            clients: 4,
+            shards: 2,
+            batch: 8,
+            coalesce_ms: 20,
+            deadline_ms: 0,
+            chaos: true,
+            chaos_seed: 9,
+            wall_secs: 2.0,
+            ok: 60,
+            deadline_exceeded: 2,
+            worker_failed: 1,
+            overloaded: 0,
+            budget_exhausted: 1,
+            other_errors: 0,
+            latency_p50_ms: 3.5,
+            latency_p99_ms: 12.0,
+            tenants: vec![
+                TenantCell {
+                    tenant: "t0".into(),
+                    requests: 32,
+                    ok: 30,
+                    budget_exhausted: 1,
+                    epsilon: 0.8,
+                    budget: 1.0,
+                    ..TenantCell::default()
+                },
+                TenantCell {
+                    tenant: "t1".into(),
+                    requests: 32,
+                    ok: 30,
+                    ..TenantCell::default()
+                },
+            ],
+        };
+        let text = jsonx::to_string(&bench.to_json());
+        let v = jsonx::parse(&text).unwrap();
+        assert_eq!(v.get("version").unwrap().as_str(), Some("service/v1"));
+        assert_eq!(v.get("shards").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("ok_per_sec").unwrap().as_f64(), Some(30.0));
+        // examples/sec/core = ok_per_sec / shards
+        assert_eq!(
+            v.get("examples_per_sec_per_core").unwrap().as_f64(),
+            Some(15.0)
+        );
+        let tenants = v.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants[0].get("tenant").unwrap().as_str(), Some("t0"));
+        assert_eq!(tenants[0].get("budget_exhausted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(tenants[0].get("epsilon").unwrap().as_f64(), Some(0.8));
+        assert_eq!(tenants[1].get("budget").unwrap().as_f64(), Some(0.0));
+        // zero wall must not divide by zero
+        let degenerate = ServiceBench::default();
+        let v = degenerate.to_json();
+        assert!(v.get("ok_per_sec").unwrap().as_f64().unwrap().is_finite());
+        assert!(v
+            .get("examples_per_sec_per_core")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+            .is_finite());
+    }
 
     #[test]
     fn default_sweep_leads_with_the_small_batch_point() {

@@ -21,7 +21,7 @@
 use anyhow::{bail, Context, Result};
 use grad_cnns::bench::Protocol;
 use grad_cnns::cli::{subcommand, Command};
-use grad_cnns::config::{Config, ExperimentConfig, ServiceTuning};
+use grad_cnns::config::{Config, ExperimentConfig, ServiceTuning, TenantTuning};
 use grad_cnns::coordinator::{
     Checkpoint, FaultPlan, FaultPolicy, GradRequest, NativeServiceConfig, ServiceConfig,
     ServiceError, ServiceHandle, Trainer,
@@ -321,9 +321,14 @@ size = 2048
 /// Each is a plain `opt` (no CLI default) so a value from the config
 /// file's `[service]` section shows through unless the flag is given.
 fn service_opts(cmd: Command) -> Command {
-    cmd.opt("workers", "worker threads (overrides [service])")
-        .opt("max-wait-ms", "partial-batch flush deadline in ms (overrides [service])")
-        .opt("queue-cap", "request-queue capacity (overrides [service])")
+    cmd.opt("shards", "worker shards (overrides [service])")
+        .opt("workers", "alias for --shards (the pre-sharding name)")
+        .opt(
+            "coalesce-ms",
+            "microbatch coalescing window in ms, 0 = none (overrides [service])",
+        )
+        .opt("max-wait-ms", "alias for --coalesce-ms (the pre-sharding name)")
+        .opt("queue-cap", "per-tenant request-lane capacity (overrides [service])")
         .opt(
             "deadline-ms",
             "per-request deadline in ms, 0 = none — expired requests are shed \
@@ -344,12 +349,16 @@ fn service_opts(cmd: Command) -> Command {
 /// as the base, CLI flags on top.
 fn service_tuning(args: &grad_cnns::cli::Args, cfg: &Config) -> Result<ServiceTuning> {
     let mut t = ServiceTuning::from_config(cfg)?;
-    t.workers = args.usize_or("workers", t.workers)?.max(1);
+    // --workers / --max-wait-ms are the pre-sharding aliases; the new
+    // names win when both are given
+    t.shards = args.usize_or("workers", t.shards)?;
+    t.shards = args.usize_or("shards", t.shards)?.max(1);
     t.batch = args.usize_or("batch", t.batch)?;
     if t.batch == 0 {
         bail!("--batch must be >= 1");
     }
-    t.max_wait_ms = args.u64_or("max-wait-ms", t.max_wait_ms)?;
+    t.coalesce_max_wait_ms = args.u64_or("max-wait-ms", t.coalesce_max_wait_ms)?;
+    t.coalesce_max_wait_ms = args.u64_or("coalesce-ms", t.coalesce_max_wait_ms)?;
     t.queue_capacity = args.usize_or("queue-cap", t.queue_capacity)?.max(1);
     t.deadline_ms = args.u64_or("deadline-ms", t.deadline_ms)?;
     t.restart_budget = args.u64_or("restart-budget", t.restart_budget as u64)? as u32;
@@ -417,32 +426,21 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let reqs: Vec<GradRequest> = (0..n_requests)
         .map(|i| {
             let (img, label) = data.example(i);
-            GradRequest {
-                image: img.to_vec(),
-                label,
-            }
+            GradRequest::new(img.to_vec(), label)
         })
         .collect();
     let t0 = std::time::Instant::now();
     let (responses, shed) = match tuning.deadline() {
         // no deadline (the default): the blocking submit/wait path
         None => (svc.submit_all(&reqs)?, 0usize),
-        // deadline mode: non-blocking admission + bounded waits — the
-        // typed errors (Overloaded, DeadlineExceeded) are outcomes to
-        // tally, not reasons to abort the demo
+        // deadline mode: one budget covers the whole slice, the
+        // absolute deadline snapshotted once — DeadlineExceeded is an
+        // outcome to tally, not a reason to abort the demo
         Some(budget) => {
             let mut out = Vec::new();
             let mut shed = 0usize;
-            for req in reqs {
-                let id = match svc.try_submit(req) {
-                    Ok(id) => id,
-                    Err(ServiceError::Overloaded) => {
-                        shed += 1;
-                        continue;
-                    }
-                    Err(e) => return Err(e.into()),
-                };
-                match svc.wait_timeout(id, budget) {
+            for outcome in svc.submit_all_with_deadline(&reqs, budget) {
+                match outcome {
                     Ok(r) => out.push(r),
                     Err(ServiceError::DeadlineExceeded) => shed += 1,
                     Err(e) => return Err(e.into()),
@@ -520,10 +518,11 @@ fn serve_start_pjrt(
         ServiceConfig {
             artifact,
             artifacts_dir: dir.to_string(),
-            workers: tuning.workers,
-            max_wait: std::time::Duration::from_millis(tuning.max_wait_ms),
+            shards: tuning.shards,
+            coalesce_max_wait: std::time::Duration::from_millis(tuning.coalesce_max_wait_ms),
             queue_capacity: tuning.queue_capacity,
             policy: fault_policy(tuning, None),
+            tenants: TenantTuning::default(),
         },
         theta,
     )?;
@@ -548,13 +547,14 @@ fn serve_start_native(
         NativeServiceConfig {
             model: spec.clone(),
             batch: args.usize_or("batch", tuning.batch)?,
-            workers: tuning.workers,
+            shards: tuning.shards,
             threads: exp.threads,
             mode: exp.ghost_norms.clone(),
             inner_parallel: exp.inner_parallel,
-            max_wait: std::time::Duration::from_millis(tuning.max_wait_ms),
+            coalesce_max_wait: std::time::Duration::from_millis(tuning.coalesce_max_wait_ms),
             queue_capacity: tuning.queue_capacity,
             policy: fault_policy(tuning, None),
+            tenants: TenantTuning::from_config(cfg)?,
         },
         theta,
     )?;
@@ -565,19 +565,22 @@ fn serve_start_native(
 // loadtest
 // ---------------------------------------------------------------------------
 
-/// Per-client outcome tally for the loadtest.
+/// Per-client outcome tally for the loadtest, bucketed by tenant.
 #[derive(Default)]
 struct ClientStats {
     ok: u64,
     deadline: u64,
     worker_failed: u64,
     overloaded: u64,
+    budget_exhausted: u64,
     other: u64,
     lat: Vec<f64>,
+    /// Per-tenant sub-tallies (tenant → its own flat stats).
+    tenants: std::collections::BTreeMap<String, Box<ClientStats>>,
 }
 
 impl ClientStats {
-    fn record(&mut self, outcome: &Result<grad_cnns::coordinator::GradResponse, ServiceError>) {
+    fn tally(&mut self, outcome: &Result<grad_cnns::coordinator::GradResponse, ServiceError>) {
         match outcome {
             Ok(r) => {
                 self.ok += 1;
@@ -586,8 +589,38 @@ impl ClientStats {
             Err(ServiceError::DeadlineExceeded) => self.deadline += 1,
             Err(ServiceError::WorkerFailed { .. }) => self.worker_failed += 1,
             Err(ServiceError::Overloaded) => self.overloaded += 1,
+            Err(ServiceError::BudgetExhausted { .. }) => self.budget_exhausted += 1,
             Err(_) => self.other += 1,
         }
+    }
+
+    fn record(
+        &mut self,
+        tenant: &str,
+        outcome: &Result<grad_cnns::coordinator::GradResponse, ServiceError>,
+    ) {
+        self.tally(outcome);
+        self.tenants
+            .entry(tenant.to_string())
+            .or_default()
+            .tally(outcome);
+    }
+
+    fn requests(&self) -> u64 {
+        self.ok + self.deadline + self.worker_failed + self.overloaded + self.budget_exhausted
+            + self.other
+    }
+
+    fn percentiles(&self) -> (f64, f64) {
+        if self.lat.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut lat = self.lat.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            lat[lat.len() / 2],
+            lat[(lat.len() * 99 / 100).min(lat.len() - 1)],
+        )
     }
 
     fn merge(mut self, other: ClientStats) -> ClientStats {
@@ -595,8 +628,15 @@ impl ClientStats {
         self.deadline += other.deadline;
         self.worker_failed += other.worker_failed;
         self.overloaded += other.overloaded;
+        self.budget_exhausted += other.budget_exhausted;
         self.other += other.other;
         self.lat.extend(other.lat);
+        for (tenant, sub) in other.tenants {
+            let mine = std::mem::take(
+                self.tenants.entry(tenant.clone()).or_default().as_mut(),
+            );
+            *self.tenants.get_mut(&tenant).unwrap() = Box::new(mine.merge(*sub));
+        }
         self
     }
 }
@@ -612,17 +652,28 @@ fn cmd_loadtest(rest: &[String]) -> Result<()> {
         Command::new("loadtest", "norm-service load generator (native, chaos-capable)")
             .opt(
                 "config",
-                "TOML config for the native model ([model]) and service ([service])",
+                "TOML config for the native model ([model]), service ([service]) \
+                 and tenant budgets ([tenants])",
             )
             .opt("batch", "max dynamic batch (overrides [service])")
             .opt_default("requests", "256", "total requests to fire")
             .opt_default("clients", "4", "concurrent client threads")
+            .opt_default(
+                "tenants",
+                "1",
+                "spread requests over N synthetic tenants t0..t{N-1} (request i → t{i mod N})",
+            )
+            .opt_default(
+                "tenant-budget",
+                "0",
+                "ε-budget for tenant t0 when [tenants] names none (0 = unlimited)",
+            )
             .opt_default("seed", "7", "data/theta rng seed")
             .opt("chaos-seed", "fault-plan seed (default: --seed)")
             .opt_default("json", "BENCH_service.json", "machine-readable results path")
             .flag(
                 "chaos",
-                "attach a seeded FaultPlan: worker panics/errors/delays plus one \
+                "attach a seeded FaultPlan: shard panics/errors/delays plus one \
                  init failure (exercises supervision, retry, shed)",
             ),
     );
@@ -634,18 +685,31 @@ fn cmd_loadtest(rest: &[String]) -> Result<()> {
     let tuning = service_tuning(&args, &cfg)?;
     let n_requests = args.usize_or("requests", 256)?.max(1);
     let clients = args.usize_or("clients", 4)?.max(1);
+    let n_tenants = args.usize_or("tenants", 1)?.max(1);
+    let t0_budget = args.f64_or("tenant-budget", 0.0)?;
     let seed = args.u64_or("seed", 7)?;
     let chaos = args.has_flag("chaos");
     let chaos_seed = args.u64_or("chaos-seed", seed)?;
+    anyhow::ensure!(
+        t0_budget >= 0.0 && t0_budget.is_finite(),
+        "--tenant-budget must be a finite ε ≥ 0"
+    );
 
     let exp = ExperimentConfig::from_config(&cfg)?;
     let spec = ModelSpec::from_manifest(&exp.model)?;
     let theta = NativeBackend::init_vector(&spec, seed);
 
+    let mut tenant_tuning = TenantTuning::from_config(&cfg)?;
+    if t0_budget > 0.0 && tenant_tuning.budgets.is_empty() {
+        // no [tenants] section named anyone: cap the first synthetic
+        // tenant so the multi-tenant smoke can exhaust a budget
+        tenant_tuning.budgets.push(("t0".to_string(), t0_budget));
+    }
+
     let plan = chaos.then(|| {
         // spread faults over the expected batch stream of the run
         let horizon = (n_requests / tuning.batch).max(8) as u64;
-        FaultPlan::seeded(chaos_seed, tuning.workers, horizon)
+        FaultPlan::seeded(chaos_seed, tuning.shards, horizon)
     });
     if let Some(p) = &plan {
         println!("chaos plan (seed {chaos_seed}): {}", p.summary());
@@ -654,53 +718,57 @@ fn cmd_loadtest(rest: &[String]) -> Result<()> {
         NativeServiceConfig {
             model: spec.clone(),
             batch: tuning.batch,
-            workers: tuning.workers,
+            shards: tuning.shards,
             threads: exp.threads,
             mode: exp.ghost_norms.clone(),
             inner_parallel: exp.inner_parallel,
-            max_wait: std::time::Duration::from_millis(tuning.max_wait_ms),
+            coalesce_max_wait: std::time::Duration::from_millis(tuning.coalesce_max_wait_ms),
             queue_capacity: tuning.queue_capacity,
             policy: fault_policy(&tuning, plan),
+            tenants: tenant_tuning,
         },
         theta,
     )?;
     println!(
-        "service: {} ({} workers, batch {}, queue {}, deadline {})",
+        "service: {} ({} shards, batch {}, coalesce {}ms, queue {}, deadline {}, {} tenants)",
         svc.label(),
-        tuning.workers,
+        tuning.shards,
         tuning.batch,
+        tuning.coalesce_max_wait_ms,
         tuning.queue_capacity,
         if tuning.deadline_ms > 0 {
             format!("{}ms", tuning.deadline_ms)
         } else {
             "none".into()
-        }
+        },
+        n_tenants
     );
 
     let (c, h, w) = spec.input_shape;
     let data = GaussianImages::generate(n_requests, (c, h, w), spec.num_classes, seed);
     let deadline = tuning.deadline();
+    let tenant_of = |i: usize| format!("t{}", i % n_tenants);
     let mut canary = ClientStats::default();
     if chaos {
         // zero-budget canaries: guaranteed already-expired at batch
         // formation, so a chaos run always exercises (and the CI smoke
-        // can always grep) the shed path
+        // can always grep) the shed path. They ride the default tenant
+        // so synthetic-tenant tallies stay exactly the client traffic.
         let (img, label) = data.example(0);
         for _ in 0..2 {
-            let req = GradRequest {
-                image: img.to_vec(),
-                label,
-            };
+            let req = GradRequest::new(img.to_vec(), label);
+            let tenant = req.tenant.clone();
             let outcome = svc
                 .submit_with_deadline(req, std::time::Duration::ZERO)
                 .and_then(|id| svc.wait_timeout(id, std::time::Duration::from_secs(30)));
-            canary.record(&outcome);
+            canary.record(&tenant, &outcome);
         }
     }
     let t0 = std::time::Instant::now();
     let stats: ClientStats = std::thread::scope(|s| {
         let svc = &svc;
         let data = &data;
+        let tenant_of = &tenant_of;
         let handles: Vec<_> = (0..clients)
             .map(|cidx| {
                 s.spawn(move || {
@@ -708,10 +776,9 @@ fn cmd_loadtest(rest: &[String]) -> Result<()> {
                     let mut i = cidx;
                     while i < n_requests {
                         let (img, label) = data.example(i);
-                        let req = GradRequest {
-                            image: img.to_vec(),
-                            label,
-                        };
+                        let tenant = tenant_of(i);
+                        let req =
+                            GradRequest::new(img.to_vec(), label).with_tenant(&tenant);
                         let outcome = match deadline {
                             Some(d) => svc.submit_with_deadline(req, d),
                             None => svc.submit(req),
@@ -719,7 +786,7 @@ fn cmd_loadtest(rest: &[String]) -> Result<()> {
                         // 30 s is the loadtest's own no-hang bound: a
                         // wait that long is a bug, not load
                         .and_then(|id| svc.wait_timeout(id, std::time::Duration::from_secs(30)));
-                        st.record(&outcome);
+                        st.record(&tenant, &outcome);
                         i += clients;
                     }
                     st
@@ -732,58 +799,97 @@ fn cmd_loadtest(rest: &[String]) -> Result<()> {
             .fold(ClientStats::default(), ClientStats::merge)
     });
     let wall = t0.elapsed().as_secs_f64();
+    let ledger = svc.tenants().report();
     let stats = stats.merge(canary);
 
-    let resolved =
-        stats.ok + stats.deadline + stats.worker_failed + stats.overloaded + stats.other;
     println!(
-        "resolved {resolved} requests in {wall:.3}s ({:.1} req/s): {} ok, {} deadline, \
-         {} worker-failed, {} overloaded, {} other",
+        "resolved {} requests in {wall:.3}s ({:.1} req/s): {} ok, {} deadline, \
+         {} worker-failed, {} overloaded, {} budget-exhausted, {} other",
+        stats.requests(),
         stats.ok as f64 / wall.max(1e-9),
         stats.ok,
         stats.deadline,
         stats.worker_failed,
         stats.overloaded,
+        stats.budget_exhausted,
         stats.other
     );
-    let (p50, p99) = if stats.lat.is_empty() {
-        (0.0, 0.0)
-    } else {
-        let mut lat = stats.lat.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        (
-            lat[lat.len() / 2],
-            lat[(lat.len() * 99 / 100).min(lat.len() - 1)],
-        )
-    };
+    let (p50, p99) = stats.percentiles();
     if !stats.lat.is_empty() {
         println!("ok-latency p50 {:.1}ms p99 {:.1}ms", 1e3 * p50, 1e3 * p99);
+    }
+    let epsilon_of = |name: &str| {
+        ledger
+            .iter()
+            .find(|(n, _, _, _)| n == name)
+            .map(|(_, _, eps, budget)| (*eps, *budget))
+            .unwrap_or((0.0, 0.0))
+    };
+    if stats.tenants.len() > 1 || n_tenants > 1 {
+        println!("tenant        req    ok  ddl  wf  ovl  budg  p50ms  p99ms  epsilon  budget");
+        for (name, sub) in &stats.tenants {
+            let (sp50, sp99) = sub.percentiles();
+            let (eps, budget) = epsilon_of(name);
+            println!(
+                "{name:<12} {:>5} {:>5} {:>4} {:>3} {:>4} {:>5}  {:>5.1}  {:>5.1}  {eps:>7.3}  {budget:>6.2}",
+                sub.requests(),
+                sub.ok,
+                sub.deadline,
+                sub.worker_failed,
+                sub.overloaded,
+                sub.budget_exhausted,
+                1e3 * sp50,
+                1e3 * sp99,
+            );
+        }
     }
     let snapshot = svc.metrics_snapshot();
     print!("{snapshot}");
     svc.shutdown();
 
-    let doc = jsonx::obj(vec![
-        ("version", jsonx::s("service/v1")),
-        ("requests", jsonx::num(n_requests as f64)),
-        ("clients", jsonx::num(clients as f64)),
-        ("workers", jsonx::num(tuning.workers as f64)),
-        ("batch", jsonx::num(tuning.batch as f64)),
-        ("deadline_ms", jsonx::num(tuning.deadline_ms as f64)),
-        ("chaos", jsonx::Value::Bool(chaos)),
-        ("chaos_seed", jsonx::num(chaos_seed as f64)),
-        ("wall_secs", jsonx::num(wall)),
-        ("ok", jsonx::num(stats.ok as f64)),
-        ("deadline_exceeded", jsonx::num(stats.deadline as f64)),
-        ("worker_failed", jsonx::num(stats.worker_failed as f64)),
-        ("overloaded", jsonx::num(stats.overloaded as f64)),
-        ("other_errors", jsonx::num(stats.other as f64)),
-        ("ok_per_sec", jsonx::num(stats.ok as f64 / wall.max(1e-9))),
-        ("latency_p50_ms", jsonx::num(1e3 * p50)),
-        ("latency_p99_ms", jsonx::num(1e3 * p99)),
-    ]);
+    let bench = experiments::ServiceBench {
+        requests: stats.requests(),
+        clients: clients as u64,
+        shards: tuning.shards as u64,
+        batch: tuning.batch as u64,
+        coalesce_ms: tuning.coalesce_max_wait_ms,
+        deadline_ms: tuning.deadline_ms,
+        chaos,
+        chaos_seed,
+        wall_secs: wall,
+        ok: stats.ok,
+        deadline_exceeded: stats.deadline,
+        worker_failed: stats.worker_failed,
+        overloaded: stats.overloaded,
+        budget_exhausted: stats.budget_exhausted,
+        other_errors: stats.other,
+        latency_p50_ms: 1e3 * p50,
+        latency_p99_ms: 1e3 * p99,
+        tenants: stats
+            .tenants
+            .iter()
+            .map(|(name, sub)| {
+                let (sp50, sp99) = sub.percentiles();
+                let (eps, budget) = epsilon_of(name);
+                experiments::TenantCell {
+                    tenant: name.clone(),
+                    requests: sub.requests(),
+                    ok: sub.ok,
+                    deadline_exceeded: sub.deadline,
+                    worker_failed: sub.worker_failed,
+                    overloaded: sub.overloaded,
+                    budget_exhausted: sub.budget_exhausted,
+                    other_errors: sub.other,
+                    latency_p50_ms: 1e3 * sp50,
+                    latency_p99_ms: 1e3 * sp99,
+                    epsilon: eps,
+                    budget,
+                }
+            })
+            .collect(),
+    };
     let path = args.str_or("json", "BENCH_service.json");
-    std::fs::write(&path, jsonx::to_string(&doc))?;
+    std::fs::write(&path, jsonx::to_string(&bench.to_json()))?;
     println!("results written to {path}");
     Ok(())
 }

@@ -144,6 +144,64 @@ impl DpSgdAccountant {
         eps_from_rdp(&self.orders, &self.rdp, delta)
     }
 
+    /// The per-step RDP vector: from the running ledger when steps
+    /// were taken (exact — every step of this accountant is the same
+    /// mechanism), else computed fresh so a brand-new accountant
+    /// answers too. σ ≤ 0 gives ∞ at every order.
+    fn per_step_rdp(&self) -> Vec<f64> {
+        if self.sigma <= 0.0 {
+            return vec![f64::INFINITY; self.orders.len()];
+        }
+        if self.steps > 0 {
+            self.rdp.iter().map(|r| r / self.steps as f64).collect()
+        } else {
+            self.orders
+                .iter()
+                .map(|&a| rdp_subsampled_gaussian(self.q, self.sigma, a))
+                .collect()
+        }
+    }
+
+    /// (ε, best α) as it *would* stand after `n` more steps, without
+    /// mutating the ledger — the service's admission peek: a tenant is
+    /// refused **before** a query that would blow its budget, so the
+    /// ledger never records a charge the tenant could not afford.
+    pub fn epsilon_after(&self, n: u64, delta: f64) -> (f64, u64) {
+        let per_step = self.per_step_rdp();
+        let rdp: Vec<f64> = self
+            .rdp
+            .iter()
+            .zip(&per_step)
+            .map(|(r, p)| r + n as f64 * p)
+            .collect();
+        eps_from_rdp(&self.orders, &rdp, delta)
+    }
+
+    /// Roll back `n` steps (clamped to the steps actually taken).
+    /// Valid because this accountant is homogeneous — every step is
+    /// the same subsampled-Gaussian mechanism — so the ledger after a
+    /// rollback is recomputed canonically as `steps × per-step RDP`
+    /// (one multiply per order, not a lossy subtraction). The service
+    /// uses this to refund an admission charge when the charged
+    /// request is then rejected at the queue (e.g. `Overloaded`): the
+    /// tenant must not pay ε for a query that never ran.
+    pub fn unstep(&mut self, n: u64) {
+        let n = n.min(self.steps);
+        if n == 0 {
+            return;
+        }
+        self.steps -= n;
+        for (i, &a) in self.orders.iter().enumerate() {
+            self.rdp[i] = if self.sigma > 0.0 {
+                self.steps as f64 * rdp_subsampled_gaussian(self.q, self.sigma, a)
+            } else if self.steps > 0 {
+                f64::INFINITY
+            } else {
+                0.0
+            };
+        }
+    }
+
     /// Steps until ε would exceed `budget` (linear extrapolation on the
     /// per-step RDP — exact for RDP composition, conservative after the
     /// ε conversion). Used by the coordinator's budget guard.
@@ -151,16 +209,7 @@ impl DpSgdAccountant {
         if self.sigma <= 0.0 {
             return 0; // no noise, no budget at all
         }
-        // per-step RDP: from the running ledger if steps were taken,
-        // else computed fresh (so a brand-new accountant answers too)
-        let per_step: Vec<f64> = if self.steps > 0 {
-            self.rdp.iter().map(|r| r / self.steps as f64).collect()
-        } else {
-            self.orders
-                .iter()
-                .map(|&a| rdp_subsampled_gaussian(self.q, self.sigma, a))
-                .collect()
-        };
+        let per_step = self.per_step_rdp();
         let mut lo = self.steps;
         let mut hi = self.steps.max(1) * 1_000_000;
         let eps_at = |steps: u64| {
@@ -362,6 +411,47 @@ mod tests {
         a.step(14063);
         let (eps, _) = a.epsilon(1e-5);
         assert!((2.2..=3.3).contains(&eps), "ε = {eps} outside [2.2, 3.3]");
+    }
+
+    /// `epsilon_after(n)` must agree exactly with stepping a clone by
+    /// `n` — the admission peek and the ledger walk the same math.
+    #[test]
+    fn epsilon_after_matches_stepped_ledger() {
+        let mut a = DpSgdAccountant::new(0.05, 1.2);
+        a.step(7);
+        let peek = a.epsilon_after(3, 1e-5);
+        let mut b = a.clone();
+        b.step(3);
+        assert_eq!(peek, b.epsilon(1e-5), "peek must match the real walk");
+        assert_eq!(a.steps, 7, "peek must not mutate the ledger");
+        // fresh accountant peeks too
+        let fresh = DpSgdAccountant::new(0.05, 1.2);
+        let mut c = DpSgdAccountant::new(0.05, 1.2);
+        c.step(4);
+        assert_eq!(fresh.epsilon_after(4, 1e-5), c.epsilon(1e-5));
+        // σ = 0: infinite, not a panic
+        assert_eq!(
+            DpSgdAccountant::new(0.05, 0.0).epsilon_after(1, 1e-5).0,
+            f64::INFINITY
+        );
+    }
+
+    /// `unstep` is the exact inverse of `step` for this homogeneous
+    /// accountant: charge-then-refund restores the ledger bit-for-bit
+    /// (the service's Overloaded-refund path must not leak ε).
+    #[test]
+    fn unstep_is_exact_inverse_of_step() {
+        let mut a = DpSgdAccountant::new(0.02, 1.1);
+        a.step(10);
+        let eps10 = a.epsilon(1e-5);
+        a.step(1);
+        a.unstep(1);
+        assert_eq!(a.steps, 10);
+        assert_eq!(a.epsilon(1e-5), eps10, "refund must be exact, no drift");
+        // clamped: refunding more than was taken empties the ledger
+        a.unstep(100);
+        assert_eq!(a.steps, 0);
+        assert_eq!(a.epsilon(1e-5).0, DpSgdAccountant::new(0.02, 1.1).epsilon(1e-5).0);
     }
 
     #[test]

@@ -179,8 +179,8 @@ fn service_end_to_end_norms_match_direct_run() {
         ServiceConfig {
             artifact: artifact.into(),
             artifacts_dir: "artifacts".into(),
-            workers: 2,
-            max_wait: std::time::Duration::from_millis(5),
+            shards: 2,
+            coalesce_max_wait: std::time::Duration::from_millis(5),
             queue_capacity: 32,
             ..Default::default()
         },
@@ -190,10 +190,7 @@ fn service_end_to_end_norms_match_direct_run() {
     let reqs: Vec<GradRequest> = (0..8)
         .map(|i| {
             let (img, label) = data.example(i);
-            GradRequest {
-                image: img.to_vec(),
-                label,
-            }
+            GradRequest::new(img.to_vec(), label)
         })
         .collect();
     let responses = svc.submit_all(&reqs).unwrap();

@@ -213,13 +213,14 @@ fn native_service_serves_oracle_norms() {
         NativeServiceConfig {
             model: spec.clone(),
             batch: 4,
-            workers: 2,
+            shards: 2,
             threads: 1,
             mode: GhostMode::default(),
             inner_parallel: true,
-            max_wait: std::time::Duration::from_millis(5),
+            coalesce_max_wait: std::time::Duration::from_millis(5),
             queue_capacity: 32,
             policy: Default::default(),
+            tenants: Default::default(),
         },
         theta.clone(),
     )
@@ -238,10 +239,7 @@ fn native_service_serves_oracle_norms() {
         labels.push(rng.next_below(spec.num_classes as u64) as i32);
     }
     let reqs: Vec<GradRequest> = (0..n)
-        .map(|i| GradRequest {
-            image: images[i].clone(),
-            label: labels[i],
-        })
+        .map(|i| GradRequest::new(images[i].clone(), labels[i]))
         .collect();
     let responses = svc.submit_all(&reqs).unwrap();
     assert_eq!(responses.len(), n);
@@ -275,13 +273,14 @@ fn native_service_validates_at_start() {
     let base = NativeServiceConfig {
         model: spec.clone(),
         batch: 2,
-        workers: 1,
+        shards: 1,
         threads: 1,
         mode: GhostMode::default(),
         inner_parallel: true,
-        max_wait: std::time::Duration::from_millis(5),
+        coalesce_max_wait: std::time::Duration::from_millis(5),
         queue_capacity: 8,
         policy: Default::default(),
+        tenants: Default::default(),
     };
     let err = ServiceHandle::start_native(base.clone(), vec![0.0; 3])
         .map(|s| s.shutdown())
@@ -299,19 +298,13 @@ fn native_service_validates_at_start() {
     // that would leave the caller waiting forever
     let svc = ServiceHandle::start_native(base, NativeBackend::init_vector(&spec, 1)).unwrap();
     let err = svc
-        .submit(GradRequest {
-            image: vec![0.0; 5],
-            label: 0,
-        })
+        .submit(GradRequest::new(vec![0.0; 5], 0))
         .unwrap_err()
         .to_string();
     assert!(err.contains("values"), "{err}");
     // a well-formed request still flows
     let ok = svc
-        .submit_all(&[GradRequest {
-            image: vec![0.0; 64],
-            label: 1,
-        }])
+        .submit_all(&[GradRequest::new(vec![0.0; 64], 1)])
         .unwrap();
     assert_eq!(ok.len(), 1);
     svc.shutdown();

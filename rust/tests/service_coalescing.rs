@@ -1,0 +1,196 @@
+//! The coalescing dispatcher's exactness contract: microbatching is
+//! an *amortization*, never an approximation. Per-example ghost norms
+//! are computed by independent serial FMA chains (one tape walk per
+//! example inside the batch kernel), so a norm served out of a
+//! coalesced batch must be **bit-identical** to the same request
+//! served alone — and to a direct `ghost::perex_norms` call that
+//! never touches the service.
+//!
+//! The matrix pins that across shard counts {1, 4} × coalescing
+//! windows {0, 400 ms} (0 = singleton batches, 400 ms = a window wide
+//! enough that a burst of concurrent submits reliably coalesces), plus
+//! a strictly sequential one-request-at-a-time leg. Every leg runs the
+//! native executor single-threaded (`threads = 1`,
+//! `inner_parallel = false`) so the comparison isolates the
+//! *dispatcher's* batching choices — the only variable allowed to
+//! change between legs.
+
+use grad_cnns::config::TenantTuning;
+use grad_cnns::coordinator::{GradRequest, NativeServiceConfig, ServiceHandle};
+use grad_cnns::ghost::{self, ClippedStepPlanner, GhostMode};
+use grad_cnns::models::ModelSpec;
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::runtime::NativeBackend;
+use grad_cnns::tensor::Tensor;
+use std::time::Duration;
+
+/// No-hang bound for every wait in this suite.
+const WAIT: Duration = Duration::from_secs(30);
+/// Requests per leg — three full 4-batches' worth, so a coalescing
+/// dispatcher has real batches to form and a non-coalescing one has a
+/// real stream of singletons.
+const N: usize = 12;
+
+fn toy() -> (ModelSpec, Vec<f32>) {
+    let spec = ModelSpec::toy_cnn(1, 3, 1.0, 3, "none", (1, 8, 8), 4).unwrap();
+    let theta = NativeBackend::init_vector(&spec, 21);
+    (spec, theta)
+}
+
+fn examples(spec: &ModelSpec) -> (Vec<Vec<f32>>, Vec<i32>) {
+    let (c, h, w) = spec.input_shape;
+    let mut rng = Xoshiro256pp::seed_from_u64(0xC0A1);
+    let mut images = Vec::with_capacity(N);
+    let mut labels = Vec::with_capacity(N);
+    for _ in 0..N {
+        let mut img = vec![0.0f32; c * h * w];
+        rng.fill_gaussian(&mut img, 1.0);
+        images.push(img);
+        labels.push(rng.next_below(spec.num_classes as u64) as i32);
+    }
+    (images, labels)
+}
+
+fn cfg(spec: &ModelSpec, shards: usize, window: Duration) -> NativeServiceConfig {
+    NativeServiceConfig {
+        model: spec.clone(),
+        batch: 4,
+        shards,
+        threads: 1,
+        mode: GhostMode::default(),
+        inner_parallel: false,
+        coalesce_max_wait: window,
+        queue_capacity: 64,
+        policy: Default::default(),
+        tenants: TenantTuning::default(),
+    }
+}
+
+/// The no-service reference: each example pushed through the ghost
+/// engine *alone* (batch of one), single-threaded.
+fn direct_singles(
+    spec: &ModelSpec,
+    theta: &[f32],
+    images: &[Vec<f32>],
+    labels: &[i32],
+) -> (Vec<f32>, Vec<f32>) {
+    let planner = ClippedStepPlanner::new(spec, &GhostMode::default())
+        .unwrap()
+        .with_inner_parallel(false);
+    let (c, h, w) = spec.input_shape;
+    let mut norms = Vec::with_capacity(images.len());
+    let mut losses = Vec::with_capacity(images.len());
+    for (img, &label) in images.iter().zip(labels) {
+        let x = Tensor::from_vec(&[1, c, h, w], img.clone());
+        let (n, l) = ghost::perex_norms(&planner, theta, &x, &[label], 1).unwrap();
+        norms.push(n[0]);
+        losses.push(l[0]);
+    }
+    (norms, losses)
+}
+
+fn assert_bits(got: &[(f32, f32)], norms: &[f32], losses: &[f32], leg: &str) {
+    for i in 0..got.len() {
+        assert_eq!(
+            got[i].0.to_bits(),
+            norms[i].to_bits(),
+            "norm {i} differs from the direct single-example run in leg {leg}: \
+             {} vs {}",
+            got[i].0,
+            norms[i]
+        );
+        assert_eq!(
+            got[i].1.to_bits(),
+            losses[i].to_bits(),
+            "loss {i} differs from the direct single-example run in leg {leg}"
+        );
+    }
+}
+
+/// The kernel-level half of the argument: the batch kernel itself is
+/// batch-invariant. A whole-12 direct run must match 12 direct
+/// singles bitwise — if this ever breaks, the service legs below
+/// can't be expected to hold either, and this assertion points at the
+/// engine rather than the dispatcher.
+#[test]
+fn direct_engine_is_batch_invariant_bitwise() {
+    let (spec, theta) = toy();
+    let (images, labels) = examples(&spec);
+    let (norms, losses) = direct_singles(&spec, &theta, &images, &labels);
+
+    let planner = ClippedStepPlanner::new(&spec, &GhostMode::default())
+        .unwrap()
+        .with_inner_parallel(false);
+    let (c, h, w) = spec.input_shape;
+    let flat: Vec<f32> = images.iter().flatten().copied().collect();
+    let xt = Tensor::from_vec(&[N, c, h, w], flat);
+    let (bn, bl) = ghost::perex_norms(&planner, &theta, &xt, &labels, 1).unwrap();
+    for i in 0..N {
+        assert_eq!(bn[i].to_bits(), norms[i].to_bits(), "norm {i} batch-variant");
+        assert_eq!(bl[i].to_bits(), losses[i].to_bits(), "loss {i} batch-variant");
+    }
+}
+
+/// The dispatcher-level half: every (shards × window) cell of the
+/// matrix — burst-submitted so the wide-window cells actually
+/// coalesce — serves answers bitwise equal to the direct singles.
+#[test]
+fn coalesced_norms_are_bitwise_identical_across_the_matrix() {
+    let (spec, theta) = toy();
+    let (images, labels) = examples(&spec);
+    let (norms, losses) = direct_singles(&spec, &theta, &images, &labels);
+
+    for shards in [1usize, 4] {
+        for window in [Duration::ZERO, Duration::from_millis(400)] {
+            let leg = format!("shards={shards} window={window:?} burst");
+            let svc =
+                ServiceHandle::start_native(cfg(&spec, shards, window), theta.clone()).unwrap();
+            // burst: all N in flight before the first wait, so a
+            // nonzero window coalesces multi-request batches while a
+            // zero window must produce bitwise-equal singletons
+            let ids: Vec<u64> = (0..N)
+                .map(|i| {
+                    svc.submit(GradRequest::new(images[i].clone(), labels[i]))
+                        .unwrap()
+                })
+                .collect();
+            let got: Vec<(f32, f32)> = ids
+                .iter()
+                .map(|&id| {
+                    let r = svc.wait_timeout(id, WAIT).unwrap();
+                    (r.grad_norm, r.loss)
+                })
+                .collect();
+            assert_bits(&got, &norms, &losses, &leg);
+            svc.shutdown();
+        }
+    }
+}
+
+/// The strictly sequential leg: one request at a time (submit, wait,
+/// next) through a coalescing-enabled multi-shard service. No batch
+/// ever has a partner to coalesce with, and the answers must still be
+/// the same bits.
+#[test]
+fn one_by_one_submission_matches_the_burst_bits() {
+    let (spec, theta) = toy();
+    let (images, labels) = examples(&spec);
+    let (norms, losses) = direct_singles(&spec, &theta, &images, &labels);
+
+    let svc = ServiceHandle::start_native(
+        cfg(&spec, 4, Duration::from_millis(5)),
+        theta.clone(),
+    )
+    .unwrap();
+    let got: Vec<(f32, f32)> = (0..N)
+        .map(|i| {
+            let id = svc
+                .submit(GradRequest::new(images[i].clone(), labels[i]))
+                .unwrap();
+            let r = svc.wait_timeout(id, WAIT).unwrap();
+            (r.grad_norm, r.loss)
+        })
+        .collect();
+    assert_bits(&got, &norms, &losses, "sequential");
+    svc.shutdown();
+}

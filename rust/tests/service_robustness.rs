@@ -16,6 +16,7 @@
 //! * never-issued ids rejected immediately;
 //! * chaos-off output bit-identical to a direct engine run.
 
+use grad_cnns::config::TenantTuning;
 use grad_cnns::coordinator::{
     Fault, FaultPlan, FaultPolicy, GradRequest, NativeServiceConfig, ServiceError, ServiceHandle,
 };
@@ -36,19 +37,20 @@ fn toy() -> (ModelSpec, Vec<f32>) {
     (spec, theta)
 }
 
-fn cfg(spec: &ModelSpec, batch: usize, workers: usize, policy: FaultPolicy) -> NativeServiceConfig {
+fn cfg(spec: &ModelSpec, batch: usize, shards: usize, policy: FaultPolicy) -> NativeServiceConfig {
     NativeServiceConfig {
         model: spec.clone(),
         batch,
-        workers,
+        shards,
         threads: 1,
         mode: GhostMode::default(),
         inner_parallel: false,
-        // generous fill window so "submit k quickly -> one batch of k"
-        // is deterministic in CI
-        max_wait: Duration::from_millis(400),
+        // generous coalescing window so "submit k quickly -> one batch
+        // of k" is deterministic in CI
+        coalesce_max_wait: Duration::from_millis(400),
         queue_capacity: 64,
         policy,
+        tenants: TenantTuning::default(),
     }
 }
 
@@ -71,10 +73,7 @@ fn requests(spec: &ModelSpec, n: usize, seed: u64) -> Vec<GradRequest> {
         .map(|_| {
             let mut img = vec![0.0f32; c * h * w];
             rng.fill_gaussian(&mut img, 1.0);
-            GradRequest {
-                image: img,
-                label: rng.next_below(spec.num_classes as u64) as i32,
-            }
+            GradRequest::new(img, rng.next_below(spec.num_classes as u64) as i32)
         })
         .collect()
 }
@@ -347,9 +346,9 @@ fn worker_death_restarts_and_request_retries() {
 #[test]
 fn seeded_chaos_resolves_every_request() {
     let (spec, theta) = toy();
-    let workers = 2;
+    let shards = 2;
     let n = 16;
-    let plan = FaultPlan::seeded(9, workers, 16);
+    let plan = FaultPlan::seeded(9, shards, 16);
     let pol = FaultPolicy {
         restart_budget: 4,
         backoff_base: Duration::from_millis(1),
@@ -357,7 +356,7 @@ fn seeded_chaos_resolves_every_request() {
         max_attempts: 3,
         faults: Some(plan),
     };
-    let svc = ServiceHandle::start_native(cfg(&spec, 2, workers, pol), theta).unwrap();
+    let svc = ServiceHandle::start_native(cfg(&spec, 2, shards, pol), theta).unwrap();
     let reqs = requests(&spec, n, 9);
 
     let ids: Vec<u64> = reqs.iter().map(|r| svc.submit(r.clone()).unwrap()).collect();
@@ -432,4 +431,69 @@ fn chaos_off_is_bit_identical_to_direct_engine() {
             "loss {i} must be bit-identical with chaos off"
         );
     }
+}
+
+/// Regression: `submit_all_with_deadline` snapshots the absolute
+/// deadline ONCE, before the first submit. The old per-request
+/// `now + budget` computation silently granted later requests longer
+/// deadlines whenever submission itself took time (a blocking submit
+/// on a saturated pipeline parks the caller), so requests at the tail
+/// of a slice could outlive the budget the caller asked for.
+///
+/// Setup: a 600 ms injected stall on the first batch, the pipeline
+/// narrowed to ~6 slots (lane 1 + dispatcher hand + shard queue +
+/// executing batch), and a 400 ms budget over 10 requests. The tail
+/// submits only unblock *after* the stall clears (≥ 600 ms in), so
+/// under per-request snapshotting they would be granted fresh 400 ms
+/// deadlines and be served; under snapshot-once they share the
+/// already-expired `t0 + 400ms` deadline and the dispatcher must shed
+/// them. Slot 0's answer, by contrast, is guaranteed to be in the
+/// done-map before the tail even finishes enqueueing (the worker
+/// completes it before the pipeline frees a slot), so it must come
+/// back `Ok` — one call, both sides of the deadline observed.
+#[test]
+fn submit_all_deadline_is_snapshotted_once() {
+    let (spec, theta) = toy();
+    let plan = FaultPlan::new().on_batch(0, 0, Fault::Delay(Duration::from_millis(600)));
+    let mut c = cfg(&spec, 1, 1, policy(2, plan));
+    c.queue_capacity = 1;
+    let svc = ServiceHandle::start_native(c, theta).unwrap();
+    let reqs = requests(&spec, 10, 12);
+
+    let t0 = Instant::now();
+    let results = svc.submit_all_with_deadline(&reqs, Duration::from_millis(400));
+    assert_eq!(results.len(), reqs.len(), "one answer per slot, in order");
+    for (i, r) in results.iter().enumerate() {
+        assert!(
+            matches!(r, Ok(_) | Err(ServiceError::DeadlineExceeded)),
+            "slot {i} must resolve Ok or shed, got {r:?}"
+        );
+    }
+    assert!(
+        results[0].is_ok(),
+        "slot 0 completed during the stall and its answer must be delivered: {:?}",
+        results[0]
+    );
+    // the tail slots were admitted only after the 600 ms stall cleared;
+    // with the snapshot deadline long expired they MUST be shed — the
+    // buggy per-request snapshot would have served them instead
+    for (i, r) in results.iter().enumerate().skip(6) {
+        assert_eq!(
+            r.as_ref().unwrap_err(),
+            &ServiceError::DeadlineExceeded,
+            "tail slot {i} must not outlive the shared deadline, got {r:?}"
+        );
+    }
+    // the whole slice resolved within (budget + stall + slack), not
+    // 10 × budget — the bound the snapshot-once contract promises
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "submit_all_with_deadline must resolve in bounded time"
+    );
+
+    // pipeline healthy afterwards: a fresh request is served
+    let id = svc.submit(requests(&spec, 1, 13).remove(0)).unwrap();
+    svc.wait_timeout(id, WAIT)
+        .expect("service must serve normally after the shed burst");
+    svc.shutdown();
 }

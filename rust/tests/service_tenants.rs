@@ -1,0 +1,286 @@
+//! Multi-tenant behavior of the norm service: ε-budget isolation and
+//! fair, starvation-free admission under injected chaos.
+//!
+//! * the budget gate refuses a tenant **exactly** at its ε boundary —
+//!   the admitted count and the post-run ledger are pinned bitwise
+//!   against a directly-driven [`DpSgdAccountant`];
+//! * a refused tenant is *isolated*: its `BudgetExhausted` answers
+//!   never leak into other tenants' outcomes, and healthy tenants keep
+//!   completing;
+//! * under a seeded [`FaultPlan`] (panics, errors, delays, one init
+//!   failure) with four tenants submitting concurrently, every request
+//!   still resolves typed — `Ok`, `WorkerFailed`, or (for the capped
+//!   tenant only) `BudgetExhausted` — and no tenant starves.
+//!
+//! Every wait goes through `wait_timeout` with a generous bound, so a
+//! fairness or isolation bug surfaces as a failed assertion, not a
+//! hang.
+
+use grad_cnns::config::TenantTuning;
+use grad_cnns::coordinator::{
+    FaultPlan, FaultPolicy, GradRequest, NativeServiceConfig, ServiceError, ServiceHandle,
+};
+use grad_cnns::ghost::GhostMode;
+use grad_cnns::models::ModelSpec;
+use grad_cnns::privacy::DpSgdAccountant;
+use grad_cnns::rng::Xoshiro256pp;
+use grad_cnns::runtime::NativeBackend;
+use std::time::Duration;
+
+const WAIT: Duration = Duration::from_secs(30);
+
+fn toy() -> (ModelSpec, Vec<f32>) {
+    let spec = ModelSpec::toy_cnn(1, 3, 1.0, 3, "none", (1, 8, 8), 4).unwrap();
+    let theta = NativeBackend::init_vector(&spec, 31);
+    (spec, theta)
+}
+
+fn cfg(
+    spec: &ModelSpec,
+    shards: usize,
+    tenants: TenantTuning,
+    policy: FaultPolicy,
+) -> NativeServiceConfig {
+    NativeServiceConfig {
+        model: spec.clone(),
+        batch: 2,
+        shards,
+        threads: 1,
+        mode: GhostMode::default(),
+        inner_parallel: false,
+        coalesce_max_wait: Duration::from_millis(5),
+        queue_capacity: 64,
+        policy,
+        tenants,
+    }
+}
+
+fn requests(spec: &ModelSpec, n: usize, seed: u64) -> Vec<GradRequest> {
+    let (c, h, w) = spec.input_shape;
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let mut img = vec![0.0f32; c * h * w];
+            rng.fill_gaussian(&mut img, 1.0);
+            GradRequest::new(img, rng.next_below(spec.num_classes as u64) as i32)
+        })
+        .collect()
+}
+
+fn counter(svc: &ServiceHandle, name: &str) -> u64 {
+    svc.metrics.counter_value(name).unwrap_or(0)
+}
+
+/// A budget that buys exactly `steps` accounted requests at the
+/// tuning's (q, σ, δ): the midpoint of [ε(steps), ε(steps+1)]. ε is
+/// strictly increasing in steps and the inter-step gap dwarfs any
+/// ulp-level drift between the admission peek and this probe, so the
+/// gate must admit exactly `steps` and refuse the next — with margin
+/// on both sides of the boundary.
+fn budget_for_steps(t: &TenantTuning, steps: u64) -> f64 {
+    let mut probe = DpSgdAccountant::new(t.q, t.sigma);
+    // drive it one step at a time, exactly like the service charges
+    for _ in 0..steps {
+        probe.step(1);
+    }
+    let lo = probe.epsilon(t.delta).0;
+    probe.step(1);
+    let hi = probe.epsilon(t.delta).0;
+    assert!(hi > lo, "ε must be strictly increasing in steps");
+    0.5 * (lo + hi)
+}
+
+/// The service charges one `step(1)` per admission; replay that exact
+/// call sequence so the ε comparison below can be bitwise.
+fn direct_epsilon(q: f64, sigma: f64, delta: f64, steps: u64) -> f64 {
+    let mut acc = DpSgdAccountant::new(q, sigma);
+    for _ in 0..steps {
+        acc.step(1);
+    }
+    acc.epsilon(delta).0
+}
+
+/// Single-threaded boundary pin: the capped tenant is admitted exactly
+/// `allowed` times, refused (typed, with the right fields) on request
+/// `allowed + 1`, its ledger lands bitwise on the directly-computed ε,
+/// and an uncapped tenant sails through the whole time.
+#[test]
+fn budget_gate_refuses_exactly_at_the_boundary() {
+    let (spec, theta) = toy();
+    let mut tuning = TenantTuning::default();
+    let budget = budget_for_steps(&tuning, 5);
+    tuning.budgets = vec![("capped".to_string(), budget)];
+    let allowed =
+        DpSgdAccountant::new(tuning.q, tuning.sigma).steps_until(budget, tuning.delta);
+    assert_eq!(allowed, 5, "the probe budget must buy exactly 5 steps");
+    let (q, sigma, delta) = (tuning.q, tuning.sigma, tuning.delta);
+
+    let svc =
+        ServiceHandle::start_native(cfg(&spec, 1, tuning, FaultPolicy::default()), theta)
+            .unwrap();
+    let reqs = requests(&spec, allowed as usize + 3, 41);
+
+    let mut ids = Vec::new();
+    for i in 0..allowed as usize {
+        let id = svc
+            .submit(reqs[i].clone().with_tenant("capped"))
+            .unwrap_or_else(|e| panic!("request {i} of {allowed} is within budget: {e}"));
+        ids.push(id);
+    }
+    // the boundary request is refused at the door, typed, naming the
+    // tenant and the budget it would blow
+    for _ in 0..2 {
+        match svc.submit(reqs[allowed as usize].clone().with_tenant("capped")) {
+            Err(ServiceError::BudgetExhausted {
+                tenant,
+                epsilon,
+                budget: b,
+            }) => {
+                assert_eq!(tenant, "capped");
+                assert_eq!(b, budget);
+                assert!(
+                    epsilon > budget,
+                    "refused ε {epsilon} must exceed the budget {budget}"
+                );
+            }
+            other => panic!("want BudgetExhausted at the boundary, got {other:?}"),
+        }
+    }
+    // an uncapped tenant is untouched by its neighbor's exhaustion
+    let free_id = svc
+        .submit(reqs[allowed as usize + 1].clone().with_tenant("free"))
+        .expect("uncapped tenant must still be admitted");
+    for id in ids {
+        svc.wait_timeout(id, WAIT)
+            .expect("admitted requests must be served");
+    }
+    svc.wait_timeout(free_id, WAIT).unwrap();
+
+    // ledger pinned bitwise: the two refusals charged nothing
+    let report = svc.tenants().report();
+    let row = report.iter().find(|(n, _, _, _)| n == "capped").unwrap();
+    assert_eq!(row.1, allowed, "refusals must not consume ledger steps");
+    assert_eq!(
+        row.2.to_bits(),
+        direct_epsilon(q, sigma, delta, allowed).to_bits(),
+        "service ledger ε must equal the directly-driven accountant bitwise"
+    );
+    assert!(row.2 <= budget, "an admitted ledger can never exceed its budget");
+    assert_eq!(counter(&svc, "service.tenant.capped.budget_exhausted"), 2);
+    assert_eq!(counter(&svc, "service.tenant.capped.served"), allowed);
+    assert_eq!(counter(&svc, "service.tenant.free.served"), 1);
+    svc.shutdown();
+}
+
+/// The chaos leg: four tenants, one client thread each, twelve
+/// requests per tenant, two shards, a seeded fault plan attached. t3
+/// carries a budget that runs out mid-stream. Every request must
+/// resolve typed; t0–t2 may only see `Ok`/`WorkerFailed`; t3
+/// additionally sees exactly `12 − allowed` refusals (its client is
+/// sequential, so the boundary is deterministic even under chaos);
+/// and the refused tenant's ε stays pinned under its budget.
+#[test]
+fn seeded_chaos_keeps_tenants_fair_and_budget_isolated() {
+    let (spec, theta) = toy();
+    let per_tenant = 12usize;
+    let mut tuning = TenantTuning::default();
+    let budget = budget_for_steps(&tuning, 7);
+    tuning.budgets = vec![("t3".to_string(), budget)];
+    let allowed =
+        DpSgdAccountant::new(tuning.q, tuning.sigma).steps_until(budget, tuning.delta);
+    assert_eq!(allowed, 7);
+    let (q, sigma, delta) = (tuning.q, tuning.sigma, tuning.delta);
+
+    let shards = 2usize;
+    let plan = FaultPlan::seeded(9, shards, 32);
+    let pol = FaultPolicy {
+        restart_budget: 4,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(20),
+        max_attempts: 3,
+        faults: Some(plan),
+    };
+    let svc =
+        ServiceHandle::start_native(cfg(&spec, shards, tuning, pol), theta).unwrap();
+
+    // (ok, failed, refused) per tenant, collected by one sequential
+    // client thread per tenant submitting concurrently with the others
+    let tallies: Vec<(u64, u64, u64)> = std::thread::scope(|s| {
+        let svc = &svc;
+        let spec = &spec;
+        let handles: Vec<_> = (0..4usize)
+            .map(|t| {
+                s.spawn(move || {
+                    let tenant = format!("t{t}");
+                    let reqs = requests(spec, per_tenant, 100 + t as u64);
+                    let (mut ok, mut failed, mut refused) = (0u64, 0u64, 0u64);
+                    for r in reqs {
+                        let outcome = svc
+                            .submit(r.with_tenant(&tenant))
+                            .and_then(|id| svc.wait_timeout(id, WAIT));
+                        match outcome {
+                            Ok(_) => ok += 1,
+                            Err(ServiceError::WorkerFailed { .. }) => failed += 1,
+                            Err(ServiceError::BudgetExhausted { tenant: who, .. }) => {
+                                assert_eq!(
+                                    who, tenant,
+                                    "a refusal must name the tenant it refused"
+                                );
+                                refused += 1;
+                            }
+                            Err(e) => panic!(
+                                "tenant {tenant}: chaos without deadlines may only \
+                                 yield Ok/WorkerFailed/BudgetExhausted, got {e:?}"
+                            ),
+                        }
+                    }
+                    (ok, failed, refused)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("tenant client panicked"))
+            .collect()
+    });
+
+    for (t, &(ok, failed, refused)) in tallies.iter().enumerate() {
+        assert_eq!(
+            ok + failed + refused,
+            per_tenant as u64,
+            "tenant t{t} must have every request resolve typed (no starvation)"
+        );
+        if t < 3 {
+            assert_eq!(refused, 0, "uncapped tenant t{t} saw a budget refusal");
+            assert!(
+                ok + failed == per_tenant as u64 && ok > 0,
+                "uncapped tenant t{t} must keep completing under chaos: \
+                 ok {ok}, failed {failed}"
+            );
+        }
+    }
+    let (ok3, failed3, refused3) = tallies[3];
+    assert_eq!(
+        refused3,
+        per_tenant as u64 - allowed,
+        "t3's sequential client crosses the budget boundary deterministically"
+    );
+    assert_eq!(ok3 + failed3, allowed, "t3's admitted requests all resolved");
+
+    // the capped ledger is pinned: exactly `allowed` accounted steps,
+    // bitwise the directly-driven ε, within budget
+    let report = svc.tenants().report();
+    let row = report.iter().find(|(n, _, _, _)| n == "t3").unwrap();
+    assert_eq!(row.1, allowed);
+    assert_eq!(row.2.to_bits(), direct_epsilon(q, sigma, delta, allowed).to_bits());
+    assert!(row.2 <= budget);
+    assert_eq!(
+        counter(&svc, "service.tenant.t3.budget_exhausted"),
+        per_tenant as u64 - allowed
+    );
+    // seeded plans carry exactly one init failure, so the supervisor
+    // spends exactly one restart — fairness ran on a genuinely faulty
+    // service, not a lucky clean one
+    assert_eq!(counter(&svc, "service.worker_restarts"), 1);
+    svc.shutdown();
+}

@@ -1,11 +1,13 @@
 #!/usr/bin/env python3
-"""Perf-regression gate over `BENCH_strategies.json`.
+"""Schema/regression gate over the repo's machine-readable bench docs.
 
-Compares a freshly generated sweep against a committed baseline,
-cell by cell (keyed on strategy x model x batch x channel_rate), and
-fails when any cell's `ns_per_example` regresses past the threshold.
+Strategies mode (default) compares a freshly generated sweep against a
+committed baseline, cell by cell (keyed on strategy x model x batch x
+channel_rate), and fails when any cell's `ns_per_example` regresses
+past the threshold.
 
     python tools/check_bench.py fresh.json [baseline.json]
+    python tools/check_bench.py --service BENCH_service.json
     python tools/check_bench.py --selftest
 
 The baseline path defaults to `bench_baselines/BENCH_strategies.json`
@@ -14,10 +16,17 @@ exits 0 with a notice — committing a baseline measured on a dedicated
 bench machine is the ROADMAP item that arms this gate; CI boxes are
 too noisy to self-baseline.
 
+`--service` validates a `service/v1` loadtest document instead: the
+full top-level field set (shard/coalesce topology, aggregate outcome
+tallies, derived throughput), every per-tenant cell's required fields,
+no duplicate tenant rows, and that the per-tenant outcome tallies sum
+exactly to the aggregates — a generator bug that drops or double-counts
+a tenant fails here instead of silently skewing the trajectory.
+
 `--selftest` runs the checker against the committed fixtures under
-`tools/fixtures/` (a passing pair, a duplicate-key document, a record
-missing its model axis, and a regressed cell) and verifies each exits
-the way it should — the gate that the gate itself still gates.
+`tools/fixtures/` (passing and failing documents for both modes) and
+verifies each exits the way it should — the gate that the gate itself
+still gates.
 
 Exit 0 on pass (or no baseline), 1 on a regression or malformed input.
 Stdlib only.
@@ -72,6 +81,110 @@ def load_cells(path):
     return cells
 
 
+# every field a `service/v1` document must carry at the top level;
+# the tally fields are additionally cross-checked against the tenant
+# cells below
+SERVICE_FIELDS = (
+    "requests",
+    "clients",
+    "shards",
+    "batch",
+    "coalesce_ms",
+    "deadline_ms",
+    "chaos",
+    "chaos_seed",
+    "wall_secs",
+    "ok",
+    "deadline_exceeded",
+    "worker_failed",
+    "overloaded",
+    "budget_exhausted",
+    "other_errors",
+    "ok_per_sec",
+    "examples_per_sec_per_core",
+    "latency_p50_ms",
+    "latency_p99_ms",
+    "tenants",
+)
+
+# per-tenant cell fields; the outcome subset sums to the aggregates
+TENANT_FIELDS = (
+    "tenant",
+    "requests",
+    "ok",
+    "deadline_exceeded",
+    "worker_failed",
+    "overloaded",
+    "budget_exhausted",
+    "other_errors",
+    "latency_p50_ms",
+    "latency_p99_ms",
+    "epsilon",
+    "budget",
+)
+
+TALLY_FIELDS = (
+    "requests",
+    "ok",
+    "deadline_exceeded",
+    "worker_failed",
+    "overloaded",
+    "budget_exhausted",
+    "other_errors",
+)
+
+
+def check_service(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("version") != "service/v1":
+        print(f"check_bench: FAIL: {path}: unknown version {doc.get('version')!r}")
+        sys.exit(1)
+    missing = [k for k in SERVICE_FIELDS if k not in doc]
+    if missing:
+        print(f"check_bench: FAIL: {path}: missing top-level field(s) {missing}")
+        sys.exit(1)
+    tenants = doc["tenants"]
+    if not isinstance(tenants, list):
+        print(f"check_bench: FAIL: {path}: 'tenants' must be an array")
+        sys.exit(1)
+    seen = set()
+    for i, cell in enumerate(tenants):
+        missing = [k for k in TENANT_FIELDS if k not in cell]
+        if missing:
+            print(
+                f"check_bench: FAIL: {path}: tenants[{i}] missing "
+                f"field(s) {missing}"
+            )
+            sys.exit(1)
+        name = cell["tenant"]
+        if name in seen:
+            # two rows for one tenant means the generator double-counted
+            # (or half-merged) a tenant's traffic
+            print(
+                f"check_bench: FAIL: {path}: duplicate tenant row "
+                f"{name!r} — each tenant must appear exactly once"
+            )
+            sys.exit(1)
+        seen.add(name)
+    # tenant cells partition the aggregate traffic: every outcome tally
+    # must sum exactly to its top-level counterpart
+    for field in TALLY_FIELDS:
+        total = doc[field]
+        summed = sum(cell[field] for cell in tenants)
+        if summed != total:
+            print(
+                f"check_bench: FAIL: {path}: per-tenant {field!r} sums to "
+                f"{summed} but the aggregate says {total} — tenant rows "
+                "must partition the traffic exactly"
+            )
+            sys.exit(1)
+    print(
+        f"check_bench: OK: {path} is a well-formed service/v1 doc "
+        f"({len(tenants)} tenant row(s))"
+    )
+
+
 def selftest():
     import subprocess
 
@@ -81,27 +194,37 @@ def selftest():
         (["bench_bad_duplicate.json", "bench_ok_baseline.json"], 1),
         (["bench_bad_missing_model.json", "bench_ok_baseline.json"], 1),
         (["bench_bad_regression.json", "bench_ok_baseline.json"], 1),
+        (["--service", "service_ok.json"], 0),
+        (["--service", "service_bad_duplicate_tenant.json"], 1),
+        (["--service", "service_bad_missing_cell_field.json"], 1),
+        (["--service", "service_bad_tally_mismatch.json"], 1),
     ]
     for args, want in cases:
-        paths = [os.path.join(fixtures, a) for a in args]
+        paths = [
+            a if a.startswith("--") else os.path.join(fixtures, a) for a in args
+        ]
         r = subprocess.run(
             [sys.executable, os.path.abspath(__file__), *paths],
             capture_output=True,
             text=True,
         )
+        label = " ".join(args)
         if r.returncode != want:
             print(
-                f"check_bench: SELFTEST FAIL: {args[0]} exited "
+                f"check_bench: SELFTEST FAIL: {label} exited "
                 f"{r.returncode}, wanted {want}\n{r.stdout}{r.stderr}"
             )
             sys.exit(1)
-        print(f"check_bench: selftest: {args[0]} -> exit {r.returncode} (ok)")
+        print(f"check_bench: selftest: {label} -> exit {r.returncode} (ok)")
     print(f"check_bench: selftest OK: {len(cases)} fixture case(s)")
 
 
 def main():
     if len(sys.argv) == 2 and sys.argv[1] == "--selftest":
         selftest()
+        return
+    if len(sys.argv) == 3 and sys.argv[1] == "--service":
+        check_service(sys.argv[2])
         return
     if len(sys.argv) not in (2, 3):
         print(__doc__)
